@@ -1,0 +1,46 @@
+//! Energy informatics (§1, second motivating scenario): a smart-meter
+//! analytics pipeline where "the freshness of the data that is being
+//! acted upon is of paramount importance".  4096 meters report every
+//! 500 ms; the control path carries a 200 ms latency constraint.
+//!
+//! ```text
+//! cargo run --release --example energy_informatics
+//! ```
+
+use nephele::config::EngineConfig;
+use nephele::pipeline::meter::{smart_meter_job, MeterSpec};
+use nephele::sim::cluster::SimCluster;
+use nephele::sim::metrics::breakdown;
+use nephele::util::time::Duration;
+
+fn run(cfg: EngineConfig, label: &str) -> anyhow::Result<f64> {
+    let (job, rg, constraints, specs, sources, seq) = smart_meter_job(MeterSpec::default())?;
+    let mut cluster = SimCluster::new(job, rg, &constraints, specs, sources, cfg)?;
+    cluster.run(Duration::from_secs(1500), None);
+    let now = cluster.now();
+    let b = breakdown(&mut cluster, &seq, now);
+    println!("== {label} ==");
+    print!("{}", b.render());
+    println!(
+        "ground-truth e2e mean: {} ms | buffer updates: {} | chains: {}\n",
+        cluster.mean_e2e_ms().map_or("n/a".into(), |v| format!("{v:.1}")),
+        cluster.stats.buffer_size_updates,
+        cluster.stats.chains_established,
+    );
+    Ok(b.total_ms())
+}
+
+fn main() -> anyhow::Result<()> {
+    let spec = MeterSpec::default();
+    println!(
+        "smart-meter job: {} meters, {} feeders, reporting every {}, constraint {} ms\n",
+        spec.meters,
+        spec.meters / spec.meters_per_feeder,
+        spec.report_interval,
+        spec.constraint_ms
+    );
+    let unopt = run(EngineConfig::default().unoptimized(), "without QoS optimization")?;
+    let opt = run(EngineConfig::default().fully_optimized(), "with QoS optimization")?;
+    println!("control-path latency: {unopt:.1} ms -> {opt:.1} ms ({:.1}x)", unopt / opt);
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: build the paper's video job at laptop scale, run the
+//! three §4.3 scenarios on the simulated cluster, and print the latency
+//! story — unoptimized vs adaptive buffer sizing vs + dynamic chaining.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use nephele::config::EngineConfig;
+use nephele::experiments::video_scenarios::{run_video_scenario, Scenario};
+use nephele::pipeline::video::VideoSpec;
+
+fn main() -> anyhow::Result<()> {
+    let spec = VideoSpec::small();
+    println!(
+        "video job: {} task types x m={} on {} workers, {} streams at {} fps",
+        6, spec.parallelism, spec.workers, spec.streams, spec.fps
+    );
+    println!("constraint: {} ms over every (e1,D,e2,M,e3,O,e4,E,e5) sequence\n", spec.constraint_ms);
+
+    let mut rows = Vec::new();
+    for scenario in [
+        Scenario::Unoptimized,
+        Scenario::AdaptiveBuffers,
+        Scenario::BuffersAndChaining,
+    ] {
+        // The chaining scenario uses the constraint scaled to our
+        // substrate's buffers-only plateau (see EXPERIMENTS.md §Fig.9).
+        let mut spec = spec;
+        if scenario == Scenario::BuffersAndChaining {
+            spec.constraint_ms = 107;
+        }
+        let r = run_video_scenario(scenario, spec, EngineConfig::default(), 600, 60, false)?;
+        println!("== {} ==", r.scenario.title());
+        print!("{}", r.final_breakdown.render());
+        println!();
+        rows.push((r.scenario.title(), r.converged_total_ms(), r.chains_established));
+    }
+
+    println!("summary:");
+    for (title, total, chains) in &rows {
+        println!("  {title:<64} {total:>9.1} ms   chains={chains}");
+    }
+    let factor = rows[0].1 / rows[2].1;
+    println!(
+        "\nimprovement factor (unoptimized -> fully optimized): {factor:.1}x (paper: >=13x)"
+    );
+    Ok(())
+}

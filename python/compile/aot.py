@@ -1,0 +1,101 @@
+"""AOT bridge: lower every L2 stage to HLO *text* for the Rust runtime.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT a serialized
+``HloModuleProto`` — is the interchange format: jax >= 0.5 emits protos
+with 64-bit instruction ids which the xla crate's bundled XLA
+(xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``).  The HLO text
+parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py for the smoke-tested pattern this follows.
+
+Usage (from ``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces one ``<stage>.hlo.txt`` per stage plus ``manifest.json``
+describing shapes so the Rust side can build input literals without
+guessing.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is essential: the default printer
+    elides big literals as ``{...}``, which the Rust-side text parser
+    happily reads back as garbage (NaNs at execution time).  Our DCT
+    basis and quantisation tables are 8x8 constants.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def stage_signatures(h: int, w: int):
+    """Stage name -> (fn, example arg specs).  Shapes follow §4.2:
+    streams of h x w frames, groups of 4 merged into 2h x 2w."""
+    h2, w2 = 2 * h, 2 * w
+    return {
+        "decoder": (model.decoder_stage, [spec(h, w)]),
+        "merger": (model.merger_stage, [spec(4, h, w)]),
+        "overlay": (model.overlay_stage, [spec(h2, w2), spec(h2, w2), spec(h2, w2)]),
+        "encoder": (model.encoder_stage, [spec(h2, w2)]),
+        "chained": (model.chained_stage, [spec(4, h, w), spec(h2, w2), spec(h2, w2)]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--height", type=int, default=model.FRAME_H)
+    ap.add_argument("--width", type=int, default=model.FRAME_W)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"frame_h": args.height, "frame_w": args.width, "stages": {}}
+
+    for name, (fn, arg_specs) in stage_signatures(args.height, args.width).items():
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["stages"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(s.shape) for s in arg_specs],
+            "dtype": "f32",
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    # Line-oriented twin of manifest.json for the (dependency-light) Rust
+    # loader: `frame <h> <w>` then `stage <name> <file> <shape>[,<shape>..]`
+    # with shapes as `d0xd1x..`.
+    lines = [f"frame {args.height} {args.width}"]
+    for name, st in manifest["stages"].items():
+        shapes = ",".join("x".join(str(d) for d in s) for s in st["inputs"])
+        lines.append(f"stage {name} {st['file']} {shapes}")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote manifests to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""L1 Pallas kernels for the synthetic video codec.
+
+Each kernel mirrors one compute-bound task of the paper's evaluation job
+(§4.1.1) and is verified against ``ref.py`` by the pytest/hypothesis
+suite.  All kernels run with ``interpret=True`` — real-TPU lowering emits
+a Mosaic custom-call that the CPU PJRT plugin cannot execute (see
+DESIGN.md §6 for the TPU mapping: 8x8 DCT-as-matmul targets the MXU,
+BlockSpec streams one block row per grid step through VMEM).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = ref.BLOCK
+
+
+def _const_spec():
+    """BlockSpec for an 8x8 constant (basis / quant table): one block,
+    fetched once per grid step at block index (0, 0)."""
+    return pl.BlockSpec((BLOCK, BLOCK), lambda i, j: (0, 0))
+
+
+# ---------------------------------------------------------------------------
+# Encoder task: blockwise DCT + quantise.
+# ---------------------------------------------------------------------------
+
+
+def _encode_kernel(x_ref, d_ref, q_ref, o_ref):
+    d = d_ref[...]
+    coeffs = d @ x_ref[...] @ d.T
+    o_ref[...] = jnp.round(coeffs / q_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def encode(frame: jnp.ndarray) -> jnp.ndarray:
+    """Frame [H, W] f32 -> quantised DCT coefficients [H, W] f32."""
+    h, w = frame.shape
+    grid = (h // BLOCK, w // BLOCK)
+    return pl.pallas_call(
+        _encode_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK, BLOCK), lambda i, j: (i, j)),
+            _const_spec(),
+            _const_spec(),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, BLOCK), lambda i, j: (i, j)),
+        interpret=True,
+    )(frame, jnp.asarray(ref.DCT), jnp.asarray(ref.JPEG_QUANT))
+
+
+# ---------------------------------------------------------------------------
+# Decoder task: dequantise + inverse DCT.
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(x_ref, d_ref, q_ref, o_ref):
+    d = d_ref[...]
+    o_ref[...] = d.T @ (x_ref[...] * q_ref[...]) @ d
+
+
+@functools.partial(jax.jit, static_argnames=())
+def decode(coeffs: jnp.ndarray) -> jnp.ndarray:
+    """Quantised coefficients [H, W] -> reconstructed frame [H, W]."""
+    h, w = coeffs.shape
+    grid = (h // BLOCK, w // BLOCK)
+    return pl.pallas_call(
+        _decode_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK, BLOCK), lambda i, j: (i, j)),
+            _const_spec(),
+            _const_spec(),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, BLOCK), lambda i, j: (i, j)),
+        interpret=True,
+    )(coeffs, jnp.asarray(ref.DCT), jnp.asarray(ref.JPEG_QUANT))
+
+
+# ---------------------------------------------------------------------------
+# Merger task: tile 4 grouped frames 2x2 into one output frame.
+# ---------------------------------------------------------------------------
+
+
+def _merge_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def merge(frames: jnp.ndarray) -> jnp.ndarray:
+    """[4, H, W] -> [2H, 2W].  Grid step (i, j) copies frame 2i+j into
+    quadrant (i, j); the HBM->VMEM schedule moves exactly one frame per
+    step."""
+    _, h, w = frames.shape
+    return pl.pallas_call(
+        _merge_kernel,
+        out_shape=jax.ShapeDtypeStruct((2 * h, 2 * w), jnp.float32),
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((1, h, w), lambda i, j: (2 * i + j, 0, 0))],
+        out_specs=pl.BlockSpec((h, w), lambda i, j: (i, j)),
+        interpret=True,
+    )(frames)
+
+
+# ---------------------------------------------------------------------------
+# Overlay task: alpha-blend the marquee image, streaming row tiles.
+# ---------------------------------------------------------------------------
+
+
+def _overlay_kernel(x_ref, img_ref, a_ref, o_ref):
+    a = a_ref[...]
+    o_ref[...] = (1.0 - a) * x_ref[...] + a * img_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def overlay(frame: jnp.ndarray, image: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """[H, W] x [H, W] x [H, W] -> [H, W], one row-tile of 8 rows per grid
+    step (alpha is zero outside the marquee band)."""
+    h, w = frame.shape
+    spec = pl.BlockSpec((BLOCK, w), lambda i: (i, 0))
+    return pl.pallas_call(
+        _overlay_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        grid=(h // BLOCK,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(frame, image, alpha)
+
+
+# ---------------------------------------------------------------------------
+# Fused chain: the artifact dynamic task chaining (§3.5.2) swaps in.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=())
+def chained_pipeline(
+    coeffs: jnp.ndarray, image: jnp.ndarray, alpha: jnp.ndarray
+) -> jnp.ndarray:
+    """Decoder -> Merger -> Overlay -> Encoder over one frame group, all
+    through the Pallas kernels: [4, H, W] + [2H, 2W] x2 -> [2H, 2W]."""
+    frames = jnp.stack([decode(coeffs[i]) for i in range(4)])
+    merged = merge(frames)
+    composited = overlay(merged, image, alpha)
+    return encode(composited)

@@ -1,0 +1,128 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+These are the ground-truth implementations of the synthetic tensor codec
+that stands in for the paper's H.264/xuggle video pipeline (see
+DESIGN.md §3).  Every Pallas kernel in this package is checked against
+these functions by ``python/tests/``.
+
+Stages (mirroring the evaluation job of the paper, §4.1.1):
+
+- ``encode``  : frame -> quantised 8x8-block DCT coefficients   (Encoder)
+- ``decode``  : coefficients -> frame                           (Decoder)
+- ``merge``   : 4 frames -> one 2x2-tiled frame                 (Merger)
+- ``overlay`` : alpha-blend a marquee image into a frame        (Overlay)
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 8
+
+# Standard JPEG luminance quantisation table; any fixed positive table
+# works — we only need a realistic, invertible-up-to-quantisation codec.
+JPEG_QUANT = np.array(
+    [
+        [16, 11, 10, 16, 24, 40, 51, 61],
+        [12, 12, 14, 19, 26, 58, 60, 55],
+        [14, 13, 16, 24, 40, 57, 69, 56],
+        [14, 17, 22, 29, 51, 87, 80, 62],
+        [18, 22, 37, 56, 68, 109, 103, 77],
+        [24, 35, 55, 64, 81, 104, 113, 92],
+        [49, 64, 78, 87, 103, 121, 120, 101],
+        [72, 92, 95, 98, 112, 100, 103, 99],
+    ],
+    dtype=np.float32,
+)
+
+
+def dct_basis(n: int = BLOCK) -> np.ndarray:
+    """Orthonormal DCT-II basis matrix D with (D @ x) the 1-D DCT of x."""
+    k = np.arange(n)[:, None].astype(np.float64)
+    i = np.arange(n)[None, :].astype(np.float64)
+    d = np.cos((2 * i + 1) * k * np.pi / (2 * n))
+    d *= np.sqrt(2.0 / n)
+    d[0] *= np.sqrt(0.5)
+    return d.astype(np.float32)
+
+
+DCT = dct_basis()
+
+
+def _blockify(x: jnp.ndarray) -> jnp.ndarray:
+    """[H, W] -> [H//8, W//8, 8, 8] view of 8x8 blocks."""
+    h, w = x.shape
+    return x.reshape(h // BLOCK, BLOCK, w // BLOCK, BLOCK).transpose(0, 2, 1, 3)
+
+
+def _unblockify(b: jnp.ndarray) -> jnp.ndarray:
+    """[H//8, W//8, 8, 8] -> [H, W]."""
+    nh, nw, _, _ = b.shape
+    return b.transpose(0, 2, 1, 3).reshape(nh * BLOCK, nw * BLOCK)
+
+
+def encode(frame: jnp.ndarray) -> jnp.ndarray:
+    """Frame [H, W] f32 -> quantised DCT coefficients [H, W] f32.
+
+    Per 8x8 block: round((D @ X @ D^T) / Q).  Coefficients are kept in f32
+    (they carry small integer values) so the HLO stays dtype-uniform.
+    """
+    d = jnp.asarray(DCT)
+    q = jnp.asarray(JPEG_QUANT)
+    blocks = _blockify(frame)
+    coeffs = jnp.einsum("ij,bcjk,lk->bcil", d, blocks, d)
+    return _unblockify(jnp.round(coeffs / q))
+
+
+def decode(coeffs: jnp.ndarray) -> jnp.ndarray:
+    """Quantised coefficients [H, W] -> reconstructed frame [H, W]."""
+    d = jnp.asarray(DCT)
+    q = jnp.asarray(JPEG_QUANT)
+    blocks = _blockify(coeffs) * q
+    frames = jnp.einsum("ji,bcjk,kl->bcil", d, blocks, d)
+    return _unblockify(frames)
+
+
+def merge(frames: jnp.ndarray) -> jnp.ndarray:
+    """[4, H, W] -> [2H, 2W]: tile the four grouped frames 2x2.
+
+    Mirrors the paper's Merger task, which 'simply consists of tiling the
+    individual input frames in the output frame' (§4.1.1).
+    """
+    top = jnp.concatenate([frames[0], frames[1]], axis=1)
+    bot = jnp.concatenate([frames[2], frames[3]], axis=1)
+    return jnp.concatenate([top, bot], axis=0)
+
+
+def overlay(frame: jnp.ndarray, image: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """Alpha-blend ``image`` into ``frame`` with per-pixel ``alpha``.
+
+    ``alpha`` is zero outside the marquee band, so most of the frame passes
+    through unchanged — mirroring the Twitter-marquee Overlay task.
+    """
+    return (1.0 - alpha) * frame + alpha * image
+
+
+def decode_group(coeffs: jnp.ndarray) -> jnp.ndarray:
+    """[4, H, W] coefficients -> [4, H, W] frames (vectorised decode)."""
+    d = jnp.asarray(DCT)
+    q = jnp.asarray(JPEG_QUANT)
+    h, w = coeffs.shape[1], coeffs.shape[2]
+    b = coeffs.reshape(4, h // BLOCK, BLOCK, w // BLOCK, BLOCK).transpose(0, 1, 3, 2, 4)
+    b = b * q
+    f = jnp.einsum("ji,gbcjk,kl->gbcil", d, b, d)
+    return f.transpose(0, 1, 3, 2, 4).reshape(4, h, w)
+
+
+def chained_pipeline(
+    coeffs: jnp.ndarray, image: jnp.ndarray, alpha: jnp.ndarray
+) -> jnp.ndarray:
+    """Fused Decoder->Merger->Overlay->Encoder over one frame group.
+
+    This is the reference for the artifact that L3 dynamic task chaining
+    swaps in: one executable, no per-stage handoff.
+    [4, H, W] coeffs + [2H, 2W] image/alpha -> [2H, 2W] coeffs.
+    """
+    frames = decode_group(coeffs)
+    merged = merge(frames)
+    composited = overlay(merged, image, alpha)
+    return encode(composited)

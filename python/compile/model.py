@@ -1,0 +1,61 @@
+"""L2: the evaluation job's per-stage JAX compute graphs.
+
+One jittable function per compute-bound task of the paper's video job
+(§4.1.1), each calling the L1 Pallas kernels in ``kernels.codec``.  The
+Partitioner and RTP Server tasks are pure I/O and live entirely in the
+Rust coordinator.
+
+``aot.py`` lowers each stage (plus the fused chain) to HLO text once at
+build time; the Rust runtime loads and executes the artifacts on the
+request path.  Python never runs at request time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import codec, ref
+
+#: Paper frame geometry: 320x240 H.264 streams, merged 2x2 (§4.2).
+FRAME_H, FRAME_W = 240, 320
+GROUP = 4
+MERGED_H, MERGED_W = 2 * FRAME_H, 2 * FRAME_W
+
+
+def decoder_stage(coeffs: jnp.ndarray) -> jnp.ndarray:
+    """Decoder task: one encoded frame [H, W] -> raw frame [H, W]."""
+    return codec.decode(coeffs)
+
+
+def merger_stage(frames: jnp.ndarray) -> jnp.ndarray:
+    """Merger task: a complete frame group [4, H, W] -> [2H, 2W]."""
+    return codec.merge(frames)
+
+
+def overlay_stage(
+    frame: jnp.ndarray, image: jnp.ndarray, alpha: jnp.ndarray
+) -> jnp.ndarray:
+    """Overlay task: blend the Twitter-marquee image into the merged frame."""
+    return codec.overlay(frame, image, alpha)
+
+
+def encoder_stage(frame: jnp.ndarray) -> jnp.ndarray:
+    """Encoder task: raw merged frame -> quantised coefficients."""
+    return codec.encode(frame)
+
+
+def chained_stage(
+    coeffs: jnp.ndarray, image: jnp.ndarray, alpha: jnp.ndarray
+) -> jnp.ndarray:
+    """The fused Decoder->Merger->Overlay->Encoder executable used when L3
+    dynamic task chaining (§3.5.2) collapses the middle of the pipeline."""
+    return codec.chained_pipeline(coeffs, image, alpha)
+
+
+def reference_stages():
+    """Pure-jnp oracle versions (used by tests, never lowered)."""
+    return {
+        "decoder": ref.decode,
+        "merger": ref.merge,
+        "overlay": ref.overlay,
+        "encoder": ref.encode,
+        "chained": ref.chained_pipeline,
+    }

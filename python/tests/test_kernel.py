@@ -1,0 +1,181 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Hypothesis sweeps frame shapes (multiples of the 8x8 DCT block) and input
+distributions; every Pallas kernel must match the pure-jnp oracle in
+``compile.kernels.ref`` to f32 tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import codec, ref
+
+# Pallas interpret-mode kernels re-trace per shape; keep example counts
+# modest so the sweep stays fast on one CPU core.
+SWEEP = settings(deadline=None, max_examples=12, derandomize=True)
+
+dims = st.integers(min_value=1, max_value=6).map(lambda k: k * ref.BLOCK)
+
+
+def rand(shape, seed, lo=0.0, hi=255.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# DCT basis sanity
+# ---------------------------------------------------------------------------
+
+
+def test_dct_basis_orthonormal():
+    d = ref.dct_basis()
+    np.testing.assert_allclose(d @ d.T, np.eye(8), atol=1e-5)
+
+
+def test_dct_basis_dc_row_constant():
+    d = ref.dct_basis()
+    np.testing.assert_allclose(d[0], np.full(8, np.sqrt(1 / 8)), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# encode / decode vs reference
+# ---------------------------------------------------------------------------
+
+
+@SWEEP
+@given(h=dims, w=dims, seed=st.integers(0, 2**31 - 1))
+def test_encode_matches_ref(h, w, seed):
+    x = rand((h, w), seed)
+    np.testing.assert_allclose(codec.encode(x), ref.encode(x), atol=1e-3)
+
+
+@SWEEP
+@given(h=dims, w=dims, seed=st.integers(0, 2**31 - 1))
+def test_decode_matches_ref(h, w, seed):
+    c = jnp.round(rand((h, w), seed, lo=-20.0, hi=20.0))
+    np.testing.assert_allclose(codec.decode(c), ref.decode(c), atol=1e-3)
+
+
+def test_encode_outputs_integral_coefficients():
+    x = rand((32, 32), 7)
+    c = np.asarray(codec.encode(x))
+    np.testing.assert_allclose(c, np.round(c), atol=1e-6)
+
+
+@SWEEP
+@given(h=dims, w=dims, seed=st.integers(0, 2**31 - 1))
+def test_roundtrip_error_bounded_by_quantisation(h, w, seed):
+    """decode(encode(x)) ~ x up to quantisation noise (lossy codec)."""
+    x = rand((h, w), seed)
+    y = np.asarray(codec.decode(codec.encode(x)))
+    rmse = float(np.sqrt(np.mean((y - np.asarray(x)) ** 2)))
+    assert rmse < 40.0, f"round-trip RMSE {rmse} too large for [0,255] input"
+
+
+def test_roundtrip_smooth_input_near_exact():
+    """A DC-only (constant) frame survives the codec almost exactly."""
+    x = jnp.full((16, 16), 128.0, dtype=jnp.float32)
+    y = np.asarray(codec.decode(codec.encode(x)))
+    assert float(np.max(np.abs(y - 128.0))) < 8.0
+
+
+# ---------------------------------------------------------------------------
+# merge vs reference + tiling properties
+# ---------------------------------------------------------------------------
+
+
+@SWEEP
+@given(h=dims, w=dims, seed=st.integers(0, 2**31 - 1))
+def test_merge_matches_ref(h, w, seed):
+    g = rand((4, h, w), seed)
+    np.testing.assert_allclose(codec.merge(g), ref.merge(g), atol=0)
+
+
+def test_merge_places_quadrants():
+    h, w = 8, 16
+    g = jnp.stack([jnp.full((h, w), float(i)) for i in range(4)])
+    m = np.asarray(codec.merge(g))
+    assert (m[:h, :w] == 0).all() and (m[:h, w:] == 1).all()
+    assert (m[h:, :w] == 2).all() and (m[h:, w:] == 3).all()
+
+
+# ---------------------------------------------------------------------------
+# overlay vs reference + blend properties
+# ---------------------------------------------------------------------------
+
+
+@SWEEP
+@given(h=dims, w=dims, seed=st.integers(0, 2**31 - 1))
+def test_overlay_matches_ref(h, w, seed):
+    f, img = rand((h, w), seed), rand((h, w), seed + 1)
+    alpha = rand((h, w), seed + 2, lo=0.0, hi=1.0)
+    np.testing.assert_allclose(
+        codec.overlay(f, img, alpha), ref.overlay(f, img, alpha), atol=1e-4
+    )
+
+
+def test_overlay_alpha_zero_is_identity():
+    f, img = rand((16, 16), 1), rand((16, 16), 2)
+    zero = jnp.zeros_like(f)
+    np.testing.assert_allclose(codec.overlay(f, img, zero), f, atol=0)
+
+
+def test_overlay_alpha_one_is_image():
+    f, img = rand((16, 16), 3), rand((16, 16), 4)
+    one = jnp.ones_like(f)
+    np.testing.assert_allclose(codec.overlay(f, img, one), img, atol=1e-5)
+
+
+def test_overlay_band_only_touches_band():
+    """Alpha masked to the marquee band leaves the rest untouched."""
+    h, w = 32, 32
+    f, img = rand((h, w), 5), rand((h, w), 6)
+    alpha = jnp.zeros((h, w)).at[-8:, :].set(0.7)
+    out = np.asarray(codec.overlay(f, img, alpha))
+    np.testing.assert_allclose(out[:-8], np.asarray(f)[:-8], atol=0)
+    assert not np.allclose(out[-8:], np.asarray(f)[-8:])
+
+
+# ---------------------------------------------------------------------------
+# fused chain vs reference
+# ---------------------------------------------------------------------------
+
+
+@SWEEP
+@given(h=st.just(16), w=dims, seed=st.integers(0, 2**31 - 1))
+def test_chained_pipeline_matches_ref(h, w, seed):
+    coeffs = jnp.round(rand((4, h, w), seed, lo=-20.0, hi=20.0))
+    img = rand((2 * h, 2 * w), seed + 1)
+    alpha = jnp.zeros((2 * h, 2 * w)).at[-8:, :].set(0.5)
+    got = codec.chained_pipeline(coeffs, img, alpha)
+    want = ref.chained_pipeline(coeffs, img, alpha)
+    np.testing.assert_allclose(got, want, atol=1e-2)
+
+
+def test_chained_equals_stage_composition():
+    """Fused artifact == running the four stage kernels back to back —
+    the invariant that makes dynamic task chaining semantics-preserving."""
+    coeffs = jnp.round(rand((4, 16, 16), 11, lo=-20.0, hi=20.0))
+    img = rand((32, 32), 12)
+    alpha = jnp.zeros((32, 32)).at[-8:, :].set(0.5)
+    frames = jnp.stack([codec.decode(coeffs[i]) for i in range(4)])
+    staged = codec.encode(codec.overlay(codec.merge(frames), img, alpha))
+    fused = codec.chained_pipeline(coeffs, img, alpha)
+    np.testing.assert_allclose(fused, staged, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# dtype discipline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fn,shapes", [
+    (codec.encode, [(16, 16)]),
+    (codec.decode, [(16, 16)]),
+    (codec.merge, [(4, 16, 16)]),
+])
+def test_outputs_are_f32(fn, shapes):
+    out = fn(*[rand(s, 9) for s in shapes])
+    assert out.dtype == jnp.float32

@@ -1,0 +1,78 @@
+"""L2 model and AOT lowering tests: stage shapes and HLO-text interchange."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+H, W = 16, 16  # small build-time test geometry (multiples of 8)
+
+
+def test_stage_signatures_cover_all_compute_tasks():
+    sigs = aot.stage_signatures(H, W)
+    assert set(sigs) == {"decoder", "merger", "overlay", "encoder", "chained"}
+
+
+@pytest.mark.parametrize("name", ["decoder", "merger", "overlay", "encoder", "chained"])
+def test_stage_output_shapes(name):
+    fn, specs = aot.stage_signatures(H, W)[name]
+    args = [jnp.zeros(s.shape, s.dtype) for s in specs]
+    out = fn(*args)
+    expected = {
+        "decoder": (H, W),
+        "merger": (2 * H, 2 * W),
+        "overlay": (2 * H, 2 * W),
+        "encoder": (2 * H, 2 * W),
+        "chained": (2 * H, 2 * W),
+    }[name]
+    assert out.shape == expected and out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name", ["decoder", "merger", "overlay", "encoder", "chained"])
+def test_stage_lowers_to_parseable_hlo_text(name):
+    """The interchange contract: HLO text with a single ENTRY computation
+    returning a tuple (the Rust loader unwraps with to_tuple1)."""
+    fn, specs = aot.stage_signatures(H, W)[name]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # return_tuple=True => root is a tuple shape
+    assert "tuple" in text or "(f32" in text
+
+
+def test_manifest_written(tmp_path):
+    import subprocess, sys, json, os
+
+    env = dict(os.environ)
+    out = tmp_path / "artifacts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--height", "16", "--width", "16"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(aot.__file__))),
+        env=env,
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["frame_h"] == 16
+    assert set(manifest["stages"]) == {"decoder", "merger", "overlay", "encoder", "chained"}
+    for st in manifest["stages"].values():
+        assert (out / st["file"]).exists()
+
+
+def test_reference_stages_exposed():
+    stages = model.reference_stages()
+    assert set(stages) == {"decoder", "merger", "overlay", "encoder", "chained"}
+    x = jnp.ones((H, W), jnp.float32)
+    assert stages["encoder"](x).shape == (H, W)
+
+
+@pytest.mark.parametrize("name", ["decoder", "encoder", "chained"])
+def test_hlo_text_does_not_elide_constants(name):
+    """Regression: the default printer elides big literals as `{...}`,
+    which the Rust text parser reads back as garbage (NaNs)."""
+    fn, specs = aot.stage_signatures(H, W)[name]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "{...}" not in text

@@ -1,0 +1,40 @@
+//! Minimal benchmark harness (criterion is unavailable in the offline
+//! build): measures wall time over warm-up + timed iterations and prints
+//! criterion-style `name ... time per iter` lines.
+
+use std::time::Instant;
+
+/// Measure `f` and print mean time per iteration.  Returns mean seconds.
+pub fn bench<T>(name: &str, iters: u32, mut f: impl FnMut() -> T) -> f64 {
+    // Warm-up.
+    for _ in 0..iters.div_ceil(10).max(1) {
+        std::hint::black_box(f());
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(f());
+    }
+    let total = t0.elapsed().as_secs_f64();
+    let per = total / iters as f64;
+    let (val, unit) = if per >= 1.0 {
+        (per, "s")
+    } else if per >= 1e-3 {
+        (per * 1e3, "ms")
+    } else if per >= 1e-6 {
+        (per * 1e6, "us")
+    } else {
+        (per * 1e9, "ns")
+    };
+    println!("{name:<56} {val:>10.3} {unit}/iter   ({iters} iters)");
+    per
+}
+
+/// Measure a single long-running experiment and print its duration plus
+/// a caller-formatted headline metric.
+pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{name:<56} {secs:>10.3} s (single run)");
+    (out, secs)
+}

@@ -1,0 +1,107 @@
+//! Per-figure benchmark harness: regenerates a scaled-down version of
+//! every table and figure of the paper's evaluation in one `cargo bench`
+//! run, printing the headline series.  The full-scale runs live in the
+//! `fig2`/`fig7`..`fig10` binaries (see EXPERIMENTS.md).
+
+#[path = "bench_harness.rs"]
+mod harness;
+use harness::bench_once;
+
+use nephele::baseline::hadoop::HadoopSpec;
+use nephele::config::EngineConfig;
+use nephele::experiments::fig2::fig2_cell;
+use nephele::experiments::hadoop::run_hadoop_online;
+use nephele::experiments::video_scenarios::{run_video_scenario, Scenario};
+use nephele::pipeline::video::VideoSpec;
+
+fn fig2_mini() {
+    println!("\n-- Fig. 2 (mini sweep): latency/throughput vs buffer size --");
+    for (rate, secs) in [(100.0, 400), (100_000.0, 10)] {
+        for buffer in [None, Some(4 * 1024), Some(64 * 1024)] {
+            let cell = fig2_cell(rate, buffer, secs, 42).unwrap();
+            println!(
+                "  rate {:>7}/s buffer {:>6}: {:>10.1} ms, {:>8.2} MBit/s",
+                rate,
+                buffer.map_or("flush".into(), |b| format!("{}K", b / 1024)),
+                cell.mean_latency_ms,
+                cell.throughput_mbit
+            );
+        }
+    }
+}
+
+fn figs_789_mini() {
+    println!("\n-- Figs. 7/8/9 (small scale): the three scenarios --");
+    let mut results = Vec::new();
+    for (scenario, constraint) in [
+        (Scenario::Unoptimized, 300),
+        (Scenario::AdaptiveBuffers, 300),
+        (Scenario::BuffersAndChaining, 107),
+    ] {
+        let mut spec = VideoSpec::small();
+        spec.constraint_ms = constraint;
+        let (report, _) = bench_once(&format!("scenario: {:?}", scenario), || {
+            run_video_scenario(scenario, spec, EngineConfig::default(), 600, 600, false)
+                .unwrap()
+        });
+        println!(
+            "    -> total {:.1} ms (chains {}, buffer updates {})",
+            report.converged_total_ms(),
+            report.chains_established,
+            report.buffer_updates
+        );
+        results.push(report.converged_total_ms());
+    }
+    println!(
+        "  improvement unopt -> full: {:.1}x (paper >= 13x)",
+        results[0] / results[2]
+    );
+}
+
+fn fig10_mini() {
+    println!("\n-- Fig. 10: Hadoop Online baseline --");
+    let (report, _) = bench_once("hadoop online: 300s virtual", || {
+        run_hadoop_online(HadoopSpec::default(), 300, 42).unwrap()
+    });
+    println!(
+        "    -> total {:.1} ms over {} delivered items",
+        report.breakdown.total_ms(),
+        report.items_delivered
+    );
+}
+
+fn ablation_buffer_sizing() {
+    // Ablation of the §3.5.1 parameters DESIGN.md calls out: shrink base
+    // r and floor ε.  Converged buffers-only latency on the small job.
+    println!("\n-- Ablation: adaptive buffer sizing parameters --");
+    for (r, eps) in [(0.90, 200u32), (0.98, 200), (0.995, 200), (0.98, 2048)] {
+        let mut cfg = EngineConfig::default().buffers_only();
+        cfg.manager.buffer.r = r;
+        cfg.manager.buffer.min_size = eps;
+        let report = run_video_scenario(
+            Scenario::AdaptiveBuffers,
+            VideoSpec::small(),
+            cfg,
+            600,
+            600,
+            false,
+        )
+        .unwrap();
+        println!(
+            "  r={r:<6} eps={eps:>5} B: converged {:>8.1} ms ({} updates)",
+            report.converged_total_ms(),
+            report.buffer_updates
+        );
+    }
+    // Paper defaults (r=0.98, eps=200) should be on the efficient
+    // frontier: aggressive r overshoots less but converges slower; a
+    // large eps floors the achievable latency.
+}
+
+fn main() {
+    println!("== figure regeneration benchmarks ==");
+    fig2_mini();
+    figs_789_mini();
+    fig10_mini();
+    ablation_buffer_sizing();
+}

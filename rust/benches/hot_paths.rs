@@ -1,0 +1,155 @@
+//! Hot-path microbenchmarks (the §Perf targets in EXPERIMENTS.md):
+//! event-queue throughput, the channel send/flush path, QoS setup at
+//! paper scale, manager ingest/evaluate, and the buffer-sizing decision.
+//!
+//! Run with `cargo bench --bench hot_paths`.
+
+#[path = "bench_harness.rs"]
+mod harness;
+use harness::{bench, bench_once};
+
+use nephele::actions::buffer_sizing::{next_buffer_size, BufferSizingConfig};
+use nephele::config::EngineConfig;
+use nephele::graph::ids::{ChannelId, VertexId, WorkerId};
+use nephele::pipeline::microbench::{sender_receiver_job, MicrobenchSpec};
+use nephele::pipeline::video::{video_job, VideoSpec};
+use nephele::qos::manager::{ManagerConfig, QosManager};
+use nephele::qos::sample::{ElementKey, MetricKind, Report, ReportEntry};
+use nephele::qos::setup::compute_qos_setup;
+use nephele::sim::cluster::SimCluster;
+use nephele::sim::events::EventQueue;
+use nephele::util::time::{Duration, Time};
+
+fn bench_event_queue() {
+    // Push/pop throughput of the simulator's core data structure.
+    let n = 100_000u64;
+    bench("event_queue: push+pop 100k interleaved", 20, || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..n {
+            q.push(Time(i * 7919 % 1_000_000), i);
+        }
+        let mut acc = 0u64;
+        while let Some((_, v)) = q.pop() {
+            acc = acc.wrapping_add(v);
+        }
+        acc
+    });
+}
+
+fn bench_channel_hot_path() {
+    // End-to-end simulator events/second on the 2-task microbenchmark:
+    // this is the per-item channel path (emit -> buffer -> flush ->
+    // deliver -> process).
+    let (job, rg, constraints, specs, sources) =
+        sender_receiver_job(MicrobenchSpec { items_per_sec: 100_000.0, ..Default::default() })
+            .unwrap();
+    let cfg = EngineConfig::default().unoptimized();
+    let ((), secs) = bench_once("sim: microbench 30s virtual @100k items/s", || {
+        let mut cluster =
+            SimCluster::new(job.clone(), rg.clone(), &constraints, specs.clone(), sources.clone(), cfg)
+                .unwrap();
+        cluster.run(Duration::from_secs(30), None);
+        let ev = cluster.stats.events_processed;
+        println!(
+            "    -> {} events, {:.2} M events/s wall",
+            ev,
+            ev as f64 / 1e6
+        );
+    });
+    let _ = secs;
+}
+
+fn bench_video_sim_rate() {
+    // Whole-cluster simulation rate on the small video job.
+    let vj = video_job(VideoSpec::small()).unwrap();
+    let cfg = EngineConfig::default().fully_optimized();
+    bench_once("sim: small video job, 300s virtual, full QoS", || {
+        let mut cluster = SimCluster::new(
+            vj.job.clone(),
+            vj.rg.clone(),
+            &vj.constraints,
+            vj.task_specs.clone(),
+            vj.sources.clone(),
+            cfg,
+        )
+        .unwrap();
+        cluster.run(Duration::from_secs(300), None);
+        println!(
+            "    -> {} events processed",
+            cluster.stats.events_processed
+        );
+    });
+}
+
+fn bench_qos_setup() {
+    // Algorithm 1-3 at the paper's full scale (512e6 runtime constraints).
+    let vj = video_job(VideoSpec::default()).unwrap();
+    bench("qos setup: ComputeQoSSetup m=800 n=200 (512e6 seqs)", 5, || {
+        compute_qos_setup(&vj.job, &vj.rg, &vj.constraints).unwrap().managers.len()
+    });
+}
+
+fn bench_manager() {
+    // Manager ingest + evaluate on a paper-scale subgraph (800-channel
+    // fan-in layers).
+    let vj = video_job(VideoSpec::default()).unwrap();
+    let setup = compute_qos_setup(&vj.job, &vj.rg, &vj.constraints).unwrap();
+    let (&w, sub) = setup.managers.iter().next().unwrap();
+    let mut mgr = QosManager::new(w, sub.clone(), 32 * 1024, ManagerConfig::default());
+
+    // One report covering every element of the subgraph.
+    let mut entries = Vec::new();
+    for chain in &sub.chains {
+        for v in chain.vertices() {
+            entries.push(ReportEntry {
+                element: ElementKey::Vertex(v.id),
+                kind: MetricKind::TaskLatency,
+                mean: 1000.0,
+                count: 1,
+            });
+        }
+        for c in chain.channels() {
+            entries.push(ReportEntry {
+                element: ElementKey::Channel(c.id),
+                kind: MetricKind::ChannelLatency,
+                mean: 2000.0,
+                count: 1,
+            });
+        }
+    }
+    let n_entries = entries.len();
+    let report = Report {
+        from: WorkerId(0),
+        to_manager: w,
+        at: Time::from_secs_f64(1.0),
+        entries,
+        buffer_updates: Vec::new(),
+    };
+    bench(
+        &format!("manager: ingest report with {n_entries} entries"),
+        50,
+        || mgr.ingest(&report),
+    );
+    bench("manager: evaluate 4 chains (1600-wide layers)", 50, || {
+        mgr.evaluate_chains(Time::from_secs_f64(1.0)).len()
+    });
+}
+
+fn bench_buffer_sizing() {
+    let cfg = BufferSizingConfig::default();
+    bench("buffer sizing: Eq.2/3 decision", 1_000_000, || {
+        next_buffer_size(32 * 1024, 42.0, Some(3.0), &cfg)
+    });
+    // Referenced ids to keep imports honest.
+    let _ = (ChannelId(0), VertexId(0));
+}
+
+fn main() {
+    println!("== hot-path benchmarks ==");
+    bench_event_queue();
+    bench_buffer_sizing();
+    bench_qos_setup();
+    bench_manager();
+    bench_channel_hot_path();
+    bench_video_sim_rate();
+}

@@ -1,0 +1,118 @@
+//! Worker-side arbitration of concurrent buffer-size updates (§3.5.1):
+//! "some channels may be in the subgraph of multiple QoS Managers and
+//! these may try to change its output buffer size at the same time.  To
+//! deal with this, the worker node applies the buffer size update it
+//! receives first and discards any older updates."
+//!
+//! "First" is defined by the measurement-state time the deciding manager
+//! acted on (`based_on`): an update based on staler state than one
+//! already applied is discarded.
+
+use crate::graph::ids::ChannelId;
+use crate::util::time::Time;
+use std::collections::HashMap;
+
+/// Per-worker arbitration state.
+#[derive(Debug, Default)]
+pub struct BufferUpdateArbiter {
+    /// Channel -> (based_on of last applied update, applied size).
+    applied: HashMap<ChannelId, (Time, u32)>,
+}
+
+/// Result of offering an update to the arbiter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Apply the new size (and notify interested managers).
+    Apply(u32),
+    /// A newer-or-equal update was already applied; discard.
+    Discard,
+}
+
+impl BufferUpdateArbiter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Offer an update for `channel` decided at measurement-state time
+    /// `based_on`.
+    pub fn offer(&mut self, channel: ChannelId, size: u32, based_on: Time) -> Verdict {
+        match self.applied.get(&channel) {
+            Some(&(t, applied_size)) if based_on <= t => {
+                let _ = applied_size;
+                Verdict::Discard
+            }
+            _ => {
+                self.applied.insert(channel, (based_on, size));
+                Verdict::Apply(size)
+            }
+        }
+    }
+
+    /// Last applied size for a channel, if any.
+    pub fn current(&self, channel: ChannelId) -> Option<u32> {
+        self.applied.get(&channel).map(|&(_, s)| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_update_wins_over_staler() {
+        let mut a = BufferUpdateArbiter::new();
+        assert_eq!(a.offer(ChannelId(1), 4096, Time(100)), Verdict::Apply(4096));
+        // A concurrent manager acting on older measurement state loses.
+        assert_eq!(a.offer(ChannelId(1), 9999, Time(50)), Verdict::Discard);
+        assert_eq!(a.current(ChannelId(1)), Some(4096));
+    }
+
+    #[test]
+    fn fresher_update_applies() {
+        let mut a = BufferUpdateArbiter::new();
+        a.offer(ChannelId(1), 4096, Time(100));
+        assert_eq!(a.offer(ChannelId(1), 2048, Time(200)), Verdict::Apply(2048));
+        assert_eq!(a.current(ChannelId(1)), Some(2048));
+    }
+
+    #[test]
+    fn equal_time_is_discarded() {
+        let mut a = BufferUpdateArbiter::new();
+        a.offer(ChannelId(1), 4096, Time(100));
+        assert_eq!(a.offer(ChannelId(1), 2048, Time(100)), Verdict::Discard);
+    }
+
+    #[test]
+    fn channels_are_independent() {
+        let mut a = BufferUpdateArbiter::new();
+        a.offer(ChannelId(1), 4096, Time(100));
+        assert_eq!(a.offer(ChannelId(2), 512, Time(10)), Verdict::Apply(512));
+    }
+
+    #[test]
+    fn convergence_property() {
+        // Property: replaying any interleaving of updates, the applied
+        // size is the one with the greatest based_on time seen so far
+        // (ties: first received).
+        use crate::util::proptest::{check, prop_assert_eq};
+        check(200, |g| {
+            let n = g.usize(1..=20);
+            let updates: Vec<(u32, Time)> =
+                (0..n).map(|_| (g.u32(200..=65536), Time(g.u64(0..=50)))).collect();
+            let mut arb = BufferUpdateArbiter::new();
+            let mut expected: Option<(Time, u32)> = None;
+            for &(size, t) in &updates {
+                arb.offer(ChannelId(0), size, t);
+                match expected {
+                    Some((et, _)) if t <= et => {}
+                    _ => expected = Some((t, size)),
+                }
+            }
+            prop_assert_eq(
+                arb.current(ChannelId(0)),
+                expected.map(|(_, s)| s),
+                "arbiter state",
+            )
+        });
+    }
+}

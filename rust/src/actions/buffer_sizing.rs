@@ -1,0 +1,201 @@
+//! Adaptive output buffer sizing (§3.5.1).
+//!
+//! For a channel `e` with average output buffer latency
+//! `obl(e,t) = oblt(e,t) / 2`:
+//!
+//! * shrink (Eq. 2) when `obl` exceeds both a minimum threshold (default
+//!   5 ms) and the source task's latency:
+//!   `obs*(e) = max(ε, obs(e) · r^obl(e,t))` with `0 < r < 1`;
+//! * grow (Eq. 3) when `obl ≈ 0` (records barely fit anymore):
+//!   `obs*(e) = min(ω, s · obs(e))` with `s > 1`.
+//!
+//! Defaults follow the paper: `r = 0.98`, `s = 1.1`, `ε = 200` bytes.
+
+/// Tunables for Eq. 2/3.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BufferSizingConfig {
+    /// Shrink base `r` (per millisecond of `obl`).
+    pub r: f64,
+    /// Growth factor `s`.
+    pub s: f64,
+    /// Absolute lower bound `ε` in bytes.
+    pub min_size: u32,
+    /// Absolute upper bound `ω` in bytes.
+    pub max_size: u32,
+    /// "Sensible minimum threshold" on `obl` before shrinking, in ms.
+    pub shrink_threshold_ms: f64,
+    /// `obl ≈ 0` threshold for growing, in ms.
+    pub grow_threshold_ms: f64,
+}
+
+impl Default for BufferSizingConfig {
+    fn default() -> Self {
+        BufferSizingConfig {
+            r: 0.98,
+            s: 1.1,
+            min_size: 200,
+            max_size: 64 * 1024,
+            shrink_threshold_ms: 5.0,
+            grow_threshold_ms: 0.05,
+        }
+    }
+}
+
+/// The decision for one channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SizeDecision {
+    Shrink(u32),
+    Grow(u32),
+    /// Conditions for neither Eq. 2 nor Eq. 3 hold.
+    Keep,
+}
+
+/// Decide the next output buffer size for a channel.
+///
+/// * `current`: current output buffer size in bytes.
+/// * `obl_ms`: average output buffer latency `oblt/2` in milliseconds.
+/// * `source_task_latency_ms`: task latency of the channel's source task
+///   (`None` if unmeasured, e.g. a source task, treated as 0).
+pub fn next_buffer_size(
+    current: u32,
+    obl_ms: f64,
+    source_task_latency_ms: Option<f64>,
+    cfg: &BufferSizingConfig,
+) -> SizeDecision {
+    let src = source_task_latency_ms.unwrap_or(0.0);
+    if obl_ms > cfg.shrink_threshold_ms && obl_ms > src {
+        // Eq. 2: obs* = max(ε, obs · r^obl).
+        let next = (current as f64 * cfg.r.powf(obl_ms)).floor() as u32;
+        let next = next.max(cfg.min_size);
+        if next < current {
+            return SizeDecision::Shrink(next);
+        }
+        return SizeDecision::Keep;
+    }
+    if obl_ms < cfg.grow_threshold_ms {
+        // Eq. 3: obs* = min(ω, s · obs).
+        let next = (current as f64 * cfg.s).ceil() as u32;
+        let next = next.min(cfg.max_size);
+        if next > current {
+            return SizeDecision::Grow(next);
+        }
+    }
+    SizeDecision::Keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BufferSizingConfig {
+        BufferSizingConfig::default()
+    }
+
+    #[test]
+    fn shrinks_on_high_obl() {
+        // obl = 500 ms on a 32 KB buffer: 0.98^500 is tiny -> clamp to ε.
+        match next_buffer_size(32 * 1024, 500.0, Some(1.0), &cfg()) {
+            SizeDecision::Shrink(next) => assert_eq!(next, 200),
+            other => panic!("expected shrink, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shrink_is_gradual_for_moderate_obl() {
+        // obl = 10 ms: factor 0.98^10 = 0.817.
+        match next_buffer_size(32 * 1024, 10.0, Some(1.0), &cfg()) {
+            SizeDecision::Shrink(next) => {
+                let expected = (32.0 * 1024.0 * 0.98f64.powf(10.0)).floor() as u32;
+                assert_eq!(next, expected);
+                assert!(next > 26_000 && next < 27_000);
+            }
+            other => panic!("expected shrink, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn no_shrink_below_threshold() {
+        assert_eq!(next_buffer_size(32 * 1024, 4.0, Some(0.0), &cfg()), SizeDecision::Keep);
+    }
+
+    #[test]
+    fn no_shrink_when_source_task_dominates() {
+        // obl 10 ms but the source task itself takes 50 ms per item: the
+        // buffer is not the problem.
+        assert_eq!(
+            next_buffer_size(32 * 1024, 10.0, Some(50.0), &cfg()),
+            SizeDecision::Keep
+        );
+    }
+
+    #[test]
+    fn grows_when_obl_near_zero() {
+        match next_buffer_size(1000, 0.0, Some(1.0), &cfg()) {
+            SizeDecision::Grow(next) => assert_eq!(next, 1100),
+            other => panic!("expected grow, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn grow_capped_at_omega() {
+        let c = cfg();
+        match next_buffer_size(c.max_size - 10, 0.0, None, &c) {
+            SizeDecision::Grow(next) => assert_eq!(next, c.max_size),
+            other => panic!("expected grow, got {other:?}"),
+        }
+        // Already at ω: keep.
+        assert_eq!(next_buffer_size(c.max_size, 0.0, None, &c), SizeDecision::Keep);
+    }
+
+    #[test]
+    fn shrink_clamped_at_epsilon() {
+        let c = cfg();
+        assert_eq!(next_buffer_size(c.min_size, 100.0, None, &c), SizeDecision::Keep);
+    }
+
+    #[test]
+    fn bounds_always_respected() {
+        // Property: for any inputs the result stays within [ε, ω].
+        crate::util::proptest::check(500, |g| {
+            let c = cfg();
+            // Eq. 2 only lower-bounds with ε, so sizes already within
+            // [ε, ω] must stay there (ω-exceeding sizes can only occur if
+            // configured as the initial size, and then only shrink).
+            let current = g.u32(1..=c.max_size);
+            let obl = g.f64(0.0, 2000.0);
+            let src = if g.bool() { Some(g.f64(0.0, 100.0)) } else { None };
+            let next = match next_buffer_size(current, obl, src, &c) {
+                SizeDecision::Shrink(n) | SizeDecision::Grow(n) => n,
+                SizeDecision::Keep => return Ok(()),
+            };
+            crate::util::proptest::prop_assert(
+                next >= c.min_size && next <= c.max_size,
+                format!("size {next} out of [{}, {}]", c.min_size, c.max_size),
+            )
+        });
+    }
+
+    #[test]
+    fn shrink_monotone_in_obl() {
+        // Property: larger obl never yields a larger next size.
+        crate::util::proptest::check(200, |g| {
+            let c = cfg();
+            let current = g.u32(1024..=64 * 1024);
+            let a = g.f64(6.0, 500.0);
+            let b = g.f64(6.0, 500.0);
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            let nlo = match next_buffer_size(current, lo, None, &c) {
+                SizeDecision::Shrink(n) => n,
+                _ => current,
+            };
+            let nhi = match next_buffer_size(current, hi, None, &c) {
+                SizeDecision::Shrink(n) => n,
+                _ => current,
+            };
+            crate::util::proptest::prop_assert(
+                nhi <= nlo,
+                format!("obl {hi} -> {nhi} vs obl {lo} -> {nlo}"),
+            )
+        });
+    }
+}

@@ -1,0 +1,272 @@
+//! Dynamic task chaining (§3.5.2): pull a series of tasks into the same
+//! execution thread, eliminating queues and thread-safe hand-over.
+//!
+//! A series `v1, ..., vn` within a constrained sequence is chainable iff
+//! * all tasks run as separate threads within the same process (same
+//!   worker here; already-chained tasks are excluded),
+//! * the sum of their CPU utilisations is below a fraction of one core
+//!   (default 90%),
+//! * they form a path (each consecutive pair connected by a channel), and
+//! * interior tasks have exactly one in and one out channel (`v1` may
+//!   have many inputs, `vn` many outputs),
+//! plus the reproduction-side §3.6 annotation: no task is pinned
+//! unchainable (fault-tolerance materialisation points).
+
+use crate::graph::ids::VertexId;
+use crate::qos::subgraph::VertexRef;
+
+/// How the worker treats the input queues between tasks being chained
+/// (§3.5.2 offers both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainPolicy {
+    /// Drop the existing queues (acceptable for e.g. video frames).
+    Drop,
+    /// Halt `v1` and drain the downstream queues before chaining.
+    Drain,
+}
+
+/// Chaining tunables.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChainingConfig {
+    /// Maximum total CPU utilisation of the chained thread, as a
+    /// fraction of one core (paper: "for example 90% of a core").
+    pub cpu_budget: f64,
+    /// Minimum number of tasks worth chaining.
+    pub min_len: usize,
+    pub drain: DrainPolicy,
+}
+
+impl Default for ChainingConfig {
+    fn default() -> Self {
+        ChainingConfig { cpu_budget: 0.9, min_len: 2, drain: DrainPolicy::Drain }
+    }
+}
+
+/// A candidate task on the (worst) constrained path, in sequence order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChainCandidate {
+    pub vertex: VertexRef,
+    /// Measured CPU utilisation (fraction of a core); falls back to the
+    /// static estimate when unmeasured.
+    pub cpu: f64,
+    /// Already part of a chain (excluded, §3.5.2 condition 1).
+    pub already_chained: bool,
+    /// Consecutive candidates are guaranteed connected by a channel (they
+    /// come from a sequence), so no extra path check is needed here.
+    pub _connected: (),
+}
+
+impl ChainCandidate {
+    pub fn new(vertex: VertexRef, cpu: Option<f64>, already_chained: bool) -> ChainCandidate {
+        ChainCandidate {
+            vertex,
+            cpu: cpu.unwrap_or(vertex.cpu_estimate),
+            already_chained,
+            _connected: (),
+        }
+    }
+}
+
+/// Find the longest chainable series among `candidates` (consecutive
+/// tasks of one constrained sequence).  Returns the vertex ids of the
+/// chain, or `None` if no series of at least `cfg.min_len` qualifies.
+///
+/// "The QoS Manager looks for the longest chainable series of tasks
+/// within the sequence." (§3.5.2)
+pub fn find_longest_chain(
+    candidates: &[ChainCandidate],
+    cfg: &ChainingConfig,
+) -> Option<Vec<VertexId>> {
+    let mut best: Option<(usize, usize)> = None; // (start, len)
+    let n = candidates.len();
+    for start in 0..n {
+        // Grow the window [start, end) while all conditions hold.
+        let mut cpu_sum = 0.0;
+        let mut end = start;
+        while end < n {
+            let c = &candidates[end];
+            if c.already_chained || c.vertex.pinned {
+                break;
+            }
+            if c.vertex.worker != candidates[start].vertex.worker {
+                break;
+            }
+            // Degree conditions: interior tasks need exactly 1 in / 1 out;
+            // the first may have many inputs, the last many outputs.  We
+            // check as-if the window ended here and also as-if it grows:
+            // a task can sit at position `end` if (a) it is the first
+            // (end == start) or has in_degree == 1, and (b) we will only
+            // keep it as non-last if out_degree == 1 (enforced on the
+            // *previous* element when growing past it).
+            if end > start && c.vertex.in_degree != 1 {
+                break;
+            }
+            if end > start && candidates[end - 1].vertex.out_degree != 1 {
+                break;
+            }
+            if cpu_sum + c.cpu >= cfg.cpu_budget {
+                break;
+            }
+            cpu_sum += c.cpu;
+            end += 1;
+        }
+        let len = end - start;
+        if len >= cfg.min_len && best.map_or(true, |(_, bl)| len > bl) {
+            best = Some((start, len));
+        }
+    }
+    best.map(|(start, len)| {
+        candidates[start..start + len]
+            .iter()
+            .map(|c| c.vertex.id)
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ids::{JobVertexId, WorkerId};
+
+    fn vref(id: u32, worker: u32, in_deg: u32, out_deg: u32, pinned: bool) -> VertexRef {
+        VertexRef {
+            id: VertexId(id),
+            job_vertex: JobVertexId(id),
+            worker: WorkerId(worker),
+            in_degree: in_deg,
+            out_degree: out_deg,
+            pinned,
+            cpu_estimate: 0.1,
+        }
+    }
+
+    fn cand(id: u32, worker: u32, cpu: f64) -> ChainCandidate {
+        ChainCandidate::new(vref(id, worker, 1, 1, false), Some(cpu), false)
+    }
+
+    #[test]
+    fn chains_full_path_under_budget() {
+        // The paper's outcome: Decoder..Encoder chained because CPU sum
+        // fits in one core.
+        let cands = vec![cand(1, 0, 0.2), cand(2, 0, 0.1), cand(3, 0, 0.2), cand(4, 0, 0.3)];
+        let chain = find_longest_chain(&cands, &ChainingConfig::default()).unwrap();
+        assert_eq!(chain, vec![VertexId(1), VertexId(2), VertexId(3), VertexId(4)]);
+    }
+
+    #[test]
+    fn cpu_budget_limits_chain() {
+        let cands = vec![cand(1, 0, 0.5), cand(2, 0, 0.3), cand(3, 0, 0.4)];
+        // 0.5+0.3 = 0.8 < 0.9 but +0.4 exceeds; longest window is [1,2].
+        let chain = find_longest_chain(&cands, &ChainingConfig::default()).unwrap();
+        assert_eq!(chain, vec![VertexId(1), VertexId(2)]);
+    }
+
+    #[test]
+    fn worker_boundary_splits_chain() {
+        let cands = vec![cand(1, 0, 0.1), cand(2, 0, 0.1), cand(3, 1, 0.1), cand(4, 1, 0.1)];
+        let chain = find_longest_chain(&cands, &ChainingConfig::default()).unwrap();
+        assert_eq!(chain.len(), 2);
+    }
+
+    #[test]
+    fn first_may_fan_in_last_may_fan_out() {
+        let mut cands = vec![
+            ChainCandidate::new(vref(1, 0, 8, 1, false), Some(0.1), false),
+            cand(2, 0, 0.1),
+            ChainCandidate::new(vref(3, 0, 1, 8, false), Some(0.1), false),
+        ];
+        let chain = find_longest_chain(&cands, &ChainingConfig::default()).unwrap();
+        assert_eq!(chain.len(), 3);
+        // But fan-in in the middle breaks the chain at that point.
+        cands[1] = ChainCandidate::new(vref(2, 0, 3, 1, false), Some(0.1), false);
+        let chain = find_longest_chain(&cands, &ChainingConfig::default());
+        assert_eq!(chain, Some(vec![VertexId(2), VertexId(3)]));
+    }
+
+    #[test]
+    fn interior_fan_out_breaks_chain() {
+        let cands = vec![
+            cand(1, 0, 0.1),
+            ChainCandidate::new(vref(2, 0, 1, 5, false), Some(0.1), false),
+            cand(3, 0, 0.1),
+        ];
+        // v2 may end a chain (fan-out allowed at the last position) but
+        // nothing can follow it.
+        let chain = find_longest_chain(&cands, &ChainingConfig::default()).unwrap();
+        assert_eq!(chain, vec![VertexId(1), VertexId(2)]);
+    }
+
+    #[test]
+    fn pinned_and_already_chained_are_skipped() {
+        let cands = vec![
+            cand(1, 0, 0.1),
+            ChainCandidate::new(vref(2, 0, 1, 1, true), Some(0.1), false), // pinned
+            cand(3, 0, 0.1),
+            cand(4, 0, 0.1),
+        ];
+        let chain = find_longest_chain(&cands, &ChainingConfig::default()).unwrap();
+        assert_eq!(chain, vec![VertexId(3), VertexId(4)]);
+
+        let cands = vec![
+            cand(1, 0, 0.1),
+            ChainCandidate::new(vref(2, 0, 1, 1, false), Some(0.1), true), // chained
+            cand(3, 0, 0.1),
+        ];
+        assert_eq!(find_longest_chain(&cands, &ChainingConfig::default()), None);
+    }
+
+    #[test]
+    fn no_chain_when_everything_blocked() {
+        let cands = vec![cand(1, 0, 0.95), cand(2, 0, 0.95)];
+        assert_eq!(find_longest_chain(&cands, &ChainingConfig::default()), None);
+    }
+
+    #[test]
+    fn chain_properties_hold() {
+        use crate::util::proptest::{check, prop_assert};
+        check(300, |g| {
+            let n = g.usize(1..=8);
+            let cands: Vec<ChainCandidate> = (0..n)
+                .map(|i| {
+                    ChainCandidate::new(
+                        vref(
+                            i as u32,
+                            g.u32(0..=1),
+                            g.u32(1..=3),
+                            g.u32(1..=3),
+                            g.chance(0.2),
+                        ),
+                        Some(g.f64(0.0, 0.6)),
+                        g.chance(0.2),
+                    )
+                })
+                .collect();
+            let cfg = ChainingConfig::default();
+            match find_longest_chain(&cands, &cfg) {
+                None => Ok(()),
+                Some(chain) => {
+                    let start = cands
+                        .iter()
+                        .position(|c| c.vertex.id == chain[0])
+                        .unwrap();
+                    let window = &cands[start..start + chain.len()];
+                    let cpu: f64 = window.iter().map(|c| c.cpu).sum();
+                    prop_assert(chain.len() >= cfg.min_len, "min length")?;
+                    prop_assert(cpu < cfg.cpu_budget, format!("cpu {cpu}"))?;
+                    prop_assert(
+                        window.iter().all(|c| !c.vertex.pinned && !c.already_chained),
+                        "pinned/chained inside chain",
+                    )?;
+                    prop_assert(
+                        window.windows(2).all(|w| {
+                            w[0].vertex.worker == w[1].vertex.worker
+                                && w[1].vertex.in_degree == 1
+                                && w[0].vertex.out_degree == 1
+                        }),
+                        "worker/degree conditions",
+                    )
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,44 @@
+//! Countermeasures a QoS Manager can take on a constraint violation
+//! (§3.5): adaptive output buffer sizing and dynamic task chaining, plus
+//! the worker-side arbitration of concurrent buffer updates.
+
+pub mod arbiter;
+pub mod buffer_sizing;
+pub mod chaining;
+
+use crate::graph::ids::{ChannelId, VertexId, WorkerId};
+use crate::util::time::Time;
+
+/// An action issued by a QoS Manager towards a worker node (or, for
+/// [`Action::Unresolvable`], towards the master).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Set the output buffer size of a channel (applied by the worker
+    /// running the channel's *sender* task).
+    SetBufferSize {
+        channel: ChannelId,
+        /// Worker owning the output buffer.
+        worker: WorkerId,
+        size: u32,
+        /// Measurement-state time the deciding manager acted on; used by
+        /// the worker-side first-wins arbitration (§3.5.1).
+        based_on: Time,
+    },
+    /// Chain `tasks` (a connected series on one worker) into a single
+    /// execution thread (§3.5.2).
+    ChainTasks {
+        worker: WorkerId,
+        tasks: Vec<VertexId>,
+        /// How to treat the input queues between the chained tasks.
+        drain: chaining::DrainPolicy,
+    },
+    /// All countermeasure preconditions are exhausted but the constraint
+    /// is still violated: notify the master, who notifies the user "who
+    /// has to either change the job or revise the constraints" (§3.5).
+    Unresolvable {
+        manager: WorkerId,
+        constraint: usize,
+        worst_latency_ms: f64,
+        limit_ms: f64,
+    },
+}

@@ -1,0 +1,209 @@
+//! The Hadoop Online (HOP) baseline (§4.1.2, Fig. 10): the same video
+//! workload expressed as two chained MapReduce jobs.
+//!
+//! ```text
+//! MR job 1:  Partitioner (map, hijacked slot)  -shuffle->  Decoder (reduce)
+//!               |                                   |
+//!               |                    HDFS materialisation + job pipeline
+//! MR job 2:  ChainMapper [Merger, Overlay, Encoder] -shuffle-> RTP (window reduce)
+//! ```
+//!
+//! Model of HOP's latency sources, calibrated to the prototype's
+//! documented behaviour:
+//! * continuous-query streaming map->reduce still moves data in sort
+//!   buffers pulled by the reducer — modelled as a per-hop shuffle delay;
+//! * the boundary between the two MapReduce jobs materialises to HDFS
+//!   before job 2's mappers pick the data up — a larger handoff delay;
+//! * the reduce side runs a 100 ms sliding window (§4.1.2);
+//! * the three middle tasks execute inside a single chain mapper process
+//!   (Hadoop's static compile-time chaining), so there is no channel
+//!   cost between Merger, Overlay and Encoder.
+
+use crate::graph::constraint::JobConstraint;
+use crate::graph::job::{DistributionPattern, JobGraph};
+use crate::graph::runtime::RuntimeGraph;
+use crate::graph::sequence::JobSequence;
+use crate::sim::cluster::SourceSpec;
+use crate::sim::task::{KeyMap, OutBytes, Route, Semantics, TaskSpec};
+use crate::util::time::Duration;
+use anyhow::Result;
+
+/// HOP experiment parameters (§4.3.4: m=10, one pipeline per host,
+/// 80 streams, 100 ms reduce window).
+#[derive(Debug, Clone, Copy)]
+pub struct HadoopSpec {
+    pub parallelism: u32,
+    pub workers: u32,
+    pub streams: u32,
+    pub group_size: u32,
+    pub fps: f64,
+    pub packet_bytes: u64,
+    pub raw_frame_bytes: u64,
+    pub encoded_merged_bytes: u64,
+    /// Reduce-side sliding window (§4.1.2: 100 ms).
+    pub reduce_window: Duration,
+    /// Mean latency added by one shuffle hop (map output sort buffer +
+    /// reducer pull).
+    pub shuffle_delay: Duration,
+    /// Extra latency at the MR job boundary (HDFS write + job-2 map pull).
+    pub job_boundary_delay: Duration,
+    pub decode_service: Duration,
+    pub chain_map_service: Duration,
+}
+
+impl Default for HadoopSpec {
+    fn default() -> Self {
+        HadoopSpec {
+            parallelism: 10,
+            workers: 10,
+            streams: 80,
+            group_size: 4,
+            fps: 4.0,
+            packet_bytes: 4 * 1024,
+            raw_frame_bytes: 320 * 240 * 4,
+            encoded_merged_bytes: 16 * 1024,
+            reduce_window: Duration::from_millis(100),
+            shuffle_delay: Duration::from_millis(450),
+            job_boundary_delay: Duration::from_millis(800),
+            decode_service: Duration::from_micros(4_000),
+            chain_map_service: Duration::from_micros(8_300),
+        }
+    }
+}
+
+/// Built HOP job, ready for the simulator.
+pub struct HadoopJob {
+    pub spec: HadoopSpec,
+    pub job: JobGraph,
+    pub rg: RuntimeGraph,
+    /// Monitoring-only constraint (HOP has no QoS management; the huge
+    /// limit keeps the measurement machinery on without any actions).
+    pub constraints: Vec<JobConstraint>,
+    pub task_specs: Vec<TaskSpec>,
+    pub sources: Vec<SourceSpec>,
+    pub monitored_sequence: JobSequence,
+}
+
+/// Build the HOP pipeline.
+pub fn hadoop_online_job(spec: HadoopSpec) -> Result<HadoopJob> {
+    assert_eq!(spec.streams % spec.parallelism, 0);
+    let streams_per_decoder = spec.streams / spec.parallelism;
+    assert_eq!(streams_per_decoder % spec.group_size, 0);
+    let groups = spec.streams / spec.group_size;
+    let groups_per_rtp = groups.div_ceil(spec.parallelism).max(1);
+
+    let m = spec.parallelism;
+    let mut job = JobGraph::new();
+    let partitioner = job.add_vertex("Partitioner(map1)", m);
+    let decoder = job.add_vertex("Decoder(reduce1)", m);
+    let chain_mapper = job.add_vertex("ChainMapper(map2)", m);
+    let rtp = job.add_vertex("RTP(reduce2)", m);
+    // Hadoop shuffles are all-to-all by partition key.
+    job.connect(partitioner, decoder, DistributionPattern::AllToAll);
+    job.connect(decoder, chain_mapper, DistributionPattern::AllToAll);
+    job.connect(chain_mapper, rtp, DistributionPattern::AllToAll);
+    // WindowAgg needs a downstream consumer: wire reduce2 -> sink
+    // pointwise on the same worker.
+    let sink = job.add_vertex("RTPSink", m);
+    job.connect(rtp, sink, DistributionPattern::Pointwise);
+    job.validate()?;
+    // §4.3.4: "only one deployed processing pipeline per host".
+    let rg = RuntimeGraph::expand(&job, spec.workers)?;
+
+    let seq = JobSequence::along_path(
+        &job,
+        &[decoder, chain_mapper],
+        Some(partitioner),
+        Some(rtp),
+    )?;
+    let constraints = vec![JobConstraint::new(
+        seq.clone(),
+        Duration::from_secs(3600),
+        Duration::from_secs(15),
+    )];
+
+    let task_specs = vec![
+        // Map 1: the hijacked map slot forwarding stream packets, keyed
+        // so that a group's streams reach the same reducer.
+        TaskSpec {
+            semantics: Semantics::Transform,
+            service: Duration::from_micros(30),
+            out_bytes: OutBytes::Scale(1.0),
+            key_map: KeyMap::Identity,
+            route: Route::ByKey { divisor: streams_per_decoder },
+            downstream_delay: spec.shuffle_delay,
+        },
+        // Reduce 1: Decoder; its outputs cross the MR job boundary.
+        TaskSpec {
+            semantics: Semantics::Transform,
+            service: spec.decode_service,
+            out_bytes: OutBytes::Const(spec.raw_frame_bytes),
+            key_map: KeyMap::Identity,
+            route: Route::ByKey { divisor: streams_per_decoder },
+            downstream_delay: spec.job_boundary_delay,
+        },
+        // Map 2: the chain mapper runs Merger+Overlay+Encoder in one
+        // process (compile-time chaining) — one merge-join with the
+        // summed service time, no internal channels.
+        TaskSpec {
+            semantics: Semantics::Merge { arity: spec.group_size },
+            service: spec.chain_map_service,
+            out_bytes: OutBytes::Const(spec.encoded_merged_bytes),
+            key_map: KeyMap::DivideBy(spec.group_size),
+            route: Route::ByKey { divisor: groups_per_rtp },
+            downstream_delay: spec.shuffle_delay,
+        },
+        // Reduce 2: RTP server behind the 100 ms sliding window.  The
+        // window wait is modelled as service-side delay on each item
+        // (mean half-window) plus the sink consuming it.
+        TaskSpec {
+            semantics: Semantics::WindowAgg { window: spec.reduce_window },
+            service: Duration::from_micros(50),
+            out_bytes: OutBytes::Scale(1.0),
+            key_map: KeyMap::Identity,
+            route: Route::Pointwise,
+            downstream_delay: Duration::ZERO,
+        },
+        TaskSpec::sink(),
+    ];
+
+    let interval = Duration::from_secs_f64(1.0 / spec.fps);
+    let sources = (0..spec.streams)
+        .map(|s| SourceSpec {
+            key: s,
+            target: partitioner,
+            target_subtask: s % m,
+            interval,
+            bytes: spec.packet_bytes,
+            offset: Duration::from_micros(
+                (interval.as_micros() as u128 * s as u128 / spec.streams as u128) as u64,
+            ),
+            throttle: None,
+            batch: 1,
+        })
+        .collect();
+
+    Ok(HadoopJob {
+        spec,
+        job,
+        rg,
+        constraints,
+        task_specs,
+        sources,
+        monitored_sequence: seq,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_with_defaults() {
+        let hj = hadoop_online_job(HadoopSpec::default()).unwrap();
+        assert_eq!(hj.job.vertices.len(), 5);
+        assert_eq!(hj.rg.vertices.len(), 5 * 10);
+        assert_eq!(hj.sources.len(), 80);
+        hj.monitored_sequence.validate(&hj.job).unwrap();
+    }
+}

@@ -1,0 +1,3 @@
+//! Baseline systems the paper compares against.
+
+pub mod hadoop;

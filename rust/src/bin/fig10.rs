@@ -1,0 +1,36 @@
+//! Regenerates Fig. 10 (§4.3.4): latency of the Hadoop Online baseline
+//! (80 video streams, m=10, 100 ms reduce window).
+//!
+//! Usage: `fig10 [--secs N] [--seed N]`
+
+use nephele::baseline::hadoop::HadoopSpec;
+use nephele::experiments::hadoop::run_hadoop_online;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut secs = 300;
+    let mut seed = 42;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--secs" => {
+                secs = argv[i + 1].parse()?;
+                i += 2;
+            }
+            "--seed" => {
+                seed = argv[i + 1].parse()?;
+                i += 2;
+            }
+            other => anyhow::bail!("unknown argument {other:?}"),
+        }
+    }
+    let report = run_hadoop_online(HadoopSpec::default(), secs, seed)?;
+    println!("== Fig. 10 — latency in Hadoop Online ==");
+    print!("{}", report.breakdown.render());
+    println!(
+        "ground-truth e2e mean: {} ms | delivered: {}",
+        report.e2e_mean_ms.map_or("n/a".into(), |v| format!("{v:.1}")),
+        report.items_delivered
+    );
+    Ok(())
+}

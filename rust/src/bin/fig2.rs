@@ -1,0 +1,30 @@
+//! Regenerates Fig. 2 (§2.2.1): item latency and throughput of the
+//! sender/receiver microbenchmark, swept over data creation rate and
+//! output buffer size (including the flush-every-item baseline).
+//!
+//! Usage: `fig2 [--low-rate-secs N] [--seed N]`
+
+use nephele::experiments::fig2::{fig2_sweep, render};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut low_secs = 3600;
+    let mut seed = 42;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--low-rate-secs" => {
+                low_secs = argv[i + 1].parse()?;
+                i += 2;
+            }
+            "--seed" => {
+                seed = argv[i + 1].parse()?;
+                i += 2;
+            }
+            other => anyhow::bail!("unknown argument {other:?}"),
+        }
+    }
+    let cells = fig2_sweep(low_secs, seed)?;
+    print!("{}", render(&cells));
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Regenerates Fig. 7: latency without optimizations (§4.3.1).
+//!
+//! Usage: `fig7 [--scale small|paper] [--secs N] [--seed N] [--quiet]`
+
+#[path = "figbin_common.rs"]
+mod figbin;
+
+use nephele::experiments::video_scenarios::{run_video_scenario, Scenario};
+
+fn main() -> anyhow::Result<()> {
+    let (spec, cfg, secs, verbose) = figbin::video_args(std::env::args(), 300)?;
+    let report = run_video_scenario(Scenario::Unoptimized, spec, cfg, secs, 30, verbose)?;
+    figbin::print_scenario_summary(&report);
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Regenerates Fig. 8: latency with adaptive output buffer sizing
+//! (§4.3.2).  Longer default horizon: the buffer convergence phase takes
+//! several minutes of virtual time (the paper reports ~9 minutes).
+
+#[path = "figbin_common.rs"]
+mod figbin;
+
+use nephele::experiments::video_scenarios::{run_video_scenario, Scenario};
+
+fn main() -> anyhow::Result<()> {
+    let (spec, cfg, secs, verbose) = figbin::video_args(std::env::args(), 900)?;
+    let report = run_video_scenario(Scenario::AdaptiveBuffers, spec, cfg, secs, 30, verbose)?;
+    figbin::print_scenario_summary(&report);
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Regenerates Fig. 9: latency with adaptive output buffer sizing and
+//! dynamic task chaining (§4.3.3).
+
+#[path = "figbin_common.rs"]
+mod figbin;
+
+use nephele::experiments::video_scenarios::{run_video_scenario, Scenario};
+
+fn main() -> anyhow::Result<()> {
+    let (spec, cfg, secs, verbose) = figbin::video_args(std::env::args(), 900)?;
+    let report = run_video_scenario(Scenario::BuffersAndChaining, spec, cfg, secs, 30, verbose)?;
+    figbin::print_scenario_summary(&report);
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Shared CLI plumbing for the figure binaries (no clap in the offline
+//! build; a tiny hand-rolled parser suffices).
+
+use anyhow::{bail, Result};
+use nephele::config::EngineConfig;
+use nephele::experiments::video_scenarios::ScenarioReport;
+use nephele::pipeline::video::VideoSpec;
+
+/// Parse `--scale small|paper --secs N --seed N --quiet --constraint-ms N`.
+pub fn video_args(
+    args: impl Iterator<Item = String>,
+    default_secs: u64,
+) -> Result<(VideoSpec, EngineConfig, u64, bool)> {
+    let mut spec = VideoSpec::default();
+    let mut cfg = EngineConfig::default();
+    let mut secs = default_secs;
+    let mut verbose = true;
+    let argv: Vec<String> = args.skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        let need = |i: usize| -> Result<&String> {
+            argv.get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("missing value after {}", argv[i]))
+        };
+        match argv[i].as_str() {
+            "--scale" => {
+                spec = match need(i)?.as_str() {
+                    "small" => VideoSpec::small(),
+                    "paper" => VideoSpec::default(),
+                    other => bail!("unknown scale {other:?} (small|paper)"),
+                };
+                i += 2;
+            }
+            "--secs" => {
+                secs = need(i)?.parse()?;
+                i += 2;
+            }
+            "--seed" => {
+                cfg.seed = need(i)?.parse()?;
+                i += 2;
+            }
+            "--constraint-ms" => {
+                spec.constraint_ms = need(i)?.parse()?;
+                i += 2;
+            }
+            "--quiet" => {
+                verbose = false;
+                i += 1;
+            }
+            "--help" | "-h" => {
+                println!(
+                    "usage: [--scale small|paper] [--secs N] [--seed N] [--constraint-ms N] [--quiet]"
+                );
+                std::process::exit(0);
+            }
+            other => bail!("unknown argument {other:?}"),
+        }
+    }
+    Ok((spec, cfg, secs, verbose))
+}
+
+pub fn print_scenario_summary(r: &ScenarioReport) {
+    println!("== {} ==", r.scenario.title());
+    println!(
+        "converged total workflow latency: {:.1} ms (seq min {} / max {} ms)",
+        r.converged_total_ms(),
+        r.final_breakdown
+            .seq_min_ms
+            .map_or("n/a".into(), |v| format!("{v:.1}")),
+        r.final_breakdown
+            .seq_max_ms
+            .map_or("n/a".into(), |v| format!("{v:.1}")),
+    );
+    println!(
+        "ground-truth e2e mean: {} ms | buffer updates: {} | chains: {} | unresolvable: {} | delivered: {} | events: {}",
+        r.e2e_mean_ms.map_or("n/a".into(), |v| format!("{v:.1}")),
+        r.buffer_updates,
+        r.chains_established,
+        r.unresolvable,
+        r.items_delivered,
+        r.events,
+    );
+}

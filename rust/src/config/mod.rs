@@ -1,0 +1,127 @@
+//! Engine/simulation configuration.
+//!
+//! Defaults model the paper's testbed (§4.2): commodity servers, Gigabit
+//! Ethernet, NTP clock sync with <2 ms skew, 32 KB initial output
+//! buffers, 15 s measurement interval.
+
+use crate::qos::manager::ManagerConfig;
+use crate::util::time::Duration;
+
+/// Cluster/platform model parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterConfig {
+    /// Outgoing link bandwidth per worker (bytes/s).  GbE = 125 MB/s.
+    pub link_bytes_per_sec: f64,
+    /// Fixed per-buffer transfer overhead (framing, syscalls, buffer meta
+    /// data, memory management, thread synchronisation — §2.2.1).  This
+    /// cost is serialised at the sender and is what collapses throughput
+    /// for tiny buffers (Fig. 2b: flush mode caps at ~10 MBit/s).
+    pub per_buffer_overhead: Duration,
+    /// One-way software receive-path latency for remote channels
+    /// (JVM/TCP stack, selector loops).  Calibrated against the paper's
+    /// own Fig. 2 flush-mode baseline: 38 ms mean creation-to-arrival
+    /// for single 128-byte items on an idle GbE link.
+    pub base_latency: Duration,
+    /// Same path for worker-local channels (TCP loopback; Nephele sends
+    /// local channels through the network stack unless tasks are
+    /// chained).
+    pub local_latency: Duration,
+    /// Rate at which a task thread serialises items into output buffers
+    /// (memcpy-bound), bytes/s.
+    pub serialize_bytes_per_sec: f64,
+    /// Control-plane message delay (reports, actions).
+    pub control_delay: Duration,
+    /// Maximum absolute NTP clock offset per worker; tag-based channel
+    /// latency measurements see the difference of two offsets (§4.2
+    /// reports <2 ms skew).
+    pub max_clock_skew: Duration,
+    /// CPU cores per worker (Xeon E3-1230 V2: 4 cores / 8 threads).
+    pub cores_per_worker: u32,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            link_bytes_per_sec: 125.0e6,
+            per_buffer_overhead: Duration::from_micros(60),
+            base_latency: Duration::from_millis(35),
+            local_latency: Duration::from_millis(18),
+            serialize_bytes_per_sec: 2.0e9,
+            control_delay: Duration::from_micros(500),
+            max_clock_skew: Duration::from_millis(1),
+            cores_per_worker: 8,
+        }
+    }
+}
+
+/// Streaming-engine parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    pub cluster: ClusterConfig,
+    /// Initial/default output buffer size (bytes); §4.2 uses 32 KB.
+    pub default_buffer_size: u32,
+    /// Measurement interval for reporters and managers; §4.2 uses 15 s.
+    pub measurement_interval: Duration,
+    pub manager: ManagerConfig,
+    /// Deterministic seed for workloads, offsets, skew.
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            cluster: ClusterConfig::default(),
+            default_buffer_size: 32 * 1024,
+            measurement_interval: Duration::from_secs(15),
+            manager: ManagerConfig::default(),
+            seed: 42,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// The paper's scenario (1): constraints in place but optimisations
+    /// disabled (§4.3.1).
+    pub fn unoptimized(mut self) -> Self {
+        self.manager.enable_buffer_sizing = false;
+        self.manager.enable_chaining = false;
+        self
+    }
+
+    /// Scenario (2): adaptive output buffer sizing only (§4.3.2).
+    pub fn buffers_only(mut self) -> Self {
+        self.manager.enable_buffer_sizing = true;
+        self.manager.enable_chaining = false;
+        self
+    }
+
+    /// Scenario (3): buffer sizing + dynamic task chaining (§4.3.3).
+    pub fn fully_optimized(mut self) -> Self {
+        self.manager.enable_buffer_sizing = true;
+        self.manager.enable_chaining = true;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_builders_toggle_flags() {
+        let c = EngineConfig::default().unoptimized();
+        assert!(!c.manager.enable_buffer_sizing && !c.manager.enable_chaining);
+        let c = EngineConfig::default().buffers_only();
+        assert!(c.manager.enable_buffer_sizing && !c.manager.enable_chaining);
+        let c = EngineConfig::default().fully_optimized();
+        assert!(c.manager.enable_buffer_sizing && c.manager.enable_chaining);
+    }
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let c = EngineConfig::default();
+        assert_eq!(c.default_buffer_size, 32 * 1024);
+        assert_eq!(c.measurement_interval, Duration::from_secs(15));
+        assert_eq!(c.cluster.link_bytes_per_sec, 125.0e6);
+    }
+}

@@ -1,0 +1,142 @@
+//! Fig. 2 (§2.2.1): the output-buffer-size microbenchmark.  A sender
+//! creates 128-byte items at rate n into a fixed-size output buffer
+//! shipped over a 1 GBit/s link; we sweep n × buffer size and report
+//! (a) average item latency and (b) achieved throughput.
+
+use crate::config::EngineConfig;
+use crate::pipeline::microbench::{sender_receiver_job, MicrobenchSpec};
+use crate::sim::cluster::SimCluster;
+use crate::util::time::Duration;
+use anyhow::Result;
+
+/// One cell of the Fig. 2 sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig2Cell {
+    pub items_per_sec: f64,
+    /// `None` = flush after every item (the paper's baseline run).
+    pub buffer_bytes: Option<u32>,
+    pub mean_latency_ms: f64,
+    /// Achieved goodput at the receiver, MBit/s.
+    pub throughput_mbit: f64,
+    pub items_delivered: u64,
+}
+
+/// Run one cell: simulate until `max_items` have been delivered or
+/// `max_secs` of virtual time elapse.
+pub fn fig2_cell(
+    items_per_sec: f64,
+    buffer_bytes: Option<u32>,
+    max_secs: u64,
+    seed: u64,
+) -> Result<Fig2Cell> {
+    let spec = MicrobenchSpec { items_per_sec, ..MicrobenchSpec::default() };
+    let (job, rg, constraints, task_specs, sources) = sender_receiver_job(spec)?;
+    let mut cfg = EngineConfig { seed, ..EngineConfig::default() };
+    // Flushing incomplete buffers == a buffer that fits exactly one item.
+    cfg.default_buffer_size = buffer_bytes.unwrap_or(spec.item_bytes as u32);
+    // The microbenchmark fixes buffer sizes: no optimisation.
+    cfg = cfg.unoptimized();
+    let mut cluster = SimCluster::new(job, rg, &constraints, task_specs, sources, cfg)?;
+    // Warm up for a quarter of the horizon, then measure steady state
+    // (the ramp while the first buffers fill / the link backlog settles
+    // would otherwise skew the mean at the extremes of the sweep).
+    let warmup = Duration::from_secs_f64(max_secs as f64 * 0.25);
+    cluster.run(warmup, None);
+    let (n0, sum0) = (cluster.stats.e2e_count, cluster.stats.e2e_sum_us);
+    let t0 = cluster.now().as_secs_f64();
+    cluster.run(Duration::from_secs(max_secs), None);
+    let elapsed = (cluster.now().as_secs_f64() - t0).max(1e-9);
+    let delivered = cluster.stats.e2e_count - n0;
+    let mean_latency_ms = if delivered > 0 {
+        (cluster.stats.e2e_sum_us - sum0) / delivered as f64 / 1e3
+    } else {
+        f64::NAN
+    };
+    let throughput_mbit =
+        (delivered as f64 * spec.item_bytes as f64 * 8.0) / elapsed / 1e6;
+    Ok(Fig2Cell {
+        items_per_sec,
+        buffer_bytes,
+        mean_latency_ms,
+        throughput_mbit,
+        items_delivered: delivered,
+    })
+}
+
+/// The full sweep: rates 10^0..10^7 × buffer sizes {flush, 4, 8, 16, 32,
+/// 64 KB} (the paper sweeps to 10^8; beyond link saturation the numbers
+/// no longer change, so we stop one decade above saturation).
+pub fn fig2_sweep(max_secs_low_rate: u64, seed: u64) -> Result<Vec<Fig2Cell>> {
+    let buffers: [Option<u32>; 6] = [
+        None,
+        Some(4 * 1024),
+        Some(8 * 1024),
+        Some(16 * 1024),
+        Some(32 * 1024),
+        Some(64 * 1024),
+    ];
+    let mut out = Vec::new();
+    for decade in 0..=7 {
+        let rate = 10f64.powi(decade);
+        for buffer in buffers {
+            // Horizon per cell: enough to fill the buffer ~10 times (so
+            // tag-based means converge) but bounded in both virtual time
+            // (low rates) and total item count (high rates).
+            let items_per_buffer =
+                (buffer.unwrap_or(128) as f64 / 128.0).max(1.0);
+            let mut secs = (10.0 * items_per_buffer / rate).clamp(5.0, max_secs_low_rate as f64);
+            let max_items = 400_000.0;
+            if rate * secs > max_items {
+                secs = (max_items / rate).max(0.05);
+            }
+            out.push(fig2_cell(rate, buffer, secs.ceil() as u64, seed)?);
+        }
+    }
+    Ok(out)
+}
+
+/// Render the sweep as two paper-style tables (latency, throughput).
+pub fn render(cells: &[Fig2Cell]) -> String {
+    let mut rates: Vec<f64> = cells.iter().map(|c| c.items_per_sec).collect();
+    rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    rates.dedup();
+    let buffers: [Option<u32>; 6] =
+        [None, Some(4096), Some(8192), Some(16384), Some(32768), Some(65536)];
+    let label = |b: Option<u32>| match b {
+        None => "flush".to_string(),
+        Some(b) => format!("{}K", b / 1024),
+    };
+    let cell = |r: f64, b: Option<u32>| cells
+        .iter()
+        .find(|c| c.items_per_sec == r && c.buffer_bytes == b)
+        .unwrap();
+
+    let mut s = String::new();
+    s.push_str("Fig 2(a): average data item latency (ms)\n");
+    s.push_str(&format!("{:>10}", "rate/s"));
+    for b in buffers {
+        s.push_str(&format!("{:>12}", label(b)));
+    }
+    s.push('\n');
+    for &r in &rates {
+        s.push_str(&format!("{:>10.0}", r));
+        for b in buffers {
+            s.push_str(&format!("{:>12.1}", cell(r, b).mean_latency_ms));
+        }
+        s.push('\n');
+    }
+    s.push_str("\nFig 2(b): achieved throughput (MBit/s)\n");
+    s.push_str(&format!("{:>10}", "rate/s"));
+    for b in buffers {
+        s.push_str(&format!("{:>12}", label(b)));
+    }
+    s.push('\n');
+    for &r in &rates {
+        s.push_str(&format!("{:>10.0}", r));
+        for b in buffers {
+            s.push_str(&format!("{:>12.2}", cell(r, b).throughput_mbit));
+        }
+        s.push('\n');
+    }
+    s
+}

@@ -1,0 +1,34 @@
+//! Fig. 10 (§4.3.4): the Hadoop Online baseline.  Built in
+//! `crate::baseline::hadoop`; this driver runs it and reports the
+//! per-hop latency breakdown.
+
+use crate::baseline::hadoop::{hadoop_online_job, HadoopSpec};
+use crate::config::EngineConfig;
+use crate::sim::cluster::SimCluster;
+use crate::sim::metrics::{breakdown, Breakdown};
+use crate::util::time::Duration;
+use anyhow::Result;
+
+/// Outcome of the Hadoop Online run.
+#[derive(Debug, Clone)]
+pub struct HadoopReport {
+    pub breakdown: Breakdown,
+    pub e2e_mean_ms: Option<f64>,
+    pub items_delivered: u64,
+}
+
+/// Run the HOP pipeline for `sim_secs` virtual seconds.
+pub fn run_hadoop_online(spec: HadoopSpec, sim_secs: u64, seed: u64) -> Result<HadoopReport> {
+    let hj = hadoop_online_job(spec)?;
+    let cfg = EngineConfig { seed, ..EngineConfig::default() }.unoptimized();
+    let mut cluster =
+        SimCluster::new(hj.job, hj.rg, &hj.constraints, hj.task_specs, hj.sources, cfg)?;
+    cluster.run(Duration::from_secs(sim_secs), None);
+    let now = cluster.now();
+    let b = breakdown(&mut cluster, &hj.monitored_sequence, now);
+    Ok(HadoopReport {
+        breakdown: b,
+        e2e_mean_ms: cluster.mean_e2e_ms(),
+        items_delivered: cluster.stats.items_delivered,
+    })
+}

@@ -1,0 +1,12 @@
+//! Experiment drivers behind the `fig2`/`fig7`/`fig8`/`fig9`/`fig10`
+//! binaries: each regenerates one figure of the paper's evaluation
+//! (§2.2.1 Fig. 2; §4.3 Figs. 7–10).  See EXPERIMENTS.md for
+//! paper-vs-measured values.
+
+pub mod fig2;
+pub mod hadoop;
+pub mod video_scenarios;
+
+pub use fig2::{fig2_sweep, Fig2Cell};
+pub use hadoop::{run_hadoop_online, HadoopReport};
+pub use video_scenarios::{run_video_scenario, Scenario, ScenarioReport};

@@ -1,0 +1,119 @@
+//! The three Nephele scenarios of §4.3 over the video job: (1) no
+//! optimizations, (2) adaptive output buffer sizing, (3) buffer sizing +
+//! dynamic task chaining.  Each run prints the Fig. 7/8/9-style latency
+//! breakdown periodically and reports the converged values.
+
+use crate::config::EngineConfig;
+use crate::pipeline::video::{video_job, VideoSpec};
+use crate::sim::cluster::{SimCluster, SimObserver};
+use crate::sim::metrics::{breakdown, Breakdown};
+use crate::util::time::{Duration, Time};
+use anyhow::Result;
+
+/// Which §4.3 scenario to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// §4.3.1 / Fig. 7.
+    Unoptimized,
+    /// §4.3.2 / Fig. 8.
+    AdaptiveBuffers,
+    /// §4.3.3 / Fig. 9.
+    BuffersAndChaining,
+}
+
+impl Scenario {
+    pub fn apply(self, cfg: EngineConfig) -> EngineConfig {
+        match self {
+            Scenario::Unoptimized => cfg.unoptimized(),
+            Scenario::AdaptiveBuffers => cfg.buffers_only(),
+            Scenario::BuffersAndChaining => cfg.fully_optimized(),
+        }
+    }
+
+    pub fn title(self) -> &'static str {
+        match self {
+            Scenario::Unoptimized => "Fig. 7 — latency w/o optimizations",
+            Scenario::AdaptiveBuffers => "Fig. 8 — latency with adaptive buffer sizing",
+            Scenario::BuffersAndChaining => {
+                "Fig. 9 — latency with adaptive buffer sizing and dynamic task chaining"
+            }
+        }
+    }
+}
+
+/// The outcome of one scenario run.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub scenario: Scenario,
+    /// Breakdown time series (one per observation interval).
+    pub series: Vec<Breakdown>,
+    /// Converged breakdown (last observation).
+    pub final_breakdown: Breakdown,
+    /// Ground-truth mean end-to-end latency at the sinks (ms).
+    pub e2e_mean_ms: Option<f64>,
+    pub buffer_updates: u64,
+    pub chains_established: u64,
+    pub unresolvable: u64,
+    pub items_delivered: u64,
+    pub events: u64,
+}
+
+impl ScenarioReport {
+    pub fn converged_total_ms(&self) -> f64 {
+        self.final_breakdown.total_ms()
+    }
+}
+
+struct SeriesObserver<'a> {
+    seq: &'a crate::graph::sequence::JobSequence,
+    series: Vec<Breakdown>,
+    verbose: bool,
+}
+
+impl SimObserver for SeriesObserver<'_> {
+    fn sample(&mut self, cluster: &mut SimCluster, now: Time) {
+        let b = breakdown(cluster, self.seq, now);
+        if self.verbose {
+            print!("{}", b.render());
+        }
+        self.series.push(b);
+    }
+}
+
+/// Run one scenario for `sim_secs` of virtual time.
+pub fn run_video_scenario(
+    scenario: Scenario,
+    spec: VideoSpec,
+    cfg: EngineConfig,
+    sim_secs: u64,
+    observe_every_secs: u64,
+    verbose: bool,
+) -> Result<ScenarioReport> {
+    let cfg = scenario.apply(cfg);
+    let vj = video_job(spec)?;
+    let seq = vj.constrained_sequence.clone();
+    let mut cluster =
+        SimCluster::new(vj.job, vj.rg, &vj.constraints, vj.task_specs, vj.sources, cfg)?;
+    let mut obs = SeriesObserver { seq: &seq, series: Vec::new(), verbose };
+    cluster.run(
+        Duration::from_secs(sim_secs),
+        Some((&mut obs, Duration::from_secs(observe_every_secs))),
+    );
+    let now = cluster.now();
+    let final_breakdown = breakdown(&mut cluster, &seq, now);
+    if verbose {
+        println!("— final —");
+        print!("{}", final_breakdown.render());
+    }
+    Ok(ScenarioReport {
+        scenario,
+        series: obs.series,
+        final_breakdown,
+        e2e_mean_ms: cluster.mean_e2e_ms(),
+        buffer_updates: cluster.stats.buffer_size_updates,
+        chains_established: cluster.stats.chains_established,
+        unresolvable: cluster.stats.unresolvable_notices,
+        items_delivered: cluster.stats.items_delivered,
+        events: cluster.stats.events_processed,
+    })
+}

@@ -1,0 +1,182 @@
+//! Latency constraints (§3.2.4).
+//!
+//! A *job constraint* `jc = (JS, l, t)` bounds the mean sequence latency
+//! of data items passing through every runtime sequence of `JS` during
+//! any span of `t` time units.  The induced set of *runtime constraints*
+//! `C = {(S_i, l, t)}` can be astronomically large (one per runtime
+//! sequence), so [`RuntimeConstraintSet`] keeps the job constraint +
+//! runtime graph and answers count/coverage queries symbolically;
+//! materialisation is available for tests and small jobs.
+
+use super::ids::{ChannelId, JobEdgeId, JobVertexId, VertexId};
+use super::job::JobGraph;
+use super::runtime::RuntimeGraph;
+use super::sequence::{JobSequence, RuntimeSequence};
+use crate::util::time::Duration;
+use anyhow::Result;
+
+/// User-provided constraint on a job sequence (§3.2.4).
+#[derive(Debug, Clone)]
+pub struct JobConstraint {
+    pub sequence: JobSequence,
+    /// Desired upper latency limit `l`.
+    pub max_latency: Duration,
+    /// Averaging time span `t`.
+    pub window: Duration,
+}
+
+impl JobConstraint {
+    pub fn new(sequence: JobSequence, max_latency: Duration, window: Duration) -> JobConstraint {
+        JobConstraint { sequence, max_latency, window }
+    }
+
+    pub fn validate(&self, job: &JobGraph) -> Result<()> {
+        self.sequence.validate(job)
+    }
+}
+
+/// One materialised runtime constraint `(S, l, t)`.
+#[derive(Debug, Clone)]
+pub struct RuntimeConstraint {
+    pub sequence: RuntimeSequence,
+    pub max_latency: Duration,
+    pub window: Duration,
+}
+
+/// The symbolic set of runtime constraints induced by one job constraint.
+#[derive(Debug, Clone)]
+pub struct RuntimeConstraintSet {
+    pub job_constraint: JobConstraint,
+    count: u128,
+}
+
+impl RuntimeConstraintSet {
+    pub fn derive(jc: &JobConstraint, job: &JobGraph, rg: &RuntimeGraph) -> RuntimeConstraintSet {
+        let count = jc.sequence.count_runtime(job, rg);
+        RuntimeConstraintSet { job_constraint: jc.clone(), count }
+    }
+
+    /// Number of runtime constraints in the set (`m^3` for the paper's
+    /// evaluation constraint, §3.4).
+    pub fn count(&self) -> u128 {
+        self.count
+    }
+
+    pub fn max_latency(&self) -> Duration {
+        self.job_constraint.max_latency
+    }
+
+    pub fn window(&self) -> Duration {
+        self.job_constraint.window
+    }
+
+    /// Job vertices whose runtime members need task-latency measurements.
+    pub fn covered_vertices(&self) -> Vec<JobVertexId> {
+        self.job_constraint.sequence.vertices()
+    }
+
+    /// Job edges whose runtime channels need channel-latency (and output
+    /// buffer lifetime) measurements.
+    pub fn covered_edges(&self) -> Vec<JobEdgeId> {
+        self.job_constraint.sequence.edges()
+    }
+
+    /// Materialise up to `limit` runtime constraints (tests, small jobs).
+    pub fn materialize(&self, rg: &RuntimeGraph, limit: usize) -> Vec<RuntimeConstraint> {
+        self.job_constraint
+            .sequence
+            .enumerate_runtime(rg, limit)
+            .into_iter()
+            .map(|sequence| RuntimeConstraint {
+                sequence,
+                max_latency: self.job_constraint.max_latency,
+                window: self.job_constraint.window,
+            })
+            .collect()
+    }
+}
+
+/// Convenience: which runtime elements (vertices/channels) of `rg` are
+/// covered by any of the given constraints.  Used for QoS Reporter setup
+/// ("tasks and channels which are local to the worker node and part of a
+/// constrained runtime sequence", §3.4.1).
+#[derive(Debug, Default, Clone)]
+pub struct CoverageSet {
+    pub vertices: std::collections::HashSet<VertexId>,
+    pub channels: std::collections::HashSet<ChannelId>,
+}
+
+impl CoverageSet {
+    pub fn of(constraints: &[RuntimeConstraintSet], rg: &RuntimeGraph) -> CoverageSet {
+        let mut cov = CoverageSet::default();
+        for cs in constraints {
+            for jv in cs.covered_vertices() {
+                cov.vertices.extend(rg.members(jv).iter().copied());
+            }
+            for je in cs.covered_edges() {
+                // Only channels that can actually appear in a constrained
+                // runtime sequence: for the edge patterns we support every
+                // channel of a covered job edge can (all-to-all: any pair;
+                // pointwise: the single partner), so take them all.
+                cov.channels.extend(rg.edge_channels(je).map(|c| c.id));
+            }
+        }
+        cov
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::job::DistributionPattern;
+    use crate::graph::sequence::JobSequence;
+
+    fn setup() -> (JobGraph, RuntimeGraph, JobConstraint) {
+        let mut g = JobGraph::new();
+        let a = g.add_vertex("A", 2);
+        let b = g.add_vertex("B", 2);
+        let c = g.add_vertex("C", 2);
+        g.connect(a, b, DistributionPattern::AllToAll);
+        g.connect(b, c, DistributionPattern::AllToAll);
+        g.validate().unwrap();
+        let rg = RuntimeGraph::expand(&g, 2).unwrap();
+        let s = JobSequence::along_path(&g, &[b], Some(a), Some(c)).unwrap();
+        let jc = JobConstraint::new(s, Duration::from_millis(300), Duration::from_secs(15));
+        (g, rg, jc)
+    }
+
+    #[test]
+    fn derive_counts_sequences() {
+        let (g, rg, jc) = setup();
+        let cs = RuntimeConstraintSet::derive(&jc, &g, &rg);
+        // 2 (leading channels into chosen B) ... per B: 2 incoming * 2
+        // outgoing = 4, times 2 Bs = 8.
+        assert_eq!(cs.count(), 8);
+        assert_eq!(cs.max_latency(), Duration::from_millis(300));
+    }
+
+    #[test]
+    fn materialize_matches_count() {
+        let (g, rg, jc) = setup();
+        let cs = RuntimeConstraintSet::derive(&jc, &g, &rg);
+        let all = cs.materialize(&rg, usize::MAX);
+        assert_eq!(all.len() as u128, cs.count());
+        for c in &all {
+            c.sequence.validate(&rg).unwrap();
+            assert_eq!(c.max_latency, Duration::from_millis(300));
+        }
+    }
+
+    #[test]
+    fn coverage_includes_all_members_and_channels() {
+        let (g, rg, jc) = setup();
+        let cs = RuntimeConstraintSet::derive(&jc, &g, &rg);
+        let cov = CoverageSet::of(&[cs], &rg);
+        // B's two members are covered; A and C members are not (they're
+        // endpoints of leading/trailing edges, not sequence vertices).
+        assert_eq!(cov.vertices.len(), 2);
+        // Both job edges expand to 4 channels each.
+        assert_eq!(cov.channels.len(), 8);
+        let _ = g;
+    }
+}

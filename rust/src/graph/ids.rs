@@ -1,0 +1,67 @@
+//! Newtype identifiers for the two graph levels and the cluster.
+
+use std::fmt;
+
+macro_rules! id_type {
+    ($(#[$doc:meta])* $name:ident, $prefix:expr) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+        pub struct $name(pub u32);
+
+        impl $name {
+            pub fn index(self) -> usize {
+                self.0 as usize
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "{}{}", $prefix, self.0)
+            }
+        }
+
+        impl From<usize> for $name {
+            fn from(i: usize) -> $name {
+                $name(i as u32)
+            }
+        }
+    };
+}
+
+id_type!(
+    /// A vertex of the job graph (one logical task type, e.g. "Decoder").
+    JobVertexId,
+    "jv"
+);
+id_type!(
+    /// An edge of the job graph (one logical connection, e.g. Decoder→Merger).
+    JobEdgeId,
+    "je"
+);
+id_type!(
+    /// A vertex of the runtime graph (one parallel task instance).
+    VertexId,
+    "v"
+);
+id_type!(
+    /// A runtime edge, i.e. a channel between two task instances.
+    ChannelId,
+    "e"
+);
+id_type!(
+    /// A worker node of the cluster.
+    WorkerId,
+    "w"
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_index() {
+        assert_eq!(VertexId(3).to_string(), "v3");
+        assert_eq!(WorkerId(7).index(), 7);
+        assert_eq!(ChannelId::from(9usize), ChannelId(9));
+    }
+}

@@ -1,0 +1,293 @@
+//! The user-facing job graph (§3.1.1): a DAG of job vertices (task types
+//! with a degree of parallelism) connected by job edges carrying a
+//! distribution pattern that determines how the edge expands into
+//! runtime channels.
+
+use super::ids::{JobEdgeId, JobVertexId};
+use anyhow::{bail, Result};
+
+/// How a job edge expands into runtime channels (§2.1 / §4.2 topology).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DistributionPattern {
+    /// Subtask i of the producer connects to subtask i of the consumer
+    /// (requires equal parallelism).
+    Pointwise,
+    /// Every producer subtask connects to every consumer subtask
+    /// (shuffle / broadcast-capable).
+    AllToAll,
+}
+
+/// One logical task type.
+#[derive(Debug, Clone)]
+pub struct JobVertex {
+    pub id: JobVertexId,
+    pub name: String,
+    /// Degree of parallelism m: how many runtime vertices this expands to.
+    pub parallelism: u32,
+    /// Estimated CPU utilisation of one subtask as a fraction of a core
+    /// (profiling input for the chaining precondition, §3.5.2; can be
+    /// refined by live measurements).
+    pub cpu_utilization: f64,
+    /// User annotation (§3.6): never chain this vertex, to preserve
+    /// materialisation points for fault tolerance.
+    pub pin_unchainable: bool,
+    /// Whether the task is a source (no inputs expected).
+    pub is_source: bool,
+    /// Whether the task is a sink (no outputs expected).
+    pub is_sink: bool,
+}
+
+/// One logical connection between two task types.
+#[derive(Debug, Clone)]
+pub struct JobEdge {
+    pub id: JobEdgeId,
+    pub from: JobVertexId,
+    pub to: JobVertexId,
+    pub pattern: DistributionPattern,
+}
+
+/// The compact user-provided DAG (§3.1.1).
+#[derive(Debug, Clone, Default)]
+pub struct JobGraph {
+    pub vertices: Vec<JobVertex>,
+    pub edges: Vec<JobEdge>,
+}
+
+impl JobGraph {
+    pub fn new() -> JobGraph {
+        JobGraph::default()
+    }
+
+    /// Add a vertex; returns its id.
+    pub fn add_vertex(&mut self, name: &str, parallelism: u32) -> JobVertexId {
+        let id = JobVertexId(self.vertices.len() as u32);
+        self.vertices.push(JobVertex {
+            id,
+            name: name.to_string(),
+            parallelism,
+            cpu_utilization: 0.1,
+            pin_unchainable: false,
+            is_source: false,
+            is_sink: false,
+        });
+        id
+    }
+
+    pub fn vertex(&self, id: JobVertexId) -> &JobVertex {
+        &self.vertices[id.index()]
+    }
+
+    pub fn vertex_mut(&mut self, id: JobVertexId) -> &mut JobVertex {
+        &mut self.vertices[id.index()]
+    }
+
+    pub fn vertex_by_name(&self, name: &str) -> Option<&JobVertex> {
+        self.vertices.iter().find(|v| v.name == name)
+    }
+
+    /// Connect two vertices; returns the edge id.
+    pub fn connect(
+        &mut self,
+        from: JobVertexId,
+        to: JobVertexId,
+        pattern: DistributionPattern,
+    ) -> JobEdgeId {
+        let id = JobEdgeId(self.edges.len() as u32);
+        self.edges.push(JobEdge { id, from, to, pattern });
+        id
+    }
+
+    pub fn edge(&self, id: JobEdgeId) -> &JobEdge {
+        &self.edges[id.index()]
+    }
+
+    /// Edge between two vertices, if any.
+    pub fn edge_between(&self, from: JobVertexId, to: JobVertexId) -> Option<&JobEdge> {
+        self.edges.iter().find(|e| e.from == from && e.to == to)
+    }
+
+    pub fn out_edges(&self, v: JobVertexId) -> impl Iterator<Item = &JobEdge> {
+        self.edges.iter().filter(move |e| e.from == v)
+    }
+
+    pub fn in_edges(&self, v: JobVertexId) -> impl Iterator<Item = &JobEdge> {
+        self.edges.iter().filter(move |e| e.to == v)
+    }
+
+    /// Number of runtime channels a job edge expands into.
+    pub fn edge_channel_count(&self, e: &JobEdge) -> u64 {
+        let m_from = self.vertex(e.from).parallelism as u64;
+        let m_to = self.vertex(e.to).parallelism as u64;
+        match e.pattern {
+            DistributionPattern::Pointwise => m_from.max(m_to),
+            DistributionPattern::AllToAll => m_from * m_to,
+        }
+    }
+
+    /// Validate DAG-ness, pointwise parallelism match, nonzero parallelism,
+    /// and mark sources/sinks.
+    pub fn validate(&mut self) -> Result<()> {
+        if self.vertices.is_empty() {
+            bail!("job graph has no vertices");
+        }
+        for v in &self.vertices {
+            if v.parallelism == 0 {
+                bail!("vertex {} has zero parallelism", v.name);
+            }
+        }
+        for e in &self.edges {
+            if e.from == e.to {
+                bail!("self-loop on {}", self.vertex(e.from).name);
+            }
+            if e.pattern == DistributionPattern::Pointwise
+                && self.vertex(e.from).parallelism != self.vertex(e.to).parallelism
+            {
+                bail!(
+                    "pointwise edge {} -> {} with mismatched parallelism",
+                    self.vertex(e.from).name,
+                    self.vertex(e.to).name
+                );
+            }
+        }
+        self.check_acyclic()?;
+        // Mark sources / sinks.
+        let n = self.vertices.len();
+        let mut has_in = vec![false; n];
+        let mut has_out = vec![false; n];
+        for e in &self.edges {
+            has_out[e.from.index()] = true;
+            has_in[e.to.index()] = true;
+        }
+        for (i, v) in self.vertices.iter_mut().enumerate() {
+            v.is_source = !has_in[i];
+            v.is_sink = !has_out[i];
+        }
+        Ok(())
+    }
+
+    fn check_acyclic(&self) -> Result<()> {
+        // Kahn's algorithm.
+        let n = self.vertices.len();
+        let mut indeg = vec![0usize; n];
+        for e in &self.edges {
+            indeg[e.to.index()] += 1;
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(i) = queue.pop() {
+            seen += 1;
+            for e in self.out_edges(JobVertexId(i as u32)) {
+                let j = e.to.index();
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    queue.push(j);
+                }
+            }
+        }
+        if seen != n {
+            bail!("job graph contains a cycle");
+        }
+        Ok(())
+    }
+
+    /// Topological order of job vertices.
+    pub fn topo_order(&self) -> Vec<JobVertexId> {
+        let n = self.vertices.len();
+        let mut indeg = vec![0usize; n];
+        for e in &self.edges {
+            indeg[e.to.index()] += 1;
+        }
+        let mut queue: std::collections::VecDeque<usize> =
+            (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(i) = queue.pop_front() {
+            order.push(JobVertexId(i as u32));
+            for e in self.out_edges(JobVertexId(i as u32)) {
+                let j = e.to.index();
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    queue.push_back(j);
+                }
+            }
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> JobGraph {
+        let mut g = JobGraph::new();
+        let a = g.add_vertex("a", 2);
+        let b = g.add_vertex("b", 2);
+        let c = g.add_vertex("c", 2);
+        let d = g.add_vertex("d", 2);
+        g.connect(a, b, DistributionPattern::Pointwise);
+        g.connect(a, c, DistributionPattern::AllToAll);
+        g.connect(b, d, DistributionPattern::Pointwise);
+        g.connect(c, d, DistributionPattern::Pointwise);
+        g
+    }
+
+    #[test]
+    fn validate_marks_sources_and_sinks() {
+        let mut g = diamond();
+        g.validate().unwrap();
+        assert!(g.vertex_by_name("a").unwrap().is_source);
+        assert!(g.vertex_by_name("d").unwrap().is_sink);
+        assert!(!g.vertex_by_name("b").unwrap().is_source);
+        assert!(!g.vertex_by_name("b").unwrap().is_sink);
+    }
+
+    #[test]
+    fn validate_rejects_cycle() {
+        let mut g = JobGraph::new();
+        let a = g.add_vertex("a", 1);
+        let b = g.add_vertex("b", 1);
+        g.connect(a, b, DistributionPattern::Pointwise);
+        g.connect(b, a, DistributionPattern::Pointwise);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_pointwise_mismatch() {
+        let mut g = JobGraph::new();
+        let a = g.add_vertex("a", 2);
+        let b = g.add_vertex("b", 3);
+        g.connect(a, b, DistributionPattern::Pointwise);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_parallelism_and_self_loop() {
+        let mut g = JobGraph::new();
+        let a = g.add_vertex("a", 0);
+        assert!(g.validate().is_err());
+        let mut g = JobGraph::new();
+        let a2 = g.add_vertex("a", 1);
+        g.connect(a2, a2, DistributionPattern::Pointwise);
+        assert!(g.validate().is_err());
+        let _ = a;
+    }
+
+    #[test]
+    fn channel_counts() {
+        let g = diamond();
+        let pw = g.edge_between(JobVertexId(0), JobVertexId(1)).unwrap();
+        let ata = g.edge_between(JobVertexId(0), JobVertexId(2)).unwrap();
+        assert_eq!(g.edge_channel_count(pw), 2);
+        assert_eq!(g.edge_channel_count(ata), 4);
+    }
+
+    #[test]
+    fn topo_order_is_topological() {
+        let g = diamond();
+        let order = g.topo_order();
+        let pos = |v: JobVertexId| order.iter().position(|&x| x == v).unwrap();
+        for e in &g.edges {
+            assert!(pos(e.from) < pos(e.to));
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! The paper's dataflow model (§3.1–3.2): job graph, runtime graph,
+//! sequences and latency constraints.
+//!
+//! A *job graph* `JG = (JV, JE)` is the compact user-provided DAG; the
+//! *runtime graph* `G = (V, E)` is its parallelised expansion, with every
+//! runtime vertex (task) placed on a worker node.  Latency constraints
+//! are attached to *job sequences* and induce one runtime constraint per
+//! runtime sequence — a set that can be combinatorially large (the
+//! paper's evaluation job has `512e6` of them at m=800), so runtime
+//! constraints are represented symbolically (see [`constraint`]).
+
+pub mod constraint;
+pub mod ids;
+pub mod job;
+pub mod runtime;
+pub mod sequence;
+
+pub use constraint::{JobConstraint, RuntimeConstraintSet};
+pub use ids::{ChannelId, JobEdgeId, JobVertexId, VertexId, WorkerId};
+pub use job::{DistributionPattern, JobEdge, JobGraph, JobVertex};
+pub use runtime::{Channel, RuntimeGraph, RuntimeVertex};
+pub use sequence::{JobSequence, JobSeqElem, RuntimeSequence, SeqElem};

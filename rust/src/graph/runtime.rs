@@ -1,0 +1,240 @@
+//! The runtime graph (§3.1.2): the parallelised expansion of a job graph,
+//! with every task placed on a worker node.
+//!
+//! For the paper's evaluation job at m=800 the graph has 4 800 vertices
+//! and ~1.28M channels (two all-to-all edges of m² each), so adjacency is
+//! stored index-based and construction is O(V + E).
+
+use super::ids::{ChannelId, JobEdgeId, JobVertexId, VertexId, WorkerId};
+use super::job::{DistributionPattern, JobGraph};
+use anyhow::{bail, Result};
+
+/// One parallel task instance.
+#[derive(Debug, Clone)]
+pub struct RuntimeVertex {
+    pub id: VertexId,
+    pub job_vertex: JobVertexId,
+    /// Index of this subtask within its job vertex (0..parallelism).
+    pub subtask: u32,
+    pub worker: WorkerId,
+}
+
+/// One runtime edge: a channel along which `from` sends data items to
+/// `to` (§3.1.2).
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub id: ChannelId,
+    pub job_edge: JobEdgeId,
+    pub from: VertexId,
+    pub to: VertexId,
+}
+
+/// Placement strategy: maps (job vertex, subtask) to a worker.
+pub type Placement<'a> = dyn Fn(JobVertexId, u32) -> WorkerId + 'a;
+
+/// The parallelised job (§3.1.2) plus the `worker(v)` mapping.
+#[derive(Debug, Clone)]
+pub struct RuntimeGraph {
+    pub vertices: Vec<RuntimeVertex>,
+    pub channels: Vec<Channel>,
+    /// Runtime members of each job vertex, indexed by `JobVertexId`.
+    members: Vec<Vec<VertexId>>,
+    /// Channel adjacency, indexed by `VertexId`.
+    outs: Vec<Vec<ChannelId>>,
+    ins: Vec<Vec<ChannelId>>,
+    pub num_workers: u32,
+}
+
+impl RuntimeGraph {
+    /// Expand `job` onto `num_workers` workers, spreading each job
+    /// vertex's subtasks evenly (subtask i of every type lands on worker
+    /// `i % num_workers`, matching the paper's §4.2 deployment).
+    pub fn expand(job: &JobGraph, num_workers: u32) -> Result<RuntimeGraph> {
+        Self::expand_with(job, num_workers, &|_, subtask| {
+            WorkerId(subtask % num_workers)
+        })
+    }
+
+    /// Expand with a custom placement.
+    pub fn expand_with(
+        job: &JobGraph,
+        num_workers: u32,
+        place: &Placement<'_>,
+    ) -> Result<RuntimeGraph> {
+        if num_workers == 0 {
+            bail!("need at least one worker");
+        }
+        let mut vertices = Vec::new();
+        let mut members: Vec<Vec<VertexId>> = vec![Vec::new(); job.vertices.len()];
+        for jv in &job.vertices {
+            for s in 0..jv.parallelism {
+                let id = VertexId(vertices.len() as u32);
+                let worker = place(jv.id, s);
+                if worker.0 >= num_workers {
+                    bail!("placement put {} subtask {s} on invalid {worker}", jv.name);
+                }
+                vertices.push(RuntimeVertex { id, job_vertex: jv.id, subtask: s, worker });
+                members[jv.id.index()].push(id);
+            }
+        }
+
+        let mut channels = Vec::new();
+        let mut outs = vec![Vec::new(); vertices.len()];
+        let mut ins = vec![Vec::new(); vertices.len()];
+        let push = |channels: &mut Vec<Channel>,
+                        outs: &mut Vec<Vec<ChannelId>>,
+                        ins: &mut Vec<Vec<ChannelId>>,
+                        job_edge: JobEdgeId,
+                        from: VertexId,
+                        to: VertexId| {
+            let id = ChannelId(channels.len() as u32);
+            channels.push(Channel { id, job_edge, from, to });
+            outs[from.index()].push(id);
+            ins[to.index()].push(id);
+        };
+        for je in &job.edges {
+            let from_members = &members[je.from.index()];
+            let to_members = &members[je.to.index()];
+            match je.pattern {
+                DistributionPattern::Pointwise => {
+                    // validate() guarantees equal parallelism.
+                    for (f, t) in from_members.iter().zip(to_members) {
+                        push(&mut channels, &mut outs, &mut ins, je.id, *f, *t);
+                    }
+                }
+                DistributionPattern::AllToAll => {
+                    for f in from_members {
+                        for t in to_members {
+                            push(&mut channels, &mut outs, &mut ins, je.id, *f, *t);
+                        }
+                    }
+                }
+            }
+        }
+
+        Ok(RuntimeGraph { vertices, channels, members, outs, ins, num_workers })
+    }
+
+    pub fn vertex(&self, id: VertexId) -> &RuntimeVertex {
+        &self.vertices[id.index()]
+    }
+
+    pub fn channel(&self, id: ChannelId) -> &Channel {
+        &self.channels[id.index()]
+    }
+
+    /// `worker(v)` from §3.1.2.
+    pub fn worker(&self, v: VertexId) -> WorkerId {
+        self.vertices[v.index()].worker
+    }
+
+    /// Runtime vertices of a job vertex (the paper's `jv ⊆ V` view).
+    pub fn members(&self, jv: JobVertexId) -> &[VertexId] {
+        &self.members[jv.index()]
+    }
+
+    pub fn out_channels(&self, v: VertexId) -> &[ChannelId] {
+        &self.outs[v.index()]
+    }
+
+    pub fn in_channels(&self, v: VertexId) -> &[ChannelId] {
+        &self.ins[v.index()]
+    }
+
+    /// The runtime channels of a job edge (the paper's `je ⊆ E` view).
+    pub fn edge_channels(&self, je: JobEdgeId) -> impl Iterator<Item = &Channel> {
+        self.channels.iter().filter(move |c| c.job_edge == je)
+    }
+
+    /// Channel connecting two runtime vertices, if any.
+    pub fn channel_between(&self, from: VertexId, to: VertexId) -> Option<ChannelId> {
+        self.outs[from.index()]
+            .iter()
+            .copied()
+            .find(|&c| self.channels[c.index()].to == to)
+    }
+
+    /// All runtime vertices on a given worker.
+    pub fn vertices_on_worker(&self, w: WorkerId) -> impl Iterator<Item = &RuntimeVertex> {
+        self.vertices.iter().filter(move |v| v.worker == w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::job::JobGraph;
+
+    fn two_stage(m: u32, pattern: DistributionPattern) -> (JobGraph, RuntimeGraph) {
+        let mut g = JobGraph::new();
+        let a = g.add_vertex("a", m);
+        let b = g.add_vertex("b", m);
+        g.connect(a, b, pattern);
+        g.validate().unwrap();
+        let rg = RuntimeGraph::expand(&g, 2).unwrap();
+        (g, rg)
+    }
+
+    #[test]
+    fn pointwise_expansion() {
+        let (_, rg) = two_stage(4, DistributionPattern::Pointwise);
+        assert_eq!(rg.vertices.len(), 8);
+        assert_eq!(rg.channels.len(), 4);
+        for c in &rg.channels {
+            assert_eq!(rg.vertex(c.from).subtask, rg.vertex(c.to).subtask);
+        }
+    }
+
+    #[test]
+    fn all_to_all_expansion() {
+        let (_, rg) = two_stage(3, DistributionPattern::AllToAll);
+        assert_eq!(rg.channels.len(), 9);
+        let v0 = rg.members(JobVertexId(0))[0];
+        assert_eq!(rg.out_channels(v0).len(), 3);
+        let b0 = rg.members(JobVertexId(1))[0];
+        assert_eq!(rg.in_channels(b0).len(), 3);
+    }
+
+    #[test]
+    fn even_spread_placement() {
+        let (_, rg) = two_stage(4, DistributionPattern::Pointwise);
+        // subtask i -> worker i % 2
+        for v in &rg.vertices {
+            assert_eq!(v.worker.0, v.subtask % 2);
+        }
+        assert_eq!(rg.vertices_on_worker(WorkerId(0)).count(), 4);
+    }
+
+    #[test]
+    fn channel_between_lookup() {
+        let (_, rg) = two_stage(2, DistributionPattern::AllToAll);
+        let a0 = rg.members(JobVertexId(0))[0];
+        let b1 = rg.members(JobVertexId(1))[1];
+        let c = rg.channel_between(a0, b1).unwrap();
+        assert_eq!(rg.channel(c).from, a0);
+        assert_eq!(rg.channel(c).to, b1);
+        assert_eq!(rg.channel_between(b1, a0), None);
+    }
+
+    #[test]
+    fn paper_scale_expansion_is_fast_and_sized_right() {
+        // P -(all-to-all)-> D -> M -> O -> E -(all-to-all)-> R at m=800:
+        // channels = 2*800^2 + 3*800 (the paper's §3.4 scenario).
+        let mut g = JobGraph::new();
+        let p = g.add_vertex("P", 800);
+        let d = g.add_vertex("D", 800);
+        let m = g.add_vertex("M", 800);
+        let o = g.add_vertex("O", 800);
+        let e = g.add_vertex("E", 800);
+        let r = g.add_vertex("R", 800);
+        g.connect(p, d, DistributionPattern::AllToAll);
+        g.connect(d, m, DistributionPattern::Pointwise);
+        g.connect(m, o, DistributionPattern::Pointwise);
+        g.connect(o, e, DistributionPattern::Pointwise);
+        g.connect(e, r, DistributionPattern::AllToAll);
+        g.validate().unwrap();
+        let rg = RuntimeGraph::expand(&g, 200).unwrap();
+        assert_eq!(rg.vertices.len(), 4800);
+        assert_eq!(rg.channels.len(), 2 * 800 * 800 + 3 * 800);
+    }
+}

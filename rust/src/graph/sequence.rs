@@ -1,0 +1,414 @@
+//! Sequences (§3.2.3): n-tuples of connected tasks and channels, at both
+//! the job level and the runtime level.
+//!
+//! A job sequence is equivalent to a *set* of runtime sequences; for the
+//! paper's evaluation job that set has `m^3 = 512e6` members at m=800, so
+//! enumeration is opt-in ([`JobSequence::enumerate_runtime`]) and the
+//! common operations (counting, element coverage) work symbolically.
+
+use super::ids::{ChannelId, JobEdgeId, JobVertexId, VertexId};
+use super::job::JobGraph;
+use super::runtime::RuntimeGraph;
+use anyhow::{bail, Result};
+
+/// One element of a job-level sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobSeqElem {
+    Vertex(JobVertexId),
+    Edge(JobEdgeId),
+}
+
+/// One element of a runtime-level sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SeqElem {
+    Vertex(VertexId),
+    Edge(ChannelId),
+}
+
+/// A job-level sequence JS (§3.2.4): alternating vertices and edges; the
+/// first and last element may each be either a vertex or an edge.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct JobSequence {
+    pub elems: Vec<JobSeqElem>,
+}
+
+/// A runtime-level sequence S (§3.2.3).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct RuntimeSequence {
+    pub elems: Vec<SeqElem>,
+}
+
+impl JobSequence {
+    pub fn new(elems: Vec<JobSeqElem>) -> JobSequence {
+        JobSequence { elems }
+    }
+
+    /// Build the maximal sequence along a path of job vertices, starting
+    /// with the edge *into* the first vertex (if `lead_in`) and ending
+    /// with the edge *out of* the last (if `lead_out`) — the shape used by
+    /// the paper's evaluation constraint (Eq. 4): `(e1, vD, ..., vE, e5)`.
+    pub fn along_path(
+        job: &JobGraph,
+        path: &[JobVertexId],
+        lead_in: Option<JobVertexId>,
+        lead_out: Option<JobVertexId>,
+    ) -> Result<JobSequence> {
+        let mut elems = Vec::new();
+        if let Some(src) = lead_in {
+            let e = job
+                .edge_between(src, path[0])
+                .ok_or_else(|| anyhow::anyhow!("no edge {src:?} -> {:?}", path[0]))?;
+            elems.push(JobSeqElem::Edge(e.id));
+        }
+        for (i, &v) in path.iter().enumerate() {
+            elems.push(JobSeqElem::Vertex(v));
+            if i + 1 < path.len() {
+                let e = job
+                    .edge_between(v, path[i + 1])
+                    .ok_or_else(|| anyhow::anyhow!("no edge {v:?} -> {:?}", path[i + 1]))?;
+                elems.push(JobSeqElem::Edge(e.id));
+            }
+        }
+        if let Some(dst) = lead_out {
+            let last = *path.last().unwrap();
+            let e = job
+                .edge_between(last, dst)
+                .ok_or_else(|| anyhow::anyhow!("no edge {last:?} -> {dst:?}"))?;
+            elems.push(JobSeqElem::Edge(e.id));
+        }
+        let s = JobSequence { elems };
+        s.validate(job)?;
+        Ok(s)
+    }
+
+    /// Check alternation and connectivity against the job graph.
+    pub fn validate(&self, job: &JobGraph) -> Result<()> {
+        if self.elems.is_empty() {
+            bail!("empty sequence");
+        }
+        for pair in self.elems.windows(2) {
+            match (pair[0], pair[1]) {
+                (JobSeqElem::Vertex(v), JobSeqElem::Edge(e)) => {
+                    if job.edge(e).from != v {
+                        bail!("edge {e} does not leave vertex {v}");
+                    }
+                }
+                (JobSeqElem::Edge(e), JobSeqElem::Vertex(v)) => {
+                    if job.edge(e).to != v {
+                        bail!("edge {e} does not enter vertex {v}");
+                    }
+                }
+                _ => bail!("sequence must alternate vertices and edges"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Job vertices covered by this sequence, in order.
+    pub fn vertices(&self) -> Vec<JobVertexId> {
+        self.elems
+            .iter()
+            .filter_map(|e| match e {
+                JobSeqElem::Vertex(v) => Some(*v),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Job edges covered by this sequence, in order.
+    pub fn edges(&self) -> Vec<JobEdgeId> {
+        self.elems
+            .iter()
+            .filter_map(|e| match e {
+                JobSeqElem::Edge(je) => Some(*je),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The path of job vertices this sequence runs through, including the
+    /// endpoints of leading/trailing edges (for anchor selection, Alg. 3).
+    pub fn vertex_path(&self, job: &JobGraph) -> Vec<JobVertexId> {
+        let mut path = Vec::new();
+        for (i, el) in self.elems.iter().enumerate() {
+            match el {
+                JobSeqElem::Vertex(v) => {
+                    if path.last() != Some(v) {
+                        path.push(*v);
+                    }
+                }
+                JobSeqElem::Edge(e) => {
+                    let je = job.edge(*e);
+                    if i == 0 {
+                        path.push(je.from);
+                    }
+                    if path.last() != Some(&je.to) {
+                        path.push(je.to);
+                    }
+                }
+            }
+        }
+        path
+    }
+
+    /// Number of runtime sequences this job sequence expands to (the
+    /// paper's `m^3` count for Eq. 4).  Dynamic programming over the
+    /// runtime graph, O(channels along the sequence).
+    pub fn count_runtime(&self, _job: &JobGraph, rg: &RuntimeGraph) -> u128 {
+        let mut counts: std::collections::HashMap<VertexId, u128> = Default::default();
+        let mut first_vertex_seen = false;
+        let mut total_if_edge_last: u128 = 0;
+
+        for (i, el) in self.elems.iter().enumerate() {
+            match el {
+                JobSeqElem::Vertex(jv) => {
+                    if !first_vertex_seen {
+                        first_vertex_seen = true;
+                        if i == 0 {
+                            for &v in rg.members(*jv) {
+                                counts.insert(v, 1);
+                            }
+                        }
+                        // If i > 0 the leading edge already filled `counts`.
+                    }
+                }
+                JobSeqElem::Edge(je) => {
+                    let mut next: std::collections::HashMap<VertexId, u128> = Default::default();
+                    let mut edge_total: u128 = 0;
+                    for c in rg.edge_channels(*je) {
+                        let w = if i == 0 {
+                            1
+                        } else {
+                            *counts.get(&c.from).unwrap_or(&0)
+                        };
+                        if w > 0 {
+                            *next.entry(c.to).or_insert(0) += w;
+                            edge_total += w;
+                        }
+                    }
+                    counts = next;
+                    total_if_edge_last = edge_total;
+                }
+            }
+        }
+
+        match self.elems.last().unwrap() {
+            JobSeqElem::Edge(_) => total_if_edge_last,
+            JobSeqElem::Vertex(_) => counts.values().sum(),
+        }
+    }
+
+    /// Enumerate the runtime sequences (tests / small graphs only).
+    pub fn enumerate_runtime(&self, rg: &RuntimeGraph, limit: usize) -> Vec<RuntimeSequence> {
+        let mut out = Vec::new();
+        let mut cur: Vec<SeqElem> = Vec::new();
+        self.enum_rec(rg, 0, None, &mut cur, &mut out, limit);
+        out
+    }
+
+    fn enum_rec(
+        &self,
+        rg: &RuntimeGraph,
+        pos: usize,
+        at: Option<VertexId>,
+        cur: &mut Vec<SeqElem>,
+        out: &mut Vec<RuntimeSequence>,
+        limit: usize,
+    ) {
+        if out.len() >= limit {
+            return;
+        }
+        if pos == self.elems.len() {
+            out.push(RuntimeSequence { elems: cur.clone() });
+            return;
+        }
+        match self.elems[pos] {
+            JobSeqElem::Vertex(jv) => match at {
+                Some(v) => {
+                    // Vertex already determined by the incoming channel.
+                    debug_assert_eq!(rg.vertex(v).job_vertex, jv);
+                    cur.push(SeqElem::Vertex(v));
+                    self.enum_rec(rg, pos + 1, Some(v), cur, out, limit);
+                    cur.pop();
+                }
+                None => {
+                    for &v in rg.members(jv) {
+                        cur.push(SeqElem::Vertex(v));
+                        self.enum_rec(rg, pos + 1, Some(v), cur, out, limit);
+                        cur.pop();
+                        if out.len() >= limit {
+                            return;
+                        }
+                    }
+                }
+            },
+            JobSeqElem::Edge(je) => {
+                for c in rg.edge_channels(je) {
+                    if let Some(v) = at {
+                        if c.from != v {
+                            continue;
+                        }
+                    }
+                    cur.push(SeqElem::Edge(c.id));
+                    self.enum_rec(rg, pos + 1, Some(c.to), cur, out, limit);
+                    cur.pop();
+                    if out.len() >= limit {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl RuntimeSequence {
+    /// Runtime vertices in the sequence.
+    pub fn vertices(&self) -> impl Iterator<Item = VertexId> + '_ {
+        self.elems.iter().filter_map(|e| match e {
+            SeqElem::Vertex(v) => Some(*v),
+            _ => None,
+        })
+    }
+
+    /// Channels in the sequence.
+    pub fn channels(&self) -> impl Iterator<Item = ChannelId> + '_ {
+        self.elems.iter().filter_map(|e| match e {
+            SeqElem::Edge(c) => Some(*c),
+            _ => None,
+        })
+    }
+
+    /// Validate alternation/connectivity against a runtime graph.
+    pub fn validate(&self, rg: &RuntimeGraph) -> Result<()> {
+        if self.elems.is_empty() {
+            bail!("empty runtime sequence");
+        }
+        for pair in self.elems.windows(2) {
+            match (pair[0], pair[1]) {
+                (SeqElem::Vertex(v), SeqElem::Edge(c)) => {
+                    if rg.channel(c).from != v {
+                        bail!("channel {c} does not leave {v}");
+                    }
+                }
+                (SeqElem::Edge(c), SeqElem::Vertex(v)) => {
+                    if rg.channel(c).to != v {
+                        bail!("channel {c} does not enter {v}");
+                    }
+                }
+                _ => bail!("runtime sequence must alternate"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::job::DistributionPattern;
+
+    /// P -(ata)-> D -(pw)-> M -(ata)-> R, parallelism m each.
+    fn pipeline(m: u32) -> (JobGraph, RuntimeGraph) {
+        let mut g = JobGraph::new();
+        let p = g.add_vertex("P", m);
+        let d = g.add_vertex("D", m);
+        let mm = g.add_vertex("M", m);
+        let r = g.add_vertex("R", m);
+        g.connect(p, d, DistributionPattern::AllToAll);
+        g.connect(d, mm, DistributionPattern::Pointwise);
+        g.connect(mm, r, DistributionPattern::AllToAll);
+        g.validate().unwrap();
+        let rg = RuntimeGraph::expand(&g, 2).unwrap();
+        (g, rg)
+    }
+
+    fn eval_seq(g: &JobGraph) -> JobSequence {
+        // (e1, D, e2, M, e3): edge-led and edge-terminated like Eq. 4.
+        JobSequence::along_path(
+            g,
+            &[JobVertexId(1), JobVertexId(2)],
+            Some(JobVertexId(0)),
+            Some(JobVertexId(3)),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn along_path_builds_valid_alternation() {
+        let (g, _) = pipeline(2);
+        let s = eval_seq(&g);
+        assert_eq!(s.elems.len(), 5);
+        s.validate(&g).unwrap();
+        assert_eq!(s.vertices(), vec![JobVertexId(1), JobVertexId(2)]);
+        assert_eq!(s.edges().len(), 3);
+        assert_eq!(
+            s.vertex_path(&g),
+            vec![JobVertexId(0), JobVertexId(1), JobVertexId(2), JobVertexId(3)]
+        );
+    }
+
+    #[test]
+    fn count_matches_enumeration() {
+        let (g, rg) = pipeline(3);
+        let s = eval_seq(&g);
+        let count = s.count_runtime(&g, &rg);
+        let all = s.enumerate_runtime(&rg, usize::MAX);
+        assert_eq!(count, all.len() as u128);
+        // m^3: choose P (leading edge), D=M chain fixed, choose R.
+        assert_eq!(count, 27);
+        for rs in &all {
+            rs.validate(&rg).unwrap();
+        }
+    }
+
+    #[test]
+    fn paper_scale_count_is_m_cubed() {
+        // Full evaluation-job shape at m=40 (kept small for test speed):
+        // P -ata-> D -pw-> M -pw-> O -pw-> E -ata-> R; sequence (e1,D,e2,M,e3,O,e4,E,e5).
+        let m = 40;
+        let mut g = JobGraph::new();
+        let p = g.add_vertex("P", m);
+        let d = g.add_vertex("D", m);
+        let mg = g.add_vertex("M", m);
+        let o = g.add_vertex("O", m);
+        let e = g.add_vertex("E", m);
+        let r = g.add_vertex("R", m);
+        g.connect(p, d, DistributionPattern::AllToAll);
+        g.connect(d, mg, DistributionPattern::Pointwise);
+        g.connect(mg, o, DistributionPattern::Pointwise);
+        g.connect(o, e, DistributionPattern::Pointwise);
+        g.connect(e, r, DistributionPattern::AllToAll);
+        g.validate().unwrap();
+        let rg = RuntimeGraph::expand(&g, 4).unwrap();
+        let s = JobSequence::along_path(&g, &[d, mg, o, e], Some(p), Some(r)).unwrap();
+        assert_eq!(s.count_runtime(&g, &rg), (m as u128).pow(3));
+    }
+
+    #[test]
+    fn sequence_starting_and_ending_with_vertex() {
+        let (g, rg) = pipeline(2);
+        // (D, e2, M): both ends vertices, pointwise in between.
+        let s = JobSequence::along_path(&g, &[JobVertexId(1), JobVertexId(2)], None, None)
+            .unwrap();
+        assert_eq!(s.count_runtime(&g, &rg), 2);
+        let all = s.enumerate_runtime(&rg, usize::MAX);
+        assert_eq!(all.len(), 2);
+    }
+
+    #[test]
+    fn enumeration_respects_limit() {
+        let (g, rg) = pipeline(3);
+        let s = eval_seq(&g);
+        assert_eq!(s.enumerate_runtime(&rg, 5).len(), 5);
+    }
+
+    #[test]
+    fn validate_rejects_disconnected() {
+        let (g, _) = pipeline(2);
+        let bad = JobSequence::new(vec![
+            JobSeqElem::Vertex(JobVertexId(0)),
+            JobSeqElem::Edge(g.edge_between(JobVertexId(1), JobVertexId(2)).unwrap().id),
+        ]);
+        assert!(bad.validate(&g).is_err());
+    }
+}

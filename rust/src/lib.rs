@@ -1,0 +1,34 @@
+//! # Nephele Streaming (reproduction)
+//!
+//! A production-style reproduction of *"Nephele Streaming: Stream
+//! Processing under QoS Constraints at Scale"* (Lohrmann, Warneke, Kao;
+//! Cluster Computing 2013).
+//!
+//! The crate implements a massively-parallel streaming engine in the
+//! paper's architecture — master/worker, per-task threads, output
+//! buffers, input queues — plus the paper's contribution: a fully
+//! distributed QoS-management scheme (QoS Reporters and Managers,
+//! Algorithms 1–3) with two runtime countermeasures, **adaptive output
+//! buffer sizing** and **dynamic task chaining**.
+//!
+//! Two execution substrates share all QoS logic:
+//! * [`sim`] — a discrete-event cluster simulator that runs the paper's
+//!   full 200-node / m=800 / 6400-stream evaluation on one core, and
+//! * [`live`] — a real multi-threaded pipeline whose compute-bound tasks
+//!   execute AOT-compiled XLA executables (JAX/Pallas → HLO text → PJRT)
+//!   via [`runtime`].
+//!
+//! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for the
+//! reproduced figures.
+
+pub mod actions;
+pub mod baseline;
+pub mod config;
+pub mod experiments;
+pub mod graph;
+pub mod live;
+pub mod pipeline;
+pub mod qos;
+pub mod runtime;
+pub mod sim;
+pub mod util;

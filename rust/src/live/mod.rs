@@ -1,0 +1,25 @@
+//! Live execution: the video pipeline running with REAL compute — the
+//! AOT-compiled XLA stages on the PJRT CPU client — under the same QoS
+//! machinery the simulator uses.
+//!
+//! Topology (one OS process, real threads, real channels):
+//!
+//! ```text
+//! producer thread ──mpsc (output-buffer batching)──► compute thread
+//!  (Partitioner:                                      (Decoder, Merger,
+//!   synthetic encoded                                  Overlay, Encoder as
+//!   frame groups)                                      XLA executables)
+//!                                                          │
+//!            QosReporter ◄── real tags / task latencies ───┘
+//!                │ reports
+//!            QosManager ── SetBufferSize / ChainTasks ──► applied live
+//! ```
+//!
+//! Dynamic task chaining swaps the four per-stage executables for the
+//! fused `chained` artifact — the exact semantics-preserving trade the
+//! paper's chaining makes (no per-stage hand-over), verified equivalent
+//! in `rust/tests/integration_runtime.rs`.
+
+pub mod pipeline;
+
+pub use pipeline::{run_live, LiveConfig, LiveReport, StageLatencies};

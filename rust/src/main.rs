@@ -1,0 +1,137 @@
+//! `nephele` — the coordinator CLI.
+//!
+//! ```text
+//! nephele sim-video  [--scale small|paper] [--scenario unopt|buffers|full]
+//!                    [--secs N] [--seed N] [--constraint-ms N] [--quiet]
+//! nephele sim-meter  [--secs N] [--optimized true|false]
+//! nephele live       [--frames N] [--fps F] [--artifacts DIR]
+//! nephele info
+//! ```
+//!
+//! The per-figure experiment binaries (`fig2`, `fig7`..`fig10`) regenerate
+//! the paper's evaluation; this binary is the general launcher.
+
+use anyhow::{bail, Result};
+use nephele::config::EngineConfig;
+use nephele::experiments::video_scenarios::{run_video_scenario, Scenario};
+use nephele::live::{run_live, LiveConfig};
+use nephele::pipeline::meter::{smart_meter_job, MeterSpec};
+use nephele::pipeline::video::VideoSpec;
+use nephele::sim::cluster::SimCluster;
+use nephele::sim::metrics::breakdown;
+use nephele::util::time::Duration;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match argv.first().map(|s| s.as_str()) {
+        Some("sim-video") => sim_video(&argv[1..]),
+        Some("sim-meter") => sim_meter(&argv[1..]),
+        Some("live") => live(&argv[1..]),
+        Some("info") | None => {
+            println!("nephele-streaming — reproduction of 'Nephele Streaming: Stream");
+            println!("Processing under QoS Constraints at Scale' (Cluster Computing 2013).");
+            println!();
+            println!("subcommands: sim-video | sim-meter | live | info");
+            println!("figure binaries: fig2, fig7, fig8, fig9, fig10 (see EXPERIMENTS.md)");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?} (try `nephele info`)"),
+    }
+}
+
+fn take_val<'a>(argv: &'a [String], i: &mut usize) -> Result<&'a str> {
+    *i += 1;
+    argv.get(*i)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("missing value after {}", argv[*i - 1]))
+}
+
+fn sim_video(argv: &[String]) -> Result<()> {
+    let mut spec = VideoSpec::small();
+    let mut cfg = EngineConfig::default();
+    let mut scenario = Scenario::BuffersAndChaining;
+    let mut secs = 600;
+    let mut verbose = true;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--scale" => {
+                spec = match take_val(argv, &mut i)? {
+                    "small" => VideoSpec::small(),
+                    "paper" => VideoSpec::default(),
+                    other => bail!("unknown scale {other:?}"),
+                }
+            }
+            "--scenario" => {
+                scenario = match take_val(argv, &mut i)? {
+                    "unopt" => Scenario::Unoptimized,
+                    "buffers" => Scenario::AdaptiveBuffers,
+                    "full" => Scenario::BuffersAndChaining,
+                    other => bail!("unknown scenario {other:?}"),
+                }
+            }
+            "--secs" => secs = take_val(argv, &mut i)?.parse()?,
+            "--seed" => cfg.seed = take_val(argv, &mut i)?.parse()?,
+            "--constraint-ms" => spec.constraint_ms = take_val(argv, &mut i)?.parse()?,
+            "--quiet" => verbose = false,
+            other => bail!("unknown argument {other:?}"),
+        }
+        i += 1;
+    }
+    let report = run_video_scenario(scenario, spec, cfg, secs, 30, verbose)?;
+    println!("== {} ==", report.scenario.title());
+    print!("{}", report.final_breakdown.render());
+    println!(
+        "buffer updates: {} | chains: {} | unresolvable: {} | delivered: {}",
+        report.buffer_updates, report.chains_established, report.unresolvable, report.items_delivered
+    );
+    Ok(())
+}
+
+fn sim_meter(argv: &[String]) -> Result<()> {
+    let mut secs = 1500;
+    let mut optimized = true;
+    let mut cfg = EngineConfig::default();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--secs" => secs = take_val(argv, &mut i)?.parse()?,
+            "--seed" => cfg.seed = take_val(argv, &mut i)?.parse()?,
+            "--optimized" => optimized = take_val(argv, &mut i)?.parse()?,
+            other => bail!("unknown argument {other:?}"),
+        }
+        i += 1;
+    }
+    let cfg = if optimized { cfg.fully_optimized() } else { cfg.unoptimized() };
+    let (job, rg, constraints, specs, sources, seq) = smart_meter_job(MeterSpec::default())?;
+    let mut cluster = SimCluster::new(job, rg, &constraints, specs, sources, cfg)?;
+    cluster.run(Duration::from_secs(secs), None);
+    let now = cluster.now();
+    print!("{}", breakdown(&mut cluster, &seq, now).render());
+    Ok(())
+}
+
+fn live(argv: &[String]) -> Result<()> {
+    let mut cfg = LiveConfig::default();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--frames" => cfg.frames = take_val(argv, &mut i)?.parse()?,
+            "--fps" => cfg.fps = take_val(argv, &mut i)?.parse()?,
+            "--artifacts" => cfg.artifacts_dir = take_val(argv, &mut i)?.into(),
+            "--constraint-ms" => cfg.constraint_ms = take_val(argv, &mut i)?.parse()?,
+            other => bail!("unknown argument {other:?}"),
+        }
+        i += 1;
+    }
+    let report = run_live(&cfg)?;
+    println!(
+        "before: {:.1} ms | after: {:.1} ms | improvement {:.1}x | buffer updates {} | chained {}",
+        report.before.total_ms,
+        report.after.total_ms,
+        report.improvement_factor,
+        report.buffer_updates,
+        report.chained
+    );
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Job builders: the paper's evaluation workloads expressed against the
+//! public API (job graph + constraints + task semantics + sources).
+
+pub mod meter;
+pub mod microbench;
+pub mod video;
+
+pub use meter::{smart_meter_job, MeterSpec};
+pub use microbench::{sender_receiver_job, MicrobenchSpec};
+pub use video::{video_job, VideoJob, VideoSpec};

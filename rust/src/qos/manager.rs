@@ -1,0 +1,699 @@
+//! The QoS Manager role (§3.4.1, §3.5): ingests reports from its QoS
+//! Reporters, detects violated runtime constraints within its assigned
+//! subgraph, and issues countermeasures.
+//!
+//! Violation detection never materialises runtime sequences: a max-plus
+//! dynamic program over each chain's layers finds the worst (and best)
+//! sequence in O(channels), using only elements with fresh measurement
+//! data.  Countermeasures escalate per §3.5: first adaptive output
+//! buffer sizing on the violated sequence's channels, then dynamic task
+//! chaining; if neither applies and the constraint is still violated the
+//! manager reports the failed optimisation to the master.
+
+use super::sample::{ElementKey, MetricKind, Report};
+use super::subgraph::{Layer, QosSubgraph, VertexRef};
+use crate::actions::buffer_sizing::{next_buffer_size, BufferSizingConfig, SizeDecision};
+use crate::actions::chaining::{find_longest_chain, ChainCandidate, ChainingConfig};
+use crate::actions::Action;
+use crate::graph::ids::{ChannelId, VertexId, WorkerId};
+use crate::util::stats::WindowAvg;
+use crate::util::time::{Duration, Time};
+use std::collections::{BTreeMap, HashSet};
+
+/// Manager tunables; which countermeasures are armed mirrors the paper's
+/// three evaluation scenarios (§4.3).
+#[derive(Debug, Clone, Copy)]
+pub struct ManagerConfig {
+    pub buffer: BufferSizingConfig,
+    pub chaining: ChainingConfig,
+    pub enable_buffer_sizing: bool,
+    pub enable_chaining: bool,
+}
+
+impl Default for ManagerConfig {
+    fn default() -> Self {
+        ManagerConfig {
+            buffer: BufferSizingConfig::default(),
+            chaining: ChainingConfig::default(),
+            enable_buffer_sizing: true,
+            enable_chaining: true,
+        }
+    }
+}
+
+/// The evaluation result for one chain.
+#[derive(Debug, Clone)]
+pub struct ChainEval {
+    pub constraint: usize,
+    /// Worst estimated mean sequence latency (max-plus DP), µs.
+    pub worst_us: f64,
+    /// Best estimated mean sequence latency (min-plus DP), µs.
+    pub best_us: f64,
+    /// The elements of the worst sequence, with their mean latency (µs).
+    pub worst_path: Vec<(ElementKey, f64)>,
+    pub violated: bool,
+}
+
+/// Per-manager state.
+#[derive(Debug)]
+pub struct QosManager {
+    worker: WorkerId,
+    subgraph: QosSubgraph,
+    cfg: ManagerConfig,
+    metrics: BTreeMap<(ElementKey, MetricKind), WindowAvg>,
+    /// Believed output buffer size per channel (kept fresh via the
+    /// piggybacked update notifications, §3.5.1).
+    buffer_sizes: BTreeMap<ChannelId, u32>,
+    default_buffer_size: u32,
+    /// Vertices this manager knows to be chained already.
+    chained: HashSet<VertexId>,
+    /// Per-chain: do not re-evaluate before this time ("waits until all
+    /// latency measurement values based on the old buffer sizes have been
+    /// flushed out", §3.5).
+    cooldown_until: Vec<Time>,
+    /// Per-chain: completed buffer-adjustment rounds.  The two
+    /// countermeasures are applied *gradually* (§1, §3.5): buffer sizing
+    /// gets a few rounds to fix what it can before chaining is also
+    /// considered "to reduce latencies further".
+    buffer_rounds: Vec<u32>,
+    /// Per-constraint: failed-optimisation already reported to master.
+    reported_unresolvable: Vec<bool>,
+    /// Maximum constraint window (used as measurement freshness horizon).
+    max_window: Duration,
+}
+
+impl QosManager {
+    pub fn new(
+        worker: WorkerId,
+        subgraph: QosSubgraph,
+        default_buffer_size: u32,
+        cfg: ManagerConfig,
+    ) -> QosManager {
+        let max_window = subgraph
+            .constraints
+            .iter()
+            .map(|c| c.window)
+            .max()
+            .unwrap_or(Duration::from_secs(15));
+        let cooldown_until = vec![Time::ZERO; subgraph.chains.len()];
+        let buffer_rounds = vec![0; subgraph.chains.len()];
+        let reported_unresolvable = vec![false; subgraph.constraints.len()];
+        QosManager {
+            worker,
+            subgraph,
+            cfg,
+            metrics: BTreeMap::new(),
+            buffer_sizes: BTreeMap::new(),
+            default_buffer_size,
+            chained: HashSet::new(),
+            cooldown_until,
+            buffer_rounds,
+            reported_unresolvable,
+            max_window,
+        }
+    }
+
+    pub fn worker(&self) -> WorkerId {
+        self.worker
+    }
+
+    pub fn subgraph(&self) -> &QosSubgraph {
+        &self.subgraph
+    }
+
+    /// Ingest one report from a QoS Reporter.
+    pub fn ingest(&mut self, report: &Report) {
+        for e in &report.entries {
+            let window = self.max_window;
+            self.metrics
+                .entry((e.element, e.kind))
+                .or_insert_with(|| WindowAvg::new(window))
+                .add(report.at, e.mean, e.count);
+        }
+        for &(channel, size) in &report.buffer_updates {
+            let known = self.buffer_sizes.insert(channel, size);
+            if known != Some(size) {
+                // Measurements taken under the old size are stale.
+                self.clear_channel_metrics(channel);
+            }
+        }
+    }
+
+    fn clear_channel_metrics(&mut self, channel: ChannelId) {
+        for kind in [MetricKind::ChannelLatency, MetricKind::OutputBufferLifetime] {
+            if let Some(w) = self.metrics.get_mut(&(ElementKey::Channel(channel), kind)) {
+                w.clear();
+            }
+        }
+    }
+
+    fn mean(&mut self, element: ElementKey, kind: MetricKind, now: Time) -> Option<f64> {
+        self.metrics.get_mut(&(element, kind)).and_then(|w| w.mean(now))
+    }
+
+    fn buffer_size(&self, channel: ChannelId) -> u32 {
+        self.buffer_sizes
+            .get(&channel)
+            .copied()
+            .unwrap_or(self.default_buffer_size)
+    }
+
+    /// Evaluate one chain: max-plus / min-plus DP over layers using only
+    /// elements with fresh data.  `None` if some layer has no data at all
+    /// (not enough measurements yet, §4.3.2).
+    fn eval_chain(&mut self, chain_idx: usize, now: Time) -> Option<ChainEval> {
+        #[derive(Clone)]
+        struct State {
+            max: f64,
+            min: f64,
+            max_path: Vec<(ElementKey, f64)>,
+        }
+        let chain = self.subgraph.chains[chain_idx].clone();
+        let limit = self.subgraph.constraints[chain.constraint].max_latency;
+
+        // state keyed by current vertex; terminal state for trailing
+        // channel layers.
+        let mut by_vertex: BTreeMap<VertexId, State> = BTreeMap::new();
+        let mut terminal: Option<State> = None;
+
+        for (i, layer) in chain.layers.iter().enumerate() {
+            match layer {
+                Layer::Vertices(vs) => {
+                    let mut next: BTreeMap<VertexId, State> = BTreeMap::new();
+                    for v in vs {
+                        let key = ElementKey::Vertex(v.id);
+                        let lat = match self.mean(key, MetricKind::TaskLatency, now) {
+                            Some(l) => l,
+                            None => continue,
+                        };
+                        if i == 0 {
+                            next.insert(
+                                v.id,
+                                State { max: lat, min: lat, max_path: vec![(key, lat)] },
+                            );
+                        } else if let Some(prev) = by_vertex.get(&v.id) {
+                            let mut path = prev.max_path.clone();
+                            path.push((key, lat));
+                            next.insert(
+                                v.id,
+                                State {
+                                    max: prev.max + lat,
+                                    min: prev.min + lat,
+                                    max_path: path,
+                                },
+                            );
+                        }
+                    }
+                    if next.is_empty() {
+                        return None; // layer without data: not evaluable
+                    }
+                    by_vertex = next;
+                }
+                Layer::Channels(cs) => {
+                    let mut next: BTreeMap<VertexId, State> = BTreeMap::new();
+                    for c in cs {
+                        let key = ElementKey::Channel(c.id);
+                        let lat = match self.mean(key, MetricKind::ChannelLatency, now) {
+                            Some(l) => l,
+                            None => continue,
+                        };
+                        let (base_max, base_min, base_path) = if i == 0 {
+                            (0.0, 0.0, Vec::new())
+                        } else {
+                            match by_vertex.get(&c.from) {
+                                Some(p) => (p.max, p.min, p.max_path.clone()),
+                                None => continue,
+                            }
+                        };
+                        let cand_max = base_max + lat;
+                        let cand_min = base_min + lat;
+                        let entry = next.entry(c.to).or_insert_with(|| State {
+                            max: f64::NEG_INFINITY,
+                            min: f64::INFINITY,
+                            max_path: Vec::new(),
+                        });
+                        if cand_max > entry.max {
+                            entry.max = cand_max;
+                            entry.max_path = {
+                                let mut p = base_path;
+                                p.push((key, lat));
+                                p
+                            };
+                        }
+                        entry.min = entry.min.min(cand_min);
+                    }
+                    if next.is_empty() {
+                        return None;
+                    }
+                    // If this is the last layer, fold into a terminal state.
+                    if i + 1 == chain.layers.len() {
+                        let mut t = State {
+                            max: f64::NEG_INFINITY,
+                            min: f64::INFINITY,
+                            max_path: Vec::new(),
+                        };
+                        for s in next.values() {
+                            if s.max > t.max {
+                                t.max = s.max;
+                                t.max_path = s.max_path.clone();
+                            }
+                            t.min = t.min.min(s.min);
+                        }
+                        terminal = Some(t);
+                    }
+                    by_vertex = next;
+                }
+            }
+        }
+
+        let final_state = terminal.or_else(|| {
+            by_vertex.values().fold(None::<State>, |acc, s| match acc {
+                None => Some(s.clone()),
+                Some(mut a) => {
+                    if s.max > a.max {
+                        a.max = s.max;
+                        a.max_path = s.max_path.clone();
+                    }
+                    a.min = a.min.min(s.min);
+                    Some(a)
+                }
+            })
+        })?;
+
+        Some(ChainEval {
+            constraint: chain.constraint,
+            worst_us: final_state.max,
+            best_us: final_state.min,
+            worst_path: final_state.max_path,
+            violated: final_state.max > limit.as_micros() as f64,
+        })
+    }
+
+    /// Evaluate all chains (for harness/metrics output).
+    pub fn evaluate_chains(&mut self, now: Time) -> Vec<ChainEval> {
+        (0..self.subgraph.chains.len())
+            .filter_map(|i| self.eval_chain(i, now))
+            .collect()
+    }
+
+    /// Windowed means for all monitored elements (for aggregated latency
+    /// breakdowns — the bar plots of Figs. 7–9).
+    pub fn element_means(&mut self, now: Time) -> Vec<(ElementKey, MetricKind, f64)> {
+        let keys: Vec<(ElementKey, MetricKind)> = self.metrics.keys().copied().collect();
+        keys.into_iter()
+            .filter_map(|(e, k)| self.mean(e, k, now).map(|m| (e, k, m)))
+            .collect()
+    }
+
+    /// Detect violations and decide countermeasures (§3.5).
+    pub fn act(&mut self, now: Time) -> Vec<Action> {
+        let mut actions = Vec::new();
+        for chain_idx in 0..self.subgraph.chains.len() {
+            if now < self.cooldown_until[chain_idx] {
+                continue;
+            }
+            let eval = match self.eval_chain(chain_idx, now) {
+                Some(e) => e,
+                None => continue,
+            };
+            if !eval.violated {
+                continue;
+            }
+
+            let mut chain_actions = Vec::new();
+            if self.cfg.enable_buffer_sizing {
+                let buf = self.buffer_actions(chain_idx, now);
+                if !buf.is_empty() {
+                    self.buffer_rounds[chain_idx] += 1;
+                }
+                chain_actions.extend(buf);
+            }
+            // Chaining engages once buffer sizing is out of moves, or has
+            // had a few rounds without meeting the constraint.
+            let buffers_had_their_chance = chain_actions.is_empty()
+                || self.buffer_rounds[chain_idx] >= 3
+                || !self.cfg.enable_buffer_sizing;
+            if buffers_had_their_chance && self.cfg.enable_chaining {
+                chain_actions.extend(self.chain_actions(&eval, chain_idx, now));
+            }
+
+            if chain_actions.is_empty() {
+                // Preconditions exhausted: report failed optimisation once.
+                let c = eval.constraint;
+                if !self.reported_unresolvable[c] {
+                    self.reported_unresolvable[c] = true;
+                    actions.push(Action::Unresolvable {
+                        manager: self.worker,
+                        constraint: c,
+                        worst_latency_ms: eval.worst_us / 1e3,
+                        limit_ms: self.subgraph.constraints[c].max_latency.as_millis_f64(),
+                    });
+                }
+            } else {
+                // Wait out one constraint window before re-evaluating so
+                // measurements under the new configuration accumulate.
+                self.cooldown_until[chain_idx] =
+                    now + self.subgraph.constraints[eval.constraint].window;
+                actions.extend(chain_actions);
+            }
+        }
+        actions
+    }
+
+    /// §3.5.1: buffer decisions for the channels of the violated
+    /// sequences.  All of the chain's channels lie on *some* violated
+    /// sequence once the chain is violated (the countermeasure section
+    /// adjusts "the buffer sizes for each channel in S individually"),
+    /// so every channel with fresh oblt data is considered — acting only
+    /// on the single worst path would need one constraint window per
+    /// channel and take hours to converge on wide fan-in layers.
+    fn buffer_actions(&mut self, chain_idx: usize, now: Time) -> Vec<Action> {
+        let chain = self.subgraph.chains[chain_idx].clone();
+        let mut out = Vec::new();
+        let mut prev_vertex_latency_ms: Option<f64> = None;
+        for layer in &chain.layers {
+            match layer {
+                Layer::Vertices(vs) => {
+                    // Track the (max) measured task latency of the layer:
+                    // the shrink condition compares obl against the
+                    // source task's latency.
+                    let mut max_lat = None;
+                    for v in vs {
+                        if let Some(l) =
+                            self.mean(ElementKey::Vertex(v.id), MetricKind::TaskLatency, now)
+                        {
+                            max_lat =
+                                Some(max_lat.map_or(l, |m: f64| m.max(l)));
+                        }
+                    }
+                    prev_vertex_latency_ms = max_lat.map(|us| us / 1e3);
+                }
+                Layer::Channels(cs) => {
+                    for c in cs {
+                        let key = ElementKey::Channel(c.id);
+                        let oblt = match self.mean(key, MetricKind::OutputBufferLifetime, now) {
+                            Some(v) => v,
+                            None => continue,
+                        };
+                        let obl_ms = oblt / 2.0 / 1e3;
+                        let cur = self.buffer_size(c.id);
+                        match next_buffer_size(cur, obl_ms, prev_vertex_latency_ms, &self.cfg.buffer)
+                        {
+                            SizeDecision::Shrink(size) | SizeDecision::Grow(size) => {
+                                self.buffer_sizes.insert(c.id, size);
+                                self.clear_channel_metrics(c.id);
+                                out.push(Action::SetBufferSize {
+                                    channel: c.id,
+                                    worker: c.sender_worker,
+                                    size,
+                                    based_on: now,
+                                });
+                            }
+                            SizeDecision::Keep => {}
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+
+    /// §3.5.2: chain the longest chainable series on the violated path.
+    fn chain_actions(&mut self, eval: &ChainEval, chain_idx: usize, now: Time) -> Vec<Action> {
+        // Collect the consecutive vertices of the worst path.
+        let chain = &self.subgraph.chains[chain_idx];
+        let vertex_refs: BTreeMap<VertexId, VertexRef> = chain
+            .vertices()
+            .map(|v| (v.id, *v))
+            .collect();
+        let mut candidates = Vec::new();
+        for &(elem, _) in &eval.worst_path {
+            if let ElementKey::Vertex(v) = elem {
+                if let Some(vr) = vertex_refs.get(&v) {
+                    let cpu = self
+                        .metrics
+                        .get_mut(&(ElementKey::Vertex(v), MetricKind::TaskCpu))
+                        .and_then(|w| w.mean(now));
+                    candidates.push(ChainCandidate::new(
+                        *vr,
+                        cpu,
+                        self.chained.contains(&v),
+                    ));
+                }
+            }
+        }
+        match find_longest_chain(&candidates, &self.cfg.chaining) {
+            Some(tasks) => {
+                self.chained.extend(tasks.iter().copied());
+                let worker = vertex_refs[&tasks[0]].worker;
+                vec![Action::ChainTasks { worker, tasks, drain: self.cfg.chaining.drain }]
+            }
+            None => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::sample::ReportEntry;
+    use crate::qos::subgraph::{ChainSpec, ChannelRef, ConstraintParams};
+    use crate::graph::ids::JobVertexId;
+
+    fn vref(id: u32, worker: u32) -> VertexRef {
+        VertexRef {
+            id: VertexId(id),
+            job_vertex: JobVertexId(id),
+            worker: WorkerId(worker),
+            in_degree: 1,
+            out_degree: 1,
+            pinned: false,
+            cpu_estimate: 0.1,
+        }
+    }
+
+    fn cref(id: u32, from: u32, to: u32) -> ChannelRef {
+        ChannelRef {
+            id: ChannelId(id),
+            from: VertexId(from),
+            to: VertexId(to),
+            sender_worker: WorkerId(0),
+        }
+    }
+
+    /// (e0 | e1) -> v10 -> e2 -> v11: two leading channels, two tasks.
+    fn subgraph(limit_ms: u64) -> QosSubgraph {
+        QosSubgraph {
+            constraints: vec![ConstraintParams {
+                max_latency: Duration::from_millis(limit_ms),
+                window: Duration::from_secs(15),
+            }],
+            chains: vec![ChainSpec {
+                constraint: 0,
+                layers: vec![
+                    Layer::Channels(vec![cref(0, 0, 10), cref(1, 1, 10)]),
+                    Layer::Vertices(vec![vref(10, 0)]),
+                    Layer::Channels(vec![cref(2, 10, 11)]),
+                    Layer::Vertices(vec![vref(11, 0)]),
+                ],
+            }],
+        }
+    }
+
+    fn report(at: Time, entries: Vec<ReportEntry>) -> Report {
+        Report {
+            from: WorkerId(0),
+            to_manager: WorkerId(0),
+            at,
+            entries,
+            buffer_updates: Vec::new(),
+        }
+    }
+
+    fn entry(element: ElementKey, kind: MetricKind, mean_us: f64) -> ReportEntry {
+        ReportEntry { element, kind, mean: mean_us, count: 1 }
+    }
+
+    fn feed_all(m: &mut QosManager, at: Time, e0: f64, e1: f64, v10: f64, e2: f64, v11: f64) {
+        m.ingest(&report(
+            at,
+            vec![
+                entry(ElementKey::Channel(ChannelId(0)), MetricKind::ChannelLatency, e0),
+                entry(ElementKey::Channel(ChannelId(1)), MetricKind::ChannelLatency, e1),
+                entry(ElementKey::Vertex(VertexId(10)), MetricKind::TaskLatency, v10),
+                entry(ElementKey::Channel(ChannelId(2)), MetricKind::ChannelLatency, e2),
+                entry(ElementKey::Vertex(VertexId(11)), MetricKind::TaskLatency, v11),
+            ],
+        ));
+    }
+
+    #[test]
+    fn not_evaluable_until_each_layer_has_data() {
+        let mut m = QosManager::new(
+            WorkerId(0),
+            subgraph(300),
+            32 * 1024,
+            ManagerConfig::default(),
+        );
+        let t = Time::from_secs_f64(1.0);
+        m.ingest(&report(
+            t,
+            vec![entry(ElementKey::Channel(ChannelId(0)), MetricKind::ChannelLatency, 1000.0)],
+        ));
+        assert!(m.evaluate_chains(t).is_empty());
+        feed_all(&mut m, t, 1000.0, 2000.0, 500.0, 800.0, 300.0);
+        let evals = m.evaluate_chains(t);
+        assert_eq!(evals.len(), 1);
+    }
+
+    #[test]
+    fn worst_path_picks_max_leading_channel() {
+        let mut m = QosManager::new(
+            WorkerId(0),
+            subgraph(300),
+            32 * 1024,
+            ManagerConfig::default(),
+        );
+        let t = Time::from_secs_f64(1.0);
+        feed_all(&mut m, t, 1000.0, 2000.0, 500.0, 800.0, 300.0);
+        let evals = m.evaluate_chains(t);
+        let e = &evals[0];
+        // worst: 2000 + 500 + 800 + 300 = 3600; best: 1000 + ... = 2600.
+        assert_eq!(e.worst_us, 3600.0);
+        assert_eq!(e.best_us, 2600.0);
+        assert!(!e.violated); // limit 300 ms = 300000 us
+        assert_eq!(e.worst_path[0].0, ElementKey::Channel(ChannelId(1)));
+    }
+
+    #[test]
+    fn violation_triggers_buffer_shrink_on_worst_path() {
+        let mut m = QosManager::new(
+            WorkerId(0),
+            subgraph(300),
+            32 * 1024,
+            ManagerConfig::default(),
+        );
+        let t = Time::from_secs_f64(1.0);
+        // Channel 1 latency 400 ms (violated); oblt 600 ms -> obl 300 ms.
+        feed_all(&mut m, t, 1000.0, 400_000.0, 500.0, 800.0, 300.0);
+        m.ingest(&report(
+            t,
+            vec![entry(
+                ElementKey::Channel(ChannelId(1)),
+                MetricKind::OutputBufferLifetime,
+                600_000.0,
+            )],
+        ));
+        let actions = m.act(t);
+        assert_eq!(actions.len(), 1);
+        match &actions[0] {
+            Action::SetBufferSize { channel, size, .. } => {
+                assert_eq!(*channel, ChannelId(1));
+                assert!(*size < 32 * 1024);
+            }
+            other => panic!("expected SetBufferSize, got {other:?}"),
+        }
+        // Cooldown: no immediate re-action.
+        assert!(m.act(t + Duration::from_secs(1)).is_empty());
+        // After the window, still violated (stale data cleared for c1 ->
+        // chain unevaluable until fresh data arrives).
+        let t2 = t + Duration::from_secs(16);
+        assert!(m.act(t2).is_empty());
+    }
+
+    #[test]
+    fn chaining_after_buffers_converged() {
+        let mut m = QosManager::new(
+            WorkerId(0),
+            subgraph(1),
+            32 * 1024,
+            ManagerConfig::default(),
+        );
+        let t = Time::from_secs_f64(1.0);
+        // Violated (limit 1 ms) but obl tiny on all channels -> no shrink
+        // eligible; grow not eligible either (obl above grow threshold).
+        feed_all(&mut m, t, 1000.0, 2000.0, 500.0, 800.0, 300.0);
+        for ch in [0u32, 1, 2] {
+            m.ingest(&report(
+                t,
+                vec![entry(
+                    ElementKey::Channel(ChannelId(ch)),
+                    MetricKind::OutputBufferLifetime,
+                    2_000.0, // oblt 2 ms -> obl 1 ms: between thresholds
+                )],
+            ));
+        }
+        // Provide CPU utilisation so the chain fits one core.
+        m.ingest(&report(
+            t,
+            vec![
+                entry(ElementKey::Vertex(VertexId(10)), MetricKind::TaskCpu, 0.2),
+                entry(ElementKey::Vertex(VertexId(11)), MetricKind::TaskCpu, 0.3),
+            ],
+        ));
+        let actions = m.act(t);
+        assert_eq!(actions.len(), 1);
+        match &actions[0] {
+            Action::ChainTasks { tasks, .. } => {
+                assert_eq!(tasks, &vec![VertexId(10), VertexId(11)]);
+            }
+            other => panic!("expected ChainTasks, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unresolvable_reported_once() {
+        let mut m = QosManager::new(
+            WorkerId(0),
+            subgraph(1),
+            32 * 1024,
+            ManagerConfig {
+                enable_buffer_sizing: false,
+                enable_chaining: false,
+                ..ManagerConfig::default()
+            },
+        );
+        let t = Time::from_secs_f64(1.0);
+        feed_all(&mut m, t, 1000.0, 2000.0, 500.0, 800.0, 300.0);
+        let a1 = m.act(t);
+        assert!(matches!(a1[0], Action::Unresolvable { .. }));
+        assert!(m.act(t + Duration::from_secs(1)).is_empty());
+    }
+
+    #[test]
+    fn buffer_update_notification_clears_stale_metrics() {
+        let mut m = QosManager::new(
+            WorkerId(0),
+            subgraph(300),
+            32 * 1024,
+            ManagerConfig::default(),
+        );
+        let t = Time::from_secs_f64(1.0);
+        feed_all(&mut m, t, 1000.0, 2000.0, 500.0, 800.0, 300.0);
+        assert_eq!(m.evaluate_chains(t).len(), 1);
+        // Another manager resized channel 1: our latency data for it is
+        // stale and must be dropped; channel 0 keeps the layer evaluable.
+        let mut rep = report(t, vec![]);
+        rep.buffer_updates.push((ChannelId(1), 4096));
+        m.ingest(&rep);
+        let evals = m.evaluate_chains(t);
+        assert_eq!(evals.len(), 1);
+        assert_eq!(evals[0].worst_us, 1000.0 + 500.0 + 800.0 + 300.0);
+        assert_eq!(evals[0].worst_path[0].0, ElementKey::Channel(ChannelId(0)));
+        assert_eq!(m.buffer_size(ChannelId(1)), 4096);
+    }
+
+    #[test]
+    fn satisfied_constraint_takes_no_action() {
+        let mut m = QosManager::new(
+            WorkerId(0),
+            subgraph(300),
+            32 * 1024,
+            ManagerConfig::default(),
+        );
+        let t = Time::from_secs_f64(1.0);
+        feed_all(&mut m, t, 1000.0, 2000.0, 500.0, 800.0, 300.0);
+        assert!(m.act(t).is_empty());
+    }
+}

@@ -1,0 +1,28 @@
+//! Distributed QoS management (§3.3–3.4): measurement, reporting,
+//! manager-side violation detection, and the setup algorithms that
+//! allocate QoS Manager roles to worker nodes.
+//!
+//! Data flow (all asynchronous to the data path):
+//!
+//! ```text
+//! task/channel samplers ──► QosReporter (per worker, pre-aggregates)
+//!        ▲                        │ Report once per measurement interval
+//!   SamplingGate                  ▼
+//!                          QosManager (selected workers, one runtime
+//!                          subgraph each; Algorithms 1–3 in `setup`)
+//!                                 │ Action on constraint violation
+//!                                 ▼
+//!               adaptive buffer sizing / dynamic task chaining
+//! ```
+
+pub mod manager;
+pub mod reporter;
+pub mod sample;
+pub mod setup;
+pub mod subgraph;
+
+pub use manager::QosManager;
+pub use reporter::{QosReporter, SamplingGate};
+pub use sample::{ElementKey, Measurement, MetricKind, Report, ReportEntry, Tag};
+pub use setup::{compute_qos_setup, QosSetup, ReporterAssignment};
+pub use subgraph::{ChainSpec, ChannelRef, Layer, QosSubgraph, VertexRef};

@@ -1,0 +1,318 @@
+//! The QoS Reporter role (§3.3, §3.4.1): a background process on every
+//! worker that pre-aggregates local measurement data and flushes one
+//! report per QoS Manager per measurement interval.
+//!
+//! Responsibilities:
+//! * decide when to tag a data item / sample a task latency so that there
+//!   is (about) one measurement per element per interval ([`SamplingGate`]);
+//! * pre-aggregate raw samples into per-(element, metric) running means;
+//! * flush reports with a per-manager random offset to avoid bursts,
+//!   skipping managers with no fresh data (no empty reports).
+
+use super::sample::{ElementKey, Measurement, MetricKind, Report, ReportEntry};
+use crate::graph::ids::{ChannelId, WorkerId};
+use crate::util::rng::Rng;
+use crate::util::stats::RunningAvg;
+use crate::util::time::{Duration, Time};
+use std::collections::{BTreeMap, HashMap};
+
+/// Rate limiter guaranteeing ~one sample per key per measurement
+/// interval ("the tagging frequency is chosen in such a way that we have
+/// one tagged data item during each measurement interval", §3.3).
+#[derive(Debug, Clone)]
+pub struct SamplingGate<K: std::hash::Hash + Eq + Copy> {
+    interval: Duration,
+    last: HashMap<K, Time>,
+}
+
+impl<K: std::hash::Hash + Eq + Copy> SamplingGate<K> {
+    pub fn new(interval: Duration) -> SamplingGate<K> {
+        SamplingGate { interval, last: HashMap::new() }
+    }
+
+    /// True if `key` should be sampled now; records the sample time.
+    pub fn admit(&mut self, key: K, now: Time) -> bool {
+        match self.last.get(&key) {
+            Some(&t) if now.since(t) < self.interval => false,
+            _ => {
+                self.last.insert(key, now);
+                true
+            }
+        }
+    }
+
+    pub fn interval(&self) -> Duration {
+        self.interval
+    }
+}
+
+/// Where a given element's measurements must be sent: the managers whose
+/// subgraphs contain the element (possibly several, §3.4.2 objective 2).
+pub type Interest = BTreeMap<(ElementKey, MetricKind), Vec<WorkerId>>;
+
+/// Per-worker reporter state.
+#[derive(Debug)]
+pub struct QosReporter {
+    worker: WorkerId,
+    interval: Duration,
+    /// Pre-aggregation accumulators since last flush, keyed by element+metric.
+    acc: BTreeMap<(ElementKey, MetricKind), RunningAvg>,
+    /// Which managers are interested in which element metric.
+    interest: Interest,
+    /// Per-manager next flush deadline (random offset, then every interval).
+    next_flush: BTreeMap<WorkerId, Time>,
+    /// Buffer-size updates applied locally since the last flush.
+    pending_buffer_updates: Vec<(ChannelId, u32)>,
+}
+
+impl QosReporter {
+    pub fn new(worker: WorkerId, interval: Duration, interest: Interest, rng: &mut Rng) -> Self {
+        // "To avoid bursts of reports, the QoS Reporter chooses a random
+        // offset for the reports of each QoS Manager." (§3.3)
+        let mut managers: Vec<WorkerId> =
+            interest.values().flatten().copied().collect();
+        managers.sort();
+        managers.dedup();
+        let next_flush = managers
+            .into_iter()
+            .map(|m| (m, Time(rng.below(interval.as_micros().max(1)))))
+            .collect();
+        QosReporter {
+            worker,
+            interval,
+            acc: BTreeMap::new(),
+            interest,
+            next_flush,
+            pending_buffer_updates: Vec::new(),
+        }
+    }
+
+    pub fn worker(&self) -> WorkerId {
+        self.worker
+    }
+
+    pub fn interval(&self) -> Duration {
+        self.interval
+    }
+
+    /// Managers this reporter reports to.
+    pub fn managers(&self) -> impl Iterator<Item = WorkerId> + '_ {
+        self.next_flush.keys().copied()
+    }
+
+    /// True if anyone is interested in this element+metric (i.e. the
+    /// engine should bother sampling it at all).
+    pub fn monitored(&self, element: ElementKey, kind: MetricKind) -> bool {
+        self.interest.contains_key(&(element, kind))
+    }
+
+    /// Record one raw measurement into the pre-aggregation accumulators.
+    pub fn record(&mut self, m: Measurement) {
+        if self.interest.contains_key(&(m.element, m.kind)) {
+            self.acc.entry((m.element, m.kind)).or_default().add(m.value);
+        }
+    }
+
+    /// Note a locally applied buffer-size update for piggybacked
+    /// notification (§3.5.1).
+    pub fn note_buffer_update(&mut self, channel: ChannelId, size: u32) {
+        self.pending_buffer_updates.push((channel, size));
+    }
+
+    /// Earliest pending flush deadline (for event scheduling).
+    pub fn next_deadline(&self) -> Option<Time> {
+        self.next_flush.values().min().copied()
+    }
+
+    /// Flush all reports that are due at `now`.  Returns the reports to
+    /// deliver; managers with no fresh data get none ("reports ... are
+    /// sent once every measurement interval on an as-needed basis").
+    pub fn flush_due(&mut self, now: Time) -> Vec<Report> {
+        let due: Vec<WorkerId> = self
+            .next_flush
+            .iter()
+            .filter(|&(_, &t)| t <= now)
+            .map(|(&m, _)| m)
+            .collect();
+        if due.is_empty() {
+            return Vec::new();
+        }
+        // Drain accumulators once; route each entry to interested, due
+        // managers. Entries for managers that are not yet due are retained.
+        let mut reports: BTreeMap<WorkerId, Report> = BTreeMap::new();
+        let keys: Vec<(ElementKey, MetricKind)> = self.acc.keys().copied().collect();
+        for key in keys {
+            let interested = &self.interest[&key];
+            // Only drain if *every* interested manager is due, otherwise
+            // the non-due managers would lose this interval's data.
+            // (With a shared interval per reporter the offsets differ per
+            // manager; we keep it simple and correct by duplicating the
+            // aggregate to due managers and resetting only when all
+            // interested managers have been served at least once: in
+            // practice we drain when all interested managers are due, and
+            // otherwise snapshot without reset.)
+            let all_due = interested.iter().all(|m| due.contains(m));
+            let entry = if all_due {
+                self.acc.get_mut(&key).and_then(|a| a.take())
+            } else {
+                self.acc.get(&key).and_then(|a| a.mean().map(|m| (m, a.count())))
+            };
+            if let Some((mean, count)) = entry {
+                for m in interested.iter().filter(|m| due.contains(m)) {
+                    reports
+                        .entry(*m)
+                        .or_insert_with(|| Report {
+                            from: self.worker,
+                            to_manager: *m,
+                            at: now,
+                            entries: Vec::new(),
+                            buffer_updates: Vec::new(),
+                        })
+                        .entries
+                        .push(ReportEntry { element: key.0, kind: key.1, mean, count });
+                }
+            }
+        }
+        // Attach buffer update notices to every due manager.
+        if !self.pending_buffer_updates.is_empty() {
+            for m in &due {
+                reports
+                    .entry(*m)
+                    .or_insert_with(|| Report {
+                        from: self.worker,
+                        to_manager: *m,
+                        at: now,
+                        entries: Vec::new(),
+                        buffer_updates: Vec::new(),
+                    })
+                    .buffer_updates
+                    .extend(self.pending_buffer_updates.iter().copied());
+            }
+            self.pending_buffer_updates.clear();
+        }
+        // Re-arm deadlines for due managers.
+        for m in due {
+            *self.next_flush.get_mut(&m).unwrap() = now + self.interval;
+        }
+        reports.into_values().filter(|r| !r.entries.is_empty() || !r.buffer_updates.is_empty()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ids::{ChannelId, VertexId};
+
+    fn interest_for(mgr: WorkerId) -> Interest {
+        let mut i = Interest::new();
+        i.insert(
+            (ElementKey::Channel(ChannelId(0)), MetricKind::ChannelLatency),
+            vec![mgr],
+        );
+        i.insert(
+            (ElementKey::Vertex(VertexId(1)), MetricKind::TaskLatency),
+            vec![mgr],
+        );
+        i
+    }
+
+    #[test]
+    fn sampling_gate_admits_once_per_interval() {
+        let mut g: SamplingGate<u32> = SamplingGate::new(Duration::from_secs(15));
+        assert!(g.admit(1, Time::from_secs_f64(0.0)));
+        assert!(!g.admit(1, Time::from_secs_f64(10.0)));
+        assert!(g.admit(1, Time::from_secs_f64(15.0)));
+        assert!(g.admit(2, Time::from_secs_f64(10.0))); // independent keys
+    }
+
+    #[test]
+    fn reporter_aggregates_and_flushes() {
+        let mgr = WorkerId(9);
+        let mut rng = Rng::new(1);
+        let mut r = QosReporter::new(
+            WorkerId(0),
+            Duration::from_secs(15),
+            interest_for(mgr),
+            &mut rng,
+        );
+        r.record(Measurement::channel_latency(ChannelId(0), 1000.0));
+        r.record(Measurement::channel_latency(ChannelId(0), 3000.0));
+        r.record(Measurement::task_latency(VertexId(1), 500.0));
+        // Not interested: dropped.
+        r.record(Measurement::task_latency(VertexId(99), 1.0));
+
+        let t = Time::from_secs_f64(20.0);
+        let reports = r.flush_due(t);
+        assert_eq!(reports.len(), 1);
+        let rep = &reports[0];
+        assert_eq!(rep.to_manager, mgr);
+        assert_eq!(rep.entries.len(), 2);
+        let ch = rep
+            .entries
+            .iter()
+            .find(|e| e.kind == MetricKind::ChannelLatency)
+            .unwrap();
+        assert_eq!(ch.mean, 2000.0);
+        assert_eq!(ch.count, 2);
+    }
+
+    #[test]
+    fn no_empty_reports() {
+        let mgr = WorkerId(9);
+        let mut rng = Rng::new(1);
+        let mut r = QosReporter::new(
+            WorkerId(0),
+            Duration::from_secs(15),
+            interest_for(mgr),
+            &mut rng,
+        );
+        assert!(r.flush_due(Time::from_secs_f64(100.0)).is_empty());
+    }
+
+    #[test]
+    fn accumulators_reset_after_flush() {
+        let mgr = WorkerId(9);
+        let mut rng = Rng::new(1);
+        let mut r = QosReporter::new(
+            WorkerId(0),
+            Duration::from_secs(15),
+            interest_for(mgr),
+            &mut rng,
+        );
+        r.record(Measurement::channel_latency(ChannelId(0), 1000.0));
+        assert_eq!(r.flush_due(Time::from_secs_f64(20.0)).len(), 1);
+        assert!(r.flush_due(Time::from_secs_f64(40.0)).is_empty());
+    }
+
+    #[test]
+    fn random_offsets_spread_first_flush() {
+        let mut i = Interest::new();
+        i.insert(
+            (ElementKey::Channel(ChannelId(0)), MetricKind::ChannelLatency),
+            vec![WorkerId(1), WorkerId(2), WorkerId(3), WorkerId(4)],
+        );
+        let mut rng = Rng::new(7);
+        let r = QosReporter::new(WorkerId(0), Duration::from_secs(15), i, &mut rng);
+        let deadlines: Vec<Time> = r.next_flush.values().copied().collect();
+        let distinct: std::collections::HashSet<u64> =
+            deadlines.iter().map(|t| t.0).collect();
+        assert!(distinct.len() > 1, "offsets should differ: {deadlines:?}");
+        assert!(deadlines.iter().all(|t| t.0 < 15_000_000));
+    }
+
+    #[test]
+    fn buffer_updates_piggyback() {
+        let mgr = WorkerId(9);
+        let mut rng = Rng::new(1);
+        let mut r = QosReporter::new(
+            WorkerId(0),
+            Duration::from_secs(15),
+            interest_for(mgr),
+            &mut rng,
+        );
+        r.note_buffer_update(ChannelId(0), 4096);
+        let reports = r.flush_due(Time::from_secs_f64(20.0));
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].buffer_updates, vec![(ChannelId(0), 4096)]);
+    }
+}

@@ -1,0 +1,116 @@
+//! Measurement primitives (§3.3): tags, samples, and the report format
+//! QoS Reporters send to QoS Managers.
+
+use crate::graph::ids::{ChannelId, VertexId, WorkerId};
+use crate::util::time::Time;
+
+/// The tag attached to a sampled data item: "a small piece of data that
+/// contains a creation timestamp and a channel identifier" (§3.3).  It is
+/// added when the item exits the sender task's user code and evaluated
+/// just before the item enters the receiver task's user code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tag {
+    pub channel: ChannelId,
+    pub created: Time,
+}
+
+/// A monitored runtime element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ElementKey {
+    Vertex(VertexId),
+    Channel(ChannelId),
+}
+
+/// What is being measured about an element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum MetricKind {
+    /// Tag-based channel latency, measured at the receiving worker.
+    ChannelLatency,
+    /// Task latency (§3.2.1), measured on the worker running the task.
+    TaskLatency,
+    /// Output buffer lifetime (time to fill a buffer), measured at the
+    /// sending worker.  `obl = oblt / 2` estimates the buffer latency.
+    OutputBufferLifetime,
+    /// CPU utilisation of the task thread as a fraction of one core
+    /// (profiling input for the chaining precondition, §3.5.2).
+    TaskCpu,
+}
+
+/// A single raw measurement, produced by the engine's samplers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    pub element: ElementKey,
+    pub kind: MetricKind,
+    /// Latencies in microseconds; CPU utilisation as a 0..1 fraction.
+    pub value: f64,
+}
+
+impl Measurement {
+    pub fn channel_latency(channel: ChannelId, micros: f64) -> Measurement {
+        Measurement {
+            element: ElementKey::Channel(channel),
+            kind: MetricKind::ChannelLatency,
+            value: micros,
+        }
+    }
+    pub fn task_latency(vertex: VertexId, micros: f64) -> Measurement {
+        Measurement {
+            element: ElementKey::Vertex(vertex),
+            kind: MetricKind::TaskLatency,
+            value: micros,
+        }
+    }
+    pub fn output_buffer_lifetime(channel: ChannelId, micros: f64) -> Measurement {
+        Measurement {
+            element: ElementKey::Channel(channel),
+            kind: MetricKind::OutputBufferLifetime,
+            value: micros,
+        }
+    }
+    pub fn task_cpu(vertex: VertexId, fraction: f64) -> Measurement {
+        Measurement {
+            element: ElementKey::Vertex(vertex),
+            kind: MetricKind::TaskCpu,
+            value: fraction,
+        }
+    }
+}
+
+/// One pre-aggregated entry of a report: the mean of `count` samples for
+/// `(element, kind)` since the last flush.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReportEntry {
+    pub element: ElementKey,
+    pub kind: MetricKind,
+    pub mean: f64,
+    pub count: u64,
+}
+
+/// A report flushed by a QoS Reporter to one QoS Manager once per
+/// measurement interval (empty reports are never sent, §3.4.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    pub from: WorkerId,
+    pub to_manager: WorkerId,
+    pub at: Time,
+    pub entries: Vec<ReportEntry>,
+    /// Buffer-size updates applied by this worker since the last report
+    /// ("it will notify all relevant QoS Managers of the buffer size
+    /// update with the next measurement value report", §3.5.1).
+    pub buffer_updates: Vec<(ChannelId, u32)>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_constructors_set_keys() {
+        let m = Measurement::channel_latency(ChannelId(3), 1500.0);
+        assert_eq!(m.element, ElementKey::Channel(ChannelId(3)));
+        assert_eq!(m.kind, MetricKind::ChannelLatency);
+        let m = Measurement::task_cpu(VertexId(1), 0.4);
+        assert_eq!(m.element, ElementKey::Vertex(VertexId(1)));
+        assert_eq!(m.value, 0.4);
+    }
+}

@@ -1,0 +1,493 @@
+//! Distributed QoS management setup (§3.4.2): Algorithms 1–3.
+//!
+//! `compute_qos_setup` is the master-side `ComputeQoSSetup(JG, JC)`:
+//! for every constrained path it picks an anchor job vertex
+//! (`GetAnchorVertex`, Algorithm 3), partitions the anchor's runtime
+//! vertices by worker (`PartitionByWorker`), expands each partition to a
+//! runtime subgraph (`GraphExpand`), and merges the resulting
+//! `(worker, subgraph)` allocations (Algorithm 1).  Reporter assignments
+//! are derived from the manager allocations ("QoS Reporter Setup").
+
+use super::reporter::Interest;
+use super::sample::{ElementKey, MetricKind};
+use super::subgraph::{ChainSpec, ChannelRef, ConstraintParams, Layer, QosSubgraph, VertexRef};
+use crate::graph::constraint::JobConstraint;
+use crate::graph::ids::{JobVertexId, VertexId, WorkerId};
+use crate::graph::job::JobGraph;
+use crate::graph::runtime::RuntimeGraph;
+use crate::graph::sequence::JobSeqElem;
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, HashSet};
+
+/// Per-worker reporter duties.
+#[derive(Debug, Clone, Default)]
+pub struct ReporterAssignment {
+    /// (element, metric) -> managers interested.
+    pub interest: Interest,
+}
+
+/// The complete allocation computed by the master.
+#[derive(Debug, Default)]
+pub struct QosSetup {
+    /// Worker -> the manager subgraph it hosts.
+    pub managers: BTreeMap<WorkerId, QosSubgraph>,
+    /// Worker -> its reporter duties.
+    pub reporters: BTreeMap<WorkerId, ReporterAssignment>,
+}
+
+impl QosSetup {
+    /// Total number of runtime constraints covered by all managers.
+    pub fn covered_sequences(&self) -> u128 {
+        self.managers.values().map(|g| g.sequence_count()).sum()
+    }
+}
+
+/// Algorithm 3: `GetAnchorVertex(path)` — among the sequence's job
+/// vertices, keep those with the highest worker count, then pick the one
+/// whose cheapest incident (in-path) job edge has the fewest runtime
+/// channels.
+pub fn get_anchor_vertex(
+    job: &JobGraph,
+    rg: &RuntimeGraph,
+    constraint: &JobConstraint,
+) -> Result<JobVertexId> {
+    let vertices = constraint.sequence.vertices();
+    if vertices.is_empty() {
+        bail!("constraint sequence contains no job vertices (pure-channel constraints unsupported)");
+    }
+    let cnt_workers = |jv: JobVertexId| -> usize {
+        let mut workers: HashSet<WorkerId> =
+            rg.members(jv).iter().map(|&v| rg.worker(v)).collect();
+        let n = workers.len();
+        workers.clear();
+        n
+    };
+    let max_work = vertices.iter().map(|&jv| cnt_workers(jv)).max().unwrap();
+    let candidates: Vec<JobVertexId> = vertices
+        .iter()
+        .copied()
+        .filter(|&jv| cnt_workers(jv) == max_work)
+        .collect();
+
+    // cntEdge(jv, path): the in-path incident job edge with the lowest
+    // runtime-edge count.
+    let seq_edges: HashSet<_> = constraint.sequence.edges().into_iter().collect();
+    let cnt_edge = |jv: JobVertexId| -> u64 {
+        job.edges
+            .iter()
+            .filter(|e| seq_edges.contains(&e.id) && (e.from == jv || e.to == jv))
+            .map(|e| job.edge_channel_count(e))
+            .min()
+            .unwrap_or(u64::MAX)
+    };
+    let min_edge = candidates.iter().map(|&jv| cnt_edge(jv)).min().unwrap();
+    Ok(candidates
+        .into_iter()
+        .find(|&jv| cnt_edge(jv) == min_edge)
+        .unwrap())
+}
+
+fn vertex_ref(job: &JobGraph, rg: &RuntimeGraph, v: VertexId) -> VertexRef {
+    let rv = rg.vertex(v);
+    let jv = job.vertex(rv.job_vertex);
+    VertexRef {
+        id: v,
+        job_vertex: rv.job_vertex,
+        worker: rv.worker,
+        in_degree: rg.in_channels(v).len() as u32,
+        out_degree: rg.out_channels(v).len() as u32,
+        pinned: jv.pin_unchainable,
+        cpu_estimate: jv.cpu_utilization,
+    }
+}
+
+/// `GraphExpand`: expand one anchor runtime vertex to the layered chain
+/// covering the constrained sequence through it, "traversing the runtime
+/// graph both forwards and backwards" from the anchor — restricted to the
+/// sequence's positions, which keeps the subgraph minimal
+/// (`vertices(constr(G_i)) = V_i`).
+fn graph_expand(
+    job: &JobGraph,
+    rg: &RuntimeGraph,
+    constraint: &JobConstraint,
+    constraint_idx: usize,
+    anchor_pos: usize,
+    anchor: VertexId,
+) -> ChainSpec {
+    let elems = &constraint.sequence.elems;
+    let n = elems.len();
+    let mut layers: Vec<Option<Layer>> = vec![None; n];
+    layers[anchor_pos] = Some(Layer::Vertices(vec![vertex_ref(job, rg, anchor)]));
+
+    // Backwards.
+    let mut frontier: Vec<VertexId> = vec![anchor];
+    for pos in (0..anchor_pos).rev() {
+        match elems[pos] {
+            JobSeqElem::Edge(je) => {
+                let fset: HashSet<VertexId> = frontier.iter().copied().collect();
+                let mut channels = Vec::new();
+                let mut next = HashSet::new();
+                for &v in &fset {
+                    for &cid in rg.in_channels(v) {
+                        let c = rg.channel(cid);
+                        if c.job_edge == je {
+                            channels.push(ChannelRef {
+                                id: cid,
+                                from: c.from,
+                                to: c.to,
+                                sender_worker: rg.worker(c.from),
+                            });
+                            next.insert(c.from);
+                        }
+                    }
+                }
+                layers[pos] = Some(Layer::Channels(channels));
+                frontier = next.into_iter().collect();
+            }
+            JobSeqElem::Vertex(_) => {
+                let mut vs: Vec<VertexRef> =
+                    frontier.iter().map(|&v| vertex_ref(job, rg, v)).collect();
+                vs.sort_by_key(|v| v.id);
+                layers[pos] = Some(Layer::Vertices(vs));
+            }
+        }
+    }
+
+    // Forwards.
+    let mut frontier: Vec<VertexId> = vec![anchor];
+    for (pos, elem) in elems.iter().enumerate().skip(anchor_pos + 1) {
+        match elem {
+            JobSeqElem::Edge(je) => {
+                let fset: HashSet<VertexId> = frontier.iter().copied().collect();
+                let mut channels = Vec::new();
+                let mut next = HashSet::new();
+                for &v in &fset {
+                    for &cid in rg.out_channels(v) {
+                        let c = rg.channel(cid);
+                        if c.job_edge == *je {
+                            channels.push(ChannelRef {
+                                id: cid,
+                                from: c.from,
+                                to: c.to,
+                                sender_worker: rg.worker(c.from),
+                            });
+                            next.insert(c.to);
+                        }
+                    }
+                }
+                layers[pos] = Some(Layer::Channels(channels));
+                frontier = next.into_iter().collect();
+            }
+            JobSeqElem::Vertex(_) => {
+                let mut vs: Vec<VertexRef> =
+                    frontier.iter().map(|&v| vertex_ref(job, rg, v)).collect();
+                vs.sort_by_key(|v| v.id);
+                layers[pos] = Some(Layer::Vertices(vs));
+            }
+        }
+    }
+
+    ChainSpec {
+        constraint: constraint_idx,
+        layers: layers.into_iter().map(|l| l.unwrap()).collect(),
+    }
+}
+
+/// Algorithm 2: `GetQoSManagers(path)` — partition the anchor job
+/// vertex's runtime members by worker and expand each group.
+fn get_qos_managers(
+    job: &JobGraph,
+    rg: &RuntimeGraph,
+    constraint: &JobConstraint,
+    constraint_idx: usize,
+) -> Result<Vec<(WorkerId, QosSubgraph)>> {
+    let anchor_jv = get_anchor_vertex(job, rg, constraint)?;
+    let anchor_pos = constraint
+        .sequence
+        .elems
+        .iter()
+        .position(|e| matches!(e, JobSeqElem::Vertex(jv) if *jv == anchor_jv))
+        .expect("anchor vertex is in the sequence");
+
+    // PartitionByWorker(anchor).
+    let mut partition: BTreeMap<WorkerId, Vec<VertexId>> = BTreeMap::new();
+    for &v in rg.members(anchor_jv) {
+        partition.entry(rg.worker(v)).or_default().push(v);
+    }
+
+    let mut out = Vec::new();
+    for (worker, anchors) in partition {
+        let mut sub = QosSubgraph {
+            constraints: vec![ConstraintParams {
+                max_latency: constraint.max_latency,
+                window: constraint.window,
+            }],
+            chains: Vec::new(),
+        };
+        for anchor in anchors {
+            sub.chains.push(graph_expand(
+                job,
+                rg,
+                constraint,
+                constraint_idx,
+                anchor_pos,
+                anchor,
+            ));
+        }
+        // All chains of this allocation reference constraint index 0 of
+        // the local subgraph; `merge` rebases on merge.
+        for c in &mut sub.chains {
+            c.constraint = 0;
+        }
+        out.push((worker, sub));
+    }
+    let _ = constraint_idx;
+    Ok(out)
+}
+
+/// Algorithm 1: `ComputeQoSSetup(JG, JC)` plus reporter setup.
+pub fn compute_qos_setup(
+    job: &JobGraph,
+    rg: &RuntimeGraph,
+    constraints: &[JobConstraint],
+) -> Result<QosSetup> {
+    let mut setup = QosSetup::default();
+    for (ci, jc) in constraints.iter().enumerate() {
+        jc.validate(job)?;
+        for (worker, sub) in get_qos_managers(job, rg, jc, ci)? {
+            match setup.managers.get_mut(&worker) {
+                Some(existing) => existing.merge(sub),
+                None => {
+                    setup.managers.insert(worker, sub);
+                }
+            }
+        }
+    }
+
+    // QoS Reporter setup: "For each constrained runtime vertex v there is
+    // at least one QoS Manager with v in its subgraph.  The master node
+    // tracks this accordingly and instructs the QoS Reporter to send
+    // measurement values of the running task to all interested QoS
+    // Managers.  Channels are tracked in an analogous way."
+    for (&mgr_worker, sub) in &setup.managers {
+        for chain in &sub.chains {
+            for layer in &chain.layers {
+                match layer {
+                    Layer::Vertices(vs) => {
+                        for v in vs {
+                            for kind in [MetricKind::TaskLatency, MetricKind::TaskCpu] {
+                                add_interest(
+                                    &mut setup.reporters,
+                                    v.worker,
+                                    ElementKey::Vertex(v.id),
+                                    kind,
+                                    mgr_worker,
+                                );
+                            }
+                        }
+                    }
+                    Layer::Channels(cs) => {
+                        for c in cs {
+                            // Channel latency: measured at the receiver.
+                            add_interest(
+                                &mut setup.reporters,
+                                rg.worker(c.to),
+                                ElementKey::Channel(c.id),
+                                MetricKind::ChannelLatency,
+                                mgr_worker,
+                            );
+                            // Output buffer lifetime: measured at the sender.
+                            add_interest(
+                                &mut setup.reporters,
+                                c.sender_worker,
+                                ElementKey::Channel(c.id),
+                                MetricKind::OutputBufferLifetime,
+                                mgr_worker,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(setup)
+}
+
+fn add_interest(
+    reporters: &mut BTreeMap<WorkerId, ReporterAssignment>,
+    reporter_worker: WorkerId,
+    element: ElementKey,
+    kind: MetricKind,
+    manager: WorkerId,
+) {
+    let managers = reporters
+        .entry(reporter_worker)
+        .or_default()
+        .interest
+        .entry((element, kind))
+        .or_default();
+    if !managers.contains(&manager) {
+        managers.push(manager);
+    }
+}
+
+/// Helper for invariant checks and tests: the set of (vertex, channel)
+/// elements each manager monitors.
+pub fn manager_elements(sub: &QosSubgraph) -> (HashSet<VertexId>, HashSet<crate::graph::ids::ChannelId>) {
+    let mut vs = HashSet::new();
+    let mut cs = HashSet::new();
+    for chain in &sub.chains {
+        vs.extend(chain.vertices().map(|v| v.id));
+        cs.extend(chain.channels().map(|c| c.id));
+    }
+    (vs, cs)
+}
+
+/// Build a [`super::reporter::QosReporter`]-compatible interest map from
+/// the assignment (identity helper; keeps callers uniform).
+pub fn interest_of(assignment: &ReporterAssignment) -> Interest {
+    assignment.interest.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::job::DistributionPattern;
+    use crate::graph::sequence::JobSequence;
+    use crate::util::time::Duration;
+
+    /// The paper's evaluation job shape (§4.1.1) at parallelism `m` on
+    /// `n` workers.
+    fn video_job(m: u32, n: u32) -> (JobGraph, RuntimeGraph, JobConstraint) {
+        let mut g = JobGraph::new();
+        let p = g.add_vertex("Partitioner", m);
+        let d = g.add_vertex("Decoder", m);
+        let mg = g.add_vertex("Merger", m);
+        let o = g.add_vertex("Overlay", m);
+        let e = g.add_vertex("Encoder", m);
+        let r = g.add_vertex("RTPServer", m);
+        g.connect(p, d, DistributionPattern::AllToAll);
+        g.connect(d, mg, DistributionPattern::Pointwise);
+        g.connect(mg, o, DistributionPattern::Pointwise);
+        g.connect(o, e, DistributionPattern::Pointwise);
+        g.connect(e, r, DistributionPattern::AllToAll);
+        g.validate().unwrap();
+        let rg = RuntimeGraph::expand(&g, n).unwrap();
+        let seq = JobSequence::along_path(&g, &[d, mg, o, e], Some(p), Some(r)).unwrap();
+        let jc = JobConstraint::new(seq, Duration::from_millis(300), Duration::from_secs(15));
+        (g, rg, jc)
+    }
+
+    #[test]
+    fn anchor_is_first_min_edge_vertex() {
+        let (g, rg, jc) = video_job(8, 4);
+        // All sequence vertices span all 4 workers; D's cheapest in-path
+        // edge (D->M pointwise, m channels) ties with M/O/E, so the first
+        // candidate (Decoder) wins.
+        let anchor = get_anchor_vertex(&g, &rg, &jc).unwrap();
+        assert_eq!(g.vertex(anchor).name, "Decoder");
+    }
+
+    #[test]
+    fn one_manager_per_worker_hosting_anchor_members() {
+        let (g, rg, jc) = video_job(8, 4);
+        let setup = compute_qos_setup(&g, &rg, &[jc]).unwrap();
+        assert_eq!(setup.managers.len(), 4);
+        // Each manager has m/n = 2 chains (one per local anchor vertex).
+        for sub in setup.managers.values() {
+            assert_eq!(sub.chains.len(), 2);
+        }
+    }
+
+    #[test]
+    fn managers_cover_all_constraints_exactly_once() {
+        let (g, rg, jc) = video_job(6, 3);
+        let total = jc.sequence.count_runtime(&g, &rg);
+        let setup = compute_qos_setup(&g, &rg, &[jc]).unwrap();
+        // Union of covered sequences == all runtime constraints, and the
+        // per-manager sets are disjoint because every sequence passes
+        // exactly one anchor vertex: counts must add up exactly.
+        assert_eq!(setup.covered_sequences(), total);
+    }
+
+    #[test]
+    fn subgraphs_are_minimal() {
+        let (g, rg, jc) = video_job(6, 3);
+        let constrained: HashSet<JobVertexId> =
+            jc.sequence.vertices().into_iter().collect();
+        let setup = compute_qos_setup(&g, &rg, &[jc]).unwrap();
+        for sub in setup.managers.values() {
+            let (vs, _) = manager_elements(sub);
+            for v in vs {
+                assert!(
+                    constrained.contains(&rg.vertex(v).job_vertex),
+                    "subgraph contains unconstrained vertex {v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chain_shape_matches_topology() {
+        let (g, rg, jc) = video_job(8, 4);
+        let setup = compute_qos_setup(&g, &rg, &[jc.clone()]).unwrap();
+        let sub = setup.managers.values().next().unwrap();
+        let chain = &sub.chains[0];
+        assert_eq!(chain.layers.len(), 9);
+        // e1: all-to-all into the anchor decoder -> m channels.
+        assert_eq!(chain.layers[0].len(), 8);
+        // D, e2, M, e3, O, e4, E: pointwise chain -> single elements.
+        for i in 1..8 {
+            assert_eq!(chain.layers[i].len(), 1, "layer {i}");
+        }
+        // e5: all-to-all out of the encoder -> m channels.
+        assert_eq!(chain.layers[8].len(), 8);
+        // Sequences through one anchor = m * 1 * m = 64; per manager
+        // chains = m/n = 2 -> 128; times n=4 managers = m^3 = 512 total.
+        assert_eq!(chain.sequence_count(), 64);
+        let _ = g;
+    }
+
+    #[test]
+    fn reporter_interest_routes_metrics_to_the_right_workers() {
+        let (g, rg, jc) = video_job(4, 2);
+        let setup = compute_qos_setup(&g, &rg, &[jc]).unwrap();
+        // Every worker hosts constrained vertices -> every worker reports.
+        assert_eq!(setup.reporters.len(), 2);
+        for (w, assignment) in &setup.reporters {
+            for ((elem, kind), managers) in &assignment.interest {
+                assert!(!managers.is_empty());
+                match (elem, kind) {
+                    (ElementKey::Vertex(v), _) => {
+                        assert_eq!(rg.worker(*v), *w, "task metrics are local")
+                    }
+                    (ElementKey::Channel(c), MetricKind::ChannelLatency) => {
+                        assert_eq!(rg.worker(rg.channel(*c).to), *w, "latency at receiver")
+                    }
+                    (ElementKey::Channel(c), MetricKind::OutputBufferLifetime) => {
+                        assert_eq!(rg.worker(rg.channel(*c).from), *w, "oblt at sender")
+                    }
+                    other => panic!("unexpected interest {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merging_two_constraints_on_same_workers() {
+        let (g, rg, jc) = video_job(4, 2);
+        let jc2 = JobConstraint::new(
+            jc.sequence.clone(),
+            Duration::from_millis(500),
+            Duration::from_secs(5),
+        );
+        let setup = compute_qos_setup(&g, &rg, &[jc.clone(), jc2]).unwrap();
+        for sub in setup.managers.values() {
+            assert_eq!(sub.constraints.len(), 2);
+            // Chains reference both constraints after the rebase.
+            let referenced: HashSet<usize> =
+                sub.chains.iter().map(|c| c.constraint).collect();
+            assert_eq!(referenced, HashSet::from([0, 1]));
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! The QoS Manager's runtime subgraph (§3.4.1): a self-contained slice of
+//! the runtime graph that "both stores the measurement data and can be
+//! used to efficiently enumerate violated runtime constraints".
+//!
+//! Rather than materialising the (up to `m^3`) runtime sequences, the
+//! subgraph keeps one [`ChainSpec`] per anchor vertex: the layered
+//! expansion of the constrained job sequence through that anchor.  Each
+//! layer holds the runtime elements at one sequence position; evaluation
+//! is a max-plus dynamic program over the layers (O(channels) instead of
+//! O(sequences)), which is exactly the efficiency the paper's distributed
+//! scheme is after.
+
+use crate::graph::ids::{ChannelId, JobVertexId, VertexId, WorkerId};
+use crate::util::time::Duration;
+
+/// Vertex metadata the manager needs for countermeasure preconditions,
+/// shipped with the subgraph so managers never consult the master.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VertexRef {
+    pub id: VertexId,
+    pub job_vertex: JobVertexId,
+    pub worker: WorkerId,
+    /// Total in/out degree in the *full* runtime graph (chaining requires
+    /// exactly one in and one out channel for interior tasks, §3.5.2).
+    pub in_degree: u32,
+    pub out_degree: u32,
+    /// §3.6 annotation: never chain (preserves materialisation points).
+    pub pinned: bool,
+    /// Static profiling estimate of CPU utilisation (refined at runtime
+    /// by `TaskCpu` measurements).
+    pub cpu_estimate: f64,
+}
+
+/// Channel endpoints, shipped with the subgraph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChannelRef {
+    pub id: ChannelId,
+    pub from: VertexId,
+    pub to: VertexId,
+    /// Worker of the sending side (owns the output buffer).
+    pub sender_worker: WorkerId,
+}
+
+/// One sequence position of a chain: the runtime elements a sequence may
+/// pass through at this position.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    Vertices(Vec<VertexRef>),
+    Channels(Vec<ChannelRef>),
+}
+
+impl Layer {
+    pub fn len(&self) -> usize {
+        match self {
+            Layer::Vertices(v) => v.len(),
+            Layer::Channels(c) => c.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The layered expansion of one constrained sequence through one anchor
+/// vertex (Algorithm 2's `GraphExpand`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainSpec {
+    /// Index into [`QosSubgraph::constraints`].
+    pub constraint: usize,
+    pub layers: Vec<Layer>,
+}
+
+impl ChainSpec {
+    /// All vertices across layers.
+    pub fn vertices(&self) -> impl Iterator<Item = &VertexRef> {
+        self.layers.iter().flat_map(|l| match l {
+            Layer::Vertices(v) => v.as_slice(),
+            _ => &[],
+        })
+    }
+
+    /// All channels across layers.
+    pub fn channels(&self) -> impl Iterator<Item = &ChannelRef> {
+        self.layers.iter().flat_map(|l| match l {
+            Layer::Channels(c) => c.as_slice(),
+            _ => &[],
+        })
+    }
+
+    /// Number of runtime sequences this chain covers (product of layer
+    /// branch factors, respecting connectivity).
+    pub fn sequence_count(&self) -> u128 {
+        // DP counting identical in structure to JobSequence::count_runtime
+        // but restricted to the chain's members.
+        let mut counts: std::collections::HashMap<VertexId, u128> = Default::default();
+        let mut edge_total: u128 = 0;
+        for (i, layer) in self.layers.iter().enumerate() {
+            match layer {
+                Layer::Vertices(vs) => {
+                    if i == 0 {
+                        for v in vs {
+                            counts.insert(v.id, 1);
+                        }
+                    } else {
+                        counts.retain(|id, _| vs.iter().any(|v| v.id == *id));
+                    }
+                }
+                Layer::Channels(cs) => {
+                    let mut next: std::collections::HashMap<VertexId, u128> = Default::default();
+                    edge_total = 0;
+                    for c in cs {
+                        let w = if i == 0 { 1 } else { *counts.get(&c.from).unwrap_or(&0) };
+                        if w > 0 {
+                            *next.entry(c.to).or_insert(0) += w;
+                            edge_total += w;
+                        }
+                    }
+                    counts = next;
+                }
+            }
+        }
+        match self.layers.last() {
+            Some(Layer::Channels(_)) => edge_total,
+            _ => counts.values().sum(),
+        }
+    }
+}
+
+/// The constraint parameters a chain is checked against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConstraintParams {
+    pub max_latency: Duration,
+    pub window: Duration,
+}
+
+/// The complete subgraph assigned to one QoS Manager.
+#[derive(Debug, Clone, Default)]
+pub struct QosSubgraph {
+    pub constraints: Vec<ConstraintParams>,
+    pub chains: Vec<ChainSpec>,
+}
+
+impl QosSubgraph {
+    /// Merge another subgraph into this one (Algorithm 1, line 5).
+    /// Constraint indices of `other` are rebased.
+    pub fn merge(&mut self, other: QosSubgraph) {
+        let base = self.constraints.len();
+        self.constraints.extend(other.constraints);
+        for mut chain in other.chains {
+            chain.constraint += base;
+            self.chains.push(chain);
+        }
+    }
+
+    /// Distinct vertices monitored by this subgraph.
+    pub fn vertex_count(&self) -> usize {
+        let mut set = std::collections::HashSet::new();
+        for ch in &self.chains {
+            set.extend(ch.vertices().map(|v| v.id));
+        }
+        set.len()
+    }
+
+    /// Distinct channels monitored by this subgraph.
+    pub fn channel_count(&self) -> usize {
+        let mut set = std::collections::HashSet::new();
+        for ch in &self.chains {
+            set.extend(ch.channels().map(|c| c.id));
+        }
+        set.len()
+    }
+
+    /// Total runtime sequences covered.
+    pub fn sequence_count(&self) -> u128 {
+        self.chains.iter().map(|c| c.sequence_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vref(id: u32) -> VertexRef {
+        VertexRef {
+            id: VertexId(id),
+            job_vertex: JobVertexId(0),
+            worker: WorkerId(0),
+            in_degree: 1,
+            out_degree: 1,
+            pinned: false,
+            cpu_estimate: 0.1,
+        }
+    }
+
+    fn cref(id: u32, from: u32, to: u32) -> ChannelRef {
+        ChannelRef {
+            id: ChannelId(id),
+            from: VertexId(from),
+            to: VertexId(to),
+            sender_worker: WorkerId(0),
+        }
+    }
+
+    /// (e_in x2) -> v10 -> e -> v11 -> (e_out x3): 2*3 = 6 sequences.
+    fn chain() -> ChainSpec {
+        ChainSpec {
+            constraint: 0,
+            layers: vec![
+                Layer::Channels(vec![cref(0, 0, 10), cref(1, 1, 10)]),
+                Layer::Vertices(vec![vref(10)]),
+                Layer::Channels(vec![cref(2, 10, 11)]),
+                Layer::Vertices(vec![vref(11)]),
+                Layer::Channels(vec![cref(3, 11, 20), cref(4, 11, 21), cref(5, 11, 22)]),
+            ],
+        }
+    }
+
+    #[test]
+    fn sequence_count_respects_connectivity() {
+        assert_eq!(chain().sequence_count(), 6);
+    }
+
+    #[test]
+    fn vertex_and_channel_iters() {
+        let c = chain();
+        assert_eq!(c.vertices().count(), 2);
+        assert_eq!(c.channels().count(), 6);
+    }
+
+    #[test]
+    fn merge_rebases_constraints() {
+        let mut a = QosSubgraph {
+            constraints: vec![ConstraintParams {
+                max_latency: Duration::from_millis(300),
+                window: Duration::from_secs(15),
+            }],
+            chains: vec![chain()],
+        };
+        let b = QosSubgraph {
+            constraints: vec![ConstraintParams {
+                max_latency: Duration::from_millis(100),
+                window: Duration::from_secs(5),
+            }],
+            chains: vec![chain()],
+        };
+        a.merge(b);
+        assert_eq!(a.constraints.len(), 2);
+        assert_eq!(a.chains[1].constraint, 1);
+        assert_eq!(a.sequence_count(), 12);
+        assert_eq!(a.vertex_count(), 2);
+        assert_eq!(a.channel_count(), 6);
+    }
+}

@@ -1,0 +1,93 @@
+//! Artifact registry + executor pool: compile every stage once at
+//! startup, then execute with plain `f32` buffers on the hot path.
+
+use crate::util::manifest::{Manifest, StageSpec};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One compiled pipeline stage.
+pub struct StageExecutor {
+    pub spec: StageSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl StageExecutor {
+    /// Execute the stage on `inputs` (one flat `f32` slice per declared
+    /// input shape).  Returns the flattened `f32` output.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        if inputs.len() != self.spec.input_shapes.len() {
+            bail!(
+                "stage {}: got {} inputs, expected {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.input_shapes.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&self.spec.input_shapes) {
+            let want: usize = shape.iter().product();
+            if buf.len() != want {
+                bail!(
+                    "stage {}: input has {} elements, shape {:?} wants {}",
+                    self.spec.name,
+                    buf.len(),
+                    shape,
+                    want
+                );
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Total expected output element count is data-dependent; helper for
+    /// the known stage geometry.
+    pub fn input_elems(&self) -> usize {
+        self.spec.input_elems()
+    }
+}
+
+/// All compiled stages of the artifact directory.
+pub struct StageRuntime {
+    pub manifest: Manifest,
+    stages: BTreeMap<String, StageExecutor>,
+}
+
+impl StageRuntime {
+    /// Load `manifest.txt` from `dir` and compile every stage on the
+    /// PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<StageRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut stages = BTreeMap::new();
+        for (name, spec) in &manifest.stages {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .context("artifact path not valid UTF-8")?,
+            )
+            .with_context(|| format!("parsing HLO text for stage {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling stage {name}"))?;
+            stages.insert(name.clone(), StageExecutor { spec: spec.clone(), exe });
+        }
+        Ok(StageRuntime { manifest, stages })
+    }
+
+    pub fn stage(&self, name: &str) -> Result<&StageExecutor> {
+        self.stages
+            .get(name)
+            .with_context(|| format!("stage {name:?} not loaded"))
+    }
+
+    pub fn stage_names(&self) -> impl Iterator<Item = &str> {
+        self.stages.keys().map(|s| s.as_str())
+    }
+}

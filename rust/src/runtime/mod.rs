@@ -1,0 +1,14 @@
+//! PJRT runtime bridge: loads the AOT-compiled HLO-text artifacts
+//! produced by `python/compile/aot.py` and executes them from the Rust
+//! request path.  Python never runs at request time.
+//!
+//! Pattern (smoke-verified in /opt/xla-example/load_hlo):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format — jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that the crate's XLA (0.5.1) rejects; the text
+//! parser reassigns ids.
+
+pub mod executor;
+
+pub use executor::{StageExecutor, StageRuntime};

@@ -1,0 +1,833 @@
+//! The discrete-event streaming cluster: workers, task threads, output
+//! buffers, input queues, NICs — plus the full distributed QoS machinery
+//! (reporters, managers, countermeasures) running *in* the simulation
+//! with control-plane delays, exactly as it would on a real cluster.
+
+use super::events::EventQueue;
+use super::flow::{Buffer, ItemRec, OutBufferState};
+use super::net::Nic;
+use super::task::{QueuedBuffer, Route, Semantics, TaskSpec, TaskState};
+use crate::actions::arbiter::{BufferUpdateArbiter, Verdict};
+use crate::actions::chaining::DrainPolicy;
+use crate::actions::Action;
+use crate::config::EngineConfig;
+use crate::graph::constraint::JobConstraint;
+use crate::graph::ids::{ChannelId, JobVertexId, VertexId, WorkerId};
+use crate::graph::job::JobGraph;
+use crate::graph::runtime::RuntimeGraph;
+use crate::qos::manager::QosManager;
+use crate::qos::reporter::QosReporter;
+use crate::qos::sample::{ElementKey, Measurement, MetricKind, Report};
+use crate::qos::setup::compute_qos_setup;
+use crate::util::rng::Rng;
+use crate::util::time::{Duration, Time};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// External stream feeding a source task (e.g. one camera feeding its
+/// Partitioner over TCP).
+#[derive(Debug, Clone, Copy)]
+pub struct SourceSpec {
+    /// Routing key carried by this stream's items (the stream id).
+    pub key: u32,
+    pub target: JobVertexId,
+    pub target_subtask: u32,
+    /// Inter-item interval (e.g. 1/fps).
+    pub interval: Duration,
+    pub bytes: u64,
+    /// Phase offset of the first item.
+    pub offset: Duration,
+    /// TCP-style flow control: when the source worker's egress backlog
+    /// exceeds this bound, the source is throttled to the drain rate.
+    /// `None` models an unthrottled producer.
+    pub throttle: Option<Duration>,
+    /// Items emitted per tick.  The clock has microsecond resolution, so
+    /// rates above 1e6 items/s are represented as `batch` items per
+    /// >=1 us interval (used by the Fig. 2 sweep's highest decades).
+    pub batch: u32,
+}
+
+/// Simulator events.
+#[derive(Debug)]
+enum Ev {
+    /// One external packet arrives at its source task.
+    Packet { source: u32 },
+    /// A flushed buffer arrives at the receiving task's input queue.
+    Deliver { buffer: Buffer },
+    /// A task (or chain) thread finished its current buffer.
+    TaskDone { vertex: u32 },
+    ReporterFlush { worker: u32 },
+    ReportArrive { report: Report },
+    ManagerTick { worker: u32 },
+    CpuSample { worker: u32 },
+    ApplyAction { action: Action },
+}
+
+/// Counters and ground-truth statistics the harness reads out.
+#[derive(Debug, Default, Clone)]
+pub struct SimStats {
+    pub items_ingested: u64,
+    pub items_delivered: u64,
+    pub bytes_on_wire: u64,
+    pub buffers_flushed: u64,
+    /// Ground-truth end-to-end latency samples (µs) at sinks (reservoir).
+    pub e2e_samples: Vec<f64>,
+    pub e2e_count: u64,
+    pub e2e_sum_us: f64,
+    pub e2e_max_us: f64,
+    pub dropped_on_chain: u64,
+    pub unresolvable_notices: u64,
+    pub buffer_size_updates: u64,
+    pub chains_established: u64,
+    pub events_processed: u64,
+}
+
+const E2E_RESERVOIR: usize = 100_000;
+
+/// Hooks for experiment harnesses (time series collection).
+pub trait SimObserver {
+    /// Called once per observer interval with the current virtual time.
+    fn sample(&mut self, cluster: &mut SimCluster, now: Time);
+}
+
+/// The simulated cluster.
+pub struct SimCluster {
+    pub job: JobGraph,
+    pub rg: RuntimeGraph,
+    pub cfg: EngineConfig,
+    sources: Vec<SourceSpec>,
+    tasks: Vec<TaskState>,
+    out_bufs: Vec<OutBufferState>,
+    nics: Vec<Nic>,
+    /// Per-worker NTP offset (µs, signed).
+    skew_us: Vec<i64>,
+    reporters: BTreeMap<WorkerId, QosReporter>,
+    pub(crate) managers: BTreeMap<WorkerId, QosManager>,
+    arbiters: BTreeMap<WorkerId, BufferUpdateArbiter>,
+    /// Fast monitored-element lookup (hot path).
+    chan_latency_monitored: Vec<bool>,
+    chan_oblt_monitored: Vec<bool>,
+    vertex_monitored: Vec<bool>,
+    /// Dense per-channel / per-vertex sampling deadlines (hot path; a
+    /// HashMap-based gate costs a hash per emitted item).
+    next_tag_at: Vec<Time>,
+    next_task_sample_at: Vec<Time>,
+    queue: EventQueue<Ev>,
+    rng: Rng,
+    /// Chained execution groups: member tasks share one thread.
+    chain_members: Vec<Vec<VertexId>>,
+    chain_busy: Vec<Time>,
+    chain_sched: Vec<bool>,
+    /// Sources stop emitting at this time.
+    source_end: Time,
+    pub stats: SimStats,
+}
+
+impl SimCluster {
+    /// Build a cluster for `job` expanded as `rg`, with QoS `constraints`
+    /// in place, per-job-vertex task `specs`, and external `sources`.
+    pub fn new(
+        job: JobGraph,
+        rg: RuntimeGraph,
+        constraints: &[JobConstraint],
+        specs: Vec<TaskSpec>, // consumed into per-task state
+        sources: Vec<SourceSpec>,
+        cfg: EngineConfig,
+    ) -> Result<SimCluster> {
+        assert_eq!(specs.len(), job.vertices.len(), "one TaskSpec per job vertex");
+        let mut rng = Rng::new(cfg.seed);
+
+        let setup = compute_qos_setup(&job, &rg, constraints)?;
+        let mut chan_latency_monitored = vec![false; rg.channels.len()];
+        let mut chan_oblt_monitored = vec![false; rg.channels.len()];
+        let mut vertex_monitored = vec![false; rg.vertices.len()];
+        let mut reporters = BTreeMap::new();
+        for (&w, assignment) in &setup.reporters {
+            for (&(elem, kind), _) in &assignment.interest {
+                match (elem, kind) {
+                    (ElementKey::Channel(c), MetricKind::ChannelLatency) => {
+                        chan_latency_monitored[c.index()] = true;
+                    }
+                    (ElementKey::Channel(c), MetricKind::OutputBufferLifetime) => {
+                        chan_oblt_monitored[c.index()] = true;
+                    }
+                    (ElementKey::Vertex(v), _) => {
+                        vertex_monitored[v.index()] = true;
+                    }
+                    _ => {}
+                }
+            }
+            reporters.insert(
+                w,
+                QosReporter::new(w, cfg.measurement_interval, assignment.interest.clone(), &mut rng),
+            );
+        }
+        let managers: BTreeMap<WorkerId, QosManager> = setup
+            .managers
+            .into_iter()
+            .map(|(w, sub)| {
+                (w, QosManager::new(w, sub, cfg.default_buffer_size, cfg.manager))
+            })
+            .collect();
+        let arbiters = managers
+            .keys()
+            .chain(reporters.keys())
+            .map(|&w| (w, BufferUpdateArbiter::new()))
+            .collect();
+
+        let n_channels = rg.channels.len();
+        let n_vertices = rg.vertices.len();
+        let tasks = rg
+            .vertices
+            .iter()
+            .map(|v| TaskState::new(specs[v.job_vertex.index()]))
+            .collect();
+        let out_bufs = (0..rg.channels.len())
+            .map(|_| OutBufferState::new(cfg.default_buffer_size))
+            .collect();
+        let nics = (0..rg.num_workers).map(|_| Nic::new(&cfg.cluster)).collect();
+        let max_skew = cfg.cluster.max_clock_skew.as_micros() as i64;
+        let skew_us = (0..rg.num_workers)
+            .map(|_| {
+                if max_skew == 0 {
+                    0
+                } else {
+                    rng.range(0, 2 * max_skew as u64) as i64 - max_skew
+                }
+            })
+            .collect();
+
+
+        let mut cluster = SimCluster {
+            job,
+            rg,
+            cfg,
+
+            sources,
+            tasks,
+            out_bufs,
+            nics,
+            skew_us,
+            reporters,
+            managers,
+            arbiters,
+            chan_latency_monitored,
+            chan_oblt_monitored,
+            vertex_monitored,
+            next_tag_at: vec![Time::ZERO; n_channels],
+            next_task_sample_at: vec![Time::ZERO; n_vertices],
+            queue: EventQueue::new(),
+            rng,
+            chain_members: Vec::new(),
+            chain_busy: Vec::new(),
+            chain_sched: Vec::new(),
+            source_end: Time(u64::MAX),
+            stats: SimStats::default(),
+        };
+        cluster.schedule_initial();
+        Ok(cluster)
+    }
+
+    fn schedule_initial(&mut self) {
+        for i in 0..self.sources.len() {
+            let at = Time::ZERO + self.sources[i].offset;
+            self.queue.push(at, Ev::Packet { source: i as u32 });
+        }
+        let reporter_deadlines: Vec<(WorkerId, Time)> = self
+            .reporters
+            .iter()
+            .filter_map(|(&w, r)| r.next_deadline().map(|t| (w, t)))
+            .collect();
+        for (w, t) in reporter_deadlines {
+            self.queue.push(t, Ev::ReporterFlush { worker: w.0 });
+        }
+        let interval = self.cfg.measurement_interval;
+        let mgr_workers: Vec<WorkerId> = self.managers.keys().copied().collect();
+        for w in mgr_workers {
+            // Spread manager ticks uniformly over the first interval.
+            let offset = Duration::from_micros(self.rng.below(interval.as_micros().max(1)));
+            self.queue.push(Time::ZERO + interval + offset, Ev::ManagerTick { worker: w.0 });
+        }
+        for w in 0..self.rg.num_workers {
+            self.queue.push(Time::ZERO + interval, Ev::CpuSample { worker: w });
+        }
+    }
+
+    /// Virtual time.
+    pub fn now(&self) -> Time {
+        self.queue.now()
+    }
+
+    /// Stop external sources from emitting past `t`.
+    pub fn stop_sources_at(&mut self, t: Time) {
+        self.source_end = t;
+    }
+
+    /// Run until virtual time `until`, with an optional observer sampled
+    /// every `observe_every`.  Sources keep producing across successive
+    /// `run` calls (bound them explicitly with [`Self::stop_sources_at`]).
+    pub fn run(
+        &mut self,
+        until: Duration,
+        mut observer: Option<(&mut dyn SimObserver, Duration)>,
+    ) {
+        let end = Time::ZERO + until;
+        let mut next_obs = observer
+            .as_ref()
+            .map(|(_, every)| Time::ZERO + *every)
+            .unwrap_or(Time(u64::MAX));
+        while let Some(t) = self.queue.peek_time() {
+            if t > end {
+                break;
+            }
+            // Observer runs on time boundaries between events.
+            if t >= next_obs {
+                if let Some((obs, every)) = observer.as_mut() {
+                    let every = *every;
+                    let at = next_obs;
+                    (**obs).sample(self, at);
+                    next_obs = at + every;
+                    continue;
+                }
+            }
+            let (now, ev) = self.queue.pop().unwrap();
+            self.stats.events_processed += 1;
+            self.handle(now, ev);
+        }
+    }
+
+    fn handle(&mut self, now: Time, ev: Ev) {
+        match ev {
+            Ev::Packet { source } => self.on_packet(now, source),
+            Ev::Deliver { buffer } => self.on_deliver(now, buffer),
+            Ev::TaskDone { vertex } => self.on_task_done(now, VertexId(vertex)),
+            Ev::ReporterFlush { worker } => self.on_reporter_flush(now, WorkerId(worker)),
+            Ev::ReportArrive { report } => {
+                if let Some(m) = self.managers.get_mut(&report.to_manager) {
+                    m.ingest(&report);
+                }
+            }
+            Ev::ManagerTick { worker } => self.on_manager_tick(now, WorkerId(worker)),
+            Ev::CpuSample { worker } => self.on_cpu_sample(now, WorkerId(worker)),
+            Ev::ApplyAction { action } => self.on_apply(now, action),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Data path
+    // ------------------------------------------------------------------
+
+    fn on_packet(&mut self, now: Time, source: u32) {
+        let s = self.sources[source as usize];
+        let batch = s.batch.max(1);
+        let item = ItemRec::new(s.key, s.bytes, now);
+        let v = self.rg.members(s.target)[s.target_subtask as usize];
+        self.stats.items_ingested += batch as u64;
+        // External ingress: no channel, the items land directly in the
+        // source task's input queue as one buffer.
+        let buffer = Buffer {
+            channel: u32::MAX,
+            items: vec![item; batch as usize],
+            bytes: s.bytes * batch as u64,
+            flushed: now,
+        };
+        self.enqueue_buffer(now, v, buffer);
+        let mut next = now + s.interval.max(Duration::from_micros(1));
+        if let Some(bound) = s.throttle {
+            let worker = self.rg.worker(v);
+            let backlog = self.nics[worker.index()].backlog(now);
+            if backlog > bound {
+                // Pause until the egress backlog drains back to the flow
+                // control bound (TCP window behaviour).
+                next = now + (backlog - bound).max(s.interval);
+            }
+        }
+        if next < self.source_end {
+            self.queue.push(next, Ev::Packet { source });
+        }
+    }
+
+    fn on_deliver(&mut self, now: Time, buffer: Buffer) {
+        let v = self.rg.channel(ChannelId(buffer.channel)).to;
+        self.stats.items_delivered += buffer.items.len() as u64;
+        self.enqueue_buffer(now, v, buffer);
+    }
+
+    fn enqueue_buffer(&mut self, now: Time, v: VertexId, buffer: Buffer) {
+        let t = &mut self.tasks[v.index()];
+        t.queued_bytes += buffer.bytes;
+        t.queue.push_back(QueuedBuffer { buffer, arrived: now });
+        self.try_schedule(now, v);
+    }
+
+    fn try_schedule(&mut self, now: Time, v: VertexId) {
+        let chain = self.tasks[v.index()].chain;
+        match chain {
+            Some(g) => {
+                let g = g as usize;
+                if self.chain_sched[g] {
+                    return;
+                }
+                if self.chain_members[g]
+                    .iter()
+                    .all(|&m| self.tasks[m.index()].queue.is_empty())
+                {
+                    return;
+                }
+                self.chain_sched[g] = true;
+                let at = self.chain_busy[g].max(now);
+                // The head represents the chain thread in TaskDone events.
+                let head = self.chain_members[g][0];
+                self.queue.push(at, Ev::TaskDone { vertex: head.0 });
+            }
+            None => {
+                let t = &mut self.tasks[v.index()];
+                if t.scheduled || t.queue.is_empty() {
+                    return;
+                }
+                let at = t.busy_until.max(now);
+                if at <= now {
+                    // Idle task, work available right now: process inline
+                    // instead of a same-time heap round-trip (the common
+                    // case on the delivery path).
+                    self.plain_task_done(now, v);
+                } else {
+                    t.scheduled = true;
+                    self.queue.push(at, Ev::TaskDone { vertex: v.0 });
+                }
+            }
+        }
+    }
+
+    fn on_task_done(&mut self, now: Time, v: VertexId) {
+        match self.tasks[v.index()].chain {
+            Some(g) => self.chain_task_done(now, g as usize),
+            None => self.plain_task_done(now, v),
+        }
+    }
+
+    fn plain_task_done(&mut self, now: Time, v: VertexId) {
+        // A stale wake-up (e.g. scheduled before this task was chained or
+        // while its frontier moved) must not start work early.
+        if now < self.tasks[v.index()].busy_until {
+            let at = self.tasks[v.index()].busy_until;
+            self.queue.push(at, Ev::TaskDone { vertex: v.0 });
+            return;
+        }
+        self.tasks[v.index()].scheduled = false;
+        let qb = match self.tasks[v.index()].queue.pop_front() {
+            Some(qb) => qb,
+            None => return,
+        };
+        self.tasks[v.index()].queued_bytes -= qb.buffer.bytes;
+        let spent = self.process_buffer(now, v, qb);
+        let t = &mut self.tasks[v.index()];
+        t.busy_until = now + spent;
+        t.busy_accum += spent;
+        if !t.queue.is_empty() {
+            t.scheduled = true;
+            let at = t.busy_until;
+            self.queue.push(at, Ev::TaskDone { vertex: v.0 });
+        }
+    }
+
+    fn chain_task_done(&mut self, now: Time, g: usize) {
+        if now < self.chain_busy[g] {
+            let at = self.chain_busy[g];
+            let head = self.chain_members[g][0];
+            self.queue.push(at, Ev::TaskDone { vertex: head.0 });
+            return;
+        }
+        self.chain_sched[g] = false;
+        // Serve the most-downstream member with a backlog first (drains
+        // pre-chaining queues in pipeline order).
+        let member = self
+            .chain_members[g]
+            .iter()
+            .rev()
+            .copied()
+            .find(|m| !self.tasks[m.index()].queue.is_empty());
+        let v = match member {
+            Some(v) => v,
+            None => return,
+        };
+        let qb = self.tasks[v.index()].queue.pop_front().unwrap();
+        self.tasks[v.index()].queued_bytes -= qb.buffer.bytes;
+        let spent = self.process_buffer(now, v, qb);
+        self.chain_busy[g] = now + spent;
+        if self.chain_members[g]
+            .iter()
+            .any(|&m| !self.tasks[m.index()].queue.is_empty())
+        {
+            self.chain_sched[g] = true;
+            let at = self.chain_busy[g];
+            let head = self.chain_members[g][0];
+            self.queue.push(at, Ev::TaskDone { vertex: head.0 });
+        }
+    }
+
+    /// Process one input buffer at task `v` starting at `now`.  Returns
+    /// the total thread time consumed (including inline chained
+    /// successors).
+    fn process_buffer(&mut self, now: Time, v: VertexId, qb: QueuedBuffer) -> Duration {
+        let mut cursor = Duration::ZERO;
+        let channel = qb.buffer.channel;
+        for item in qb.buffer.items {
+            let enter = now + cursor;
+            // Tag evaluation: channel latency measured just before the
+            // item enters the user code (§3.3).
+            if channel != u32::MAX {
+                if let Some(tag_created) = item.tag() {
+                    self.record_channel_latency(ChannelId(channel), tag_created, enter);
+                }
+            }
+            cursor += self.process_item(enter, v, item, channel != u32::MAX);
+        }
+        cursor
+    }
+
+    /// Run one item through `v`'s user code (and inline through chained
+    /// successors).  Returns thread time consumed.
+    fn process_item(&mut self, enter: Time, v: VertexId, item: ItemRec, measurable: bool) -> Duration {
+        let spec = self.tasks[v.index()].spec;
+        // §3.2.1 task-latency sampling: arm on entry (sources excluded —
+        // task latency is undefined there).
+        if measurable
+            && self.vertex_monitored[v.index()]
+            && self.tasks[v.index()].pending_sample.is_none()
+            && enter >= self.next_task_sample_at[v.index()]
+        {
+            self.next_task_sample_at[v.index()] = enter + self.cfg.measurement_interval;
+            self.tasks[v.index()].pending_sample = Some(enter);
+        }
+        let svc = spec.service;
+        let mut spent = svc;
+        let exit = enter + svc;
+        match spec.semantics {
+            Semantics::Transform => {
+                let out = ItemRec::new(
+                    spec.key_map.apply(item.key),
+                    spec.out_bytes.apply(item.bytes as u64),
+                    item.born,
+                );
+                spent += self.emit(exit, v, out);
+            }
+            Semantics::Merge { arity } => {
+                let done = self.tasks[v.index()].merge_feed(arity, item);
+                if let Some(members) = done {
+                    let total: u64 = members.iter().map(|m| m.bytes as u64).sum();
+                    let born = members.iter().map(|m| m.born).min().unwrap();
+                    let out = ItemRec::new(spec.key_map.apply(item.key), spec.out_bytes.apply(total), born);
+                    spent += self.emit(exit, v, out);
+                }
+            }
+            Semantics::Sink => {
+                let e2e = enter.since(item.born).as_micros() as f64;
+                self.record_e2e(e2e);
+            }
+            Semantics::WindowAgg { window } => {
+                let key = spec.key_map.apply(item.key);
+                let entry = self
+                    .tasks[v.index()]
+                    .windows
+                    .entry(key)
+                    .or_insert((enter, 0, 0));
+                entry.1 += 1;
+                entry.2 += item.bytes as u64;
+                let (start, _n, bytes) = *entry;
+                if enter.since(start) >= window {
+                    self.tasks[v.index()].windows.remove(&key);
+                    let out = ItemRec::new(key, spec.out_bytes.apply(bytes), item.born);
+                    spent += self.emit(exit, v, out);
+                }
+            }
+        }
+        spent
+    }
+
+    /// Emit an item from `v`'s user code at time `exit`: close the task
+    /// latency sample, route to the consumer, and either hand over
+    /// directly (chained channel) or write to the output buffer.
+    /// Returns extra thread time consumed by inline chained successors.
+    fn emit(&mut self, exit: Time, v: VertexId, mut item: ItemRec) -> Duration {
+        // Close the §3.2.1 sample: "the time difference between a data
+        // item entering the user code and the next data item leaving it".
+        if let Some(started) = self.tasks[v.index()].pending_sample.take() {
+            let worker = self.rg.worker(v);
+            self.record(worker, Measurement::task_latency(v, exit.since(started).as_micros() as f64));
+        }
+
+        let out_channels = self.rg.out_channels(v);
+        if out_channels.is_empty() {
+            return Duration::ZERO;
+        }
+        let spec = self.tasks[v.index()].spec;
+        let cid = match spec.route {
+            Route::Pointwise => {
+                // Channel to the same subtask index: pointwise expansion
+                // creates exactly one out channel per vertex on that edge.
+                out_channels[0]
+            }
+            Route::ByKey { divisor } => {
+                let consumers = out_channels.len() as u32;
+                let idx = (item.key / divisor) % consumers;
+                out_channels[idx as usize]
+            }
+        };
+        let c = self.rg.channel(cid);
+        let to = c.to;
+        let sender_worker = self.rg.worker(c.from);
+
+        if self.out_bufs[cid.index()].chained {
+            // §3.5.2: direct hand-over inside the chain thread.  The
+            // channel still reports (near-zero) latency so constraints
+            // remain evaluable.
+            if self.chan_latency_monitored[cid.index()] && exit >= self.next_tag_at[cid.index()] {
+                self.next_tag_at[cid.index()] = exit + self.cfg.measurement_interval;
+                self.record(
+                    self.rg.worker(to),
+                    Measurement::channel_latency(cid, 1.0),
+                );
+            }
+            return self.process_item(exit, to, item, true);
+        }
+
+        // Tag for channel-latency measurement (sender side, §3.3).
+        if self.chan_latency_monitored[cid.index()] && exit >= self.next_tag_at[cid.index()] {
+            self.next_tag_at[cid.index()] = exit + self.cfg.measurement_interval;
+            item.set_tag(exit);
+        }
+
+        let full = self.out_bufs[cid.index()].push(item, exit);
+        if full {
+            self.flush_channel(exit, cid, sender_worker);
+        }
+        Duration::ZERO
+    }
+
+    /// Flush the pending output buffer of a channel onto the wire.
+    fn flush_channel(&mut self, now: Time, cid: ChannelId, sender_worker: WorkerId) {
+        let size = self.out_bufs[cid.index()].size;
+        let (items, bytes, fill_start) = self.out_bufs[cid.index()].take();
+        if items.is_empty() {
+            return;
+        }
+        // Output buffer lifetime (§3.3), measured at the sender.
+        if self.chan_oblt_monitored[cid.index()] {
+            if let Some(start) = fill_start {
+                self.record(
+                    sender_worker,
+                    Measurement::output_buffer_lifetime(cid, now.since(start).as_micros() as f64),
+                );
+            }
+        }
+        let receiver_worker = self.rg.worker(self.rg.channel(cid).to);
+        let local = receiver_worker == sender_worker;
+        // Items larger than the buffer size span several physical buffers:
+        // they pay the per-buffer overhead once per sub-buffer.
+        let sub_buffers = (bytes.div_ceil(size.max(1) as u64)).max(1);
+        let nic = &mut self.nics[sender_worker.index()];
+        let mut arrival = Time::ZERO;
+        for i in 0..sub_buffers {
+            let chunk = if i + 1 == sub_buffers {
+                bytes - (bytes / sub_buffers) * (sub_buffers - 1)
+            } else {
+                bytes / sub_buffers
+            };
+            arrival = nic.send(now, chunk, local);
+        }
+        self.stats.bytes_on_wire += if local { 0 } else { bytes };
+        self.stats.buffers_flushed += sub_buffers;
+        // Extra delivery delay of the sending task type (zero for Nephele
+        // push channels; models HOP shuffle/HDFS handoff, §4.1.2).
+        let sender = self.rg.channel(cid).from;
+        let arrival = arrival + self.tasks[sender.index()].spec.downstream_delay;
+        self.queue.push(
+            arrival,
+            Ev::Deliver {
+                buffer: Buffer { channel: cid.0, items, bytes, flushed: now },
+            },
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // Measurement plumbing
+    // ------------------------------------------------------------------
+
+    fn record(&mut self, worker: WorkerId, m: Measurement) {
+        if let Some(r) = self.reporters.get_mut(&worker) {
+            r.record(m);
+        }
+    }
+
+    fn record_channel_latency(&mut self, cid: ChannelId, tag_created: Time, enter: Time) {
+        let c = self.rg.channel(cid);
+        let (sw, rw) = (self.rg.worker(c.from), self.rg.worker(c.to));
+        // Cross-worker measurements see NTP skew (§3.3 requires clock
+        // synchronisation; §4.2 reports <2 ms).
+        let skew = self.skew_us[rw.index()] - self.skew_us[sw.index()];
+        let raw = enter.since(tag_created).as_micros() as i64 + skew;
+        self.record(rw, Measurement::channel_latency(cid, raw.max(0) as f64));
+    }
+
+    fn record_e2e(&mut self, us: f64) {
+        self.stats.e2e_count += 1;
+        self.stats.e2e_sum_us += us;
+        if us > self.stats.e2e_max_us {
+            self.stats.e2e_max_us = us;
+        }
+        if self.stats.e2e_samples.len() < E2E_RESERVOIR {
+            self.stats.e2e_samples.push(us);
+        } else {
+            let i = self.rng.below(self.stats.e2e_count) as usize;
+            if i < E2E_RESERVOIR {
+                self.stats.e2e_samples[i] = us;
+            }
+        }
+    }
+
+    fn on_reporter_flush(&mut self, now: Time, worker: WorkerId) {
+        let (reports, next) = match self.reporters.get_mut(&worker) {
+            Some(r) => (r.flush_due(now), r.next_deadline()),
+            None => return,
+        };
+        let delay = self.cfg.cluster.control_delay;
+        for report in reports {
+            self.queue.push(now + delay, Ev::ReportArrive { report });
+        }
+        if let Some(t) = next {
+            self.queue.push(t, Ev::ReporterFlush { worker: worker.0 });
+        }
+    }
+
+    fn on_manager_tick(&mut self, now: Time, worker: WorkerId) {
+        let actions = match self.managers.get_mut(&worker) {
+            Some(m) => m.act(now),
+            None => return,
+        };
+        let delay = self.cfg.cluster.control_delay;
+        for action in actions {
+            match &action {
+                Action::Unresolvable { .. } => {
+                    self.stats.unresolvable_notices += 1;
+                }
+                _ => self.queue.push(now + delay, Ev::ApplyAction { action }),
+            }
+        }
+        self.queue
+            .push(now + self.cfg.measurement_interval, Ev::ManagerTick { worker: worker.0 });
+    }
+
+    fn on_cpu_sample(&mut self, now: Time, worker: WorkerId) {
+        let interval = self.cfg.measurement_interval;
+        let verts: Vec<VertexId> = self
+            .rg
+            .vertices_on_worker(worker)
+            .map(|v| v.id)
+            .collect();
+        for v in verts {
+            let busy = std::mem::replace(&mut self.tasks[v.index()].busy_accum, Duration::ZERO);
+            if self.vertex_monitored[v.index()] {
+                let util = busy.as_secs_f64() / interval.as_secs_f64();
+                self.record(worker, Measurement::task_cpu(v, util.min(1.0)));
+            }
+        }
+        self.queue.push(now + interval, Ev::CpuSample { worker: worker.0 });
+    }
+
+    // ------------------------------------------------------------------
+    // Action application (worker side)
+    // ------------------------------------------------------------------
+
+    fn on_apply(&mut self, now: Time, action: Action) {
+        match action {
+            Action::SetBufferSize { channel, worker, size, based_on } => {
+                let arb = self.arbiters.entry(worker).or_default();
+                match arb.offer(channel, size, based_on) {
+                    Verdict::Apply(size) => {
+                        self.out_bufs[channel.index()].size = size;
+                        self.stats.buffer_size_updates += 1;
+                        if let Some(r) = self.reporters.get_mut(&worker) {
+                            r.note_buffer_update(channel, size);
+                        }
+                        // If the partial buffer already exceeds the new
+                        // size, it is due for flushing now.
+                        if self.out_bufs[channel.index()].pending_bytes >= size as u64 {
+                            self.flush_channel(now, channel, worker);
+                        }
+                    }
+                    Verdict::Discard => {}
+                }
+            }
+            Action::ChainTasks { worker: _, tasks, drain } => {
+                self.apply_chain(now, tasks, drain);
+            }
+            Action::Unresolvable { .. } => {}
+        }
+    }
+
+    fn apply_chain(&mut self, now: Time, tasks: Vec<VertexId>, drain: DrainPolicy) {
+        if tasks.len() < 2 || tasks.iter().any(|v| self.tasks[v.index()].chain.is_some()) {
+            return;
+        }
+        let gid = self.chain_members.len() as u32;
+        // Mark the channels between consecutive chain members as direct
+        // hand-over channels; flush whatever sits in their buffers first.
+        for pair in tasks.windows(2) {
+            if let Some(cid) = self.rg.channel_between(pair[0], pair[1]) {
+                let sender_worker = self.rg.worker(pair[0]);
+                if !self.out_bufs[cid.index()].is_empty() {
+                    self.flush_channel(now, cid, sender_worker);
+                }
+                self.out_bufs[cid.index()].chained = true;
+            }
+        }
+        if drain == DrainPolicy::Drop {
+            // §3.5.2 option 1: drop the queues between the chained tasks
+            // (all members except the head).
+            for &v in &tasks[1..] {
+                let t = &mut self.tasks[v.index()];
+                self.stats.dropped_on_chain +=
+                    t.queue.iter().map(|q| q.buffer.items.len() as u64).sum::<u64>();
+                t.queue.clear();
+                t.queued_bytes = 0;
+            }
+        }
+        let busy = tasks
+            .iter()
+            .map(|v| self.tasks[v.index()].busy_until)
+            .max()
+            .unwrap();
+        for &v in &tasks {
+            self.tasks[v.index()].chain = Some(gid);
+            self.tasks[v.index()].scheduled = false;
+        }
+        self.chain_members.push(tasks.clone());
+        self.chain_busy.push(busy);
+        self.chain_sched.push(false);
+        self.stats.chains_established += 1;
+        self.try_schedule(now, tasks[0]);
+    }
+
+    // ------------------------------------------------------------------
+    // Harness access
+    // ------------------------------------------------------------------
+
+    pub fn managers_mut(&mut self) -> impl Iterator<Item = (&WorkerId, &mut QosManager)> {
+        self.managers.iter_mut()
+    }
+
+    pub fn buffer_size_of(&self, c: ChannelId) -> u32 {
+        self.out_bufs[c.index()].size
+    }
+
+    pub fn is_chained(&self, c: ChannelId) -> bool {
+        self.out_bufs[c.index()].chained
+    }
+
+    pub fn mean_e2e_ms(&self) -> Option<f64> {
+        (self.stats.e2e_count > 0)
+            .then(|| self.stats.e2e_sum_us / self.stats.e2e_count as f64 / 1e3)
+    }
+}
+

@@ -1,0 +1,144 @@
+//! Data-flow records of the simulator: items, output buffers in flight.
+//!
+//! Items are simulated at metadata granularity (key, size, timestamps) —
+//! payload bytes only exist in the live engine.  An [`ItemRec`] carries
+//! the optional QoS tag (§3.3) and its creation time at the original
+//! source, which gives the harness ground-truth end-to-end latencies the
+//! real system cannot even measure.
+
+use crate::util::time::Time;
+
+/// One data item travelling a channel.  Kept at 24 bytes — items are the
+/// simulator's most-copied value (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ItemRec {
+    /// Routing key: stream id upstream of the merge, group id after it.
+    pub key: u32,
+    /// Item size in bytes (u32: single items beyond 4 GB are out of
+    /// scope for a streaming engine).
+    pub bytes: u32,
+    /// Creation time at the original source (ground truth, sim-only).
+    pub born: Time,
+    /// Tag creation time if this item is tagged for channel-latency
+    /// measurement on its current channel (§3.3); `NOT_TAGGED` otherwise.
+    tag_at: Time,
+}
+
+/// Sentinel for "no tag attached".
+const NOT_TAGGED: Time = Time(u64::MAX);
+
+impl ItemRec {
+    pub fn new(key: u32, bytes: u64, born: Time) -> ItemRec {
+        ItemRec { key, bytes: bytes.min(u32::MAX as u64) as u32, born, tag_at: NOT_TAGGED }
+    }
+
+    pub fn tag(&self) -> Option<Time> {
+        (self.tag_at != NOT_TAGGED).then_some(self.tag_at)
+    }
+
+    pub fn set_tag(&mut self, at: Time) {
+        self.tag_at = at;
+    }
+
+    pub fn clear_tag(&mut self) {
+        self.tag_at = NOT_TAGGED;
+    }
+}
+
+/// A flushed output buffer travelling the network (or, after arrival,
+/// sitting in the receiver's input queue).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Buffer {
+    /// Channel this buffer belongs to (dense runtime-channel index).
+    pub channel: u32,
+    pub items: Vec<ItemRec>,
+    pub bytes: u64,
+    /// When the buffer was flushed at the sender.
+    pub flushed: Time,
+}
+
+impl Buffer {
+    pub fn item_count(&self) -> usize {
+        self.items.len()
+    }
+}
+
+/// Sender-side output buffer state of one channel (§2.2.1).
+#[derive(Debug, Clone)]
+pub struct OutBufferState {
+    /// Current output buffer size limit (adaptive, §3.5.1).
+    pub size: u32,
+    pub pending: Vec<ItemRec>,
+    pub pending_bytes: u64,
+    /// When the first item of the current buffer was written.
+    pub fill_start: Option<Time>,
+    /// Channel is part of a task chain: hand items over directly (§3.5.2).
+    pub chained: bool,
+}
+
+impl OutBufferState {
+    pub fn new(size: u32) -> OutBufferState {
+        OutBufferState { size, pending: Vec::new(), pending_bytes: 0, fill_start: None, chained: false }
+    }
+
+    /// Append an item; returns `true` if the buffer reached its capacity
+    /// limit and must flush.
+    pub fn push(&mut self, item: ItemRec, now: Time) -> bool {
+        if self.fill_start.is_none() {
+            self.fill_start = Some(now);
+        }
+        self.pending_bytes += item.bytes as u64;
+        self.pending.push(item);
+        self.pending_bytes >= self.size as u64
+    }
+
+    /// Take the pending buffer content for flushing.  Returns
+    /// `(items, bytes, fill_start)`.
+    pub fn take(&mut self) -> (Vec<ItemRec>, u64, Option<Time>) {
+        // Pre-size the next fill to the current one (steady-state buffers
+        // hold a stable item count): avoids regrowth reallocations.
+        let cap = self.pending.len();
+        let items = std::mem::replace(&mut self.pending, Vec::with_capacity(cap));
+        let bytes = self.pending_bytes;
+        let fill_start = self.fill_start.take();
+        self.pending_bytes = 0;
+        (items, bytes, fill_start)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(bytes: u64) -> ItemRec {
+        ItemRec::new(0, bytes, Time::ZERO)
+    }
+
+    #[test]
+    fn push_reports_full_at_capacity() {
+        let mut b = OutBufferState::new(100);
+        assert!(!b.push(item(40), Time(1)));
+        assert!(!b.push(item(40), Time(2)));
+        assert!(b.push(item(40), Time(3)));
+        assert_eq!(b.fill_start, Some(Time(1)));
+        let (items, bytes, start) = b.take();
+        assert_eq!(items.len(), 3);
+        assert_eq!(bytes, 120);
+        assert_eq!(start, Some(Time(1)));
+        assert!(b.is_empty());
+        assert_eq!(b.fill_start, None);
+    }
+
+    #[test]
+    fn oversized_item_flushes_alone() {
+        let mut b = OutBufferState::new(100);
+        assert!(b.push(item(500), Time(7)));
+        let (items, bytes, _) = b.take();
+        assert_eq!(items.len(), 1);
+        assert_eq!(bytes, 500);
+    }
+}

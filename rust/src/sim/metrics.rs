@@ -1,0 +1,173 @@
+//! Latency-breakdown aggregation: reproduces the structure of the
+//! paper's Figs. 7–10.
+//!
+//! "Each QoS Manager maintains running averages of the measured latencies
+//! of its tasks and channels.  Each sub-bar displays the arithmetic mean
+//! over the running averages for tasks/channels of the same type.  For
+//! the plot, each channel latency is split up into mean output buffer
+//! latency and mean transport latency [...].  The dot-dashed lines
+//! provide information about the distribution of measured sequence
+//! latencies (min and max)." (§4.3.1)
+
+use super::cluster::SimCluster;
+use crate::graph::ids::{JobEdgeId, JobVertexId};
+use crate::graph::sequence::{JobSeqElem, JobSequence};
+use crate::qos::sample::{ElementKey, MetricKind};
+use crate::util::stats::RunningAvg;
+use crate::util::time::Time;
+use std::collections::HashMap;
+
+/// One bar segment of the breakdown plot.
+#[derive(Debug, Clone)]
+pub enum Row {
+    /// Mean task latency of one task type (ms).
+    Task { name: String, mean_ms: f64 },
+    /// Mean channel latency of one channel type, split into output
+    /// buffer latency (oblt/2) and transport latency (ms).
+    Edge { name: String, obl_ms: f64, transport_ms: f64 },
+}
+
+impl Row {
+    pub fn total_ms(&self) -> f64 {
+        match self {
+            Row::Task { mean_ms, .. } => *mean_ms,
+            Row::Edge { obl_ms, transport_ms, .. } => obl_ms + transport_ms,
+        }
+    }
+}
+
+/// The aggregated state of all QoS managers at one instant.
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    pub at_secs: f64,
+    pub rows: Vec<Row>,
+    /// Min/max of estimated mean sequence latencies over all evaluable
+    /// chains (the dot-dashed lines), ms.
+    pub seq_min_ms: Option<f64>,
+    pub seq_max_ms: Option<f64>,
+    pub chains_evaluated: usize,
+    pub chains_violated: usize,
+}
+
+impl Breakdown {
+    /// Total height of the stacked bar (sum of per-type means), ms.
+    pub fn total_ms(&self) -> f64 {
+        self.rows.iter().map(|r| r.total_ms()).sum()
+    }
+
+    /// Render as fixed-width text (one line per row + summary).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("t={:>7.1}s\n", self.at_secs));
+        for r in &self.rows {
+            match r {
+                Row::Task { name, mean_ms } => {
+                    out.push_str(&format!("  task {name:<24} {mean_ms:>10.2} ms\n"));
+                }
+                Row::Edge { name, obl_ms, transport_ms } => {
+                    out.push_str(&format!(
+                        "  chan {name:<24} {:>10.2} ms  (obl {obl_ms:.2} + transport {transport_ms:.2})\n",
+                        obl_ms + transport_ms,
+                    ));
+                }
+            }
+        }
+        out.push_str(&format!(
+            "  total workflow latency  {:>10.2} ms   sequences: min {} / max {} ms   ({} chains, {} violated)\n",
+            self.total_ms(),
+            self.seq_min_ms.map_or("n/a".into(), |v| format!("{v:.1}")),
+            self.seq_max_ms.map_or("n/a".into(), |v| format!("{v:.1}")),
+            self.chains_evaluated,
+            self.chains_violated,
+        ));
+        out
+    }
+}
+
+/// Collect the breakdown for the elements of `seq` (the constrained job
+/// sequence defines the bar order, matching the figures).
+pub fn breakdown(cluster: &mut SimCluster, seq: &JobSequence, now: Time) -> Breakdown {
+    let mut task_avg: HashMap<JobVertexId, RunningAvg> = HashMap::new();
+    let mut chan_avg: HashMap<JobEdgeId, RunningAvg> = HashMap::new();
+    let mut oblt_avg: HashMap<JobEdgeId, RunningAvg> = HashMap::new();
+    let mut seq_min: Option<f64> = None;
+    let mut seq_max: Option<f64> = None;
+    let mut evaluated = 0;
+    let mut violated = 0;
+
+    // Immutable topology snapshots to avoid holding borrows across the
+    // manager iteration.
+    let chan_edge: Vec<JobEdgeId> = cluster.rg.channels.iter().map(|c| c.job_edge).collect();
+    let vert_jv: Vec<JobVertexId> = cluster.rg.vertices.iter().map(|v| v.job_vertex).collect();
+
+    for (_, mgr) in cluster.managers_mut() {
+        for (elem, kind, mean_us) in mgr.element_means(now) {
+            match (elem, kind) {
+                (ElementKey::Vertex(v), MetricKind::TaskLatency) => {
+                    task_avg.entry(vert_jv[v.index()]).or_default().add(mean_us);
+                }
+                (ElementKey::Channel(c), MetricKind::ChannelLatency) => {
+                    chan_avg.entry(chan_edge[c.index()]).or_default().add(mean_us);
+                }
+                (ElementKey::Channel(c), MetricKind::OutputBufferLifetime) => {
+                    oblt_avg.entry(chan_edge[c.index()]).or_default().add(mean_us);
+                }
+                _ => {}
+            }
+        }
+        for eval in mgr.evaluate_chains(now) {
+            evaluated += 1;
+            if eval.violated {
+                violated += 1;
+            }
+            seq_min = Some(seq_min.map_or(eval.best_us, |m: f64| m.min(eval.best_us)));
+            seq_max = Some(seq_max.map_or(eval.worst_us, |m: f64| m.max(eval.worst_us)));
+        }
+    }
+
+    let mut rows = Vec::new();
+    for elem in &seq.elems {
+        match elem {
+            JobSeqElem::Vertex(jv) => {
+                let mean_ms = task_avg
+                    .get(jv)
+                    .and_then(|a| a.mean())
+                    .map(|us| us / 1e3)
+                    .unwrap_or(0.0);
+                rows.push(Row::Task {
+                    name: cluster.job.vertex(*jv).name.clone(),
+                    mean_ms,
+                });
+            }
+            JobSeqElem::Edge(je) => {
+                let lat_ms = chan_avg
+                    .get(je)
+                    .and_then(|a| a.mean())
+                    .map(|us| us / 1e3)
+                    .unwrap_or(0.0);
+                let obl_ms = oblt_avg
+                    .get(je)
+                    .and_then(|a| a.mean())
+                    .map(|us| us / 2.0 / 1e3)
+                    .unwrap_or(0.0)
+                    .min(lat_ms);
+                let e = cluster.job.edge(*je);
+                let name = format!(
+                    "{}->{}",
+                    cluster.job.vertex(e.from).name,
+                    cluster.job.vertex(e.to).name
+                );
+                rows.push(Row::Edge { name, obl_ms, transport_ms: (lat_ms - obl_ms).max(0.0) });
+            }
+        }
+    }
+
+    Breakdown {
+        at_secs: now.as_secs_f64(),
+        rows,
+        seq_min_ms: seq_min.map(|us| us / 1e3),
+        seq_max_ms: seq_max.map(|us| us / 1e3),
+        chains_evaluated: evaluated,
+        chains_violated: violated,
+    }
+}

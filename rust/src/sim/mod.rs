@@ -1,0 +1,25 @@
+//! Discrete-event cluster simulator.
+//!
+//! This is the substitution substrate for the paper's 200-node testbed
+//! (DESIGN.md §3): it reproduces exactly the latency mechanisms the QoS
+//! scheme acts on — output buffer fill time, per-buffer transfer
+//! overhead, link serialisation, input queue wait, task service time —
+//! while the QoS code (reporters, managers, countermeasures) is the very
+//! same code a live deployment runs.
+//!
+//! The full evaluation configuration (n=200 workers, m=800, 6400 video
+//! streams) simulates in seconds on one core because events are per
+//! buffer flush / item batch, not per byte.
+
+pub mod cluster;
+pub mod events;
+pub mod flow;
+pub mod metrics;
+pub mod net;
+pub mod task;
+
+pub use cluster::{SimCluster, SimObserver};
+pub use events::EventQueue;
+pub use flow::{Buffer, ItemRec};
+pub use net::Nic;
+pub use task::{KeyMap, OutBytes, Route, Semantics, TaskSpec};

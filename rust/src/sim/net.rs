@@ -1,0 +1,112 @@
+//! Worker NIC model: a shared full-duplex Gigabit link per worker with
+//! FIFO serialisation on the egress side plus a fixed per-buffer overhead
+//! (output buffer meta data, memory management, thread synchronisation —
+//! the §2.2.1 costs that make tiny buffers throughput-poor, Fig. 2b).
+
+use crate::config::ClusterConfig;
+use crate::util::time::{Duration, Time};
+
+/// Egress link state of one worker.
+#[derive(Debug, Clone)]
+pub struct Nic {
+    bytes_per_sec: f64,
+    per_buffer_overhead: Duration,
+    base_latency: Duration,
+    local_latency: Duration,
+    /// Egress serialisation frontier.
+    busy_until: Time,
+    /// Accounting.
+    pub bytes_sent: u64,
+    pub buffers_sent: u64,
+}
+
+impl Nic {
+    pub fn new(cfg: &ClusterConfig) -> Nic {
+        Nic {
+            bytes_per_sec: cfg.link_bytes_per_sec,
+            per_buffer_overhead: cfg.per_buffer_overhead,
+            base_latency: cfg.base_latency,
+            local_latency: cfg.local_latency,
+            busy_until: Time::ZERO,
+            bytes_sent: 0,
+            buffers_sent: 0,
+        }
+    }
+
+    /// Send a buffer of `bytes` at `now` (local destinations skip the
+    /// wire but still pay the loopback software path).  Returns the
+    /// arrival time at the receiver.
+    pub fn send(&mut self, now: Time, bytes: u64, local: bool) -> Time {
+        self.bytes_sent += bytes;
+        self.buffers_sent += 1;
+        if local {
+            // Same worker: TCP loopback — no link serialisation, but the
+            // full send/receive software path still runs.
+            return now + self.per_buffer_overhead + self.local_latency;
+        }
+        let start = if self.busy_until > now { self.busy_until } else { now };
+        let wire = Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec);
+        let done = start + self.per_buffer_overhead + wire;
+        self.busy_until = done;
+        done + self.base_latency
+    }
+
+    /// Egress queueing delay currently accumulated (for diagnostics).
+    pub fn backlog(&self, now: Time) -> Duration {
+        self.busy_until.since(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nic() -> Nic {
+        Nic::new(&ClusterConfig::default())
+    }
+
+    #[test]
+    fn wire_time_scales_with_bytes() {
+        let mut n = nic();
+        let t0 = Time::ZERO;
+        // 125 MB at 125 MB/s = 1 s wire + 35 ms software path + overhead.
+        let arrival = n.send(t0, 125_000_000, false);
+        let secs = arrival.as_secs_f64();
+        assert!((secs - 1.035).abs() < 0.005, "arrival {secs}");
+    }
+
+    #[test]
+    fn fifo_serialisation_queues_buffers() {
+        let mut n = nic();
+        let a1 = n.send(Time::ZERO, 12_500_000, false); // 100 ms wire
+        let a2 = n.send(Time::ZERO, 12_500_000, false);
+        assert!(a2 > a1);
+        assert!(a2.as_secs_f64() > 0.2, "second buffer waits for the first");
+    }
+
+    #[test]
+    fn local_delivery_skips_the_wire() {
+        let mut n = nic();
+        // 1 GB locally: no link serialisation (8 s on the wire), just the
+        // loopback software path.
+        let a = n.send(Time::ZERO, 1_000_000_000, true);
+        assert!((a.as_secs_f64() - 0.018).abs() < 0.001, "local {a}");
+        // And the egress link frontier is untouched.
+        assert_eq!(n.backlog(Time::ZERO), crate::util::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn per_buffer_overhead_caps_small_buffer_throughput() {
+        // Fig. 2(b): with tiny buffers the achievable data rate collapses.
+        let cfg = ClusterConfig::default();
+        let mut n = Nic::new(&cfg);
+        let mut now = Time::ZERO;
+        // Send 1000 buffers of 128 B back to back.
+        for _ in 0..1000 {
+            now = n.send(now, 128, false);
+        }
+        let goodput = (1000.0 * 128.0) / now.as_secs_f64();
+        // 128 B / (60 us + wire) ~ 2 MB/s: far below the 125 MB/s link.
+        assert!(goodput < 5.0e6, "goodput {goodput}");
+    }
+}

@@ -1,0 +1,235 @@
+//! Task semantics and per-task runtime state for the simulator.
+//!
+//! A [`TaskSpec`] describes what one job vertex's tasks *do* — service
+//! time per item, output item size, routing of emissions — in a way that
+//! covers the paper's video pipeline, the Fig. 2 microbenchmark, the
+//! smart-meter example and the Hadoop Online baseline.
+
+use super::flow::{Buffer, ItemRec, OutBufferState};
+use crate::util::time::{Duration, Time};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+/// Size of emitted items.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OutBytes {
+    /// Fixed output size (e.g. a decoded frame).
+    Const(u64),
+    /// Multiple of the input size (e.g. light augmentation).
+    Scale(f64),
+}
+
+impl OutBytes {
+    pub fn apply(&self, in_bytes: u64) -> u64 {
+        match *self {
+            OutBytes::Const(b) => b,
+            OutBytes::Scale(f) => (in_bytes as f64 * f).max(1.0) as u64,
+        }
+    }
+}
+
+/// Routing-key transformation on emission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeyMap {
+    Identity,
+    /// key -> key / d (e.g. stream id -> group id at the Merger).
+    DivideBy(u32),
+}
+
+impl KeyMap {
+    pub fn apply(&self, key: u32) -> u32 {
+        match *self {
+            KeyMap::Identity => key,
+            KeyMap::DivideBy(d) => key / d,
+        }
+    }
+}
+
+/// How emissions pick the consumer subtask on the (single) out edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Same subtask index (pointwise edges).
+    Pointwise,
+    /// Consumer = (key / divisor) % consumer_parallelism — the shuffle
+    /// used on all-to-all edges (Partitioner groups streams onto the
+    /// responsible Decoder; Encoder spreads merged streams over RTP
+    /// servers).
+    ByKey { divisor: u32 },
+}
+
+/// What a task does with an input item.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Semantics {
+    /// 1 -> 1 transform (Partitioner, Decoder, Overlay, Encoder).
+    Transform,
+    /// Group join of `arity` distinct keys-within-a-group: emit one item
+    /// once an item from every group member has arrived (the Merger;
+    /// `arity` = streams per group, §4.2 uses 4).
+    Merge { arity: u32 },
+    /// Consume only (RTP server).
+    Sink,
+    /// Time-window aggregation: buffer inputs, emit one item per window
+    /// per key (the Hadoop Online window reducer, §4.1.2).
+    WindowAgg { window: Duration },
+}
+
+/// Static description of one job vertex's tasks.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskSpec {
+    pub semantics: Semantics,
+    /// CPU service time per input item.
+    pub service: Duration,
+    pub out_bytes: OutBytes,
+    pub key_map: KeyMap,
+    pub route: Route,
+    /// Extra delivery latency on this task's *outgoing* channels, on top
+    /// of buffer fill and wire time.  Zero for Nephele's push channels;
+    /// the Hadoop Online baseline uses it to model the pull-based
+    /// shuffle and the HDFS materialisation at MapReduce job boundaries
+    /// (§4.1.2).
+    pub downstream_delay: Duration,
+}
+
+impl TaskSpec {
+    pub fn sink() -> TaskSpec {
+        TaskSpec {
+            semantics: Semantics::Sink,
+            service: Duration::from_micros(20),
+            out_bytes: OutBytes::Scale(1.0),
+            key_map: KeyMap::Identity,
+            route: Route::Pointwise,
+            downstream_delay: Duration::ZERO,
+        }
+    }
+
+    pub fn transform(service: Duration, out_bytes: OutBytes, route: Route) -> TaskSpec {
+        TaskSpec {
+            semantics: Semantics::Transform,
+            service,
+            out_bytes,
+            key_map: KeyMap::Identity,
+            route,
+            downstream_delay: Duration::ZERO,
+        }
+    }
+}
+
+/// A buffer sitting in a task's input queue.
+#[derive(Debug, Clone)]
+pub struct QueuedBuffer {
+    pub buffer: Buffer,
+    pub arrived: Time,
+}
+
+/// Mutable per-task state.
+#[derive(Debug)]
+pub struct TaskState {
+    pub spec: TaskSpec,
+    pub queue: VecDeque<QueuedBuffer>,
+    pub queued_bytes: u64,
+    /// Task thread is busy until this time (scheduling frontier).
+    pub busy_until: Time,
+    /// Whether a TaskDone event is in flight for this task.
+    pub scheduled: bool,
+    /// Merge state: group id -> per-member pending items.
+    pub groups: BTreeMap<u32, BTreeMap<u32, VecDeque<ItemRec>>>,
+    /// Window state: key -> (window start, accumulated items/bytes).
+    pub windows: HashMap<u32, (Time, u64, u64)>,
+    /// §3.2.1 task-latency sampling: set when a sampled item enters user
+    /// code; closed by the next emission.
+    pub pending_sample: Option<Time>,
+    /// Accumulated busy time since the last CPU-utilisation sample.
+    pub busy_accum: Duration,
+    /// Chained-execution group this task belongs to, if any.
+    pub chain: Option<u32>,
+}
+
+impl TaskState {
+    pub fn new(spec: TaskSpec) -> TaskState {
+        TaskState {
+            spec,
+            queue: VecDeque::new(),
+            queued_bytes: 0,
+            busy_until: Time::ZERO,
+            scheduled: false,
+            groups: BTreeMap::new(),
+            windows: HashMap::new(),
+            pending_sample: None,
+            busy_accum: Duration::ZERO,
+            chain: None,
+        }
+    }
+
+    /// Feed one item into the group-join state; returns a completed group
+    /// (one item per member) if this item completed it.
+    pub fn merge_feed(&mut self, arity: u32, item: ItemRec) -> Option<Vec<ItemRec>> {
+        let group = item.key / arity;
+        let members = self.groups.entry(group).or_default();
+        members.entry(item.key).or_default().push_back(item);
+        if members.len() == arity as usize && members.values().all(|q| !q.is_empty()) {
+            let mut out = Vec::with_capacity(arity as usize);
+            for q in members.values_mut() {
+                out.push(q.pop_front().unwrap());
+            }
+            members.retain(|_, q| !q.is_empty());
+            Some(out)
+        } else {
+            None
+        }
+    }
+}
+
+/// Sender-side per-channel state lives alongside tasks in the cluster.
+pub type ChannelBuffers = Vec<OutBufferState>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(key: u32) -> ItemRec {
+        ItemRec::new(key, 100, Time::ZERO)
+    }
+
+    #[test]
+    fn out_bytes_and_keymap() {
+        assert_eq!(OutBytes::Const(7).apply(100), 7);
+        assert_eq!(OutBytes::Scale(0.5).apply(100), 50);
+        assert_eq!(KeyMap::DivideBy(4).apply(11), 2);
+        assert_eq!(KeyMap::Identity.apply(11), 11);
+    }
+
+    #[test]
+    fn merge_waits_for_all_members() {
+        let mut t = TaskState::new(TaskSpec::sink());
+        // Group 0 = streams 0..4.
+        assert!(t.merge_feed(4, item(0)).is_none());
+        assert!(t.merge_feed(4, item(1)).is_none());
+        assert!(t.merge_feed(4, item(2)).is_none());
+        let done = t.merge_feed(4, item(3)).unwrap();
+        assert_eq!(done.len(), 4);
+        // State consumed: feeding the same streams again requires all 4.
+        assert!(t.merge_feed(4, item(0)).is_none());
+    }
+
+    #[test]
+    fn merge_groups_are_independent() {
+        let mut t = TaskState::new(TaskSpec::sink());
+        assert!(t.merge_feed(4, item(0)).is_none());
+        // Stream 4 belongs to group 1.
+        assert!(t.merge_feed(4, item(4)).is_none());
+        assert!(t.merge_feed(4, item(1)).is_none());
+        assert!(t.merge_feed(4, item(2)).is_none());
+        assert!(t.merge_feed(4, item(3)).unwrap().len() == 4);
+    }
+
+    #[test]
+    fn merge_queues_bursts_per_stream() {
+        let mut t = TaskState::new(TaskSpec::sink());
+        // Two frames of stream 0 arrive before the rest of the group.
+        assert!(t.merge_feed(2, item(0)).is_none());
+        assert!(t.merge_feed(2, item(0)).is_none());
+        assert!(t.merge_feed(2, item(1)).is_some());
+        // Second frame of stream 0 is still buffered.
+        assert!(t.merge_feed(2, item(1)).is_some());
+        assert!(t.merge_feed(2, item(1)).is_none());
+    }
+}

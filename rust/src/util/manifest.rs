@@ -1,0 +1,147 @@
+//! Parser for `artifacts/manifest.txt`, the line-oriented twin of
+//! `manifest.json` emitted by `python/compile/aot.py`:
+//!
+//! ```text
+//! frame 240 320
+//! stage decoder decoder.hlo.txt 240x320
+//! stage overlay overlay.hlo.txt 480x640,480x640,480x640
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled stage: HLO file + input shapes (f32 everywhere).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+impl StageSpec {
+    /// Total number of f32 elements across all inputs.
+    pub fn input_elems(&self) -> usize {
+        self.input_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub frame_h: usize,
+    pub frame_w: usize,
+    pub stages: BTreeMap<String, StageSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`; stage file paths are resolved against
+    /// `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut frame = None;
+        let mut stages = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("frame") => {
+                    let h = parse_num(it.next(), lineno, "frame height")?;
+                    let w = parse_num(it.next(), lineno, "frame width")?;
+                    frame = Some((h, w));
+                }
+                Some("stage") => {
+                    let name = it.next().context("stage name missing")?.to_string();
+                    let file = it.next().context("stage file missing")?;
+                    let shapes_str = it.next().context("stage shapes missing")?;
+                    let input_shapes = shapes_str
+                        .split(',')
+                        .map(|s| {
+                            s.split('x')
+                                .map(|d| d.parse::<usize>().map_err(Into::into))
+                                .collect::<Result<Vec<usize>>>()
+                        })
+                        .collect::<Result<Vec<_>>>()
+                        .with_context(|| format!("line {}: bad shapes {shapes_str}", lineno + 1))?;
+                    stages.insert(
+                        name.clone(),
+                        StageSpec { name, file: dir.join(file), input_shapes },
+                    );
+                }
+                Some(other) => bail!("line {}: unknown directive {other:?}", lineno + 1),
+                None => {}
+            }
+        }
+        let (frame_h, frame_w) = frame.context("manifest missing `frame` line")?;
+        if stages.is_empty() {
+            bail!("manifest has no stages");
+        }
+        Ok(Manifest { frame_h, frame_w, stages })
+    }
+
+    pub fn stage(&self, name: &str) -> Result<&StageSpec> {
+        self.stages
+            .get(name)
+            .with_context(|| format!("stage {name:?} not in manifest"))
+    }
+}
+
+fn parse_num(tok: Option<&str>, lineno: usize, what: &str) -> Result<usize> {
+    tok.with_context(|| format!("line {}: {what} missing", lineno + 1))?
+        .parse()
+        .with_context(|| format!("line {}: {what} not a number", lineno + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+frame 240 320
+stage decoder decoder.hlo.txt 240x320
+stage overlay overlay.hlo.txt 480x640,480x640,480x640
+";
+
+    #[test]
+    fn parses_frame_and_stages() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!((m.frame_h, m.frame_w), (240, 320));
+        assert_eq!(m.stages.len(), 2);
+        let ov = m.stage("overlay").unwrap();
+        assert_eq!(ov.input_shapes.len(), 3);
+        assert_eq!(ov.input_shapes[0], vec![480, 640]);
+        assert_eq!(ov.file, Path::new("/a/overlay.hlo.txt"));
+        assert_eq!(ov.input_elems(), 3 * 480 * 640);
+    }
+
+    #[test]
+    fn rejects_missing_frame() {
+        assert!(Manifest::parse("stage a a.hlo.txt 8x8\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_directive() {
+        assert!(Manifest::parse("frame 8 8\nbogus x\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Manifest::parse("frame 8 8\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn ignores_comments_and_blanks() {
+        let m = Manifest::parse("# hi\n\nframe 8 8\nstage d d.hlo.txt 8x8\n", Path::new("."))
+            .unwrap();
+        assert_eq!(m.stages.len(), 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Small self-contained utilities: virtual time, deterministic PRNG,
+//! windowed statistics and a dependency-free property-testing helper.
+//!
+//! The build environment resolves crates offline (see DESIGN.md), so the
+//! usual suspects (`rand`, `proptest`, `serde`) are replaced by the
+//! minimal implementations in this module.
+
+pub mod manifest;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod time;
+
+pub use rng::Rng;
+pub use stats::{RunningAvg, WindowAvg};
+pub use time::{Duration, Time};

@@ -1,0 +1,142 @@
+//! Minimal property-testing harness (no external `proptest` available in
+//! the offline build).
+//!
+//! Usage:
+//!
+//! ```ignore
+//! check(100, |g| {
+//!     let n = g.usize(1..=50);
+//!     let v = g.vec(n, |g| g.u64(0..=100));
+//!     prop_assert(v.len() == n, "len mismatch")
+//! });
+//! ```
+//!
+//! Each case runs with a deterministic seed derived from the case index;
+//! on failure the harness panics with the failing seed so the case can be
+//! replayed with [`check_seed`].
+
+use super::rng::Rng;
+use std::ops::RangeInclusive;
+
+/// Generator handle passed to property closures.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    pub fn u64(&mut self, r: RangeInclusive<u64>) -> u64 {
+        self.rng.range(*r.start(), *r.end())
+    }
+
+    pub fn usize(&mut self, r: RangeInclusive<usize>) -> usize {
+        self.rng.range(*r.start() as u64, *r.end() as u64) as usize
+    }
+
+    pub fn u32(&mut self, r: RangeInclusive<u32>) -> u32 {
+        self.rng.range(*r.start() as u64, *r.end() as u64) as u32
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        self.rng.shuffle(xs)
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Outcome of one property case: `Err` carries the failure message.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper that returns instead of panicking, so the harness can
+/// attach the seed.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+/// Run `cases` property cases with seeds `0..cases` (xor a fixed salt).
+/// Panics with the failing seed + message on the first failure.
+pub fn check(cases: u64, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    for i in 0..cases {
+        let seed = i ^ 0x5EED_0000;
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property failed (replay with check_seed({seed:#x}, ..)): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_seed(seed: u64, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("property failed for seed {seed:#x}: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check(25, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_panics_with_seed_on_failure() {
+        check(10, |g| prop_assert(g.u64(0..=10) > 100, "always fails"));
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check(50, |g| {
+            let n = g.usize(1..=8);
+            let v = g.vec(n, |g| g.u64(5..=9));
+            prop_assert(v.len() == n && v.iter().all(|&x| (5..=9).contains(&x)), "range")
+        });
+    }
+}

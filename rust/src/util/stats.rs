@@ -1,0 +1,198 @@
+//! Statistics primitives used by the QoS machinery (§3.3 of the paper).
+//!
+//! * [`RunningAvg`] — plain online mean (report pre-aggregation on the
+//!   QoS Reporter side).
+//! * [`WindowAvg`] — running average over measurements *fresher than t
+//!   time units*: the manager-side estimator from §3.3 ("it will keep all
+//!   latency measurement data ... fresher than t time units and discard
+//!   all older measurement data").
+//! * [`Summary`] — min/mean/max/percentile reporting for experiment
+//!   harnesses (the dot-dashed min/max lines of Figs. 7–10).
+
+use super::time::{Duration, Time};
+use std::collections::VecDeque;
+
+/// Plain online arithmetic mean with a sample count.
+#[derive(Debug, Clone, Default)]
+pub struct RunningAvg {
+    sum: f64,
+    n: u64,
+}
+
+impl RunningAvg {
+    pub fn new() -> RunningAvg {
+        RunningAvg::default()
+    }
+    pub fn add(&mut self, v: f64) {
+        self.sum += v;
+        self.n += 1;
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> Option<f64> {
+        (self.n > 0).then(|| self.sum / self.n as f64)
+    }
+    pub fn take(&mut self) -> Option<(f64, u64)> {
+        let out = self.mean().map(|m| (m, self.n));
+        *self = RunningAvg::default();
+        out
+    }
+}
+
+/// Time-windowed running average: values older than the window are
+/// discarded on insertion and query.  Weighted by sample count so that a
+/// pre-aggregated report entry (mean of k samples) counts as k samples.
+#[derive(Debug, Clone)]
+pub struct WindowAvg {
+    window: Duration,
+    entries: VecDeque<(Time, f64, u64)>,
+    sum: f64,
+    weight: u64,
+}
+
+impl WindowAvg {
+    pub fn new(window: Duration) -> WindowAvg {
+        WindowAvg { window, entries: VecDeque::new(), sum: 0.0, weight: 0 }
+    }
+
+    pub fn window(&self) -> Duration {
+        self.window
+    }
+
+    /// Insert a (possibly pre-aggregated) measurement taken at `at`.
+    pub fn add(&mut self, at: Time, mean: f64, count: u64) {
+        self.entries.push_back((at, mean, count));
+        self.sum += mean * count as f64;
+        self.weight += count;
+        self.evict(at);
+    }
+
+    fn evict(&mut self, now: Time) {
+        let cutoff = cutoff_time(now, self.window);
+        while let Some(&(t, m, c)) = self.entries.front() {
+            if t < cutoff {
+                self.sum -= m * c as f64;
+                self.weight -= c;
+                self.entries.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Running average over samples fresher than the window at `now`.
+    pub fn mean(&mut self, now: Time) -> Option<f64> {
+        self.evict(now);
+        (self.weight > 0).then(|| self.sum / self.weight as f64)
+    }
+
+    pub fn sample_count(&mut self, now: Time) -> u64 {
+        self.evict(now);
+        self.weight
+    }
+
+    /// Drop everything (used after a buffer-size change: "the QoS Manager
+    /// waits until all latency measurement values based on the old buffer
+    /// sizes have been flushed out", §3.5).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.sum = 0.0;
+        self.weight = 0;
+    }
+
+    /// Timestamp of the freshest sample, if any.
+    pub fn latest(&self) -> Option<Time> {
+        self.entries.back().map(|&(t, _, _)| t)
+    }
+}
+
+fn cutoff_time(now: Time, window: Duration) -> Time {
+    Time(now.0.saturating_sub(window.0))
+}
+
+/// Batch summary of a series (for experiment output).
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(values: &[f64]) -> Option<Summary> {
+        if values.is_empty() {
+            return None;
+        }
+        let mut sorted: Vec<f64> = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| sorted[(((sorted.len() - 1) as f64) * p).round() as usize];
+        Some(Summary {
+            n: sorted.len(),
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50: pct(0.5),
+            p99: pct(0.99),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_avg_mean() {
+        let mut a = RunningAvg::new();
+        assert_eq!(a.mean(), None);
+        a.add(1.0);
+        a.add(3.0);
+        assert_eq!(a.mean(), Some(2.0));
+        assert_eq!(a.take(), Some((2.0, 2)));
+        assert_eq!(a.mean(), None);
+    }
+
+    #[test]
+    fn window_avg_discards_stale() {
+        let mut w = WindowAvg::new(Duration::from_secs(15));
+        w.add(Time::from_secs_f64(0.0), 100.0, 1);
+        w.add(Time::from_secs_f64(10.0), 200.0, 1);
+        assert_eq!(w.mean(Time::from_secs_f64(10.0)), Some(150.0));
+        // At t=20s the first sample (age 20s) is stale, second (10s) is not.
+        assert_eq!(w.mean(Time::from_secs_f64(20.0)), Some(200.0));
+        // At t=30s everything is stale.
+        assert_eq!(w.mean(Time::from_secs_f64(30.0)), None);
+    }
+
+    #[test]
+    fn window_avg_weights_preaggregated_reports() {
+        let mut w = WindowAvg::new(Duration::from_secs(15));
+        w.add(Time(0), 10.0, 9); // mean of 9 samples
+        w.add(Time(1), 20.0, 1);
+        assert_eq!(w.mean(Time(1)), Some(11.0));
+    }
+
+    #[test]
+    fn window_avg_clear() {
+        let mut w = WindowAvg::new(Duration::from_secs(1));
+        w.add(Time(0), 5.0, 1);
+        w.clear();
+        assert_eq!(w.mean(Time(0)), None);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let v: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let s = Summary::of(&v).unwrap();
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.mean, 50.5);
+        assert_eq!(s.p50, 51.0); // index round(99*0.5)=50 -> value 51
+        assert_eq!(s.p99, 99.0);
+        assert!(Summary::of(&[]).is_none());
+    }
+}

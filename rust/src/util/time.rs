@@ -1,0 +1,159 @@
+//! Virtual time for the discrete-event simulator and shared latency math.
+//!
+//! All engine latencies — task latency, channel latency, output buffer
+//! lifetime (§3.3 of the paper) — are carried as [`Duration`]s;
+//! timestamps (tag creation times, report deadlines) as [`Time`].
+//! Resolution is one microsecond, which is far below the paper's
+//! millisecond-scale measurements and the <2 ms NTP skew of its testbed.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// An absolute point in (virtual or wall) time, in microseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Time(pub u64);
+
+/// A span of time, in microseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Duration(pub u64);
+
+impl Time {
+    pub const ZERO: Time = Time(0);
+
+    pub fn from_secs_f64(s: f64) -> Time {
+        Time((s * 1e6) as u64)
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn as_millis_f64(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+    /// Saturating difference: `self - earlier`, zero if `earlier` is later.
+    pub fn since(self, earlier: Time) -> Duration {
+        Duration(self.0.saturating_sub(earlier.0))
+    }
+}
+
+impl Duration {
+    pub const ZERO: Duration = Duration(0);
+
+    pub fn from_micros(us: u64) -> Duration {
+        Duration(us)
+    }
+    pub fn from_millis(ms: u64) -> Duration {
+        Duration(ms * 1_000)
+    }
+    pub fn from_secs(s: u64) -> Duration {
+        Duration(s * 1_000_000)
+    }
+    pub fn from_secs_f64(s: f64) -> Duration {
+        Duration((s.max(0.0) * 1e6).round() as u64)
+    }
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+    pub fn as_millis_f64(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn mul_f64(self, k: f64) -> Duration {
+        Duration::from_secs_f64(self.as_secs_f64() * k)
+    }
+    pub fn min(self, other: Duration) -> Duration {
+        Duration(self.0.min(other.0))
+    }
+    pub fn max(self, other: Duration) -> Duration {
+        Duration(self.0.max(other.0))
+    }
+}
+
+impl Add<Duration> for Time {
+    type Output = Time;
+    fn add(self, d: Duration) -> Time {
+        Time(self.0 + d.0)
+    }
+}
+
+impl AddAssign<Duration> for Time {
+    fn add_assign(&mut self, d: Duration) {
+        self.0 += d.0;
+    }
+}
+
+impl Sub<Time> for Time {
+    type Output = Duration;
+    fn sub(self, other: Time) -> Duration {
+        Duration(self.0.saturating_sub(other.0))
+    }
+}
+
+impl Add for Duration {
+    type Output = Duration;
+    fn add(self, other: Duration) -> Duration {
+        Duration(self.0 + other.0)
+    }
+}
+
+impl AddAssign for Duration {
+    fn add_assign(&mut self, other: Duration) {
+        self.0 += other.0;
+    }
+}
+
+impl Sub for Duration {
+    type Output = Duration;
+    fn sub(self, other: Duration) -> Duration {
+        Duration(self.0.saturating_sub(other.0))
+    }
+}
+
+impl fmt::Display for Time {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}s", self.as_secs_f64())
+    }
+}
+
+impl fmt::Display for Duration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1_000_000 {
+            write!(f, "{:.2}s", self.as_secs_f64())
+        } else if self.0 >= 1_000 {
+            write!(f, "{:.2}ms", self.as_millis_f64())
+        } else {
+            write!(f, "{}us", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_roundtrips() {
+        let t = Time::ZERO + Duration::from_millis(5) + Duration::from_micros(250);
+        assert_eq!(t.0, 5_250);
+        assert_eq!((t - Time::ZERO).as_millis_f64(), 5.25);
+    }
+
+    #[test]
+    fn since_saturates() {
+        assert_eq!(Time(5).since(Time(10)), Duration::ZERO);
+        assert_eq!(Time(10).since(Time(5)), Duration(5));
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(Duration::from_secs(2).to_string(), "2.00s");
+        assert_eq!(Duration::from_millis(3).to_string(), "3.00ms");
+        assert_eq!(Duration::from_micros(7).to_string(), "7us");
+    }
+
+    #[test]
+    fn mul_f64_rounds() {
+        assert_eq!(Duration::from_millis(100).mul_f64(0.5), Duration::from_millis(50));
+    }
+}

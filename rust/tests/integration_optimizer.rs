@@ -1,0 +1,202 @@
+//! Integration tests of the optimizer behaviour through the simulator:
+//! buffer-size convergence dynamics, the §3.6 fault-tolerance pinning
+//! annotation, unresolvable-constraint reporting, and determinism.
+
+use nephele::config::EngineConfig;
+use nephele::pipeline::video::{video_job, VideoSpec};
+use nephele::sim::cluster::SimCluster;
+use nephele::sim::metrics::breakdown;
+use nephele::util::time::Duration;
+
+fn small_cluster(cfg: EngineConfig, spec: VideoSpec) -> (SimCluster, nephele::graph::sequence::JobSequence) {
+    let vj = video_job(spec).unwrap();
+    let seq = vj.constrained_sequence.clone();
+    let c = SimCluster::new(vj.job, vj.rg, &vj.constraints, vj.task_specs, vj.sources, cfg)
+        .unwrap();
+    (c, seq)
+}
+
+#[test]
+fn buffer_sizes_shrink_on_slow_channels_and_respect_epsilon() {
+    let (mut cluster, _) = small_cluster(
+        EngineConfig::default().buffers_only(),
+        VideoSpec::small(),
+    );
+    cluster.run(Duration::from_secs(300), None);
+    assert!(cluster.stats.buffer_size_updates > 0);
+    // Every channel's buffer stays within [ε, ω].
+    let eps = cluster.cfg.manager.buffer.min_size;
+    let omega = cluster.cfg.manager.buffer.max_size;
+    let mut shrunk = 0;
+    for c in 0..cluster.rg.channels.len() {
+        let size = cluster.buffer_size_of(nephele::graph::ids::ChannelId(c as u32));
+        assert!(size >= eps && size <= omega, "channel {c} size {size}");
+        if size < 32 * 1024 {
+            shrunk += 1;
+        }
+    }
+    assert!(shrunk > 0, "some buffers must have shrunk");
+}
+
+#[test]
+fn pinned_vertices_are_never_chained() {
+    // §3.6: the annotation that preserves fault-tolerance
+    // materialisation points must keep pinned tasks out of chains.
+    let mut spec = VideoSpec::small();
+    spec.constraint_ms = 10; // aggressive: forces chaining attempts
+    let vj = video_job(spec).unwrap();
+    let mut job = vj.job;
+    // Pin the Merger: chains may then only form around it.
+    job.vertex_mut(vj.vertices.merger).pin_unchainable = true;
+    let mut cluster = SimCluster::new(
+        job,
+        vj.rg,
+        &vj.constraints,
+        vj.task_specs,
+        vj.sources,
+        EngineConfig::default().fully_optimized(),
+    )
+    .unwrap();
+    cluster.run(Duration::from_secs(400), None);
+    // Chains may exist (e.g. Overlay+Encoder) but no channel incident to
+    // a Merger may be chained.
+    for (i, ch) in cluster.rg.channels.clone().iter().enumerate() {
+        let from_jv = cluster.rg.vertex(ch.from).job_vertex;
+        let to_jv = cluster.rg.vertex(ch.to).job_vertex;
+        if from_jv == vj.vertices.merger || to_jv == vj.vertices.merger {
+            assert!(
+                !cluster.is_chained(nephele::graph::ids::ChannelId(i as u32)),
+                "channel {i} incident to pinned Merger was chained"
+            );
+        }
+    }
+}
+
+#[test]
+fn impossible_constraint_is_reported_unresolvable() {
+    // Chaining-only mode with an unachievable limit: once everything
+    // chainable is chained the manager has no moves left and must report
+    // the failed optimization attempt to the master (§3.5).
+    let mut spec = VideoSpec::small();
+    spec.constraint_ms = 1; // unachievable
+    let mut cfg = EngineConfig::default();
+    cfg.manager.enable_buffer_sizing = false;
+    cfg.manager.enable_chaining = true;
+    let (mut cluster, _) = small_cluster(cfg, spec);
+    cluster.run(Duration::from_secs(600), None);
+    assert!(cluster.stats.chains_established > 0, "chaining should engage first");
+    assert!(
+        cluster.stats.unresolvable_notices > 0,
+        "master must be notified of the failed optimization (§3.5)"
+    );
+}
+
+#[test]
+fn simulation_is_deterministic_for_a_seed() {
+    let run = |seed: u64| {
+        let cfg = EngineConfig { seed, ..EngineConfig::default() }.fully_optimized();
+        let (mut cluster, seq) = small_cluster(cfg, VideoSpec::small());
+        cluster.run(Duration::from_secs(200), None);
+        let now = cluster.now();
+        let b = breakdown(&mut cluster, &seq, now);
+        (
+            cluster.stats.items_delivered,
+            cluster.stats.buffer_size_updates,
+            cluster.stats.events_processed,
+            format!("{:.6}", b.total_ms()),
+        )
+    };
+    assert_eq!(run(7), run(7), "same seed, same trajectory");
+    let (a, b) = (run(7), run(8));
+    assert!(a != b, "different seeds should differ somewhere: {a:?}");
+}
+
+#[test]
+fn throughput_is_preserved_under_optimization() {
+    // "...improves the processing latency by a factor of at least 13
+    // while preserving high data throughput when needed."  Delivered
+    // item counts must not drop when the optimizations are on.
+    let (mut unopt, _) = small_cluster(
+        EngineConfig::default().unoptimized(),
+        VideoSpec::small(),
+    );
+    unopt.run(Duration::from_secs(300), None);
+    let (mut opt, _) = small_cluster(
+        EngineConfig::default().fully_optimized(),
+        VideoSpec::small(),
+    );
+    opt.run(Duration::from_secs(300), None);
+    let sink_unopt = unopt.stats.e2e_count as f64;
+    let sink_opt = opt.stats.e2e_count as f64;
+    assert!(
+        sink_opt >= 0.95 * sink_unopt,
+        "optimized pipeline delivered {sink_opt} vs {sink_unopt}"
+    );
+}
+
+#[test]
+fn merger_task_latency_anomaly_shrinks_with_small_buffers() {
+    // §4.3.1 explains the anomalous Merger task latency by grouped
+    // frames arriving in different (large, slow) buffers; §4.3.4 notes
+    // the anomaly shrinks when frames arrive more continuously.  With
+    // adaptive buffers the Merger mean task latency must drop.
+    let merger_latency = |cfg: EngineConfig| {
+        let (mut cluster, seq) = small_cluster(cfg, VideoSpec::small());
+        cluster.run(Duration::from_secs(400), None);
+        let now = cluster.now();
+        let b = breakdown(&mut cluster, &seq, now);
+        b.rows
+            .iter()
+            .find_map(|r| match r {
+                nephele::sim::metrics::Row::Task { name, mean_ms } if name == "Merger" => {
+                    Some(*mean_ms)
+                }
+                _ => None,
+            })
+            .unwrap()
+    };
+    let unopt = merger_latency(EngineConfig::default().unoptimized());
+    let opt = merger_latency(EngineConfig::default().buffers_only());
+    assert!(
+        opt < unopt / 2.0,
+        "merger anomaly should shrink: {unopt:.1} -> {opt:.1} ms"
+    );
+}
+
+#[test]
+fn convergence_survives_large_clock_skew() {
+    // Failure injection: tag-based channel latency crosses workers and
+    // sees NTP skew (§3.3 "clock synchronization is required"; §4.2
+    // reports <2 ms).  With a pathological 50 ms skew the measurements
+    // are biased but the control loop must still converge (skewed
+    // samples are clamped at zero, never negative).
+    let mut cfg = EngineConfig::default().fully_optimized();
+    cfg.cluster.max_clock_skew = nephele::util::time::Duration::from_millis(50);
+    let (mut cluster, seq) = small_cluster(cfg, VideoSpec::small());
+    cluster.run(Duration::from_secs(400), None);
+    let now = cluster.now();
+    let b = breakdown(&mut cluster, &seq, now);
+    assert!(cluster.stats.buffer_size_updates > 0, "optimizer still acts");
+    assert!(
+        b.total_ms() < 1000.0,
+        "converged despite skew: {:.1} ms",
+        b.total_ms()
+    );
+}
+
+#[test]
+fn drop_policy_chaining_discards_inner_queues() {
+    // §3.5.2 option 1: dropping the queues between chained tasks is
+    // sanctioned loss (e.g. video frames).  Verify the accounting.
+    let mut spec = VideoSpec::small();
+    spec.constraint_ms = 10; // force chaining quickly
+    let mut cfg = EngineConfig::default().fully_optimized();
+    cfg.manager.chaining.drain = nephele::actions::chaining::DrainPolicy::Drop;
+    let (mut cluster, _) = small_cluster(cfg, spec);
+    cluster.run(Duration::from_secs(400), None);
+    assert!(cluster.stats.chains_established > 0);
+    // Items may or may not be in flight at chain time; the counter must
+    // be consistent (sink + dropped <= ingested).
+    let s = &cluster.stats;
+    assert!(s.e2e_count + s.dropped_on_chain <= s.items_ingested);
+}

@@ -1,0 +1,170 @@
+//! Runtime-bridge integration: load the AOT artifacts produced by
+//! `make artifacts` and execute them on the PJRT CPU client, checking
+//! the codec semantics end to end from Rust — the exact path the live
+//! engine's tasks use at request time.
+//!
+//! Requires `artifacts/` (run `make artifacts` first).
+
+use nephele::runtime::StageRuntime;
+use std::cell::OnceCell;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+thread_local! {
+    // The xla crate's PJRT handles are !Send/!Sync (Rc internals): the
+    // runtime is confined to the thread that created it — same
+    // discipline the live engine uses (one compute thread per worker).
+    static RT: OnceCell<StageRuntime> = const { OnceCell::new() };
+}
+
+fn with_runtime<T>(f: impl FnOnce(&StageRuntime) -> T) -> T {
+    RT.with(|cell| {
+        let rt = cell.get_or_init(|| {
+            StageRuntime::load(&artifacts_dir())
+                .expect("run `make artifacts` before `cargo test`")
+        });
+        f(rt)
+    })
+}
+
+#[test]
+fn all_stages_load_and_declare_shapes() {
+    with_runtime(|rt| {
+    let names: Vec<&str> = rt.stage_names().collect();
+    for expect in ["decoder", "merger", "overlay", "encoder", "chained"] {
+        assert!(names.contains(&expect), "missing stage {expect}");
+    }
+    let (h, w) = (rt.manifest.frame_h, rt.manifest.frame_w);
+    assert_eq!(rt.stage("decoder").unwrap().spec.input_shapes, vec![vec![h, w]]);
+    assert_eq!(
+        rt.stage("merger").unwrap().spec.input_shapes,
+        vec![vec![4, h, w]]
+    );
+    assert_eq!(
+        rt.stage("encoder").unwrap().spec.input_shapes,
+        vec![vec![2 * h, 2 * w]]
+    );
+    });
+}
+
+#[test]
+fn merger_tiles_quadrants_exactly() {
+    with_runtime(|rt| {
+    let (h, w) = (rt.manifest.frame_h, rt.manifest.frame_w);
+    let mut group = vec![0f32; 4 * h * w];
+    for g in 0..4 {
+        for i in 0..h * w {
+            group[g * h * w + i] = g as f32;
+        }
+    }
+    let out = rt.stage("merger").unwrap().run(&[&group]).unwrap();
+    assert_eq!(out.len(), 4 * h * w);
+    let (h2, w2) = (2 * h, 2 * w);
+    let at = |r: usize, c: usize| out[r * w2 + c];
+    assert_eq!(at(0, 0), 0.0);
+    assert_eq!(at(0, w), 1.0);
+    assert_eq!(at(h, 0), 2.0);
+    assert_eq!(at(h, w), 3.0);
+    // Quadrant interiors are constant.
+    assert_eq!(at(h / 2, w / 2), 0.0);
+    assert_eq!(at(h + h / 2, w + w / 2), 3.0);
+    });
+}
+
+#[test]
+fn overlay_alpha_zero_is_identity() {
+    with_runtime(|rt| {
+    let (h2, w2) = (2 * rt.manifest.frame_h, 2 * rt.manifest.frame_w);
+    let frame: Vec<f32> = (0..h2 * w2).map(|i| (i % 251) as f32).collect();
+    let image = vec![42f32; h2 * w2];
+    let alpha = vec![0f32; h2 * w2];
+    let out = rt
+        .stage("overlay")
+        .unwrap()
+        .run(&[&frame, &image, &alpha])
+        .unwrap();
+    assert_eq!(out, frame);
+    });
+}
+
+#[test]
+fn encoder_produces_integral_sparse_dc_coefficients() {
+    // A constant frame is DC-only: its encoding has at most one nonzero
+    // (integral) coefficient per 8x8 block.
+    with_runtime(|rt| {
+    let (h2, w2) = (2 * rt.manifest.frame_h, 2 * rt.manifest.frame_w);
+    let frame = vec![128f32; h2 * w2];
+    let coeffs = rt.stage("encoder").unwrap().run(&[&frame]).unwrap();
+    let nonzero = coeffs.iter().filter(|&&c| c != 0.0).count();
+    assert!(nonzero <= (h2 / 8) * (w2 / 8), "DC-only expected, got {nonzero} nonzeros");
+    for c in &coeffs {
+        assert_eq!(c.fract(), 0.0, "quantised coefficients are integral");
+    }
+    });
+}
+
+#[test]
+fn chained_artifact_equals_stage_composition() {
+    // The fused Decoder->Merger->Overlay->Encoder executable must equal
+    // running the four stage executables back to back: this is the
+    // invariant that makes swapping it in under dynamic task chaining
+    // semantics-preserving.
+    with_runtime(|rt| {
+    let (h, w) = (rt.manifest.frame_h, rt.manifest.frame_w);
+    let (h2, w2) = (2 * h, 2 * w);
+
+    // Deterministic pseudo-random integral coefficients.
+    let mut seed = 0x12345678u32;
+    let mut next = || {
+        seed = seed.wrapping_mul(1664525).wrapping_add(1013904223);
+        ((seed >> 16) % 41) as f32 - 20.0
+    };
+    let coeffs: Vec<f32> = (0..4 * h * w).map(|_| next()).collect();
+    let image: Vec<f32> = (0..h2 * w2).map(|i| (i % 97) as f32).collect();
+    let mut alpha = vec![0f32; h2 * w2];
+    for r in (h2 - 8)..h2 {
+        for c in 0..w2 {
+            alpha[r * w2 + c] = 0.5;
+        }
+    }
+
+    // Stage composition.
+    let decoder = rt.stage("decoder").unwrap();
+    let mut frames = Vec::with_capacity(4 * h * w);
+    for g in 0..4 {
+        let frame = decoder.run(&[&coeffs[g * h * w..(g + 1) * h * w]]).unwrap();
+        frames.extend(frame);
+    }
+    let merged = rt.stage("merger").unwrap().run(&[&frames]).unwrap();
+    let composited = rt
+        .stage("overlay")
+        .unwrap()
+        .run(&[&merged, &image, &alpha])
+        .unwrap();
+    let staged = rt.stage("encoder").unwrap().run(&[&composited]).unwrap();
+
+    // Fused artifact.
+    let fused = rt
+        .stage("chained")
+        .unwrap()
+        .run(&[&coeffs, &image, &alpha])
+        .unwrap();
+
+    assert_eq!(staged.len(), fused.len());
+    let max_err = staged
+        .iter()
+        .zip(&fused)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err <= 1.0, "fused vs staged max err {max_err} (rounding boundary)");
+    let diff_count = staged.iter().zip(&fused).filter(|(a, b)| a != b).count();
+    assert!(
+        diff_count as f64 <= 0.001 * staged.len() as f64,
+        "{diff_count}/{} coefficients differ",
+        staged.len()
+    );
+    });
+}

@@ -1,0 +1,96 @@
+//! Integration tests of the distributed QoS setup (Algorithms 1–3) at
+//! the paper's full scale: the m=800 / n=200 evaluation job with its
+//! 512e6 runtime constraints must be partitioned over 200 managers in
+//! well under a second, with exact coverage.
+
+use nephele::pipeline::video::{video_job, VideoSpec};
+use nephele::qos::setup::compute_qos_setup;
+use std::time::Instant;
+
+#[test]
+fn paper_scale_setup_covers_all_512m_sequences() {
+    let vj = video_job(VideoSpec::default()).unwrap();
+    let total = vj.constraints[0].sequence.count_runtime(&vj.job, &vj.rg);
+    assert_eq!(total, 512_000_000);
+
+    let t0 = Instant::now();
+    let setup = compute_qos_setup(&vj.job, &vj.rg, &vj.constraints).unwrap();
+    let elapsed = t0.elapsed();
+
+    // One manager per worker hosting anchor (Decoder) subtasks.
+    assert_eq!(setup.managers.len(), 200);
+    // Exactly-once coverage: the per-manager counts add up to the total.
+    assert_eq!(setup.covered_sequences(), total);
+    // Every worker runs constrained tasks, so every worker reports.
+    assert_eq!(setup.reporters.len(), 200);
+    // The whole setup is a master-side computation: it must stay cheap
+    // even at this scale ("the main complexity lies in assigning the
+    // QoS Manager role", §3.4.2).
+    assert!(
+        elapsed.as_secs_f64() < 10.0,
+        "setup took {elapsed:?} for 512e6 constraints"
+    );
+}
+
+#[test]
+fn paper_scale_manager_subgraphs_are_balanced_and_small() {
+    let vj = video_job(VideoSpec::default()).unwrap();
+    let setup = compute_qos_setup(&vj.job, &vj.rg, &vj.constraints).unwrap();
+    for (w, sub) in &setup.managers {
+        // m/n = 4 anchor decoders per worker -> 4 chains.
+        assert_eq!(sub.chains.len(), 4, "manager {w}");
+        // Chain: 800 (e1) + 7 pointwise/vertex + 800 (e5) elements; the
+        // subgraph must NOT materialise the m^3 sequences.
+        for chain in &sub.chains {
+            let elems: usize = chain.layers.iter().map(|l| l.len()).sum();
+            assert!(elems <= 2 * 800 + 7, "chain has {elems} elements");
+            assert_eq!(chain.sequence_count(), 800 * 800);
+        }
+    }
+}
+
+#[test]
+fn reporter_load_is_distributed() {
+    // Objective 1 of §3.4.2: spreading managers minimises per-manager
+    // work.  Check that reporter interest is spread across all workers
+    // rather than concentrated.
+    let vj = video_job(VideoSpec::small()).unwrap();
+    let setup = compute_qos_setup(&vj.job, &vj.rg, &vj.constraints).unwrap();
+    let sizes: Vec<usize> = setup
+        .reporters
+        .values()
+        .map(|a| a.interest.len())
+        .collect();
+    let max = *sizes.iter().max().unwrap();
+    let min = *sizes.iter().min().unwrap();
+    assert!(
+        max <= 2 * min.max(1),
+        "reporter duties skewed: min {min}, max {max}"
+    );
+}
+
+#[test]
+fn multi_constraint_setup_merges_managers() {
+    // Two constraints over overlapping paths must merge into the same
+    // per-worker managers (Algorithm 1 lines 4-6), not spawn duplicates.
+    use nephele::graph::constraint::JobConstraint;
+    use nephele::graph::sequence::JobSequence;
+    use nephele::util::time::Duration;
+
+    let vj = video_job(VideoSpec::small()).unwrap();
+    let sub_seq = JobSequence::along_path(
+        &vj.job,
+        &[vj.vertices.decoder, vj.vertices.merger],
+        Some(vj.vertices.partitioner),
+        None,
+    )
+    .unwrap();
+    let extra = JobConstraint::new(sub_seq, Duration::from_millis(100), Duration::from_secs(5));
+    let constraints = vec![vj.constraints[0].clone(), extra];
+    let setup = compute_qos_setup(&vj.job, &vj.rg, &constraints).unwrap();
+    assert_eq!(setup.managers.len(), 4, "still one manager per worker");
+    for sub in setup.managers.values() {
+        assert_eq!(sub.constraints.len(), 2);
+        assert_eq!(sub.chains.len(), 4, "2 anchors x 2 constraints");
+    }
+}

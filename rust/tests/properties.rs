@@ -1,0 +1,196 @@
+//! Cross-module property tests over randomly generated job graphs:
+//! the §3.4.2 setup invariants (exact coverage, minimality, correct
+//! reporter placement) and engine conservation laws must hold for any
+//! valid pipeline, not just the paper's evaluation job.
+
+use nephele::config::EngineConfig;
+use nephele::graph::constraint::JobConstraint;
+use nephele::graph::ids::JobVertexId;
+use nephele::graph::job::{DistributionPattern, JobGraph};
+use nephele::graph::runtime::RuntimeGraph;
+use nephele::graph::sequence::JobSequence;
+use nephele::qos::sample::{ElementKey, MetricKind};
+use nephele::qos::setup::compute_qos_setup;
+use nephele::sim::cluster::{SimCluster, SourceSpec};
+use nephele::sim::task::{KeyMap, OutBytes, Route, Semantics, TaskSpec};
+use nephele::util::proptest::{check, prop_assert, prop_assert_eq, Gen, PropResult};
+use nephele::util::time::Duration;
+
+/// Generate a random linear pipeline job graph (the shape supported by
+/// the sim's routing), with random parallelism, edge patterns, workers.
+struct RandomJob {
+    job: JobGraph,
+    rg: RuntimeGraph,
+    constraint: JobConstraint,
+    specs: Vec<TaskSpec>,
+    sources: Vec<SourceSpec>,
+}
+
+fn random_pipeline(g: &mut Gen) -> RandomJob {
+    let stages = g.usize(3..=6);
+    let m = g.u32(1..=6);
+    let workers = g.u32(1..=m.min(4));
+    let mut job = JobGraph::new();
+    let ids: Vec<JobVertexId> = (0..stages)
+        .map(|i| job.add_vertex(&format!("s{i}"), m))
+        .collect();
+    for w in ids.windows(2) {
+        let pattern = if g.bool() {
+            DistributionPattern::Pointwise
+        } else {
+            DistributionPattern::AllToAll
+        };
+        job.connect(w[0], w[1], pattern);
+    }
+    job.validate().unwrap();
+    let rg = RuntimeGraph::expand(&job, workers).unwrap();
+
+    // Constrain a random contiguous sub-path (always ending inside the
+    // graph so lead-in/out edges may or may not be used).
+    let lo = g.usize(1..=stages - 2);
+    let hi = g.usize(lo..=stages - 2);
+    let lead_in = Some(ids[lo - 1]);
+    let lead_out = if g.bool() && hi + 1 < stages { Some(ids[hi + 1]) } else { None };
+    let seq =
+        JobSequence::along_path(&job, &ids[lo..=hi], lead_in, lead_out).unwrap();
+    let constraint =
+        JobConstraint::new(seq, Duration::from_millis(g.u64(50..=2000)), Duration::from_secs(10));
+
+    let specs: Vec<TaskSpec> = (0..stages)
+        .map(|i| {
+            if i + 1 == stages {
+                TaskSpec::sink()
+            } else {
+                TaskSpec {
+                    semantics: Semantics::Transform,
+                    service: Duration::from_micros(g.u64(10..=2000)),
+                    out_bytes: OutBytes::Const(g.u64(1024..=64 * 1024)),
+                    key_map: KeyMap::Identity,
+                    route: if g.bool() {
+                        Route::Pointwise
+                    } else {
+                        Route::ByKey { divisor: 1 }
+                    },
+                    downstream_delay: Duration::ZERO,
+                }
+            }
+        })
+        .collect();
+    // Only pointwise routes on pointwise edges: fix up.
+    let mut specs = specs;
+    for (i, e) in job.edges.iter().enumerate() {
+        if e.pattern == DistributionPattern::Pointwise {
+            specs[i].route = Route::Pointwise;
+        } else {
+            specs[i].route = Route::ByKey { divisor: 1 };
+        }
+    }
+
+    let sources = (0..g.u32(1..=8))
+        .map(|k| SourceSpec {
+            key: k,
+            target: ids[0],
+            target_subtask: k % m,
+            interval: Duration::from_millis(g.u64(5..=200)),
+            bytes: g.u64(1024..=8 * 1024),
+            offset: Duration::from_millis(g.u64(0..=50)),
+            throttle: None,
+            batch: 1,
+        })
+        .collect();
+
+    RandomJob { job, rg, constraint, specs, sources }
+}
+
+fn setup_invariants(g: &mut Gen) -> PropResult {
+    let rj = random_pipeline(g);
+    let total = rj.constraint.sequence.count_runtime(&rj.job, &rj.rg);
+    let setup = compute_qos_setup(&rj.job, &rj.rg, &[rj.constraint.clone()])
+        .map_err(|e| format!("setup failed: {e}"))?;
+
+    // (1) Exact coverage: union of manager-covered sequences equals the
+    // full runtime constraint set, pairwise disjoint (counts add up).
+    prop_assert_eq(setup.covered_sequences(), total, "sequence coverage")?;
+
+    // (2) Minimality: subgraph vertices only from constrained job
+    // vertices.
+    let constrained: std::collections::HashSet<JobVertexId> =
+        rj.constraint.sequence.vertices().into_iter().collect();
+    for sub in setup.managers.values() {
+        for chain in &sub.chains {
+            for v in chain.vertices() {
+                prop_assert(
+                    constrained.contains(&v.job_vertex),
+                    format!("subgraph vertex {} not constrained", v.id),
+                )?;
+            }
+        }
+    }
+
+    // (3) Reporter placement: task metrics local; channel latency at the
+    // receiver; oblt at the sender.
+    for (w, assignment) in &setup.reporters {
+        for ((elem, kind), managers) in &assignment.interest {
+            prop_assert(!managers.is_empty(), "empty interest")?;
+            match (elem, kind) {
+                (ElementKey::Vertex(v), _) => {
+                    prop_assert_eq(rj.rg.worker(*v), *w, "task metric locality")?
+                }
+                (ElementKey::Channel(c), MetricKind::ChannelLatency) => prop_assert_eq(
+                    rj.rg.worker(rj.rg.channel(*c).to),
+                    *w,
+                    "latency at receiver",
+                )?,
+                (ElementKey::Channel(c), MetricKind::OutputBufferLifetime) => prop_assert_eq(
+                    rj.rg.worker(rj.rg.channel(*c).from),
+                    *w,
+                    "oblt at sender",
+                )?,
+                other => prop_assert(false, format!("unexpected interest {other:?}"))?,
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn qos_setup_invariants_hold_for_random_pipelines() {
+    check(60, setup_invariants);
+}
+
+fn conservation(g: &mut Gen) -> PropResult {
+    let rj = random_pipeline(g);
+    let cfg = EngineConfig {
+        seed: g.u64(0..=u64::MAX),
+        ..EngineConfig::default()
+    }
+    .fully_optimized();
+    let mut cluster = match SimCluster::new(
+        rj.job, rj.rg, &[rj.constraint], rj.specs, rj.sources, cfg,
+    ) {
+        Ok(c) => c,
+        Err(e) => return Err(format!("cluster build failed: {e}")),
+    };
+    cluster.run(Duration::from_secs(60), None);
+
+    // Conservation: no item is created or destroyed inside the pipeline
+    // (drop-on-chain is the only sanctioned loss and our DrainPolicy is
+    // Drain).  Items still in flight (buffers/queues) account for the
+    // difference between ingested and sunk.
+    let s = &cluster.stats;
+    prop_assert(s.items_ingested > 0, "sources must produce")?;
+    prop_assert_eq(s.dropped_on_chain, 0, "drain policy drops nothing")?;
+    prop_assert(
+        s.e2e_count <= s.items_ingested,
+        format!("sink overrun: {} > {}", s.e2e_count, s.items_ingested),
+    )?;
+    // With transforms only (no merge), at least something must reach the
+    // sink on a 60s horizon.
+    prop_assert(s.e2e_count > 0, "nothing reached the sink")?;
+    Ok(())
+}
+
+#[test]
+fn item_conservation_holds_for_random_pipelines() {
+    check(40, conservation);
+}
