@@ -136,6 +136,8 @@ mod tests {
             in_degree: in_deg,
             out_degree: out_deg,
             pinned,
+            elastic: false,
+            base_parallelism: 1,
             cpu_estimate: 0.1,
         }
     }

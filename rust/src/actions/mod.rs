@@ -1,12 +1,14 @@
 //! Countermeasures a QoS Manager can take on a constraint violation
-//! (§3.5): adaptive output buffer sizing and dynamic task chaining, plus
-//! the worker-side arbitration of concurrent buffer updates.
+//! (§3.5): adaptive output buffer sizing, dynamic task chaining and — a
+//! reproduction extension — elastic task scaling, plus the worker-side
+//! arbitration of concurrent buffer updates.
 
 pub mod arbiter;
 pub mod buffer_sizing;
 pub mod chaining;
+pub mod scaling;
 
-use crate::graph::ids::{ChannelId, VertexId, WorkerId};
+use crate::graph::ids::{ChannelId, JobVertexId, VertexId, WorkerId};
 use crate::util::time::Time;
 
 /// An action issued by a QoS Manager towards a worker node (or, for
@@ -31,6 +33,20 @@ pub enum Action {
         tasks: Vec<VertexId>,
         /// How to treat the input queues between the chained tasks.
         drain: chaining::DrainPolicy,
+    },
+    /// Change the degree of parallelism of a task group (elastic scaling,
+    /// escalation tier 3).  Applied by the master: it spawns/retires
+    /// runtime instances, rewires their channels and rebuilds the QoS
+    /// setup for the new topology.
+    ScaleTasks {
+        /// The task group (job vertex) whose parallelism changes.
+        group: JobVertexId,
+        /// Instances to add (positive) or retire (negative).
+        delta: i32,
+        /// Measurement-state time the deciding manager acted on; the
+        /// master discards decisions staler than the last applied rescale
+        /// of the group (first-wins, mirroring §3.5.1 buffer arbitration).
+        based_on: Time,
     },
     /// All countermeasure preconditions are exhausted but the constraint
     /// is still violated: notify the master, who notifies the user "who

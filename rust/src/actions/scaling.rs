@@ -1,0 +1,195 @@
+//! Elastic task scaling — the third countermeasure in the escalation
+//! order (reproduction extension to §3.5).
+//!
+//! The paper's scheme stops at adaptive output buffer sizing and dynamic
+//! task chaining and then reports `Unresolvable`; it never adjusts
+//! parallelism, the main degree of freedom later elastic stream
+//! processors exploit (Röger & Mayer's survey on parallelization and
+//! elasticity; Fragkoulis et al.).  When both paper countermeasures are
+//! out of moves on a violated sequence, the QoS Manager selects the
+//! *bottleneck task group* — the elastic job vertex whose runtime vertex
+//! on the worst max-plus path carries the highest latency (task latency
+//! plus the queueing latency of the channel feeding it) — and asks the
+//! master to change its degree of parallelism.
+//!
+//! Preconditions mirror the chaining conditions in spirit:
+//! * the job vertex is annotated [`elastic`](crate::graph::job::JobVertex::elastic),
+//! * its incident edges are all-to-all (key-hash routing re-partitions
+//!   load over however many consumers exist), and
+//! * its task semantics are stateless (enforced by the master on apply).
+
+use crate::graph::ids::{JobVertexId, VertexId};
+use crate::qos::sample::ElementKey;
+use crate::qos::subgraph::VertexRef;
+use std::collections::BTreeMap;
+
+/// Scaling tunables.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScalingConfig {
+    /// Hard upper bound on a task group's degree of parallelism.  Once a
+    /// manager has requested up to this bound the tier counts as
+    /// exhausted (and `Unresolvable` may be reported).
+    pub max_parallelism: u32,
+    /// Instances requested per scale-up action.
+    pub scale_step: u32,
+    /// Scale down when the worst sequence latency is below this fraction
+    /// of the constraint limit (hysteresis margin).
+    pub scale_down_margin: f64,
+    /// Arm the scale-down path (off by default: the paper's scheme only
+    /// ever *reduces* latency, and scale-down risks oscillation unless
+    /// the margin is generous).
+    pub enable_scale_down: bool,
+}
+
+impl Default for ScalingConfig {
+    fn default() -> Self {
+        ScalingConfig {
+            max_parallelism: 16,
+            scale_step: 1,
+            scale_down_margin: 0.3,
+            enable_scale_down: false,
+        }
+    }
+}
+
+/// Shared worst-path traversal: score every elastic vertex by its
+/// *attributed latency* — task latency plus the latency of the channel
+/// element immediately preceding it on the path (input-queue wait shows
+/// up there, §3.3) — and keep the best according to `prefer_higher`.
+fn pick_by(
+    worst_path: &[(ElementKey, f64)],
+    vertex_refs: &BTreeMap<VertexId, VertexRef>,
+    prefer_higher: bool,
+    eligible: impl Fn(&VertexRef) -> bool,
+) -> Option<(JobVertexId, VertexId, f64)> {
+    let mut best: Option<(JobVertexId, VertexId, f64)> = None;
+    let mut prev_channel_lat = 0.0;
+    for &(elem, lat) in worst_path {
+        match elem {
+            ElementKey::Channel(_) => prev_channel_lat = lat,
+            ElementKey::Vertex(v) => {
+                if let Some(vr) = vertex_refs.get(&v) {
+                    if vr.elastic && eligible(vr) {
+                        let score = lat + prev_channel_lat;
+                        let better = best.map_or(true, |(_, _, b)| {
+                            if prefer_higher {
+                                score > b
+                            } else {
+                                score < b
+                            }
+                        });
+                        if better {
+                            best = Some((vr.job_vertex, v, score));
+                        }
+                    }
+                }
+                prev_channel_lat = 0.0;
+            }
+        }
+    }
+    best
+}
+
+/// Pick the bottleneck task group on a violated worst path: among the
+/// elastic vertices, the one with the *highest* attributed latency.
+/// Returns `(job vertex, runtime vertex, attributed latency µs)`.
+pub fn pick_scale_target(
+    worst_path: &[(ElementKey, f64)],
+    vertex_refs: &BTreeMap<VertexId, VertexRef>,
+) -> Option<(JobVertexId, VertexId, f64)> {
+    pick_by(worst_path, vertex_refs, true, |_| true)
+}
+
+/// Scale-down trigger: a comfortably satisfied constraint.
+pub fn should_scale_down(worst_us: f64, limit_us: f64, cfg: &ScalingConfig) -> bool {
+    cfg.enable_scale_down && worst_us < limit_us * cfg.scale_down_margin
+}
+
+/// Pick the task group to release capacity from on a comfortably
+/// satisfied path: among the elastic vertices whose group is `eligible`
+/// (above its base parallelism), the one with the *lowest* attributed
+/// latency — shrinking the least-loaded group is least likely to
+/// re-violate the constraint and oscillate.
+pub fn pick_release_target(
+    worst_path: &[(ElementKey, f64)],
+    vertex_refs: &BTreeMap<VertexId, VertexRef>,
+    eligible: impl Fn(JobVertexId, u32) -> bool,
+) -> Option<(JobVertexId, VertexId, f64)> {
+    pick_by(worst_path, vertex_refs, false, |vr| {
+        eligible(vr.job_vertex, vr.base_parallelism)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ids::{ChannelId, WorkerId};
+
+    fn vref(id: u32, elastic: bool) -> VertexRef {
+        VertexRef {
+            id: VertexId(id),
+            job_vertex: JobVertexId(id),
+            worker: WorkerId(0),
+            in_degree: 2,
+            out_degree: 2,
+            pinned: false,
+            elastic,
+            base_parallelism: 1,
+            cpu_estimate: 0.1,
+        }
+    }
+
+    fn path() -> Vec<(ElementKey, f64)> {
+        vec![
+            (ElementKey::Channel(ChannelId(0)), 50_000.0),
+            (ElementKey::Vertex(VertexId(10)), 4_000.0),
+            (ElementKey::Channel(ChannelId(1)), 1_000.0),
+            (ElementKey::Vertex(VertexId(11)), 9_000.0),
+        ]
+    }
+
+    #[test]
+    fn picks_highest_attributed_latency_among_elastic() {
+        let refs: BTreeMap<VertexId, VertexRef> =
+            [(VertexId(10), vref(10, true)), (VertexId(11), vref(11, true))].into();
+        // v10 scores 50k (queue wait) + 4k; v11 scores 1k + 9k.
+        let (jv, v, score) = pick_scale_target(&path(), &refs).unwrap();
+        assert_eq!((jv, v), (JobVertexId(10), VertexId(10)));
+        assert_eq!(score, 54_000.0);
+    }
+
+    #[test]
+    fn non_elastic_vertices_are_skipped() {
+        let refs: BTreeMap<VertexId, VertexRef> =
+            [(VertexId(10), vref(10, false)), (VertexId(11), vref(11, true))].into();
+        let (jv, _, _) = pick_scale_target(&path(), &refs).unwrap();
+        assert_eq!(jv, JobVertexId(11));
+
+        let none: BTreeMap<VertexId, VertexRef> =
+            [(VertexId(10), vref(10, false)), (VertexId(11), vref(11, false))].into();
+        assert!(pick_scale_target(&path(), &none).is_none());
+    }
+
+    #[test]
+    fn release_target_is_least_loaded_eligible_group() {
+        let refs: BTreeMap<VertexId, VertexRef> =
+            [(VertexId(10), vref(10, true)), (VertexId(11), vref(11, true))].into();
+        // v11 scores 10k vs v10's 54k: the least-loaded group is released.
+        let (jv, _, score) = pick_release_target(&path(), &refs, |_, _| true).unwrap();
+        assert_eq!(jv, JobVertexId(11));
+        assert_eq!(score, 10_000.0);
+        // Eligibility filter (e.g. "above base parallelism") is honoured.
+        let only_v10 = pick_release_target(&path(), &refs, |jv, _| jv == JobVertexId(10));
+        assert_eq!(only_v10.unwrap().0, JobVertexId(10));
+        assert!(pick_release_target(&path(), &refs, |_, _| false).is_none());
+    }
+
+    #[test]
+    fn scale_down_respects_margin_and_arming() {
+        let mut cfg = ScalingConfig { enable_scale_down: true, ..ScalingConfig::default() };
+        assert!(should_scale_down(20_000.0, 100_000.0, &cfg));
+        assert!(!should_scale_down(50_000.0, 100_000.0, &cfg));
+        cfg.enable_scale_down = false;
+        assert!(!should_scale_down(20_000.0, 100_000.0, &cfg));
+    }
+}

@@ -1,12 +1,16 @@
 //! Shared CLI plumbing for the figure binaries (no clap in the offline
 //! build; a tiny hand-rolled parser suffices).
 
+// Each binary includes this module via #[path] and uses a subset of it.
+#![allow(unused_imports, dead_code)]
+
 use anyhow::{bail, Result};
 use nephele::config::EngineConfig;
 use nephele::experiments::video_scenarios::ScenarioReport;
 use nephele::pipeline::video::VideoSpec;
 
 /// Parse `--scale small|paper --secs N --seed N --quiet --constraint-ms N`.
+#[allow(dead_code)]
 pub fn video_args(
     args: impl Iterator<Item = String>,
     default_secs: u64,
@@ -59,6 +63,72 @@ pub fn video_args(
     Ok((spec, cfg, secs, verbose))
 }
 
+/// Parse the load-surge driver's arguments (`argv` holds only the
+/// flags, with the program/subcommand name already stripped):
+/// `--secs N --seed N --scaling true|false --surge-at SECS --constraint-ms N --quiet`.
+/// Returns `(spec, cfg, secs, scaling_enabled, verbose)`.
+pub fn surge_args(
+    argv: &[String],
+    default_secs: u64,
+) -> Result<(nephele::pipeline::surge::SurgeSpec, EngineConfig, u64, bool, bool)> {
+    let mut spec = nephele::pipeline::surge::SurgeSpec::default();
+    let mut cfg = EngineConfig::default();
+    let mut secs = default_secs;
+    let mut scaling = true;
+    let mut verbose = true;
+    let mut i = 0;
+    while i < argv.len() {
+        let need = |i: usize| -> Result<&String> {
+            argv.get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("missing value after {}", argv[i]))
+        };
+        match argv[i].as_str() {
+            "--secs" => {
+                secs = need(i)?.parse()?;
+                i += 2;
+            }
+            "--seed" => {
+                cfg.seed = need(i)?.parse()?;
+                i += 2;
+            }
+            "--scaling" => {
+                scaling = need(i)?.parse()?;
+                i += 2;
+            }
+            "--surge-at" => {
+                spec.surge_at = nephele::util::time::Duration::from_secs(need(i)?.parse()?);
+                i += 2;
+            }
+            "--constraint-ms" => {
+                spec.constraint_ms = need(i)?.parse()?;
+                i += 2;
+            }
+            "--quiet" => {
+                verbose = false;
+                i += 1;
+            }
+            "--help" | "-h" => {
+                println!(
+                    "usage: [--secs N] [--seed N] [--scaling true|false] [--surge-at SECS] \
+                     [--constraint-ms N] [--quiet]"
+                );
+                std::process::exit(0);
+            }
+            other => bail!("unknown argument {other:?}"),
+        }
+    }
+    Ok((spec, cfg, secs, scaling, verbose))
+}
+
+/// Shared output of the load-surge drivers (`surge` binary and
+/// `nephele sim-surge`).
+pub fn print_surge_summary(report: &nephele::experiments::load_surge::SurgeReport) {
+    println!("== load surge — elastic task scaling ==");
+    print!("{}", report.final_breakdown.render());
+    println!("{}", nephele::experiments::load_surge::render_summary(report));
+}
+
+#[allow(dead_code)]
 pub fn print_scenario_summary(r: &ScenarioReport) {
     println!("== {} ==", r.scenario.title());
     println!(

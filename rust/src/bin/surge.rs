@@ -1,0 +1,19 @@
+//! Load-surge scenario driver: the elastic-scaling countermeasure end to
+//! end.  Runs the surge job (base load -> surge -> overload) with the
+//! requested countermeasure set and prints the recovery summary.
+//!
+//! Usage: `surge [--secs N] [--seed N] [--scaling true|false]
+//!               [--surge-at SECS] [--constraint-ms N] [--quiet]`
+
+#[path = "figbin_common.rs"]
+mod figbin;
+
+use nephele::experiments::load_surge::run_load_surge;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (spec, cfg, secs, scaling, verbose) = figbin::surge_args(&argv, 360)?;
+    let report = run_load_surge(spec, cfg, scaling, secs, verbose)?;
+    figbin::print_surge_summary(&report);
+    Ok(())
+}

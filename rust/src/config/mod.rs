@@ -101,6 +101,15 @@ impl EngineConfig {
         self.manager.enable_chaining = true;
         self
     }
+
+    /// Scenario extension: all three countermeasures, including elastic
+    /// task scaling (the reproduction's addition on top of §4.3.3).
+    pub fn with_scaling(mut self) -> Self {
+        self.manager.enable_buffer_sizing = true;
+        self.manager.enable_chaining = true;
+        self.manager.enable_scaling = true;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +124,13 @@ mod tests {
         assert!(c.manager.enable_buffer_sizing && !c.manager.enable_chaining);
         let c = EngineConfig::default().fully_optimized();
         assert!(c.manager.enable_buffer_sizing && c.manager.enable_chaining);
+        assert!(!c.manager.enable_scaling, "scaling is opt-in");
+        let c = EngineConfig::default().with_scaling();
+        assert!(
+            c.manager.enable_buffer_sizing
+                && c.manager.enable_chaining
+                && c.manager.enable_scaling
+        );
     }
 
     #[test]

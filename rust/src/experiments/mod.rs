@@ -5,8 +5,10 @@
 
 pub mod fig2;
 pub mod hadoop;
+pub mod load_surge;
 pub mod video_scenarios;
 
 pub use fig2::{fig2_sweep, Fig2Cell};
 pub use hadoop::{run_hadoop_online, HadoopReport};
+pub use load_surge::{run_load_surge, SurgeReport};
 pub use video_scenarios::{run_video_scenario, Scenario, ScenarioReport};

@@ -31,6 +31,11 @@ pub struct JobVertex {
     /// User annotation (§3.6): never chain this vertex, to preserve
     /// materialisation points for fault tolerance.
     pub pin_unchainable: bool,
+    /// User annotation (reproduction extension, §3.6-style): this task
+    /// type may be elastically re-parallelised at runtime by the scaling
+    /// countermeasure.  Requires re-partitionable (all-to-all) incident
+    /// edges and stateless task semantics.
+    pub elastic: bool,
     /// Whether the task is a source (no inputs expected).
     pub is_source: bool,
     /// Whether the task is a sink (no outputs expected).
@@ -67,6 +72,7 @@ impl JobGraph {
             parallelism,
             cpu_utilization: 0.1,
             pin_unchainable: false,
+            elastic: false,
             is_source: false,
             is_sink: false,
         });

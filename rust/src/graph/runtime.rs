@@ -27,6 +27,11 @@ pub struct Channel {
     pub job_edge: JobEdgeId,
     pub from: VertexId,
     pub to: VertexId,
+    /// Removed from the routing tables by [`RuntimeGraph::retire_instance`]
+    /// (elastic scale-down).  Channel ids are dense and stable, so detached
+    /// channels keep their record but are excluded from adjacency and from
+    /// [`RuntimeGraph::edge_channels`].
+    pub detached: bool,
 }
 
 /// Placement strategy: maps (job vertex, subtask) to a worker.
@@ -88,7 +93,7 @@ impl RuntimeGraph {
                         from: VertexId,
                         to: VertexId| {
             let id = ChannelId(channels.len() as u32);
-            channels.push(Channel { id, job_edge, from, to });
+            channels.push(Channel { id, job_edge, from, to, detached: false });
             outs[from.index()].push(id);
             ins[to.index()].push(id);
         };
@@ -142,8 +147,11 @@ impl RuntimeGraph {
     }
 
     /// The runtime channels of a job edge (the paper's `je ⊆ E` view).
+    /// Channels detached by a scale-down are excluded.
     pub fn edge_channels(&self, je: JobEdgeId) -> impl Iterator<Item = &Channel> {
-        self.channels.iter().filter(move |c| c.job_edge == je)
+        self.channels
+            .iter()
+            .filter(move |c| c.job_edge == je && !c.detached)
     }
 
     /// Channel connecting two runtime vertices, if any.
@@ -157,6 +165,91 @@ impl RuntimeGraph {
     /// All runtime vertices on a given worker.
     pub fn vertices_on_worker(&self, w: WorkerId) -> impl Iterator<Item = &RuntimeVertex> {
         self.vertices.iter().filter(move |v| v.worker == w)
+    }
+
+    /// Elastic scale-up: spawn one new runtime instance of `jv` on
+    /// `worker` and wire its channels.  Only job vertices whose incident
+    /// edges are all all-to-all can be scaled — those channels are
+    /// re-partitionable (key-hash routing spreads load over however many
+    /// consumers exist), whereas pointwise wiring encodes a fixed
+    /// parallelism.  Returns the new vertex id and the appended channel
+    /// ids (incoming first, then outgoing), in dense-id order.
+    pub fn add_instance(
+        &mut self,
+        job: &JobGraph,
+        jv: JobVertexId,
+        worker: WorkerId,
+    ) -> Result<(VertexId, Vec<ChannelId>)> {
+        if worker.0 >= self.num_workers {
+            bail!("invalid {worker} for new {} instance", job.vertex(jv).name);
+        }
+        for e in job.in_edges(jv).chain(job.out_edges(jv)) {
+            if e.pattern != DistributionPattern::AllToAll {
+                bail!(
+                    "cannot scale {}: edge {} -> {} is pointwise (not re-partitionable)",
+                    job.vertex(jv).name,
+                    job.vertex(e.from).name,
+                    job.vertex(e.to).name
+                );
+            }
+        }
+        let id = VertexId(self.vertices.len() as u32);
+        let subtask = self.members[jv.index()].len() as u32;
+        self.vertices.push(RuntimeVertex { id, job_vertex: jv, subtask, worker });
+        self.members[jv.index()].push(id);
+        self.outs.push(Vec::new());
+        self.ins.push(Vec::new());
+
+        // Snapshot peer member lists first (the DAG has no self-loops, so
+        // none of these lists contains the new vertex's job vertex).
+        let in_peers: Vec<(JobEdgeId, Vec<VertexId>)> = job
+            .in_edges(jv)
+            .map(|e| (e.id, self.members[e.from.index()].clone()))
+            .collect();
+        let out_peers: Vec<(JobEdgeId, Vec<VertexId>)> = job
+            .out_edges(jv)
+            .map(|e| (e.id, self.members[e.to.index()].clone()))
+            .collect();
+
+        let mut added = Vec::new();
+        for (je, froms) in in_peers {
+            for f in froms {
+                let cid = ChannelId(self.channels.len() as u32);
+                self.channels
+                    .push(Channel { id: cid, job_edge: je, from: f, to: id, detached: false });
+                self.outs[f.index()].push(cid);
+                self.ins[id.index()].push(cid);
+                added.push(cid);
+            }
+        }
+        for (je, tos) in out_peers {
+            for t in tos {
+                let cid = ChannelId(self.channels.len() as u32);
+                self.channels
+                    .push(Channel { id: cid, job_edge: je, from: id, to: t, detached: false });
+                self.outs[id.index()].push(cid);
+                self.ins[t.index()].push(cid);
+                added.push(cid);
+            }
+        }
+        Ok((id, added))
+    }
+
+    /// Elastic scale-down: detach a runtime instance.  Its incoming
+    /// channels are removed from the routing tables (no new data reaches
+    /// it), while its outgoing channels stay wired so already-queued work
+    /// can drain.  The vertex record stays (ids are dense); it just no
+    /// longer appears in `members(jv)`.  Returns the detached channel ids.
+    pub fn retire_instance(&mut self, v: VertexId) -> Vec<ChannelId> {
+        let jv = self.vertices[v.index()].job_vertex;
+        self.members[jv.index()].retain(|&m| m != v);
+        let in_ch = std::mem::take(&mut self.ins[v.index()]);
+        for &cid in &in_ch {
+            let from = self.channels[cid.index()].from;
+            self.outs[from.index()].retain(|&c| c != cid);
+            self.channels[cid.index()].detached = true;
+        }
+        in_ch
     }
 }
 
@@ -214,6 +307,75 @@ mod tests {
         assert_eq!(rg.channel(c).from, a0);
         assert_eq!(rg.channel(c).to, b1);
         assert_eq!(rg.channel_between(b1, a0), None);
+    }
+
+    /// a -(ata)-> b -(ata)-> c at parallelism 2 on 2 workers.
+    fn three_stage_ata() -> (JobGraph, RuntimeGraph) {
+        let mut g = JobGraph::new();
+        let a = g.add_vertex("a", 2);
+        let b = g.add_vertex("b", 2);
+        let c = g.add_vertex("c", 2);
+        g.connect(a, b, DistributionPattern::AllToAll);
+        g.connect(b, c, DistributionPattern::AllToAll);
+        g.validate().unwrap();
+        let rg = RuntimeGraph::expand(&g, 2).unwrap();
+        (g, rg)
+    }
+
+    #[test]
+    fn add_instance_wires_all_to_all_channels() {
+        let (g, mut rg) = three_stage_ata();
+        let b = JobVertexId(1);
+        let before_channels = rg.channels.len();
+        let (v, added) = rg.add_instance(&g, b, WorkerId(0)).unwrap();
+        assert_eq!(v, VertexId(6));
+        assert_eq!(rg.members(b), &[VertexId(2), VertexId(3), v][..]);
+        // 2 inbound (from each a) + 2 outbound (to each c).
+        assert_eq!(added.len(), 4);
+        assert_eq!(rg.channels.len(), before_channels + 4);
+        assert_eq!(rg.in_channels(v).len(), 2);
+        assert_eq!(rg.out_channels(v).len(), 2);
+        // Every a member now fans out to 3 consumers, appended at the end
+        // so existing consumer indices (key-hash routing) are stable.
+        for &a in rg.members(JobVertexId(0)) {
+            let outs = rg.out_channels(a);
+            assert_eq!(outs.len(), 3);
+            assert_eq!(rg.channel(*outs.last().unwrap()).to, v);
+        }
+        assert_eq!(rg.vertex(v).subtask, 2);
+    }
+
+    #[test]
+    fn add_instance_rejects_pointwise_edges() {
+        let (g, mut rg) = two_stage(4, DistributionPattern::Pointwise);
+        let err = rg.add_instance(&g, JobVertexId(1), WorkerId(0)).unwrap_err();
+        assert!(err.to_string().contains("pointwise"), "{err}");
+        assert_eq!(rg.members(JobVertexId(1)).len(), 4, "topology untouched");
+    }
+
+    #[test]
+    fn retire_instance_detaches_inputs_and_keeps_outputs() {
+        let (g, mut rg) = three_stage_ata();
+        let b = JobVertexId(1);
+        let (v, _) = rg.add_instance(&g, b, WorkerId(1)).unwrap();
+        let je_in = g.edge_between(JobVertexId(0), b).unwrap().id;
+        assert_eq!(rg.edge_channels(je_in).count(), 6);
+        let detached = rg.retire_instance(v);
+        assert_eq!(detached.len(), 2);
+        assert_eq!(rg.members(b).len(), 2);
+        assert!(rg.in_channels(v).is_empty());
+        // Outgoing channels stay wired for draining.
+        assert_eq!(rg.out_channels(v).len(), 2);
+        // Upstream routing no longer references the retired instance.
+        for &a in rg.members(JobVertexId(0)) {
+            assert!(rg.out_channels(a).iter().all(|&c| rg.channel(c).to != v));
+            assert_eq!(rg.out_channels(a).len(), 2);
+        }
+        // Detached channels are excluded from the job-edge view.
+        assert_eq!(rg.edge_channels(je_in).count(), 4);
+        for &cid in &detached {
+            assert!(rg.channel(cid).detached);
+        }
     }
 
     #[test]

@@ -300,6 +300,9 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
                     Action::ChainTasks { .. } => {
                         chained = true;
                     }
+                    // The live mini-cluster is a fixed 1-worker pipeline:
+                    // elastic scaling does not apply.
+                    Action::ScaleTasks { .. } => {}
                     Action::Unresolvable { .. } => {}
                 }
             }

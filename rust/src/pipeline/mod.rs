@@ -3,8 +3,10 @@
 
 pub mod meter;
 pub mod microbench;
+pub mod surge;
 pub mod video;
 
 pub use meter::{smart_meter_job, MeterSpec};
 pub use microbench::{sender_receiver_job, MicrobenchSpec};
+pub use surge::{surge_job, SurgeJob, SurgeSpec};
 pub use video::{video_job, VideoJob, VideoSpec};

@@ -1,0 +1,246 @@
+//! Load-surge variant of the video pipeline (elastic-scaling scenario):
+//!
+//! ```text
+//! Ingest -(all-to-all)-> Transcoder[elastic] -(all-to-all)-> RTPSink
+//! ```
+//!
+//! A base set of streams starts at t=0 and is comfortably handled once
+//! adaptive buffer sizing converges; at `surge_at` a second wave of
+//! streams arrives and pushes the Transcoder group past CPU saturation.
+//! Neither buffer sizing (the latency is input-queue wait, not buffer
+//! residency) nor chaining (the constrained sequence holds a single
+//! task) can fix that — only adding Transcoder instances can, which is
+//! exactly the degree of freedom the scaling countermeasure adds.
+//!
+//! Both incident edges are all-to-all with key-hash routing, so the
+//! channel fan-out re-partitions automatically as instances come and go.
+
+use crate::graph::constraint::JobConstraint;
+use crate::graph::ids::JobVertexId;
+use crate::graph::job::{DistributionPattern, JobGraph};
+use crate::graph::runtime::RuntimeGraph;
+use crate::graph::sequence::JobSequence;
+use crate::sim::cluster::SourceSpec;
+use crate::sim::task::{KeyMap, OutBytes, Route, Semantics, TaskSpec};
+use crate::util::time::Duration;
+use anyhow::Result;
+
+/// Workload parameters.  Defaults are sized so that the base load keeps
+/// the two initial Transcoders at ~60% utilisation and the surge pushes
+/// demand to ~120% — a clear overload that queues without bound until
+/// the group is scaled.
+#[derive(Debug, Clone, Copy)]
+pub struct SurgeSpec {
+    pub workers: u32,
+    pub ingest_parallelism: u32,
+    /// Initial Transcoder parallelism (the elastic group).
+    pub transcoder_parallelism: u32,
+    pub sink_parallelism: u32,
+    /// Streams active from t=0.
+    pub base_streams: u32,
+    /// Additional streams arriving at `surge_at`.
+    pub surge_streams: u32,
+    pub surge_at: Duration,
+    /// Frames per second per stream.
+    pub fps: f64,
+    /// Compressed frame packet bytes on Ingest->Transcoder.
+    pub packet_bytes: u64,
+    /// Transcoded packet bytes on Transcoder->RTPSink.
+    pub transcoded_bytes: u64,
+    /// Per-frame Transcoder service time.
+    pub transcode_service: Duration,
+    pub constraint_ms: u64,
+    pub window_secs: u64,
+    /// Scaling bounds handed to the manager configuration.
+    pub max_parallelism: u32,
+    pub scale_step: u32,
+}
+
+impl Default for SurgeSpec {
+    fn default() -> Self {
+        SurgeSpec {
+            workers: 2,
+            ingest_parallelism: 2,
+            transcoder_parallelism: 2,
+            sink_parallelism: 2,
+            base_streams: 4,
+            surge_streams: 4,
+            surge_at: Duration::from_secs(60),
+            fps: 50.0,
+            packet_bytes: 2 * 1024,
+            transcoded_bytes: 1024,
+            transcode_service: Duration::from_micros(6_000),
+            constraint_ms: 300,
+            window_secs: 15,
+            max_parallelism: 6,
+            scale_step: 2,
+        }
+    }
+}
+
+impl SurgeSpec {
+    /// Total arrival rate once the surge is active (items/s).
+    pub fn peak_rate(&self) -> f64 {
+        (self.base_streams + self.surge_streams) as f64 * self.fps
+    }
+
+    /// Transcoder CPU demand at the given rate, in cores.
+    pub fn transcoder_demand(&self, rate: f64) -> f64 {
+        rate * self.transcode_service.as_secs_f64()
+    }
+}
+
+/// Job-vertex handles.
+#[derive(Debug, Clone, Copy)]
+pub struct SurgeVertices {
+    pub ingest: JobVertexId,
+    pub transcoder: JobVertexId,
+    pub sink: JobVertexId,
+}
+
+/// Everything needed to simulate the load-surge job.
+pub struct SurgeJob {
+    pub spec: SurgeSpec,
+    pub job: JobGraph,
+    pub rg: RuntimeGraph,
+    pub constraints: Vec<JobConstraint>,
+    pub task_specs: Vec<TaskSpec>,
+    pub sources: Vec<SourceSpec>,
+    pub constrained_sequence: JobSequence,
+    pub vertices: SurgeVertices,
+}
+
+/// Build the load-surge job.
+pub fn surge_job(spec: SurgeSpec) -> Result<SurgeJob> {
+    let mut job = JobGraph::new();
+    let ingest = job.add_vertex("Ingest", spec.ingest_parallelism);
+    let transcoder = job.add_vertex("Transcoder", spec.transcoder_parallelism);
+    let sink = job.add_vertex("RTPSink", spec.sink_parallelism);
+    job.connect(ingest, transcoder, DistributionPattern::AllToAll);
+    job.connect(transcoder, sink, DistributionPattern::AllToAll);
+    job.vertex_mut(transcoder).elastic = true;
+    // Static profiling estimate at base load (refined at runtime by
+    // TaskCpu measurements).
+    let base_rate = spec.base_streams as f64 * spec.fps;
+    job.vertex_mut(transcoder).cpu_utilization = (spec.transcoder_demand(base_rate)
+        / spec.transcoder_parallelism as f64)
+        .min(1.0);
+    job.validate()?;
+    let rg = RuntimeGraph::expand(&job, spec.workers)?;
+
+    // Constraint over (e1, vTranscoder, e2).
+    let seq = JobSequence::along_path(&job, &[transcoder], Some(ingest), Some(sink))?;
+    let constraints = vec![JobConstraint::new(
+        seq.clone(),
+        Duration::from_millis(spec.constraint_ms),
+        Duration::from_secs(spec.window_secs),
+    )];
+
+    let task_specs = vec![
+        // Ingest: forwards stream packets, key-hashed over however many
+        // Transcoder instances currently exist.
+        TaskSpec {
+            semantics: Semantics::Transform,
+            service: Duration::from_micros(30),
+            out_bytes: OutBytes::Scale(1.0),
+            key_map: KeyMap::Identity,
+            route: Route::ByKey { divisor: 1 },
+            downstream_delay: Duration::ZERO,
+        },
+        // Transcoder: the CPU-heavy elastic stage.
+        TaskSpec {
+            semantics: Semantics::Transform,
+            service: spec.transcode_service,
+            out_bytes: OutBytes::Const(spec.transcoded_bytes),
+            key_map: KeyMap::Identity,
+            route: Route::ByKey { divisor: 1 },
+            downstream_delay: Duration::ZERO,
+        },
+        TaskSpec::sink(),
+    ];
+
+    let interval = Duration::from_secs_f64(1.0 / spec.fps);
+    let total = spec.base_streams + spec.surge_streams;
+    let sources = (0..total)
+        .map(|s| {
+            let phase = Duration::from_micros(
+                (interval.as_micros() as u128 * s as u128 / total.max(1) as u128) as u64,
+            );
+            let offset = if s < spec.base_streams {
+                phase
+            } else {
+                spec.surge_at + phase
+            };
+            SourceSpec {
+                key: s,
+                target: ingest,
+                target_subtask: s % spec.ingest_parallelism,
+                interval,
+                bytes: spec.packet_bytes,
+                offset,
+                throttle: None,
+                batch: 1,
+            }
+        })
+        .collect();
+
+    Ok(SurgeJob {
+        spec,
+        job,
+        rg,
+        constraints,
+        task_specs,
+        sources,
+        constrained_sequence: seq,
+        vertices: SurgeVertices { ingest, transcoder, sink },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_with_defaults() {
+        let sj = surge_job(SurgeSpec::default()).unwrap();
+        assert_eq!(sj.job.vertices.len(), 3);
+        assert_eq!(sj.rg.vertices.len(), 6);
+        assert_eq!(sj.rg.channels.len(), 2 * 2 + 2 * 2);
+        assert_eq!(sj.sources.len(), 8);
+        assert!(sj.job.vertex(sj.vertices.transcoder).elastic);
+        sj.constrained_sequence.validate(&sj.job).unwrap();
+    }
+
+    #[test]
+    fn surge_overloads_initial_parallelism_but_not_the_maximum() {
+        let spec = SurgeSpec::default();
+        let base_rate = spec.base_streams as f64 * spec.fps;
+        let base_demand = spec.transcoder_demand(base_rate);
+        let peak_demand = spec.transcoder_demand(spec.peak_rate());
+        assert!(
+            base_demand < 0.9 * spec.transcoder_parallelism as f64,
+            "base load must be comfortable: {base_demand}"
+        );
+        assert!(
+            peak_demand > 1.1 * spec.transcoder_parallelism as f64,
+            "surge must clearly overload the initial group: {peak_demand}"
+        );
+        assert!(
+            peak_demand < 0.9 * spec.max_parallelism as f64,
+            "the scaling bound must leave recovery headroom: {peak_demand}"
+        );
+    }
+
+    #[test]
+    fn surge_sources_start_late() {
+        let spec = SurgeSpec::default();
+        let sj = surge_job(spec).unwrap();
+        for (i, s) in sj.sources.iter().enumerate() {
+            if (i as u32) < spec.base_streams {
+                assert!(s.offset < spec.surge_at);
+            } else {
+                assert!(s.offset >= spec.surge_at);
+            }
+        }
+    }
+}

@@ -14,8 +14,11 @@ use super::sample::{ElementKey, MetricKind, Report};
 use super::subgraph::{Layer, QosSubgraph, VertexRef};
 use crate::actions::buffer_sizing::{next_buffer_size, BufferSizingConfig, SizeDecision};
 use crate::actions::chaining::{find_longest_chain, ChainCandidate, ChainingConfig};
+use crate::actions::scaling::{
+    pick_release_target, pick_scale_target, should_scale_down, ScalingConfig,
+};
 use crate::actions::Action;
-use crate::graph::ids::{ChannelId, VertexId, WorkerId};
+use crate::graph::ids::{ChannelId, JobVertexId, VertexId, WorkerId};
 use crate::util::stats::WindowAvg;
 use crate::util::time::{Duration, Time};
 use std::collections::{BTreeMap, HashSet};
@@ -26,8 +29,13 @@ use std::collections::{BTreeMap, HashSet};
 pub struct ManagerConfig {
     pub buffer: BufferSizingConfig,
     pub chaining: ChainingConfig,
+    pub scaling: ScalingConfig,
     pub enable_buffer_sizing: bool,
     pub enable_chaining: bool,
+    /// Arm the elastic-scaling countermeasure (escalation tier 3; off by
+    /// default so the three paper scenarios of §4.3 are reproduced
+    /// unchanged).
+    pub enable_scaling: bool,
 }
 
 impl Default for ManagerConfig {
@@ -35,8 +43,10 @@ impl Default for ManagerConfig {
         ManagerConfig {
             buffer: BufferSizingConfig::default(),
             chaining: ChainingConfig::default(),
+            scaling: ScalingConfig::default(),
             enable_buffer_sizing: true,
             enable_chaining: true,
+            enable_scaling: false,
         }
     }
 }
@@ -78,6 +88,12 @@ pub struct QosManager {
     buffer_rounds: Vec<u32>,
     /// Per-constraint: failed-optimisation already reported to master.
     reported_unresolvable: Vec<bool>,
+    /// Scale-up instances already requested per task group.  The master
+    /// rebuilds managers after applying a rescale, so a surviving count
+    /// means the request was not (or not yet) applied; once
+    /// `known + requested` reaches the configured maximum the tier is
+    /// exhausted and `Unresolvable` may be reported.
+    scale_requests: BTreeMap<JobVertexId, u32>,
     /// Maximum constraint window (used as measurement freshness horizon).
     max_window: Duration,
 }
@@ -109,6 +125,7 @@ impl QosManager {
             cooldown_until,
             buffer_rounds,
             reported_unresolvable,
+            scale_requests: BTreeMap::new(),
             max_window,
         }
     }
@@ -317,6 +334,14 @@ impl QosManager {
                 None => continue,
             };
             if !eval.violated {
+                // A comfortably satisfied constraint may release elastic
+                // capacity again (hysteresis via the scale-down margin).
+                let down = self.scale_down_actions(&eval, chain_idx, now);
+                if !down.is_empty() {
+                    self.cooldown_until[chain_idx] =
+                        now + self.subgraph.constraints[eval.constraint].window;
+                    actions.extend(down);
+                }
                 continue;
             }
 
@@ -333,8 +358,18 @@ impl QosManager {
             let buffers_had_their_chance = chain_actions.is_empty()
                 || self.buffer_rounds[chain_idx] >= 3
                 || !self.cfg.enable_buffer_sizing;
+            let mut chained_this_round = false;
             if buffers_had_their_chance && self.cfg.enable_chaining {
-                chain_actions.extend(self.chain_actions(&eval, chain_idx, now));
+                let acts = self.chain_actions(&eval, chain_idx, now);
+                chained_this_round = !acts.is_empty();
+                chain_actions.extend(acts);
+            }
+            // Elastic scaling is the last escalation tier (§3.5 ordering
+            // extended: buffers -> chaining -> scaling -> Unresolvable):
+            // it engages only once buffer sizing has had its rounds and
+            // chaining found no further move this round.
+            if buffers_had_their_chance && !chained_this_round && self.cfg.enable_scaling {
+                chain_actions.extend(self.scale_actions(&eval, chain_idx, now));
             }
 
             if chain_actions.is_empty() {
@@ -452,6 +487,82 @@ impl QosManager {
             None => Vec::new(),
         }
     }
+
+    /// Degree of parallelism of a task group as visible in this manager's
+    /// subgraph (distinct runtime vertices of the job vertex).
+    fn known_parallelism(&self, jv: JobVertexId) -> u32 {
+        let mut set = HashSet::new();
+        for chain in &self.subgraph.chains {
+            for v in chain.vertices() {
+                if v.job_vertex == jv {
+                    set.insert(v.id);
+                }
+            }
+        }
+        set.len() as u32
+    }
+
+    /// Seed the believed output-buffer size for a channel.  Used when the
+    /// master rebuilds a manager after a topology change, so the first
+    /// decisions start from the actual worker-side sizes rather than the
+    /// engine default.
+    pub fn prime_buffer_size(&mut self, channel: ChannelId, size: u32) {
+        self.buffer_sizes.insert(channel, size);
+    }
+
+    /// Escalation tier 3: request more parallelism for the bottleneck
+    /// task group on the violated path.
+    fn scale_actions(&mut self, eval: &ChainEval, chain_idx: usize, now: Time) -> Vec<Action> {
+        let chain = &self.subgraph.chains[chain_idx];
+        let vertex_refs: BTreeMap<VertexId, VertexRef> =
+            chain.vertices().map(|v| (v.id, *v)).collect();
+        let target = pick_scale_target(&eval.worst_path, &vertex_refs);
+        let (group, _vertex, _score) = match target {
+            Some(t) => t,
+            None => return Vec::new(),
+        };
+        let known = self.known_parallelism(group);
+        let requested = self.scale_requests.get(&group).copied().unwrap_or(0);
+        let cfg = &self.cfg.scaling;
+        if known + requested >= cfg.max_parallelism {
+            return Vec::new(); // tier exhausted for this group
+        }
+        let step = cfg
+            .scale_step
+            .max(1)
+            .min(cfg.max_parallelism - known - requested);
+        *self.scale_requests.entry(group).or_insert(0) += step;
+        vec![Action::ScaleTasks { group, delta: step as i32, based_on: now }]
+    }
+
+    /// Release elastic capacity when a constraint is satisfied by a wide
+    /// margin (armed via [`ScalingConfig::enable_scale_down`]; the master
+    /// clamps at the job's original parallelism).
+    fn scale_down_actions(&mut self, eval: &ChainEval, chain_idx: usize, now: Time) -> Vec<Action> {
+        if !self.cfg.enable_scaling {
+            return Vec::new();
+        }
+        let limit_us =
+            self.subgraph.constraints[eval.constraint].max_latency.as_micros() as f64;
+        if !should_scale_down(eval.worst_us, limit_us, &self.cfg.scaling) {
+            return Vec::new();
+        }
+        let chain = &self.subgraph.chains[chain_idx];
+        let vertex_refs: BTreeMap<VertexId, VertexRef> =
+            chain.vertices().map(|v| (v.id, *v)).collect();
+        // Release from the least-loaded elastic group, and only while it
+        // is above its original parallelism — the master clamps the same
+        // way, so the manager never spams rejected no-op retire actions.
+        let target = pick_release_target(&eval.worst_path, &vertex_refs, |jv, base| {
+            self.known_parallelism(jv) > base
+        });
+        match target {
+            Some((group, _, _)) => {
+                vec![Action::ScaleTasks { group, delta: -1, based_on: now }]
+            }
+            None => Vec::new(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -469,6 +580,8 @@ mod tests {
             in_degree: 1,
             out_degree: 1,
             pinned: false,
+            elastic: false,
+            base_parallelism: 1,
             cpu_estimate: 0.1,
         }
     }
@@ -640,6 +753,109 @@ mod tests {
             }
             other => panic!("expected ChainTasks, got {other:?}"),
         }
+    }
+
+    /// Like [`subgraph`] but with v10's task group marked elastic.
+    fn elastic_subgraph(limit_ms: u64) -> QosSubgraph {
+        let mut sg = subgraph(limit_ms);
+        if let Layer::Vertices(vs) = &mut sg.chains[0].layers[1] {
+            vs[0].elastic = true;
+        }
+        sg
+    }
+
+    #[test]
+    fn scaling_only_mode_emits_scale_then_exhausts_to_unresolvable() {
+        let mut m = QosManager::new(
+            WorkerId(0),
+            elastic_subgraph(1),
+            32 * 1024,
+            ManagerConfig {
+                enable_buffer_sizing: false,
+                enable_chaining: false,
+                enable_scaling: true,
+                scaling: crate::actions::scaling::ScalingConfig {
+                    max_parallelism: 2,
+                    ..Default::default()
+                },
+                ..ManagerConfig::default()
+            },
+        );
+        let t = Time::from_secs_f64(1.0);
+        feed_all(&mut m, t, 1000.0, 2000.0, 500.0, 800.0, 300.0);
+        let a1 = m.act(t);
+        assert_eq!(a1.len(), 1);
+        match &a1[0] {
+            Action::ScaleTasks { group, delta, .. } => {
+                assert_eq!(*group, JobVertexId(10));
+                assert_eq!(*delta, 1);
+            }
+            other => panic!("expected ScaleTasks, got {other:?}"),
+        }
+        // Cooldown holds, then the tier is exhausted (known 1 + requested
+        // 1 reaches max_parallelism 2) and the manager escalates to the
+        // failed-optimisation report.
+        assert!(m.act(t + Duration::from_secs(1)).is_empty());
+        let t2 = t + Duration::from_secs(16);
+        feed_all(&mut m, t2, 1000.0, 2000.0, 500.0, 800.0, 300.0);
+        let a2 = m.act(t2);
+        assert_eq!(a2.len(), 1);
+        assert!(matches!(a2[0], Action::Unresolvable { .. }), "{a2:?}");
+    }
+
+    #[test]
+    fn scaling_skips_groups_without_elastic_annotation() {
+        let mut m = QosManager::new(
+            WorkerId(0),
+            subgraph(1), // nothing elastic
+            32 * 1024,
+            ManagerConfig {
+                enable_buffer_sizing: false,
+                enable_chaining: false,
+                enable_scaling: true,
+                ..ManagerConfig::default()
+            },
+        );
+        let t = Time::from_secs_f64(1.0);
+        feed_all(&mut m, t, 1000.0, 2000.0, 500.0, 800.0, 300.0);
+        let a = m.act(t);
+        assert_eq!(a.len(), 1);
+        assert!(matches!(a[0], Action::Unresolvable { .. }), "{a:?}");
+    }
+
+    #[test]
+    fn scale_down_clamped_at_single_instance() {
+        let mut m = QosManager::new(
+            WorkerId(0),
+            elastic_subgraph(300),
+            32 * 1024,
+            ManagerConfig {
+                enable_scaling: true,
+                scaling: crate::actions::scaling::ScalingConfig {
+                    enable_scale_down: true,
+                    ..Default::default()
+                },
+                ..ManagerConfig::default()
+            },
+        );
+        let t = Time::from_secs_f64(1.0);
+        // Satisfied at ~3.6 ms against a 300 ms limit: far below the
+        // margin, but known parallelism is 1, so nothing to release.
+        feed_all(&mut m, t, 1000.0, 2000.0, 500.0, 800.0, 300.0);
+        assert!(m.act(t).is_empty());
+    }
+
+    #[test]
+    fn rebuilt_manager_primed_with_actual_buffer_size() {
+        let mut m = QosManager::new(
+            WorkerId(0),
+            subgraph(300),
+            32 * 1024,
+            ManagerConfig::default(),
+        );
+        m.prime_buffer_size(ChannelId(1), 4096);
+        assert_eq!(m.buffer_size(ChannelId(1)), 4096);
+        assert_eq!(m.buffer_size(ChannelId(0)), 32 * 1024);
     }
 
     #[test]

@@ -97,6 +97,10 @@ fn vertex_ref(job: &JobGraph, rg: &RuntimeGraph, v: VertexId) -> VertexRef {
         in_degree: rg.in_channels(v).len() as u32,
         out_degree: rg.out_channels(v).len() as u32,
         pinned: jv.pin_unchainable,
+        elastic: jv.elastic,
+        // `JobVertex::parallelism` is never touched by runtime scaling,
+        // so it remains the original degree of parallelism.
+        base_parallelism: jv.parallelism,
         cpu_estimate: jv.cpu_utilization,
     }
 }

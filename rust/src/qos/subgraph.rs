@@ -26,6 +26,13 @@ pub struct VertexRef {
     pub out_degree: u32,
     /// §3.6 annotation: never chain (preserves materialisation points).
     pub pinned: bool,
+    /// Elastic-scaling annotation: this vertex's task group may be
+    /// re-parallelised at runtime (scaling countermeasure precondition).
+    pub elastic: bool,
+    /// Original (job-graph) degree of parallelism of this vertex's task
+    /// group — the floor below which scale-down is never requested (the
+    /// master clamps identically: only runtime-added instances retire).
+    pub base_parallelism: u32,
     /// Static profiling estimate of CPU utilisation (refined at runtime
     /// by `TaskCpu` measurements).
     pub cpu_estimate: f64,
@@ -188,6 +195,8 @@ mod tests {
             in_degree: 1,
             out_degree: 1,
             pinned: false,
+            elastic: false,
+            base_parallelism: 1,
             cpu_estimate: 0.1,
         }
     }

@@ -1,0 +1,57 @@
+//! Offline stub of the PJRT executor, compiled when the `xla` feature is
+//! disabled.  Keeps the [`StageRuntime`]/[`StageExecutor`] API so the live
+//! engine and its callers compile; any attempt to actually load or run a
+//! stage fails with a clear message.
+
+use crate::util::manifest::{Manifest, StageSpec};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One compiled pipeline stage (stub: never constructible at runtime).
+pub struct StageExecutor {
+    pub spec: StageSpec,
+}
+
+impl StageExecutor {
+    /// Stub: always fails — there is no PJRT client in this build.
+    pub fn run(&self, _inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        bail!(
+            "stage {}: nephele was built without the `xla` feature; \
+             rebuild with `--features xla` (and vendored xla crate) to execute stages",
+            self.spec.name
+        );
+    }
+
+    /// Total expected input element count (mirrors the real executor).
+    pub fn input_elems(&self) -> usize {
+        self.spec.input_elems()
+    }
+}
+
+/// All compiled stages of the artifact directory (stub).
+pub struct StageRuntime {
+    pub manifest: Manifest,
+    stages: BTreeMap<String, StageExecutor>,
+}
+
+impl StageRuntime {
+    /// Stub: always fails — loading artifacts requires the PJRT client.
+    pub fn load(dir: &Path) -> Result<StageRuntime> {
+        bail!(
+            "cannot load XLA artifacts from {}: nephele was built without the \
+             `xla` feature (see DESIGN.md, offline build notes)",
+            dir.display()
+        );
+    }
+
+    pub fn stage(&self, name: &str) -> Result<&StageExecutor> {
+        self.stages
+            .get(name)
+            .with_context(|| format!("stage {name:?} not loaded"))
+    }
+
+    pub fn stage_names(&self) -> impl Iterator<Item = &str> {
+        self.stages.keys().map(|s| s.as_str())
+    }
+}

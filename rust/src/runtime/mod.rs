@@ -9,6 +9,14 @@
 //! 64-bit instruction ids that the crate's XLA (0.5.1) rejects; the text
 //! parser reassigns ids.
 
+#[cfg(feature = "xla")]
+pub mod executor;
+
+// Offline builds (the default) get an API-compatible stub: the rest of
+// the crate — notably the live engine — compiles unchanged, and any
+// attempt to execute a stage fails with a clear message.
+#[cfg(not(feature = "xla"))]
+#[path = "executor_stub.rs"]
 pub mod executor;
 
 pub use executor::{StageExecutor, StageRuntime};

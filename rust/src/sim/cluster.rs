@@ -12,7 +12,7 @@ use crate::actions::chaining::DrainPolicy;
 use crate::actions::Action;
 use crate::config::EngineConfig;
 use crate::graph::constraint::JobConstraint;
-use crate::graph::ids::{ChannelId, JobVertexId, VertexId, WorkerId};
+use crate::graph::ids::{ChannelId, JobEdgeId, JobVertexId, VertexId, WorkerId};
 use crate::graph::job::JobGraph;
 use crate::graph::runtime::RuntimeGraph;
 use crate::qos::manager::QosManager;
@@ -21,8 +21,8 @@ use crate::qos::sample::{ElementKey, Measurement, MetricKind, Report};
 use crate::qos::setup::compute_qos_setup;
 use crate::util::rng::Rng;
 use crate::util::time::{Duration, Time};
-use anyhow::Result;
-use std::collections::BTreeMap;
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// External stream feeding a source task (e.g. one camera feeding its
 /// Partitioner over TCP).
@@ -79,6 +79,12 @@ pub struct SimStats {
     pub unresolvable_notices: u64,
     pub buffer_size_updates: u64,
     pub chains_established: u64,
+    /// Elastic scaling: instances spawned / retired / rejected requests,
+    /// and QoS-setup rebuilds triggered by topology changes.
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub scaling_rejected: u64,
+    pub qos_rebuilds: u64,
     pub events_processed: u64,
 }
 
@@ -90,11 +96,75 @@ pub trait SimObserver {
     fn sample(&mut self, cluster: &mut SimCluster, now: Time);
 }
 
+/// The QoS-side state derived from a (possibly rescaled) topology:
+/// monitored-element lookups, reporters, managers.
+struct QosRuntime {
+    chan_latency_monitored: Vec<bool>,
+    chan_oblt_monitored: Vec<bool>,
+    vertex_monitored: Vec<bool>,
+    reporters: BTreeMap<WorkerId, QosReporter>,
+    managers: BTreeMap<WorkerId, QosManager>,
+}
+
+/// Run Algorithms 1-3 for the current topology and instantiate the
+/// reporter/manager roles.  Used both at cluster construction and after
+/// every elastic-scaling topology change.
+fn build_qos_runtime(
+    job: &JobGraph,
+    rg: &RuntimeGraph,
+    constraints: &[JobConstraint],
+    cfg: &EngineConfig,
+    rng: &mut Rng,
+) -> Result<QosRuntime> {
+    let setup = compute_qos_setup(job, rg, constraints)?;
+    let mut chan_latency_monitored = vec![false; rg.channels.len()];
+    let mut chan_oblt_monitored = vec![false; rg.channels.len()];
+    let mut vertex_monitored = vec![false; rg.vertices.len()];
+    let mut reporters = BTreeMap::new();
+    for (&w, assignment) in &setup.reporters {
+        for (&(elem, kind), _) in &assignment.interest {
+            match (elem, kind) {
+                (ElementKey::Channel(c), MetricKind::ChannelLatency) => {
+                    chan_latency_monitored[c.index()] = true;
+                }
+                (ElementKey::Channel(c), MetricKind::OutputBufferLifetime) => {
+                    chan_oblt_monitored[c.index()] = true;
+                }
+                (ElementKey::Vertex(v), _) => {
+                    vertex_monitored[v.index()] = true;
+                }
+                _ => {}
+            }
+        }
+        reporters.insert(
+            w,
+            QosReporter::new(w, cfg.measurement_interval, assignment.interest.clone(), rng),
+        );
+    }
+    let managers: BTreeMap<WorkerId, QosManager> = setup
+        .managers
+        .into_iter()
+        .map(|(w, sub)| (w, QosManager::new(w, sub, cfg.default_buffer_size, cfg.manager)))
+        .collect();
+    Ok(QosRuntime {
+        chan_latency_monitored,
+        chan_oblt_monitored,
+        vertex_monitored,
+        reporters,
+        managers,
+    })
+}
+
 /// The simulated cluster.
 pub struct SimCluster {
     pub job: JobGraph,
     pub rg: RuntimeGraph,
     pub cfg: EngineConfig,
+    /// QoS constraints (retained: elastic scaling recomputes the QoS
+    /// setup for the changed topology).
+    constraints: Vec<JobConstraint>,
+    /// Per-job-vertex task specs (retained for runtime-spawned instances).
+    job_specs: Vec<TaskSpec>,
     sources: Vec<SourceSpec>,
     tasks: Vec<TaskState>,
     out_bufs: Vec<OutBufferState>,
@@ -118,6 +188,16 @@ pub struct SimCluster {
     chain_members: Vec<Vec<VertexId>>,
     chain_busy: Vec<Time>,
     chain_sched: Vec<bool>,
+    /// Instances added by elastic scaling, per task group (scale-down
+    /// retires from the back, never below the original parallelism).
+    scaled_instances: BTreeMap<JobVertexId, Vec<VertexId>>,
+    /// Master-side arbitration: when the last rescale of a group was
+    /// applied (stale decisions are discarded, mirroring §3.5.1).
+    last_scale: BTreeMap<JobVertexId, Time>,
+    /// Workers with a live ReporterFlush / ManagerTick event chain (QoS
+    /// rebuilds must start chains only for workers that lack one).
+    flush_chains: BTreeSet<u32>,
+    tick_chains: BTreeSet<u32>,
     /// Sources stop emitting at this time.
     source_end: Time,
     pub stats: SimStats,
@@ -137,38 +217,14 @@ impl SimCluster {
         assert_eq!(specs.len(), job.vertices.len(), "one TaskSpec per job vertex");
         let mut rng = Rng::new(cfg.seed);
 
-        let setup = compute_qos_setup(&job, &rg, constraints)?;
-        let mut chan_latency_monitored = vec![false; rg.channels.len()];
-        let mut chan_oblt_monitored = vec![false; rg.channels.len()];
-        let mut vertex_monitored = vec![false; rg.vertices.len()];
-        let mut reporters = BTreeMap::new();
-        for (&w, assignment) in &setup.reporters {
-            for (&(elem, kind), _) in &assignment.interest {
-                match (elem, kind) {
-                    (ElementKey::Channel(c), MetricKind::ChannelLatency) => {
-                        chan_latency_monitored[c.index()] = true;
-                    }
-                    (ElementKey::Channel(c), MetricKind::OutputBufferLifetime) => {
-                        chan_oblt_monitored[c.index()] = true;
-                    }
-                    (ElementKey::Vertex(v), _) => {
-                        vertex_monitored[v.index()] = true;
-                    }
-                    _ => {}
-                }
-            }
-            reporters.insert(
-                w,
-                QosReporter::new(w, cfg.measurement_interval, assignment.interest.clone(), &mut rng),
-            );
-        }
-        let managers: BTreeMap<WorkerId, QosManager> = setup
-            .managers
-            .into_iter()
-            .map(|(w, sub)| {
-                (w, QosManager::new(w, sub, cfg.default_buffer_size, cfg.manager))
-            })
-            .collect();
+        let qos = build_qos_runtime(&job, &rg, constraints, &cfg, &mut rng)?;
+        let QosRuntime {
+            chan_latency_monitored,
+            chan_oblt_monitored,
+            vertex_monitored,
+            reporters,
+            managers,
+        } = qos;
         let arbiters = managers
             .keys()
             .chain(reporters.keys())
@@ -177,6 +233,7 @@ impl SimCluster {
 
         let n_channels = rg.channels.len();
         let n_vertices = rg.vertices.len();
+        let job_specs = specs.clone();
         let tasks = rg
             .vertices
             .iter()
@@ -202,7 +259,8 @@ impl SimCluster {
             job,
             rg,
             cfg,
-
+            constraints: constraints.to_vec(),
+            job_specs,
             sources,
             tasks,
             out_bufs,
@@ -221,6 +279,10 @@ impl SimCluster {
             chain_members: Vec::new(),
             chain_busy: Vec::new(),
             chain_sched: Vec::new(),
+            scaled_instances: BTreeMap::new(),
+            last_scale: BTreeMap::new(),
+            flush_chains: BTreeSet::new(),
+            tick_chains: BTreeSet::new(),
             source_end: Time(u64::MAX),
             stats: SimStats::default(),
         };
@@ -239,6 +301,7 @@ impl SimCluster {
             .filter_map(|(&w, r)| r.next_deadline().map(|t| (w, t)))
             .collect();
         for (w, t) in reporter_deadlines {
+            self.flush_chains.insert(w.0);
             self.queue.push(t, Ev::ReporterFlush { worker: w.0 });
         }
         let interval = self.cfg.measurement_interval;
@@ -246,6 +309,7 @@ impl SimCluster {
         for w in mgr_workers {
             // Spread manager ticks uniformly over the first interval.
             let offset = Duration::from_micros(self.rng.below(interval.as_micros().max(1)));
+            self.tick_chains.insert(w.0);
             self.queue.push(Time::ZERO + interval + offset, Ev::ManagerTick { worker: w.0 });
         }
         for w in 0..self.rg.num_workers {
@@ -689,7 +753,12 @@ impl SimCluster {
     fn on_reporter_flush(&mut self, now: Time, worker: WorkerId) {
         let (reports, next) = match self.reporters.get_mut(&worker) {
             Some(r) => (r.flush_due(now), r.next_deadline()),
-            None => return,
+            None => {
+                // Reporter removed by a QoS rebuild: this event chain ends
+                // (a later rebuild restarts it if the worker reports again).
+                self.flush_chains.remove(&worker.0);
+                return;
+            }
         };
         let delay = self.cfg.cluster.control_delay;
         for report in reports {
@@ -703,7 +772,10 @@ impl SimCluster {
     fn on_manager_tick(&mut self, now: Time, worker: WorkerId) {
         let actions = match self.managers.get_mut(&worker) {
             Some(m) => m.act(now),
-            None => return,
+            None => {
+                self.tick_chains.remove(&worker.0);
+                return;
+            }
         };
         let delay = self.cfg.cluster.control_delay;
         for action in actions {
@@ -762,6 +834,9 @@ impl SimCluster {
             Action::ChainTasks { worker: _, tasks, drain } => {
                 self.apply_chain(now, tasks, drain);
             }
+            Action::ScaleTasks { group, delta, based_on } => {
+                self.apply_scaling(now, group, delta, based_on);
+            }
             Action::Unresolvable { .. } => {}
         }
     }
@@ -810,6 +885,227 @@ impl SimCluster {
     }
 
     // ------------------------------------------------------------------
+    // Elastic scaling (master side)
+    // ------------------------------------------------------------------
+
+    /// Apply an elastic-scaling action: spawn or retire instances of
+    /// `group`, rewire their channels, and rebuild the QoS setup so
+    /// reporters and managers track the new topology.  Decisions based on
+    /// measurement state older than the last applied rescale of the group
+    /// are discarded (first-wins, mirroring the §3.5.1 buffer update
+    /// arbitration).  Returns whether the topology changed.
+    pub fn apply_scaling(
+        &mut self,
+        now: Time,
+        group: JobVertexId,
+        delta: i32,
+        based_on: Time,
+    ) -> bool {
+        if let Some(&t) = self.last_scale.get(&group) {
+            if based_on <= t {
+                self.stats.scaling_rejected += 1;
+                return false;
+            }
+        }
+        let mut changed = false;
+        if delta > 0 {
+            // Warm-start sizes are identical for every step of one
+            // rescale: compute the per-edge map once.
+            let edge_size = self.edge_buffer_sizes();
+            for _ in 0..delta {
+                if !self.spawn_instance(group, &edge_size) {
+                    break;
+                }
+                changed = true;
+            }
+        } else {
+            for _ in 0..(-delta) {
+                if !self.retire_instance(now, group) {
+                    break;
+                }
+                changed = true;
+            }
+        }
+        if changed {
+            self.last_scale.insert(group, now);
+            if let Err(e) = self.rebuild_qos() {
+                // Master-side recomputation on a valid topology should
+                // never fail; make any surprise loud but non-fatal, and
+                // keep the dense per-element state sized to the topology.
+                eprintln!("warning: QoS rebuild after scaling {group} failed: {e}");
+                let nc = self.rg.channels.len();
+                let nv = self.rg.vertices.len();
+                self.chan_latency_monitored.resize(nc, false);
+                self.chan_oblt_monitored.resize(nc, false);
+                self.vertex_monitored.resize(nv, false);
+                self.next_tag_at.resize(nc, Time::ZERO);
+                self.next_task_sample_at.resize(nv, Time::ZERO);
+            }
+        }
+        changed
+    }
+
+    /// Smallest adapted output-buffer size per job edge: the warm start
+    /// for channels created by a scale-up (the smallest size is what
+    /// adaptive buffer sizing converged to on that edge), falling back
+    /// to the engine default for edges with no channels.
+    fn edge_buffer_sizes(&self) -> BTreeMap<JobEdgeId, u32> {
+        let mut edge_size: BTreeMap<JobEdgeId, u32> = BTreeMap::new();
+        for c in &self.rg.channels {
+            if c.detached {
+                continue;
+            }
+            let size = self.out_bufs[c.id.index()].size;
+            edge_size
+                .entry(c.job_edge)
+                .and_modify(|s| *s = (*s).min(size))
+                .or_insert(size);
+        }
+        edge_size
+    }
+
+    /// Spawn one instance of `group` (scale-up step).
+    fn spawn_instance(&mut self, group: JobVertexId, edge_size: &BTreeMap<JobEdgeId, u32>) -> bool {
+        if self.rg.members(group).len() as u32 >= self.cfg.manager.scaling.max_parallelism {
+            self.stats.scaling_rejected += 1;
+            return false;
+        }
+        // Only stateless semantics can be re-partitioned safely: a merge
+        // or window task keys its state by routing key, and re-hashing
+        // keys across a changed consumer count would split that state.
+        match self.job_specs[group.index()].semantics {
+            Semantics::Transform | Semantics::Sink => {}
+            _ => {
+                self.stats.scaling_rejected += 1;
+                return false;
+            }
+        }
+        // Spread new instances like the initial placement: subtask index
+        // modulo worker count.
+        let worker = WorkerId(self.rg.members(group).len() as u32 % self.rg.num_workers);
+        match self.rg.add_instance(&self.job, group, worker) {
+            Ok((v, new_channels)) => {
+                self.tasks.push(TaskState::new(self.job_specs[group.index()]));
+                debug_assert_eq!(self.tasks.len(), self.rg.vertices.len());
+                debug_assert_eq!(v.index(), self.tasks.len() - 1);
+                for &cid in &new_channels {
+                    let je = self.rg.channel(cid).job_edge;
+                    let size = edge_size
+                        .get(&je)
+                        .copied()
+                        .unwrap_or(self.cfg.default_buffer_size);
+                    self.out_bufs.push(OutBufferState::new(size));
+                }
+                debug_assert_eq!(self.out_bufs.len(), self.rg.channels.len());
+                self.scaled_instances.entry(group).or_default().push(v);
+                self.stats.scale_ups += 1;
+                true
+            }
+            Err(_) => {
+                self.stats.scaling_rejected += 1;
+                false
+            }
+        }
+    }
+
+    /// Retire the most recently spawned *unchained* instance of `group`
+    /// (scale-down step).  Never drops below the original parallelism,
+    /// never touches chained tasks (they share a thread and cannot be
+    /// detached safely — but an older chained instance does not block
+    /// releasing a newer unchained one), and loses no items: pending
+    /// sender-side buffers on the detached channels are flushed first,
+    /// and the instance keeps draining its input queue through its
+    /// still-wired output channels.
+    fn retire_instance(&mut self, now: Time, group: JobVertexId) -> bool {
+        let tasks = &self.tasks;
+        let pos = self
+            .scaled_instances
+            .get(&group)
+            .and_then(|s| s.iter().rposition(|&v| tasks[v.index()].chain.is_none()));
+        let v = match pos {
+            Some(p) => self.scaled_instances.get_mut(&group).unwrap().remove(p),
+            None => {
+                self.stats.scaling_rejected += 1;
+                return false;
+            }
+        };
+        let in_ch: Vec<ChannelId> = self.rg.in_channels(v).to_vec();
+        for cid in in_ch {
+            if !self.out_bufs[cid.index()].is_empty() {
+                let sender = self.rg.worker(self.rg.channel(cid).from);
+                self.flush_channel(now, cid, sender);
+            }
+        }
+        self.rg.retire_instance(v);
+        // Drain whatever is already queued at the retiring instance.
+        self.try_schedule(now, v);
+        self.stats.scale_downs += 1;
+        true
+    }
+
+    /// Recompute the QoS setup (Algorithms 1-3) for the current runtime
+    /// graph and swap in fresh reporters and managers.  Managers restart
+    /// with empty measurement windows and re-acquire data within one
+    /// measurement interval; their believed buffer sizes are primed with
+    /// the actual worker-side sizes.
+    fn rebuild_qos(&mut self) -> Result<()> {
+        let qos = build_qos_runtime(
+            &self.job,
+            &self.rg,
+            &self.constraints,
+            &self.cfg,
+            &mut self.rng,
+        )?;
+        let n_channels = self.rg.channels.len();
+        let n_vertices = self.rg.vertices.len();
+        self.chan_latency_monitored = qos.chan_latency_monitored;
+        self.chan_oblt_monitored = qos.chan_oblt_monitored;
+        self.vertex_monitored = qos.vertex_monitored;
+        self.next_tag_at.resize(n_channels, Time::ZERO);
+        self.next_task_sample_at.resize(n_vertices, Time::ZERO);
+        self.reporters = qos.reporters;
+        self.managers = qos.managers;
+        let sizes: Vec<u32> = self.out_bufs.iter().map(|b| b.size).collect();
+        for mgr in self.managers.values_mut() {
+            let channels: Vec<ChannelId> = mgr
+                .subgraph()
+                .chains
+                .iter()
+                .flat_map(|c| c.channels().map(|cr| cr.id))
+                .collect();
+            for cid in channels {
+                mgr.prime_buffer_size(cid, sizes[cid.index()]);
+            }
+        }
+        // Start event chains for workers that gained a reporter/manager
+        // role (existing chains keep running through the swapped-in
+        // state; dead ones were pruned by the handlers).
+        let interval = self.cfg.measurement_interval;
+        let new_flush: Vec<u32> = self
+            .reporters
+            .keys()
+            .map(|w| w.0)
+            .filter(|w| !self.flush_chains.contains(w))
+            .collect();
+        for w in new_flush {
+            self.flush_chains.insert(w);
+            self.queue.push(self.queue.now() + interval, Ev::ReporterFlush { worker: w });
+        }
+        let new_ticks: Vec<u32> = self
+            .managers
+            .keys()
+            .map(|w| w.0)
+            .filter(|w| !self.tick_chains.contains(w))
+            .collect();
+        for w in new_ticks {
+            self.tick_chains.insert(w);
+            self.queue.push(self.queue.now() + interval, Ev::ManagerTick { worker: w });
+        }
+        self.stats.qos_rebuilds += 1;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
     // Harness access
     // ------------------------------------------------------------------
 
@@ -828,6 +1124,219 @@ impl SimCluster {
     pub fn mean_e2e_ms(&self) -> Option<f64> {
         (self.stats.e2e_count > 0)
             .then(|| self.stats.e2e_sum_us / self.stats.e2e_count as f64 / 1e3)
+    }
+
+    /// Current degree of parallelism of a task group.
+    pub fn parallelism_of(&self, jv: JobVertexId) -> usize {
+        self.rg.members(jv).len()
+    }
+
+    /// Items currently inside the pipeline: input queues, sender-side
+    /// output buffers, and unmerged partial group state.  Together with
+    /// the sink count this accounts for every ingested item once all
+    /// in-flight network events have drained.
+    pub fn items_in_flight(&self) -> u64 {
+        let queued: u64 = self
+            .tasks
+            .iter()
+            .map(|t| {
+                let q: u64 = t.queue.iter().map(|b| b.buffer.items.len() as u64).sum();
+                let merged: u64 = t
+                    .groups
+                    .values()
+                    .map(|g| g.values().map(|q| q.len() as u64).sum::<u64>())
+                    .sum();
+                q + merged
+            })
+            .sum();
+        let pending: u64 = self.out_bufs.iter().map(|b| b.pending.len() as u64).sum();
+        queued + pending
+    }
+
+    /// Consistency of the runtime rewiring, checked by tests after
+    /// scale-up/scale-down: adjacency is bidirectional, no routing-table
+    /// entry points at a detached channel, every active non-source
+    /// instance is reachable, and the dense per-element state vectors
+    /// match the topology.
+    pub fn routing_consistent(&self) -> Result<()> {
+        if self.tasks.len() != self.rg.vertices.len() {
+            bail!("{} task states for {} vertices", self.tasks.len(), self.rg.vertices.len());
+        }
+        if self.out_bufs.len() != self.rg.channels.len() {
+            bail!("{} out buffers for {} channels", self.out_bufs.len(), self.rg.channels.len());
+        }
+        for v in &self.rg.vertices {
+            for &cid in self.rg.out_channels(v.id) {
+                let c = self.rg.channel(cid);
+                if c.detached {
+                    bail!("out routing of {} references detached {cid}", v.id);
+                }
+                if c.from != v.id {
+                    bail!("channel {cid} listed at {} but leaves {}", v.id, c.from);
+                }
+                if !self.rg.in_channels(c.to).contains(&cid) {
+                    bail!("channel {cid} missing from receiver {}'s inputs", c.to);
+                }
+            }
+            for &cid in self.rg.in_channels(v.id) {
+                let c = self.rg.channel(cid);
+                if c.detached {
+                    bail!("in routing of {} references detached {cid}", v.id);
+                }
+                if c.to != v.id {
+                    bail!("channel {cid} listed at {} but enters {}", v.id, c.to);
+                }
+                if !self.rg.out_channels(c.from).contains(&cid) {
+                    bail!("channel {cid} missing from sender {}'s outputs", c.from);
+                }
+            }
+        }
+        for jv in &self.job.vertices {
+            if jv.is_source {
+                continue;
+            }
+            for &m in self.rg.members(jv.id) {
+                if self.rg.in_channels(m).is_empty() {
+                    bail!("active instance {m} of {} is unreachable", jv.name);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::surge::{surge_job, SurgeSpec};
+    use crate::pipeline::video::{video_job, VideoSpec};
+
+    /// Steady base-load surge cluster (no surge wave, no QoS actions —
+    /// scaling is applied directly by the tests).
+    fn steady_cluster() -> (SimCluster, JobVertexId) {
+        let mut spec = SurgeSpec::default();
+        spec.surge_streams = 0;
+        let sj = surge_job(spec).unwrap();
+        let transcoder = sj.vertices.transcoder;
+        let cluster = SimCluster::new(
+            sj.job,
+            sj.rg,
+            &sj.constraints,
+            sj.task_specs,
+            sj.sources,
+            EngineConfig::default().unoptimized(),
+        )
+        .unwrap();
+        (cluster, transcoder)
+    }
+
+    #[test]
+    fn scale_up_rewires_channels_and_data_flows_through_new_instance() {
+        let (mut cluster, transcoder) = steady_cluster();
+        cluster.run(Duration::from_secs(30), None);
+        let t = cluster.now();
+        cluster.routing_consistent().unwrap();
+
+        assert!(cluster.apply_scaling(t, transcoder, 1, t));
+        cluster.routing_consistent().unwrap();
+        assert_eq!(cluster.parallelism_of(transcoder), 3);
+        assert_eq!(cluster.stats.scale_ups, 1);
+        assert_eq!(cluster.stats.qos_rebuilds, 1);
+
+        // The new instance has full fan-in/fan-out.
+        let v = *cluster.rg.members(transcoder).last().unwrap();
+        assert_eq!(cluster.rg.in_channels(v).len(), 2);
+        assert_eq!(cluster.rg.out_channels(v).len(), 2);
+
+        // Key-hash routing now spreads over three consumers: the new
+        // instance must actually process items.
+        let delivered_before = cluster.stats.e2e_count;
+        cluster.run(Duration::from_secs(90), None);
+        assert!(cluster.tasks[v.index()].busy_until > t, "new instance never ran");
+        assert!(cluster.stats.e2e_count > delivered_before, "pipeline stalled");
+        cluster.routing_consistent().unwrap();
+    }
+
+    #[test]
+    fn scale_down_detaches_inputs_and_no_items_are_lost() {
+        let (mut cluster, transcoder) = steady_cluster();
+        cluster.run(Duration::from_secs(30), None);
+        let t = cluster.now();
+        assert!(cluster.apply_scaling(t, transcoder, 1, t));
+        cluster.run(Duration::from_secs(60), None);
+
+        let t2 = cluster.now();
+        assert!(cluster.apply_scaling(t2, transcoder, -1, t2));
+        cluster.routing_consistent().unwrap();
+        assert_eq!(cluster.parallelism_of(transcoder), 2);
+        assert_eq!(cluster.stats.scale_downs, 1);
+
+        // Drain: stop the sources and run the pipeline dry.  Every
+        // ingested item must be accounted for at a sink or still sitting
+        // in a queue/partial buffer — nothing vanishes with the retired
+        // instance.
+        cluster.stop_sources_at(t2);
+        cluster.run(Duration::from_secs(600), None);
+        let s = &cluster.stats;
+        assert_eq!(s.dropped_on_chain, 0);
+        assert_eq!(
+            s.e2e_count + cluster.items_in_flight(),
+            s.items_ingested,
+            "items lost across scale-down"
+        );
+    }
+
+    #[test]
+    fn scaling_rejected_for_pointwise_stages_and_stateful_semantics() {
+        let vj = video_job(VideoSpec::small()).unwrap();
+        let decoder = vj.vertices.decoder;
+        let merger = vj.vertices.merger;
+        let mut cluster = SimCluster::new(
+            vj.job,
+            vj.rg,
+            &vj.constraints,
+            vj.task_specs,
+            vj.sources,
+            EngineConfig::default().unoptimized(),
+        )
+        .unwrap();
+        cluster.run(Duration::from_secs(10), None);
+        let t = cluster.now();
+        // Decoder: pointwise out edge -> not re-partitionable.
+        assert!(!cluster.apply_scaling(t, decoder, 1, t));
+        // Merger: stateful group join -> never scaled.
+        assert!(!cluster.apply_scaling(t + Duration::from_secs(1), merger, 1, t + Duration::from_secs(1)));
+        assert_eq!(cluster.stats.scale_ups, 0);
+        assert_eq!(cluster.stats.scaling_rejected, 2);
+        assert_eq!(cluster.parallelism_of(decoder), 8);
+        cluster.routing_consistent().unwrap();
+    }
+
+    #[test]
+    fn stale_scale_decisions_are_discarded() {
+        let (mut cluster, transcoder) = steady_cluster();
+        cluster.run(Duration::from_secs(30), None);
+        let t = cluster.now();
+        assert!(cluster.apply_scaling(t, transcoder, 1, t));
+        // A concurrent manager deciding on pre-rescale measurement state
+        // loses (first-wins, as with §3.5.1 buffer updates).
+        assert!(!cluster.apply_scaling(t + Duration::from_secs(1), transcoder, 1, t));
+        assert_eq!(cluster.parallelism_of(transcoder), 3);
+        assert_eq!(cluster.stats.scaling_rejected, 1);
+        // A decision based on fresher state applies.
+        let t2 = t + Duration::from_secs(20);
+        assert!(cluster.apply_scaling(t2, transcoder, 1, t2));
+        assert_eq!(cluster.parallelism_of(transcoder), 4);
+    }
+
+    #[test]
+    fn scale_down_never_drops_below_original_parallelism() {
+        let (mut cluster, transcoder) = steady_cluster();
+        cluster.run(Duration::from_secs(10), None);
+        let t = cluster.now();
+        assert!(!cluster.apply_scaling(t, transcoder, -1, t));
+        assert_eq!(cluster.parallelism_of(transcoder), 2);
+        assert_eq!(cluster.stats.scaling_rejected, 1);
     }
 }
 

@@ -3,7 +3,9 @@
 //! the codec semantics end to end from Rust — the exact path the live
 //! engine's tasks use at request time.
 //!
-//! Requires `artifacts/` (run `make artifacts` first).
+//! Requires `artifacts/` (run `make artifacts` first) and a build with
+//! the `xla` feature (the default offline build ships a stub runtime).
+#![cfg(feature = "xla")]
 
 use nephele::runtime::StageRuntime;
 use std::cell::OnceCell;

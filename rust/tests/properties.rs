@@ -194,3 +194,263 @@ fn conservation(g: &mut Gen) -> PropResult {
 fn item_conservation_holds_for_random_pipelines() {
     check(40, conservation);
 }
+
+// ---------------------------------------------------------------------
+// Countermeasure escalation order (§3.5 extended with elastic scaling):
+// buffer sizing is attempted before chaining, chaining before scaling,
+// and `Unresolvable` is emitted only when every armed countermeasure is
+// exhausted.
+// ---------------------------------------------------------------------
+
+mod escalation {
+    use nephele::actions::scaling::ScalingConfig;
+    use nephele::actions::Action;
+    use nephele::graph::ids::{ChannelId, JobVertexId, VertexId, WorkerId};
+    use nephele::qos::manager::{ManagerConfig, QosManager};
+    use nephele::qos::sample::{ElementKey, MetricKind, Report, ReportEntry};
+    use nephele::qos::subgraph::{
+        ChainSpec, ChannelRef, ConstraintParams, Layer, QosSubgraph, VertexRef,
+    };
+    use nephele::util::proptest::Gen;
+    use nephele::util::time::{Duration, Time};
+
+    fn vref(id: u32, elastic: bool) -> VertexRef {
+        VertexRef {
+            id: VertexId(id),
+            job_vertex: JobVertexId(id),
+            worker: WorkerId(0),
+            in_degree: 1,
+            out_degree: 1,
+            pinned: false,
+            elastic,
+            base_parallelism: 1,
+            cpu_estimate: 0.1,
+        }
+    }
+
+    fn cref(id: u32, from: u32, to: u32) -> ChannelRef {
+        ChannelRef {
+            id: ChannelId(id),
+            from: VertexId(from),
+            to: VertexId(to),
+            sender_worker: WorkerId(0),
+        }
+    }
+
+    /// (e0) -> v10 -> (e1) -> v11 with a 1 ms limit: always violated for
+    /// the latencies the driver feeds, and every countermeasure has at
+    /// least one move available when armed (shrinkable buffers, a
+    /// chainable same-worker pair, an elastic group).
+    fn subgraph() -> QosSubgraph {
+        QosSubgraph {
+            constraints: vec![ConstraintParams {
+                max_latency: Duration::from_millis(1),
+                window: Duration::from_secs(15),
+            }],
+            chains: vec![ChainSpec {
+                constraint: 0,
+                layers: vec![
+                    Layer::Channels(vec![cref(0, 0, 10)]),
+                    Layer::Vertices(vec![vref(10, true)]),
+                    Layer::Channels(vec![cref(1, 10, 11)]),
+                    Layer::Vertices(vec![vref(11, false)]),
+                ],
+            }],
+        }
+    }
+
+    fn feed(m: &mut QosManager, at: Time, oblt_us: f64, cpu: f64) {
+        let entries = vec![
+            ReportEntry {
+                element: ElementKey::Channel(ChannelId(0)),
+                kind: MetricKind::ChannelLatency,
+                mean: 2_000.0,
+                count: 1,
+            },
+            ReportEntry {
+                element: ElementKey::Vertex(VertexId(10)),
+                kind: MetricKind::TaskLatency,
+                mean: 500.0,
+                count: 1,
+            },
+            ReportEntry {
+                element: ElementKey::Channel(ChannelId(1)),
+                kind: MetricKind::ChannelLatency,
+                mean: 2_000.0,
+                count: 1,
+            },
+            ReportEntry {
+                element: ElementKey::Vertex(VertexId(11)),
+                kind: MetricKind::TaskLatency,
+                mean: 300.0,
+                count: 1,
+            },
+            ReportEntry {
+                element: ElementKey::Channel(ChannelId(0)),
+                kind: MetricKind::OutputBufferLifetime,
+                mean: oblt_us,
+                count: 1,
+            },
+            ReportEntry {
+                element: ElementKey::Channel(ChannelId(1)),
+                kind: MetricKind::OutputBufferLifetime,
+                mean: oblt_us,
+                count: 1,
+            },
+            ReportEntry {
+                element: ElementKey::Vertex(VertexId(10)),
+                kind: MetricKind::TaskCpu,
+                mean: cpu,
+                count: 1,
+            },
+            ReportEntry {
+                element: ElementKey::Vertex(VertexId(11)),
+                kind: MetricKind::TaskCpu,
+                mean: cpu,
+                count: 1,
+            },
+        ];
+        m.ingest(&Report {
+            from: WorkerId(0),
+            to_manager: WorkerId(0),
+            at,
+            entries,
+            buffer_updates: Vec::new(),
+        });
+    }
+
+    /// Drive a manager for `windows` constraint windows with fresh
+    /// violated measurements each window; return the per-window action
+    /// batches.
+    pub fn drive(
+        enabled: (bool, bool, bool),
+        oblt_us: f64,
+        cpu: f64,
+        windows: usize,
+    ) -> Vec<Vec<Action>> {
+        let (buffers, chaining, scaling) = enabled;
+        let cfg = ManagerConfig {
+            enable_buffer_sizing: buffers,
+            enable_chaining: chaining,
+            enable_scaling: scaling,
+            scaling: ScalingConfig { max_parallelism: 2, ..ScalingConfig::default() },
+            ..ManagerConfig::default()
+        };
+        let mut m = QosManager::new(WorkerId(0), subgraph(), 32 * 1024, cfg);
+        let mut out = Vec::new();
+        let mut t = Time::from_secs_f64(1.0);
+        for _ in 0..windows {
+            feed(&mut m, t, oblt_us, cpu);
+            out.push(m.act(t));
+            t = t + Duration::from_secs(16); // window (15 s) + 1 s
+        }
+        out
+    }
+
+    pub fn kind(a: &Action) -> &'static str {
+        match a {
+            Action::SetBufferSize { .. } => "buffer",
+            Action::ChainTasks { .. } => "chain",
+            Action::ScaleTasks { .. } => "scale",
+            Action::Unresolvable { .. } => "unresolvable",
+        }
+    }
+
+    pub fn first_window(batches: &[Vec<Action>], want: &str) -> Option<usize> {
+        batches
+            .iter()
+            .position(|b| b.iter().any(|a| kind(a) == want))
+    }
+
+    pub fn escalation_order(g: &mut Gen) -> Result<(), String> {
+        let enabled = (g.bool(), g.bool(), g.bool());
+        // High oblt -> buffer shrinking is always a legal first move;
+        // moderate cpu -> the v10/v11 pair is always chainable.
+        let oblt_us = g.f64(100_000.0, 1_000_000.0);
+        let cpu = g.f64(0.05, 0.3);
+        let batches = drive(enabled, oblt_us, cpu, 14);
+
+        let allowed = |k: &str| match k {
+            "buffer" => enabled.0,
+            "chain" => enabled.1,
+            "scale" => enabled.2,
+            _ => true,
+        };
+        for batch in &batches {
+            for a in batch {
+                if !allowed(kind(a)) {
+                    return Err(format!("disarmed countermeasure acted: {a:?}"));
+                }
+            }
+            // Unresolvable is terminal for its batch: it may only be
+            // emitted when no countermeasure produced an action.
+            if batch.iter().any(|a| kind(a) == "unresolvable") && batch.len() != 1 {
+                return Err(format!("unresolvable batched with actions: {batch:?}"));
+            }
+        }
+
+        let b = first_window(&batches, "buffer");
+        let c = first_window(&batches, "chain");
+        let s = first_window(&batches, "scale");
+        let u = first_window(&batches, "unresolvable");
+
+        // Armed tiers with legal moves must eventually act, in order.
+        if enabled.0 && b.is_none() {
+            return Err("buffer sizing armed but never acted".into());
+        }
+        if enabled.1 && c.is_none() {
+            return Err("chaining armed but never acted".into());
+        }
+        if enabled.2 && s.is_none() {
+            return Err("scaling armed but never acted".into());
+        }
+        if let (Some(b), Some(c)) = (b, c) {
+            if b > c {
+                return Err(format!("chaining (w{c}) before buffer sizing (w{b})"));
+            }
+        }
+        if let (Some(b), Some(s)) = (b, s) {
+            if b > s {
+                return Err(format!("scaling (w{s}) before buffer sizing (w{b})"));
+            }
+        }
+        if let (Some(c), Some(s)) = (c, s) {
+            if c >= s {
+                return Err(format!("scaling (w{s}) not after chaining (w{c})"));
+            }
+        }
+
+        // Every armed tier is finite here (buffers reach epsilon, the one
+        // chain is established once, the scale budget is max_parallelism
+        // = 2), so the manager must end with exactly one Unresolvable —
+        // strictly after every countermeasure action.
+        let u = u.ok_or("exhaustion never reported as unresolvable")?;
+        for w in [b, c, s].into_iter().flatten() {
+            if u <= w {
+                return Err(format!("unresolvable (w{u}) before countermeasure (w{w})"));
+            }
+        }
+        let total_unresolvable: usize = batches
+            .iter()
+            .flatten()
+            .filter(|a| kind(a) == "unresolvable")
+            .count();
+        if total_unresolvable != 1 {
+            return Err(format!("unresolvable reported {total_unresolvable} times"));
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn countermeasure_escalation_order_holds() {
+    check(48, escalation::escalation_order);
+}
+
+#[test]
+fn all_countermeasures_disarmed_reports_unresolvable_immediately() {
+    let batches = escalation::drive((false, false, false), 500_000.0, 0.1, 3);
+    assert_eq!(batches[0].len(), 1);
+    assert_eq!(escalation::kind(&batches[0][0]), "unresolvable");
+    assert!(batches[1].is_empty() && batches[2].is_empty(), "{batches:?}");
+}

@@ -1,0 +1,127 @@
+//! Minimal offline stand-in for the `anyhow` crate, covering the API
+//! surface this workspace uses: [`Result`], [`Error`], the `anyhow!` and
+//! `bail!` macros, and the [`Context`] extension trait on both `Result`
+//! and `Option`.
+//!
+//! The build environment resolves crates offline (no registry access), so
+//! the real crates.io `anyhow` cannot be fetched; this path dependency
+//! keeps `cargo build` hermetic.  Error values are plain messages —
+//! backtraces and source chains are intentionally out of scope.
+
+use std::fmt;
+
+/// A message-carrying error type, convertible from any `std::error::Error`.
+///
+/// Like the real `anyhow::Error`, this type deliberately does **not**
+/// implement `std::error::Error` itself: that keeps the blanket
+/// `From<E: std::error::Error>` impl coherent with the reflexive
+/// `From<Error> for Error` the `?` operator needs.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with a defaulted error type, mirroring `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or a single displayable
+/// expression).
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        $crate::Error::msg(format!($fmt $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Attach context to a `Result` or `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parses(s: &str) -> Result<u32> {
+        let n: u32 = s.parse()?; // From<ParseIntError> via the blanket impl
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parses("42").unwrap(), 42);
+        assert!(parses("x").is_err());
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let e = anyhow!("bad {} of {}", 1, 2);
+        assert_eq!(e.to_string(), "bad 1 of 2");
+
+        fn fails() -> Result<()> {
+            bail!("nope {}", 7);
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "nope 7");
+
+        let r: std::result::Result<(), String> = Err("inner".into());
+        assert_eq!(r.context("outer").unwrap_err().to_string(), "outer: inner");
+        let o: Option<u8> = None;
+        assert_eq!(o.with_context(|| "missing").unwrap_err().to_string(), "missing");
+    }
+}
