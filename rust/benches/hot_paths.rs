@@ -45,9 +45,15 @@ fn bench_channel_hot_path() {
             .unwrap();
     let cfg = EngineConfig::default().unoptimized();
     let ((), secs) = bench_once("sim: microbench 30s virtual @100k items/s", || {
-        let mut cluster =
-            SimCluster::new(job.clone(), rg.clone(), &constraints, specs.clone(), sources.clone(), cfg)
-                .unwrap();
+        let mut cluster = SimCluster::new(
+            job.clone(),
+            rg.clone(),
+            &constraints,
+            specs.clone(),
+            sources.clone(),
+            cfg,
+        )
+        .unwrap();
         cluster.run(Duration::from_secs(30), None);
         let ev = cluster.stats.events_processed;
         println!(

@@ -14,6 +14,11 @@
 //!
 //! Preconditions mirror the chaining conditions in spirit:
 //! * the job vertex is annotated [`elastic`](crate::graph::job::JobVertex::elastic),
+//! * it is **not** annotated `pin_unchainable` (§3.6): a pinned vertex is
+//!   a materialisation point for fault tolerance, and re-partitioning its
+//!   task group would re-key the materialised buffers the recovery path
+//!   replays from — pinning therefore vetoes scaling exactly as it vetoes
+//!   chaining (also enforced by the master on apply),
 //! * its incident edges are all-to-all (key-hash routing re-partitions
 //!   load over however many consumers exist), and
 //! * its task semantics are stateless (enforced by the master on apply).
@@ -69,7 +74,7 @@ fn pick_by(
             ElementKey::Channel(_) => prev_channel_lat = lat,
             ElementKey::Vertex(v) => {
                 if let Some(vr) = vertex_refs.get(&v) {
-                    if vr.elastic && eligible(vr) {
+                    if vr.elastic && !vr.pinned && eligible(vr) {
                         let score = lat + prev_channel_lat;
                         let better = best.map_or(true, |(_, _, b)| {
                             if prefer_higher {
@@ -139,6 +144,11 @@ mod tests {
         }
     }
 
+    fn pinned(mut v: VertexRef) -> VertexRef {
+        v.pinned = true;
+        v
+    }
+
     fn path() -> Vec<(ElementKey, f64)> {
         vec![
             (ElementKey::Channel(ChannelId(0)), 50_000.0),
@@ -168,6 +178,29 @@ mod tests {
         let none: BTreeMap<VertexId, VertexRef> =
             [(VertexId(10), vref(10, false)), (VertexId(11), vref(11, false))].into();
         assert!(pick_scale_target(&path(), &none).is_none());
+    }
+
+    #[test]
+    fn pinned_vertices_are_never_scale_targets() {
+        // §3.6: pinning vetoes scaling like it vetoes chaining.  v10 has
+        // the highest attributed latency but is pinned, so the unpinned
+        // v11 is picked instead; with both pinned nothing qualifies.
+        let refs: BTreeMap<VertexId, VertexRef> = [
+            (VertexId(10), pinned(vref(10, true))),
+            (VertexId(11), vref(11, true)),
+        ]
+        .into();
+        let (jv, _, _) = pick_scale_target(&path(), &refs).unwrap();
+        assert_eq!(jv, JobVertexId(11));
+
+        let all_pinned: BTreeMap<VertexId, VertexRef> = [
+            (VertexId(10), pinned(vref(10, true))),
+            (VertexId(11), pinned(vref(11, true))),
+        ]
+        .into();
+        assert!(pick_scale_target(&path(), &all_pinned).is_none());
+        // The release path honours the veto as well.
+        assert!(pick_release_target(&path(), &all_pinned, |_, _| true).is_none());
     }
 
     #[test]

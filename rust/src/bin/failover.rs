@@ -1,0 +1,19 @@
+//! Worker-failure scenario driver: failure injection, detection via
+//! missed QoS reports, and pinning-aware recovery end to end.  Crashes a
+//! worker mid-run and prints whether the constraint recovered.
+//!
+//! Usage: `failover [--secs N] [--seed N] [--recovery true|false]
+//!                  [--fail-at SECS] [--constraint-ms N] [--quiet]`
+
+#[path = "figbin_common.rs"]
+mod figbin;
+
+use nephele::experiments::failover::run_failover;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (spec, cfg, secs, recovery, verbose) = figbin::failover_args(&argv, 600)?;
+    let report = run_failover(spec, cfg, recovery, secs, verbose)?;
+    figbin::print_failover_summary(&report);
+    Ok(())
+}

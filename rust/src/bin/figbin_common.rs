@@ -63,18 +63,19 @@ pub fn video_args(
     Ok((spec, cfg, secs, verbose))
 }
 
-/// Parse the load-surge driver's arguments (`argv` holds only the
-/// flags, with the program/subcommand name already stripped):
-/// `--secs N --seed N --scaling true|false --surge-at SECS --constraint-ms N --quiet`.
-/// Returns `(spec, cfg, secs, scaling_enabled, verbose)`.
-pub fn surge_args(
+/// Shared flag loop of the scenario drivers: handles the common
+/// `--secs N --seed N --quiet --help` set, hands every flag listed in
+/// `scenario_flags` (all value-taking) with its value to `handle`, and
+/// rejects anything else.  Returns `(cfg, secs, verbose)`.
+fn scenario_args(
     argv: &[String],
     default_secs: u64,
-) -> Result<(nephele::pipeline::surge::SurgeSpec, EngineConfig, u64, bool, bool)> {
-    let mut spec = nephele::pipeline::surge::SurgeSpec::default();
+    usage: &str,
+    scenario_flags: &[&str],
+    handle: &mut dyn FnMut(&str, &str) -> Result<()>,
+) -> Result<(EngineConfig, u64, bool)> {
     let mut cfg = EngineConfig::default();
     let mut secs = default_secs;
-    let mut scaling = true;
     let mut verbose = true;
     let mut i = 0;
     while i < argv.len() {
@@ -91,33 +92,92 @@ pub fn surge_args(
                 cfg.seed = need(i)?.parse()?;
                 i += 2;
             }
-            "--scaling" => {
-                scaling = need(i)?.parse()?;
-                i += 2;
-            }
-            "--surge-at" => {
-                spec.surge_at = nephele::util::time::Duration::from_secs(need(i)?.parse()?);
-                i += 2;
-            }
-            "--constraint-ms" => {
-                spec.constraint_ms = need(i)?.parse()?;
-                i += 2;
-            }
             "--quiet" => {
                 verbose = false;
                 i += 1;
             }
             "--help" | "-h" => {
-                println!(
-                    "usage: [--secs N] [--seed N] [--scaling true|false] [--surge-at SECS] \
-                     [--constraint-ms N] [--quiet]"
-                );
+                println!("{usage}");
                 std::process::exit(0);
+            }
+            flag if scenario_flags.contains(&flag) => {
+                handle(flag, need(i)?.as_str())?;
+                i += 2;
             }
             other => bail!("unknown argument {other:?}"),
         }
     }
+    Ok((cfg, secs, verbose))
+}
+
+/// Parse the load-surge driver's arguments (`argv` holds only the
+/// flags, with the program/subcommand name already stripped):
+/// `--secs N --seed N --scaling true|false --surge-at SECS --constraint-ms N --quiet`.
+/// Returns `(spec, cfg, secs, scaling_enabled, verbose)`.
+pub fn surge_args(
+    argv: &[String],
+    default_secs: u64,
+) -> Result<(nephele::pipeline::surge::SurgeSpec, EngineConfig, u64, bool, bool)> {
+    let mut spec = nephele::pipeline::surge::SurgeSpec::default();
+    let mut scaling = true;
+    let (cfg, secs, verbose) = scenario_args(
+        argv,
+        default_secs,
+        "usage: [--secs N] [--seed N] [--scaling true|false] [--surge-at SECS] \
+         [--constraint-ms N] [--quiet]",
+        &["--scaling", "--surge-at", "--constraint-ms"],
+        &mut |flag, value| {
+            match flag {
+                "--scaling" => scaling = value.parse()?,
+                "--surge-at" => {
+                    spec.surge_at = nephele::util::time::Duration::from_secs(value.parse()?)
+                }
+                "--constraint-ms" => spec.constraint_ms = value.parse()?,
+                _ => unreachable!("unlisted scenario flag {flag}"),
+            }
+            Ok(())
+        },
+    )?;
     Ok((spec, cfg, secs, scaling, verbose))
+}
+
+/// Parse the failover driver's arguments (`argv` holds only the flags,
+/// with the program/subcommand name already stripped):
+/// `--secs N --seed N --recovery true|false --fail-at SECS --constraint-ms N --quiet`.
+/// Returns `(spec, cfg, secs, recovery_enabled, verbose)`.
+pub fn failover_args(
+    argv: &[String],
+    default_secs: u64,
+) -> Result<(nephele::pipeline::failover::FailoverSpec, EngineConfig, u64, bool, bool)> {
+    let mut spec = nephele::pipeline::failover::FailoverSpec::default();
+    let mut recovery = true;
+    let (cfg, secs, verbose) = scenario_args(
+        argv,
+        default_secs,
+        "usage: [--secs N] [--seed N] [--recovery true|false] [--fail-at SECS] \
+         [--constraint-ms N] [--quiet]",
+        &["--recovery", "--fail-at", "--constraint-ms"],
+        &mut |flag, value| {
+            match flag {
+                "--recovery" => recovery = value.parse()?,
+                "--fail-at" => {
+                    spec.fail_at = nephele::util::time::Duration::from_secs(value.parse()?)
+                }
+                "--constraint-ms" => spec.constraint_ms = value.parse()?,
+                _ => unreachable!("unlisted scenario flag {flag}"),
+            }
+            Ok(())
+        },
+    )?;
+    Ok((spec, cfg, secs, recovery, verbose))
+}
+
+/// Shared output of the failover drivers (`failover` binary and
+/// `nephele sim-failover`).
+pub fn print_failover_summary(report: &nephele::experiments::failover::FailoverReport) {
+    println!("== worker failure — pinning-aware recovery ==");
+    print!("{}", report.final_breakdown.render());
+    println!("{}", nephele::experiments::failover::render_summary(report));
 }
 
 /// Shared output of the load-surge drivers (`surge` binary and

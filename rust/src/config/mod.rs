@@ -4,6 +4,7 @@
 //! Ethernet, NTP clock sync with <2 ms skew, 32 KB initial output
 //! buffers, 15 s measurement interval.
 
+use crate::graph::ids::WorkerId;
 use crate::qos::manager::ManagerConfig;
 use crate::util::time::Duration;
 
@@ -54,6 +55,38 @@ impl Default for ClusterConfig {
     }
 }
 
+/// One scheduled worker failure: at `at`, the worker's task threads,
+/// NIC and in-flight buffers are dropped (fail-stop crash).  Handed to
+/// [`crate::sim::cluster::SimCluster::schedule_failures`] by failure
+/// scenarios.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailureSpec {
+    pub worker: WorkerId,
+    pub at: Duration,
+}
+
+/// Master-side failure handling (the §3.6 motivation: pinning exists so
+/// the engine can keep materialisation points for fault tolerance).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryConfig {
+    /// Redeploy dead instances onto surviving workers and replay items
+    /// buffered at `pin_unchainable` materialisation points.  When
+    /// disabled, the master only unregisters the dead worker (detaching
+    /// its instances from the routing tables) and accounts the lost
+    /// items — the failure is detected but never repaired.
+    pub enable_recovery: bool,
+    /// Missed measurement intervals before a silent QoS Reporter's
+    /// worker is declared failed (the detector adds half an interval of
+    /// slack for report phase offsets and control-plane delay).
+    pub detection_intervals: u32,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig { enable_recovery: true, detection_intervals: 2 }
+    }
+}
+
 /// Streaming-engine parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineConfig {
@@ -63,6 +96,8 @@ pub struct EngineConfig {
     /// Measurement interval for reporters and managers; §4.2 uses 15 s.
     pub measurement_interval: Duration,
     pub manager: ManagerConfig,
+    /// Worker-failure detection and recovery policy.
+    pub recovery: RecoveryConfig,
     /// Deterministic seed for workloads, offsets, skew.
     pub seed: u64,
 }
@@ -74,6 +109,7 @@ impl Default for EngineConfig {
             default_buffer_size: 32 * 1024,
             measurement_interval: Duration::from_secs(15),
             manager: ManagerConfig::default(),
+            recovery: RecoveryConfig::default(),
             seed: 42,
         }
     }
@@ -131,6 +167,15 @@ mod tests {
                 && c.manager.enable_chaining
                 && c.manager.enable_scaling
         );
+    }
+
+    #[test]
+    fn recovery_defaults_are_armed_and_patient() {
+        let c = EngineConfig::default();
+        assert!(c.recovery.enable_recovery);
+        assert_eq!(c.recovery.detection_intervals, 2);
+        let f = FailureSpec { worker: WorkerId(2), at: Duration::from_secs(90) };
+        assert_eq!(f, f);
     }
 
     #[test]

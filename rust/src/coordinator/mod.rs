@@ -1,1 +1,147 @@
-// paper's L3 coordination contribution
+//! Master-side coordination: worker-failure detection.
+//!
+//! The paper's master node already receives the whole QoS control-plane
+//! traffic stream (reports, actions, failed-optimisation notices).  The
+//! [`FailureDetector`] piggybacks on it: every worker with a QoS
+//! Reporter role flushes roughly once per measurement interval, so a
+//! worker whose reports stop arriving for a configurable number of
+//! intervals is declared failed.  What happens next is the recovery
+//! policy's business ([`crate::config::RecoveryConfig`]): redeploy the
+//! dead instances and replay from the `pin_unchainable` materialisation
+//! points, or merely unregister the worker.
+
+use crate::graph::ids::WorkerId;
+use crate::util::time::{Duration, Time};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Tracks report liveness per reporter-hosting worker.
+#[derive(Debug, Default)]
+pub struct FailureDetector {
+    timeout: Duration,
+    last_seen: BTreeMap<WorkerId, Time>,
+    /// Workers already declared failed (never re-reported).
+    confirmed: BTreeSet<WorkerId>,
+}
+
+impl FailureDetector {
+    /// `detection_intervals` missed measurement intervals declare a
+    /// worker failed; half an interval of slack absorbs report phase
+    /// offsets and control-plane delay.
+    pub fn new(measurement_interval: Duration, detection_intervals: u32) -> FailureDetector {
+        let micros = measurement_interval.as_micros();
+        let timeout = Duration::from_micros(micros * detection_intervals as u64 + micros / 2);
+        FailureDetector { timeout, last_seen: BTreeMap::new(), confirmed: BTreeSet::new() }
+    }
+
+    pub fn timeout(&self) -> Duration {
+        self.timeout
+    }
+
+    /// Re-sync the monitored set with the current QoS setup (cluster
+    /// construction and every rebuild): workers gaining a reporter role
+    /// start their grace period now, workers losing it are dropped.
+    pub fn track<I: IntoIterator<Item = WorkerId>>(&mut self, reporters: I, now: Time) {
+        let keep: BTreeSet<WorkerId> = reporters.into_iter().collect();
+        self.last_seen.retain(|w, _| keep.contains(w));
+        for w in keep {
+            if !self.confirmed.contains(&w) {
+                self.last_seen.entry(w).or_insert(now);
+            }
+        }
+    }
+
+    /// A report from `worker` passed through the master at `now`.
+    pub fn note(&mut self, worker: WorkerId, now: Time) {
+        if let Some(t) = self.last_seen.get_mut(&worker) {
+            if now > *t {
+                *t = now;
+            }
+        }
+    }
+
+    /// Monitored workers silent past the timeout and not yet confirmed.
+    pub fn silent(&self, now: Time) -> Vec<WorkerId> {
+        self.last_seen
+            .iter()
+            .filter(|&(w, &t)| now.since(t) > self.timeout && !self.confirmed.contains(w))
+            .map(|(&w, _)| w)
+            .collect()
+    }
+
+    /// Mark a worker as handled: it is no longer monitored and will not
+    /// be reported silent again.
+    pub fn confirm(&mut self, worker: WorkerId) {
+        self.confirmed.insert(worker);
+        self.last_seen.remove(&worker);
+    }
+
+    pub fn is_confirmed(&self, worker: WorkerId) -> bool {
+        self.confirmed.contains(&worker)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det() -> FailureDetector {
+        FailureDetector::new(Duration::from_secs(15), 2)
+    }
+
+    #[test]
+    fn timeout_includes_half_interval_slack() {
+        assert_eq!(det().timeout(), Duration::from_micros(37_500_000));
+    }
+
+    #[test]
+    fn silent_worker_is_detected_after_timeout() {
+        let mut d = det();
+        let t0 = Time::from_secs_f64(10.0);
+        d.track([WorkerId(0), WorkerId(1)], t0);
+        d.note(WorkerId(0), Time::from_secs_f64(40.0));
+        // Worker 1 never reported after t0: silent once the timeout is up.
+        assert!(d.silent(Time::from_secs_f64(45.0)).is_empty());
+        assert_eq!(d.silent(Time::from_secs_f64(48.0)), vec![WorkerId(1)]);
+    }
+
+    #[test]
+    fn reports_keep_a_worker_alive() {
+        let mut d = det();
+        d.track([WorkerId(3)], Time::ZERO);
+        for s in [15.0, 30.0, 45.0, 60.0] {
+            d.note(WorkerId(3), Time::from_secs_f64(s));
+            assert!(d.silent(Time::from_secs_f64(s + 20.0)).is_empty());
+        }
+    }
+
+    #[test]
+    fn confirm_is_terminal_and_survives_retrack() {
+        let mut d = det();
+        d.track([WorkerId(2)], Time::ZERO);
+        assert_eq!(d.silent(Time::from_secs_f64(60.0)), vec![WorkerId(2)]);
+        d.confirm(WorkerId(2));
+        assert!(d.is_confirmed(WorkerId(2)));
+        assert!(d.silent(Time::from_secs_f64(120.0)).is_empty());
+        // A rebuild that (spuriously) lists the dead worker again must
+        // not resurrect it.
+        d.track([WorkerId(2)], Time::from_secs_f64(120.0));
+        assert!(d.silent(Time::from_secs_f64(400.0)).is_empty());
+    }
+
+    #[test]
+    fn untracked_workers_are_never_reported() {
+        let mut d = det();
+        d.note(WorkerId(9), Time::from_secs_f64(5.0));
+        assert!(d.silent(Time::from_secs_f64(500.0)).is_empty());
+    }
+
+    #[test]
+    fn retrack_starts_grace_for_new_workers_only() {
+        let mut d = det();
+        d.track([WorkerId(0)], Time::ZERO);
+        // Worker 1 appears at a rebuild much later: its grace starts then.
+        d.track([WorkerId(0), WorkerId(1)], Time::from_secs_f64(100.0));
+        let silent = d.silent(Time::from_secs_f64(110.0));
+        assert_eq!(silent, vec![WorkerId(0)], "old worker is overdue, new one is not");
+    }
+}

@@ -1,0 +1,125 @@
+//! The worker-failure scenario: failure injection, detection via missed
+//! QoS reports, and pinning-aware recovery end to end.  A worker hosting
+//! one Transcoder instance crashes mid-run; with recovery enabled the
+//! instance is redeployed and the `pin_unchainable` materialisation
+//! points replay the lost items, so the constraint returns to satisfied
+//! within the paper's tolerance; with recovery disabled the surviving
+//! Transcoder is overloaded for good and the managers end in the
+//! failed-optimisation report.
+
+use crate::config::EngineConfig;
+use crate::pipeline::failover::{failover_job, FailoverSpec};
+use crate::sim::cluster::SimCluster;
+use crate::sim::metrics::{breakdown, Breakdown, BreakdownPrinter};
+use crate::util::time::Duration;
+use anyhow::Result;
+
+/// Outcome of one failover run.
+#[derive(Debug, Clone)]
+pub struct FailoverReport {
+    pub recovery_enabled: bool,
+    pub final_breakdown: Breakdown,
+    /// Live Transcoder parallelism at the end of the run.
+    pub final_parallelism: usize,
+    /// Worst estimated mean sequence latency over all evaluable chains,
+    /// divided by the constraint limit (`<= 1.0` means satisfied;
+    /// `None` if no chain was evaluable at the end).
+    pub worst_over_limit: Option<f64>,
+    pub workers_crashed: u64,
+    pub failovers: u64,
+    pub instances_reassigned: u64,
+    pub instances_detached: u64,
+    pub items_replayed: u64,
+    pub accounted_lost: u64,
+    pub unresolvable: u64,
+    pub buffer_updates: u64,
+    pub chains_established: u64,
+    pub qos_rebuilds: u64,
+    pub items_ingested: u64,
+    pub items_at_sinks: u64,
+    pub items_in_flight: u64,
+    pub e2e_mean_ms: Option<f64>,
+    pub events: u64,
+}
+
+/// Run the failover scenario for `sim_secs` of virtual time.  The
+/// countermeasure set is whatever `cfg` arms (the paper's buffers +
+/// chaining by default); only the recovery toggle comes from the
+/// parameter.
+pub fn run_failover(
+    spec: FailoverSpec,
+    cfg: EngineConfig,
+    enable_recovery: bool,
+    sim_secs: u64,
+    verbose: bool,
+) -> Result<FailoverReport> {
+    let mut cfg = cfg;
+    cfg.recovery.enable_recovery = enable_recovery;
+
+    let fj = failover_job(spec)?;
+    let seq = fj.constrained_sequence.clone();
+    let transcoder = fj.vertices.transcoder;
+    let limit_us = spec.constraint_ms as f64 * 1e3;
+    let mut cluster =
+        SimCluster::new(fj.job, fj.rg, &fj.constraints, fj.task_specs, fj.sources, cfg)?;
+    cluster.schedule_failures(&[spec.failure()]);
+
+    if verbose {
+        let mut obs = BreakdownPrinter { seq: &seq };
+        cluster.run(Duration::from_secs(sim_secs), Some((&mut obs, Duration::from_secs(30))));
+    } else {
+        cluster.run(Duration::from_secs(sim_secs), None);
+    }
+
+    let now = cluster.now();
+    let final_breakdown = breakdown(&mut cluster, &seq, now);
+    let mut worst: Option<f64> = None;
+    for (_, mgr) in cluster.managers_mut() {
+        for eval in mgr.evaluate_chains(now) {
+            worst = Some(worst.map_or(eval.worst_us, |w: f64| w.max(eval.worst_us)));
+        }
+    }
+    Ok(FailoverReport {
+        recovery_enabled: enable_recovery,
+        final_breakdown,
+        final_parallelism: cluster.parallelism_of(transcoder),
+        worst_over_limit: worst.map(|w| w / limit_us),
+        workers_crashed: cluster.stats.workers_crashed,
+        failovers: cluster.stats.failovers,
+        instances_reassigned: cluster.stats.instances_reassigned,
+        instances_detached: cluster.stats.instances_detached,
+        items_replayed: cluster.stats.items_replayed,
+        accounted_lost: cluster.stats.accounted_lost,
+        unresolvable: cluster.stats.unresolvable_notices,
+        buffer_updates: cluster.stats.buffer_size_updates,
+        chains_established: cluster.stats.chains_established,
+        qos_rebuilds: cluster.stats.qos_rebuilds,
+        items_ingested: cluster.stats.items_ingested,
+        items_at_sinks: cluster.stats.e2e_count,
+        items_in_flight: cluster.items_in_flight(),
+        e2e_mean_ms: cluster.mean_e2e_ms(),
+        events: cluster.stats.events_processed,
+    })
+}
+
+/// One-line summary for CLI output.
+pub fn render_summary(r: &FailoverReport) -> String {
+    format!(
+        "recovery {}: transcoders {} | worst/limit {} | crashed {} failovers {} \
+         | reassigned {} detached {} | replayed {} lost {} | unresolvable {} \
+         | buffer updates {} | at sinks {}",
+        if r.recovery_enabled { "on" } else { "off" },
+        r.final_parallelism,
+        r.worst_over_limit
+            .map_or("n/a".into(), |v| format!("{v:.2}")),
+        r.workers_crashed,
+        r.failovers,
+        r.instances_reassigned,
+        r.instances_detached,
+        r.items_replayed,
+        r.accounted_lost,
+        r.unresolvable,
+        r.buffer_updates,
+        r.items_at_sinks,
+    )
+}

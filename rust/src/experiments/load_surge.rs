@@ -8,9 +8,9 @@
 
 use crate::config::EngineConfig;
 use crate::pipeline::surge::{surge_job, SurgeSpec};
-use crate::sim::cluster::{SimCluster, SimObserver};
-use crate::sim::metrics::{breakdown, Breakdown};
-use crate::util::time::{Duration, Time};
+use crate::sim::cluster::SimCluster;
+use crate::sim::metrics::{breakdown, Breakdown, BreakdownPrinter};
+use crate::util::time::Duration;
 use anyhow::Result;
 
 /// Outcome of one load-surge run.
@@ -34,16 +34,6 @@ pub struct SurgeReport {
     pub e2e_mean_ms: Option<f64>,
     pub items_delivered: u64,
     pub events: u64,
-}
-
-struct PrintObserver<'a> {
-    seq: &'a crate::graph::sequence::JobSequence,
-}
-
-impl SimObserver for PrintObserver<'_> {
-    fn sample(&mut self, cluster: &mut SimCluster, now: Time) {
-        print!("{}", breakdown(cluster, self.seq, now).render());
-    }
 }
 
 /// Run the load-surge scenario for `sim_secs` of virtual time.
@@ -70,7 +60,7 @@ pub fn run_load_surge(
         SimCluster::new(sj.job, sj.rg, &sj.constraints, sj.task_specs, sj.sources, cfg)?;
 
     if verbose {
-        let mut obs = PrintObserver { seq: &seq };
+        let mut obs = BreakdownPrinter { seq: &seq };
         cluster.run(Duration::from_secs(sim_secs), Some((&mut obs, Duration::from_secs(30))));
     } else {
         cluster.run(Duration::from_secs(sim_secs), None);

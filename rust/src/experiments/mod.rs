@@ -3,11 +3,13 @@
 //! (§2.2.1 Fig. 2; §4.3 Figs. 7–10).  See EXPERIMENTS.md for
 //! paper-vs-measured values.
 
+pub mod failover;
 pub mod fig2;
 pub mod hadoop;
 pub mod load_surge;
 pub mod video_scenarios;
 
+pub use failover::{run_failover, FailoverReport};
 pub use fig2::{fig2_sweep, Fig2Cell};
 pub use hadoop::{run_hadoop_online, HadoopReport};
 pub use load_surge::{run_load_surge, SurgeReport};

@@ -235,6 +235,21 @@ impl RuntimeGraph {
         Ok((id, added))
     }
 
+    /// Failure recovery: move a runtime instance to another worker.  The
+    /// topology (channels, members, subtask indices) is untouched — only
+    /// `worker(v)` changes, exactly what redeploying a dead task onto a
+    /// surviving node means.  Channel locality (and therefore latency)
+    /// changes implicitly; the QoS setup must be recomputed afterwards
+    /// because manager partitions and reporter placement derive from
+    /// `worker(v)`.
+    pub fn reassign_instance(&mut self, v: VertexId, worker: WorkerId) -> Result<()> {
+        if worker.0 >= self.num_workers {
+            bail!("invalid {worker} for reassigning {v}");
+        }
+        self.vertices[v.index()].worker = worker;
+        Ok(())
+    }
+
     /// Elastic scale-down: detach a runtime instance.  Its incoming
     /// channels are removed from the routing tables (no new data reaches
     /// it), while its outgoing channels stay wired so already-queued work
@@ -376,6 +391,25 @@ mod tests {
         for &cid in &detached {
             assert!(rg.channel(cid).detached);
         }
+    }
+
+    #[test]
+    fn reassign_instance_moves_worker_and_keeps_wiring() {
+        let (_, mut rg) = three_stage_ata();
+        let b1 = rg.members(JobVertexId(1))[1];
+        let before_ins = rg.in_channels(b1).to_vec();
+        let before_outs = rg.out_channels(b1).to_vec();
+        assert_eq!(rg.worker(b1), WorkerId(1));
+        rg.reassign_instance(b1, WorkerId(0)).unwrap();
+        assert_eq!(rg.worker(b1), WorkerId(0));
+        // Channels, members and subtask index are untouched.
+        assert_eq!(rg.in_channels(b1), &before_ins[..]);
+        assert_eq!(rg.out_channels(b1), &before_outs[..]);
+        assert_eq!(rg.members(JobVertexId(1)), &[VertexId(2), b1][..]);
+        assert_eq!(rg.vertex(b1).subtask, 1);
+        // Invalid target workers are rejected without side effects.
+        assert!(rg.reassign_instance(b1, WorkerId(99)).is_err());
+        assert_eq!(rg.worker(b1), WorkerId(0));
     }
 
     #[test]

@@ -24,6 +24,7 @@
 pub mod actions;
 pub mod baseline;
 pub mod config;
+pub mod coordinator;
 pub mod experiments;
 pub mod graph;
 pub mod live;

@@ -6,13 +6,15 @@
 //! nephele sim-meter  [--secs N] [--optimized true|false]
 //! nephele sim-surge  [--secs N] [--seed N] [--scaling true|false]
 //!                    [--surge-at SECS] [--constraint-ms N] [--quiet]
+//! nephele sim-failover [--secs N] [--seed N] [--recovery true|false]
+//!                    [--fail-at SECS] [--constraint-ms N] [--quiet]
 //! nephele live       [--frames N] [--fps F] [--artifacts DIR]
 //! nephele info
 //! ```
 //!
-//! The per-figure experiment binaries (`fig2`, `fig7`..`fig10`, `surge`)
-//! regenerate the paper's evaluation plus the elastic-scaling scenario;
-//! this binary is the general launcher.
+//! The per-figure experiment binaries (`fig2`, `fig7`..`fig10`, `surge`,
+//! `failover`) regenerate the paper's evaluation plus the elastic-scaling
+//! and failure-recovery scenarios; this binary is the general launcher.
 
 // Shared surge CLI plumbing, also included by the `surge` binary.
 #[path = "bin/figbin_common.rs"]
@@ -20,6 +22,7 @@ mod figbin;
 
 use anyhow::{bail, Result};
 use nephele::config::EngineConfig;
+use nephele::experiments::failover::run_failover;
 use nephele::experiments::load_surge::run_load_surge;
 use nephele::experiments::video_scenarios::{run_video_scenario, Scenario};
 use nephele::live::{run_live, LiveConfig};
@@ -35,13 +38,16 @@ fn main() -> Result<()> {
         Some("sim-video") => sim_video(&argv[1..]),
         Some("sim-meter") => sim_meter(&argv[1..]),
         Some("sim-surge") => sim_surge(&argv[1..]),
+        Some("sim-failover") => sim_failover(&argv[1..]),
         Some("live") => live(&argv[1..]),
         Some("info") | None => {
             println!("nephele-streaming — reproduction of 'Nephele Streaming: Stream");
             println!("Processing under QoS Constraints at Scale' (Cluster Computing 2013).");
             println!();
-            println!("subcommands: sim-video | sim-meter | sim-surge | live | info");
-            println!("figure binaries: fig2, fig7, fig8, fig9, fig10, surge (see EXPERIMENTS.md)");
+            println!("subcommands: sim-video | sim-meter | sim-surge | sim-failover | live | info");
+            println!(
+                "figure binaries: fig2, fig7, fig8, fig9, fig10, surge, failover (see EXPERIMENTS.md)"
+            );
             Ok(())
         }
         Some(other) => bail!("unknown subcommand {other:?} (try `nephele info`)"),
@@ -92,7 +98,10 @@ fn sim_video(argv: &[String]) -> Result<()> {
     print!("{}", report.final_breakdown.render());
     println!(
         "buffer updates: {} | chains: {} | unresolvable: {} | delivered: {}",
-        report.buffer_updates, report.chains_established, report.unresolvable, report.items_delivered
+        report.buffer_updates,
+        report.chains_established,
+        report.unresolvable,
+        report.items_delivered
     );
     Ok(())
 }
@@ -101,6 +110,13 @@ fn sim_surge(argv: &[String]) -> Result<()> {
     let (spec, cfg, secs, scaling, verbose) = figbin::surge_args(argv, 360)?;
     let report = run_load_surge(spec, cfg, scaling, secs, verbose)?;
     figbin::print_surge_summary(&report);
+    Ok(())
+}
+
+fn sim_failover(argv: &[String]) -> Result<()> {
+    let (spec, cfg, secs, recovery, verbose) = figbin::failover_args(argv, 600)?;
+    let report = run_failover(spec, cfg, recovery, secs, verbose)?;
+    figbin::print_failover_summary(&report);
     Ok(())
 }
 

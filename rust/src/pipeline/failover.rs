@@ -1,0 +1,281 @@
+//! Worker-failure variant of the video pipeline (fault-tolerance
+//! scenario):
+//!
+//! ```text
+//! Ingest[pinned] -(all-to-all)-> Transcoder -(all-to-all)-> RTPSink
+//! ```
+//!
+//! The Ingest stage carries the §3.6 `pin_unchainable` annotation: it is
+//! a materialisation point, so every item it emits survives in a durable
+//! buffer until the downstream segment has consumed it.  One worker is
+//! placed so that it hosts exactly one Transcoder instance, and a
+//! [`FailureSpec`] crashes it mid-run.
+//!
+//! * With recovery enabled, the master detects the silent worker,
+//!   redeploys the dead instance onto a surviving worker, replays the
+//!   items stashed at the Ingest materialisation points, and the
+//!   restored parallelism works the replay backlog off — the constraint
+//!   returns to satisfied.
+//! * With recovery disabled, the dead instance is merely detached;
+//!   key-hash routing funnels *all* streams through the surviving
+//!   Transcoder, whose demand is sized above one task thread — the
+//!   constraint stays violated, and with buffer sizing converged and no
+//!   chainable pair on the single-task sequence the managers escalate to
+//!   the failed-optimisation report (`Unresolvable`).
+//!
+//! Items travelling Transcoder→RTPSink at crash time have an *unpinned*
+//! producer: they are accounted as lost explicitly, never replayed.
+
+use crate::config::FailureSpec;
+use crate::graph::constraint::JobConstraint;
+use crate::graph::ids::{JobVertexId, WorkerId};
+use crate::graph::job::{DistributionPattern, JobGraph};
+use crate::graph::runtime::RuntimeGraph;
+use crate::graph::sequence::JobSequence;
+use crate::sim::cluster::SourceSpec;
+use crate::sim::task::{KeyMap, OutBytes, Route, Semantics, TaskSpec};
+use crate::util::time::Duration;
+use anyhow::{bail, Result};
+
+/// Workload parameters.  Defaults keep each of the two Transcoders at
+/// ~60% of a task thread, so losing one (without recovery) leaves the
+/// survivor at ~120% — an overload neither buffer sizing nor chaining
+/// can fix, while redeployment restores the comfortable 60%.
+#[derive(Debug, Clone, Copy)]
+pub struct FailoverSpec {
+    pub workers: u32,
+    pub ingest_parallelism: u32,
+    pub transcoder_parallelism: u32,
+    pub sink_parallelism: u32,
+    /// Streams active from t=0.
+    pub streams: u32,
+    /// Frames per second per stream.
+    pub fps: f64,
+    /// Compressed frame packet bytes on Ingest->Transcoder.
+    pub packet_bytes: u64,
+    /// Transcoded packet bytes on Transcoder->RTPSink.
+    pub transcoded_bytes: u64,
+    /// Per-frame Transcoder service time.
+    pub transcode_service: Duration,
+    pub constraint_ms: u64,
+    pub window_secs: u64,
+    /// The worker the failure injector crashes; hosts exactly one
+    /// Transcoder instance and nothing else.
+    pub fail_worker: u32,
+    /// Crash time.
+    pub fail_at: Duration,
+}
+
+impl Default for FailoverSpec {
+    fn default() -> Self {
+        FailoverSpec {
+            workers: 3,
+            ingest_parallelism: 2,
+            transcoder_parallelism: 2,
+            sink_parallelism: 2,
+            streams: 6,
+            fps: 50.0,
+            packet_bytes: 2 * 1024,
+            transcoded_bytes: 1024,
+            transcode_service: Duration::from_micros(4_000),
+            constraint_ms: 300,
+            window_secs: 15,
+            fail_worker: 2,
+            fail_at: Duration::from_secs(90),
+        }
+    }
+}
+
+impl FailoverSpec {
+    /// Total arrival rate (items/s).
+    pub fn rate(&self) -> f64 {
+        self.streams as f64 * self.fps
+    }
+
+    /// Transcoder CPU demand in task threads.
+    pub fn transcoder_demand(&self) -> f64 {
+        self.rate() * self.transcode_service.as_secs_f64()
+    }
+
+    /// The injected failure.
+    pub fn failure(&self) -> FailureSpec {
+        FailureSpec { worker: WorkerId(self.fail_worker), at: self.fail_at }
+    }
+}
+
+/// Job-vertex handles.
+#[derive(Debug, Clone, Copy)]
+pub struct FailoverVertices {
+    pub ingest: JobVertexId,
+    pub transcoder: JobVertexId,
+    pub sink: JobVertexId,
+}
+
+/// Everything needed to simulate the failover job.
+pub struct FailoverJob {
+    pub spec: FailoverSpec,
+    pub job: JobGraph,
+    pub rg: RuntimeGraph,
+    pub constraints: Vec<JobConstraint>,
+    pub task_specs: Vec<TaskSpec>,
+    pub sources: Vec<SourceSpec>,
+    pub constrained_sequence: JobSequence,
+    pub vertices: FailoverVertices,
+}
+
+/// Build the failover job.
+pub fn failover_job(spec: FailoverSpec) -> Result<FailoverJob> {
+    if spec.workers < 2 {
+        bail!("failover scenario needs at least 2 workers (one must survive)");
+    }
+    if spec.fail_worker >= spec.workers {
+        bail!("fail_worker {} out of range (workers {})", spec.fail_worker, spec.workers);
+    }
+    if spec.transcoder_parallelism < 2 {
+        bail!("need at least 2 Transcoders (one must survive the crash)");
+    }
+    let mut job = JobGraph::new();
+    let ingest = job.add_vertex("Ingest", spec.ingest_parallelism);
+    let transcoder = job.add_vertex("Transcoder", spec.transcoder_parallelism);
+    let sink = job.add_vertex("RTPSink", spec.sink_parallelism);
+    job.connect(ingest, transcoder, DistributionPattern::AllToAll);
+    job.connect(transcoder, sink, DistributionPattern::AllToAll);
+    // §3.6: Ingest is the materialisation point the recovery replays from.
+    job.vertex_mut(ingest).pin_unchainable = true;
+    job.vertex_mut(transcoder).cpu_utilization =
+        (spec.transcoder_demand() / spec.transcoder_parallelism as f64).min(1.0);
+    job.validate()?;
+
+    // Placement: the doomed worker hosts exactly one Transcoder instance
+    // (the last subtask); everything else spreads over the survivors.
+    // This keeps external streams attached to live Ingest endpoints
+    // across the crash, so the workload itself never changes.
+    let doomed = spec.fail_worker;
+    let others: Vec<u32> = (0..spec.workers).filter(|&w| w != doomed).collect();
+    let last_transcoder = spec.transcoder_parallelism - 1;
+    let rg = RuntimeGraph::expand_with(&job, spec.workers, &|jv, s| {
+        if jv == transcoder && s == last_transcoder {
+            WorkerId(doomed)
+        } else {
+            WorkerId(others[s as usize % others.len()])
+        }
+    })?;
+
+    // Constraint over (e1, vTranscoder, e2).
+    let seq = JobSequence::along_path(&job, &[transcoder], Some(ingest), Some(sink))?;
+    let constraints = vec![JobConstraint::new(
+        seq.clone(),
+        Duration::from_millis(spec.constraint_ms),
+        Duration::from_secs(spec.window_secs),
+    )];
+
+    let task_specs = vec![
+        // Ingest: forwards stream packets, key-hashed over the live
+        // Transcoder instances.
+        TaskSpec {
+            semantics: Semantics::Transform,
+            service: Duration::from_micros(30),
+            out_bytes: OutBytes::Scale(1.0),
+            key_map: KeyMap::Identity,
+            route: Route::ByKey { divisor: 1 },
+            downstream_delay: Duration::ZERO,
+        },
+        // Transcoder: the CPU-heavy stage whose instance dies.
+        TaskSpec {
+            semantics: Semantics::Transform,
+            service: spec.transcode_service,
+            out_bytes: OutBytes::Const(spec.transcoded_bytes),
+            key_map: KeyMap::Identity,
+            route: Route::ByKey { divisor: 1 },
+            downstream_delay: Duration::ZERO,
+        },
+        TaskSpec::sink(),
+    ];
+
+    let interval = Duration::from_secs_f64(1.0 / spec.fps);
+    let sources = (0..spec.streams)
+        .map(|s| {
+            let phase = Duration::from_micros(
+                (interval.as_micros() as u128 * s as u128 / spec.streams.max(1) as u128) as u64,
+            );
+            SourceSpec {
+                key: s,
+                target: ingest,
+                target_subtask: s % spec.ingest_parallelism,
+                interval,
+                bytes: spec.packet_bytes,
+                offset: phase,
+                throttle: None,
+                batch: 1,
+            }
+        })
+        .collect();
+
+    Ok(FailoverJob {
+        spec,
+        job,
+        rg,
+        constraints,
+        task_specs,
+        sources,
+        constrained_sequence: seq,
+        vertices: FailoverVertices { ingest, transcoder, sink },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_with_defaults() {
+        let fj = failover_job(FailoverSpec::default()).unwrap();
+        assert_eq!(fj.job.vertices.len(), 3);
+        assert_eq!(fj.rg.vertices.len(), 6);
+        assert_eq!(fj.sources.len(), 6);
+        assert!(fj.job.vertex(fj.vertices.ingest).pin_unchainable);
+        assert!(!fj.job.vertex(fj.vertices.transcoder).pin_unchainable);
+        fj.constrained_sequence.validate(&fj.job).unwrap();
+    }
+
+    #[test]
+    fn doomed_worker_hosts_exactly_one_transcoder() {
+        let spec = FailoverSpec::default();
+        let fj = failover_job(spec).unwrap();
+        let doomed = WorkerId(spec.fail_worker);
+        let hosted: Vec<_> = fj.rg.vertices_on_worker(doomed).collect();
+        assert_eq!(hosted.len(), 1, "crash must take down exactly one instance");
+        assert_eq!(hosted[0].job_vertex, fj.vertices.transcoder);
+        // External streams stay attached to surviving Ingest endpoints.
+        for s in &fj.sources {
+            let v = fj.rg.members(s.target)[s.target_subtask as usize];
+            assert_ne!(fj.rg.worker(v), doomed);
+        }
+    }
+
+    #[test]
+    fn losing_one_transcoder_overloads_the_survivor_but_base_load_is_comfortable() {
+        let spec = FailoverSpec::default();
+        let demand = spec.transcoder_demand();
+        let per_instance = demand / spec.transcoder_parallelism as f64;
+        assert!(per_instance < 0.9, "base load must be comfortable: {per_instance}");
+        let survivor_load = demand / (spec.transcoder_parallelism - 1) as f64;
+        assert!(
+            survivor_load > 1.05,
+            "unrecovered crash must overload the survivor: {survivor_load}"
+        );
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected() {
+        let mut s = FailoverSpec::default();
+        s.workers = 1;
+        assert!(failover_job(s).is_err());
+        let mut s = FailoverSpec::default();
+        s.fail_worker = 3;
+        assert!(failover_job(s).is_err());
+        let mut s = FailoverSpec::default();
+        s.transcoder_parallelism = 1;
+        assert!(failover_job(s).is_err());
+    }
+}

@@ -63,8 +63,14 @@ impl Default for MeterSpec {
 #[allow(clippy::type_complexity)]
 pub fn smart_meter_job(
     spec: MeterSpec,
-) -> Result<(JobGraph, RuntimeGraph, Vec<JobConstraint>, Vec<TaskSpec>, Vec<SourceSpec>, JobSequence)>
-{
+) -> Result<(
+    JobGraph,
+    RuntimeGraph,
+    Vec<JobConstraint>,
+    Vec<TaskSpec>,
+    Vec<SourceSpec>,
+    JobSequence,
+)> {
     assert_eq!(spec.meters % spec.meters_per_feeder, 0);
     let feeders = spec.meters / spec.meters_per_feeder;
     let m = spec.parallelism;

@@ -1,11 +1,13 @@
 //! Job builders: the paper's evaluation workloads expressed against the
 //! public API (job graph + constraints + task semantics + sources).
 
+pub mod failover;
 pub mod meter;
 pub mod microbench;
 pub mod surge;
 pub mod video;
 
+pub use failover::{failover_job, FailoverJob, FailoverSpec};
 pub use meter::{smart_meter_job, MeterSpec};
 pub use microbench::{sender_receiver_job, MicrobenchSpec};
 pub use surge::{surge_job, SurgeJob, SurgeSpec};

@@ -308,7 +308,13 @@ mod tests {
         // The paper chained Decoder..Encoder because their CPU sum fits
         // one core; our defaults must reproduce that precondition.
         let j = video_job(VideoSpec::default()).unwrap();
-        let sum: f64 = [j.vertices.decoder, j.vertices.merger, j.vertices.overlay, j.vertices.encoder]
+        let stages = [
+            j.vertices.decoder,
+            j.vertices.merger,
+            j.vertices.overlay,
+            j.vertices.encoder,
+        ];
+        let sum: f64 = stages
             .iter()
             .map(|&v| j.job.vertex(v).cpu_utilization)
             .sum();

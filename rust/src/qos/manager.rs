@@ -432,8 +432,12 @@ impl QosManager {
                         };
                         let obl_ms = oblt / 2.0 / 1e3;
                         let cur = self.buffer_size(c.id);
-                        match next_buffer_size(cur, obl_ms, prev_vertex_latency_ms, &self.cfg.buffer)
-                        {
+                        match next_buffer_size(
+                            cur,
+                            obl_ms,
+                            prev_vertex_latency_ms,
+                            &self.cfg.buffer,
+                        ) {
                             SizeDecision::Shrink(size) | SizeDecision::Grow(size) => {
                                 self.buffer_sizes.insert(c.id, size);
                                 self.clear_channel_metrics(c.id);
@@ -808,6 +812,33 @@ mod tests {
         let mut m = QosManager::new(
             WorkerId(0),
             subgraph(1), // nothing elastic
+            32 * 1024,
+            ManagerConfig {
+                enable_buffer_sizing: false,
+                enable_chaining: false,
+                enable_scaling: true,
+                ..ManagerConfig::default()
+            },
+        );
+        let t = Time::from_secs_f64(1.0);
+        feed_all(&mut m, t, 1000.0, 2000.0, 500.0, 800.0, 300.0);
+        let a = m.act(t);
+        assert_eq!(a.len(), 1);
+        assert!(matches!(a[0], Action::Unresolvable { .. }), "{a:?}");
+    }
+
+    #[test]
+    fn scaling_skips_pinned_groups_even_when_elastic() {
+        // §3.6: a pinned vertex is a fault-tolerance materialisation
+        // point; the scaling tier must refuse it just like chaining does,
+        // leaving only the failed-optimisation report.
+        let mut sg = elastic_subgraph(1);
+        if let Layer::Vertices(vs) = &mut sg.chains[0].layers[1] {
+            vs[0].pinned = true;
+        }
+        let mut m = QosManager::new(
+            WorkerId(0),
+            sg,
             32 * 1024,
             ManagerConfig {
                 enable_buffer_sizing: false,

@@ -194,7 +194,10 @@ impl QosReporter {
         for m in due {
             *self.next_flush.get_mut(&m).unwrap() = now + self.interval;
         }
-        reports.into_values().filter(|r| !r.entries.is_empty() || !r.buffer_updates.is_empty()).collect()
+        reports
+            .into_values()
+            .filter(|r| !r.entries.is_empty() || !r.buffer_updates.is_empty())
+            .collect()
     }
 }
 

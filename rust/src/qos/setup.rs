@@ -17,7 +17,7 @@ use crate::graph::job::JobGraph;
 use crate::graph::runtime::RuntimeGraph;
 use crate::graph::sequence::JobSeqElem;
 use anyhow::{bail, Result};
-use std::collections::{BTreeMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet, HashSet};
 
 /// Per-worker reporter duties.
 #[derive(Debug, Clone, Default)]
@@ -123,14 +123,16 @@ fn graph_expand(
     let mut layers: Vec<Option<Layer>> = vec![None; n];
     layers[anchor_pos] = Some(Layer::Vertices(vec![vertex_ref(job, rg, anchor)]));
 
-    // Backwards.
+    // Backwards.  Frontiers are kept in sorted order (BTreeSet) and
+    // channel layers sorted by id: layer contents must not depend on
+    // hash-iteration order, or same-seed replays diverge on latency ties.
     let mut frontier: Vec<VertexId> = vec![anchor];
     for pos in (0..anchor_pos).rev() {
         match elems[pos] {
             JobSeqElem::Edge(je) => {
-                let fset: HashSet<VertexId> = frontier.iter().copied().collect();
+                let fset: BTreeSet<VertexId> = frontier.iter().copied().collect();
                 let mut channels = Vec::new();
-                let mut next = HashSet::new();
+                let mut next = BTreeSet::new();
                 for &v in &fset {
                     for &cid in rg.in_channels(v) {
                         let c = rg.channel(cid);
@@ -145,6 +147,7 @@ fn graph_expand(
                         }
                     }
                 }
+                channels.sort_by_key(|c| c.id);
                 layers[pos] = Some(Layer::Channels(channels));
                 frontier = next.into_iter().collect();
             }
@@ -162,9 +165,9 @@ fn graph_expand(
     for (pos, elem) in elems.iter().enumerate().skip(anchor_pos + 1) {
         match elem {
             JobSeqElem::Edge(je) => {
-                let fset: HashSet<VertexId> = frontier.iter().copied().collect();
+                let fset: BTreeSet<VertexId> = frontier.iter().copied().collect();
                 let mut channels = Vec::new();
-                let mut next = HashSet::new();
+                let mut next = BTreeSet::new();
                 for &v in &fset {
                     for &cid in rg.out_channels(v) {
                         let c = rg.channel(cid);
@@ -179,6 +182,7 @@ fn graph_expand(
                         }
                     }
                 }
+                channels.sort_by_key(|c| c.id);
                 layers[pos] = Some(Layer::Channels(channels));
                 frontier = next.into_iter().collect();
             }
@@ -337,7 +341,9 @@ fn add_interest(
 
 /// Helper for invariant checks and tests: the set of (vertex, channel)
 /// elements each manager monitors.
-pub fn manager_elements(sub: &QosSubgraph) -> (HashSet<VertexId>, HashSet<crate::graph::ids::ChannelId>) {
+pub fn manager_elements(
+    sub: &QosSubgraph,
+) -> (HashSet<VertexId>, HashSet<crate::graph::ids::ChannelId>) {
     let mut vs = HashSet::new();
     let mut cs = HashSet::new();
     for chain in &sub.chains {
@@ -450,6 +456,57 @@ mod tests {
         // chains = m/n = 2 -> 128; times n=4 managers = m^3 = 512 total.
         assert_eq!(chain.sequence_count(), 64);
         let _ = g;
+    }
+
+    #[test]
+    fn pinning_and_elasticity_annotations_reach_vertex_refs() {
+        let (mut g, _, jc) = video_job(4, 2);
+        let merger = g.vertex_by_name("Merger").unwrap().id;
+        let overlay = g.vertex_by_name("Overlay").unwrap().id;
+        g.vertex_mut(merger).pin_unchainable = true;
+        g.vertex_mut(overlay).elastic = true;
+        let rg = RuntimeGraph::expand(&g, 2).unwrap();
+        let setup = compute_qos_setup(&g, &rg, &[jc]).unwrap();
+        let mut saw_merger = false;
+        let mut saw_overlay = false;
+        for sub in setup.managers.values() {
+            for chain in &sub.chains {
+                for v in chain.vertices() {
+                    if v.job_vertex == merger {
+                        saw_merger = true;
+                        assert!(v.pinned, "pin_unchainable must reach the manager");
+                        assert!(!v.elastic);
+                    }
+                    if v.job_vertex == overlay {
+                        saw_overlay = true;
+                        assert!(v.elastic, "elastic must reach the manager");
+                        assert!(!v.pinned);
+                    }
+                }
+            }
+        }
+        assert!(saw_merger && saw_overlay);
+    }
+
+    #[test]
+    fn channel_layers_are_sorted_by_id() {
+        // Deterministic layer order is what makes same-seed replays
+        // byte-identical (tie-breaking in the max-plus DP follows layer
+        // order).
+        let (g, rg, jc) = video_job(8, 4);
+        let setup = compute_qos_setup(&g, &rg, &[jc]).unwrap();
+        for sub in setup.managers.values() {
+            for chain in &sub.chains {
+                for layer in &chain.layers {
+                    if let Layer::Channels(cs) = layer {
+                        assert!(
+                            cs.windows(2).all(|w| w[0].id < w[1].id),
+                            "unsorted channel layer"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

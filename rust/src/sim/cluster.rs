@@ -10,7 +10,8 @@ use super::task::{QueuedBuffer, Route, Semantics, TaskSpec, TaskState};
 use crate::actions::arbiter::{BufferUpdateArbiter, Verdict};
 use crate::actions::chaining::DrainPolicy;
 use crate::actions::Action;
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, FailureSpec};
+use crate::coordinator::FailureDetector;
 use crate::graph::constraint::JobConstraint;
 use crate::graph::ids::{ChannelId, JobEdgeId, JobVertexId, VertexId, WorkerId};
 use crate::graph::job::JobGraph;
@@ -61,12 +62,24 @@ enum Ev {
     ManagerTick { worker: u32 },
     CpuSample { worker: u32 },
     ApplyAction { action: Action },
+    /// Fail-stop crash of a worker (injected by a
+    /// [`FailureSpec`]): its task threads, NIC state and buffered items
+    /// are gone.
+    WorkerCrash { worker: u32 },
+    /// Master-side liveness sweep: declare workers whose QoS reports
+    /// went silent as failed and run the recovery policy.
+    MasterTick,
 }
 
 /// Counters and ground-truth statistics the harness reads out.
 #[derive(Debug, Default, Clone)]
 pub struct SimStats {
     pub items_ingested: u64,
+    /// Input-queue delivery events at live tasks.  This counts
+    /// *deliveries*, not distinct items: an item delivered, destroyed by
+    /// a crash, and re-delivered from a materialisation buffer counts
+    /// twice (conservation uses `e2e_count`/`items_in_flight`/
+    /// `accounted_lost`, never this).
     pub items_delivered: u64,
     pub bytes_on_wire: u64,
     pub buffers_flushed: u64,
@@ -85,7 +98,22 @@ pub struct SimStats {
     pub scale_downs: u64,
     pub scaling_rejected: u64,
     pub qos_rebuilds: u64,
+    /// Failure injection and recovery.  `accounted_lost` is the explicit
+    /// ledger of items destroyed by crashes (and emissions with no wired
+    /// consumer left): `items_ingested == e2e_count + items_in_flight()
+    /// + accounted_lost` once the wire is drained.
+    pub accounted_lost: u64,
+    pub items_replayed: u64,
+    pub workers_crashed: u64,
+    /// Worker failures the master detected and handled.
+    pub failovers: u64,
+    pub instances_reassigned: u64,
+    pub instances_detached: u64,
     pub events_processed: u64,
+    /// Timestamped log of every applied countermeasure, crash and
+    /// failover decision: the replayable action trail that the
+    /// determinism tests compare byte-for-byte across same-seed runs.
+    pub action_log: Vec<String>,
 }
 
 const E2E_RESERVOIR: usize = 100_000;
@@ -198,6 +226,19 @@ pub struct SimCluster {
     /// rebuilds must start chains only for workers that lack one).
     flush_chains: BTreeSet<u32>,
     tick_chains: BTreeSet<u32>,
+    /// Fail-stop state: crashed workers and their (dead) task threads.
+    /// `dead_tasks` is also set for instances detached by a
+    /// recovery-disabled failover.
+    dead_workers: Vec<bool>,
+    dead_tasks: Vec<bool>,
+    /// Items destroyed by a crash whose producing task is a
+    /// `pin_unchainable` materialisation point: its durable buffer holds
+    /// a copy, keyed by the channel the item was travelling, awaiting
+    /// replay by a recovery.
+    replay_stash: BTreeMap<u32, Vec<ItemRec>>,
+    /// Master-side liveness tracking over QoS report traffic.
+    detector: FailureDetector,
+    master_tick_armed: bool,
     /// Sources stop emitting at this time.
     source_end: Time,
     pub stats: SimStats,
@@ -255,6 +296,9 @@ impl SimCluster {
             .collect();
 
 
+        let detector =
+            FailureDetector::new(cfg.measurement_interval, cfg.recovery.detection_intervals);
+        let num_workers = rg.num_workers as usize;
         let mut cluster = SimCluster {
             job,
             rg,
@@ -283,11 +327,33 @@ impl SimCluster {
             last_scale: BTreeMap::new(),
             flush_chains: BTreeSet::new(),
             tick_chains: BTreeSet::new(),
+            dead_workers: vec![false; num_workers],
+            dead_tasks: vec![false; n_vertices],
+            replay_stash: BTreeMap::new(),
+            detector,
+            master_tick_armed: false,
             source_end: Time(u64::MAX),
             stats: SimStats::default(),
         };
+        let reporter_workers: Vec<WorkerId> = cluster.reporters.keys().copied().collect();
+        cluster.detector.track(reporter_workers, Time::ZERO);
         cluster.schedule_initial();
         Ok(cluster)
+    }
+
+    /// Arm the failure injector: each spec crashes its worker at the
+    /// given virtual time, and the master starts its liveness sweep over
+    /// the QoS report traffic.  Scenarios without failures never pay for
+    /// (or are perturbed by) the extra events.
+    pub fn schedule_failures(&mut self, specs: &[FailureSpec]) {
+        for spec in specs {
+            self.queue.push(Time::ZERO + spec.at, Ev::WorkerCrash { worker: spec.worker.0 });
+        }
+        if !specs.is_empty() && !self.master_tick_armed {
+            self.master_tick_armed = true;
+            let first_tick = self.queue.now() + self.cfg.measurement_interval;
+            self.queue.push(first_tick, Ev::MasterTick);
+        }
     }
 
     fn schedule_initial(&mut self) {
@@ -367,13 +433,20 @@ impl SimCluster {
             Ev::TaskDone { vertex } => self.on_task_done(now, VertexId(vertex)),
             Ev::ReporterFlush { worker } => self.on_reporter_flush(now, WorkerId(worker)),
             Ev::ReportArrive { report } => {
-                if let Some(m) = self.managers.get_mut(&report.to_manager) {
-                    m.ingest(&report);
+                // The master relays the control plane and piggybacks its
+                // liveness tracking on the report traffic.
+                self.detector.note(report.from, now);
+                if !self.dead_workers[report.to_manager.index()] {
+                    if let Some(m) = self.managers.get_mut(&report.to_manager) {
+                        m.ingest(&report);
+                    }
                 }
             }
             Ev::ManagerTick { worker } => self.on_manager_tick(now, WorkerId(worker)),
             Ev::CpuSample { worker } => self.on_cpu_sample(now, WorkerId(worker)),
             Ev::ApplyAction { action } => self.on_apply(now, action),
+            Ev::WorkerCrash { worker } => self.on_worker_crash(now, WorkerId(worker)),
+            Ev::MasterTick => self.on_master_tick(now),
         }
     }
 
@@ -385,25 +458,42 @@ impl SimCluster {
         let s = self.sources[source as usize];
         let batch = s.batch.max(1);
         let item = ItemRec::new(s.key, s.bytes, now);
-        let v = self.rg.members(s.target)[s.target_subtask as usize];
-        self.stats.items_ingested += batch as u64;
-        // External ingress: no channel, the items land directly in the
-        // source task's input queue as one buffer.
-        let buffer = Buffer {
-            channel: u32::MAX,
-            items: vec![item; batch as usize],
-            bytes: s.bytes * batch as u64,
-            flushed: now,
+        // Failure handling can shrink the target group; external streams
+        // reconnect to a surviving member (index modulo live members).
+        let members = self.rg.members(s.target);
+        let v = if members.is_empty() {
+            None
+        } else {
+            Some(members[s.target_subtask as usize % members.len()])
         };
-        self.enqueue_buffer(now, v, buffer);
+        self.stats.items_ingested += batch as u64;
         let mut next = now + s.interval.max(Duration::from_micros(1));
-        if let Some(bound) = s.throttle {
-            let worker = self.rg.worker(v);
-            let backlog = self.nics[worker.index()].backlog(now);
-            if backlog > bound {
-                // Pause until the egress backlog drains back to the flow
-                // control bound (TCP window behaviour).
-                next = now + (backlog - bound).max(s.interval);
+        match v {
+            Some(v) if !self.dead_tasks[v.index()] => {
+                // External ingress: no channel, the items land directly in
+                // the source task's input queue as one buffer.
+                let buffer = Buffer {
+                    channel: u32::MAX,
+                    items: vec![item; batch as usize],
+                    bytes: s.bytes * batch as u64,
+                    flushed: now,
+                };
+                self.enqueue_buffer(now, v, buffer);
+                if let Some(bound) = s.throttle {
+                    let worker = self.rg.worker(v);
+                    let backlog = self.nics[worker.index()].backlog(now);
+                    if backlog > bound {
+                        // Pause until the egress backlog drains back to the
+                        // flow control bound (TCP window behaviour).
+                        next = now + (backlog - bound).max(s.interval);
+                    }
+                }
+            }
+            _ => {
+                // The stream's endpoint is dead (or its whole group is
+                // gone): items are lost at the cluster edge — there is no
+                // materialisation point upstream of an external source.
+                self.stats.accounted_lost += batch as u64;
             }
         }
         if next < self.source_end {
@@ -413,6 +503,13 @@ impl SimCluster {
 
     fn on_deliver(&mut self, now: Time, buffer: Buffer) {
         let v = self.rg.channel(ChannelId(buffer.channel)).to;
+        if self.dead_tasks[v.index()] {
+            // The receiving task thread is gone: the buffer is lost on
+            // arrival (items from pinned producers survive in the
+            // materialisation buffer and await replay).
+            self.classify_lost(buffer.channel, buffer.items);
+            return;
+        }
         self.stats.items_delivered += buffer.items.len() as u64;
         self.enqueue_buffer(now, v, buffer);
     }
@@ -425,6 +522,9 @@ impl SimCluster {
     }
 
     fn try_schedule(&mut self, now: Time, v: VertexId) {
+        if self.dead_tasks[v.index()] {
+            return;
+        }
         let chain = self.tasks[v.index()].chain;
         match chain {
             Some(g) => {
@@ -464,6 +564,11 @@ impl SimCluster {
     }
 
     fn on_task_done(&mut self, now: Time, v: VertexId) {
+        // Stale wake-ups for crashed threads (chain members are always
+        // co-located, so the head's flag covers its whole chain).
+        if self.dead_tasks[v.index()] {
+            return;
+        }
         match self.tasks[v.index()].chain {
             Some(g) => self.chain_task_done(now, g as usize),
             None => self.plain_task_done(now, v),
@@ -552,7 +657,13 @@ impl SimCluster {
 
     /// Run one item through `v`'s user code (and inline through chained
     /// successors).  Returns thread time consumed.
-    fn process_item(&mut self, enter: Time, v: VertexId, item: ItemRec, measurable: bool) -> Duration {
+    fn process_item(
+        &mut self,
+        enter: Time,
+        v: VertexId,
+        item: ItemRec,
+        measurable: bool,
+    ) -> Duration {
         let spec = self.tasks[v.index()].spec;
         // §3.2.1 task-latency sampling: arm on entry (sources excluded —
         // task latency is undefined there).
@@ -581,7 +692,8 @@ impl SimCluster {
                 if let Some(members) = done {
                     let total: u64 = members.iter().map(|m| m.bytes as u64).sum();
                     let born = members.iter().map(|m| m.born).min().unwrap();
-                    let out = ItemRec::new(spec.key_map.apply(item.key), spec.out_bytes.apply(total), born);
+                    let out_key = spec.key_map.apply(item.key);
+                    let out = ItemRec::new(out_key, spec.out_bytes.apply(total), born);
                     spent += self.emit(exit, v, out);
                 }
             }
@@ -618,11 +730,16 @@ impl SimCluster {
         // item entering the user code and the next data item leaving it".
         if let Some(started) = self.tasks[v.index()].pending_sample.take() {
             let worker = self.rg.worker(v);
-            self.record(worker, Measurement::task_latency(v, exit.since(started).as_micros() as f64));
+            let sampled = exit.since(started).as_micros() as f64;
+            self.record(worker, Measurement::task_latency(v, sampled));
         }
 
         let out_channels = self.rg.out_channels(v);
         if out_channels.is_empty() {
+            // A non-sink emission with no wired consumer left (every
+            // downstream instance detached by failure handling): the item
+            // has nowhere to go and is accounted as lost.
+            self.stats.accounted_lost += 1;
             return Duration::ZERO;
         }
         let spec = self.tasks[v.index()].spec;
@@ -751,6 +868,13 @@ impl SimCluster {
     }
 
     fn on_reporter_flush(&mut self, now: Time, worker: WorkerId) {
+        if self.dead_workers[worker.index()] {
+            // The reporter process died with its worker: this event chain
+            // ends, and the resulting silence is exactly what the master's
+            // failure detector keys on.
+            self.flush_chains.remove(&worker.0);
+            return;
+        }
         let (reports, next) = match self.reporters.get_mut(&worker) {
             Some(r) => (r.flush_due(now), r.next_deadline()),
             None => {
@@ -770,6 +894,10 @@ impl SimCluster {
     }
 
     fn on_manager_tick(&mut self, now: Time, worker: WorkerId) {
+        if self.dead_workers[worker.index()] {
+            self.tick_chains.remove(&worker.0);
+            return;
+        }
         let actions = match self.managers.get_mut(&worker) {
             Some(m) => m.act(now),
             None => {
@@ -780,17 +908,21 @@ impl SimCluster {
         let delay = self.cfg.cluster.control_delay;
         for action in actions {
             match &action {
-                Action::Unresolvable { .. } => {
+                Action::Unresolvable { manager, constraint, .. } => {
                     self.stats.unresolvable_notices += 1;
+                    self.log(now, format!("unresolvable c{constraint} from {manager}"));
                 }
                 _ => self.queue.push(now + delay, Ev::ApplyAction { action }),
             }
         }
-        self.queue
-            .push(now + self.cfg.measurement_interval, Ev::ManagerTick { worker: worker.0 });
+        let next_tick = now + self.cfg.measurement_interval;
+        self.queue.push(next_tick, Ev::ManagerTick { worker: worker.0 });
     }
 
     fn on_cpu_sample(&mut self, now: Time, worker: WorkerId) {
+        if self.dead_workers[worker.index()] {
+            return;
+        }
         let interval = self.cfg.measurement_interval;
         let verts: Vec<VertexId> = self
             .rg
@@ -819,6 +951,7 @@ impl SimCluster {
                     Verdict::Apply(size) => {
                         self.out_bufs[channel.index()].size = size;
                         self.stats.buffer_size_updates += 1;
+                        self.log(now, format!("buffer {channel} -> {size}"));
                         if let Some(r) = self.reporters.get_mut(&worker) {
                             r.note_buffer_update(channel, size);
                         }
@@ -842,7 +975,13 @@ impl SimCluster {
     }
 
     fn apply_chain(&mut self, now: Time, tasks: Vec<VertexId>, drain: DrainPolicy) {
-        if tasks.len() < 2 || tasks.iter().any(|v| self.tasks[v.index()].chain.is_some()) {
+        // Reject stale decisions: already-chained members, or members
+        // whose thread died in a crash that raced this action.
+        if tasks.len() < 2
+            || tasks
+                .iter()
+                .any(|v| self.tasks[v.index()].chain.is_some() || self.dead_tasks[v.index()])
+        {
             return;
         }
         let gid = self.chain_members.len() as u32;
@@ -881,7 +1020,267 @@ impl SimCluster {
         self.chain_busy.push(busy);
         self.chain_sched.push(false);
         self.stats.chains_established += 1;
+        let chained: Vec<String> = tasks.iter().map(|v| v.to_string()).collect();
+        self.log(now, format!("chain {}", chained.join("+")));
         self.try_schedule(now, tasks[0]);
+    }
+
+    // ------------------------------------------------------------------
+    // Failure injection, detection and recovery
+    // ------------------------------------------------------------------
+
+    fn log(&mut self, now: Time, msg: String) {
+        self.stats.action_log.push(format!("[{:>12.6}] {msg}", now.as_secs_f64()));
+    }
+
+    /// Account items destroyed by a crash.  Items emitted by a
+    /// `pin_unchainable` task survive in its durable materialisation
+    /// buffer (§3.6: pinning preserves materialisation points for fault
+    /// tolerance) and are stashed for replay, keyed by the channel they
+    /// were travelling; external ingress, items from unpinned producers,
+    /// and items a recovery could never replay anyway (recovery disabled,
+    /// or the channel already detached) are lost and accounted
+    /// explicitly.
+    fn classify_lost(&mut self, channel: u32, items: Vec<ItemRec>) {
+        if items.is_empty() {
+            return;
+        }
+        if channel != u32::MAX && self.cfg.recovery.enable_recovery {
+            let c = self.rg.channel(ChannelId(channel));
+            if !c.detached {
+                let jv = self.rg.vertex(c.from).job_vertex;
+                if self.job.vertex(jv).pin_unchainable {
+                    self.replay_stash.entry(channel).or_default().extend(items);
+                    return;
+                }
+            }
+        }
+        self.stats.accounted_lost += items.len() as u64;
+    }
+
+    /// Fail-stop crash of a worker: every task thread on it dies (input
+    /// queues, partial merge/window state and pending samples are gone),
+    /// the pending output buffers of its channels are dropped, chains
+    /// sharing a thread on it dissolve, and its NIC state resets.  The
+    /// lost items are classified per producer ([`Self::classify_lost`]).
+    fn on_worker_crash(&mut self, now: Time, w: WorkerId) {
+        if self.dead_workers[w.index()] {
+            return;
+        }
+        self.dead_workers[w.index()] = true;
+        self.stats.workers_crashed += 1;
+        self.log(now, format!("crash {w}"));
+        let victims: Vec<VertexId> = self.rg.vertices_on_worker(w).map(|v| v.id).collect();
+        // Chains die with their shared thread.  Members are always
+        // co-located, so every member of an affected group is a victim;
+        // dissolve the group and reset its direct hand-over channels so
+        // recovered instances restart as individual task threads.
+        let dead_groups: BTreeSet<u32> = victims
+            .iter()
+            .filter_map(|&v| self.tasks[v.index()].chain)
+            .collect();
+        for g in dead_groups {
+            let members = self.chain_members[g as usize].clone();
+            for pair in members.windows(2) {
+                if let Some(cid) = self.rg.channel_between(pair[0], pair[1]) {
+                    self.out_bufs[cid.index()].chained = false;
+                }
+            }
+            for &m in &members {
+                self.tasks[m.index()].chain = None;
+            }
+            self.chain_sched[g as usize] = false;
+        }
+        for &v in &victims {
+            self.dead_tasks[v.index()] = true;
+            let (queued, partial) = {
+                let t = &mut self.tasks[v.index()];
+                let queued: Vec<QueuedBuffer> = t.queue.drain(..).collect();
+                t.queued_bytes = 0;
+                t.scheduled = false;
+                t.pending_sample = None;
+                t.busy_accum = Duration::ZERO;
+                let partial: u64 = t
+                    .groups
+                    .values()
+                    .map(|g| g.values().map(|q| q.len() as u64).sum::<u64>())
+                    .sum();
+                let windowed: u64 = t.windows.values().map(|&(_, n, _)| n).sum();
+                t.groups.clear();
+                t.windows.clear();
+                (queued, partial + windowed)
+            };
+            // Partial merge-group and window state dies with the process.
+            self.stats.accounted_lost += partial;
+            for qb in queued {
+                self.classify_lost(qb.buffer.channel, qb.buffer.items);
+            }
+            // Pending sender-side output buffers of the dead task.
+            let outs: Vec<ChannelId> = self.rg.out_channels(v).to_vec();
+            for cid in outs {
+                let (items, _, _) = self.out_bufs[cid.index()].take();
+                self.classify_lost(cid.0, items);
+            }
+        }
+        self.nics[w.index()] = Nic::new(&self.cfg.cluster);
+    }
+
+    /// Master-side liveness sweep over the QoS report traffic: workers
+    /// silent past the detection timeout are declared failed and handed
+    /// to the recovery policy.
+    fn on_master_tick(&mut self, now: Time) {
+        let silent = self.detector.silent(now);
+        for w in silent {
+            self.detector.confirm(w);
+            self.handle_worker_failure(now, w);
+        }
+        self.queue.push(now + self.cfg.measurement_interval, Ev::MasterTick);
+    }
+
+    /// React to a detected worker failure.  The worker is fenced first
+    /// (even a falsely-suspected one is cut off before its instances are
+    /// redeployed), then either recovered or merely unregistered.
+    fn handle_worker_failure(&mut self, now: Time, w: WorkerId) {
+        self.stats.failovers += 1;
+        self.on_worker_crash(now, w);
+        if self.cfg.recovery.enable_recovery {
+            self.recover_worker(now, w);
+        } else {
+            self.unregister_worker(now, w);
+        }
+    }
+
+    /// Recovery: redeploy every dead instance of `w` onto the
+    /// least-loaded surviving worker, replay the items stashed at
+    /// `pin_unchainable` materialisation points onto their channels, and
+    /// re-run Algorithms 1–3 so reporters and managers track the new
+    /// placement.  From here the regular buffer → chaining → scaling
+    /// escalation works the residual violation off.
+    fn recover_worker(&mut self, now: Time, w: WorkerId) {
+        let victims = self.active_instances_on(w);
+        let live_workers: Vec<WorkerId> = (0..self.rg.num_workers)
+            .map(WorkerId)
+            .filter(|w| !self.dead_workers[w.index()])
+            .collect();
+        if live_workers.is_empty() {
+            // Nothing left to redeploy onto: degrade to unregistering.
+            self.log(now, format!("failover {w}: no surviving workers"));
+            self.unregister_worker(now, w);
+            return;
+        }
+        let mut load = vec![0u64; self.rg.num_workers as usize];
+        for rv in &self.rg.vertices {
+            if !self.dead_workers[rv.worker.index()]
+                && !self.dead_tasks[rv.id.index()]
+                && self.rg.members(rv.job_vertex).contains(&rv.id)
+            {
+                load[rv.worker.index()] += 1;
+            }
+        }
+        let mut reassigned = 0u64;
+        for &v in &victims {
+            let target = *live_workers
+                .iter()
+                .min_by_key(|t| (load[t.index()], t.0))
+                .expect("live_workers is non-empty");
+            if self.rg.reassign_instance(v, target).is_ok() {
+                load[target.index()] += 1;
+                let jv = self.rg.vertex(v).job_vertex;
+                self.tasks[v.index()] = TaskState::new(self.job_specs[jv.index()]);
+                self.dead_tasks[v.index()] = false;
+                reassigned += 1;
+            }
+        }
+        self.stats.instances_reassigned += reassigned;
+        // Replay from the materialisation points: each stashed buffer
+        // re-enters its channel (read back from the durable log, so only
+        // control-plane and local delivery latency apply).
+        let stash = std::mem::take(&mut self.replay_stash);
+        let delay = self.cfg.cluster.control_delay + self.cfg.cluster.local_latency;
+        let mut replayed = 0u64;
+        for (ch, items) in stash {
+            let c = self.rg.channel(ChannelId(ch));
+            if c.detached {
+                self.stats.accounted_lost += items.len() as u64;
+                continue;
+            }
+            if self.dead_tasks[c.to.index()] {
+                // The receiver sits on another still-dead worker: keep
+                // the entry for that worker's own failover (its recovery
+                // replays it; its unregistration accounts it).
+                self.replay_stash.insert(ch, items);
+                continue;
+            }
+            let bytes: u64 = items.iter().map(|i| i.bytes as u64).sum();
+            replayed += items.len() as u64;
+            self.queue.push(
+                now + delay,
+                Ev::Deliver {
+                    buffer: Buffer { channel: ch, items, bytes, flushed: now },
+                },
+            );
+        }
+        self.stats.items_replayed += replayed;
+        self.log(
+            now,
+            format!("failover {w}: reassigned {reassigned}, replayed {replayed}"),
+        );
+        self.after_topology_change("failover");
+    }
+
+    /// Recovery disabled: the master only unregisters the dead worker.
+    /// Its instances are detached from the routing tables (key-hash
+    /// routing re-partitions onto the survivors), the materialised
+    /// copies are never replayed, and stranded sender-side buffers on
+    /// the detached channels are accounted as lost.
+    fn unregister_worker(&mut self, now: Time, w: WorkerId) {
+        let victims = self.active_instances_on(w);
+        let mut detached = 0u64;
+        for &v in &victims {
+            let in_ch = self.rg.retire_instance(v);
+            for cid in in_ch {
+                let (items, _, _) = self.out_bufs[cid.index()].take();
+                self.stats.accounted_lost += items.len() as u64;
+            }
+            detached += 1;
+        }
+        self.stats.instances_detached += detached;
+        // Defensive: with recovery disabled nothing ever stashes, but an
+        // unregister must leave no phantom in-flight items behind.
+        let stash = std::mem::take(&mut self.replay_stash);
+        let stranded: u64 = stash.values().map(|v| v.len() as u64).sum();
+        self.stats.accounted_lost += stranded;
+        self.log(now, format!("failover {w}: detached {detached}"));
+        self.after_topology_change("failover");
+    }
+
+    /// Instances of `w` still in their group's routing tables —
+    /// scale-down-retired instances keep their worker assignment but are
+    /// no longer members and must not be resurrected or re-detached by a
+    /// failover.
+    fn active_instances_on(&self, w: WorkerId) -> Vec<VertexId> {
+        self.rg
+            .vertices_on_worker(w)
+            .filter(|rv| self.rg.members(rv.job_vertex).contains(&rv.id))
+            .map(|rv| rv.id)
+            .collect()
+    }
+
+    /// Post-rescale/failover bookkeeping shared by every topology-change
+    /// path: rebuild the QoS setup (Algorithms 1–3); on the
+    /// never-expected failure keep the dense per-element state sized to
+    /// the topology so indexing stays in bounds.
+    fn after_topology_change(&mut self, context: &str) {
+        if let Err(e) = self.rebuild_qos() {
+            eprintln!("warning: QoS rebuild after {context} failed: {e}");
+            let nc = self.rg.channels.len();
+            let nv = self.rg.vertices.len();
+            self.chan_latency_monitored.resize(nc, false);
+            self.chan_oblt_monitored.resize(nc, false);
+            self.vertex_monitored.resize(nv, false);
+            self.next_tag_at.resize(nc, Time::ZERO);
+            self.next_task_sample_at.resize(nv, Time::ZERO);
+        }
     }
 
     // ------------------------------------------------------------------
@@ -928,19 +1327,11 @@ impl SimCluster {
         }
         if changed {
             self.last_scale.insert(group, now);
-            if let Err(e) = self.rebuild_qos() {
-                // Master-side recomputation on a valid topology should
-                // never fail; make any surprise loud but non-fatal, and
-                // keep the dense per-element state sized to the topology.
-                eprintln!("warning: QoS rebuild after scaling {group} failed: {e}");
-                let nc = self.rg.channels.len();
-                let nv = self.rg.vertices.len();
-                self.chan_latency_monitored.resize(nc, false);
-                self.chan_oblt_monitored.resize(nc, false);
-                self.vertex_monitored.resize(nv, false);
-                self.next_tag_at.resize(nc, Time::ZERO);
-                self.next_task_sample_at.resize(nv, Time::ZERO);
-            }
+            self.log(
+                now,
+                format!("scale {} {delta:+} -> {}", group, self.rg.members(group).len()),
+            );
+            self.after_topology_change(&format!("scaling {group}"));
         }
         changed
     }
@@ -970,6 +1361,15 @@ impl SimCluster {
             self.stats.scaling_rejected += 1;
             return false;
         }
+        // §3.6: a pinned group is a materialisation point for fault
+        // tolerance; re-partitioning it would re-key the materialised
+        // buffers the recovery path replays from.  The manager-side
+        // target selection skips pinned groups too — this is the master's
+        // backstop against stale or buggy managers.
+        if self.job.vertex(group).pin_unchainable {
+            self.stats.scaling_rejected += 1;
+            return false;
+        }
         // Only stateless semantics can be re-partitioned safely: a merge
         // or window task keys its state by routing key, and re-hashing
         // keys across a changed consumer count would split that state.
@@ -980,12 +1380,23 @@ impl SimCluster {
                 return false;
             }
         }
-        // Spread new instances like the initial placement: subtask index
-        // modulo worker count.
-        let worker = WorkerId(self.rg.members(group).len() as u32 % self.rg.num_workers);
+        // Spread new instances like the initial placement (subtask index
+        // modulo worker count), skipping crashed workers.
+        let idx = self.rg.members(group).len() as u32;
+        let worker = match (0..self.rg.num_workers)
+            .map(|k| WorkerId((idx + k) % self.rg.num_workers))
+            .find(|w| !self.dead_workers[w.index()])
+        {
+            Some(w) => w,
+            None => {
+                self.stats.scaling_rejected += 1;
+                return false;
+            }
+        };
         match self.rg.add_instance(&self.job, group, worker) {
             Ok((v, new_channels)) => {
                 self.tasks.push(TaskState::new(self.job_specs[group.index()]));
+                self.dead_tasks.push(false);
                 debug_assert_eq!(self.tasks.len(), self.rg.vertices.len());
                 debug_assert_eq!(v.index(), self.tasks.len() - 1);
                 for &cid in &new_channels {
@@ -1101,6 +1512,11 @@ impl SimCluster {
             self.tick_chains.insert(w);
             self.queue.push(self.queue.now() + interval, Ev::ManagerTick { worker: w });
         }
+        // Reporter placement may have changed: re-sync the master's
+        // liveness tracking (workers gaining a role start a fresh grace
+        // period, workers losing it stop being monitored).
+        let reporter_workers: Vec<WorkerId> = self.reporters.keys().copied().collect();
+        self.detector.track(reporter_workers, self.queue.now());
         self.stats.qos_rebuilds += 1;
         Ok(())
     }
@@ -1132,9 +1548,10 @@ impl SimCluster {
     }
 
     /// Items currently inside the pipeline: input queues, sender-side
-    /// output buffers, and unmerged partial group state.  Together with
-    /// the sink count this accounts for every ingested item once all
-    /// in-flight network events have drained.
+    /// output buffers, unmerged partial group state, and items stashed at
+    /// materialisation points awaiting replay.  Together with the sink
+    /// count and [`SimStats::accounted_lost`] this accounts for every
+    /// ingested item once all in-flight network events have drained.
     pub fn items_in_flight(&self) -> u64 {
         let queued: u64 = self
             .tasks
@@ -1150,7 +1567,13 @@ impl SimCluster {
             })
             .sum();
         let pending: u64 = self.out_bufs.iter().map(|b| b.pending.len() as u64).sum();
-        queued + pending
+        let stashed: u64 = self.replay_stash.values().map(|v| v.len() as u64).sum();
+        queued + pending + stashed
+    }
+
+    /// Whether a worker has crashed (or been fenced by the master).
+    pub fn worker_dead(&self, w: WorkerId) -> bool {
+        self.dead_workers[w.index()]
     }
 
     /// Consistency of the runtime rewiring, checked by tests after
@@ -1208,6 +1631,7 @@ impl SimCluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pipeline::failover::{failover_job, FailoverSpec};
     use crate::pipeline::surge::{surge_job, SurgeSpec};
     use crate::pipeline::video::{video_job, VideoSpec};
 
@@ -1305,7 +1729,8 @@ mod tests {
         // Decoder: pointwise out edge -> not re-partitionable.
         assert!(!cluster.apply_scaling(t, decoder, 1, t));
         // Merger: stateful group join -> never scaled.
-        assert!(!cluster.apply_scaling(t + Duration::from_secs(1), merger, 1, t + Duration::from_secs(1)));
+        let t1 = t + Duration::from_secs(1);
+        assert!(!cluster.apply_scaling(t1, merger, 1, t1));
         assert_eq!(cluster.stats.scale_ups, 0);
         assert_eq!(cluster.stats.scaling_rejected, 2);
         assert_eq!(cluster.parallelism_of(decoder), 8);
@@ -1337,6 +1762,119 @@ mod tests {
         assert!(!cluster.apply_scaling(t, transcoder, -1, t));
         assert_eq!(cluster.parallelism_of(transcoder), 2);
         assert_eq!(cluster.stats.scaling_rejected, 1);
+    }
+
+    /// Failover cluster with the standard spec and the given recovery
+    /// policy; countermeasures disabled so the tests observe the raw
+    /// failure mechanics.
+    fn failover_cluster(
+        enable_recovery: bool,
+    ) -> (SimCluster, crate::pipeline::failover::FailoverVertices, FailureSpec) {
+        let spec = FailoverSpec::default();
+        let fj = failover_job(spec).unwrap();
+        let vertices = fj.vertices;
+        let mut cfg = EngineConfig::default().unoptimized();
+        cfg.recovery.enable_recovery = enable_recovery;
+        let mut cluster = SimCluster::new(
+            fj.job,
+            fj.rg,
+            &fj.constraints,
+            fj.task_specs,
+            fj.sources,
+            cfg,
+        )
+        .unwrap();
+        cluster.schedule_failures(&[spec.failure()]);
+        (cluster, vertices, spec.failure())
+    }
+
+    #[test]
+    fn crash_is_detected_and_instance_reassigned_to_survivor() {
+        let (mut cluster, vx, failure) = failover_cluster(true);
+        // Run past crash (90 s) and detection (~135 s: timeout 37.5 s on
+        // 15 s master ticks).
+        cluster.run(Duration::from_secs(180), None);
+        assert!(cluster.worker_dead(failure.worker));
+        assert_eq!(cluster.stats.workers_crashed, 1);
+        assert_eq!(cluster.stats.failovers, 1);
+        assert_eq!(cluster.stats.instances_reassigned, 1);
+        assert!(cluster.stats.items_replayed > 0, "{:?}", cluster.stats);
+        assert!(cluster.stats.qos_rebuilds >= 1);
+        // Parallelism is restored and no instance lives on the dead worker.
+        assert_eq!(cluster.parallelism_of(vx.transcoder), 2);
+        for v in cluster.rg.vertices.iter() {
+            assert_ne!(v.worker, failure.worker, "instance left on dead worker");
+        }
+        cluster.routing_consistent().unwrap();
+        // The redeployed instance processes the replayed backlog.
+        let moved = *cluster.rg.members(vx.transcoder).last().unwrap();
+        let before = cluster.stats.e2e_count;
+        cluster.run(Duration::from_secs(300), None);
+        assert!(cluster.tasks[moved.index()].busy_until > Time::ZERO);
+        assert!(cluster.stats.e2e_count > before, "pipeline stalled after recovery");
+    }
+
+    #[test]
+    fn without_recovery_the_dead_instance_is_detached_and_losses_accounted() {
+        let (mut cluster, vx, failure) = failover_cluster(false);
+        cluster.run(Duration::from_secs(180), None);
+        assert_eq!(cluster.stats.failovers, 1);
+        assert_eq!(cluster.stats.instances_reassigned, 0);
+        assert_eq!(cluster.stats.instances_detached, 1);
+        assert_eq!(cluster.stats.items_replayed, 0);
+        assert!(cluster.stats.accounted_lost > 0, "{:?}", cluster.stats);
+        // The group runs degraded; survivors absorb the whole key space.
+        assert_eq!(cluster.parallelism_of(vx.transcoder), 1);
+        let survivor = cluster.rg.members(vx.transcoder)[0];
+        assert_ne!(cluster.rg.worker(survivor), failure.worker);
+        cluster.routing_consistent().unwrap();
+    }
+
+    #[test]
+    fn conservation_holds_across_crash_and_recovery() {
+        for enable_recovery in [true, false] {
+            let (mut cluster, _, _) = failover_cluster(enable_recovery);
+            cluster.run(Duration::from_secs(200), None);
+            let t = cluster.now();
+            cluster.stop_sources_at(t);
+            cluster.run(Duration::from_secs(1800), None);
+            let s = &cluster.stats;
+            assert!(s.items_ingested > 0);
+            assert_eq!(
+                s.e2e_count + cluster.items_in_flight() + s.accounted_lost,
+                s.items_ingested,
+                "conservation broken (recovery={enable_recovery}): {s:?}"
+            );
+            // The two policies differ in where the outage items went.
+            if enable_recovery {
+                assert!(s.items_replayed > 0);
+            } else {
+                assert!(s.accounted_lost > s.items_replayed);
+            }
+        }
+    }
+
+    #[test]
+    fn scaling_rejected_for_pinned_groups() {
+        // The failover job pins Ingest (§3.6 materialisation point): the
+        // master must refuse to rescale it even on a direct request.
+        let fj = failover_job(FailoverSpec::default()).unwrap();
+        let ingest = fj.vertices.ingest;
+        let mut cluster = SimCluster::new(
+            fj.job,
+            fj.rg,
+            &fj.constraints,
+            fj.task_specs,
+            fj.sources,
+            EngineConfig::default().unoptimized(),
+        )
+        .unwrap();
+        cluster.run(Duration::from_secs(10), None);
+        let t = cluster.now();
+        assert!(!cluster.apply_scaling(t, ingest, 1, t));
+        assert_eq!(cluster.stats.scale_ups, 0);
+        assert_eq!(cluster.stats.scaling_rejected, 1);
+        assert_eq!(cluster.parallelism_of(ingest), 2);
     }
 }
 

@@ -78,7 +78,13 @@ pub struct OutBufferState {
 
 impl OutBufferState {
     pub fn new(size: u32) -> OutBufferState {
-        OutBufferState { size, pending: Vec::new(), pending_bytes: 0, fill_start: None, chained: false }
+        OutBufferState {
+            size,
+            pending: Vec::new(),
+            pending_bytes: 0,
+            fill_start: None,
+            chained: false,
+        }
     }
 
     /// Append an item; returns `true` if the buffer reached its capacity

@@ -9,7 +9,7 @@
 //! provide information about the distribution of measured sequence
 //! latencies (min and max)." (§4.3.1)
 
-use super::cluster::SimCluster;
+use super::cluster::{SimCluster, SimObserver};
 use crate::graph::ids::{JobEdgeId, JobVertexId};
 use crate::graph::sequence::{JobSeqElem, JobSequence};
 use crate::qos::sample::{ElementKey, MetricKind};
@@ -81,6 +81,19 @@ impl Breakdown {
             self.chains_violated,
         ));
         out
+    }
+}
+
+/// Observer that prints the rendered breakdown of a constrained
+/// sequence at every sample interval — the shared progress display of
+/// the scenario drivers.
+pub struct BreakdownPrinter<'a> {
+    pub seq: &'a JobSequence,
+}
+
+impl SimObserver for BreakdownPrinter<'_> {
+    fn sample(&mut self, cluster: &mut SimCluster, now: Time) {
+        print!("{}", breakdown(cluster, self.seq, now).render());
     }
 }
 

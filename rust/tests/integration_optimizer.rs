@@ -8,7 +8,10 @@ use nephele::sim::cluster::SimCluster;
 use nephele::sim::metrics::breakdown;
 use nephele::util::time::Duration;
 
-fn small_cluster(cfg: EngineConfig, spec: VideoSpec) -> (SimCluster, nephele::graph::sequence::JobSequence) {
+fn small_cluster(
+    cfg: EngineConfig,
+    spec: VideoSpec,
+) -> (SimCluster, nephele::graph::sequence::JobSequence) {
     let vj = video_job(spec).unwrap();
     let seq = vj.constrained_sequence.clone();
     let c = SimCluster::new(vj.job, vj.rg, &vj.constraints, vj.task_specs, vj.sources, cfg)
