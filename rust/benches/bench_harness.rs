@@ -1,7 +1,12 @@
 //! Minimal benchmark harness (criterion is unavailable in the offline
-//! build): measures wall time over warm-up + timed iterations and prints
-//! criterion-style `name ... time per iter` lines.
+//! build): measures wall time over warm-up + timed iterations, prints
+//! criterion-style `name ... time per iter` lines, and records results
+//! into a hand-rolled JSON report so the perf trajectory is persisted
+//! (`BENCH_hot_paths.json`) instead of scrolling away.
 
+#![allow(dead_code)]
+
+use std::io::Write;
 use std::time::Instant;
 
 /// Measure `f` and print mean time per iteration.  Returns mean seconds.
@@ -37,4 +42,80 @@ pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
     let secs = t0.elapsed().as_secs_f64();
     println!("{name:<56} {secs:>10.3} s (single run)");
     (out, secs)
+}
+
+/// One recorded measurement.
+pub struct BenchEntry {
+    pub name: String,
+    pub iters: u32,
+    /// Wall seconds per iteration (total wall time for single runs).
+    pub secs: f64,
+    /// Throughput in events per second, when the benchmark counts events.
+    pub events_per_sec: Option<f64>,
+}
+
+/// Collects results and writes them as JSON.
+#[derive(Default)]
+pub struct Recorder {
+    pub entries: Vec<BenchEntry>,
+    /// Named headline scalars (e.g. the event-core speedup factor).
+    pub scalars: Vec<(String, f64)>,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        // Exponential keeps sub-microsecond per-iteration times (the
+        // buffer-sizing bench is ~1e-8 s) distinguishable in the
+        // trajectory; "1.234567e-8" is a valid JSON number.
+        format!("{v:.6e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn add(&mut self, name: &str, iters: u32, secs: f64, events_per_sec: Option<f64>) {
+        self.entries.push(BenchEntry { name: name.to_string(), iters, secs, events_per_sec });
+    }
+
+    pub fn scalar(&mut self, name: &str, value: f64) {
+        self.scalars.push((name.to_string(), value));
+    }
+
+    /// Serialise everything to `path` (no serde in the offline build —
+    /// the format is flat enough to emit by hand).
+    pub fn write_json(&self, path: &str, bench_name: &str, quick: bool) -> std::io::Result<()> {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(bench_name)));
+        out.push_str(&format!("  \"quick\": {quick},\n"));
+        for (name, value) in &self.scalars {
+            out.push_str(&format!("  \"{}\": {},\n", json_escape(name), json_f64(*value)));
+        }
+        out.push_str("  \"results\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            let eps = e
+                .events_per_sec
+                .map_or("null".to_string(), json_f64);
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"secs\": {}, \"events_per_sec\": {}}}{}\n",
+                json_escape(&e.name),
+                e.iters,
+                json_f64(e.secs),
+                eps,
+                if i + 1 == self.entries.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(out.as_bytes())
+    }
 }

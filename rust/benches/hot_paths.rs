@@ -1,12 +1,15 @@
 //! Hot-path microbenchmarks (the §Perf targets in EXPERIMENTS.md):
-//! event-queue throughput, the channel send/flush path, QoS setup at
-//! paper scale, manager ingest/evaluate, and the buffer-sizing decision.
+//! event-core throughput (arena + time wheel vs the legacy binary
+//! heap), the channel send/flush path, QoS setup at paper scale,
+//! manager ingest/evaluate, and the buffer-sizing decision.
 //!
-//! Run with `cargo bench --bench hot_paths`.
+//! Run with `cargo bench --bench hot_paths`.  Results are persisted to
+//! `BENCH_hot_paths.json` (override with `NEPHELE_BENCH_OUT`); set
+//! `NEPHELE_BENCH_QUICK=1` for the reduced CI smoke configuration.
 
 #[path = "bench_harness.rs"]
 mod harness;
-use harness::{bench, bench_once};
+use harness::{bench, bench_once, Recorder};
 
 use nephele::actions::buffer_sizing::{next_buffer_size, BufferSizingConfig};
 use nephele::config::EngineConfig;
@@ -17,13 +20,93 @@ use nephele::qos::manager::{ManagerConfig, QosManager};
 use nephele::qos::sample::{ElementKey, MetricKind, Report, ReportEntry};
 use nephele::qos::setup::compute_qos_setup;
 use nephele::sim::cluster::SimCluster;
+use nephele::sim::engine::EventCore;
 use nephele::sim::events::EventQueue;
+use nephele::util::rng::Rng;
 use nephele::util::time::{Duration, Time};
 
-fn bench_event_queue() {
-    // Push/pop throughput of the simulator's core data structure.
+/// A payload shaped like the simulator's `Ev` enum: the large variant
+/// matches `Ev::Deliver`'s stack footprint, so the legacy heap pays the
+/// same per-sift move cost it pays in the real event loop, while the
+/// arena+wheel core sifts 24-byte keys.
+#[derive(Clone)]
+enum SimShapedEv {
+    Deliver { payload: [u64; 11] },
+    Tick { worker: u32 },
+}
+
+fn mk_ev(i: u64) -> SimShapedEv {
+    if i % 4 == 0 {
+        SimShapedEv::Tick { worker: (i % 200) as u32 }
+    } else {
+        SimShapedEv::Deliver { payload: [i; 11] }
+    }
+}
+
+fn fold_ev(acc: u64, ev: &SimShapedEv) -> u64 {
+    match ev {
+        SimShapedEv::Deliver { payload } => acc ^ payload[0],
+        SimShapedEv::Tick { worker } => acc ^ *worker as u64,
+    }
+}
+
+/// The simulator's event mix in miniature: a standing population of
+/// 10k pending events; each pop reschedules its event — mostly at
+/// delivery/task-done horizons (0.1–50 ms), every 16th at the 15 s
+/// measurement interval (the QoS report / liveness tick cadence).
+macro_rules! drive_queue {
+    ($queue:expr, $n_pops:expr) => {{
+        let mut q = $queue;
+        let mut rng = Rng::new(7);
+        for i in 0..10_000u64 {
+            q.push(Time(rng.below(1_000_000)), mk_ev(i));
+        }
+        let mut acc = 0u64;
+        for i in 0..$n_pops {
+            let (t, ev) = q.pop().expect("standing population never drains");
+            acc = acc.wrapping_add(t.0) ^ fold_ev(acc, &ev);
+            let dt = if i % 16 == 0 { 15_000_000 } else { 100 + rng.below(50_000) };
+            q.push(Time(t.0 + dt), ev);
+        }
+        acc
+    }};
+}
+
+/// The tentpole microbench: legacy heap vs arena+wheel on the identical
+/// deterministic workload.  Records the speedup factor (target: >=3x).
+fn bench_event_core(rec: &mut Recorder, quick: bool) {
+    let n_pops: u64 = if quick { 200_000 } else { 2_000_000 };
+
+    let name_old = format!("event core: legacy heap (EventQueue), {n_pops} sim-shaped pops");
+    let (acc_old, secs_old) = bench_once(&name_old, || {
+        drive_queue!(EventQueue::<SimShapedEv>::new(), n_pops)
+    });
+    rec.add(&name_old, 1, secs_old, Some(n_pops as f64 / secs_old));
+
+    let name_new = format!("event core: arena + time wheel (EventCore), {n_pops} sim-shaped pops");
+    let (acc_new, secs_new) = bench_once(&name_new, || {
+        drive_queue!(EventCore::<SimShapedEv>::new(), n_pops)
+    });
+    rec.add(&name_new, 1, secs_new, Some(n_pops as f64 / secs_new));
+
+    assert_eq!(
+        acc_old, acc_new,
+        "both queues must pop the identical event sequence"
+    );
+    let speedup = secs_old / secs_new;
+    println!(
+        "    -> {:.2} M pops/s vs {:.2} M pops/s = {speedup:.2}x speedup",
+        n_pops as f64 / secs_old / 1e6,
+        n_pops as f64 / secs_new / 1e6,
+    );
+    rec.scalar("event_core_speedup", speedup);
+}
+
+fn bench_event_queue(rec: &mut Recorder) {
+    // Push/pop throughput of the legacy structure on trivial payloads
+    // (kept for trend comparison with older recordings).
     let n = 100_000u64;
-    bench("event_queue: push+pop 100k interleaved", 20, || {
+    let secs = bench("event_queue: push+pop 100k interleaved", 20, || {
         let mut q: EventQueue<u64> = EventQueue::new();
         for i in 0..n {
             q.push(Time(i * 7919 % 1_000_000), i);
@@ -34,9 +117,10 @@ fn bench_event_queue() {
         }
         acc
     });
+    rec.add("event_queue: push+pop 100k interleaved", 20, secs, Some(n as f64 / secs));
 }
 
-fn bench_channel_hot_path() {
+fn bench_channel_hot_path(rec: &mut Recorder, quick: bool) {
     // End-to-end simulator events/second on the 2-task microbenchmark:
     // this is the per-item channel path (emit -> buffer -> flush ->
     // deliver -> process).
@@ -44,7 +128,9 @@ fn bench_channel_hot_path() {
         sender_receiver_job(MicrobenchSpec { items_per_sec: 100_000.0, ..Default::default() })
             .unwrap();
     let cfg = EngineConfig::default().unoptimized();
-    let ((), secs) = bench_once("sim: microbench 30s virtual @100k items/s", || {
+    let virt_secs = if quick { 5 } else { 30 };
+    let name = format!("sim: microbench {virt_secs}s virtual @100k items/s");
+    let (events, secs) = bench_once(&name, || {
         let mut cluster = SimCluster::new(
             job.clone(),
             rg.clone(),
@@ -54,22 +140,24 @@ fn bench_channel_hot_path() {
             cfg,
         )
         .unwrap();
-        cluster.run(Duration::from_secs(30), None);
-        let ev = cluster.stats.events_processed;
-        println!(
-            "    -> {} events, {:.2} M events/s wall",
-            ev,
-            ev as f64 / 1e6
-        );
+        cluster.run(Duration::from_secs(virt_secs), None).unwrap();
+        cluster.stats.events_processed
     });
-    let _ = secs;
+    println!(
+        "    -> {} events, {:.2} M events/s wall",
+        events,
+        events as f64 / secs / 1e6
+    );
+    rec.add(&name, 1, secs, Some(events as f64 / secs));
 }
 
-fn bench_video_sim_rate() {
+fn bench_video_sim_rate(rec: &mut Recorder, quick: bool) {
     // Whole-cluster simulation rate on the small video job.
     let vj = video_job(VideoSpec::small()).unwrap();
     let cfg = EngineConfig::default().fully_optimized();
-    bench_once("sim: small video job, 300s virtual, full QoS", || {
+    let virt_secs = if quick { 60 } else { 300 };
+    let name = format!("sim: small video job, {virt_secs}s virtual, full QoS");
+    let (events, secs) = bench_once(&name, || {
         let mut cluster = SimCluster::new(
             vj.job.clone(),
             vj.rg.clone(),
@@ -79,26 +167,33 @@ fn bench_video_sim_rate() {
             cfg,
         )
         .unwrap();
-        cluster.run(Duration::from_secs(300), None);
-        println!(
-            "    -> {} events processed",
-            cluster.stats.events_processed
-        );
+        cluster.run(Duration::from_secs(virt_secs), None).unwrap();
+        cluster.stats.events_processed
     });
+    println!("    -> {} events processed", events);
+    rec.add(&name, 1, secs, Some(events as f64 / secs));
 }
 
-fn bench_qos_setup() {
-    // Algorithm 1-3 at the paper's full scale (512e6 runtime constraints).
-    let vj = video_job(VideoSpec::default()).unwrap();
-    bench("qos setup: ComputeQoSSetup m=800 n=200 (512e6 seqs)", 5, || {
+fn bench_qos_setup(rec: &mut Recorder, quick: bool) {
+    // Algorithm 1-3 at the paper's full scale (512e6 runtime constraints);
+    // the quick configuration uses the laptop-scale job.
+    let (spec, iters) = if quick { (VideoSpec::small(), 2) } else { (VideoSpec::default(), 5) };
+    let vj = video_job(spec).unwrap();
+    let name = format!(
+        "qos setup: ComputeQoSSetup m={} n={}",
+        spec.parallelism, spec.workers
+    );
+    let secs = bench(&name, iters, || {
         compute_qos_setup(&vj.job, &vj.rg, &vj.constraints).unwrap().managers.len()
     });
+    rec.add(&name, iters, secs, None);
 }
 
-fn bench_manager() {
+fn bench_manager(rec: &mut Recorder, quick: bool) {
     // Manager ingest + evaluate on a paper-scale subgraph (800-channel
-    // fan-in layers).
-    let vj = video_job(VideoSpec::default()).unwrap();
+    // fan-in layers); laptop-scale in the quick configuration.
+    let spec = if quick { VideoSpec::small() } else { VideoSpec::default() };
+    let vj = video_job(spec).unwrap();
     let setup = compute_qos_setup(&vj.job, &vj.rg, &vj.constraints).unwrap();
     let (&w, sub) = setup.managers.iter().next().unwrap();
     let mut mgr = QosManager::new(w, sub.clone(), 32 * 1024, ManagerConfig::default());
@@ -131,31 +226,51 @@ fn bench_manager() {
         entries,
         buffer_updates: Vec::new(),
     };
-    bench(
-        &format!("manager: ingest report with {n_entries} entries"),
-        50,
-        || mgr.ingest(&report),
-    );
-    bench("manager: evaluate 4 chains (1600-wide layers)", 50, || {
+    let name_ingest = format!("manager: ingest report with {n_entries} entries");
+    let secs = bench(&name_ingest, 50, || mgr.ingest(&report));
+    rec.add(&name_ingest, 50, secs, None);
+    let name_eval = format!("manager: evaluate chains (m={})", spec.parallelism);
+    let secs = bench(&name_eval, 50, || {
         mgr.evaluate_chains(Time::from_secs_f64(1.0)).len()
     });
+    rec.add(&name_eval, 50, secs, None);
 }
 
-fn bench_buffer_sizing() {
+fn bench_buffer_sizing(rec: &mut Recorder) {
     let cfg = BufferSizingConfig::default();
-    bench("buffer sizing: Eq.2/3 decision", 1_000_000, || {
+    let name = "buffer sizing: Eq.2/3 decision";
+    let secs = bench(name, 1_000_000, || {
         next_buffer_size(32 * 1024, 42.0, Some(3.0), &cfg)
     });
+    rec.add(name, 1_000_000, secs, None);
     // Referenced ids to keep imports honest.
     let _ = (ChannelId(0), VertexId(0));
 }
 
 fn main() {
-    println!("== hot-path benchmarks ==");
-    bench_event_queue();
-    bench_buffer_sizing();
-    bench_qos_setup();
-    bench_manager();
-    bench_channel_hot_path();
-    bench_video_sim_rate();
+    // Presence alone is not opt-in: NEPHELE_BENCH_QUICK=0 (or empty)
+    // must still run the full configuration.
+    let quick = std::env::var("NEPHELE_BENCH_QUICK")
+        .map_or(false, |v| !v.is_empty() && v != "0");
+    let out_path = std::env::var("NEPHELE_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_hot_paths.json".to_string());
+    println!(
+        "== hot-path benchmarks{} ==",
+        if quick { " (quick)" } else { "" }
+    );
+    let mut rec = Recorder::new();
+    bench_event_core(&mut rec, quick);
+    bench_event_queue(&mut rec);
+    bench_buffer_sizing(&mut rec);
+    bench_qos_setup(&mut rec, quick);
+    bench_manager(&mut rec, quick);
+    bench_channel_hot_path(&mut rec, quick);
+    bench_video_sim_rate(&mut rec, quick);
+    match rec.write_json(&out_path, "hot_paths", quick) {
+        Ok(()) => println!("results written to {out_path}"),
+        Err(e) => {
+            eprintln!("failed to write {out_path}: {e}");
+            std::process::exit(1);
+        }
+    }
 }

@@ -172,6 +172,77 @@ pub fn failover_args(
     Ok((spec, cfg, secs, recovery, verbose))
 }
 
+/// Parse the paper-scale comparison driver's arguments (`argv` holds
+/// only the flags, with the program/subcommand name already stripped):
+/// `--quick --secs N --tail N --seed N --min-ratio F --quiet`.
+/// Returns `(spec, cfg, secs, tail_secs, min_ratio, verbose)`.
+/// Defaults: 200 workers, 600 s with a 300 s measurement tail; `--quick`
+/// drops to 20 workers, 420 s with a 180 s tail (same code path).
+pub fn scale_args(
+    argv: &[String],
+) -> Result<(nephele::pipeline::scale::ScaleSpec, EngineConfig, u64, u64, f64, bool)> {
+    let mut cfg = EngineConfig::default();
+    let mut quick = false;
+    let mut secs: Option<u64> = None;
+    let mut tail: Option<u64> = None;
+    let mut min_ratio = 13.0;
+    let mut verbose = true;
+    let mut i = 0;
+    while i < argv.len() {
+        let need = |i: usize| -> Result<&String> {
+            argv.get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("missing value after {}", argv[i]))
+        };
+        match argv[i].as_str() {
+            "--quick" => {
+                quick = true;
+                i += 1;
+            }
+            "--secs" => {
+                secs = Some(need(i)?.parse()?);
+                i += 2;
+            }
+            "--tail" => {
+                tail = Some(need(i)?.parse()?);
+                i += 2;
+            }
+            "--seed" => {
+                cfg.seed = need(i)?.parse()?;
+                i += 2;
+            }
+            "--min-ratio" => {
+                min_ratio = need(i)?.parse()?;
+                i += 2;
+            }
+            "--quiet" => {
+                verbose = false;
+                i += 1;
+            }
+            "--help" | "-h" => {
+                println!(
+                    "usage: [--quick] [--secs N] [--tail N] [--seed N] [--min-ratio F] [--quiet]"
+                );
+                std::process::exit(0);
+            }
+            other => bail!("unknown argument {other:?}"),
+        }
+    }
+    let spec = if quick {
+        nephele::pipeline::scale::ScaleSpec::quick()
+    } else {
+        nephele::pipeline::scale::ScaleSpec::default()
+    };
+    let secs = secs.unwrap_or(if quick { 420 } else { 600 });
+    let tail = tail.unwrap_or(if quick { 180 } else { 300 });
+    Ok((spec, cfg, secs, tail, min_ratio, verbose))
+}
+
+/// Shared output of the paper-scale comparison driver.
+pub fn print_scale_summary(report: &nephele::experiments::scale::ScaleReport) {
+    println!("== paper-scale comparison — Nephele vs Hadoop Online ==");
+    println!("{}", nephele::experiments::scale::render_summary(report));
+}
+
 /// Shared output of the failover drivers (`failover` binary and
 /// `nephele sim-failover`).
 pub fn print_failover_summary(report: &nephele::experiments::failover::FailoverReport) {

@@ -1,19 +1,22 @@
 //! Profiling driver: a fixed high-event-rate sim workload for `perf`.
+//! Engine errors propagate as a non-zero exit instead of a panic.
+use anyhow::Result;
 use nephele::config::EngineConfig;
 use nephele::pipeline::video::{video_job, VideoSpec};
 use nephele::sim::cluster::SimCluster;
 use nephele::util::time::Duration;
 
-fn main() {
+fn main() -> Result<()> {
     let secs: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(600);
-    let vj = video_job(VideoSpec::small()).unwrap();
+    let vj = video_job(VideoSpec::small())?;
     let mut cluster = SimCluster::new(
         vj.job, vj.rg, &vj.constraints, vj.task_specs, vj.sources,
         EngineConfig::default().fully_optimized(),
-    ).unwrap();
+    )?;
     let t0 = std::time::Instant::now();
-    cluster.run(Duration::from_secs(secs), None);
+    cluster.run(Duration::from_secs(secs), None)?;
     let ev = cluster.stats.events_processed;
     eprintln!("{} events in {:.3}s = {:.2} M ev/s",
         ev, t0.elapsed().as_secs_f64(), ev as f64 / t0.elapsed().as_secs_f64() / 1e6);
+    Ok(())
 }

@@ -66,9 +66,9 @@ pub fn run_failover(
 
     if verbose {
         let mut obs = BreakdownPrinter { seq: &seq };
-        cluster.run(Duration::from_secs(sim_secs), Some((&mut obs, Duration::from_secs(30))));
+        cluster.run(Duration::from_secs(sim_secs), Some((&mut obs, Duration::from_secs(30))))?;
     } else {
-        cluster.run(Duration::from_secs(sim_secs), None);
+        cluster.run(Duration::from_secs(sim_secs), None)?;
     }
 
     let now = cluster.now();

@@ -41,10 +41,10 @@ pub fn fig2_cell(
     // (the ramp while the first buffers fill / the link backlog settles
     // would otherwise skew the mean at the extremes of the sweep).
     let warmup = Duration::from_secs_f64(max_secs as f64 * 0.25);
-    cluster.run(warmup, None);
+    cluster.run(warmup, None)?;
     let (n0, sum0) = (cluster.stats.e2e_count, cluster.stats.e2e_sum_us);
     let t0 = cluster.now().as_secs_f64();
-    cluster.run(Duration::from_secs(max_secs), None);
+    cluster.run(Duration::from_secs(max_secs), None)?;
     let elapsed = (cluster.now().as_secs_f64() - t0).max(1e-9);
     let delivered = cluster.stats.e2e_count - n0;
     let mean_latency_ms = if delivered > 0 {

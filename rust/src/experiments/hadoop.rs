@@ -23,7 +23,7 @@ pub fn run_hadoop_online(spec: HadoopSpec, sim_secs: u64, seed: u64) -> Result<H
     let cfg = EngineConfig { seed, ..EngineConfig::default() }.unoptimized();
     let mut cluster =
         SimCluster::new(hj.job, hj.rg, &hj.constraints, hj.task_specs, hj.sources, cfg)?;
-    cluster.run(Duration::from_secs(sim_secs), None);
+    cluster.run(Duration::from_secs(sim_secs), None)?;
     let now = cluster.now();
     let b = breakdown(&mut cluster, &hj.monitored_sequence, now);
     Ok(HadoopReport {

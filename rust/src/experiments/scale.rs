@@ -1,0 +1,195 @@
+//! The 200-node Hadoop Online comparison (the paper's headline result):
+//! run the video pipeline under full QoS management and the HOP
+//! expression of the same workload side by side, measure steady-state
+//! (post-convergence) end-to-end latency and sink throughput over a
+//! tail window, and report the latency ratio.
+//!
+//! "For an example streaming application from the multimedia domain
+//! running on a cluster of 200 nodes, our approach improves the
+//! processing latency by a factor of at least 13 while preserving high
+//! data throughput when needed."  `nephele sim-scale` reproduces that
+//! figure-level claim, seeded and deterministic; `--quick` shrinks the
+//! worker count for CI while keeping per-channel rates identical.
+
+use crate::baseline::hadoop::hadoop_online_job;
+use crate::config::EngineConfig;
+use crate::pipeline::scale::ScaleSpec;
+use crate::pipeline::video::video_job;
+use crate::sim::cluster::SimCluster;
+use crate::sim::metrics::{breakdown, Breakdown};
+use crate::util::time::Duration;
+use anyhow::{bail, Result};
+
+/// Tail-window measurement of one arm.
+#[derive(Debug, Clone)]
+pub struct ArmReport {
+    /// Mean ground-truth end-to-end latency over the tail window (ms).
+    pub tail_mean_ms: f64,
+    /// Sink arrivals per second over the tail window.
+    pub tail_rate: f64,
+    /// Theoretical steady-state sink rate of this arm's semantics.
+    pub expected_rate: f64,
+    /// Converged per-hop latency breakdown (Fig. 7–10 structure).
+    pub final_breakdown: Breakdown,
+    pub buffer_updates: u64,
+    pub chains_established: u64,
+    pub unresolvable: u64,
+    pub items_at_sinks: u64,
+    pub events: u64,
+}
+
+/// Outcome of the paired comparison.
+#[derive(Debug, Clone)]
+pub struct ScaleReport {
+    pub workers: u32,
+    pub sim_secs: u64,
+    pub tail_secs: u64,
+    pub nephele: ArmReport,
+    pub hadoop: ArmReport,
+    /// HOP tail latency over Nephele tail latency (the headline factor).
+    pub latency_ratio: f64,
+}
+
+impl ScaleReport {
+    /// Throughput preserved: each arm's tail sink rate reaches at least
+    /// 80% of its own theoretical steady-state rate (the arms have
+    /// different sink semantics — HOP's reduce-side window aggregates
+    /// frames — so each is held to its own yardstick).
+    pub fn throughput_ok(&self) -> bool {
+        self.nephele.tail_rate >= 0.8 * self.nephele.expected_rate
+            && self.hadoop.tail_rate >= 0.8 * self.hadoop.expected_rate
+    }
+}
+
+/// Run one arm: simulate to `warm_secs`, snapshot the sink statistics,
+/// run on to `sim_secs`, and report the tail-window means.
+fn run_arm(
+    mut cluster: SimCluster,
+    seq: &crate::graph::sequence::JobSequence,
+    warm_secs: u64,
+    sim_secs: u64,
+    expected_rate: f64,
+) -> Result<ArmReport> {
+    cluster.run(Duration::from_secs(warm_secs), None)?;
+    let (n0, sum0) = (cluster.stats.e2e_count, cluster.stats.e2e_sum_us);
+    cluster.run(Duration::from_secs(sim_secs), None)?;
+    let tail = cluster.stats.e2e_count - n0;
+    let tail_mean_ms = if tail > 0 {
+        (cluster.stats.e2e_sum_us - sum0) / tail as f64 / 1e3
+    } else {
+        f64::NAN
+    };
+    let tail_rate = tail as f64 / (sim_secs - warm_secs).max(1) as f64;
+    let now = cluster.now();
+    let final_breakdown = breakdown(&mut cluster, seq, now);
+    Ok(ArmReport {
+        tail_mean_ms,
+        tail_rate,
+        expected_rate,
+        final_breakdown,
+        buffer_updates: cluster.stats.buffer_size_updates,
+        chains_established: cluster.stats.chains_established,
+        unresolvable: cluster.stats.unresolvable_notices,
+        items_at_sinks: cluster.stats.e2e_count,
+        events: cluster.stats.events_processed,
+    })
+}
+
+/// Run the paired comparison for `sim_secs` of virtual time per arm,
+/// measuring over the final `tail_secs` (the head of the run absorbs
+/// QoS convergence on the Nephele arm and pipeline fill on both).
+pub fn run_scale(
+    spec: ScaleSpec,
+    cfg: EngineConfig,
+    sim_secs: u64,
+    tail_secs: u64,
+    verbose: bool,
+) -> Result<ScaleReport> {
+    if tail_secs == 0 || tail_secs >= sim_secs {
+        bail!("tail window ({tail_secs}s) must be shorter than the run ({sim_secs}s)");
+    }
+    let warm_secs = sim_secs - tail_secs;
+    let merged_rate = spec.merged_frames_per_sec();
+
+    // Nephele arm: the paper's countermeasure set (adaptive buffers +
+    // dynamic chaining) under the 300 ms constraint.
+    let vj = video_job(spec.nephele())?;
+    let nephele_cluster = SimCluster::new(
+        vj.job,
+        vj.rg,
+        &vj.constraints,
+        vj.task_specs,
+        vj.sources,
+        cfg.fully_optimized(),
+    )?;
+    let nephele = run_arm(
+        nephele_cluster,
+        &vj.constrained_sequence,
+        warm_secs,
+        sim_secs,
+        // The Nephele sink consumes one item per merged frame.
+        merged_rate,
+    )?;
+    if verbose {
+        println!("— nephele arm (tail {tail_secs}s) —");
+        print!("{}", nephele.final_breakdown.render());
+    }
+
+    // HOP arm: no QoS management, static 32 KB buffers, shuffle and job
+    // boundary delays (§4.1.2).
+    let hj = hadoop_online_job(spec.hadoop())?;
+    let hadoop_cluster = SimCluster::new(
+        hj.job,
+        hj.rg,
+        &hj.constraints,
+        hj.task_specs,
+        hj.sources,
+        cfg.unoptimized(),
+    )?;
+    // The reduce-side sliding window aggregates merged frames: at frame
+    // interval i and window w, an emission closes after ceil(w/i)
+    // arrivals beyond the one that opened the window.
+    let frame_interval = 1.0 / spec.fps;
+    let window = spec.hadoop().reduce_window.as_secs_f64();
+    let frames_per_emit = (window / frame_interval).ceil() + 1.0;
+    let hadoop = run_arm(
+        hadoop_cluster,
+        &hj.monitored_sequence,
+        warm_secs,
+        sim_secs,
+        merged_rate / frames_per_emit,
+    )?;
+    if verbose {
+        println!("— hadoop-online arm (tail {tail_secs}s) —");
+        print!("{}", hadoop.final_breakdown.render());
+    }
+
+    let latency_ratio = hadoop.tail_mean_ms / nephele.tail_mean_ms;
+    Ok(ScaleReport {
+        workers: spec.workers,
+        sim_secs,
+        tail_secs,
+        nephele,
+        hadoop,
+        latency_ratio,
+    })
+}
+
+/// One-line summary for CLI output.
+pub fn render_summary(r: &ScaleReport) -> String {
+    format!(
+        "{} workers: nephele {:.1} ms vs hadoop-online {:.1} ms -> {:.1}x | \
+         throughput {:.0}/s (expect {:.0}) vs {:.0}/s (expect {:.0}) | \
+         buffer updates {} | chains {}",
+        r.workers,
+        r.nephele.tail_mean_ms,
+        r.hadoop.tail_mean_ms,
+        r.latency_ratio,
+        r.nephele.tail_rate,
+        r.nephele.expected_rate,
+        r.hadoop.tail_rate,
+        r.hadoop.expected_rate,
+        r.nephele.buffer_updates,
+        r.nephele.chains_established,
+    )
+}

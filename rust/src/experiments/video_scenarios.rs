@@ -98,7 +98,7 @@ pub fn run_video_scenario(
     cluster.run(
         Duration::from_secs(sim_secs),
         Some((&mut obs, Duration::from_secs(observe_every_secs))),
-    );
+    )?;
     let now = cluster.now();
     let final_breakdown = breakdown(&mut cluster, &seq, now);
     if verbose {

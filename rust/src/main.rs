@@ -8,9 +8,16 @@
 //!                    [--surge-at SECS] [--constraint-ms N] [--quiet]
 //! nephele sim-failover [--secs N] [--seed N] [--recovery true|false]
 //!                    [--fail-at SECS] [--constraint-ms N] [--quiet]
+//! nephele sim-scale  [--quick] [--secs N] [--tail N] [--seed N]
+//!                    [--min-ratio F] [--quiet]
 //! nephele live       [--frames N] [--fps F] [--artifacts DIR]
 //! nephele info
 //! ```
+//!
+//! `sim-scale` reproduces the paper's headline 200-node Hadoop Online
+//! comparison and exits non-zero unless the measured latency ratio
+//! reaches `--min-ratio` (default 13, the paper's "factor of at least
+//! 13") at preserved throughput.
 //!
 //! The per-figure experiment binaries (`fig2`, `fig7`..`fig10`, `surge`,
 //! `failover`) regenerate the paper's evaluation plus the elastic-scaling
@@ -24,6 +31,7 @@ use anyhow::{bail, Result};
 use nephele::config::EngineConfig;
 use nephele::experiments::failover::run_failover;
 use nephele::experiments::load_surge::run_load_surge;
+use nephele::experiments::scale::run_scale;
 use nephele::experiments::video_scenarios::{run_video_scenario, Scenario};
 use nephele::live::{run_live, LiveConfig};
 use nephele::pipeline::meter::{smart_meter_job, MeterSpec};
@@ -39,12 +47,15 @@ fn main() -> Result<()> {
         Some("sim-meter") => sim_meter(&argv[1..]),
         Some("sim-surge") => sim_surge(&argv[1..]),
         Some("sim-failover") => sim_failover(&argv[1..]),
+        Some("sim-scale") => sim_scale(&argv[1..]),
         Some("live") => live(&argv[1..]),
         Some("info") | None => {
             println!("nephele-streaming — reproduction of 'Nephele Streaming: Stream");
             println!("Processing under QoS Constraints at Scale' (Cluster Computing 2013).");
             println!();
-            println!("subcommands: sim-video | sim-meter | sim-surge | sim-failover | live | info");
+            println!(
+                "subcommands: sim-video | sim-meter | sim-surge | sim-failover | sim-scale | live | info"
+            );
             println!(
                 "figure binaries: fig2, fig7, fig8, fig9, fig10, surge, failover (see EXPERIMENTS.md)"
             );
@@ -120,6 +131,28 @@ fn sim_failover(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn sim_scale(argv: &[String]) -> Result<()> {
+    let (spec, cfg, secs, tail, min_ratio, verbose) = figbin::scale_args(argv)?;
+    let report = run_scale(spec, cfg, secs, tail, verbose)?;
+    figbin::print_scale_summary(&report);
+    if !(report.latency_ratio >= min_ratio) {
+        bail!(
+            "latency ratio {:.2}x below the required {min_ratio}x",
+            report.latency_ratio
+        );
+    }
+    if !report.throughput_ok() {
+        bail!(
+            "throughput not preserved: nephele {:.0}/s of {:.0} expected, hadoop {:.0}/s of {:.0} expected",
+            report.nephele.tail_rate,
+            report.nephele.expected_rate,
+            report.hadoop.tail_rate,
+            report.hadoop.expected_rate
+        );
+    }
+    Ok(())
+}
+
 fn sim_meter(argv: &[String]) -> Result<()> {
     let mut secs = 1500;
     let mut optimized = true;
@@ -137,7 +170,7 @@ fn sim_meter(argv: &[String]) -> Result<()> {
     let cfg = if optimized { cfg.fully_optimized() } else { cfg.unoptimized() };
     let (job, rg, constraints, specs, sources, seq) = smart_meter_job(MeterSpec::default())?;
     let mut cluster = SimCluster::new(job, rg, &constraints, specs, sources, cfg)?;
-    cluster.run(Duration::from_secs(secs), None);
+    cluster.run(Duration::from_secs(secs), None)?;
     let now = cluster.now();
     print!("{}", breakdown(&mut cluster, &seq, now).render());
     Ok(())

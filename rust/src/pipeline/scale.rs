@@ -1,0 +1,143 @@
+//! The paper-scale comparison workload (§4.2 + §4.3.4): the "citizen
+//! journalism" video pipeline and the Hadoop Online expression of the
+//! same job, both sized for a 200-worker cluster with one processing
+//! pipeline per host — the configuration behind the paper's headline
+//! "latency improved by a factor of at least 13 while preserving high
+//! data throughput" claim.
+//!
+//! One [`ScaleSpec`] derives *both* jobs so the comparison is apples to
+//! apples: identical worker count, stream count, frame rate, group size
+//! and frame geometry.  `quick()` shrinks the worker count for CI while
+//! keeping every per-channel rate (streams per decoder, bytes per
+//! frame) identical, so the per-hop latency mechanics — and therefore
+//! the latency ratio — exercise the same code path at either size.
+
+use super::video::VideoSpec;
+use crate::baseline::hadoop::HadoopSpec;
+
+/// Parameters of the paper-scale comparison.  Both derived jobs place
+/// one pipeline per host (`parallelism == workers`, §4.3.4) and spread
+/// `streams_per_worker` external streams over each.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleSpec {
+    /// Cluster size n (§4.2: 200).
+    pub workers: u32,
+    /// External video streams per worker (keeps per-channel rates
+    /// scale-invariant; 8 → 1600 streams at n=200).
+    pub streams_per_worker: u32,
+    /// Streams merged per group (§4.2: 4).
+    pub group_size: u32,
+    /// Frames per second per stream.
+    pub fps: f64,
+    /// Nephele's latency constraint l (§4.2: 300 ms).  The HOP baseline
+    /// runs without QoS management, as in the paper.
+    pub constraint_ms: u64,
+    pub window_secs: u64,
+}
+
+impl Default for ScaleSpec {
+    fn default() -> Self {
+        ScaleSpec {
+            workers: 200,
+            streams_per_worker: 8,
+            group_size: 4,
+            fps: 4.0,
+            constraint_ms: 300,
+            window_secs: 15,
+        }
+    }
+}
+
+impl ScaleSpec {
+    /// Reduced worker count for CI smoke runs — same streams-per-worker
+    /// density, same per-channel rates, same code path.
+    pub fn quick() -> ScaleSpec {
+        ScaleSpec { workers: 20, ..ScaleSpec::default() }
+    }
+
+    /// Total external streams.
+    pub fn streams(&self) -> u32 {
+        self.workers * self.streams_per_worker
+    }
+
+    /// Merged frames produced per second in steady state (the common
+    /// throughput yardstick of the two arms).
+    pub fn merged_frames_per_sec(&self) -> f64 {
+        (self.streams() / self.group_size) as f64 * self.fps
+    }
+
+    /// The Nephele arm: the §4.1.1 video pipeline at one pipeline per
+    /// host.
+    pub fn nephele(&self) -> VideoSpec {
+        VideoSpec {
+            parallelism: self.workers,
+            workers: self.workers,
+            streams: self.streams(),
+            group_size: self.group_size,
+            fps: self.fps,
+            constraint_ms: self.constraint_ms,
+            window_secs: self.window_secs,
+            ..VideoSpec::default()
+        }
+    }
+
+    /// The Hadoop Online arm: the §4.1.2 two-MapReduce-job expression of
+    /// the same workload at the same size.
+    pub fn hadoop(&self) -> HadoopSpec {
+        HadoopSpec {
+            parallelism: self.workers,
+            workers: self.workers,
+            streams: self.streams(),
+            group_size: self.group_size,
+            fps: self.fps,
+            ..HadoopSpec::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::hadoop::hadoop_online_job;
+    use crate::pipeline::video::video_job;
+
+    #[test]
+    fn default_is_the_paper_deployment() {
+        let s = ScaleSpec::default();
+        assert_eq!(s.workers, 200);
+        assert_eq!(s.streams(), 1600);
+        assert_eq!(s.merged_frames_per_sec(), 1600.0);
+        let v = s.nephele();
+        assert_eq!((v.parallelism, v.workers, v.streams), (200, 200, 1600));
+        let h = s.hadoop();
+        assert_eq!((h.parallelism, h.workers, h.streams), (200, 200, 1600));
+    }
+
+    #[test]
+    fn both_arms_build_at_paper_scale() {
+        let s = ScaleSpec::default();
+        let vj = video_job(s.nephele()).unwrap();
+        assert_eq!(vj.rg.num_workers, 200);
+        assert_eq!(vj.rg.vertices.len(), 6 * 200);
+        assert_eq!(vj.sources.len(), 1600);
+        let hj = hadoop_online_job(s.hadoop()).unwrap();
+        assert_eq!(hj.rg.num_workers, 200);
+        assert_eq!(hj.rg.vertices.len(), 5 * 200);
+        assert_eq!(hj.sources.len(), 1600);
+    }
+
+    #[test]
+    fn quick_keeps_per_worker_density() {
+        let full = ScaleSpec::default();
+        let quick = ScaleSpec::quick();
+        assert_eq!(quick.workers, 20);
+        assert_eq!(
+            quick.streams() / quick.workers,
+            full.streams() / full.workers,
+            "streams per worker must be scale-invariant"
+        );
+        let vj = video_job(quick.nephele()).unwrap();
+        assert_eq!(vj.sources.len(), 160);
+        hadoop_online_job(quick.hadoop()).unwrap();
+    }
+}

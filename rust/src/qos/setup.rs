@@ -8,14 +8,17 @@
 //! `(worker, subgraph)` allocations (Algorithm 1).  Reporter assignments
 //! are derived from the manager allocations ("QoS Reporter Setup").
 
-use super::reporter::Interest;
+use super::manager::QosManager;
+use super::reporter::{Interest, QosReporter};
 use super::sample::{ElementKey, MetricKind};
 use super::subgraph::{ChainSpec, ChannelRef, ConstraintParams, Layer, QosSubgraph, VertexRef};
+use crate::config::EngineConfig;
 use crate::graph::constraint::JobConstraint;
 use crate::graph::ids::{JobVertexId, VertexId, WorkerId};
 use crate::graph::job::JobGraph;
 use crate::graph::runtime::RuntimeGraph;
 use crate::graph::sequence::JobSeqElem;
+use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 use std::collections::{BTreeMap, BTreeSet, HashSet};
 
@@ -357,6 +360,68 @@ pub fn manager_elements(
 /// the assignment (identity helper; keeps callers uniform).
 pub fn interest_of(assignment: &ReporterAssignment) -> Interest {
     assignment.interest.clone()
+}
+
+/// The QoS-side state derived from a (possibly rescaled) topology:
+/// monitored-element lookups, reporters, managers.  Instantiated from a
+/// [`QosSetup`] by [`build_qos_runtime`] — both at cluster construction
+/// and after every topology change (elastic rescale, failover).
+pub struct QosRuntime {
+    /// Dense per-channel / per-vertex monitored-element lookups (the
+    /// simulator's hot-path gates).
+    pub chan_latency_monitored: Vec<bool>,
+    pub chan_oblt_monitored: Vec<bool>,
+    pub vertex_monitored: Vec<bool>,
+    pub reporters: BTreeMap<WorkerId, QosReporter>,
+    pub managers: BTreeMap<WorkerId, QosManager>,
+}
+
+/// Run Algorithms 1–3 for the current topology and instantiate the
+/// reporter/manager roles.
+pub fn build_qos_runtime(
+    job: &JobGraph,
+    rg: &RuntimeGraph,
+    constraints: &[JobConstraint],
+    cfg: &EngineConfig,
+    rng: &mut Rng,
+) -> Result<QosRuntime> {
+    let setup = compute_qos_setup(job, rg, constraints)?;
+    let mut chan_latency_monitored = vec![false; rg.channels.len()];
+    let mut chan_oblt_monitored = vec![false; rg.channels.len()];
+    let mut vertex_monitored = vec![false; rg.vertices.len()];
+    let mut reporters = BTreeMap::new();
+    for (&w, assignment) in &setup.reporters {
+        for (&(elem, kind), _) in &assignment.interest {
+            match (elem, kind) {
+                (ElementKey::Channel(c), MetricKind::ChannelLatency) => {
+                    chan_latency_monitored[c.index()] = true;
+                }
+                (ElementKey::Channel(c), MetricKind::OutputBufferLifetime) => {
+                    chan_oblt_monitored[c.index()] = true;
+                }
+                (ElementKey::Vertex(v), _) => {
+                    vertex_monitored[v.index()] = true;
+                }
+                _ => {}
+            }
+        }
+        reporters.insert(
+            w,
+            QosReporter::new(w, cfg.measurement_interval, assignment.interest.clone(), rng),
+        );
+    }
+    let managers: BTreeMap<WorkerId, QosManager> = setup
+        .managers
+        .into_iter()
+        .map(|(w, sub)| (w, QosManager::new(w, sub, cfg.default_buffer_size, cfg.manager)))
+        .collect();
+    Ok(QosRuntime {
+        chan_latency_monitored,
+        chan_oblt_monitored,
+        vertex_monitored,
+        reporters,
+        managers,
+    })
 }
 
 #[cfg(test)]

@@ -1,0 +1,189 @@
+//! The item-conservation ledger: ground-truth counters, loss
+//! classification for crashed/detached endpoints, the in-flight census,
+//! and the routing-consistency invariants the tests lean on.
+//!
+//! The accounting identity the property suite pins down is
+//! `items_ingested == e2e_count + items_in_flight() + accounted_lost`
+//! once all in-flight network events have drained: every destroyed item
+//! must land either in the replay stash (counted as in flight) or in
+//! the explicit loss ledger.
+
+use super::cluster::SimCluster;
+use super::flow::ItemRec;
+use crate::graph::ids::ChannelId;
+use crate::util::time::Time;
+use anyhow::{bail, Result};
+
+/// Counters and ground-truth statistics the harness reads out.
+#[derive(Debug, Default, Clone)]
+pub struct SimStats {
+    pub items_ingested: u64,
+    /// Input-queue delivery events at live tasks.  This counts
+    /// *deliveries*, not distinct items: an item delivered, destroyed by
+    /// a crash, and re-delivered from a materialisation buffer counts
+    /// twice (conservation uses `e2e_count`/`items_in_flight`/
+    /// `accounted_lost`, never this).
+    pub items_delivered: u64,
+    pub bytes_on_wire: u64,
+    pub buffers_flushed: u64,
+    /// Ground-truth end-to-end latency samples (µs) at sinks (reservoir).
+    pub e2e_samples: Vec<f64>,
+    pub e2e_count: u64,
+    pub e2e_sum_us: f64,
+    pub e2e_max_us: f64,
+    pub dropped_on_chain: u64,
+    pub unresolvable_notices: u64,
+    pub buffer_size_updates: u64,
+    pub chains_established: u64,
+    /// Elastic scaling: instances spawned / retired / rejected requests,
+    /// and QoS-setup rebuilds triggered by topology changes.
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub scaling_rejected: u64,
+    pub qos_rebuilds: u64,
+    /// Failure injection and recovery.  `accounted_lost` is the explicit
+    /// ledger of items destroyed by crashes (and emissions with no wired
+    /// consumer left): `items_ingested == e2e_count + items_in_flight()
+    /// + accounted_lost` once the wire is drained.
+    pub accounted_lost: u64,
+    pub items_replayed: u64,
+    pub workers_crashed: u64,
+    /// Worker failures the master detected and handled.
+    pub failovers: u64,
+    pub instances_reassigned: u64,
+    pub instances_detached: u64,
+    pub events_processed: u64,
+    /// Timestamped log of every applied countermeasure, crash and
+    /// failover decision: the replayable action trail that the
+    /// determinism tests compare byte-for-byte across same-seed runs.
+    pub action_log: Vec<String>,
+}
+
+pub(crate) const E2E_RESERVOIR: usize = 100_000;
+
+impl SimCluster {
+    pub(crate) fn log(&mut self, now: Time, msg: String) {
+        self.stats.action_log.push(format!("[{:>12.6}] {msg}", now.as_secs_f64()));
+    }
+
+    /// Account items destroyed by a crash.  Items emitted by a
+    /// `pin_unchainable` task survive in its durable materialisation
+    /// buffer (§3.6: pinning preserves materialisation points for fault
+    /// tolerance) and are stashed for replay, keyed by the channel they
+    /// were travelling; external ingress, items from unpinned producers,
+    /// and items a recovery could never replay anyway (recovery disabled,
+    /// or the channel already detached) are lost and accounted
+    /// explicitly.
+    pub(crate) fn classify_lost(&mut self, channel: u32, items: Vec<ItemRec>) {
+        if items.is_empty() {
+            return;
+        }
+        if channel != u32::MAX && self.cfg.recovery.enable_recovery {
+            let c = self.rg.channel(ChannelId(channel));
+            if !c.detached {
+                let jv = self.rg.vertex(c.from).job_vertex;
+                if self.job.vertex(jv).pin_unchainable {
+                    self.replay_stash.entry(channel).or_default().extend(items);
+                    return;
+                }
+            }
+        }
+        self.stats.accounted_lost += items.len() as u64;
+    }
+
+    pub(crate) fn record_e2e(&mut self, us: f64) {
+        self.stats.e2e_count += 1;
+        self.stats.e2e_sum_us += us;
+        if us > self.stats.e2e_max_us {
+            self.stats.e2e_max_us = us;
+        }
+        if self.stats.e2e_samples.len() < E2E_RESERVOIR {
+            self.stats.e2e_samples.push(us);
+        } else {
+            let i = self.rng.below(self.stats.e2e_count) as usize;
+            if i < E2E_RESERVOIR {
+                self.stats.e2e_samples[i] = us;
+            }
+        }
+    }
+
+    pub fn mean_e2e_ms(&self) -> Option<f64> {
+        (self.stats.e2e_count > 0)
+            .then(|| self.stats.e2e_sum_us / self.stats.e2e_count as f64 / 1e3)
+    }
+
+    /// Items currently inside the pipeline: input queues, sender-side
+    /// output buffers, unmerged partial group state, and items stashed at
+    /// materialisation points awaiting replay.  Together with the sink
+    /// count and [`SimStats::accounted_lost`] this accounts for every
+    /// ingested item once all in-flight network events have drained.
+    pub fn items_in_flight(&self) -> u64 {
+        let queued: u64 = self
+            .tasks
+            .iter()
+            .map(|t| {
+                let q: u64 = t.queue.iter().map(|b| b.buffer.items.len() as u64).sum();
+                let merged: u64 = t
+                    .groups
+                    .values()
+                    .map(|g| g.values().map(|q| q.len() as u64).sum::<u64>())
+                    .sum();
+                q + merged
+            })
+            .sum();
+        let pending: u64 = self.out_bufs.iter().map(|b| b.pending.len() as u64).sum();
+        let stashed: u64 = self.replay_stash.values().map(|v| v.len() as u64).sum();
+        queued + pending + stashed
+    }
+
+    /// Consistency of the runtime rewiring, checked by tests after
+    /// scale-up/scale-down: adjacency is bidirectional, no routing-table
+    /// entry points at a detached channel, every active non-source
+    /// instance is reachable, and the dense per-element state vectors
+    /// match the topology.
+    pub fn routing_consistent(&self) -> Result<()> {
+        if self.tasks.len() != self.rg.vertices.len() {
+            bail!("{} task states for {} vertices", self.tasks.len(), self.rg.vertices.len());
+        }
+        if self.out_bufs.len() != self.rg.channels.len() {
+            bail!("{} out buffers for {} channels", self.out_bufs.len(), self.rg.channels.len());
+        }
+        for v in &self.rg.vertices {
+            for &cid in self.rg.out_channels(v.id) {
+                let c = self.rg.channel(cid);
+                if c.detached {
+                    bail!("out routing of {} references detached {cid}", v.id);
+                }
+                if c.from != v.id {
+                    bail!("channel {cid} listed at {} but leaves {}", v.id, c.from);
+                }
+                if !self.rg.in_channels(c.to).contains(&cid) {
+                    bail!("channel {cid} missing from receiver {}'s inputs", c.to);
+                }
+            }
+            for &cid in self.rg.in_channels(v.id) {
+                let c = self.rg.channel(cid);
+                if c.detached {
+                    bail!("in routing of {} references detached {cid}", v.id);
+                }
+                if c.to != v.id {
+                    bail!("channel {cid} listed at {} but enters {}", v.id, c.to);
+                }
+                if !self.rg.out_channels(c.from).contains(&cid) {
+                    bail!("channel {cid} missing from sender {}'s outputs", c.from);
+                }
+            }
+        }
+        for jv in &self.job.vertices {
+            if jv.is_source {
+                continue;
+            }
+            for &m in self.rg.members(jv.id) {
+                if self.rg.in_channels(m).is_empty() {
+                    bail!("active instance {m} of {} is unreachable", jv.name);
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,29 +1,43 @@
-//! The discrete-event streaming cluster: workers, task threads, output
-//! buffers, input queues, NICs — plus the full distributed QoS machinery
-//! (reporters, managers, countermeasures) running *in* the simulation
-//! with control-plane delays, exactly as it would on a real cluster.
+//! The discrete-event streaming cluster facade: construction, initial
+//! event scheduling, the run loop, and harness accessors.
+//!
+//! The engine behind this facade is split by responsibility (one module
+//! per concern, all operating on the [`SimCluster`] state):
+//!
+//! * [`super::engine`] — the typed event set, typed [`SimError`]s, and
+//!   the arena + time-wheel event queue;
+//! * [`super::worker`] — per-worker data path (tasks, chains, NICs),
+//!   measurement plumbing, worker-side action application, crash
+//!   destruction;
+//! * [`super::master`] — liveness sweep, failure recovery, elastic
+//!   scaling, and the Algorithms 1–3 rebuild driver;
+//! * [`super::accounting`] — the item-conservation ledger and
+//!   consistency invariants.
+//!
+//! Scenario code compiles unchanged: every public name that predates the
+//! split is still reachable through this module.
 
-use super::events::EventQueue;
-use super::flow::{Buffer, ItemRec, OutBufferState};
+use super::engine::{Ev, EventCore};
+use super::flow::{ItemRec, OutBufferState};
 use super::net::Nic;
-use super::task::{QueuedBuffer, Route, Semantics, TaskSpec, TaskState};
-use crate::actions::arbiter::{BufferUpdateArbiter, Verdict};
-use crate::actions::chaining::DrainPolicy;
-use crate::actions::Action;
+use super::task::{TaskSpec, TaskState};
+use crate::actions::arbiter::BufferUpdateArbiter;
 use crate::config::{EngineConfig, FailureSpec};
 use crate::coordinator::FailureDetector;
 use crate::graph::constraint::JobConstraint;
-use crate::graph::ids::{ChannelId, JobEdgeId, JobVertexId, VertexId, WorkerId};
+use crate::graph::ids::{JobVertexId, VertexId, WorkerId};
 use crate::graph::job::JobGraph;
 use crate::graph::runtime::RuntimeGraph;
 use crate::qos::manager::QosManager;
 use crate::qos::reporter::QosReporter;
-use crate::qos::sample::{ElementKey, Measurement, MetricKind, Report};
-use crate::qos::setup::compute_qos_setup;
+use crate::qos::setup::{build_qos_runtime, QosRuntime};
 use crate::util::rng::Rng;
 use crate::util::time::{Duration, Time};
-use anyhow::{bail, Result};
+use anyhow::Result;
 use std::collections::{BTreeMap, BTreeSet};
+
+pub use super::accounting::SimStats;
+pub use super::engine::SimError;
 
 /// External stream feeding a source task (e.g. one camera feeding its
 /// Partitioner over TCP).
@@ -48,139 +62,10 @@ pub struct SourceSpec {
     pub batch: u32,
 }
 
-/// Simulator events.
-#[derive(Debug)]
-enum Ev {
-    /// One external packet arrives at its source task.
-    Packet { source: u32 },
-    /// A flushed buffer arrives at the receiving task's input queue.
-    Deliver { buffer: Buffer },
-    /// A task (or chain) thread finished its current buffer.
-    TaskDone { vertex: u32 },
-    ReporterFlush { worker: u32 },
-    ReportArrive { report: Report },
-    ManagerTick { worker: u32 },
-    CpuSample { worker: u32 },
-    ApplyAction { action: Action },
-    /// Fail-stop crash of a worker (injected by a
-    /// [`FailureSpec`]): its task threads, NIC state and buffered items
-    /// are gone.
-    WorkerCrash { worker: u32 },
-    /// Master-side liveness sweep: declare workers whose QoS reports
-    /// went silent as failed and run the recovery policy.
-    MasterTick,
-}
-
-/// Counters and ground-truth statistics the harness reads out.
-#[derive(Debug, Default, Clone)]
-pub struct SimStats {
-    pub items_ingested: u64,
-    /// Input-queue delivery events at live tasks.  This counts
-    /// *deliveries*, not distinct items: an item delivered, destroyed by
-    /// a crash, and re-delivered from a materialisation buffer counts
-    /// twice (conservation uses `e2e_count`/`items_in_flight`/
-    /// `accounted_lost`, never this).
-    pub items_delivered: u64,
-    pub bytes_on_wire: u64,
-    pub buffers_flushed: u64,
-    /// Ground-truth end-to-end latency samples (µs) at sinks (reservoir).
-    pub e2e_samples: Vec<f64>,
-    pub e2e_count: u64,
-    pub e2e_sum_us: f64,
-    pub e2e_max_us: f64,
-    pub dropped_on_chain: u64,
-    pub unresolvable_notices: u64,
-    pub buffer_size_updates: u64,
-    pub chains_established: u64,
-    /// Elastic scaling: instances spawned / retired / rejected requests,
-    /// and QoS-setup rebuilds triggered by topology changes.
-    pub scale_ups: u64,
-    pub scale_downs: u64,
-    pub scaling_rejected: u64,
-    pub qos_rebuilds: u64,
-    /// Failure injection and recovery.  `accounted_lost` is the explicit
-    /// ledger of items destroyed by crashes (and emissions with no wired
-    /// consumer left): `items_ingested == e2e_count + items_in_flight()
-    /// + accounted_lost` once the wire is drained.
-    pub accounted_lost: u64,
-    pub items_replayed: u64,
-    pub workers_crashed: u64,
-    /// Worker failures the master detected and handled.
-    pub failovers: u64,
-    pub instances_reassigned: u64,
-    pub instances_detached: u64,
-    pub events_processed: u64,
-    /// Timestamped log of every applied countermeasure, crash and
-    /// failover decision: the replayable action trail that the
-    /// determinism tests compare byte-for-byte across same-seed runs.
-    pub action_log: Vec<String>,
-}
-
-const E2E_RESERVOIR: usize = 100_000;
-
 /// Hooks for experiment harnesses (time series collection).
 pub trait SimObserver {
     /// Called once per observer interval with the current virtual time.
     fn sample(&mut self, cluster: &mut SimCluster, now: Time);
-}
-
-/// The QoS-side state derived from a (possibly rescaled) topology:
-/// monitored-element lookups, reporters, managers.
-struct QosRuntime {
-    chan_latency_monitored: Vec<bool>,
-    chan_oblt_monitored: Vec<bool>,
-    vertex_monitored: Vec<bool>,
-    reporters: BTreeMap<WorkerId, QosReporter>,
-    managers: BTreeMap<WorkerId, QosManager>,
-}
-
-/// Run Algorithms 1-3 for the current topology and instantiate the
-/// reporter/manager roles.  Used both at cluster construction and after
-/// every elastic-scaling topology change.
-fn build_qos_runtime(
-    job: &JobGraph,
-    rg: &RuntimeGraph,
-    constraints: &[JobConstraint],
-    cfg: &EngineConfig,
-    rng: &mut Rng,
-) -> Result<QosRuntime> {
-    let setup = compute_qos_setup(job, rg, constraints)?;
-    let mut chan_latency_monitored = vec![false; rg.channels.len()];
-    let mut chan_oblt_monitored = vec![false; rg.channels.len()];
-    let mut vertex_monitored = vec![false; rg.vertices.len()];
-    let mut reporters = BTreeMap::new();
-    for (&w, assignment) in &setup.reporters {
-        for (&(elem, kind), _) in &assignment.interest {
-            match (elem, kind) {
-                (ElementKey::Channel(c), MetricKind::ChannelLatency) => {
-                    chan_latency_monitored[c.index()] = true;
-                }
-                (ElementKey::Channel(c), MetricKind::OutputBufferLifetime) => {
-                    chan_oblt_monitored[c.index()] = true;
-                }
-                (ElementKey::Vertex(v), _) => {
-                    vertex_monitored[v.index()] = true;
-                }
-                _ => {}
-            }
-        }
-        reporters.insert(
-            w,
-            QosReporter::new(w, cfg.measurement_interval, assignment.interest.clone(), rng),
-        );
-    }
-    let managers: BTreeMap<WorkerId, QosManager> = setup
-        .managers
-        .into_iter()
-        .map(|(w, sub)| (w, QosManager::new(w, sub, cfg.default_buffer_size, cfg.manager)))
-        .collect();
-    Ok(QosRuntime {
-        chan_latency_monitored,
-        chan_oblt_monitored,
-        vertex_monitored,
-        reporters,
-        managers,
-    })
 }
 
 /// The simulated cluster.
@@ -190,57 +75,57 @@ pub struct SimCluster {
     pub cfg: EngineConfig,
     /// QoS constraints (retained: elastic scaling recomputes the QoS
     /// setup for the changed topology).
-    constraints: Vec<JobConstraint>,
+    pub(crate) constraints: Vec<JobConstraint>,
     /// Per-job-vertex task specs (retained for runtime-spawned instances).
-    job_specs: Vec<TaskSpec>,
-    sources: Vec<SourceSpec>,
-    tasks: Vec<TaskState>,
-    out_bufs: Vec<OutBufferState>,
-    nics: Vec<Nic>,
+    pub(crate) job_specs: Vec<TaskSpec>,
+    pub(crate) sources: Vec<SourceSpec>,
+    pub(crate) tasks: Vec<TaskState>,
+    pub(crate) out_bufs: Vec<OutBufferState>,
+    pub(crate) nics: Vec<Nic>,
     /// Per-worker NTP offset (µs, signed).
-    skew_us: Vec<i64>,
-    reporters: BTreeMap<WorkerId, QosReporter>,
+    pub(crate) skew_us: Vec<i64>,
+    pub(crate) reporters: BTreeMap<WorkerId, QosReporter>,
     pub(crate) managers: BTreeMap<WorkerId, QosManager>,
-    arbiters: BTreeMap<WorkerId, BufferUpdateArbiter>,
+    pub(crate) arbiters: BTreeMap<WorkerId, BufferUpdateArbiter>,
     /// Fast monitored-element lookup (hot path).
-    chan_latency_monitored: Vec<bool>,
-    chan_oblt_monitored: Vec<bool>,
-    vertex_monitored: Vec<bool>,
+    pub(crate) chan_latency_monitored: Vec<bool>,
+    pub(crate) chan_oblt_monitored: Vec<bool>,
+    pub(crate) vertex_monitored: Vec<bool>,
     /// Dense per-channel / per-vertex sampling deadlines (hot path; a
     /// HashMap-based gate costs a hash per emitted item).
-    next_tag_at: Vec<Time>,
-    next_task_sample_at: Vec<Time>,
-    queue: EventQueue<Ev>,
-    rng: Rng,
+    pub(crate) next_tag_at: Vec<Time>,
+    pub(crate) next_task_sample_at: Vec<Time>,
+    pub(crate) queue: EventCore<Ev>,
+    pub(crate) rng: Rng,
     /// Chained execution groups: member tasks share one thread.
-    chain_members: Vec<Vec<VertexId>>,
-    chain_busy: Vec<Time>,
-    chain_sched: Vec<bool>,
+    pub(crate) chain_members: Vec<Vec<VertexId>>,
+    pub(crate) chain_busy: Vec<Time>,
+    pub(crate) chain_sched: Vec<bool>,
     /// Instances added by elastic scaling, per task group (scale-down
     /// retires from the back, never below the original parallelism).
-    scaled_instances: BTreeMap<JobVertexId, Vec<VertexId>>,
+    pub(crate) scaled_instances: BTreeMap<JobVertexId, Vec<VertexId>>,
     /// Master-side arbitration: when the last rescale of a group was
     /// applied (stale decisions are discarded, mirroring §3.5.1).
-    last_scale: BTreeMap<JobVertexId, Time>,
+    pub(crate) last_scale: BTreeMap<JobVertexId, Time>,
     /// Workers with a live ReporterFlush / ManagerTick event chain (QoS
     /// rebuilds must start chains only for workers that lack one).
-    flush_chains: BTreeSet<u32>,
-    tick_chains: BTreeSet<u32>,
+    pub(crate) flush_chains: BTreeSet<u32>,
+    pub(crate) tick_chains: BTreeSet<u32>,
     /// Fail-stop state: crashed workers and their (dead) task threads.
     /// `dead_tasks` is also set for instances detached by a
     /// recovery-disabled failover.
-    dead_workers: Vec<bool>,
-    dead_tasks: Vec<bool>,
+    pub(crate) dead_workers: Vec<bool>,
+    pub(crate) dead_tasks: Vec<bool>,
     /// Items destroyed by a crash whose producing task is a
     /// `pin_unchainable` materialisation point: its durable buffer holds
     /// a copy, keyed by the channel the item was travelling, awaiting
     /// replay by a recovery.
-    replay_stash: BTreeMap<u32, Vec<ItemRec>>,
+    pub(crate) replay_stash: BTreeMap<u32, Vec<ItemRec>>,
     /// Master-side liveness tracking over QoS report traffic.
-    detector: FailureDetector,
-    master_tick_armed: bool,
+    pub(crate) detector: FailureDetector,
+    pub(crate) master_tick_armed: bool,
     /// Sources stop emitting at this time.
-    source_end: Time,
+    pub(crate) source_end: Time,
     pub stats: SimStats,
 }
 
@@ -295,7 +180,6 @@ impl SimCluster {
             })
             .collect();
 
-
         let detector =
             FailureDetector::new(cfg.measurement_interval, cfg.recovery.detection_intervals);
         let num_workers = rg.num_workers as usize;
@@ -318,7 +202,7 @@ impl SimCluster {
             vertex_monitored,
             next_tag_at: vec![Time::ZERO; n_channels],
             next_task_sample_at: vec![Time::ZERO; n_vertices],
-            queue: EventQueue::new(),
+            queue: EventCore::new(),
             rng,
             chain_members: Vec::new(),
             chain_busy: Vec::new(),
@@ -396,11 +280,14 @@ impl SimCluster {
     /// Run until virtual time `until`, with an optional observer sampled
     /// every `observe_every`.  Sources keep producing across successive
     /// `run` calls (bound them explicitly with [`Self::stop_sources_at`]).
+    ///
+    /// A drained-queue bug inside the engine surfaces as a typed
+    /// [`SimError`] instead of a panic.
     pub fn run(
         &mut self,
         until: Duration,
         mut observer: Option<(&mut dyn SimObserver, Duration)>,
-    ) {
+    ) -> Result<(), SimError> {
         let end = Time::ZERO + until;
         let mut next_obs = observer
             .as_ref()
@@ -420,17 +307,20 @@ impl SimCluster {
                     continue;
                 }
             }
-            let (now, ev) = self.queue.pop().unwrap();
+            let (now, ev) = self.queue.pop().ok_or(SimError::DrainedQueue {
+                context: "event queue empty right after a successful peek",
+            })?;
             self.stats.events_processed += 1;
-            self.handle(now, ev);
+            self.handle(now, ev)?;
         }
+        Ok(())
     }
 
-    fn handle(&mut self, now: Time, ev: Ev) {
+    fn handle(&mut self, now: Time, ev: Ev) -> Result<(), SimError> {
         match ev {
             Ev::Packet { source } => self.on_packet(now, source),
             Ev::Deliver { buffer } => self.on_deliver(now, buffer),
-            Ev::TaskDone { vertex } => self.on_task_done(now, VertexId(vertex)),
+            Ev::TaskDone { vertex } => return self.on_task_done(now, VertexId(vertex)),
             Ev::ReporterFlush { worker } => self.on_reporter_flush(now, WorkerId(worker)),
             Ev::ReportArrive { report } => {
                 // The master relays the control plane and piggybacks its
@@ -448,1076 +338,6 @@ impl SimCluster {
             Ev::WorkerCrash { worker } => self.on_worker_crash(now, WorkerId(worker)),
             Ev::MasterTick => self.on_master_tick(now),
         }
-    }
-
-    // ------------------------------------------------------------------
-    // Data path
-    // ------------------------------------------------------------------
-
-    fn on_packet(&mut self, now: Time, source: u32) {
-        let s = self.sources[source as usize];
-        let batch = s.batch.max(1);
-        let item = ItemRec::new(s.key, s.bytes, now);
-        // Failure handling can shrink the target group; external streams
-        // reconnect to a surviving member (index modulo live members).
-        let members = self.rg.members(s.target);
-        let v = if members.is_empty() {
-            None
-        } else {
-            Some(members[s.target_subtask as usize % members.len()])
-        };
-        self.stats.items_ingested += batch as u64;
-        let mut next = now + s.interval.max(Duration::from_micros(1));
-        match v {
-            Some(v) if !self.dead_tasks[v.index()] => {
-                // External ingress: no channel, the items land directly in
-                // the source task's input queue as one buffer.
-                let buffer = Buffer {
-                    channel: u32::MAX,
-                    items: vec![item; batch as usize],
-                    bytes: s.bytes * batch as u64,
-                    flushed: now,
-                };
-                self.enqueue_buffer(now, v, buffer);
-                if let Some(bound) = s.throttle {
-                    let worker = self.rg.worker(v);
-                    let backlog = self.nics[worker.index()].backlog(now);
-                    if backlog > bound {
-                        // Pause until the egress backlog drains back to the
-                        // flow control bound (TCP window behaviour).
-                        next = now + (backlog - bound).max(s.interval);
-                    }
-                }
-            }
-            _ => {
-                // The stream's endpoint is dead (or its whole group is
-                // gone): items are lost at the cluster edge — there is no
-                // materialisation point upstream of an external source.
-                self.stats.accounted_lost += batch as u64;
-            }
-        }
-        if next < self.source_end {
-            self.queue.push(next, Ev::Packet { source });
-        }
-    }
-
-    fn on_deliver(&mut self, now: Time, buffer: Buffer) {
-        let v = self.rg.channel(ChannelId(buffer.channel)).to;
-        if self.dead_tasks[v.index()] {
-            // The receiving task thread is gone: the buffer is lost on
-            // arrival (items from pinned producers survive in the
-            // materialisation buffer and await replay).
-            self.classify_lost(buffer.channel, buffer.items);
-            return;
-        }
-        self.stats.items_delivered += buffer.items.len() as u64;
-        self.enqueue_buffer(now, v, buffer);
-    }
-
-    fn enqueue_buffer(&mut self, now: Time, v: VertexId, buffer: Buffer) {
-        let t = &mut self.tasks[v.index()];
-        t.queued_bytes += buffer.bytes;
-        t.queue.push_back(QueuedBuffer { buffer, arrived: now });
-        self.try_schedule(now, v);
-    }
-
-    fn try_schedule(&mut self, now: Time, v: VertexId) {
-        if self.dead_tasks[v.index()] {
-            return;
-        }
-        let chain = self.tasks[v.index()].chain;
-        match chain {
-            Some(g) => {
-                let g = g as usize;
-                if self.chain_sched[g] {
-                    return;
-                }
-                if self.chain_members[g]
-                    .iter()
-                    .all(|&m| self.tasks[m.index()].queue.is_empty())
-                {
-                    return;
-                }
-                self.chain_sched[g] = true;
-                let at = self.chain_busy[g].max(now);
-                // The head represents the chain thread in TaskDone events.
-                let head = self.chain_members[g][0];
-                self.queue.push(at, Ev::TaskDone { vertex: head.0 });
-            }
-            None => {
-                let t = &mut self.tasks[v.index()];
-                if t.scheduled || t.queue.is_empty() {
-                    return;
-                }
-                let at = t.busy_until.max(now);
-                if at <= now {
-                    // Idle task, work available right now: process inline
-                    // instead of a same-time heap round-trip (the common
-                    // case on the delivery path).
-                    self.plain_task_done(now, v);
-                } else {
-                    t.scheduled = true;
-                    self.queue.push(at, Ev::TaskDone { vertex: v.0 });
-                }
-            }
-        }
-    }
-
-    fn on_task_done(&mut self, now: Time, v: VertexId) {
-        // Stale wake-ups for crashed threads (chain members are always
-        // co-located, so the head's flag covers its whole chain).
-        if self.dead_tasks[v.index()] {
-            return;
-        }
-        match self.tasks[v.index()].chain {
-            Some(g) => self.chain_task_done(now, g as usize),
-            None => self.plain_task_done(now, v),
-        }
-    }
-
-    fn plain_task_done(&mut self, now: Time, v: VertexId) {
-        // A stale wake-up (e.g. scheduled before this task was chained or
-        // while its frontier moved) must not start work early.
-        if now < self.tasks[v.index()].busy_until {
-            let at = self.tasks[v.index()].busy_until;
-            self.queue.push(at, Ev::TaskDone { vertex: v.0 });
-            return;
-        }
-        self.tasks[v.index()].scheduled = false;
-        let qb = match self.tasks[v.index()].queue.pop_front() {
-            Some(qb) => qb,
-            None => return,
-        };
-        self.tasks[v.index()].queued_bytes -= qb.buffer.bytes;
-        let spent = self.process_buffer(now, v, qb);
-        let t = &mut self.tasks[v.index()];
-        t.busy_until = now + spent;
-        t.busy_accum += spent;
-        if !t.queue.is_empty() {
-            t.scheduled = true;
-            let at = t.busy_until;
-            self.queue.push(at, Ev::TaskDone { vertex: v.0 });
-        }
-    }
-
-    fn chain_task_done(&mut self, now: Time, g: usize) {
-        if now < self.chain_busy[g] {
-            let at = self.chain_busy[g];
-            let head = self.chain_members[g][0];
-            self.queue.push(at, Ev::TaskDone { vertex: head.0 });
-            return;
-        }
-        self.chain_sched[g] = false;
-        // Serve the most-downstream member with a backlog first (drains
-        // pre-chaining queues in pipeline order).
-        let member = self
-            .chain_members[g]
-            .iter()
-            .rev()
-            .copied()
-            .find(|m| !self.tasks[m.index()].queue.is_empty());
-        let v = match member {
-            Some(v) => v,
-            None => return,
-        };
-        let qb = self.tasks[v.index()].queue.pop_front().unwrap();
-        self.tasks[v.index()].queued_bytes -= qb.buffer.bytes;
-        let spent = self.process_buffer(now, v, qb);
-        self.chain_busy[g] = now + spent;
-        if self.chain_members[g]
-            .iter()
-            .any(|&m| !self.tasks[m.index()].queue.is_empty())
-        {
-            self.chain_sched[g] = true;
-            let at = self.chain_busy[g];
-            let head = self.chain_members[g][0];
-            self.queue.push(at, Ev::TaskDone { vertex: head.0 });
-        }
-    }
-
-    /// Process one input buffer at task `v` starting at `now`.  Returns
-    /// the total thread time consumed (including inline chained
-    /// successors).
-    fn process_buffer(&mut self, now: Time, v: VertexId, qb: QueuedBuffer) -> Duration {
-        let mut cursor = Duration::ZERO;
-        let channel = qb.buffer.channel;
-        for item in qb.buffer.items {
-            let enter = now + cursor;
-            // Tag evaluation: channel latency measured just before the
-            // item enters the user code (§3.3).
-            if channel != u32::MAX {
-                if let Some(tag_created) = item.tag() {
-                    self.record_channel_latency(ChannelId(channel), tag_created, enter);
-                }
-            }
-            cursor += self.process_item(enter, v, item, channel != u32::MAX);
-        }
-        cursor
-    }
-
-    /// Run one item through `v`'s user code (and inline through chained
-    /// successors).  Returns thread time consumed.
-    fn process_item(
-        &mut self,
-        enter: Time,
-        v: VertexId,
-        item: ItemRec,
-        measurable: bool,
-    ) -> Duration {
-        let spec = self.tasks[v.index()].spec;
-        // §3.2.1 task-latency sampling: arm on entry (sources excluded —
-        // task latency is undefined there).
-        if measurable
-            && self.vertex_monitored[v.index()]
-            && self.tasks[v.index()].pending_sample.is_none()
-            && enter >= self.next_task_sample_at[v.index()]
-        {
-            self.next_task_sample_at[v.index()] = enter + self.cfg.measurement_interval;
-            self.tasks[v.index()].pending_sample = Some(enter);
-        }
-        let svc = spec.service;
-        let mut spent = svc;
-        let exit = enter + svc;
-        match spec.semantics {
-            Semantics::Transform => {
-                let out = ItemRec::new(
-                    spec.key_map.apply(item.key),
-                    spec.out_bytes.apply(item.bytes as u64),
-                    item.born,
-                );
-                spent += self.emit(exit, v, out);
-            }
-            Semantics::Merge { arity } => {
-                let done = self.tasks[v.index()].merge_feed(arity, item);
-                if let Some(members) = done {
-                    let total: u64 = members.iter().map(|m| m.bytes as u64).sum();
-                    let born = members.iter().map(|m| m.born).min().unwrap();
-                    let out_key = spec.key_map.apply(item.key);
-                    let out = ItemRec::new(out_key, spec.out_bytes.apply(total), born);
-                    spent += self.emit(exit, v, out);
-                }
-            }
-            Semantics::Sink => {
-                let e2e = enter.since(item.born).as_micros() as f64;
-                self.record_e2e(e2e);
-            }
-            Semantics::WindowAgg { window } => {
-                let key = spec.key_map.apply(item.key);
-                let entry = self
-                    .tasks[v.index()]
-                    .windows
-                    .entry(key)
-                    .or_insert((enter, 0, 0));
-                entry.1 += 1;
-                entry.2 += item.bytes as u64;
-                let (start, _n, bytes) = *entry;
-                if enter.since(start) >= window {
-                    self.tasks[v.index()].windows.remove(&key);
-                    let out = ItemRec::new(key, spec.out_bytes.apply(bytes), item.born);
-                    spent += self.emit(exit, v, out);
-                }
-            }
-        }
-        spent
-    }
-
-    /// Emit an item from `v`'s user code at time `exit`: close the task
-    /// latency sample, route to the consumer, and either hand over
-    /// directly (chained channel) or write to the output buffer.
-    /// Returns extra thread time consumed by inline chained successors.
-    fn emit(&mut self, exit: Time, v: VertexId, mut item: ItemRec) -> Duration {
-        // Close the §3.2.1 sample: "the time difference between a data
-        // item entering the user code and the next data item leaving it".
-        if let Some(started) = self.tasks[v.index()].pending_sample.take() {
-            let worker = self.rg.worker(v);
-            let sampled = exit.since(started).as_micros() as f64;
-            self.record(worker, Measurement::task_latency(v, sampled));
-        }
-
-        let out_channels = self.rg.out_channels(v);
-        if out_channels.is_empty() {
-            // A non-sink emission with no wired consumer left (every
-            // downstream instance detached by failure handling): the item
-            // has nowhere to go and is accounted as lost.
-            self.stats.accounted_lost += 1;
-            return Duration::ZERO;
-        }
-        let spec = self.tasks[v.index()].spec;
-        let cid = match spec.route {
-            Route::Pointwise => {
-                // Channel to the same subtask index: pointwise expansion
-                // creates exactly one out channel per vertex on that edge.
-                out_channels[0]
-            }
-            Route::ByKey { divisor } => {
-                let consumers = out_channels.len() as u32;
-                let idx = (item.key / divisor) % consumers;
-                out_channels[idx as usize]
-            }
-        };
-        let c = self.rg.channel(cid);
-        let to = c.to;
-        let sender_worker = self.rg.worker(c.from);
-
-        if self.out_bufs[cid.index()].chained {
-            // §3.5.2: direct hand-over inside the chain thread.  The
-            // channel still reports (near-zero) latency so constraints
-            // remain evaluable.
-            if self.chan_latency_monitored[cid.index()] && exit >= self.next_tag_at[cid.index()] {
-                self.next_tag_at[cid.index()] = exit + self.cfg.measurement_interval;
-                self.record(
-                    self.rg.worker(to),
-                    Measurement::channel_latency(cid, 1.0),
-                );
-            }
-            return self.process_item(exit, to, item, true);
-        }
-
-        // Tag for channel-latency measurement (sender side, §3.3).
-        if self.chan_latency_monitored[cid.index()] && exit >= self.next_tag_at[cid.index()] {
-            self.next_tag_at[cid.index()] = exit + self.cfg.measurement_interval;
-            item.set_tag(exit);
-        }
-
-        let full = self.out_bufs[cid.index()].push(item, exit);
-        if full {
-            self.flush_channel(exit, cid, sender_worker);
-        }
-        Duration::ZERO
-    }
-
-    /// Flush the pending output buffer of a channel onto the wire.
-    fn flush_channel(&mut self, now: Time, cid: ChannelId, sender_worker: WorkerId) {
-        let size = self.out_bufs[cid.index()].size;
-        let (items, bytes, fill_start) = self.out_bufs[cid.index()].take();
-        if items.is_empty() {
-            return;
-        }
-        // Output buffer lifetime (§3.3), measured at the sender.
-        if self.chan_oblt_monitored[cid.index()] {
-            if let Some(start) = fill_start {
-                self.record(
-                    sender_worker,
-                    Measurement::output_buffer_lifetime(cid, now.since(start).as_micros() as f64),
-                );
-            }
-        }
-        let receiver_worker = self.rg.worker(self.rg.channel(cid).to);
-        let local = receiver_worker == sender_worker;
-        // Items larger than the buffer size span several physical buffers:
-        // they pay the per-buffer overhead once per sub-buffer.
-        let sub_buffers = (bytes.div_ceil(size.max(1) as u64)).max(1);
-        let nic = &mut self.nics[sender_worker.index()];
-        let mut arrival = Time::ZERO;
-        for i in 0..sub_buffers {
-            let chunk = if i + 1 == sub_buffers {
-                bytes - (bytes / sub_buffers) * (sub_buffers - 1)
-            } else {
-                bytes / sub_buffers
-            };
-            arrival = nic.send(now, chunk, local);
-        }
-        self.stats.bytes_on_wire += if local { 0 } else { bytes };
-        self.stats.buffers_flushed += sub_buffers;
-        // Extra delivery delay of the sending task type (zero for Nephele
-        // push channels; models HOP shuffle/HDFS handoff, §4.1.2).
-        let sender = self.rg.channel(cid).from;
-        let arrival = arrival + self.tasks[sender.index()].spec.downstream_delay;
-        self.queue.push(
-            arrival,
-            Ev::Deliver {
-                buffer: Buffer { channel: cid.0, items, bytes, flushed: now },
-            },
-        );
-    }
-
-    // ------------------------------------------------------------------
-    // Measurement plumbing
-    // ------------------------------------------------------------------
-
-    fn record(&mut self, worker: WorkerId, m: Measurement) {
-        if let Some(r) = self.reporters.get_mut(&worker) {
-            r.record(m);
-        }
-    }
-
-    fn record_channel_latency(&mut self, cid: ChannelId, tag_created: Time, enter: Time) {
-        let c = self.rg.channel(cid);
-        let (sw, rw) = (self.rg.worker(c.from), self.rg.worker(c.to));
-        // Cross-worker measurements see NTP skew (§3.3 requires clock
-        // synchronisation; §4.2 reports <2 ms).
-        let skew = self.skew_us[rw.index()] - self.skew_us[sw.index()];
-        let raw = enter.since(tag_created).as_micros() as i64 + skew;
-        self.record(rw, Measurement::channel_latency(cid, raw.max(0) as f64));
-    }
-
-    fn record_e2e(&mut self, us: f64) {
-        self.stats.e2e_count += 1;
-        self.stats.e2e_sum_us += us;
-        if us > self.stats.e2e_max_us {
-            self.stats.e2e_max_us = us;
-        }
-        if self.stats.e2e_samples.len() < E2E_RESERVOIR {
-            self.stats.e2e_samples.push(us);
-        } else {
-            let i = self.rng.below(self.stats.e2e_count) as usize;
-            if i < E2E_RESERVOIR {
-                self.stats.e2e_samples[i] = us;
-            }
-        }
-    }
-
-    fn on_reporter_flush(&mut self, now: Time, worker: WorkerId) {
-        if self.dead_workers[worker.index()] {
-            // The reporter process died with its worker: this event chain
-            // ends, and the resulting silence is exactly what the master's
-            // failure detector keys on.
-            self.flush_chains.remove(&worker.0);
-            return;
-        }
-        let (reports, next) = match self.reporters.get_mut(&worker) {
-            Some(r) => (r.flush_due(now), r.next_deadline()),
-            None => {
-                // Reporter removed by a QoS rebuild: this event chain ends
-                // (a later rebuild restarts it if the worker reports again).
-                self.flush_chains.remove(&worker.0);
-                return;
-            }
-        };
-        let delay = self.cfg.cluster.control_delay;
-        for report in reports {
-            self.queue.push(now + delay, Ev::ReportArrive { report });
-        }
-        if let Some(t) = next {
-            self.queue.push(t, Ev::ReporterFlush { worker: worker.0 });
-        }
-    }
-
-    fn on_manager_tick(&mut self, now: Time, worker: WorkerId) {
-        if self.dead_workers[worker.index()] {
-            self.tick_chains.remove(&worker.0);
-            return;
-        }
-        let actions = match self.managers.get_mut(&worker) {
-            Some(m) => m.act(now),
-            None => {
-                self.tick_chains.remove(&worker.0);
-                return;
-            }
-        };
-        let delay = self.cfg.cluster.control_delay;
-        for action in actions {
-            match &action {
-                Action::Unresolvable { manager, constraint, .. } => {
-                    self.stats.unresolvable_notices += 1;
-                    self.log(now, format!("unresolvable c{constraint} from {manager}"));
-                }
-                _ => self.queue.push(now + delay, Ev::ApplyAction { action }),
-            }
-        }
-        let next_tick = now + self.cfg.measurement_interval;
-        self.queue.push(next_tick, Ev::ManagerTick { worker: worker.0 });
-    }
-
-    fn on_cpu_sample(&mut self, now: Time, worker: WorkerId) {
-        if self.dead_workers[worker.index()] {
-            return;
-        }
-        let interval = self.cfg.measurement_interval;
-        let verts: Vec<VertexId> = self
-            .rg
-            .vertices_on_worker(worker)
-            .map(|v| v.id)
-            .collect();
-        for v in verts {
-            let busy = std::mem::replace(&mut self.tasks[v.index()].busy_accum, Duration::ZERO);
-            if self.vertex_monitored[v.index()] {
-                let util = busy.as_secs_f64() / interval.as_secs_f64();
-                self.record(worker, Measurement::task_cpu(v, util.min(1.0)));
-            }
-        }
-        self.queue.push(now + interval, Ev::CpuSample { worker: worker.0 });
-    }
-
-    // ------------------------------------------------------------------
-    // Action application (worker side)
-    // ------------------------------------------------------------------
-
-    fn on_apply(&mut self, now: Time, action: Action) {
-        match action {
-            Action::SetBufferSize { channel, worker, size, based_on } => {
-                let arb = self.arbiters.entry(worker).or_default();
-                match arb.offer(channel, size, based_on) {
-                    Verdict::Apply(size) => {
-                        self.out_bufs[channel.index()].size = size;
-                        self.stats.buffer_size_updates += 1;
-                        self.log(now, format!("buffer {channel} -> {size}"));
-                        if let Some(r) = self.reporters.get_mut(&worker) {
-                            r.note_buffer_update(channel, size);
-                        }
-                        // If the partial buffer already exceeds the new
-                        // size, it is due for flushing now.
-                        if self.out_bufs[channel.index()].pending_bytes >= size as u64 {
-                            self.flush_channel(now, channel, worker);
-                        }
-                    }
-                    Verdict::Discard => {}
-                }
-            }
-            Action::ChainTasks { worker: _, tasks, drain } => {
-                self.apply_chain(now, tasks, drain);
-            }
-            Action::ScaleTasks { group, delta, based_on } => {
-                self.apply_scaling(now, group, delta, based_on);
-            }
-            Action::Unresolvable { .. } => {}
-        }
-    }
-
-    fn apply_chain(&mut self, now: Time, tasks: Vec<VertexId>, drain: DrainPolicy) {
-        // Reject stale decisions: already-chained members, or members
-        // whose thread died in a crash that raced this action.
-        if tasks.len() < 2
-            || tasks
-                .iter()
-                .any(|v| self.tasks[v.index()].chain.is_some() || self.dead_tasks[v.index()])
-        {
-            return;
-        }
-        let gid = self.chain_members.len() as u32;
-        // Mark the channels between consecutive chain members as direct
-        // hand-over channels; flush whatever sits in their buffers first.
-        for pair in tasks.windows(2) {
-            if let Some(cid) = self.rg.channel_between(pair[0], pair[1]) {
-                let sender_worker = self.rg.worker(pair[0]);
-                if !self.out_bufs[cid.index()].is_empty() {
-                    self.flush_channel(now, cid, sender_worker);
-                }
-                self.out_bufs[cid.index()].chained = true;
-            }
-        }
-        if drain == DrainPolicy::Drop {
-            // §3.5.2 option 1: drop the queues between the chained tasks
-            // (all members except the head).
-            for &v in &tasks[1..] {
-                let t = &mut self.tasks[v.index()];
-                self.stats.dropped_on_chain +=
-                    t.queue.iter().map(|q| q.buffer.items.len() as u64).sum::<u64>();
-                t.queue.clear();
-                t.queued_bytes = 0;
-            }
-        }
-        let busy = tasks
-            .iter()
-            .map(|v| self.tasks[v.index()].busy_until)
-            .max()
-            .unwrap();
-        for &v in &tasks {
-            self.tasks[v.index()].chain = Some(gid);
-            self.tasks[v.index()].scheduled = false;
-        }
-        self.chain_members.push(tasks.clone());
-        self.chain_busy.push(busy);
-        self.chain_sched.push(false);
-        self.stats.chains_established += 1;
-        let chained: Vec<String> = tasks.iter().map(|v| v.to_string()).collect();
-        self.log(now, format!("chain {}", chained.join("+")));
-        self.try_schedule(now, tasks[0]);
-    }
-
-    // ------------------------------------------------------------------
-    // Failure injection, detection and recovery
-    // ------------------------------------------------------------------
-
-    fn log(&mut self, now: Time, msg: String) {
-        self.stats.action_log.push(format!("[{:>12.6}] {msg}", now.as_secs_f64()));
-    }
-
-    /// Account items destroyed by a crash.  Items emitted by a
-    /// `pin_unchainable` task survive in its durable materialisation
-    /// buffer (§3.6: pinning preserves materialisation points for fault
-    /// tolerance) and are stashed for replay, keyed by the channel they
-    /// were travelling; external ingress, items from unpinned producers,
-    /// and items a recovery could never replay anyway (recovery disabled,
-    /// or the channel already detached) are lost and accounted
-    /// explicitly.
-    fn classify_lost(&mut self, channel: u32, items: Vec<ItemRec>) {
-        if items.is_empty() {
-            return;
-        }
-        if channel != u32::MAX && self.cfg.recovery.enable_recovery {
-            let c = self.rg.channel(ChannelId(channel));
-            if !c.detached {
-                let jv = self.rg.vertex(c.from).job_vertex;
-                if self.job.vertex(jv).pin_unchainable {
-                    self.replay_stash.entry(channel).or_default().extend(items);
-                    return;
-                }
-            }
-        }
-        self.stats.accounted_lost += items.len() as u64;
-    }
-
-    /// Fail-stop crash of a worker: every task thread on it dies (input
-    /// queues, partial merge/window state and pending samples are gone),
-    /// the pending output buffers of its channels are dropped, chains
-    /// sharing a thread on it dissolve, and its NIC state resets.  The
-    /// lost items are classified per producer ([`Self::classify_lost`]).
-    fn on_worker_crash(&mut self, now: Time, w: WorkerId) {
-        if self.dead_workers[w.index()] {
-            return;
-        }
-        self.dead_workers[w.index()] = true;
-        self.stats.workers_crashed += 1;
-        self.log(now, format!("crash {w}"));
-        let victims: Vec<VertexId> = self.rg.vertices_on_worker(w).map(|v| v.id).collect();
-        // Chains die with their shared thread.  Members are always
-        // co-located, so every member of an affected group is a victim;
-        // dissolve the group and reset its direct hand-over channels so
-        // recovered instances restart as individual task threads.
-        let dead_groups: BTreeSet<u32> = victims
-            .iter()
-            .filter_map(|&v| self.tasks[v.index()].chain)
-            .collect();
-        for g in dead_groups {
-            let members = self.chain_members[g as usize].clone();
-            for pair in members.windows(2) {
-                if let Some(cid) = self.rg.channel_between(pair[0], pair[1]) {
-                    self.out_bufs[cid.index()].chained = false;
-                }
-            }
-            for &m in &members {
-                self.tasks[m.index()].chain = None;
-            }
-            self.chain_sched[g as usize] = false;
-        }
-        for &v in &victims {
-            self.dead_tasks[v.index()] = true;
-            let (queued, partial) = {
-                let t = &mut self.tasks[v.index()];
-                let queued: Vec<QueuedBuffer> = t.queue.drain(..).collect();
-                t.queued_bytes = 0;
-                t.scheduled = false;
-                t.pending_sample = None;
-                t.busy_accum = Duration::ZERO;
-                let partial: u64 = t
-                    .groups
-                    .values()
-                    .map(|g| g.values().map(|q| q.len() as u64).sum::<u64>())
-                    .sum();
-                let windowed: u64 = t.windows.values().map(|&(_, n, _)| n).sum();
-                t.groups.clear();
-                t.windows.clear();
-                (queued, partial + windowed)
-            };
-            // Partial merge-group and window state dies with the process.
-            self.stats.accounted_lost += partial;
-            for qb in queued {
-                self.classify_lost(qb.buffer.channel, qb.buffer.items);
-            }
-            // Pending sender-side output buffers of the dead task.
-            let outs: Vec<ChannelId> = self.rg.out_channels(v).to_vec();
-            for cid in outs {
-                let (items, _, _) = self.out_bufs[cid.index()].take();
-                self.classify_lost(cid.0, items);
-            }
-        }
-        self.nics[w.index()] = Nic::new(&self.cfg.cluster);
-    }
-
-    /// Master-side liveness sweep over the QoS report traffic: workers
-    /// silent past the detection timeout are declared failed and handed
-    /// to the recovery policy.
-    fn on_master_tick(&mut self, now: Time) {
-        let silent = self.detector.silent(now);
-        for w in silent {
-            self.detector.confirm(w);
-            self.handle_worker_failure(now, w);
-        }
-        self.queue.push(now + self.cfg.measurement_interval, Ev::MasterTick);
-    }
-
-    /// React to a detected worker failure.  The worker is fenced first
-    /// (even a falsely-suspected one is cut off before its instances are
-    /// redeployed), then either recovered or merely unregistered.
-    fn handle_worker_failure(&mut self, now: Time, w: WorkerId) {
-        self.stats.failovers += 1;
-        self.on_worker_crash(now, w);
-        if self.cfg.recovery.enable_recovery {
-            self.recover_worker(now, w);
-        } else {
-            self.unregister_worker(now, w);
-        }
-    }
-
-    /// Recovery: redeploy every dead instance of `w` onto the
-    /// least-loaded surviving worker, replay the items stashed at
-    /// `pin_unchainable` materialisation points onto their channels, and
-    /// re-run Algorithms 1–3 so reporters and managers track the new
-    /// placement.  From here the regular buffer → chaining → scaling
-    /// escalation works the residual violation off.
-    fn recover_worker(&mut self, now: Time, w: WorkerId) {
-        let victims = self.active_instances_on(w);
-        let live_workers: Vec<WorkerId> = (0..self.rg.num_workers)
-            .map(WorkerId)
-            .filter(|w| !self.dead_workers[w.index()])
-            .collect();
-        if live_workers.is_empty() {
-            // Nothing left to redeploy onto: degrade to unregistering.
-            self.log(now, format!("failover {w}: no surviving workers"));
-            self.unregister_worker(now, w);
-            return;
-        }
-        let mut load = vec![0u64; self.rg.num_workers as usize];
-        for rv in &self.rg.vertices {
-            if !self.dead_workers[rv.worker.index()]
-                && !self.dead_tasks[rv.id.index()]
-                && self.rg.members(rv.job_vertex).contains(&rv.id)
-            {
-                load[rv.worker.index()] += 1;
-            }
-        }
-        let mut reassigned = 0u64;
-        for &v in &victims {
-            let target = *live_workers
-                .iter()
-                .min_by_key(|t| (load[t.index()], t.0))
-                .expect("live_workers is non-empty");
-            if self.rg.reassign_instance(v, target).is_ok() {
-                load[target.index()] += 1;
-                let jv = self.rg.vertex(v).job_vertex;
-                self.tasks[v.index()] = TaskState::new(self.job_specs[jv.index()]);
-                self.dead_tasks[v.index()] = false;
-                reassigned += 1;
-            }
-        }
-        self.stats.instances_reassigned += reassigned;
-        // Replay from the materialisation points: each stashed buffer
-        // re-enters its channel (read back from the durable log, so only
-        // control-plane and local delivery latency apply).
-        let stash = std::mem::take(&mut self.replay_stash);
-        let delay = self.cfg.cluster.control_delay + self.cfg.cluster.local_latency;
-        let mut replayed = 0u64;
-        for (ch, items) in stash {
-            let c = self.rg.channel(ChannelId(ch));
-            if c.detached {
-                self.stats.accounted_lost += items.len() as u64;
-                continue;
-            }
-            if self.dead_tasks[c.to.index()] {
-                // The receiver sits on another still-dead worker: keep
-                // the entry for that worker's own failover (its recovery
-                // replays it; its unregistration accounts it).
-                self.replay_stash.insert(ch, items);
-                continue;
-            }
-            let bytes: u64 = items.iter().map(|i| i.bytes as u64).sum();
-            replayed += items.len() as u64;
-            self.queue.push(
-                now + delay,
-                Ev::Deliver {
-                    buffer: Buffer { channel: ch, items, bytes, flushed: now },
-                },
-            );
-        }
-        self.stats.items_replayed += replayed;
-        self.log(
-            now,
-            format!("failover {w}: reassigned {reassigned}, replayed {replayed}"),
-        );
-        self.after_topology_change("failover");
-    }
-
-    /// Recovery disabled: the master only unregisters the dead worker.
-    /// Its instances are detached from the routing tables (key-hash
-    /// routing re-partitions onto the survivors), the materialised
-    /// copies are never replayed, and stranded sender-side buffers on
-    /// the detached channels are accounted as lost.
-    fn unregister_worker(&mut self, now: Time, w: WorkerId) {
-        let victims = self.active_instances_on(w);
-        let mut detached = 0u64;
-        for &v in &victims {
-            let in_ch = self.rg.retire_instance(v);
-            for cid in in_ch {
-                let (items, _, _) = self.out_bufs[cid.index()].take();
-                self.stats.accounted_lost += items.len() as u64;
-            }
-            detached += 1;
-        }
-        self.stats.instances_detached += detached;
-        // Defensive: with recovery disabled nothing ever stashes, but an
-        // unregister must leave no phantom in-flight items behind.
-        let stash = std::mem::take(&mut self.replay_stash);
-        let stranded: u64 = stash.values().map(|v| v.len() as u64).sum();
-        self.stats.accounted_lost += stranded;
-        self.log(now, format!("failover {w}: detached {detached}"));
-        self.after_topology_change("failover");
-    }
-
-    /// Instances of `w` still in their group's routing tables —
-    /// scale-down-retired instances keep their worker assignment but are
-    /// no longer members and must not be resurrected or re-detached by a
-    /// failover.
-    fn active_instances_on(&self, w: WorkerId) -> Vec<VertexId> {
-        self.rg
-            .vertices_on_worker(w)
-            .filter(|rv| self.rg.members(rv.job_vertex).contains(&rv.id))
-            .map(|rv| rv.id)
-            .collect()
-    }
-
-    /// Post-rescale/failover bookkeeping shared by every topology-change
-    /// path: rebuild the QoS setup (Algorithms 1–3); on the
-    /// never-expected failure keep the dense per-element state sized to
-    /// the topology so indexing stays in bounds.
-    fn after_topology_change(&mut self, context: &str) {
-        if let Err(e) = self.rebuild_qos() {
-            eprintln!("warning: QoS rebuild after {context} failed: {e}");
-            let nc = self.rg.channels.len();
-            let nv = self.rg.vertices.len();
-            self.chan_latency_monitored.resize(nc, false);
-            self.chan_oblt_monitored.resize(nc, false);
-            self.vertex_monitored.resize(nv, false);
-            self.next_tag_at.resize(nc, Time::ZERO);
-            self.next_task_sample_at.resize(nv, Time::ZERO);
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // Elastic scaling (master side)
-    // ------------------------------------------------------------------
-
-    /// Apply an elastic-scaling action: spawn or retire instances of
-    /// `group`, rewire their channels, and rebuild the QoS setup so
-    /// reporters and managers track the new topology.  Decisions based on
-    /// measurement state older than the last applied rescale of the group
-    /// are discarded (first-wins, mirroring the §3.5.1 buffer update
-    /// arbitration).  Returns whether the topology changed.
-    pub fn apply_scaling(
-        &mut self,
-        now: Time,
-        group: JobVertexId,
-        delta: i32,
-        based_on: Time,
-    ) -> bool {
-        if let Some(&t) = self.last_scale.get(&group) {
-            if based_on <= t {
-                self.stats.scaling_rejected += 1;
-                return false;
-            }
-        }
-        let mut changed = false;
-        if delta > 0 {
-            // Warm-start sizes are identical for every step of one
-            // rescale: compute the per-edge map once.
-            let edge_size = self.edge_buffer_sizes();
-            for _ in 0..delta {
-                if !self.spawn_instance(group, &edge_size) {
-                    break;
-                }
-                changed = true;
-            }
-        } else {
-            for _ in 0..(-delta) {
-                if !self.retire_instance(now, group) {
-                    break;
-                }
-                changed = true;
-            }
-        }
-        if changed {
-            self.last_scale.insert(group, now);
-            self.log(
-                now,
-                format!("scale {} {delta:+} -> {}", group, self.rg.members(group).len()),
-            );
-            self.after_topology_change(&format!("scaling {group}"));
-        }
-        changed
-    }
-
-    /// Smallest adapted output-buffer size per job edge: the warm start
-    /// for channels created by a scale-up (the smallest size is what
-    /// adaptive buffer sizing converged to on that edge), falling back
-    /// to the engine default for edges with no channels.
-    fn edge_buffer_sizes(&self) -> BTreeMap<JobEdgeId, u32> {
-        let mut edge_size: BTreeMap<JobEdgeId, u32> = BTreeMap::new();
-        for c in &self.rg.channels {
-            if c.detached {
-                continue;
-            }
-            let size = self.out_bufs[c.id.index()].size;
-            edge_size
-                .entry(c.job_edge)
-                .and_modify(|s| *s = (*s).min(size))
-                .or_insert(size);
-        }
-        edge_size
-    }
-
-    /// Spawn one instance of `group` (scale-up step).
-    fn spawn_instance(&mut self, group: JobVertexId, edge_size: &BTreeMap<JobEdgeId, u32>) -> bool {
-        if self.rg.members(group).len() as u32 >= self.cfg.manager.scaling.max_parallelism {
-            self.stats.scaling_rejected += 1;
-            return false;
-        }
-        // §3.6: a pinned group is a materialisation point for fault
-        // tolerance; re-partitioning it would re-key the materialised
-        // buffers the recovery path replays from.  The manager-side
-        // target selection skips pinned groups too — this is the master's
-        // backstop against stale or buggy managers.
-        if self.job.vertex(group).pin_unchainable {
-            self.stats.scaling_rejected += 1;
-            return false;
-        }
-        // Only stateless semantics can be re-partitioned safely: a merge
-        // or window task keys its state by routing key, and re-hashing
-        // keys across a changed consumer count would split that state.
-        match self.job_specs[group.index()].semantics {
-            Semantics::Transform | Semantics::Sink => {}
-            _ => {
-                self.stats.scaling_rejected += 1;
-                return false;
-            }
-        }
-        // Spread new instances like the initial placement (subtask index
-        // modulo worker count), skipping crashed workers.
-        let idx = self.rg.members(group).len() as u32;
-        let worker = match (0..self.rg.num_workers)
-            .map(|k| WorkerId((idx + k) % self.rg.num_workers))
-            .find(|w| !self.dead_workers[w.index()])
-        {
-            Some(w) => w,
-            None => {
-                self.stats.scaling_rejected += 1;
-                return false;
-            }
-        };
-        match self.rg.add_instance(&self.job, group, worker) {
-            Ok((v, new_channels)) => {
-                self.tasks.push(TaskState::new(self.job_specs[group.index()]));
-                self.dead_tasks.push(false);
-                debug_assert_eq!(self.tasks.len(), self.rg.vertices.len());
-                debug_assert_eq!(v.index(), self.tasks.len() - 1);
-                for &cid in &new_channels {
-                    let je = self.rg.channel(cid).job_edge;
-                    let size = edge_size
-                        .get(&je)
-                        .copied()
-                        .unwrap_or(self.cfg.default_buffer_size);
-                    self.out_bufs.push(OutBufferState::new(size));
-                }
-                debug_assert_eq!(self.out_bufs.len(), self.rg.channels.len());
-                self.scaled_instances.entry(group).or_default().push(v);
-                self.stats.scale_ups += 1;
-                true
-            }
-            Err(_) => {
-                self.stats.scaling_rejected += 1;
-                false
-            }
-        }
-    }
-
-    /// Retire the most recently spawned *unchained* instance of `group`
-    /// (scale-down step).  Never drops below the original parallelism,
-    /// never touches chained tasks (they share a thread and cannot be
-    /// detached safely — but an older chained instance does not block
-    /// releasing a newer unchained one), and loses no items: pending
-    /// sender-side buffers on the detached channels are flushed first,
-    /// and the instance keeps draining its input queue through its
-    /// still-wired output channels.
-    fn retire_instance(&mut self, now: Time, group: JobVertexId) -> bool {
-        let tasks = &self.tasks;
-        let pos = self
-            .scaled_instances
-            .get(&group)
-            .and_then(|s| s.iter().rposition(|&v| tasks[v.index()].chain.is_none()));
-        let v = match pos {
-            Some(p) => self.scaled_instances.get_mut(&group).unwrap().remove(p),
-            None => {
-                self.stats.scaling_rejected += 1;
-                return false;
-            }
-        };
-        let in_ch: Vec<ChannelId> = self.rg.in_channels(v).to_vec();
-        for cid in in_ch {
-            if !self.out_bufs[cid.index()].is_empty() {
-                let sender = self.rg.worker(self.rg.channel(cid).from);
-                self.flush_channel(now, cid, sender);
-            }
-        }
-        self.rg.retire_instance(v);
-        // Drain whatever is already queued at the retiring instance.
-        self.try_schedule(now, v);
-        self.stats.scale_downs += 1;
-        true
-    }
-
-    /// Recompute the QoS setup (Algorithms 1-3) for the current runtime
-    /// graph and swap in fresh reporters and managers.  Managers restart
-    /// with empty measurement windows and re-acquire data within one
-    /// measurement interval; their believed buffer sizes are primed with
-    /// the actual worker-side sizes.
-    fn rebuild_qos(&mut self) -> Result<()> {
-        let qos = build_qos_runtime(
-            &self.job,
-            &self.rg,
-            &self.constraints,
-            &self.cfg,
-            &mut self.rng,
-        )?;
-        let n_channels = self.rg.channels.len();
-        let n_vertices = self.rg.vertices.len();
-        self.chan_latency_monitored = qos.chan_latency_monitored;
-        self.chan_oblt_monitored = qos.chan_oblt_monitored;
-        self.vertex_monitored = qos.vertex_monitored;
-        self.next_tag_at.resize(n_channels, Time::ZERO);
-        self.next_task_sample_at.resize(n_vertices, Time::ZERO);
-        self.reporters = qos.reporters;
-        self.managers = qos.managers;
-        let sizes: Vec<u32> = self.out_bufs.iter().map(|b| b.size).collect();
-        for mgr in self.managers.values_mut() {
-            let channels: Vec<ChannelId> = mgr
-                .subgraph()
-                .chains
-                .iter()
-                .flat_map(|c| c.channels().map(|cr| cr.id))
-                .collect();
-            for cid in channels {
-                mgr.prime_buffer_size(cid, sizes[cid.index()]);
-            }
-        }
-        // Start event chains for workers that gained a reporter/manager
-        // role (existing chains keep running through the swapped-in
-        // state; dead ones were pruned by the handlers).
-        let interval = self.cfg.measurement_interval;
-        let new_flush: Vec<u32> = self
-            .reporters
-            .keys()
-            .map(|w| w.0)
-            .filter(|w| !self.flush_chains.contains(w))
-            .collect();
-        for w in new_flush {
-            self.flush_chains.insert(w);
-            self.queue.push(self.queue.now() + interval, Ev::ReporterFlush { worker: w });
-        }
-        let new_ticks: Vec<u32> = self
-            .managers
-            .keys()
-            .map(|w| w.0)
-            .filter(|w| !self.tick_chains.contains(w))
-            .collect();
-        for w in new_ticks {
-            self.tick_chains.insert(w);
-            self.queue.push(self.queue.now() + interval, Ev::ManagerTick { worker: w });
-        }
-        // Reporter placement may have changed: re-sync the master's
-        // liveness tracking (workers gaining a role start a fresh grace
-        // period, workers losing it stop being monitored).
-        let reporter_workers: Vec<WorkerId> = self.reporters.keys().copied().collect();
-        self.detector.track(reporter_workers, self.queue.now());
-        self.stats.qos_rebuilds += 1;
         Ok(())
     }
 
@@ -1529,17 +349,12 @@ impl SimCluster {
         self.managers.iter_mut()
     }
 
-    pub fn buffer_size_of(&self, c: ChannelId) -> u32 {
+    pub fn buffer_size_of(&self, c: crate::graph::ids::ChannelId) -> u32 {
         self.out_bufs[c.index()].size
     }
 
-    pub fn is_chained(&self, c: ChannelId) -> bool {
+    pub fn is_chained(&self, c: crate::graph::ids::ChannelId) -> bool {
         self.out_bufs[c.index()].chained
-    }
-
-    pub fn mean_e2e_ms(&self) -> Option<f64> {
-        (self.stats.e2e_count > 0)
-            .then(|| self.stats.e2e_sum_us / self.stats.e2e_count as f64 / 1e3)
     }
 
     /// Current degree of parallelism of a task group.
@@ -1547,84 +362,9 @@ impl SimCluster {
         self.rg.members(jv).len()
     }
 
-    /// Items currently inside the pipeline: input queues, sender-side
-    /// output buffers, unmerged partial group state, and items stashed at
-    /// materialisation points awaiting replay.  Together with the sink
-    /// count and [`SimStats::accounted_lost`] this accounts for every
-    /// ingested item once all in-flight network events have drained.
-    pub fn items_in_flight(&self) -> u64 {
-        let queued: u64 = self
-            .tasks
-            .iter()
-            .map(|t| {
-                let q: u64 = t.queue.iter().map(|b| b.buffer.items.len() as u64).sum();
-                let merged: u64 = t
-                    .groups
-                    .values()
-                    .map(|g| g.values().map(|q| q.len() as u64).sum::<u64>())
-                    .sum();
-                q + merged
-            })
-            .sum();
-        let pending: u64 = self.out_bufs.iter().map(|b| b.pending.len() as u64).sum();
-        let stashed: u64 = self.replay_stash.values().map(|v| v.len() as u64).sum();
-        queued + pending + stashed
-    }
-
     /// Whether a worker has crashed (or been fenced by the master).
     pub fn worker_dead(&self, w: WorkerId) -> bool {
         self.dead_workers[w.index()]
-    }
-
-    /// Consistency of the runtime rewiring, checked by tests after
-    /// scale-up/scale-down: adjacency is bidirectional, no routing-table
-    /// entry points at a detached channel, every active non-source
-    /// instance is reachable, and the dense per-element state vectors
-    /// match the topology.
-    pub fn routing_consistent(&self) -> Result<()> {
-        if self.tasks.len() != self.rg.vertices.len() {
-            bail!("{} task states for {} vertices", self.tasks.len(), self.rg.vertices.len());
-        }
-        if self.out_bufs.len() != self.rg.channels.len() {
-            bail!("{} out buffers for {} channels", self.out_bufs.len(), self.rg.channels.len());
-        }
-        for v in &self.rg.vertices {
-            for &cid in self.rg.out_channels(v.id) {
-                let c = self.rg.channel(cid);
-                if c.detached {
-                    bail!("out routing of {} references detached {cid}", v.id);
-                }
-                if c.from != v.id {
-                    bail!("channel {cid} listed at {} but leaves {}", v.id, c.from);
-                }
-                if !self.rg.in_channels(c.to).contains(&cid) {
-                    bail!("channel {cid} missing from receiver {}'s inputs", c.to);
-                }
-            }
-            for &cid in self.rg.in_channels(v.id) {
-                let c = self.rg.channel(cid);
-                if c.detached {
-                    bail!("in routing of {} references detached {cid}", v.id);
-                }
-                if c.to != v.id {
-                    bail!("channel {cid} listed at {} but enters {}", v.id, c.to);
-                }
-                if !self.rg.out_channels(c.from).contains(&cid) {
-                    bail!("channel {cid} missing from sender {}'s outputs", c.from);
-                }
-            }
-        }
-        for jv in &self.job.vertices {
-            if jv.is_source {
-                continue;
-            }
-            for &m in self.rg.members(jv.id) {
-                if self.rg.in_channels(m).is_empty() {
-                    bail!("active instance {m} of {} is unreachable", jv.name);
-                }
-            }
-        }
-        Ok(())
     }
 }
 
@@ -1657,7 +397,7 @@ mod tests {
     #[test]
     fn scale_up_rewires_channels_and_data_flows_through_new_instance() {
         let (mut cluster, transcoder) = steady_cluster();
-        cluster.run(Duration::from_secs(30), None);
+        cluster.run(Duration::from_secs(30), None).unwrap();
         let t = cluster.now();
         cluster.routing_consistent().unwrap();
 
@@ -1675,7 +415,7 @@ mod tests {
         // Key-hash routing now spreads over three consumers: the new
         // instance must actually process items.
         let delivered_before = cluster.stats.e2e_count;
-        cluster.run(Duration::from_secs(90), None);
+        cluster.run(Duration::from_secs(90), None).unwrap();
         assert!(cluster.tasks[v.index()].busy_until > t, "new instance never ran");
         assert!(cluster.stats.e2e_count > delivered_before, "pipeline stalled");
         cluster.routing_consistent().unwrap();
@@ -1684,10 +424,10 @@ mod tests {
     #[test]
     fn scale_down_detaches_inputs_and_no_items_are_lost() {
         let (mut cluster, transcoder) = steady_cluster();
-        cluster.run(Duration::from_secs(30), None);
+        cluster.run(Duration::from_secs(30), None).unwrap();
         let t = cluster.now();
         assert!(cluster.apply_scaling(t, transcoder, 1, t));
-        cluster.run(Duration::from_secs(60), None);
+        cluster.run(Duration::from_secs(60), None).unwrap();
 
         let t2 = cluster.now();
         assert!(cluster.apply_scaling(t2, transcoder, -1, t2));
@@ -1700,7 +440,7 @@ mod tests {
         // in a queue/partial buffer — nothing vanishes with the retired
         // instance.
         cluster.stop_sources_at(t2);
-        cluster.run(Duration::from_secs(600), None);
+        cluster.run(Duration::from_secs(600), None).unwrap();
         let s = &cluster.stats;
         assert_eq!(s.dropped_on_chain, 0);
         assert_eq!(
@@ -1724,7 +464,7 @@ mod tests {
             EngineConfig::default().unoptimized(),
         )
         .unwrap();
-        cluster.run(Duration::from_secs(10), None);
+        cluster.run(Duration::from_secs(10), None).unwrap();
         let t = cluster.now();
         // Decoder: pointwise out edge -> not re-partitionable.
         assert!(!cluster.apply_scaling(t, decoder, 1, t));
@@ -1740,7 +480,7 @@ mod tests {
     #[test]
     fn stale_scale_decisions_are_discarded() {
         let (mut cluster, transcoder) = steady_cluster();
-        cluster.run(Duration::from_secs(30), None);
+        cluster.run(Duration::from_secs(30), None).unwrap();
         let t = cluster.now();
         assert!(cluster.apply_scaling(t, transcoder, 1, t));
         // A concurrent manager deciding on pre-rescale measurement state
@@ -1757,11 +497,109 @@ mod tests {
     #[test]
     fn scale_down_never_drops_below_original_parallelism() {
         let (mut cluster, transcoder) = steady_cluster();
-        cluster.run(Duration::from_secs(10), None);
+        cluster.run(Duration::from_secs(10), None).unwrap();
         let t = cluster.now();
         assert!(!cluster.apply_scaling(t, transcoder, -1, t));
         assert_eq!(cluster.parallelism_of(transcoder), 2);
         assert_eq!(cluster.stats.scaling_rejected, 1);
+    }
+
+    /// Regression for the scale-down/crash race: a crash that kills a
+    /// scaled instance leaves it in the elastic registry (recovery will
+    /// revive it), and a scale-down arriving on the same tick must skip
+    /// the dead instance instead of retiring the corpse (or panicking on
+    /// the registry lookup).  Its destroyed items go through the
+    /// accounted-loss path, so conservation still balances.
+    #[test]
+    fn scale_down_racing_a_crash_skips_the_dead_instance() {
+        let (mut cluster, transcoder) = steady_cluster();
+        cluster.run(Duration::from_secs(30), None).unwrap();
+        let t = cluster.now();
+        assert!(cluster.apply_scaling(t, transcoder, 1, t));
+        let v = *cluster.rg.members(transcoder).last().unwrap();
+        let w = cluster.rg.worker(v);
+        cluster.run(Duration::from_secs(90), None).unwrap();
+
+        // Crash the scaled instance's worker and scale down on the very
+        // same tick.
+        let t2 = cluster.now();
+        cluster.schedule_failures(&[FailureSpec { worker: w, at: t2.since(Time::ZERO) }]);
+        cluster
+            .run(t2.since(Time::ZERO) + Duration::from_micros(1), None)
+            .unwrap();
+        assert_eq!(cluster.stats.workers_crashed, 1);
+        let t3 = cluster.now();
+        let rejected_before = cluster.stats.scaling_rejected;
+        assert!(
+            !cluster.apply_scaling(t3, transcoder, -1, t3),
+            "dead instance must not be retired"
+        );
+        assert_eq!(cluster.stats.scaling_rejected, rejected_before + 1);
+        assert_eq!(cluster.stats.scale_downs, 0);
+        assert_eq!(cluster.parallelism_of(transcoder), 3);
+        cluster.routing_consistent().unwrap();
+
+        // After the master's failover revives the instance, the same
+        // scale-down applies cleanly.
+        cluster.run(Duration::from_secs(220), None).unwrap();
+        assert!(cluster.stats.instances_reassigned > 0, "{:?}", cluster.stats);
+        let t4 = cluster.now();
+        assert!(cluster.apply_scaling(t4, transcoder, -1, t4));
+        assert_eq!(cluster.parallelism_of(transcoder), 2);
+        cluster.routing_consistent().unwrap();
+
+        // Conservation: crash losses are in the explicit ledger.
+        let t5 = cluster.now();
+        cluster.stop_sources_at(t5);
+        cluster.run(Duration::from_secs(900), None).unwrap();
+        let s = &cluster.stats;
+        assert_eq!(
+            s.e2e_count + cluster.items_in_flight() + s.accounted_lost,
+            s.items_ingested,
+            "conservation broken across the crash/scale-down race: {s:?}"
+        );
+    }
+
+    /// Regression for the registry-entry-dropped half of the race: a
+    /// recovery-disabled failover detaches every scaled instance and
+    /// removes the group's (then empty) registry entry; a scale-down
+    /// arriving afterwards must reject through the normal path instead
+    /// of panicking on the missing entry.
+    #[test]
+    fn scale_down_after_failover_dropped_the_group_entry_is_rejected() {
+        let mut spec = SurgeSpec::default();
+        spec.surge_streams = 0;
+        let sj = surge_job(spec).unwrap();
+        let transcoder = sj.vertices.transcoder;
+        let mut cfg = EngineConfig::default().unoptimized();
+        cfg.recovery.enable_recovery = false;
+        let mut cluster = SimCluster::new(
+            sj.job,
+            sj.rg,
+            &sj.constraints,
+            sj.task_specs,
+            sj.sources,
+            cfg,
+        )
+        .unwrap();
+        cluster.run(Duration::from_secs(30), None).unwrap();
+        let t = cluster.now();
+        assert!(cluster.apply_scaling(t, transcoder, 1, t));
+        let v = *cluster.rg.members(transcoder).last().unwrap();
+        let w = cluster.rg.worker(v);
+        cluster.schedule_failures(&[FailureSpec { worker: w, at: Duration::from_secs(60) }]);
+        cluster.run(Duration::from_secs(180), None).unwrap();
+        assert_eq!(cluster.stats.failovers, 1);
+        assert!(cluster.stats.instances_detached > 0, "{:?}", cluster.stats);
+
+        let t2 = cluster.now();
+        let rejected_before = cluster.stats.scaling_rejected;
+        assert!(!cluster.apply_scaling(t2, transcoder, -1, t2));
+        assert_eq!(cluster.stats.scaling_rejected, rejected_before + 1);
+        assert_eq!(cluster.stats.scale_downs, 0);
+        // The survivor absorbed the whole key space.
+        assert_eq!(cluster.parallelism_of(transcoder), 1);
+        cluster.routing_consistent().unwrap();
     }
 
     /// Failover cluster with the standard spec and the given recovery
@@ -1793,7 +631,7 @@ mod tests {
         let (mut cluster, vx, failure) = failover_cluster(true);
         // Run past crash (90 s) and detection (~135 s: timeout 37.5 s on
         // 15 s master ticks).
-        cluster.run(Duration::from_secs(180), None);
+        cluster.run(Duration::from_secs(180), None).unwrap();
         assert!(cluster.worker_dead(failure.worker));
         assert_eq!(cluster.stats.workers_crashed, 1);
         assert_eq!(cluster.stats.failovers, 1);
@@ -1809,7 +647,7 @@ mod tests {
         // The redeployed instance processes the replayed backlog.
         let moved = *cluster.rg.members(vx.transcoder).last().unwrap();
         let before = cluster.stats.e2e_count;
-        cluster.run(Duration::from_secs(300), None);
+        cluster.run(Duration::from_secs(300), None).unwrap();
         assert!(cluster.tasks[moved.index()].busy_until > Time::ZERO);
         assert!(cluster.stats.e2e_count > before, "pipeline stalled after recovery");
     }
@@ -1817,7 +655,7 @@ mod tests {
     #[test]
     fn without_recovery_the_dead_instance_is_detached_and_losses_accounted() {
         let (mut cluster, vx, failure) = failover_cluster(false);
-        cluster.run(Duration::from_secs(180), None);
+        cluster.run(Duration::from_secs(180), None).unwrap();
         assert_eq!(cluster.stats.failovers, 1);
         assert_eq!(cluster.stats.instances_reassigned, 0);
         assert_eq!(cluster.stats.instances_detached, 1);
@@ -1834,10 +672,10 @@ mod tests {
     fn conservation_holds_across_crash_and_recovery() {
         for enable_recovery in [true, false] {
             let (mut cluster, _, _) = failover_cluster(enable_recovery);
-            cluster.run(Duration::from_secs(200), None);
+            cluster.run(Duration::from_secs(200), None).unwrap();
             let t = cluster.now();
             cluster.stop_sources_at(t);
-            cluster.run(Duration::from_secs(1800), None);
+            cluster.run(Duration::from_secs(1800), None).unwrap();
             let s = &cluster.stats;
             assert!(s.items_ingested > 0);
             assert_eq!(
@@ -1869,7 +707,7 @@ mod tests {
             EngineConfig::default().unoptimized(),
         )
         .unwrap();
-        cluster.run(Duration::from_secs(10), None);
+        cluster.run(Duration::from_secs(10), None).unwrap();
         let t = cluster.now();
         assert!(!cluster.apply_scaling(t, ingest, 1, t));
         assert_eq!(cluster.stats.scale_ups, 0);
@@ -1877,4 +715,3 @@ mod tests {
         assert_eq!(cluster.parallelism_of(ingest), 2);
     }
 }
-

@@ -1,0 +1,395 @@
+//! The simulator's event core: the typed event set, typed engine
+//! errors, and the index-keyed event arena with a bucketed time wheel
+//! that replaces the single binary heap of whole events
+//! (`super::events::EventQueue`, kept as the comparison baseline for
+//! `benches/hot_paths.rs`).
+//!
+//! Scheduling keys are small and fixed-size — `(Time, seq, arena
+//! index)` — so heap sifts and bucket drains move 24-byte keys instead
+//! of the full event payload (the old queue moved the entire [`Ev`],
+//! whose largest variants carry vectors, on every sift step).
+//! Near-term events (the dominant deliver/task-done traffic) land in a
+//! ~1 ms × 4096-bucket wheel with O(1) insertion; fixed-interval
+//! control-plane events (QoS report flushes, manager/liveness ticks,
+//! flow arrivals) hash into their future bucket and are filtered by
+//! wheel revolution on drain.  The total order is identical to the old
+//! queue — `(time, insertion seq)` — which the same-seed replay tests
+//! in `tests/determinism.rs` pin down byte-for-byte.
+
+use super::flow::Buffer;
+use crate::actions::Action;
+use crate::qos::sample::Report;
+use crate::util::time::Time;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::fmt;
+
+/// Simulator events.
+#[derive(Debug)]
+pub(crate) enum Ev {
+    /// One external packet arrives at its source task.
+    Packet { source: u32 },
+    /// A flushed buffer arrives at the receiving task's input queue.
+    Deliver { buffer: Buffer },
+    /// A task (or chain) thread finished its current buffer.
+    TaskDone { vertex: u32 },
+    ReporterFlush { worker: u32 },
+    ReportArrive { report: Report },
+    ManagerTick { worker: u32 },
+    CpuSample { worker: u32 },
+    ApplyAction { action: Action },
+    /// Fail-stop crash of a worker (injected by a
+    /// [`crate::config::FailureSpec`]): its task threads, NIC state and
+    /// buffered items are gone.
+    WorkerCrash { worker: u32 },
+    /// Master-side liveness sweep: declare workers whose QoS reports
+    /// went silent as failed and run the recovery policy.
+    MasterTick,
+}
+
+/// Typed engine errors.  A drained-queue bug used to be an `unwrap()`
+/// panic deep in the event loop; now it surfaces as an `Err` that tests
+/// and binaries can report and assert on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimError {
+    /// A queue produced no element where the scheduling invariants
+    /// guarantee one: the event queue after a successful peek, or a
+    /// chain member's input queue after it was selected for being
+    /// non-empty.
+    DrainedQueue { context: &'static str },
+}
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimError::DrainedQueue { context } => {
+                write!(f, "simulator queue drained unexpectedly: {context}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Bucket width: 2^10 µs ≈ 1 ms, matching the horizon of the dominant
+/// data-path events (deliveries, task wake-ups).
+const BUCKET_SHIFT: u32 = 10;
+/// 4096 buckets ≈ 4.2 s of horizon per wheel revolution.  Events beyond
+/// one revolution (15 s measurement-interval ticks, scheduled failures)
+/// hash into their slot and wait out the intervening revolutions.
+const WHEEL_BUCKETS: usize = 1 << 12;
+const WHEEL_MASK: u64 = (WHEEL_BUCKETS as u64) - 1;
+const WORD_BITS: usize = 64;
+const WORDS: usize = WHEEL_BUCKETS / WORD_BITS;
+
+/// Scheduling key: total order is `(at, seq)`; `idx` addresses the
+/// payload in the arena and does not participate in ordering.
+#[derive(Debug, Clone, Copy)]
+struct Key {
+    at: Time,
+    seq: u64,
+    idx: u32,
+}
+
+impl PartialEq for Key {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Key {}
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// Arena-keyed, wheel-bucketed event queue over virtual time.
+///
+/// Invariant: every pending event whose bucket index (`at >>
+/// BUCKET_SHIFT`) is `<= cursor` sits in `near`; everything later sits
+/// in its wheel slot (`bucket % WHEEL_BUCKETS`), possibly several
+/// revolutions out.  `near` is a small binary heap over keys, so pops
+/// preserve the exact `(time, insertion seq)` order of the legacy
+/// [`super::events::EventQueue`].
+pub struct EventCore<E> {
+    /// Payload arena: index-keyed slots with a free list, so payloads
+    /// are written once on push and moved once on pop.
+    slots: Vec<Option<E>>,
+    free: Vec<u32>,
+    /// Events due in buckets `<= cursor`, in exact pop order.
+    near: BinaryHeap<Reverse<Key>>,
+    wheel: Vec<Vec<Key>>,
+    /// One bit per wheel slot with pending entries.
+    occupied: [u64; WORDS],
+    /// Absolute index of the highest bucket already drained into `near`.
+    cursor: u64,
+    seq: u64,
+    now: Time,
+    len: usize,
+}
+
+impl<E> Default for EventCore<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventCore<E> {
+    pub fn new() -> Self {
+        EventCore {
+            slots: Vec::with_capacity(1024),
+            free: Vec::new(),
+            near: BinaryHeap::with_capacity(64),
+            wheel: (0..WHEEL_BUCKETS).map(|_| Vec::new()).collect(),
+            occupied: [0; WORDS],
+            cursor: 0,
+            seq: 0,
+            now: Time::ZERO,
+            len: 0,
+        }
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Schedule `ev` at absolute time `at`.  Scheduling in the past is a
+    /// logic error in the caller; we clamp to `now` to stay monotonic.
+    pub fn push(&mut self, at: Time, ev: E) {
+        let at = at.max(self.now);
+        let idx = match self.free.pop() {
+            Some(i) => {
+                self.slots[i as usize] = Some(ev);
+                i
+            }
+            None => {
+                self.slots.push(Some(ev));
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let key = Key { at, seq: self.seq, idx };
+        self.seq += 1;
+        self.len += 1;
+        let bucket = at.0 >> BUCKET_SHIFT;
+        if bucket <= self.cursor {
+            self.near.push(Reverse(key));
+        } else {
+            let slot = (bucket & WHEEL_MASK) as usize;
+            self.wheel[slot].push(key);
+            self.occupied[slot / WORD_BITS] |= 1 << (slot % WORD_BITS);
+        }
+    }
+
+    /// Pop the next event, advancing virtual time.
+    pub fn pop(&mut self) -> Option<(Time, E)> {
+        self.prime();
+        let Reverse(key) = self.near.pop()?;
+        self.now = key.at;
+        self.len -= 1;
+        let ev = self.slots[key.idx as usize]
+            .take()
+            .expect("arena slot occupied for every scheduled key");
+        self.free.push(key.idx);
+        Some((key.at, ev))
+    }
+
+    /// Peek at the next event time.
+    pub fn peek_time(&mut self) -> Option<Time> {
+        self.prime();
+        self.near.peek().map(|Reverse(k)| k.at)
+    }
+
+    /// Ensure `near` holds the globally next event (drain wheel buckets
+    /// in absolute order until it does).
+    fn prime(&mut self) {
+        while self.near.is_empty() && self.len > 0 {
+            self.advance();
+        }
+    }
+
+    /// Advance `cursor` to the next physically occupied bucket and move
+    /// the entries due in the current wheel revolution into `near`.
+    /// Entries hashed into the same slot for a later revolution stay
+    /// put (and keep the slot marked occupied).
+    fn advance(&mut self) {
+        let start = self.cursor + 1;
+        let dist = self.next_occupied_distance((start & WHEEL_MASK) as usize);
+        let bucket = start + dist as u64;
+        let slot = (bucket & WHEEL_MASK) as usize;
+        self.cursor = bucket;
+        let entries = &mut self.wheel[slot];
+        let mut i = 0;
+        while i < entries.len() {
+            if entries[i].at.0 >> BUCKET_SHIFT == bucket {
+                self.near.push(Reverse(entries.swap_remove(i)));
+            } else {
+                i += 1;
+            }
+        }
+        if entries.is_empty() {
+            self.occupied[slot / WORD_BITS] &= !(1 << (slot % WORD_BITS));
+        }
+    }
+
+    /// Cyclic distance from `start` to the nearest occupied wheel slot
+    /// (0 if `start` itself is occupied).
+    fn next_occupied_distance(&self, start: usize) -> usize {
+        let word0 = start / WORD_BITS;
+        let bit0 = start % WORD_BITS;
+        let masked = self.occupied[word0] & (!0u64 << bit0);
+        if masked != 0 {
+            return masked.trailing_zeros() as usize - bit0;
+        }
+        for w in 1..=WORDS {
+            let wi = (word0 + w) % WORDS;
+            let bits = if wi == word0 {
+                // Wrapped a full turn: only the bits before `start`.
+                self.occupied[word0] & !(!0u64 << bit0)
+            } else {
+                self.occupied[wi]
+            };
+            if bits != 0 {
+                let slot = wi * WORD_BITS + bits.trailing_zeros() as usize;
+                return (slot + WHEEL_BUCKETS - start) % WHEEL_BUCKETS;
+            }
+        }
+        unreachable!("advance() called with no occupied wheel bucket");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::events::EventQueue;
+    use crate::util::rng::Rng;
+    use crate::util::time::Duration;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q: EventCore<&str> = EventCore::new();
+        q.push(Time(30), "c");
+        q.push(Time(10), "a");
+        q.push(Time(20), "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn same_time_pops_in_insertion_order() {
+        let mut q = EventCore::new();
+        q.push(Time(5), 1);
+        q.push(Time(5), 2);
+        q.push(Time(5), 3);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn now_advances_and_past_push_clamps() {
+        let mut q = EventCore::new();
+        q.push(Time(100), "x");
+        assert_eq!(q.pop().unwrap().0, Time(100));
+        assert_eq!(q.now(), Time(100));
+        q.push(Time(50), "past");
+        assert_eq!(q.pop().unwrap().0, Time(100), "clamped to now");
+    }
+
+    #[test]
+    fn far_future_events_cross_wheel_revolutions() {
+        let mut q = EventCore::new();
+        // One revolution is 4096 * 1024 µs ≈ 4.19 s; spread events over
+        // ~9 revolutions, including two that share a physical slot.
+        let rev = (WHEEL_BUCKETS as u64) << BUCKET_SHIFT;
+        q.push(Time(3 * rev + 77), 3);
+        q.push(Time(77), 0);
+        q.push(Time(rev + 77), 1);
+        q.push(Time(9 * rev + 1), 9);
+        q.push(Time(2 * rev + 500_000), 2);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 9]);
+    }
+
+    #[test]
+    fn interleaved_pushes_during_drain_keep_global_order() {
+        let mut q = EventCore::new();
+        q.push(Time(1_000), "first");
+        assert_eq!(q.pop().unwrap().1, "first");
+        // now = 1000; same-bucket and next-bucket pushes interleave.
+        q.push(Time(1_500), "b");
+        q.push(Time(1_200), "a");
+        q.push(Time(40_000_000), "far");
+        q.push(Time(2_000), "c");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c", "far"]);
+    }
+
+    /// Differential test against the legacy binary-heap queue: any
+    /// interleaving of pushes and pops must produce the identical
+    /// (time, payload) sequence — the property the same-seed replay
+    /// suite relies on across the engine split.
+    #[test]
+    fn matches_the_reference_heap_queue_exactly() {
+        let mut rng = Rng::new(0xC0FFEE);
+        let mut a: EventQueue<u32> = EventQueue::new();
+        let mut b: EventCore<u32> = EventCore::new();
+        let mut pending = 0u32;
+        for round in 0..5_000u32 {
+            if pending == 0 || rng.chance(0.6) {
+                // Horizons from same-bucket to ~10 wheel revolutions.
+                let at = Time(a.now().0 + rng.below(40_000_000));
+                a.push(at, round);
+                b.push(at, round);
+                pending += 1;
+            } else {
+                assert_eq!(a.pop(), b.pop());
+                pending -= 1;
+            }
+        }
+        loop {
+            let (x, y) = (a.pop(), b.pop());
+            assert_eq!(x, y);
+            if x.is_none() {
+                break;
+            }
+        }
+        assert_eq!(a.now(), b.now());
+        assert!(b.is_empty());
+        let _ = Duration::ZERO;
+    }
+
+    #[test]
+    fn len_tracks_pending_events() {
+        let mut q = EventCore::new();
+        assert!(q.is_empty());
+        q.push(Time(10), 1);
+        q.push(Time(50_000_000), 2);
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn sim_error_displays_context() {
+        let e = SimError::DrainedQueue { context: "test path" };
+        assert!(e.to_string().contains("test path"));
+        // The anyhow shim converts through std::error::Error.
+        let _: anyhow::Error = e.into();
+    }
+}

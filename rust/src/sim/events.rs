@@ -1,6 +1,11 @@
-//! The discrete-event queue: a binary heap of `(Time, seq, E)` with a
-//! monotonic tiebreaker so same-time events pop in insertion order
-//! (deterministic replay).
+//! The legacy discrete-event queue: a binary heap of `(Time, seq, E)`
+//! with a monotonic tiebreaker so same-time events pop in insertion
+//! order (deterministic replay).
+//!
+//! The simulator now runs on [`super::engine::EventCore`] (an
+//! index-keyed event arena plus a bucketed time wheel with the same
+//! total order).  This heap is kept as the differential-test reference
+//! and the before/after baseline in `benches/hot_paths.rs`.
 
 use crate::util::time::Time;
 use std::cmp::Reverse;

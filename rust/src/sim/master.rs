@@ -1,0 +1,438 @@
+//! Master-side simulation: the liveness sweep over QoS report traffic,
+//! worker-failure handling (recovery or unregistration), elastic task
+//! scaling, and the Algorithms 1–3 driver that rebuilds the QoS setup
+//! after every topology change.
+//!
+//! Everything here models decisions the master node takes; the
+//! worker-side mechanics they act on live in [`super::worker`].
+
+use super::cluster::SimCluster;
+use super::engine::Ev;
+use super::flow::{Buffer, OutBufferState};
+use super::task::{Semantics, TaskState};
+use crate::graph::ids::{ChannelId, JobEdgeId, JobVertexId, VertexId, WorkerId};
+use crate::qos::setup::build_qos_runtime;
+use crate::util::time::Time;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+impl SimCluster {
+    /// Master-side liveness sweep over the QoS report traffic: workers
+    /// silent past the detection timeout are declared failed and handed
+    /// to the recovery policy.
+    pub(crate) fn on_master_tick(&mut self, now: Time) {
+        let silent = self.detector.silent(now);
+        for w in silent {
+            self.detector.confirm(w);
+            self.handle_worker_failure(now, w);
+        }
+        self.queue.push(now + self.cfg.measurement_interval, Ev::MasterTick);
+    }
+
+    /// React to a detected worker failure.  The worker is fenced first
+    /// (even a falsely-suspected one is cut off before its instances are
+    /// redeployed), then either recovered or merely unregistered.
+    fn handle_worker_failure(&mut self, now: Time, w: WorkerId) {
+        self.stats.failovers += 1;
+        self.on_worker_crash(now, w);
+        if self.cfg.recovery.enable_recovery {
+            self.recover_worker(now, w);
+        } else {
+            self.unregister_worker(now, w);
+        }
+    }
+
+    /// Recovery: redeploy every dead instance of `w` onto the
+    /// least-loaded surviving worker, replay the items stashed at
+    /// `pin_unchainable` materialisation points onto their channels, and
+    /// re-run Algorithms 1–3 so reporters and managers track the new
+    /// placement.  From here the regular buffer → chaining → scaling
+    /// escalation works the residual violation off.
+    fn recover_worker(&mut self, now: Time, w: WorkerId) {
+        let victims = self.active_instances_on(w);
+        let live_workers: Vec<WorkerId> = (0..self.rg.num_workers)
+            .map(WorkerId)
+            .filter(|w| !self.dead_workers[w.index()])
+            .collect();
+        if live_workers.is_empty() {
+            // Nothing left to redeploy onto: degrade to unregistering.
+            self.log(now, format!("failover {w}: no surviving workers"));
+            self.unregister_worker(now, w);
+            return;
+        }
+        let mut load = vec![0u64; self.rg.num_workers as usize];
+        for rv in &self.rg.vertices {
+            if !self.dead_workers[rv.worker.index()]
+                && !self.dead_tasks[rv.id.index()]
+                && self.rg.members(rv.job_vertex).contains(&rv.id)
+            {
+                load[rv.worker.index()] += 1;
+            }
+        }
+        let mut reassigned = 0u64;
+        for &v in &victims {
+            let target = *live_workers
+                .iter()
+                .min_by_key(|t| (load[t.index()], t.0))
+                .expect("live_workers is non-empty");
+            if self.rg.reassign_instance(v, target).is_ok() {
+                load[target.index()] += 1;
+                let jv = self.rg.vertex(v).job_vertex;
+                self.tasks[v.index()] = TaskState::new(self.job_specs[jv.index()]);
+                self.dead_tasks[v.index()] = false;
+                reassigned += 1;
+            }
+        }
+        self.stats.instances_reassigned += reassigned;
+        // Replay from the materialisation points: each stashed buffer
+        // re-enters its channel (read back from the durable log, so only
+        // control-plane and local delivery latency apply).
+        let stash = std::mem::take(&mut self.replay_stash);
+        let delay = self.cfg.cluster.control_delay + self.cfg.cluster.local_latency;
+        let mut replayed = 0u64;
+        for (ch, items) in stash {
+            let c = self.rg.channel(ChannelId(ch));
+            if c.detached {
+                self.stats.accounted_lost += items.len() as u64;
+                continue;
+            }
+            if self.dead_tasks[c.to.index()] {
+                // The receiver sits on another still-dead worker: keep
+                // the entry for that worker's own failover (its recovery
+                // replays it; its unregistration accounts it).
+                self.replay_stash.insert(ch, items);
+                continue;
+            }
+            let bytes: u64 = items.iter().map(|i| i.bytes as u64).sum();
+            replayed += items.len() as u64;
+            self.queue.push(
+                now + delay,
+                Ev::Deliver {
+                    buffer: Buffer { channel: ch, items, bytes, flushed: now },
+                },
+            );
+        }
+        self.stats.items_replayed += replayed;
+        self.log(
+            now,
+            format!("failover {w}: reassigned {reassigned}, replayed {replayed}"),
+        );
+        self.after_topology_change("failover");
+    }
+
+    /// Recovery disabled: the master only unregisters the dead worker.
+    /// Its instances are detached from the routing tables (key-hash
+    /// routing re-partitions onto the survivors), the materialised
+    /// copies are never replayed, and stranded sender-side buffers on
+    /// the detached channels are accounted as lost.
+    fn unregister_worker(&mut self, now: Time, w: WorkerId) {
+        let victims = self.active_instances_on(w);
+        let mut detached = 0u64;
+        for &v in &victims {
+            let in_ch = self.rg.retire_instance(v);
+            for cid in in_ch {
+                let (items, _, _) = self.out_bufs[cid.index()].take();
+                self.stats.accounted_lost += items.len() as u64;
+            }
+            detached += 1;
+        }
+        self.stats.instances_detached += detached;
+        // Detached instances leave the elastic registry for good: a
+        // scale-down that races this failover must find them gone (or
+        // the whole group entry gone) and reject cleanly instead of
+        // double-retiring a corpse.
+        for instances in self.scaled_instances.values_mut() {
+            instances.retain(|v| !victims.contains(v));
+        }
+        self.scaled_instances.retain(|_, instances| !instances.is_empty());
+        // Defensive: with recovery disabled nothing ever stashes, but an
+        // unregister must leave no phantom in-flight items behind.
+        let stash = std::mem::take(&mut self.replay_stash);
+        let stranded: u64 = stash.values().map(|v| v.len() as u64).sum();
+        self.stats.accounted_lost += stranded;
+        self.log(now, format!("failover {w}: detached {detached}"));
+        self.after_topology_change("failover");
+    }
+
+    /// Instances of `w` still in their group's routing tables —
+    /// scale-down-retired instances keep their worker assignment but are
+    /// no longer members and must not be resurrected or re-detached by a
+    /// failover.
+    fn active_instances_on(&self, w: WorkerId) -> Vec<VertexId> {
+        self.rg
+            .vertices_on_worker(w)
+            .filter(|rv| self.rg.members(rv.job_vertex).contains(&rv.id))
+            .map(|rv| rv.id)
+            .collect()
+    }
+
+    /// Post-rescale/failover bookkeeping shared by every topology-change
+    /// path: rebuild the QoS setup (Algorithms 1–3); on the
+    /// never-expected failure keep the dense per-element state sized to
+    /// the topology so indexing stays in bounds.
+    fn after_topology_change(&mut self, context: &str) {
+        if let Err(e) = self.rebuild_qos() {
+            eprintln!("warning: QoS rebuild after {context} failed: {e}");
+            let nc = self.rg.channels.len();
+            let nv = self.rg.vertices.len();
+            self.chan_latency_monitored.resize(nc, false);
+            self.chan_oblt_monitored.resize(nc, false);
+            self.vertex_monitored.resize(nv, false);
+            self.next_tag_at.resize(nc, Time::ZERO);
+            self.next_task_sample_at.resize(nv, Time::ZERO);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Elastic scaling (master side)
+    // ------------------------------------------------------------------
+
+    /// Apply an elastic-scaling action: spawn or retire instances of
+    /// `group`, rewire their channels, and rebuild the QoS setup so
+    /// reporters and managers track the new topology.  Decisions based on
+    /// measurement state older than the last applied rescale of the group
+    /// are discarded (first-wins, mirroring the §3.5.1 buffer update
+    /// arbitration).  Returns whether the topology changed.
+    pub fn apply_scaling(
+        &mut self,
+        now: Time,
+        group: JobVertexId,
+        delta: i32,
+        based_on: Time,
+    ) -> bool {
+        if let Some(&t) = self.last_scale.get(&group) {
+            if based_on <= t {
+                self.stats.scaling_rejected += 1;
+                return false;
+            }
+        }
+        let mut changed = false;
+        if delta > 0 {
+            // Warm-start sizes are identical for every step of one
+            // rescale: compute the per-edge map once.
+            let edge_size = self.edge_buffer_sizes();
+            for _ in 0..delta {
+                if !self.spawn_instance(group, &edge_size) {
+                    break;
+                }
+                changed = true;
+            }
+        } else {
+            for _ in 0..(-delta) {
+                if !self.retire_instance(now, group) {
+                    break;
+                }
+                changed = true;
+            }
+        }
+        if changed {
+            self.last_scale.insert(group, now);
+            self.log(
+                now,
+                format!("scale {} {delta:+} -> {}", group, self.rg.members(group).len()),
+            );
+            self.after_topology_change(&format!("scaling {group}"));
+        }
+        changed
+    }
+
+    /// Smallest adapted output-buffer size per job edge: the warm start
+    /// for channels created by a scale-up (the smallest size is what
+    /// adaptive buffer sizing converged to on that edge), falling back
+    /// to the engine default for edges with no channels.
+    fn edge_buffer_sizes(&self) -> BTreeMap<JobEdgeId, u32> {
+        let mut edge_size: BTreeMap<JobEdgeId, u32> = BTreeMap::new();
+        for c in &self.rg.channels {
+            if c.detached {
+                continue;
+            }
+            let size = self.out_bufs[c.id.index()].size;
+            edge_size
+                .entry(c.job_edge)
+                .and_modify(|s| *s = (*s).min(size))
+                .or_insert(size);
+        }
+        edge_size
+    }
+
+    /// Spawn one instance of `group` (scale-up step).
+    fn spawn_instance(&mut self, group: JobVertexId, edge_size: &BTreeMap<JobEdgeId, u32>) -> bool {
+        if self.rg.members(group).len() as u32 >= self.cfg.manager.scaling.max_parallelism {
+            self.stats.scaling_rejected += 1;
+            return false;
+        }
+        // §3.6: a pinned group is a materialisation point for fault
+        // tolerance; re-partitioning it would re-key the materialised
+        // buffers the recovery path replays from.  The manager-side
+        // target selection skips pinned groups too — this is the master's
+        // backstop against stale or buggy managers.
+        if self.job.vertex(group).pin_unchainable {
+            self.stats.scaling_rejected += 1;
+            return false;
+        }
+        // Only stateless semantics can be re-partitioned safely: a merge
+        // or window task keys its state by routing key, and re-hashing
+        // keys across a changed consumer count would split that state.
+        match self.job_specs[group.index()].semantics {
+            Semantics::Transform | Semantics::Sink => {}
+            _ => {
+                self.stats.scaling_rejected += 1;
+                return false;
+            }
+        }
+        // Spread new instances like the initial placement (subtask index
+        // modulo worker count), skipping crashed workers.
+        let idx = self.rg.members(group).len() as u32;
+        let worker = match (0..self.rg.num_workers)
+            .map(|k| WorkerId((idx + k) % self.rg.num_workers))
+            .find(|w| !self.dead_workers[w.index()])
+        {
+            Some(w) => w,
+            None => {
+                self.stats.scaling_rejected += 1;
+                return false;
+            }
+        };
+        match self.rg.add_instance(&self.job, group, worker) {
+            Ok((v, new_channels)) => {
+                self.tasks.push(TaskState::new(self.job_specs[group.index()]));
+                self.dead_tasks.push(false);
+                debug_assert_eq!(self.tasks.len(), self.rg.vertices.len());
+                debug_assert_eq!(v.index(), self.tasks.len() - 1);
+                for &cid in &new_channels {
+                    let je = self.rg.channel(cid).job_edge;
+                    let size = edge_size
+                        .get(&je)
+                        .copied()
+                        .unwrap_or(self.cfg.default_buffer_size);
+                    self.out_bufs.push(OutBufferState::new(size));
+                }
+                debug_assert_eq!(self.out_bufs.len(), self.rg.channels.len());
+                self.scaled_instances.entry(group).or_default().push(v);
+                self.stats.scale_ups += 1;
+                true
+            }
+            Err(_) => {
+                self.stats.scaling_rejected += 1;
+                false
+            }
+        }
+    }
+
+    /// Retire the most recently spawned *unchained, live* instance of
+    /// `group` (scale-down step).  Never drops below the original
+    /// parallelism, never touches chained tasks (they share a thread and
+    /// cannot be detached safely — but an older chained instance does
+    /// not block releasing a newer unchained one), never picks an
+    /// instance whose thread died in a crash (the failure path owns
+    /// those: recovery revives them, unregistration has already detached
+    /// them and dropped them — possibly the whole group entry — from the
+    /// registry, and their destroyed items went through the
+    /// accounted-loss path), and loses no items: pending sender-side
+    /// buffers on the detached channels are flushed first, and the
+    /// instance keeps draining its input queue through its still-wired
+    /// output channels.
+    fn retire_instance(&mut self, now: Time, group: JobVertexId) -> bool {
+        let v = {
+            let tasks = &self.tasks;
+            let dead_tasks = &self.dead_tasks;
+            match self.scaled_instances.get_mut(&group) {
+                Some(instances) => instances
+                    .iter()
+                    .rposition(|&v| {
+                        tasks[v.index()].chain.is_none() && !dead_tasks[v.index()]
+                    })
+                    .map(|p| instances.remove(p)),
+                // The group's entry is gone (a failure already detached
+                // every scaled instance): reject, don't panic.
+                None => None,
+            }
+        };
+        let v = match v {
+            Some(v) => v,
+            None => {
+                self.stats.scaling_rejected += 1;
+                return false;
+            }
+        };
+        let in_ch: Vec<ChannelId> = self.rg.in_channels(v).to_vec();
+        for cid in in_ch {
+            if !self.out_bufs[cid.index()].is_empty() {
+                let sender = self.rg.worker(self.rg.channel(cid).from);
+                self.flush_channel(now, cid, sender);
+            }
+        }
+        self.rg.retire_instance(v);
+        // Drain whatever is already queued at the retiring instance.
+        self.try_schedule(now, v);
+        self.stats.scale_downs += 1;
+        true
+    }
+
+    /// Recompute the QoS setup (Algorithms 1-3) for the current runtime
+    /// graph and swap in fresh reporters and managers.  Managers restart
+    /// with empty measurement windows and re-acquire data within one
+    /// measurement interval; their believed buffer sizes are primed with
+    /// the actual worker-side sizes.
+    fn rebuild_qos(&mut self) -> Result<()> {
+        let qos = build_qos_runtime(
+            &self.job,
+            &self.rg,
+            &self.constraints,
+            &self.cfg,
+            &mut self.rng,
+        )?;
+        let n_channels = self.rg.channels.len();
+        let n_vertices = self.rg.vertices.len();
+        self.chan_latency_monitored = qos.chan_latency_monitored;
+        self.chan_oblt_monitored = qos.chan_oblt_monitored;
+        self.vertex_monitored = qos.vertex_monitored;
+        self.next_tag_at.resize(n_channels, Time::ZERO);
+        self.next_task_sample_at.resize(n_vertices, Time::ZERO);
+        self.reporters = qos.reporters;
+        self.managers = qos.managers;
+        let sizes: Vec<u32> = self.out_bufs.iter().map(|b| b.size).collect();
+        for mgr in self.managers.values_mut() {
+            let channels: Vec<ChannelId> = mgr
+                .subgraph()
+                .chains
+                .iter()
+                .flat_map(|c| c.channels().map(|cr| cr.id))
+                .collect();
+            for cid in channels {
+                mgr.prime_buffer_size(cid, sizes[cid.index()]);
+            }
+        }
+        // Start event chains for workers that gained a reporter/manager
+        // role (existing chains keep running through the swapped-in
+        // state; dead ones were pruned by the handlers).
+        let interval = self.cfg.measurement_interval;
+        let new_flush: Vec<u32> = self
+            .reporters
+            .keys()
+            .map(|w| w.0)
+            .filter(|w| !self.flush_chains.contains(w))
+            .collect();
+        for w in new_flush {
+            self.flush_chains.insert(w);
+            self.queue.push(self.queue.now() + interval, Ev::ReporterFlush { worker: w });
+        }
+        let new_ticks: Vec<u32> = self
+            .managers
+            .keys()
+            .map(|w| w.0)
+            .filter(|w| !self.tick_chains.contains(w))
+            .collect();
+        for w in new_ticks {
+            self.tick_chains.insert(w);
+            self.queue.push(self.queue.now() + interval, Ev::ManagerTick { worker: w });
+        }
+        // Reporter placement may have changed: re-sync the master's
+        // liveness tracking (workers gaining a role start a fresh grace
+        // period, workers losing it stop being monitored).
+        let reporter_workers: Vec<WorkerId> = self.reporters.keys().copied().collect();
+        self.detector.track(reporter_workers, self.queue.now());
+        self.stats.qos_rebuilds += 1;
+        Ok(())
+    }
+}

@@ -10,15 +10,27 @@
 //! The full evaluation configuration (n=200 workers, m=800, 6400 video
 //! streams) simulates in seconds on one core because events are per
 //! buffer flush / item batch, not per byte.
+//!
+//! The engine is split by responsibility behind the [`SimCluster`]
+//! facade (DESIGN.md §6): [`engine`] (event arena + time wheel, typed
+//! errors), [`worker`] (data path and crash destruction), [`master`]
+//! (liveness sweep, recovery, scaling, QoS rebuilds) and [`accounting`]
+//! (the item-conservation ledger).
 
+pub mod accounting;
 pub mod cluster;
+pub mod engine;
 pub mod events;
 pub mod flow;
+pub mod master;
 pub mod metrics;
 pub mod net;
 pub mod task;
+pub mod worker;
 
+pub use accounting::SimStats;
 pub use cluster::{SimCluster, SimObserver};
+pub use engine::{EventCore, SimError};
 pub use events::EventQueue;
 pub use flow::{Buffer, ItemRec};
 pub use net::Nic;

@@ -147,7 +147,10 @@ impl TaskState {
     pub fn new(spec: TaskSpec) -> TaskState {
         TaskState {
             spec,
-            queue: VecDeque::new(),
+            // Preallocated: input queues are the busiest per-task
+            // collection; a handful of slots absorbs the steady-state
+            // depth without regrowth on the delivery path.
+            queue: VecDeque::with_capacity(8),
             queued_bytes: 0,
             busy_until: Time::ZERO,
             scheduled: false,

@@ -1,0 +1,660 @@
+//! Worker-side simulation: the per-worker data path (source packets,
+//! input queues, task/chain threads, output buffers, NIC egress), the
+//! measurement plumbing feeding the QoS reporters, worker-local action
+//! application, and fail-stop crash destruction.
+//!
+//! Everything here models what one worker process does; the master-side
+//! reactions (liveness sweep, recovery, elastic scaling) live in
+//! [`super::master`].
+
+use super::cluster::SimCluster;
+use super::engine::{Ev, SimError};
+use super::flow::{Buffer, ItemRec};
+use super::net::Nic;
+use super::task::{QueuedBuffer, Route, Semantics};
+use crate::actions::arbiter::Verdict;
+use crate::actions::chaining::DrainPolicy;
+use crate::actions::Action;
+use crate::graph::ids::{ChannelId, VertexId, WorkerId};
+use crate::qos::sample::Measurement;
+use crate::util::time::{Duration, Time};
+use std::collections::BTreeSet;
+
+impl SimCluster {
+    // ------------------------------------------------------------------
+    // Data path
+    // ------------------------------------------------------------------
+
+    pub(crate) fn on_packet(&mut self, now: Time, source: u32) {
+        let s = self.sources[source as usize];
+        let batch = s.batch.max(1);
+        let item = ItemRec::new(s.key, s.bytes, now);
+        // Failure handling can shrink the target group; external streams
+        // reconnect to a surviving member (index modulo live members).
+        let members = self.rg.members(s.target);
+        let v = if members.is_empty() {
+            None
+        } else {
+            Some(members[s.target_subtask as usize % members.len()])
+        };
+        self.stats.items_ingested += batch as u64;
+        let mut next = now + s.interval.max(Duration::from_micros(1));
+        match v {
+            Some(v) if !self.dead_tasks[v.index()] => {
+                // External ingress: no channel, the items land directly in
+                // the source task's input queue as one buffer.
+                let buffer = Buffer {
+                    channel: u32::MAX,
+                    items: vec![item; batch as usize],
+                    bytes: s.bytes * batch as u64,
+                    flushed: now,
+                };
+                self.enqueue_buffer(now, v, buffer);
+                if let Some(bound) = s.throttle {
+                    let worker = self.rg.worker(v);
+                    let backlog = self.nics[worker.index()].backlog(now);
+                    if backlog > bound {
+                        // Pause until the egress backlog drains back to the
+                        // flow control bound (TCP window behaviour).
+                        next = now + (backlog - bound).max(s.interval);
+                    }
+                }
+            }
+            _ => {
+                // The stream's endpoint is dead (or its whole group is
+                // gone): items are lost at the cluster edge — there is no
+                // materialisation point upstream of an external source.
+                self.stats.accounted_lost += batch as u64;
+            }
+        }
+        if next < self.source_end {
+            self.queue.push(next, Ev::Packet { source });
+        }
+    }
+
+    pub(crate) fn on_deliver(&mut self, now: Time, buffer: Buffer) {
+        let v = self.rg.channel(ChannelId(buffer.channel)).to;
+        if self.dead_tasks[v.index()] {
+            // The receiving task thread is gone: the buffer is lost on
+            // arrival (items from pinned producers survive in the
+            // materialisation buffer and await replay).
+            self.classify_lost(buffer.channel, buffer.items);
+            return;
+        }
+        self.stats.items_delivered += buffer.items.len() as u64;
+        self.enqueue_buffer(now, v, buffer);
+    }
+
+    pub(crate) fn enqueue_buffer(&mut self, now: Time, v: VertexId, buffer: Buffer) {
+        let t = &mut self.tasks[v.index()];
+        t.queued_bytes += buffer.bytes;
+        t.queue.push_back(QueuedBuffer { buffer, arrived: now });
+        self.try_schedule(now, v);
+    }
+
+    pub(crate) fn try_schedule(&mut self, now: Time, v: VertexId) {
+        if self.dead_tasks[v.index()] {
+            return;
+        }
+        let chain = self.tasks[v.index()].chain;
+        match chain {
+            Some(g) => {
+                let g = g as usize;
+                if self.chain_sched[g] {
+                    return;
+                }
+                if self.chain_members[g]
+                    .iter()
+                    .all(|&m| self.tasks[m.index()].queue.is_empty())
+                {
+                    return;
+                }
+                self.chain_sched[g] = true;
+                let at = self.chain_busy[g].max(now);
+                // The head represents the chain thread in TaskDone events.
+                let head = self.chain_members[g][0];
+                self.queue.push(at, Ev::TaskDone { vertex: head.0 });
+            }
+            None => {
+                let t = &mut self.tasks[v.index()];
+                if t.scheduled || t.queue.is_empty() {
+                    return;
+                }
+                let at = t.busy_until.max(now);
+                if at <= now {
+                    // Idle task, work available right now: process inline
+                    // instead of a same-time heap round-trip (the common
+                    // case on the delivery path).
+                    self.plain_task_done(now, v);
+                } else {
+                    t.scheduled = true;
+                    self.queue.push(at, Ev::TaskDone { vertex: v.0 });
+                }
+            }
+        }
+    }
+
+    pub(crate) fn on_task_done(&mut self, now: Time, v: VertexId) -> Result<(), SimError> {
+        // Stale wake-ups for crashed threads (chain members are always
+        // co-located, so the head's flag covers its whole chain).
+        if self.dead_tasks[v.index()] {
+            return Ok(());
+        }
+        match self.tasks[v.index()].chain {
+            Some(g) => self.chain_task_done(now, g as usize),
+            None => {
+                self.plain_task_done(now, v);
+                Ok(())
+            }
+        }
+    }
+
+    fn plain_task_done(&mut self, now: Time, v: VertexId) {
+        // A stale wake-up (e.g. scheduled before this task was chained or
+        // while its frontier moved) must not start work early.
+        if now < self.tasks[v.index()].busy_until {
+            let at = self.tasks[v.index()].busy_until;
+            self.queue.push(at, Ev::TaskDone { vertex: v.0 });
+            return;
+        }
+        self.tasks[v.index()].scheduled = false;
+        let qb = match self.tasks[v.index()].queue.pop_front() {
+            Some(qb) => qb,
+            None => return,
+        };
+        self.tasks[v.index()].queued_bytes -= qb.buffer.bytes;
+        let spent = self.process_buffer(now, v, qb);
+        let t = &mut self.tasks[v.index()];
+        t.busy_until = now + spent;
+        t.busy_accum += spent;
+        if !t.queue.is_empty() {
+            t.scheduled = true;
+            let at = t.busy_until;
+            self.queue.push(at, Ev::TaskDone { vertex: v.0 });
+        }
+    }
+
+    fn chain_task_done(&mut self, now: Time, g: usize) -> Result<(), SimError> {
+        if now < self.chain_busy[g] {
+            let at = self.chain_busy[g];
+            let head = self.chain_members[g][0];
+            self.queue.push(at, Ev::TaskDone { vertex: head.0 });
+            return Ok(());
+        }
+        self.chain_sched[g] = false;
+        // Serve the most-downstream member with a backlog first (drains
+        // pre-chaining queues in pipeline order).
+        let member = self
+            .chain_members[g]
+            .iter()
+            .rev()
+            .copied()
+            .find(|m| !self.tasks[m.index()].queue.is_empty());
+        let v = match member {
+            Some(v) => v,
+            None => return Ok(()),
+        };
+        let qb = self.tasks[v.index()].queue.pop_front().ok_or(SimError::DrainedQueue {
+            context: "chain member selected for a non-empty queue had none",
+        })?;
+        self.tasks[v.index()].queued_bytes -= qb.buffer.bytes;
+        let spent = self.process_buffer(now, v, qb);
+        self.chain_busy[g] = now + spent;
+        if self.chain_members[g]
+            .iter()
+            .any(|&m| !self.tasks[m.index()].queue.is_empty())
+        {
+            self.chain_sched[g] = true;
+            let at = self.chain_busy[g];
+            let head = self.chain_members[g][0];
+            self.queue.push(at, Ev::TaskDone { vertex: head.0 });
+        }
+        Ok(())
+    }
+
+    /// Process one input buffer at task `v` starting at `now`.  Returns
+    /// the total thread time consumed (including inline chained
+    /// successors).
+    fn process_buffer(&mut self, now: Time, v: VertexId, qb: QueuedBuffer) -> Duration {
+        let mut cursor = Duration::ZERO;
+        let channel = qb.buffer.channel;
+        for item in qb.buffer.items {
+            let enter = now + cursor;
+            // Tag evaluation: channel latency measured just before the
+            // item enters the user code (§3.3).
+            if channel != u32::MAX {
+                if let Some(tag_created) = item.tag() {
+                    self.record_channel_latency(ChannelId(channel), tag_created, enter);
+                }
+            }
+            cursor += self.process_item(enter, v, item, channel != u32::MAX);
+        }
+        cursor
+    }
+
+    /// Run one item through `v`'s user code (and inline through chained
+    /// successors).  Returns thread time consumed.
+    pub(crate) fn process_item(
+        &mut self,
+        enter: Time,
+        v: VertexId,
+        item: ItemRec,
+        measurable: bool,
+    ) -> Duration {
+        let spec = self.tasks[v.index()].spec;
+        // §3.2.1 task-latency sampling: arm on entry (sources excluded —
+        // task latency is undefined there).
+        if measurable
+            && self.vertex_monitored[v.index()]
+            && self.tasks[v.index()].pending_sample.is_none()
+            && enter >= self.next_task_sample_at[v.index()]
+        {
+            self.next_task_sample_at[v.index()] = enter + self.cfg.measurement_interval;
+            self.tasks[v.index()].pending_sample = Some(enter);
+        }
+        let svc = spec.service;
+        let mut spent = svc;
+        let exit = enter + svc;
+        match spec.semantics {
+            Semantics::Transform => {
+                let out = ItemRec::new(
+                    spec.key_map.apply(item.key),
+                    spec.out_bytes.apply(item.bytes as u64),
+                    item.born,
+                );
+                spent += self.emit(exit, v, out);
+            }
+            Semantics::Merge { arity } => {
+                let done = self.tasks[v.index()].merge_feed(arity, item);
+                if let Some(members) = done {
+                    let total: u64 = members.iter().map(|m| m.bytes as u64).sum();
+                    let born = members.iter().map(|m| m.born).min().unwrap();
+                    let out_key = spec.key_map.apply(item.key);
+                    let out = ItemRec::new(out_key, spec.out_bytes.apply(total), born);
+                    spent += self.emit(exit, v, out);
+                }
+            }
+            Semantics::Sink => {
+                let e2e = enter.since(item.born).as_micros() as f64;
+                self.record_e2e(e2e);
+            }
+            Semantics::WindowAgg { window } => {
+                let key = spec.key_map.apply(item.key);
+                let entry = self
+                    .tasks[v.index()]
+                    .windows
+                    .entry(key)
+                    .or_insert((enter, 0, 0));
+                entry.1 += 1;
+                entry.2 += item.bytes as u64;
+                let (start, _n, bytes) = *entry;
+                if enter.since(start) >= window {
+                    self.tasks[v.index()].windows.remove(&key);
+                    let out = ItemRec::new(key, spec.out_bytes.apply(bytes), item.born);
+                    spent += self.emit(exit, v, out);
+                }
+            }
+        }
+        spent
+    }
+
+    /// Emit an item from `v`'s user code at time `exit`: close the task
+    /// latency sample, route to the consumer, and either hand over
+    /// directly (chained channel) or write to the output buffer.
+    /// Returns extra thread time consumed by inline chained successors.
+    fn emit(&mut self, exit: Time, v: VertexId, mut item: ItemRec) -> Duration {
+        // Close the §3.2.1 sample: "the time difference between a data
+        // item entering the user code and the next data item leaving it".
+        if let Some(started) = self.tasks[v.index()].pending_sample.take() {
+            let worker = self.rg.worker(v);
+            let sampled = exit.since(started).as_micros() as f64;
+            self.record(worker, Measurement::task_latency(v, sampled));
+        }
+
+        let out_channels = self.rg.out_channels(v);
+        if out_channels.is_empty() {
+            // A non-sink emission with no wired consumer left (every
+            // downstream instance detached by failure handling): the item
+            // has nowhere to go and is accounted as lost.
+            self.stats.accounted_lost += 1;
+            return Duration::ZERO;
+        }
+        let spec = self.tasks[v.index()].spec;
+        let cid = match spec.route {
+            Route::Pointwise => {
+                // Channel to the same subtask index: pointwise expansion
+                // creates exactly one out channel per vertex on that edge.
+                out_channels[0]
+            }
+            Route::ByKey { divisor } => {
+                let consumers = out_channels.len() as u32;
+                let idx = (item.key / divisor) % consumers;
+                out_channels[idx as usize]
+            }
+        };
+        let c = self.rg.channel(cid);
+        let to = c.to;
+        let sender_worker = self.rg.worker(c.from);
+
+        if self.out_bufs[cid.index()].chained {
+            // §3.5.2: direct hand-over inside the chain thread.  The
+            // channel still reports (near-zero) latency so constraints
+            // remain evaluable.
+            if self.chan_latency_monitored[cid.index()] && exit >= self.next_tag_at[cid.index()] {
+                self.next_tag_at[cid.index()] = exit + self.cfg.measurement_interval;
+                self.record(
+                    self.rg.worker(to),
+                    Measurement::channel_latency(cid, 1.0),
+                );
+            }
+            return self.process_item(exit, to, item, true);
+        }
+
+        // Tag for channel-latency measurement (sender side, §3.3).
+        if self.chan_latency_monitored[cid.index()] && exit >= self.next_tag_at[cid.index()] {
+            self.next_tag_at[cid.index()] = exit + self.cfg.measurement_interval;
+            item.set_tag(exit);
+        }
+
+        let full = self.out_bufs[cid.index()].push(item, exit);
+        if full {
+            self.flush_channel(exit, cid, sender_worker);
+        }
+        Duration::ZERO
+    }
+
+    /// Flush the pending output buffer of a channel onto the wire.
+    pub(crate) fn flush_channel(&mut self, now: Time, cid: ChannelId, sender_worker: WorkerId) {
+        let size = self.out_bufs[cid.index()].size;
+        let (items, bytes, fill_start) = self.out_bufs[cid.index()].take();
+        if items.is_empty() {
+            return;
+        }
+        // Output buffer lifetime (§3.3), measured at the sender.
+        if self.chan_oblt_monitored[cid.index()] {
+            if let Some(start) = fill_start {
+                self.record(
+                    sender_worker,
+                    Measurement::output_buffer_lifetime(cid, now.since(start).as_micros() as f64),
+                );
+            }
+        }
+        let receiver_worker = self.rg.worker(self.rg.channel(cid).to);
+        let local = receiver_worker == sender_worker;
+        // Items larger than the buffer size span several physical buffers:
+        // they pay the per-buffer overhead once per sub-buffer.
+        let sub_buffers = (bytes.div_ceil(size.max(1) as u64)).max(1);
+        let nic = &mut self.nics[sender_worker.index()];
+        let mut arrival = Time::ZERO;
+        for i in 0..sub_buffers {
+            let chunk = if i + 1 == sub_buffers {
+                bytes - (bytes / sub_buffers) * (sub_buffers - 1)
+            } else {
+                bytes / sub_buffers
+            };
+            arrival = nic.send(now, chunk, local);
+        }
+        self.stats.bytes_on_wire += if local { 0 } else { bytes };
+        self.stats.buffers_flushed += sub_buffers;
+        // Extra delivery delay of the sending task type (zero for Nephele
+        // push channels; models HOP shuffle/HDFS handoff, §4.1.2).
+        let sender = self.rg.channel(cid).from;
+        let arrival = arrival + self.tasks[sender.index()].spec.downstream_delay;
+        self.queue.push(
+            arrival,
+            Ev::Deliver {
+                buffer: Buffer { channel: cid.0, items, bytes, flushed: now },
+            },
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // Measurement plumbing
+    // ------------------------------------------------------------------
+
+    pub(crate) fn record(&mut self, worker: WorkerId, m: Measurement) {
+        if let Some(r) = self.reporters.get_mut(&worker) {
+            r.record(m);
+        }
+    }
+
+    fn record_channel_latency(&mut self, cid: ChannelId, tag_created: Time, enter: Time) {
+        let c = self.rg.channel(cid);
+        let (sw, rw) = (self.rg.worker(c.from), self.rg.worker(c.to));
+        // Cross-worker measurements see NTP skew (§3.3 requires clock
+        // synchronisation; §4.2 reports <2 ms).
+        let skew = self.skew_us[rw.index()] - self.skew_us[sw.index()];
+        let raw = enter.since(tag_created).as_micros() as i64 + skew;
+        self.record(rw, Measurement::channel_latency(cid, raw.max(0) as f64));
+    }
+
+    pub(crate) fn on_reporter_flush(&mut self, now: Time, worker: WorkerId) {
+        if self.dead_workers[worker.index()] {
+            // The reporter process died with its worker: this event chain
+            // ends, and the resulting silence is exactly what the master's
+            // failure detector keys on.
+            self.flush_chains.remove(&worker.0);
+            return;
+        }
+        let (reports, next) = match self.reporters.get_mut(&worker) {
+            Some(r) => (r.flush_due(now), r.next_deadline()),
+            None => {
+                // Reporter removed by a QoS rebuild: this event chain ends
+                // (a later rebuild restarts it if the worker reports again).
+                self.flush_chains.remove(&worker.0);
+                return;
+            }
+        };
+        let delay = self.cfg.cluster.control_delay;
+        for report in reports {
+            self.queue.push(now + delay, Ev::ReportArrive { report });
+        }
+        if let Some(t) = next {
+            self.queue.push(t, Ev::ReporterFlush { worker: worker.0 });
+        }
+    }
+
+    pub(crate) fn on_manager_tick(&mut self, now: Time, worker: WorkerId) {
+        if self.dead_workers[worker.index()] {
+            self.tick_chains.remove(&worker.0);
+            return;
+        }
+        let actions = match self.managers.get_mut(&worker) {
+            Some(m) => m.act(now),
+            None => {
+                self.tick_chains.remove(&worker.0);
+                return;
+            }
+        };
+        let delay = self.cfg.cluster.control_delay;
+        for action in actions {
+            match &action {
+                Action::Unresolvable { manager, constraint, .. } => {
+                    self.stats.unresolvable_notices += 1;
+                    self.log(now, format!("unresolvable c{constraint} from {manager}"));
+                }
+                _ => self.queue.push(now + delay, Ev::ApplyAction { action }),
+            }
+        }
+        let next_tick = now + self.cfg.measurement_interval;
+        self.queue.push(next_tick, Ev::ManagerTick { worker: worker.0 });
+    }
+
+    pub(crate) fn on_cpu_sample(&mut self, now: Time, worker: WorkerId) {
+        if self.dead_workers[worker.index()] {
+            return;
+        }
+        let interval = self.cfg.measurement_interval;
+        let verts: Vec<VertexId> = self
+            .rg
+            .vertices_on_worker(worker)
+            .map(|v| v.id)
+            .collect();
+        for v in verts {
+            let busy = std::mem::replace(&mut self.tasks[v.index()].busy_accum, Duration::ZERO);
+            if self.vertex_monitored[v.index()] {
+                let util = busy.as_secs_f64() / interval.as_secs_f64();
+                self.record(worker, Measurement::task_cpu(v, util.min(1.0)));
+            }
+        }
+        self.queue.push(now + interval, Ev::CpuSample { worker: worker.0 });
+    }
+
+    // ------------------------------------------------------------------
+    // Action application (worker side)
+    // ------------------------------------------------------------------
+
+    pub(crate) fn on_apply(&mut self, now: Time, action: Action) {
+        match action {
+            Action::SetBufferSize { channel, worker, size, based_on } => {
+                let arb = self.arbiters.entry(worker).or_default();
+                match arb.offer(channel, size, based_on) {
+                    Verdict::Apply(size) => {
+                        self.out_bufs[channel.index()].size = size;
+                        self.stats.buffer_size_updates += 1;
+                        self.log(now, format!("buffer {channel} -> {size}"));
+                        if let Some(r) = self.reporters.get_mut(&worker) {
+                            r.note_buffer_update(channel, size);
+                        }
+                        // If the partial buffer already exceeds the new
+                        // size, it is due for flushing now.
+                        if self.out_bufs[channel.index()].pending_bytes >= size as u64 {
+                            self.flush_channel(now, channel, worker);
+                        }
+                    }
+                    Verdict::Discard => {}
+                }
+            }
+            Action::ChainTasks { worker: _, tasks, drain } => {
+                self.apply_chain(now, tasks, drain);
+            }
+            Action::ScaleTasks { group, delta, based_on } => {
+                self.apply_scaling(now, group, delta, based_on);
+            }
+            Action::Unresolvable { .. } => {}
+        }
+    }
+
+    fn apply_chain(&mut self, now: Time, tasks: Vec<VertexId>, drain: DrainPolicy) {
+        // Reject stale decisions: already-chained members, or members
+        // whose thread died in a crash that raced this action.
+        if tasks.len() < 2
+            || tasks
+                .iter()
+                .any(|v| self.tasks[v.index()].chain.is_some() || self.dead_tasks[v.index()])
+        {
+            return;
+        }
+        let gid = self.chain_members.len() as u32;
+        // Mark the channels between consecutive chain members as direct
+        // hand-over channels; flush whatever sits in their buffers first.
+        for pair in tasks.windows(2) {
+            if let Some(cid) = self.rg.channel_between(pair[0], pair[1]) {
+                let sender_worker = self.rg.worker(pair[0]);
+                if !self.out_bufs[cid.index()].is_empty() {
+                    self.flush_channel(now, cid, sender_worker);
+                }
+                self.out_bufs[cid.index()].chained = true;
+            }
+        }
+        if drain == DrainPolicy::Drop {
+            // §3.5.2 option 1: drop the queues between the chained tasks
+            // (all members except the head).
+            for &v in &tasks[1..] {
+                let t = &mut self.tasks[v.index()];
+                self.stats.dropped_on_chain +=
+                    t.queue.iter().map(|q| q.buffer.items.len() as u64).sum::<u64>();
+                t.queue.clear();
+                t.queued_bytes = 0;
+            }
+        }
+        let busy = tasks
+            .iter()
+            .map(|v| self.tasks[v.index()].busy_until)
+            .max()
+            .unwrap();
+        for &v in &tasks {
+            self.tasks[v.index()].chain = Some(gid);
+            self.tasks[v.index()].scheduled = false;
+        }
+        self.chain_members.push(tasks.clone());
+        self.chain_busy.push(busy);
+        self.chain_sched.push(false);
+        self.stats.chains_established += 1;
+        let chained: Vec<String> = tasks.iter().map(|v| v.to_string()).collect();
+        self.log(now, format!("chain {}", chained.join("+")));
+        self.try_schedule(now, tasks[0]);
+    }
+
+    // ------------------------------------------------------------------
+    // Failure injection (worker-side destruction)
+    // ------------------------------------------------------------------
+
+    /// Fail-stop crash of a worker: every task thread on it dies (input
+    /// queues, partial merge/window state and pending samples are gone),
+    /// the pending output buffers of its channels are dropped, chains
+    /// sharing a thread on it dissolve, and its NIC state resets.  The
+    /// lost items are classified per producer
+    /// ([`SimCluster::classify_lost`]).
+    pub(crate) fn on_worker_crash(&mut self, now: Time, w: WorkerId) {
+        if self.dead_workers[w.index()] {
+            return;
+        }
+        self.dead_workers[w.index()] = true;
+        self.stats.workers_crashed += 1;
+        self.log(now, format!("crash {w}"));
+        let victims: Vec<VertexId> = self.rg.vertices_on_worker(w).map(|v| v.id).collect();
+        // Chains die with their shared thread.  Members are always
+        // co-located, so every member of an affected group is a victim;
+        // dissolve the group and reset its direct hand-over channels so
+        // recovered instances restart as individual task threads.
+        let dead_groups: BTreeSet<u32> = victims
+            .iter()
+            .filter_map(|&v| self.tasks[v.index()].chain)
+            .collect();
+        for g in dead_groups {
+            let members = self.chain_members[g as usize].clone();
+            for pair in members.windows(2) {
+                if let Some(cid) = self.rg.channel_between(pair[0], pair[1]) {
+                    self.out_bufs[cid.index()].chained = false;
+                }
+            }
+            for &m in &members {
+                self.tasks[m.index()].chain = None;
+            }
+            self.chain_sched[g as usize] = false;
+        }
+        for &v in &victims {
+            self.dead_tasks[v.index()] = true;
+            let (queued, partial) = {
+                let t = &mut self.tasks[v.index()];
+                let queued: Vec<QueuedBuffer> = t.queue.drain(..).collect();
+                t.queued_bytes = 0;
+                t.scheduled = false;
+                t.pending_sample = None;
+                t.busy_accum = Duration::ZERO;
+                let partial: u64 = t
+                    .groups
+                    .values()
+                    .map(|g| g.values().map(|q| q.len() as u64).sum::<u64>())
+                    .sum();
+                let windowed: u64 = t.windows.values().map(|&(_, n, _)| n).sum();
+                t.groups.clear();
+                t.windows.clear();
+                (queued, partial + windowed)
+            };
+            // Partial merge-group and window state dies with the process.
+            self.stats.accounted_lost += partial;
+            for qb in queued {
+                self.classify_lost(qb.buffer.channel, qb.buffer.items);
+            }
+            // Pending sender-side output buffers of the dead task.
+            let outs: Vec<ChannelId> = self.rg.out_channels(v).to_vec();
+            for cid in outs {
+                let (items, _, _) = self.out_bufs[cid.index()].take();
+                self.classify_lost(cid.0, items);
+            }
+        }
+        self.nics[w.index()] = Nic::new(&self.cfg.cluster);
+    }
+}

@@ -2,11 +2,21 @@
 //! `Rng` seed must produce byte-identical metrics and action logs, so
 //! that failure timing, countermeasure decisions and recovery are
 //! exactly reproducible.  Covers the load-surge (elastic scaling) and
-//! failover (crash + recovery) scenarios in both policy modes.
+//! failover (crash + recovery) scenarios in both policy modes, plus
+//! both arms of the paper-scale Hadoop Online comparison (`sim-scale`).
+//!
+//! These fingerprints are also the golden gate for the engine split
+//! (cluster → engine/worker/master/accounting + the arena/time-wheel
+//! event core): the split preserved the `(time, insertion seq)` event
+//! order exactly, so the same-seed trajectories — metrics and action
+//! logs byte-for-byte — are unchanged from the pre-split engine.
 
+use nephele::baseline::hadoop::hadoop_online_job;
 use nephele::config::EngineConfig;
 use nephele::pipeline::failover::{failover_job, FailoverSpec};
+use nephele::pipeline::scale::ScaleSpec;
 use nephele::pipeline::surge::{surge_job, SurgeSpec};
+use nephele::pipeline::video::video_job;
 use nephele::sim::cluster::{SimCluster, SimStats};
 use nephele::util::time::Duration;
 
@@ -59,7 +69,7 @@ fn surge_fingerprint(seed: u64, secs: u64) -> String {
     let cfg = EngineConfig { seed, ..EngineConfig::default() }.with_scaling();
     let mut cluster =
         SimCluster::new(sj.job, sj.rg, &sj.constraints, sj.task_specs, sj.sources, cfg).unwrap();
-    cluster.run(Duration::from_secs(secs), None);
+    cluster.run(Duration::from_secs(secs), None).unwrap();
     fingerprint(&cluster.stats)
 }
 
@@ -71,8 +81,29 @@ fn failover_fingerprint(seed: u64, enable_recovery: bool, secs: u64) -> String {
     let mut cluster =
         SimCluster::new(fj.job, fj.rg, &fj.constraints, fj.task_specs, fj.sources, cfg).unwrap();
     cluster.schedule_failures(&[spec.failure()]);
-    cluster.run(Duration::from_secs(secs), None);
+    cluster.run(Duration::from_secs(secs), None).unwrap();
     fingerprint(&cluster.stats)
+}
+
+/// Both arms of the paper-scale comparison at the reduced (`--quick`)
+/// worker count — the exact code path of `nephele sim-scale --quick`.
+fn scale_fingerprint(seed: u64, secs: u64) -> String {
+    let spec = ScaleSpec::quick();
+    let vj = video_job(spec.nephele()).unwrap();
+    let ncfg = EngineConfig { seed, ..EngineConfig::default() }.fully_optimized();
+    let mut nephele =
+        SimCluster::new(vj.job, vj.rg, &vj.constraints, vj.task_specs, vj.sources, ncfg).unwrap();
+    nephele.run(Duration::from_secs(secs), None).unwrap();
+    let hj = hadoop_online_job(spec.hadoop()).unwrap();
+    let hcfg = EngineConfig { seed, ..EngineConfig::default() }.unoptimized();
+    let mut hadoop =
+        SimCluster::new(hj.job, hj.rg, &hj.constraints, hj.task_specs, hj.sources, hcfg).unwrap();
+    hadoop.run(Duration::from_secs(secs), None).unwrap();
+    format!(
+        "nephele:\n{}\nhadoop:\n{}",
+        fingerprint(&nephele.stats),
+        fingerprint(&hadoop.stats)
+    )
 }
 
 #[test]
@@ -97,6 +128,19 @@ fn failover_scenario_replays_byte_identically_for_a_seed() {
         assert!(a.contains("crash w2"), "the run must exercise the crash:\n{a}");
         assert!(a.contains("failover w2"), "the run must exercise detection:\n{a}");
     }
+}
+
+#[test]
+fn scale_scenario_replays_byte_identically_for_a_seed() {
+    // 120 s covers QoS convergence on the Nephele arm (first manager
+    // ticks and the buffer shrink to per-item flushing), so the compared
+    // logs include countermeasure decisions on a 20-worker topology.
+    let a = scale_fingerprint(42, 120);
+    let b = scale_fingerprint(42, 120);
+    assert_eq!(a, b, "same seed must replay the same trajectory");
+    // Match an action-log line ("buffer e<N> -> <size>"), not the always
+    // present "buffers=" counter key in the fingerprint header.
+    assert!(a.contains("buffer e"), "the run must exercise buffer actions:\n{a}");
 }
 
 #[test]

@@ -25,7 +25,7 @@ fn buffer_sizes_shrink_on_slow_channels_and_respect_epsilon() {
         EngineConfig::default().buffers_only(),
         VideoSpec::small(),
     );
-    cluster.run(Duration::from_secs(300), None);
+    cluster.run(Duration::from_secs(300), None).unwrap();
     assert!(cluster.stats.buffer_size_updates > 0);
     // Every channel's buffer stays within [ε, ω].
     let eps = cluster.cfg.manager.buffer.min_size;
@@ -60,7 +60,7 @@ fn pinned_vertices_are_never_chained() {
         EngineConfig::default().fully_optimized(),
     )
     .unwrap();
-    cluster.run(Duration::from_secs(400), None);
+    cluster.run(Duration::from_secs(400), None).unwrap();
     // Chains may exist (e.g. Overlay+Encoder) but no channel incident to
     // a Merger may be chained.
     for (i, ch) in cluster.rg.channels.clone().iter().enumerate() {
@@ -86,7 +86,7 @@ fn impossible_constraint_is_reported_unresolvable() {
     cfg.manager.enable_buffer_sizing = false;
     cfg.manager.enable_chaining = true;
     let (mut cluster, _) = small_cluster(cfg, spec);
-    cluster.run(Duration::from_secs(600), None);
+    cluster.run(Duration::from_secs(600), None).unwrap();
     assert!(cluster.stats.chains_established > 0, "chaining should engage first");
     assert!(
         cluster.stats.unresolvable_notices > 0,
@@ -99,7 +99,7 @@ fn simulation_is_deterministic_for_a_seed() {
     let run = |seed: u64| {
         let cfg = EngineConfig { seed, ..EngineConfig::default() }.fully_optimized();
         let (mut cluster, seq) = small_cluster(cfg, VideoSpec::small());
-        cluster.run(Duration::from_secs(200), None);
+        cluster.run(Duration::from_secs(200), None).unwrap();
         let now = cluster.now();
         let b = breakdown(&mut cluster, &seq, now);
         (
@@ -123,12 +123,12 @@ fn throughput_is_preserved_under_optimization() {
         EngineConfig::default().unoptimized(),
         VideoSpec::small(),
     );
-    unopt.run(Duration::from_secs(300), None);
+    unopt.run(Duration::from_secs(300), None).unwrap();
     let (mut opt, _) = small_cluster(
         EngineConfig::default().fully_optimized(),
         VideoSpec::small(),
     );
-    opt.run(Duration::from_secs(300), None);
+    opt.run(Duration::from_secs(300), None).unwrap();
     let sink_unopt = unopt.stats.e2e_count as f64;
     let sink_opt = opt.stats.e2e_count as f64;
     assert!(
@@ -145,7 +145,7 @@ fn merger_task_latency_anomaly_shrinks_with_small_buffers() {
     // adaptive buffers the Merger mean task latency must drop.
     let merger_latency = |cfg: EngineConfig| {
         let (mut cluster, seq) = small_cluster(cfg, VideoSpec::small());
-        cluster.run(Duration::from_secs(400), None);
+        cluster.run(Duration::from_secs(400), None).unwrap();
         let now = cluster.now();
         let b = breakdown(&mut cluster, &seq, now);
         b.rows
@@ -176,7 +176,7 @@ fn convergence_survives_large_clock_skew() {
     let mut cfg = EngineConfig::default().fully_optimized();
     cfg.cluster.max_clock_skew = nephele::util::time::Duration::from_millis(50);
     let (mut cluster, seq) = small_cluster(cfg, VideoSpec::small());
-    cluster.run(Duration::from_secs(400), None);
+    cluster.run(Duration::from_secs(400), None).unwrap();
     let now = cluster.now();
     let b = breakdown(&mut cluster, &seq, now);
     assert!(cluster.stats.buffer_size_updates > 0, "optimizer still acts");
@@ -196,7 +196,7 @@ fn drop_policy_chaining_discards_inner_queues() {
     let mut cfg = EngineConfig::default().fully_optimized();
     cfg.manager.chaining.drain = nephele::actions::chaining::DrainPolicy::Drop;
     let (mut cluster, _) = small_cluster(cfg, spec);
-    cluster.run(Duration::from_secs(400), None);
+    cluster.run(Duration::from_secs(400), None).unwrap();
     assert!(cluster.stats.chains_established > 0);
     // Items may or may not be in flight at chain time; the counter must
     // be consistent (sink + dropped <= ingested).

@@ -1,0 +1,69 @@
+//! Figure-level reproduction of the paper's headline claim (§4.3.4 at
+//! cluster scale): Nephele under QoS management beats the Hadoop Online
+//! expression of the same video workload "by a factor of at least 13
+//! while preserving high data throughput".
+//!
+//! The test runs the exact `nephele sim-scale --quick` code path: the
+//! reduced worker count keeps per-channel rates (streams per decoder,
+//! bytes per frame) identical to the 200-worker configuration, so the
+//! per-hop latency mechanics — shuffle delays, the HDFS job boundary,
+//! 32 KB fill times vs adaptively shrunk buffers — are the same ones
+//! that produce the ratio at full scale.
+
+use nephele::config::EngineConfig;
+use nephele::experiments::scale::run_scale;
+use nephele::pipeline::scale::ScaleSpec;
+
+#[test]
+fn quick_scale_comparison_reaches_13x_at_preserved_throughput() {
+    let spec = ScaleSpec::quick();
+    let r = run_scale(spec, EngineConfig::default(), 420, 180, false).unwrap();
+
+    // Sanity: both arms actually flowed and were measured over the tail.
+    assert!(r.nephele.items_at_sinks > 0, "{r:?}");
+    assert!(r.hadoop.items_at_sinks > 0, "{r:?}");
+    assert!(r.nephele.tail_mean_ms.is_finite(), "{r:?}");
+    assert!(r.hadoop.tail_mean_ms.is_finite(), "{r:?}");
+
+    // The QoS countermeasures must have engaged on the Nephele arm.
+    assert!(r.nephele.buffer_updates > 0, "buffer sizing never acted: {r:?}");
+
+    // The headline: >=13x latency improvement...
+    assert!(
+        r.latency_ratio >= 13.0,
+        "latency ratio {:.2}x below the paper's factor of 13: {r:?}",
+        r.latency_ratio
+    );
+    // ...at preserved throughput on both arms...
+    assert!(r.throughput_ok(), "throughput collapsed: {r:?}");
+    // ...with Nephele inside its constraint (the paper's l = 300 ms, to
+    // the 1.1x tolerance used by the other scenario suites).
+    assert!(
+        r.nephele.tail_mean_ms <= spec.constraint_ms as f64 * 1.1,
+        "nephele tail {:.1} ms misses the {} ms constraint: {r:?}",
+        r.nephele.tail_mean_ms,
+        spec.constraint_ms
+    );
+}
+
+#[test]
+fn scale_report_is_deterministic_for_a_seed() {
+    let run = |seed: u64| {
+        let cfg = EngineConfig { seed, ..EngineConfig::default() };
+        let r = run_scale(ScaleSpec::quick(), cfg, 150, 60, false).unwrap();
+        (
+            r.nephele.items_at_sinks,
+            r.hadoop.items_at_sinks,
+            r.nephele.events,
+            r.hadoop.events,
+            r.latency_ratio.to_bits(),
+        )
+    };
+    assert_eq!(run(9), run(9), "same seed, same comparison");
+}
+
+#[test]
+fn rejects_degenerate_tail_windows() {
+    assert!(run_scale(ScaleSpec::quick(), EngineConfig::default(), 100, 100, false).is_err());
+    assert!(run_scale(ScaleSpec::quick(), EngineConfig::default(), 100, 0, false).is_err());
+}

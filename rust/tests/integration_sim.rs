@@ -21,7 +21,7 @@ fn run_scenario(cfg: EngineConfig, secs: u64) -> (f64, f64, SimClusterSummary) {
         cfg,
     )
     .unwrap();
-    cluster.run(Duration::from_secs(secs), None);
+    cluster.run(Duration::from_secs(secs), None).unwrap();
     let now = cluster.now();
     let b = breakdown(&mut cluster, &vj.constrained_sequence, now);
     let total = b.total_ms();
@@ -94,7 +94,7 @@ fn chaining_improves_further_and_meets_constraint() {
         EngineConfig::default().fully_optimized(),
     )
     .unwrap();
-    cluster.run(Duration::from_secs(420), None);
+    cluster.run(Duration::from_secs(420), None).unwrap();
     let now = cluster.now();
     let b = breakdown(&mut cluster, &vj.constrained_sequence, now);
     let full = b.total_ms();

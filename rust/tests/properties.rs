@@ -171,7 +171,9 @@ fn conservation(g: &mut Gen) -> PropResult {
         Ok(c) => c,
         Err(e) => return Err(format!("cluster build failed: {e}")),
     };
-    cluster.run(Duration::from_secs(60), None);
+    cluster
+        .run(Duration::from_secs(60), None)
+        .map_err(|e| format!("sim engine error: {e}"))?;
 
     // Conservation: no item is created or destroyed inside the pipeline
     // (drop-on-chain is the only sanctioned loss and our DrainPolicy is
@@ -232,14 +234,18 @@ fn conservation_under_failures(g: &mut Gen) -> PropResult {
             at: Duration::from_secs(g.u64(5..=40)),
         }]);
     }
-    cluster.run(Duration::from_secs(60), None);
+    cluster
+        .run(Duration::from_secs(60), None)
+        .map_err(|e| format!("sim engine error: {e}"))?;
     let t = cluster.now();
     cluster.stop_sources_at(t);
     // Long drain: every in-flight network event lands, backlogs work
     // off, and any late failover (including false positives once the
     // reporters go quiet) resolves.  The conservation ledger must
     // balance through all of it.
-    cluster.run(Duration::from_secs(1800), None);
+    cluster
+        .run(Duration::from_secs(1800), None)
+        .map_err(|e| format!("sim engine error: {e}"))?;
     let s = &cluster.stats;
     prop_assert(s.items_ingested > 0, "sources must produce")?;
     prop_assert_eq(s.dropped_on_chain, 0, "drain policy drops nothing")?;
