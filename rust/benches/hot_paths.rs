@@ -13,7 +13,7 @@ use harness::{bench, bench_once, Recorder};
 
 use nephele::actions::buffer_sizing::{next_buffer_size, BufferSizingConfig};
 use nephele::config::EngineConfig;
-use nephele::graph::ids::{ChannelId, VertexId, WorkerId};
+use nephele::graph::ids::{ChannelId, JobId, VertexId, WorkerId};
 use nephele::pipeline::microbench::{sender_receiver_job, MicrobenchSpec};
 use nephele::pipeline::video::{video_job, VideoSpec};
 use nephele::qos::manager::{ManagerConfig, QosManager};
@@ -220,6 +220,7 @@ fn bench_manager(rec: &mut Recorder, quick: bool) {
     }
     let n_entries = entries.len();
     let report = Report {
+        job: JobId(0),
         from: WorkerId(0),
         to_manager: w,
         at: Time::from_secs_f64(1.0),
@@ -234,6 +235,43 @@ fn bench_manager(rec: &mut Recorder, quick: bool) {
         mgr.evaluate_chains(Time::from_secs_f64(1.0)).len()
     });
     rec.add(&name_eval, 50, secs, None);
+}
+
+fn bench_multi_sim_rate(rec: &mut Recorder, quick: bool) {
+    // Scheduler-path events/second: the multi-job cluster with staggered
+    // submissions, per-job QoS runtimes and completion watches — the
+    // `nephele sim-multi` code path.
+    use nephele::pipeline::multi::{latency_submission, throughput_submission, MultiSpec};
+    use nephele::sched::PlacementPolicy;
+
+    let spec = if quick { MultiSpec::tiny() } else { MultiSpec::quick() };
+    let virt_secs = if quick { 90 } else { 240 };
+    let name = format!(
+        "sim: multi-job scheduler ({} jobs, {} workers), {virt_secs}s virtual",
+        spec.latency_jobs + 1,
+        spec.workers
+    );
+    let (events, secs) = bench_once(&name, || {
+        let mut cluster = SimCluster::new_multi(
+            spec.workers,
+            spec.slots_per_worker,
+            PlacementPolicy::Spread,
+            EngineConfig::default().fully_optimized(),
+        )
+        .unwrap();
+        cluster
+            .submit_job_at(throughput_submission(&spec).unwrap(), Duration::ZERO)
+            .unwrap();
+        for i in 0..spec.latency_jobs {
+            cluster
+                .submit_job_at(latency_submission(&spec, i).unwrap(), spec.latency_submit_at(i))
+                .unwrap();
+        }
+        cluster.run(Duration::from_secs(virt_secs), None).unwrap();
+        cluster.stats.events_processed
+    });
+    println!("    -> {} events, {:.2} M events/s wall", events, events as f64 / secs / 1e6);
+    rec.add(&name, 1, secs, Some(events as f64 / secs));
 }
 
 fn bench_buffer_sizing(rec: &mut Recorder) {
@@ -266,6 +304,7 @@ fn main() {
     bench_manager(&mut rec, quick);
     bench_channel_hot_path(&mut rec, quick);
     bench_video_sim_rate(&mut rec, quick);
+    bench_multi_sim_rate(&mut rec, quick);
     match rec.write_json(&out_path, "hot_paths", quick) {
         Ok(()) => println!("results written to {out_path}"),
         Err(e) => {

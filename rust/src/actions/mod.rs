@@ -8,7 +8,7 @@ pub mod buffer_sizing;
 pub mod chaining;
 pub mod scaling;
 
-use crate::graph::ids::{ChannelId, JobVertexId, VertexId, WorkerId};
+use crate::graph::ids::{ChannelId, JobId, JobVertexId, VertexId, WorkerId};
 use crate::util::time::Time;
 
 /// An action issued by a QoS Manager towards a worker node (or, for
@@ -39,6 +39,11 @@ pub enum Action {
     /// runtime instances, rewires their channels and rebuilds the QoS
     /// setup for the new topology.
     ScaleTasks {
+        /// Job of the issuing manager, for tracing.  The master derives
+        /// the authoritative owner from `group`'s vertex tag before
+        /// charging the job's slot reservations, so a stale or buggy
+        /// manager cannot rescale on another job's account.
+        job: JobId,
         /// The task group (job vertex) whose parallelism changes.
         group: JobVertexId,
         /// Instances to add (positive) or retire (negative).
@@ -52,6 +57,8 @@ pub enum Action {
     /// is still violated: notify the master, who notifies the user "who
     /// has to either change the job or revise the constraints" (§3.5).
     Unresolvable {
+        /// Job whose constraint failed to optimise.
+        job: JobId,
         manager: WorkerId,
         constraint: usize,
         worst_latency_ms: f64,

@@ -6,8 +6,14 @@
 
 use anyhow::{bail, Result};
 use nephele::config::EngineConfig;
-use nephele::experiments::video_scenarios::ScenarioReport;
+use nephele::experiments::video_scenarios::{Scenario, ScenarioReport};
 use nephele::pipeline::video::VideoSpec;
+use nephele::sched::PlacementPolicy;
+
+/// The subcommand set, shared by `nephele info` and the usage error so
+/// the two cannot drift.
+pub const SUBCOMMANDS: &str =
+    "sim-video | sim-meter | sim-surge | sim-failover | sim-scale | sim-multi | live | info";
 
 /// Parse `--scale small|paper --secs N --seed N --quiet --constraint-ms N`.
 #[allow(dead_code)]
@@ -108,6 +114,176 @@ fn scenario_args(
         }
     }
     Ok((cfg, secs, verbose))
+}
+
+/// Parse `nephele sim-video`'s arguments (`argv` holds only the flags):
+/// `--scale small|paper --scenario unopt|buffers|full --secs N --seed N
+/// --constraint-ms N --quiet`.
+/// Returns `(spec, cfg, scenario, secs, verbose)`.
+pub fn video_scenario_args(
+    argv: &[String],
+    default_secs: u64,
+) -> Result<(VideoSpec, EngineConfig, Scenario, u64, bool)> {
+    let mut spec = VideoSpec::small();
+    let mut scenario = Scenario::BuffersAndChaining;
+    let (cfg, secs, verbose) = scenario_args(
+        argv,
+        default_secs,
+        "usage: [--scale small|paper] [--scenario unopt|buffers|full] [--secs N] \
+         [--seed N] [--constraint-ms N] [--quiet]",
+        &["--scale", "--scenario", "--constraint-ms"],
+        &mut |flag, value| {
+            match flag {
+                "--scale" => {
+                    spec = match value {
+                        "small" => VideoSpec::small(),
+                        "paper" => VideoSpec::default(),
+                        other => bail!("unknown scale {other:?} (small|paper)"),
+                    }
+                }
+                "--scenario" => {
+                    scenario = match value {
+                        "unopt" => Scenario::Unoptimized,
+                        "buffers" => Scenario::AdaptiveBuffers,
+                        "full" => Scenario::BuffersAndChaining,
+                        other => bail!("unknown scenario {other:?} (unopt|buffers|full)"),
+                    }
+                }
+                "--constraint-ms" => spec.constraint_ms = value.parse()?,
+                _ => unreachable!("unlisted scenario flag {flag}"),
+            }
+            Ok(())
+        },
+    )?;
+    Ok((spec, cfg, scenario, secs, verbose))
+}
+
+/// Parse `nephele sim-meter`'s arguments (`argv` holds only the flags):
+/// `--secs N --seed N --optimized true|false --quiet`.
+/// Returns `(cfg, secs, optimized, verbose)`.
+pub fn meter_args(argv: &[String], default_secs: u64) -> Result<(EngineConfig, u64, bool, bool)> {
+    let mut optimized = true;
+    let (cfg, secs, verbose) = scenario_args(
+        argv,
+        default_secs,
+        "usage: [--secs N] [--seed N] [--optimized true|false] [--quiet]",
+        &["--optimized"],
+        &mut |flag, value| {
+            match flag {
+                "--optimized" => optimized = value.parse()?,
+                _ => unreachable!("unlisted scenario flag {flag}"),
+            }
+            Ok(())
+        },
+    )?;
+    Ok((cfg, secs, optimized, verbose))
+}
+
+/// Parse `nephele live`'s arguments (`argv` holds only the flags):
+/// `--frames N --fps F --artifacts DIR --constraint-ms N`.
+pub fn live_args(argv: &[String]) -> Result<nephele::live::LiveConfig> {
+    let mut cfg = nephele::live::LiveConfig::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let need = |i: usize| -> Result<&String> {
+            argv.get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("missing value after {}", argv[i]))
+        };
+        match argv[i].as_str() {
+            "--frames" => {
+                cfg.frames = need(i)?.parse()?;
+                i += 2;
+            }
+            "--fps" => {
+                cfg.fps = need(i)?.parse()?;
+                i += 2;
+            }
+            "--artifacts" => {
+                cfg.artifacts_dir = need(i)?.as_str().into();
+                i += 2;
+            }
+            "--constraint-ms" => {
+                cfg.constraint_ms = need(i)?.parse()?;
+                i += 2;
+            }
+            "--help" | "-h" => {
+                println!("usage: [--frames N] [--fps F] [--artifacts DIR] [--constraint-ms N]");
+                std::process::exit(0);
+            }
+            other => bail!("unknown argument {other:?}"),
+        }
+    }
+    Ok(cfg)
+}
+
+/// Parse `nephele sim-multi`'s arguments (`argv` holds only the flags):
+/// `--quick --seed N --policy spread|pack|least-loaded --tolerance F --quiet`.
+/// Returns `(spec, cfg, policies, tolerance, verbose)`.  Without
+/// `--policy`, both standard policies (spread, pack) are run and
+/// verified; `--policy` narrows the set to one (useful for exploring
+/// `least-loaded`).
+pub fn multi_args(
+    argv: &[String],
+) -> Result<(
+    nephele::pipeline::multi::MultiSpec,
+    EngineConfig,
+    Vec<PlacementPolicy>,
+    f64,
+    bool,
+)> {
+    let mut cfg = EngineConfig::default();
+    let mut quick = false;
+    let mut policies: Option<Vec<PlacementPolicy>> = None;
+    let mut tolerance = 1.1;
+    let mut verbose = true;
+    let mut i = 0;
+    while i < argv.len() {
+        let need = |i: usize| -> Result<&String> {
+            argv.get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("missing value after {}", argv[i]))
+        };
+        match argv[i].as_str() {
+            "--quick" => {
+                quick = true;
+                i += 1;
+            }
+            "--seed" => {
+                cfg.seed = need(i)?.parse()?;
+                i += 2;
+            }
+            "--policy" => {
+                let value = need(i)?;
+                policies = Some(vec![PlacementPolicy::parse(value).ok_or_else(|| {
+                    anyhow::anyhow!("unknown policy {value:?} (spread|pack|least-loaded)")
+                })?]);
+                i += 2;
+            }
+            "--tolerance" => {
+                tolerance = need(i)?.parse()?;
+                i += 2;
+            }
+            "--quiet" => {
+                verbose = false;
+                i += 1;
+            }
+            "--help" | "-h" => {
+                println!(
+                    "usage: [--quick] [--seed N] [--policy spread|pack|least-loaded] \
+                     [--tolerance F] [--quiet]"
+                );
+                std::process::exit(0);
+            }
+            other => bail!("unknown argument {other:?}"),
+        }
+    }
+    let spec = if quick {
+        nephele::pipeline::multi::MultiSpec::quick()
+    } else {
+        nephele::pipeline::multi::MultiSpec::default()
+    };
+    let policies =
+        policies.unwrap_or_else(|| vec![PlacementPolicy::Spread, PlacementPolicy::Pack]);
+    Ok((spec, cfg, policies, tolerance, verbose))
 }
 
 /// Parse the load-surge driver's arguments (`argv` holds only the
@@ -235,6 +411,18 @@ pub fn scale_args(
     let secs = secs.unwrap_or(if quick { 420 } else { 600 });
     let tail = tail.unwrap_or(if quick { 180 } else { 300 });
     Ok((spec, cfg, secs, tail, min_ratio, verbose))
+}
+
+/// Shared output of the multi-job scheduler driver.
+pub fn print_multi_summary(report: &nephele::experiments::multi::MultiReport) {
+    println!(
+        "== multi-job scheduler — policy {} on {} workers ==",
+        report.policy, report.workers
+    );
+    for o in &report.outcomes {
+        println!("{}", nephele::experiments::multi::render_outcome(o));
+    }
+    println!("  events: {}", report.events);
 }
 
 /// Shared output of the paper-scale comparison driver.

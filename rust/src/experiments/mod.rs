@@ -7,6 +7,7 @@ pub mod failover;
 pub mod fig2;
 pub mod hadoop;
 pub mod load_surge;
+pub mod multi;
 pub mod scale;
 pub mod video_scenarios;
 
@@ -14,5 +15,6 @@ pub use failover::{run_failover, FailoverReport};
 pub use fig2::{fig2_sweep, Fig2Cell};
 pub use hadoop::{run_hadoop_online, HadoopReport};
 pub use load_surge::{run_load_surge, SurgeReport};
+pub use multi::{run_multi, MultiReport};
 pub use scale::{run_scale, ScaleReport};
 pub use video_scenarios::{run_video_scenario, Scenario, ScenarioReport};

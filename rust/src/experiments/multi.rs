@@ -1,0 +1,331 @@
+//! The multi-job scheduler scenario (`nephele sim-multi`): several
+//! staggered latency-constrained video pipelines plus one
+//! throughput-oriented Hadoop-Online-style job contend on a shared
+//! worker pool under a placement policy.
+//!
+//! The run passes only if, per job:
+//! * every **latency** job's tail-window mean ground-truth e2e latency
+//!   stays within `tolerance ×` its constraint;
+//! * the **throughput** job's tail sink rate reaches ≥ 80% of its
+//!   theoretical steady-state rate (the same yardstick as
+//!   `experiments/scale.rs`);
+//! * the per-job conservation invariant balances after the drain; and
+//! * (checked by the CLI driver) the same seed reproduces a
+//!   byte-identical [`MultiReport::fingerprint`] — per policy.
+
+use crate::config::EngineConfig;
+use crate::graph::ids::JobId;
+use crate::pipeline::multi::{latency_submission, throughput_submission, MultiSpec};
+use crate::sched::{JobState, PlacementPolicy};
+use crate::sim::cluster::{SimCluster, SimStats};
+use crate::util::time::Duration;
+use anyhow::{bail, Context, Result};
+
+/// Outcome of one job in the shared cluster.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub job: JobId,
+    pub name: String,
+    pub is_latency: bool,
+    /// Latency jobs: the constraint limit (ms).
+    pub constraint_ms: Option<u64>,
+    /// Mean ground-truth e2e latency over the tail window (ms).
+    pub tail_mean_ms: Option<f64>,
+    /// Sink arrivals per second over the tail window.
+    pub tail_rate: f64,
+    /// Theoretical steady-state sink rate.
+    pub expected_rate: f64,
+    pub state: Option<JobState>,
+    pub ingested: u64,
+    pub at_sinks: u64,
+    pub lost: u64,
+    pub conservation_ok: bool,
+}
+
+impl JobOutcome {
+    /// Latency gate: tail mean within `tolerance ×` the constraint.
+    pub fn latency_ok(&self, tolerance: f64) -> bool {
+        if !self.is_latency {
+            return true;
+        }
+        match (self.tail_mean_ms, self.constraint_ms) {
+            (Some(mean), Some(limit)) => mean <= tolerance * limit as f64,
+            _ => false,
+        }
+    }
+
+    /// Throughput gate: tail sink rate ≥ 80% of the theoretical rate.
+    pub fn throughput_ok(&self) -> bool {
+        if self.is_latency {
+            return true;
+        }
+        self.tail_rate >= 0.8 * self.expected_rate
+    }
+}
+
+/// Outcome of the whole scenario under one placement policy.
+#[derive(Debug, Clone)]
+pub struct MultiReport {
+    pub policy: PlacementPolicy,
+    pub workers: u32,
+    pub outcomes: Vec<JobOutcome>,
+    pub events: u64,
+    /// Byte-exact digest of the run (global counters, every per-job
+    /// ledger, the full action log): two same-seed runs must match.
+    pub fingerprint: String,
+}
+
+impl MultiReport {
+    pub fn all_latency_ok(&self, tolerance: f64) -> bool {
+        self.outcomes.iter().all(|o| o.latency_ok(tolerance))
+    }
+
+    pub fn throughput_ok(&self) -> bool {
+        self.outcomes.iter().all(|o| o.throughput_ok())
+    }
+
+    pub fn conservation_ok(&self) -> bool {
+        self.outcomes.iter().all(|o| o.conservation_ok)
+    }
+
+    pub fn all_completed(&self) -> bool {
+        self.outcomes
+            .iter()
+            .all(|o| o.state == Some(JobState::Completed))
+    }
+}
+
+struct PlannedJob {
+    job: JobId,
+    is_latency: bool,
+    constraint_ms: Option<u64>,
+    expected_rate: f64,
+    submit_secs: u64,
+    end_secs: u64,
+    warm_secs: u64,
+}
+
+/// Byte-exact digest of a multi-job run: global counters, per-job
+/// ledgers (float bit patterns included) and the full action log.
+pub fn multi_fingerprint(stats: &SimStats) -> String {
+    let mut out = format!(
+        "ingested={} delivered={} sinks={} e2e_sum={:x} wire={} flushed={} \
+         dropped={} unresolvable={} buffers={} chains={} ups={} downs={} rejected={} \
+         rebuilds={} lost={} replayed={} crashed={} failovers={} reassigned={} \
+         detached={} submitted={} completed={} cancelled={} jrejected={} events={}\n",
+        stats.items_ingested,
+        stats.items_delivered,
+        stats.e2e_count,
+        stats.e2e_sum_us.to_bits(),
+        stats.bytes_on_wire,
+        stats.buffers_flushed,
+        stats.dropped_on_chain,
+        stats.unresolvable_notices,
+        stats.buffer_size_updates,
+        stats.chains_established,
+        stats.scale_ups,
+        stats.scale_downs,
+        stats.scaling_rejected,
+        stats.qos_rebuilds,
+        stats.accounted_lost,
+        stats.items_replayed,
+        stats.workers_crashed,
+        stats.failovers,
+        stats.instances_reassigned,
+        stats.instances_detached,
+        stats.jobs_submitted,
+        stats.jobs_completed,
+        stats.jobs_cancelled,
+        stats.jobs_rejected,
+        stats.events_processed,
+    );
+    for (i, l) in stats.jobs.iter().enumerate() {
+        out.push_str(&format!(
+            "j{i}: in={} sinks={} sum={:x} max={:x} lost={} replayed={} absorbed={} \
+             produced={} unresolvable={}\n",
+            l.items_ingested,
+            l.at_sinks,
+            l.e2e_sum_us.to_bits(),
+            l.e2e_max_us.to_bits(),
+            l.accounted_lost,
+            l.items_replayed,
+            l.absorbed,
+            l.produced,
+            l.unresolvable,
+        ));
+    }
+    out.push_str("log:\n");
+    out.push_str(&stats.action_log.join("\n"));
+    out
+}
+
+/// Run the multi-job scenario under one placement policy.
+pub fn run_multi(
+    spec: MultiSpec,
+    cfg: EngineConfig,
+    policy: PlacementPolicy,
+    verbose: bool,
+) -> Result<MultiReport> {
+    let mut cluster = SimCluster::new_multi(
+        spec.workers,
+        spec.slots_per_worker,
+        policy,
+        cfg.fully_optimized(),
+    )?;
+    let mut plan: Vec<PlannedJob> = Vec::new();
+
+    // The throughput job occupies the pool for the whole horizon.
+    let tsub = throughput_submission(&spec)?;
+    let tid = cluster
+        .submit_job_at(tsub, Duration::ZERO)
+        .context("throughput submission")?;
+    plan.push(PlannedJob {
+        job: tid,
+        is_latency: false,
+        constraint_ms: None,
+        expected_rate: spec.throughput_expected_rate(),
+        submit_secs: 0,
+        end_secs: spec.throughput_secs,
+        warm_secs: spec.warm_secs.min(spec.throughput_secs / 2),
+    });
+    // Staggered latency jobs.
+    for i in 0..spec.latency_jobs {
+        let at = spec.latency_submit_at(i);
+        let sub = latency_submission(&spec, i)?;
+        let id = cluster
+            .submit_job_at(sub, at)
+            .with_context(|| format!("latency submission {i}"))?;
+        plan.push(PlannedJob {
+            job: id,
+            is_latency: true,
+            constraint_ms: Some(spec.constraint_ms),
+            expected_rate: spec.latency_expected_rate(),
+            submit_secs: at.as_micros() / 1_000_000,
+            end_secs: at.as_micros() / 1_000_000 + spec.latency_job_secs,
+            warm_secs: spec.warm_secs,
+        });
+    }
+
+    // Baselines: snapshot each job's ledger when its warm-up ends, so
+    // the tail window measures converged behaviour only.
+    let mut boundaries: Vec<(u64, usize)> = plan
+        .iter()
+        .enumerate()
+        .map(|(i, p)| (p.submit_secs + p.warm_secs, i))
+        .collect();
+    boundaries.sort();
+    let mut baselines: Vec<(u64, f64)> = vec![(0, 0.0); plan.len()];
+    for (secs, idx) in boundaries {
+        cluster.run(Duration::from_secs(secs), None)?;
+        let l = cluster.job_ledger(plan[idx].job);
+        baselines[idx] = (l.at_sinks, l.e2e_sum_us);
+    }
+
+    // Run each job to its end, then drain the whole cluster: every
+    // wire-borne buffer lands and every completion watch resolves.
+    let horizon = plan.iter().map(|p| p.end_secs).max().unwrap_or(0);
+    cluster.run(Duration::from_secs(horizon + 30), None)?;
+    let t = cluster.now();
+    cluster.stop_sources_at(t);
+    cluster.run(Duration::from_secs(horizon + 630), None)?;
+
+    let mut outcomes = Vec::new();
+    for (i, p) in plan.iter().enumerate() {
+        let l = cluster.job_ledger(p.job).clone();
+        let (base_sinks, base_sum) = baselines[i];
+        let tail = l.at_sinks.saturating_sub(base_sinks);
+        let tail_secs = (p.end_secs - (p.submit_secs + p.warm_secs)).max(1);
+        let tail_mean_ms =
+            (tail > 0).then(|| (l.e2e_sum_us - base_sum) / tail as f64 / 1e3);
+        let name = cluster
+            .scheduler()
+            .entry(p.job)
+            .map(|e| e.name.clone())
+            .unwrap_or_default();
+        outcomes.push(JobOutcome {
+            job: p.job,
+            name,
+            is_latency: p.is_latency,
+            constraint_ms: p.constraint_ms,
+            tail_mean_ms,
+            tail_rate: tail as f64 / tail_secs as f64,
+            expected_rate: p.expected_rate,
+            state: cluster.job_state(p.job),
+            ingested: l.items_ingested,
+            at_sinks: l.at_sinks,
+            lost: l.accounted_lost,
+            conservation_ok: cluster.job_conservation(p.job).is_ok(),
+        });
+    }
+    if verbose {
+        for o in &outcomes {
+            println!("{}", render_outcome(o));
+        }
+    }
+    Ok(MultiReport {
+        policy,
+        workers: spec.workers,
+        outcomes,
+        events: cluster.stats.events_processed,
+        fingerprint: multi_fingerprint(&cluster.stats),
+    })
+}
+
+/// One line per job for CLI output.
+pub fn render_outcome(o: &JobOutcome) -> String {
+    format!(
+        "  {} {:<14} {:<9} | tail {} | rate {:.1}/s (expect {:.1}) | \
+         {} of {} at sinks, lost {} | {}",
+        o.job,
+        o.name,
+        o.state.map_or("?".to_string(), |s| format!("{s:?}").to_lowercase()),
+        o.tail_mean_ms
+            .map_or("n/a".to_string(), |m| format!("{m:.1} ms")),
+        o.tail_rate,
+        o.expected_rate,
+        o.at_sinks,
+        o.ingested,
+        o.lost,
+        if o.conservation_ok { "conserved" } else { "CONSERVATION BROKEN" },
+    )
+}
+
+/// Gate one report; returns a human-readable failure, if any.
+pub fn verify_report(r: &MultiReport, tolerance: f64) -> Result<()> {
+    for o in &r.outcomes {
+        if !o.latency_ok(tolerance) {
+            bail!(
+                "policy {}: latency job {} ({}) missed its constraint: tail {} vs limit \
+                 {} ms × {tolerance}",
+                r.policy,
+                o.job,
+                o.name,
+                o.tail_mean_ms.map_or("n/a".into(), |m| format!("{m:.1} ms")),
+                o.constraint_ms.unwrap_or(0),
+            );
+        }
+        if !o.throughput_ok() {
+            bail!(
+                "policy {}: throughput job {} ({}) lost its rate: {:.1}/s of {:.1} expected",
+                r.policy,
+                o.job,
+                o.name,
+                o.tail_rate,
+                o.expected_rate
+            );
+        }
+        if !o.conservation_ok {
+            bail!("policy {}: job {} ({}) broke conservation", r.policy, o.job, o.name);
+        }
+        if o.state != Some(JobState::Completed) {
+            bail!(
+                "policy {}: job {} ({}) did not complete: {:?}",
+                r.policy,
+                o.job,
+                o.name,
+                o.state
+            );
+        }
+    }
+    Ok(())
+}

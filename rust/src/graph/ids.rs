@@ -29,6 +29,13 @@ macro_rules! id_type {
 }
 
 id_type!(
+    /// A job submitted to the cluster.  The single-job constructors use
+    /// `JobId(0)`; the multi-job scheduler hands out dense ids in
+    /// submission order.
+    JobId,
+    "j"
+);
+id_type!(
     /// A vertex of the job graph (one logical task type, e.g. "Decoder").
     JobVertexId,
     "jv"
@@ -63,5 +70,7 @@ mod tests {
         assert_eq!(VertexId(3).to_string(), "v3");
         assert_eq!(WorkerId(7).index(), 7);
         assert_eq!(ChannelId::from(9usize), ChannelId(9));
+        assert_eq!(JobId(2).to_string(), "j2");
+        assert_eq!(JobId::default(), JobId(0));
     }
 }

@@ -3,7 +3,9 @@
 //! distribution pattern that determines how the edge expands into
 //! runtime channels.
 
-use super::ids::{JobEdgeId, JobVertexId};
+use super::ids::{JobEdgeId, JobId, JobVertexId};
+use crate::graph::constraint::JobConstraint;
+use crate::graph::sequence::{JobSeqElem, JobSequence};
 use anyhow::{bail, Result};
 
 /// How a job edge expands into runtime channels (§2.1 / §4.2 topology).
@@ -21,6 +23,10 @@ pub enum DistributionPattern {
 #[derive(Debug, Clone)]
 pub struct JobVertex {
     pub id: JobVertexId,
+    /// Job this vertex belongs to.  Standalone job graphs use `JobId(0)`;
+    /// the multi-job union graph tags each absorbed job's vertices with
+    /// the id the scheduler assigned at submission.
+    pub job: JobId,
     pub name: String,
     /// Degree of parallelism m: how many runtime vertices this expands to.
     pub parallelism: u32,
@@ -68,6 +74,7 @@ impl JobGraph {
         let id = JobVertexId(self.vertices.len() as u32);
         self.vertices.push(JobVertex {
             id,
+            job: JobId(0),
             name: name.to_string(),
             parallelism,
             cpu_utilization: 0.1,
@@ -196,6 +203,42 @@ impl JobGraph {
         Ok(())
     }
 
+    /// Absorb a standalone (validated) job graph into this union graph:
+    /// its vertices and edges are appended with offset ids and tagged
+    /// with `owner`.  Returns the [`JobRemap`] that translates the
+    /// standalone graph's ids (and anything referencing them — sequences,
+    /// constraints, source targets) into the union id space.
+    ///
+    /// The absorbed graph keeps its own source/sink marks (set by its own
+    /// `validate()`); the union is a forest of disjoint DAGs and is never
+    /// re-validated as a whole.
+    pub fn absorb(&mut self, other: &JobGraph, owner: JobId) -> JobRemap {
+        let remap = JobRemap {
+            vertex_base: self.vertices.len() as u32,
+            edge_base: self.edges.len() as u32,
+        };
+        for v in &other.vertices {
+            let mut v = v.clone();
+            v.id = remap.vertex(v.id);
+            v.job = owner;
+            self.vertices.push(v);
+        }
+        for e in &other.edges {
+            self.edges.push(JobEdge {
+                id: remap.edge(e.id),
+                from: remap.vertex(e.from),
+                to: remap.vertex(e.to),
+                pattern: e.pattern,
+            });
+        }
+        remap
+    }
+
+    /// Job vertices belonging to `job` (union-graph view).
+    pub fn vertices_of_job(&self, job: JobId) -> impl Iterator<Item = &JobVertex> {
+        self.vertices.iter().filter(move |v| v.job == job)
+    }
+
     /// Topological order of job vertices.
     pub fn topo_order(&self) -> Vec<JobVertexId> {
         let n = self.vertices.len();
@@ -217,6 +260,43 @@ impl JobGraph {
             }
         }
         order
+    }
+}
+
+/// Id translation from a standalone job graph into the union graph it
+/// was absorbed into: every id is offset by the union size at absorption
+/// time, so the map is two adds.
+#[derive(Debug, Clone, Copy)]
+pub struct JobRemap {
+    pub vertex_base: u32,
+    pub edge_base: u32,
+}
+
+impl JobRemap {
+    pub fn vertex(&self, v: JobVertexId) -> JobVertexId {
+        JobVertexId(v.0 + self.vertex_base)
+    }
+
+    pub fn edge(&self, e: JobEdgeId) -> JobEdgeId {
+        JobEdgeId(e.0 + self.edge_base)
+    }
+
+    /// Translate a job sequence built against the standalone graph.
+    pub fn sequence(&self, s: &JobSequence) -> JobSequence {
+        JobSequence::new(
+            s.elems
+                .iter()
+                .map(|el| match el {
+                    JobSeqElem::Vertex(v) => JobSeqElem::Vertex(self.vertex(*v)),
+                    JobSeqElem::Edge(e) => JobSeqElem::Edge(self.edge(*e)),
+                })
+                .collect(),
+        )
+    }
+
+    /// Translate a constraint built against the standalone graph.
+    pub fn constraint(&self, c: &JobConstraint) -> JobConstraint {
+        JobConstraint::new(self.sequence(&c.sequence), c.max_latency, c.window)
     }
 }
 
@@ -295,5 +375,63 @@ mod tests {
         for e in &g.edges {
             assert!(pos(e.from) < pos(e.to));
         }
+    }
+
+    #[test]
+    fn absorb_offsets_ids_and_tags_jobs() {
+        let mut a = diamond();
+        a.validate().unwrap();
+        let mut b = diamond();
+        b.validate().unwrap();
+        let mut union = JobGraph::new();
+        let r0 = union.absorb(&a, JobId(0));
+        let r1 = union.absorb(&b, JobId(1));
+        assert_eq!(union.vertices.len(), 8);
+        assert_eq!(union.edges.len(), 8);
+        assert_eq!((r0.vertex_base, r0.edge_base), (0, 0));
+        assert_eq!((r1.vertex_base, r1.edge_base), (4, 4));
+        // Dense ids, ownership tags, and internally consistent edges.
+        for (i, v) in union.vertices.iter().enumerate() {
+            assert_eq!(v.id.index(), i);
+            assert_eq!(v.job, if i < 4 { JobId(0) } else { JobId(1) });
+        }
+        for (i, e) in union.edges.iter().enumerate() {
+            assert_eq!(e.id.index(), i);
+            let same_job = union.vertex(e.from).job == union.vertex(e.to).job;
+            assert!(same_job, "absorbed edges never cross jobs");
+        }
+        assert_eq!(union.vertices_of_job(JobId(1)).count(), 4);
+        // Source/sink marks survive absorption.
+        assert!(union.vertex(r1.vertex(JobVertexId(0))).is_source);
+        assert!(union.vertex(r1.vertex(JobVertexId(3))).is_sink);
+    }
+
+    #[test]
+    fn remap_translates_sequences_and_constraints() {
+        let mut a = diamond();
+        a.validate().unwrap();
+        let mut union = JobGraph::new();
+        union.absorb(&a, JobId(0)); // occupy the low ids
+        let remap = union.absorb(&a, JobId(1));
+        let seq = crate::graph::sequence::JobSequence::along_path(
+            &a,
+            &[JobVertexId(1)],
+            Some(JobVertexId(0)),
+            Some(JobVertexId(3)),
+        )
+        .unwrap();
+        let jc = JobConstraint::new(
+            seq,
+            crate::util::time::Duration::from_millis(300),
+            crate::util::time::Duration::from_secs(15),
+        );
+        let mapped = remap.constraint(&jc);
+        // The remapped sequence must be valid against the union graph and
+        // reference only the second copy's vertices.
+        mapped.validate(&union).unwrap();
+        for v in mapped.sequence.vertices() {
+            assert_eq!(union.vertex(v).job, JobId(1));
+        }
+        assert_eq!(mapped.max_latency, jc.max_latency);
     }
 }

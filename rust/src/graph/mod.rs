@@ -16,7 +16,7 @@ pub mod runtime;
 pub mod sequence;
 
 pub use constraint::{JobConstraint, RuntimeConstraintSet};
-pub use ids::{ChannelId, JobEdgeId, JobVertexId, VertexId, WorkerId};
-pub use job::{DistributionPattern, JobEdge, JobGraph, JobVertex};
+pub use ids::{ChannelId, JobEdgeId, JobId, JobVertexId, VertexId, WorkerId};
+pub use job::{DistributionPattern, JobEdge, JobGraph, JobRemap, JobVertex};
 pub use runtime::{Channel, RuntimeGraph, RuntimeVertex};
 pub use sequence::{JobSequence, JobSeqElem, RuntimeSequence, SeqElem};

@@ -60,6 +60,85 @@ impl RuntimeGraph {
         })
     }
 
+    /// An empty runtime graph over `num_workers` workers: the starting
+    /// state of a multi-job cluster, grown one job at a time by
+    /// [`RuntimeGraph::append_job`].
+    pub fn empty(num_workers: u32) -> Result<RuntimeGraph> {
+        if num_workers == 0 {
+            bail!("need at least one worker");
+        }
+        Ok(RuntimeGraph {
+            vertices: Vec::new(),
+            channels: Vec::new(),
+            members: Vec::new(),
+            outs: Vec::new(),
+            ins: Vec::new(),
+            num_workers,
+        })
+    }
+
+    /// Append the expansion of a newly absorbed job to this runtime
+    /// graph: expands the union graph's job vertices from index
+    /// `first_vertex` and edges from index `first_edge` (the ranges
+    /// [`super::job::JobGraph::absorb`] appended), placing each instance
+    /// via `place`.  Vertex/channel ids stay dense; existing jobs'
+    /// adjacency is untouched because absorbed edges never cross jobs.
+    pub fn append_job(
+        &mut self,
+        job: &JobGraph,
+        first_vertex: usize,
+        first_edge: usize,
+        place: &Placement<'_>,
+    ) -> Result<()> {
+        debug_assert_eq!(self.members.len(), first_vertex);
+        for jv in &job.vertices[first_vertex..] {
+            self.members.push(Vec::new());
+            for s in 0..jv.parallelism {
+                let id = VertexId(self.vertices.len() as u32);
+                let worker = place(jv.id, s);
+                if worker.0 >= self.num_workers {
+                    bail!("placement put {} subtask {s} on invalid {worker}", jv.name);
+                }
+                self.vertices.push(RuntimeVertex { id, job_vertex: jv.id, subtask: s, worker });
+                self.members[jv.id.index()].push(id);
+                self.outs.push(Vec::new());
+                self.ins.push(Vec::new());
+            }
+        }
+        for je in &job.edges[first_edge..] {
+            let from_members = self.members[je.from.index()].clone();
+            let to_members = self.members[je.to.index()].clone();
+            let mut push = |from: VertexId, to: VertexId| {
+                let id = ChannelId(self.channels.len() as u32);
+                self.channels
+                    .push(Channel { id, job_edge: je.id, from, to, detached: false });
+                self.outs[from.index()].push(id);
+                self.ins[to.index()].push(id);
+            };
+            match je.pattern {
+                DistributionPattern::Pointwise => {
+                    if from_members.len() != to_members.len() {
+                        bail!(
+                            "pointwise edge {} with mismatched parallelism",
+                            je.id
+                        );
+                    }
+                    for (f, t) in from_members.iter().zip(&to_members) {
+                        push(*f, *t);
+                    }
+                }
+                DistributionPattern::AllToAll => {
+                    for &f in &from_members {
+                        for &t in &to_members {
+                            push(f, t);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Expand with a custom placement.
     pub fn expand_with(
         job: &JobGraph,
@@ -410,6 +489,61 @@ mod tests {
         // Invalid target workers are rejected without side effects.
         assert!(rg.reassign_instance(b1, WorkerId(99)).is_err());
         assert_eq!(rg.worker(b1), WorkerId(0));
+    }
+
+    #[test]
+    fn append_job_matches_expand_for_each_job() {
+        // Two absorbed copies of a job expand to the same per-job shape a
+        // standalone expand produces, with globally dense ids.
+        use crate::graph::ids::JobId;
+        let mut standalone = JobGraph::new();
+        let a = standalone.add_vertex("a", 2);
+        let b = standalone.add_vertex("b", 3);
+        standalone.connect(a, b, DistributionPattern::AllToAll);
+        standalone.validate().unwrap();
+
+        let mut union = JobGraph::new();
+        let mut rg = RuntimeGraph::empty(2).unwrap();
+        for j in 0..2u32 {
+            let remap = union.absorb(&standalone, JobId(j));
+            rg.append_job(
+                &union,
+                remap.vertex_base as usize,
+                remap.edge_base as usize,
+                &|_, s| WorkerId(s % 2),
+            )
+            .unwrap();
+        }
+        assert_eq!(rg.vertices.len(), 10);
+        assert_eq!(rg.channels.len(), 12);
+        for (i, v) in rg.vertices.iter().enumerate() {
+            assert_eq!(v.id.index(), i, "dense vertex ids");
+        }
+        for (i, c) in rg.channels.iter().enumerate() {
+            assert_eq!(c.id.index(), i, "dense channel ids");
+        }
+        // Per-job adjacency: the second job's `a` members fan out to the
+        // second job's `b` members only.
+        let a2 = JobVertexId(2);
+        let b2 = JobVertexId(3);
+        assert_eq!(rg.members(a2).len(), 2);
+        assert_eq!(rg.members(b2).len(), 3);
+        for &v in rg.members(a2) {
+            assert_eq!(rg.out_channels(v).len(), 3);
+            for &c in rg.out_channels(v) {
+                assert!(rg.members(b2).contains(&rg.channel(c).to));
+            }
+        }
+        // Invalid placement is rejected.
+        let remap = union.absorb(&standalone, JobId(2));
+        assert!(rg
+            .append_job(
+                &union,
+                remap.vertex_base as usize,
+                remap.edge_base as usize,
+                &|_, _| WorkerId(9),
+            )
+            .is_err());
     }
 
     #[test]

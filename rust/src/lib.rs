@@ -31,5 +31,6 @@ pub mod live;
 pub mod pipeline;
 pub mod qos;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod util;

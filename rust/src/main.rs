@@ -3,13 +3,15 @@
 //! ```text
 //! nephele sim-video  [--scale small|paper] [--scenario unopt|buffers|full]
 //!                    [--secs N] [--seed N] [--constraint-ms N] [--quiet]
-//! nephele sim-meter  [--secs N] [--optimized true|false]
+//! nephele sim-meter  [--secs N] [--seed N] [--optimized true|false] [--quiet]
 //! nephele sim-surge  [--secs N] [--seed N] [--scaling true|false]
 //!                    [--surge-at SECS] [--constraint-ms N] [--quiet]
 //! nephele sim-failover [--secs N] [--seed N] [--recovery true|false]
 //!                    [--fail-at SECS] [--constraint-ms N] [--quiet]
 //! nephele sim-scale  [--quick] [--secs N] [--tail N] [--seed N]
 //!                    [--min-ratio F] [--quiet]
+//! nephele sim-multi  [--quick] [--seed N] [--policy spread|pack|least-loaded]
+//!                    [--tolerance F] [--quiet]
 //! nephele live       [--frames N] [--fps F] [--artifacts DIR]
 //! nephele info
 //! ```
@@ -19,23 +21,30 @@
 //! reaches `--min-ratio` (default 13, the paper's "factor of at least
 //! 13") at preserved throughput.
 //!
-//! The per-figure experiment binaries (`fig2`, `fig7`..`fig10`, `surge`,
-//! `failover`) regenerate the paper's evaluation plus the elastic-scaling
-//! and failure-recovery scenarios; this binary is the general launcher.
+//! `sim-multi` runs the multi-job scheduler scenario — staggered
+//! latency-constrained video pipelines plus a throughput-oriented
+//! Hadoop-Online-style job on one shared pool — twice per placement
+//! policy, and exits non-zero unless every latency job holds its
+//! constraint, the throughput job keeps its sink rate, every per-job
+//! conservation ledger balances, and the same seed replays
+//! byte-identically.
+//!
+//! All flag parsing lives in `bin/figbin_common.rs` (shared with the
+//! figure binaries), so flags, usage strings and the `info` subcommand
+//! list cannot drift per binary.
 
-// Shared surge CLI plumbing, also included by the `surge` binary.
+// Shared CLI plumbing, also included by the figure binaries.
 #[path = "bin/figbin_common.rs"]
 mod figbin;
 
 use anyhow::{bail, Result};
-use nephele::config::EngineConfig;
 use nephele::experiments::failover::run_failover;
 use nephele::experiments::load_surge::run_load_surge;
+use nephele::experiments::multi::{run_multi, verify_report};
 use nephele::experiments::scale::run_scale;
-use nephele::experiments::video_scenarios::{run_video_scenario, Scenario};
-use nephele::live::{run_live, LiveConfig};
+use nephele::experiments::video_scenarios::run_video_scenario;
+use nephele::live::run_live;
 use nephele::pipeline::meter::{smart_meter_job, MeterSpec};
-use nephele::pipeline::video::VideoSpec;
 use nephele::sim::cluster::SimCluster;
 use nephele::sim::metrics::breakdown;
 use nephele::util::time::Duration;
@@ -48,72 +57,28 @@ fn main() -> Result<()> {
         Some("sim-surge") => sim_surge(&argv[1..]),
         Some("sim-failover") => sim_failover(&argv[1..]),
         Some("sim-scale") => sim_scale(&argv[1..]),
+        Some("sim-multi") => sim_multi(&argv[1..]),
         Some("live") => live(&argv[1..]),
         Some("info") | None => {
             println!("nephele-streaming — reproduction of 'Nephele Streaming: Stream");
             println!("Processing under QoS Constraints at Scale' (Cluster Computing 2013).");
             println!();
-            println!(
-                "subcommands: sim-video | sim-meter | sim-surge | sim-failover | sim-scale | live | info"
-            );
+            println!("subcommands: {}", figbin::SUBCOMMANDS);
             println!(
                 "figure binaries: fig2, fig7, fig8, fig9, fig10, surge, failover (see EXPERIMENTS.md)"
             );
             Ok(())
         }
-        Some(other) => bail!("unknown subcommand {other:?} (try `nephele info`)"),
+        Some(other) => {
+            bail!("unknown subcommand {other:?} (try `nephele info`: {})", figbin::SUBCOMMANDS)
+        }
     }
-}
-
-fn take_val<'a>(argv: &'a [String], i: &mut usize) -> Result<&'a str> {
-    *i += 1;
-    argv.get(*i)
-        .map(|s| s.as_str())
-        .ok_or_else(|| anyhow::anyhow!("missing value after {}", argv[*i - 1]))
 }
 
 fn sim_video(argv: &[String]) -> Result<()> {
-    let mut spec = VideoSpec::small();
-    let mut cfg = EngineConfig::default();
-    let mut scenario = Scenario::BuffersAndChaining;
-    let mut secs = 600;
-    let mut verbose = true;
-    let mut i = 0;
-    while i < argv.len() {
-        match argv[i].as_str() {
-            "--scale" => {
-                spec = match take_val(argv, &mut i)? {
-                    "small" => VideoSpec::small(),
-                    "paper" => VideoSpec::default(),
-                    other => bail!("unknown scale {other:?}"),
-                }
-            }
-            "--scenario" => {
-                scenario = match take_val(argv, &mut i)? {
-                    "unopt" => Scenario::Unoptimized,
-                    "buffers" => Scenario::AdaptiveBuffers,
-                    "full" => Scenario::BuffersAndChaining,
-                    other => bail!("unknown scenario {other:?}"),
-                }
-            }
-            "--secs" => secs = take_val(argv, &mut i)?.parse()?,
-            "--seed" => cfg.seed = take_val(argv, &mut i)?.parse()?,
-            "--constraint-ms" => spec.constraint_ms = take_val(argv, &mut i)?.parse()?,
-            "--quiet" => verbose = false,
-            other => bail!("unknown argument {other:?}"),
-        }
-        i += 1;
-    }
+    let (spec, cfg, scenario, secs, verbose) = figbin::video_scenario_args(argv, 600)?;
     let report = run_video_scenario(scenario, spec, cfg, secs, 30, verbose)?;
-    println!("== {} ==", report.scenario.title());
-    print!("{}", report.final_breakdown.render());
-    println!(
-        "buffer updates: {} | chains: {} | unresolvable: {} | delivered: {}",
-        report.buffer_updates,
-        report.chains_established,
-        report.unresolvable,
-        report.items_delivered
-    );
+    figbin::print_scenario_summary(&report);
     Ok(())
 }
 
@@ -153,42 +118,49 @@ fn sim_scale(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn sim_meter(argv: &[String]) -> Result<()> {
-    let mut secs = 1500;
-    let mut optimized = true;
-    let mut cfg = EngineConfig::default();
-    let mut i = 0;
-    while i < argv.len() {
-        match argv[i].as_str() {
-            "--secs" => secs = take_val(argv, &mut i)?.parse()?,
-            "--seed" => cfg.seed = take_val(argv, &mut i)?.parse()?,
-            "--optimized" => optimized = take_val(argv, &mut i)?.parse()?,
-            other => bail!("unknown argument {other:?}"),
+/// Run the multi-job scenario twice per policy: once for the report,
+/// once to pin same-seed byte-identical replay, gating every per-job
+/// check each time.
+fn sim_multi(argv: &[String]) -> Result<()> {
+    let (spec, cfg, policies, tolerance, verbose) = figbin::multi_args(argv)?;
+    for policy in policies {
+        let report = run_multi(spec, cfg, policy, false)?;
+        if verbose {
+            figbin::print_multi_summary(&report);
         }
-        i += 1;
+        verify_report(&report, tolerance)?;
+        let replay = run_multi(spec, cfg, policy, false)?;
+        verify_report(&replay, tolerance)?;
+        if report.fingerprint != replay.fingerprint {
+            bail!("policy {policy}: same-seed replay diverged (nondeterministic scheduler path)");
+        }
+        println!(
+            "policy {policy}: {} jobs ok (latency within {tolerance}x, throughput preserved, \
+             per-job conservation holds, fingerprints byte-identical)",
+            report.outcomes.len()
+        );
     }
+    Ok(())
+}
+
+fn sim_meter(argv: &[String]) -> Result<()> {
+    let (cfg, secs, optimized, verbose) = figbin::meter_args(argv, 1500)?;
     let cfg = if optimized { cfg.fully_optimized() } else { cfg.unoptimized() };
     let (job, rg, constraints, specs, sources, seq) = smart_meter_job(MeterSpec::default())?;
     let mut cluster = SimCluster::new(job, rg, &constraints, specs, sources, cfg)?;
     cluster.run(Duration::from_secs(secs), None)?;
     let now = cluster.now();
-    print!("{}", breakdown(&mut cluster, &seq, now).render());
+    let b = breakdown(&mut cluster, &seq, now);
+    if verbose {
+        print!("{}", b.render());
+    } else {
+        println!("total workflow latency: {:.1} ms", b.total_ms());
+    }
     Ok(())
 }
 
 fn live(argv: &[String]) -> Result<()> {
-    let mut cfg = LiveConfig::default();
-    let mut i = 0;
-    while i < argv.len() {
-        match argv[i].as_str() {
-            "--frames" => cfg.frames = take_val(argv, &mut i)?.parse()?,
-            "--fps" => cfg.fps = take_val(argv, &mut i)?.parse()?,
-            "--artifacts" => cfg.artifacts_dir = take_val(argv, &mut i)?.into(),
-            "--constraint-ms" => cfg.constraint_ms = take_val(argv, &mut i)?.parse()?,
-            other => bail!("unknown argument {other:?}"),
-        }
-        i += 1;
-    }
+    let cfg = figbin::live_args(argv)?;
     let report = run_live(&cfg)?;
     println!(
         "before: {:.1} ms | after: {:.1} ms | improvement {:.1}x | buffer updates {} | chained {}",

@@ -4,6 +4,7 @@
 pub mod failover;
 pub mod meter;
 pub mod microbench;
+pub mod multi;
 pub mod scale;
 pub mod surge;
 pub mod video;
@@ -11,6 +12,7 @@ pub mod video;
 pub use failover::{failover_job, FailoverJob, FailoverSpec};
 pub use meter::{smart_meter_job, MeterSpec};
 pub use microbench::{sender_receiver_job, MicrobenchSpec};
+pub use multi::MultiSpec;
 pub use scale::ScaleSpec;
 pub use surge::{surge_job, SurgeJob, SurgeSpec};
 pub use video::{video_job, VideoJob, VideoSpec};

@@ -1,0 +1,259 @@
+//! The multi-job workload (`nephele sim-multi`): staggered arrivals of
+//! several latency-constrained video pipelines plus one
+//! throughput-oriented Hadoop-Online-style batch job, all contending
+//! for the same pool of workers.
+//!
+//! This is the workload dimension the paper's §2 design principles
+//! argue for — many individually-trivial jobs whose *aggregate* needs a
+//! massively-parallel framework — and it makes the QoS control loop
+//! earn its keep under contention: every latency job must end within
+//! its constraint tolerance while the throughput job's sink rate is
+//! preserved, under every placement policy.
+//!
+//! One [`MultiSpec`] derives all submissions, so the scenario is sized
+//! coherently: the slot ledger holds every job at peak concurrency with
+//! headroom for elastic scaling, and group/stream counts satisfy the
+//! divisibility rules of both pipeline builders.
+
+use crate::baseline::hadoop::{hadoop_online_job, HadoopSpec};
+use crate::pipeline::video::{video_job, VideoSpec};
+use crate::qos::manager::ManagerConfig;
+use crate::sched::JobSubmission;
+use crate::util::time::Duration;
+use anyhow::Result;
+
+/// Parameters of the multi-job scenario.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiSpec {
+    /// Shared worker pool size.
+    pub workers: u32,
+    /// Task slots per worker (the scheduler's capacity unit).
+    pub slots_per_worker: u32,
+    /// Number of latency-constrained video pipelines.
+    pub latency_jobs: u32,
+    /// Parallelism per task type of each latency job.
+    pub latency_parallelism: u32,
+    /// External streams per latency job.
+    pub latency_streams: u32,
+    /// Streams merged per group (both job kinds).
+    pub group_size: u32,
+    /// Frames per second per stream.
+    pub fps: f64,
+    /// Latency constraint l per latency job (ms).
+    pub constraint_ms: u64,
+    pub window_secs: u64,
+    /// Submission spacing between consecutive latency jobs (s).
+    pub stagger_secs: u64,
+    /// Source lifetime of each latency job (s after its submission).
+    pub latency_job_secs: u64,
+    /// Parallelism per task type of the throughput job.
+    pub throughput_parallelism: u32,
+    pub throughput_streams: u32,
+    /// Source lifetime of the throughput job (submitted at t=0).
+    pub throughput_secs: u64,
+    /// Per-job QoS warm-up before the tail measurement starts (s).
+    pub warm_secs: u64,
+}
+
+impl Default for MultiSpec {
+    fn default() -> Self {
+        MultiSpec {
+            workers: 16,
+            slots_per_worker: 8,
+            latency_jobs: 4,
+            latency_parallelism: 4,
+            latency_streams: 32,
+            group_size: 4,
+            fps: 4.0,
+            constraint_ms: 300,
+            window_secs: 15,
+            stagger_secs: 45,
+            latency_job_secs: 300,
+            throughput_parallelism: 4,
+            throughput_streams: 16,
+            throughput_secs: 495,
+            warm_secs: 150,
+        }
+    }
+}
+
+impl MultiSpec {
+    /// Reduced configuration for CI smoke runs and tests: fewer and
+    /// smaller jobs on a smaller pool, same code path.
+    pub fn quick() -> MultiSpec {
+        MultiSpec {
+            workers: 8,
+            slots_per_worker: 8,
+            latency_jobs: 3,
+            latency_parallelism: 2,
+            latency_streams: 16,
+            stagger_secs: 30,
+            latency_job_secs: 240,
+            throughput_parallelism: 4,
+            throughput_streams: 16,
+            throughput_secs: 330,
+            warm_secs: 150,
+            ..MultiSpec::default()
+        }
+    }
+
+    /// Minimal configuration for the (debug-build) test suite.
+    pub fn tiny() -> MultiSpec {
+        MultiSpec {
+            workers: 4,
+            slots_per_worker: 10,
+            latency_jobs: 2,
+            latency_parallelism: 2,
+            latency_streams: 16,
+            stagger_secs: 20,
+            latency_job_secs: 180,
+            throughput_parallelism: 2,
+            throughput_streams: 8,
+            throughput_secs: 230,
+            warm_secs: 120,
+            ..MultiSpec::default()
+        }
+    }
+
+    /// Submission time of latency job `idx`.
+    pub fn latency_submit_at(&self, idx: u32) -> Duration {
+        Duration::from_secs(self.stagger_secs * idx as u64)
+    }
+
+    /// Steady-state sink rate of one latency job (merged frames/s).
+    pub fn latency_expected_rate(&self) -> f64 {
+        (self.latency_streams / self.group_size) as f64 * self.fps
+    }
+
+    /// Steady-state sink rate of the throughput job: merged frames per
+    /// second divided by the frames the reduce-side window folds into
+    /// one emission (see `experiments/scale.rs` for the derivation).
+    pub fn throughput_expected_rate(&self) -> f64 {
+        let merged = (self.throughput_streams / self.group_size) as f64 * self.fps;
+        let frame_interval = 1.0 / self.fps;
+        let window = HadoopSpec::default().reduce_window.as_secs_f64();
+        let frames_per_emit = (window / frame_interval).ceil() + 1.0;
+        merged / frames_per_emit
+    }
+
+    /// Total instances at peak concurrency (for capacity sizing): all
+    /// jobs overlap in the worst case.
+    pub fn peak_demand(&self) -> u32 {
+        // Video pipeline: 6 task types; HOP expression: 5.
+        self.latency_jobs * 6 * self.latency_parallelism + 5 * self.throughput_parallelism
+    }
+
+    /// Slot capacity of the pool.
+    pub fn capacity(&self) -> u32 {
+        self.workers * self.slots_per_worker
+    }
+}
+
+/// Build the submission for latency job `idx`: the §4.1.1 video
+/// pipeline under the paper's constraint, sized per the spec.  The
+/// runtime expansion the builder performs is discarded — placement is
+/// the scheduler's job at submit time.
+pub fn latency_submission(spec: &MultiSpec, idx: u32) -> Result<JobSubmission> {
+    let vspec = VideoSpec {
+        parallelism: spec.latency_parallelism,
+        workers: spec.workers,
+        streams: spec.latency_streams,
+        group_size: spec.group_size,
+        fps: spec.fps,
+        constraint_ms: spec.constraint_ms,
+        window_secs: spec.window_secs,
+        ..VideoSpec::default()
+    };
+    let vj = video_job(vspec)?;
+    Ok(JobSubmission {
+        name: format!("video-{idx}"),
+        job: vj.job,
+        constraints: vj.constraints,
+        task_specs: vj.task_specs,
+        sources: vj.sources,
+        run_for: Some(Duration::from_secs(spec.latency_job_secs)),
+        manager: None, // engine default: the cluster arms full QoS
+    })
+}
+
+/// Build the throughput job: the §4.1.2 Hadoop-Online expression of the
+/// video workload, running *unoptimised* (static 32 KB buffers, no
+/// chaining — HOP has no QoS management) under a monitoring-only
+/// constraint.  Its yardstick is sink rate, not latency.
+pub fn throughput_submission(spec: &MultiSpec) -> Result<JobSubmission> {
+    let hspec = HadoopSpec {
+        parallelism: spec.throughput_parallelism,
+        workers: spec.workers,
+        streams: spec.throughput_streams,
+        group_size: spec.group_size,
+        fps: spec.fps,
+        ..HadoopSpec::default()
+    };
+    let hj = hadoop_online_job(hspec)?;
+    Ok(JobSubmission {
+        name: "hadoop-batch".to_string(),
+        job: hj.job,
+        constraints: hj.constraints,
+        task_specs: hj.task_specs,
+        sources: hj.sources,
+        run_for: Some(Duration::from_secs(spec.throughput_secs)),
+        manager: Some(ManagerConfig {
+            enable_buffer_sizing: false,
+            enable_chaining: false,
+            enable_scaling: false,
+            ..ManagerConfig::default()
+        }),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_fit_their_slot_capacity() {
+        for spec in [MultiSpec::default(), MultiSpec::quick(), MultiSpec::tiny()] {
+            assert!(
+                spec.peak_demand() <= spec.capacity(),
+                "peak demand {} exceeds capacity {}",
+                spec.peak_demand(),
+                spec.capacity()
+            );
+            // The throughput job outlives the last latency job, so the
+            // contention window covers every latency job's whole life.
+            let last_end =
+                spec.stagger_secs * (spec.latency_jobs as u64 - 1) + spec.latency_job_secs;
+            assert!(spec.throughput_secs >= last_end);
+            // Warm-up leaves a real measurement tail.
+            assert!(spec.warm_secs < spec.latency_job_secs);
+        }
+    }
+
+    #[test]
+    fn submissions_build_and_are_consistent() {
+        let spec = MultiSpec::tiny();
+        for i in 0..spec.latency_jobs {
+            let sub = latency_submission(&spec, i).unwrap();
+            assert_eq!(sub.job.vertices.len(), 6);
+            assert_eq!(sub.task_specs.len(), 6);
+            assert_eq!(sub.sources.len(), spec.latency_streams as usize);
+            assert_eq!(sub.constraints.len(), 1);
+            assert!(sub.manager.is_none());
+            let demand: u32 = sub.job.vertices.iter().map(|v| v.parallelism).sum();
+            assert_eq!(demand, 6 * spec.latency_parallelism);
+        }
+        let t = throughput_submission(&spec).unwrap();
+        assert_eq!(t.job.vertices.len(), 5);
+        let mgr = t.manager.unwrap();
+        assert!(!mgr.enable_buffer_sizing && !mgr.enable_chaining && !mgr.enable_scaling);
+    }
+
+    #[test]
+    fn expected_rates_match_the_scale_scenario_math() {
+        let spec = MultiSpec::quick();
+        // 16 streams / 4 per group * 4 fps = 16 merged frames/s.
+        assert_eq!(spec.latency_expected_rate(), 16.0);
+        // HOP window (100 ms) at 4 fps folds 2 frames per emission.
+        assert_eq!(spec.throughput_expected_rate(), 8.0);
+    }
+}

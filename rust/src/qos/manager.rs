@@ -18,7 +18,7 @@ use crate::actions::scaling::{
     pick_release_target, pick_scale_target, should_scale_down, ScalingConfig,
 };
 use crate::actions::Action;
-use crate::graph::ids::{ChannelId, JobVertexId, VertexId, WorkerId};
+use crate::graph::ids::{ChannelId, JobId, JobVertexId, VertexId, WorkerId};
 use crate::util::stats::WindowAvg;
 use crate::util::time::{Duration, Time};
 use std::collections::{BTreeMap, HashSet};
@@ -64,9 +64,11 @@ pub struct ChainEval {
     pub violated: bool,
 }
 
-/// Per-manager state.
+/// Per-manager state.  In a multi-job cluster each job has its own
+/// manager set; `job` stamps the actions that need master-side routing.
 #[derive(Debug)]
 pub struct QosManager {
+    job: JobId,
     worker: WorkerId,
     subgraph: QosSubgraph,
     cfg: ManagerConfig,
@@ -115,6 +117,7 @@ impl QosManager {
         let buffer_rounds = vec![0; subgraph.chains.len()];
         let reported_unresolvable = vec![false; subgraph.constraints.len()];
         QosManager {
+            job: JobId(0),
             worker,
             subgraph,
             cfg,
@@ -128,6 +131,17 @@ impl QosManager {
             scale_requests: BTreeMap::new(),
             max_window,
         }
+    }
+
+    /// Stamp the job this manager works for (multi-job clusters; the
+    /// single-job constructors keep the `JobId(0)` default).
+    pub fn with_job(mut self, job: JobId) -> Self {
+        self.job = job;
+        self
+    }
+
+    pub fn job(&self) -> JobId {
+        self.job
     }
 
     pub fn worker(&self) -> WorkerId {
@@ -378,6 +392,7 @@ impl QosManager {
                 if !self.reported_unresolvable[c] {
                     self.reported_unresolvable[c] = true;
                     actions.push(Action::Unresolvable {
+                        job: self.job,
                         manager: self.worker,
                         constraint: c,
                         worst_latency_ms: eval.worst_us / 1e3,
@@ -536,7 +551,7 @@ impl QosManager {
             .max(1)
             .min(cfg.max_parallelism - known - requested);
         *self.scale_requests.entry(group).or_insert(0) += step;
-        vec![Action::ScaleTasks { group, delta: step as i32, based_on: now }]
+        vec![Action::ScaleTasks { job: self.job, group, delta: step as i32, based_on: now }]
     }
 
     /// Release elastic capacity when a constraint is satisfied by a wide
@@ -562,7 +577,7 @@ impl QosManager {
         });
         match target {
             Some((group, _, _)) => {
-                vec![Action::ScaleTasks { group, delta: -1, based_on: now }]
+                vec![Action::ScaleTasks { job: self.job, group, delta: -1, based_on: now }]
             }
             None => Vec::new(),
         }
@@ -620,6 +635,7 @@ mod tests {
 
     fn report(at: Time, entries: Vec<ReportEntry>) -> Report {
         Report {
+            job: JobId(0),
             from: WorkerId(0),
             to_manager: WorkerId(0),
             at,

@@ -10,7 +10,7 @@
 //!   skipping managers with no fresh data (no empty reports).
 
 use super::sample::{ElementKey, Measurement, MetricKind, Report, ReportEntry};
-use crate::graph::ids::{ChannelId, WorkerId};
+use crate::graph::ids::{ChannelId, JobId, WorkerId};
 use crate::util::rng::Rng;
 use crate::util::stats::RunningAvg;
 use crate::util::time::{Duration, Time};
@@ -50,9 +50,12 @@ impl<K: std::hash::Hash + Eq + Copy> SamplingGate<K> {
 /// subgraphs contain the element (possibly several, §3.4.2 objective 2).
 pub type Interest = BTreeMap<(ElementKey, MetricKind), Vec<WorkerId>>;
 
-/// Per-worker reporter state.
+/// Per-worker reporter state.  In a multi-job cluster each job has its
+/// own reporter set (`job` stamps every report so the master can route
+/// it to the right job's managers and failure detector).
 #[derive(Debug)]
 pub struct QosReporter {
+    job: JobId,
     worker: WorkerId,
     interval: Duration,
     /// Pre-aggregation accumulators since last flush, keyed by element+metric.
@@ -78,6 +81,7 @@ impl QosReporter {
             .map(|m| (m, Time(rng.below(interval.as_micros().max(1)))))
             .collect();
         QosReporter {
+            job: JobId(0),
             worker,
             interval,
             acc: BTreeMap::new(),
@@ -85,6 +89,17 @@ impl QosReporter {
             next_flush,
             pending_buffer_updates: Vec::new(),
         }
+    }
+
+    /// Stamp the job this reporter works for (multi-job clusters; the
+    /// single-job constructors keep the `JobId(0)` default).
+    pub fn with_job(mut self, job: JobId) -> Self {
+        self.job = job;
+        self
+    }
+
+    pub fn job(&self) -> JobId {
+        self.job
     }
 
     pub fn worker(&self) -> WorkerId {
@@ -162,6 +177,7 @@ impl QosReporter {
                     reports
                         .entry(*m)
                         .or_insert_with(|| Report {
+                            job: self.job,
                             from: self.worker,
                             to_manager: *m,
                             at: now,
@@ -179,6 +195,7 @@ impl QosReporter {
                 reports
                     .entry(*m)
                     .or_insert_with(|| Report {
+                        job: self.job,
                         from: self.worker,
                         to_manager: *m,
                         at: now,

@@ -1,7 +1,7 @@
 //! Measurement primitives (§3.3): tags, samples, and the report format
 //! QoS Reporters send to QoS Managers.
 
-use crate::graph::ids::{ChannelId, VertexId, WorkerId};
+use crate::graph::ids::{ChannelId, JobId, VertexId, WorkerId};
 use crate::util::time::Time;
 
 /// The tag attached to a sampled data item: "a small piece of data that
@@ -90,6 +90,10 @@ pub struct ReportEntry {
 /// measurement interval (empty reports are never sent, §3.4.1).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Report {
+    /// Job whose QoS runtime this report belongs to: the master routes it
+    /// to that job's manager on `to_manager` and feeds that job's
+    /// failure detector.
+    pub job: JobId,
     pub from: WorkerId,
     pub to_manager: WorkerId,
     pub at: Time,

@@ -8,19 +8,63 @@
 //! `(worker, subgraph)` allocations (Algorithm 1).  Reporter assignments
 //! are derived from the manager allocations ("QoS Reporter Setup").
 
-use super::manager::QosManager;
+use super::manager::{ManagerConfig, QosManager};
 use super::reporter::{Interest, QosReporter};
 use super::sample::{ElementKey, MetricKind};
 use super::subgraph::{ChainSpec, ChannelRef, ConstraintParams, Layer, QosSubgraph, VertexRef};
 use crate::config::EngineConfig;
 use crate::graph::constraint::JobConstraint;
-use crate::graph::ids::{JobVertexId, VertexId, WorkerId};
+use crate::graph::ids::{JobId, JobVertexId, VertexId, WorkerId};
 use crate::graph::job::JobGraph;
 use crate::graph::runtime::RuntimeGraph;
 use crate::graph::sequence::JobSeqElem;
 use crate::util::rng::Rng;
-use anyhow::{bail, Result};
+use anyhow::Result;
 use std::collections::{BTreeMap, BTreeSet, HashSet};
+use std::fmt;
+
+/// Typed failures of the Algorithms 1–3 setup.  These used to be
+/// `unwrap()`s over candidate sets that are only non-empty for a healthy
+/// single-job topology; with job-scoped subgraphs (cancelled jobs,
+/// failovers that empty a group) every emptiness case surfaces as a
+/// value the master can report instead of a panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SetupError {
+    /// The constraint's sequence contains no job vertices (pure-channel
+    /// constraints are unsupported: there is nothing to anchor on).
+    NoSequenceVertices { constraint: usize },
+    /// Every job vertex of the sequence has zero live runtime members —
+    /// `max_work`/`min_edge` would be reductions over an empty candidate
+    /// set.  Happens when a job's instances were all detached.
+    NoAnchorCandidates { constraint: usize },
+    /// The anchor job vertex is not an element of its own sequence
+    /// (internal invariant; kept as an error so a future regression
+    /// cannot panic the master).
+    AnchorOutsideSequence { constraint: usize },
+}
+
+impl fmt::Display for SetupError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SetupError::NoSequenceVertices { constraint } => write!(
+                f,
+                "constraint {constraint}: sequence contains no job vertices \
+                 (pure-channel constraints unsupported)"
+            ),
+            SetupError::NoAnchorCandidates { constraint } => write!(
+                f,
+                "constraint {constraint}: no anchor candidates — every sequence vertex \
+                 has zero live runtime members"
+            ),
+            SetupError::AnchorOutsideSequence { constraint } => write!(
+                f,
+                "constraint {constraint}: anchor vertex is not in its own sequence"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SetupError {}
 
 /// Per-worker reporter duties.
 #[derive(Debug, Clone, Default)]
@@ -53,10 +97,11 @@ pub fn get_anchor_vertex(
     job: &JobGraph,
     rg: &RuntimeGraph,
     constraint: &JobConstraint,
-) -> Result<JobVertexId> {
+    constraint_idx: usize,
+) -> Result<JobVertexId, SetupError> {
     let vertices = constraint.sequence.vertices();
     if vertices.is_empty() {
-        bail!("constraint sequence contains no job vertices (pure-channel constraints unsupported)");
+        return Err(SetupError::NoSequenceVertices { constraint: constraint_idx });
     }
     let cnt_workers = |jv: JobVertexId| -> usize {
         let mut workers: HashSet<WorkerId> =
@@ -65,7 +110,18 @@ pub fn get_anchor_vertex(
         workers.clear();
         n
     };
-    let max_work = vertices.iter().map(|&jv| cnt_workers(jv)).max().unwrap();
+    // `vertices` is non-empty, but the reductions below are kept fallible:
+    // a topology where every sequence vertex lost all runtime members
+    // (cancelled job, total failover) must surface as a typed error, not
+    // an anchor with zero partitions.
+    let max_work = vertices
+        .iter()
+        .map(|&jv| cnt_workers(jv))
+        .max()
+        .ok_or(SetupError::NoAnchorCandidates { constraint: constraint_idx })?;
+    if max_work == 0 {
+        return Err(SetupError::NoAnchorCandidates { constraint: constraint_idx });
+    }
     let candidates: Vec<JobVertexId> = vertices
         .iter()
         .copied()
@@ -83,11 +139,15 @@ pub fn get_anchor_vertex(
             .min()
             .unwrap_or(u64::MAX)
     };
-    let min_edge = candidates.iter().map(|&jv| cnt_edge(jv)).min().unwrap();
-    Ok(candidates
+    let min_edge = candidates
+        .iter()
+        .map(|&jv| cnt_edge(jv))
+        .min()
+        .ok_or(SetupError::NoAnchorCandidates { constraint: constraint_idx })?;
+    candidates
         .into_iter()
         .find(|&jv| cnt_edge(jv) == min_edge)
-        .unwrap())
+        .ok_or(SetupError::NoAnchorCandidates { constraint: constraint_idx })
 }
 
 fn vertex_ref(job: &JobGraph, rg: &RuntimeGraph, v: VertexId) -> VertexRef {
@@ -200,7 +260,12 @@ fn graph_expand(
 
     ChainSpec {
         constraint: constraint_idx,
-        layers: layers.into_iter().map(|l| l.unwrap()).collect(),
+        // Both traversals assign every position, so a `None` here is a
+        // structural bug in this function, not a data condition.
+        layers: layers
+            .into_iter()
+            .map(|l| l.expect("graph_expand assigns every sequence position"))
+            .collect(),
     }
 }
 
@@ -212,13 +277,13 @@ fn get_qos_managers(
     constraint: &JobConstraint,
     constraint_idx: usize,
 ) -> Result<Vec<(WorkerId, QosSubgraph)>> {
-    let anchor_jv = get_anchor_vertex(job, rg, constraint)?;
+    let anchor_jv = get_anchor_vertex(job, rg, constraint, constraint_idx)?;
     let anchor_pos = constraint
         .sequence
         .elems
         .iter()
         .position(|e| matches!(e, JobSeqElem::Vertex(jv) if *jv == anchor_jv))
-        .expect("anchor vertex is in the sequence");
+        .ok_or(SetupError::AnchorOutsideSequence { constraint: constraint_idx })?;
 
     // PartitionByWorker(anchor).
     let mut partition: BTreeMap<WorkerId, Vec<VertexId>> = BTreeMap::new();
@@ -377,12 +442,31 @@ pub struct QosRuntime {
 }
 
 /// Run Algorithms 1–3 for the current topology and instantiate the
-/// reporter/manager roles.
+/// reporter/manager roles (single-job form: owner `JobId(0)`, the
+/// engine-wide manager arming).
 pub fn build_qos_runtime(
     job: &JobGraph,
     rg: &RuntimeGraph,
     constraints: &[JobConstraint],
     cfg: &EngineConfig,
+    rng: &mut Rng,
+) -> Result<QosRuntime> {
+    build_qos_runtime_for(JobId(0), job, rg, constraints, cfg, cfg.manager, rng)
+}
+
+/// Job-scoped form: run Algorithms 1–3 for `owner`'s constraints only
+/// (they reference the union graph's ids) and stamp the instantiated
+/// roles with the job, so reports and actions route back to it.  Each
+/// job may arm a different countermeasure set via `manager_cfg` — a
+/// throughput-oriented baseline job runs unoptimised next to
+/// latency-constrained jobs under full QoS.
+pub fn build_qos_runtime_for(
+    owner: JobId,
+    job: &JobGraph,
+    rg: &RuntimeGraph,
+    constraints: &[JobConstraint],
+    cfg: &EngineConfig,
+    manager_cfg: ManagerConfig,
     rng: &mut Rng,
 ) -> Result<QosRuntime> {
     let setup = compute_qos_setup(job, rg, constraints)?;
@@ -407,13 +491,16 @@ pub fn build_qos_runtime(
         }
         reporters.insert(
             w,
-            QosReporter::new(w, cfg.measurement_interval, assignment.interest.clone(), rng),
+            QosReporter::new(w, cfg.measurement_interval, assignment.interest.clone(), rng)
+                .with_job(owner),
         );
     }
     let managers: BTreeMap<WorkerId, QosManager> = setup
         .managers
         .into_iter()
-        .map(|(w, sub)| (w, QosManager::new(w, sub, cfg.default_buffer_size, cfg.manager)))
+        .map(|(w, sub)| {
+            (w, QosManager::new(w, sub, cfg.default_buffer_size, manager_cfg).with_job(owner))
+        })
         .collect();
     Ok(QosRuntime {
         chan_latency_monitored,
@@ -459,8 +546,36 @@ mod tests {
         // All sequence vertices span all 4 workers; D's cheapest in-path
         // edge (D->M pointwise, m channels) ties with M/O/E, so the first
         // candidate (Decoder) wins.
-        let anchor = get_anchor_vertex(&g, &rg, &jc).unwrap();
+        let anchor = get_anchor_vertex(&g, &rg, &jc, 0).unwrap();
         assert_eq!(g.vertex(anchor).name, "Decoder");
+    }
+
+    #[test]
+    fn emptied_groups_give_typed_errors_not_panics() {
+        let (g, mut rg, jc) = video_job(4, 2);
+        // Retire every runtime member of every sequence vertex (what a
+        // cancelled or fully failed-over job looks like): anchor selection
+        // must report the empty candidate set.
+        for jv in jc.sequence.vertices() {
+            for v in rg.members(jv).to_vec() {
+                rg.retire_instance(v);
+            }
+        }
+        let err = get_anchor_vertex(&g, &rg, &jc, 3).unwrap_err();
+        assert_eq!(err, SetupError::NoAnchorCandidates { constraint: 3 });
+        assert!(err.to_string().contains("constraint 3"), "{err}");
+        // And the full setup surfaces it as an error, not a panic or a
+        // silently uncovered constraint.
+        assert!(compute_qos_setup(&g, &rg, &[jc]).is_err());
+    }
+
+    #[test]
+    fn empty_sequence_is_a_typed_error() {
+        let (g, rg, jc) = video_job(4, 2);
+        let mut jc2 = jc;
+        jc2.sequence.elems.retain(|e| matches!(e, JobSeqElem::Edge(_)));
+        let err = get_anchor_vertex(&g, &rg, &jc2, 0).unwrap_err();
+        assert_eq!(err, SetupError::NoSequenceVertices { constraint: 0 });
     }
 
     #[test]

@@ -1,0 +1,474 @@
+//! The multi-job scheduler: a job registry with a submit → run →
+//! complete/cancel lifecycle, a per-worker slot ledger, and the
+//! placement policies that map task instances onto the shared worker
+//! pool at submit time.
+//!
+//! The design premise follows the paper's §2: individual streams are
+//! trivial, the *aggregate* is not — a massively-parallel streaming
+//! framework wins by multiplexing many jobs over one pool of workers.
+//! The scheduler is the arbitration point that makes that safe:
+//!
+//! * every task instance occupies one **slot**, reserved at submission
+//!   ([`Scheduler::place_job`]) and promised to its job until the job
+//!   completes or is cancelled;
+//! * elastic scaling ([`Scheduler::reserve_elastic`]) draws from the
+//!   *free* pool only — one job's countermeasures can never take
+//!   capacity promised to another job;
+//! * failure recovery moves reservations with the redeployed instances
+//!   ([`Scheduler::move_reservation`]); recovery may overcommit a
+//!   survivor (keeping a job alive beats strict accounting), which the
+//!   ledger records rather than hides.
+
+pub mod placement;
+
+pub use placement::PlacementPolicy;
+
+use crate::graph::constraint::JobConstraint;
+use crate::graph::ids::{JobId, WorkerId};
+use crate::graph::job::JobGraph;
+use crate::qos::manager::ManagerConfig;
+use crate::sim::cluster::SourceSpec;
+use crate::sim::task::TaskSpec;
+use crate::util::time::{Duration, Time};
+use std::fmt;
+
+/// Everything a user hands the cluster to run one job: a validated
+/// standalone job graph (its ids are remapped into the cluster's union
+/// graph at submission), QoS constraints, per-job-vertex task semantics,
+/// external sources (offsets relative to submission time), and how long
+/// the sources run.
+pub struct JobSubmission {
+    pub name: String,
+    pub job: JobGraph,
+    pub constraints: Vec<JobConstraint>,
+    pub task_specs: Vec<TaskSpec>,
+    pub sources: Vec<SourceSpec>,
+    /// Stop this job's sources this long after submission; the job
+    /// completes once its pipeline drains.  `None` runs the sources
+    /// until the cluster-wide source stop.
+    pub run_for: Option<Duration>,
+    /// Per-job countermeasure arming; `None` uses the engine default.
+    /// This is how a throughput-oriented baseline job runs unoptimised
+    /// next to latency-constrained jobs under full QoS management.
+    pub manager: Option<ManagerConfig>,
+}
+
+/// Lifecycle of a registered job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Registered, submission event not yet processed.
+    Pending,
+    /// Placed and running.
+    Running,
+    /// Sources ended and the pipeline drained.
+    Completed,
+    /// Killed by the user; in-flight items were accounted as lost.
+    Cancelled,
+    /// Submission rejected (insufficient slot capacity).
+    Rejected,
+}
+
+/// Registry record of one job.
+#[derive(Debug, Clone)]
+pub struct JobEntry {
+    pub id: JobId,
+    pub name: String,
+    pub state: JobState,
+    pub submitted_at: Time,
+    pub started_at: Option<Time>,
+    pub finished_at: Option<Time>,
+    /// Slots currently reserved by this job, per worker.
+    slots: Vec<u32>,
+}
+
+impl JobEntry {
+    /// Total slots currently reserved by this job.
+    pub fn reserved(&self) -> u32 {
+        self.slots.iter().sum()
+    }
+
+    /// Slots reserved on one worker.
+    pub fn reserved_on(&self, w: WorkerId) -> u32 {
+        self.slots[w.index()]
+    }
+}
+
+/// Typed scheduler failures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedError {
+    /// Not enough free slots to place the whole job.
+    InsufficientSlots { job: JobId, needed: u32, free: u32 },
+    /// Operation referenced a job the registry does not know.
+    UnknownJob { job: JobId },
+    /// Operation is invalid in the job's current lifecycle state.
+    WrongState { job: JobId, state: JobState },
+}
+
+impl fmt::Display for SchedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SchedError::InsufficientSlots { job, needed, free } => {
+                write!(f, "{job}: needs {needed} slots, {free} free")
+            }
+            SchedError::UnknownJob { job } => write!(f, "unknown {job}"),
+            SchedError::WrongState { job, state } => {
+                write!(f, "{job} is {state:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SchedError {}
+
+/// The scheduler: registry + slot ledger + policy.
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: PlacementPolicy,
+    capacity: Vec<u32>,
+    used: Vec<u32>,
+    jobs: Vec<JobEntry>,
+    /// Round-robin state of the spread policy (persists across jobs so
+    /// consecutive submissions continue the rotation).
+    rr_cursor: usize,
+}
+
+impl Scheduler {
+    /// A scheduler over `num_workers` workers with `slots_per_worker`
+    /// task slots each.
+    pub fn new(num_workers: u32, slots_per_worker: u32, policy: PlacementPolicy) -> Scheduler {
+        Scheduler {
+            policy,
+            capacity: vec![slots_per_worker; num_workers as usize],
+            used: vec![0; num_workers as usize],
+            jobs: Vec::new(),
+            rr_cursor: 0,
+        }
+    }
+
+    /// Compatibility mode for the single-job constructors: the runtime
+    /// graph arrives pre-placed, so capacity is effectively unbounded
+    /// and the ledger only mirrors what already runs.  The spread policy
+    /// reproduces the legacy "subtask i on worker i mod n" elastic
+    /// spawn rotation exactly.
+    pub fn preplaced(num_workers: u32) -> Scheduler {
+        Scheduler::new(num_workers, u32::MAX / 2, PlacementPolicy::Spread)
+    }
+
+    pub fn policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.capacity.len()
+    }
+
+    /// Total free slots on live workers.  Saturating: a preplaced
+    /// (effectively unbounded) scheduler reports `u32::MAX` instead of
+    /// overflowing the sum.
+    pub fn free_slots(&self, dead: &[bool]) -> u32 {
+        (0..self.capacity.len())
+            .filter(|&w| !dead.get(w).copied().unwrap_or(false))
+            .map(|w| self.capacity[w].saturating_sub(self.used[w]) as u64)
+            .sum::<u64>()
+            .min(u32::MAX as u64) as u32
+    }
+
+    /// Register a job; returns its dense id.  Slots are reserved later,
+    /// by [`Scheduler::place_job`] at submission-event time.
+    pub fn register(&mut self, name: &str, submitted_at: Time) -> JobId {
+        let id = JobId(self.jobs.len() as u32);
+        self.jobs.push(JobEntry {
+            id,
+            name: name.to_string(),
+            state: JobState::Pending,
+            submitted_at,
+            started_at: None,
+            finished_at: None,
+            slots: vec![0; self.capacity.len()],
+        });
+        id
+    }
+
+    pub fn entry(&self, job: JobId) -> Option<&JobEntry> {
+        self.jobs.get(job.index())
+    }
+
+    pub fn entries(&self) -> &[JobEntry] {
+        &self.jobs
+    }
+
+    pub fn state(&self, job: JobId) -> Option<JobState> {
+        self.entry(job).map(|e| e.state)
+    }
+
+    fn entry_mut(&mut self, job: JobId) -> Result<&mut JobEntry, SchedError> {
+        let idx = job.index();
+        if idx >= self.jobs.len() {
+            return Err(SchedError::UnknownJob { job });
+        }
+        Ok(&mut self.jobs[idx])
+    }
+
+    /// Place `demand` instances of a pending job onto the pool: one
+    /// worker per instance, in instance order, per the policy.  Reserves
+    /// the slots and marks the job running; a rejected job keeps zero
+    /// reservations and is marked [`JobState::Rejected`].
+    pub fn place_job(
+        &mut self,
+        job: JobId,
+        demand: u32,
+        dead: &[bool],
+        now: Time,
+    ) -> Result<Vec<WorkerId>, SchedError> {
+        let state = self.entry_mut(job)?.state;
+        if state != JobState::Pending {
+            return Err(SchedError::WrongState { job, state });
+        }
+        let free = self.free_slots(dead);
+        if demand > free {
+            self.jobs[job.index()].state = JobState::Rejected;
+            self.jobs[job.index()].finished_at = Some(now);
+            return Err(SchedError::InsufficientSlots { job, needed: demand, free });
+        }
+        // Mask dead workers by zeroing their effective capacity.
+        let eff: Vec<u32> = self
+            .capacity
+            .iter()
+            .enumerate()
+            .map(|(w, &c)| if dead.get(w).copied().unwrap_or(false) { 0 } else { c })
+            .collect();
+        let mut assigned = Vec::with_capacity(demand as usize);
+        for _ in 0..demand {
+            match self.policy.pick(&eff, &self.used, &mut self.rr_cursor) {
+                Some(w) => {
+                    self.used[w] += 1;
+                    self.jobs[job.index()].slots[w] += 1;
+                    assigned.push(WorkerId(w as u32));
+                }
+                None => {
+                    // Roll back partial reservations (unreachable given
+                    // the aggregate check above, but kept safe).
+                    for &w in &assigned {
+                        self.used[w.index()] -= 1;
+                        self.jobs[job.index()].slots[w.index()] -= 1;
+                    }
+                    self.jobs[job.index()].state = JobState::Rejected;
+                    self.jobs[job.index()].finished_at = Some(now);
+                    return Err(SchedError::InsufficientSlots { job, needed: demand, free });
+                }
+            }
+        }
+        let e = &mut self.jobs[job.index()];
+        e.state = JobState::Running;
+        e.started_at = Some(now);
+        Ok(assigned)
+    }
+
+    /// Elastic scale-up arbitration: reserve one extra slot for `job`
+    /// from the *free* pool (never from capacity promised to other
+    /// jobs).  `start_hint` seeds the spread rotation — the legacy
+    /// single-job behaviour of spawning instance k on worker k mod n.
+    pub fn reserve_elastic(
+        &mut self,
+        job: JobId,
+        start_hint: usize,
+        dead: &[bool],
+    ) -> Option<WorkerId> {
+        if self.state(job) != Some(JobState::Running) {
+            return None;
+        }
+        let n = self.capacity.len();
+        let is_dead = |w: usize| dead.get(w).copied().unwrap_or(false);
+        let free = |s: &Self, w: usize| s.capacity[w].saturating_sub(s.used[w]);
+        let picked = match self.policy {
+            PlacementPolicy::Spread => (0..n)
+                .map(|k| (start_hint + k) % n)
+                .find(|&w| !is_dead(w) && free(self, w) > 0),
+            PlacementPolicy::Pack => (0..n).find(|&w| !is_dead(w) && free(self, w) > 0),
+            PlacementPolicy::LeastLoaded => (0..n)
+                .filter(|&w| !is_dead(w) && free(self, w) > 0)
+                .max_by_key(|&w| (free(self, w), std::cmp::Reverse(w))),
+        };
+        if let Some(w) = picked {
+            self.used[w] += 1;
+            self.jobs[job.index()].slots[w] += 1;
+            return Some(WorkerId(w as u32));
+        }
+        None
+    }
+
+    /// Return one slot of `job` on `worker` to the free pool
+    /// (scale-down, instance detach).
+    pub fn release_slot(&mut self, job: JobId, worker: WorkerId) {
+        if let Some(e) = self.jobs.get_mut(job.index()) {
+            let w = worker.index();
+            if e.slots[w] > 0 {
+                e.slots[w] -= 1;
+                self.used[w] = self.used[w].saturating_sub(1);
+            }
+        }
+    }
+
+    /// Failure recovery: move one of `job`'s reservations from a dead
+    /// worker to the redeployment target.  May overcommit the target —
+    /// reviving the job outranks strict slot accounting, and the ledger
+    /// shows the overcommit instead of hiding it.
+    pub fn move_reservation(&mut self, job: JobId, from: WorkerId, to: WorkerId) {
+        if let Some(e) = self.jobs.get_mut(job.index()) {
+            if e.slots[from.index()] > 0 {
+                e.slots[from.index()] -= 1;
+                self.used[from.index()] = self.used[from.index()].saturating_sub(1);
+            }
+            e.slots[to.index()] += 1;
+            self.used[to.index()] += 1;
+        }
+    }
+
+    /// Terminal transition: release every slot and stamp the state.
+    /// Cancellation is also legal for a still-pending job (its queued
+    /// submission is simply never placed); completion is not.
+    fn finish(&mut self, job: JobId, state: JobState, now: Time) -> Result<(), SchedError> {
+        let cur = self.entry_mut(job)?.state;
+        let pending_cancel = cur == JobState::Pending && state == JobState::Cancelled;
+        if cur != JobState::Running && !pending_cancel {
+            return Err(SchedError::WrongState { job, state: cur });
+        }
+        let slots = std::mem::take(&mut self.jobs[job.index()].slots);
+        for (w, k) in slots.iter().enumerate() {
+            self.used[w] = self.used[w].saturating_sub(*k);
+        }
+        let e = &mut self.jobs[job.index()];
+        e.slots = vec![0; self.capacity.len()];
+        e.state = state;
+        e.finished_at = Some(now);
+        Ok(())
+    }
+
+    /// Mark a running job completed and free its slots.
+    pub fn complete(&mut self, job: JobId, now: Time) -> Result<(), SchedError> {
+        self.finish(job, JobState::Completed, now)
+    }
+
+    /// Mark a running job cancelled and free its slots.
+    pub fn cancel(&mut self, job: JobId, now: Time) -> Result<(), SchedError> {
+        self.finish(job, JobState::Cancelled, now)
+    }
+
+    /// Seed the ledger with pre-existing placements (the single-job
+    /// compatibility path, whose runtime graph arrives already placed).
+    pub fn seed_usage(&mut self, job: JobId, per_worker: &[u32]) {
+        if let Some(e) = self.jobs.get_mut(job.index()) {
+            for (w, &k) in per_worker.iter().enumerate() {
+                e.slots[w] += k;
+                self.used[w] += k;
+            }
+            e.state = JobState::Running;
+            e.started_at = Some(e.submitted_at);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(policy: PlacementPolicy) -> Scheduler {
+        Scheduler::new(3, 2, policy)
+    }
+
+    #[test]
+    fn place_reserves_and_rejects_over_capacity() {
+        let mut s = sched(PlacementPolicy::Spread);
+        let a = s.register("a", Time::ZERO);
+        let dead = vec![false; 3];
+        let placed = s.place_job(a, 4, &dead, Time::ZERO).unwrap();
+        assert_eq!(placed.len(), 4);
+        assert_eq!(s.state(a), Some(JobState::Running));
+        assert_eq!(s.free_slots(&dead), 2);
+        // A second job that does not fit is rejected without leaking
+        // reservations.
+        let b = s.register("b", Time::ZERO);
+        let err = s.place_job(b, 3, &dead, Time::ZERO).unwrap_err();
+        assert_eq!(err, SchedError::InsufficientSlots { job: b, needed: 3, free: 2 });
+        assert_eq!(s.state(b), Some(JobState::Rejected));
+        assert_eq!(s.free_slots(&dead), 2);
+        // One that fits runs.
+        let c = s.register("c", Time::ZERO);
+        assert_eq!(s.place_job(c, 2, &dead, Time::ZERO).unwrap().len(), 2);
+        assert_eq!(s.free_slots(&dead), 0);
+    }
+
+    #[test]
+    fn elastic_reservations_cannot_take_promised_capacity() {
+        let mut s = sched(PlacementPolicy::LeastLoaded);
+        let a = s.register("a", Time::ZERO);
+        let b = s.register("b", Time::ZERO);
+        let dead = vec![false; 3];
+        s.place_job(a, 3, &dead, Time::ZERO).unwrap();
+        s.place_job(b, 2, &dead, Time::ZERO).unwrap();
+        // One free slot in the pool: the first elastic request gets it,
+        // the second is refused even though job b "only" uses 2 of 6.
+        assert!(s.reserve_elastic(a, 0, &dead).is_some());
+        assert_eq!(s.reserve_elastic(a, 0, &dead), None);
+        assert_eq!(s.reserve_elastic(b, 0, &dead), None);
+        // Releasing returns the slot to the pool.
+        let w = WorkerId(0);
+        s.release_slot(a, w);
+        assert_eq!(s.free_slots(&dead), 1);
+    }
+
+    #[test]
+    fn spread_elastic_follows_start_hint_rotation() {
+        let mut s = Scheduler::preplaced(4);
+        let a = s.register("a", Time::ZERO);
+        s.seed_usage(a, &[1, 1, 1, 1]);
+        let mut dead = vec![false; 4];
+        dead[2] = true;
+        // Legacy rotation: instance index 2 -> worker 2, dead -> 3.
+        assert_eq!(s.reserve_elastic(a, 2, &dead), Some(WorkerId(3)));
+        assert_eq!(s.reserve_elastic(a, 2, &dead), Some(WorkerId(3)));
+    }
+
+    #[test]
+    fn complete_frees_promised_slots() {
+        let mut s = sched(PlacementPolicy::Pack);
+        let a = s.register("a", Time::ZERO);
+        let b = s.register("b", Time::ZERO);
+        let dead = vec![false; 3];
+        s.place_job(a, 4, &dead, Time::ZERO).unwrap();
+        let err = s.place_job(b, 4, &dead, Time::ZERO).unwrap_err();
+        assert!(matches!(err, SchedError::InsufficientSlots { .. }));
+        s.complete(a, Time(5)).unwrap();
+        assert_eq!(s.state(a), Some(JobState::Completed));
+        assert_eq!(s.free_slots(&dead), 6);
+        // Double-complete is a typed state error.
+        assert!(matches!(
+            s.complete(a, Time(6)),
+            Err(SchedError::WrongState { .. })
+        ));
+    }
+
+    #[test]
+    fn move_reservation_tracks_failover_overcommit() {
+        let mut s = sched(PlacementPolicy::Pack);
+        let a = s.register("a", Time::ZERO);
+        let dead = vec![false; 3];
+        s.place_job(a, 6, &dead, Time::ZERO).unwrap();
+        // Worker 0 dies; both its instances move to worker 1.
+        s.move_reservation(a, WorkerId(0), WorkerId(1));
+        s.move_reservation(a, WorkerId(0), WorkerId(1));
+        let e = s.entry(a).unwrap();
+        assert_eq!(e.reserved_on(WorkerId(0)), 0);
+        assert_eq!(e.reserved_on(WorkerId(1)), 4, "overcommit is visible");
+        assert_eq!(e.reserved(), 6);
+    }
+
+    #[test]
+    fn dead_workers_are_not_placement_targets() {
+        let mut s = sched(PlacementPolicy::Spread);
+        let a = s.register("a", Time::ZERO);
+        let dead = vec![false, true, false];
+        let placed = s.place_job(a, 4, &dead, Time::ZERO).unwrap();
+        assert!(placed.iter().all(|w| *w != WorkerId(1)));
+    }
+}

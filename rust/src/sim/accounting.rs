@@ -7,12 +7,55 @@
 //! once all in-flight network events have drained: every destroyed item
 //! must land either in the replay stash (counted as in flight) or in
 //! the explicit loss ledger.
+//!
+//! With the multi-job scheduler the same law holds **per job**: every
+//! job has its own [`JobLedger`], and [`SimCluster::job_conservation`]
+//! checks the generalised identity
+//! `ingested + produced == at_sinks + in_flight + lost + absorbed`,
+//! where `absorbed`/`produced` account for aggregation semantics (a
+//! merge folds `arity` items into one, a window reducer folds a window
+//! of items into one emission) so the invariant is exact for merge and
+//! window pipelines too, not just 1→1 transforms.
 
 use super::cluster::SimCluster;
 use super::flow::ItemRec;
-use crate::graph::ids::ChannelId;
+use crate::graph::ids::{ChannelId, JobId};
+use crate::sched::JobState;
 use crate::util::time::Time;
 use anyhow::{bail, Result};
+
+/// Per-job ground-truth ledger.  One entry per registered job, in
+/// [`JobId`] order; the cluster-wide [`SimStats`] counters are the sums
+/// over these (plus engine-global counts that have no job dimension).
+#[derive(Debug, Default, Clone)]
+pub struct JobLedger {
+    /// Items this job's sources pushed into the cluster.
+    pub items_ingested: u64,
+    /// Items that reached this job's sinks.
+    pub at_sinks: u64,
+    pub e2e_sum_us: f64,
+    pub e2e_max_us: f64,
+    /// Items destroyed and explicitly accounted (crashes, cancels,
+    /// detached consumers).
+    pub accounted_lost: u64,
+    /// Items replayed from materialisation points after a failover.
+    pub items_replayed: u64,
+    /// Items folded into an aggregation (merge group members, window
+    /// contents — including window residue discarded at job completion).
+    pub absorbed: u64,
+    /// Items newly produced by an aggregation (one per merge/window
+    /// emission).
+    pub produced: u64,
+    /// Failed-optimisation reports from this job's managers.
+    pub unresolvable: u64,
+}
+
+impl JobLedger {
+    /// Mean ground-truth end-to-end latency at this job's sinks (ms).
+    pub fn mean_e2e_ms(&self) -> Option<f64> {
+        (self.at_sinks > 0).then(|| self.e2e_sum_us / self.at_sinks as f64 / 1e3)
+    }
+}
 
 /// Counters and ground-truth statistics the harness reads out.
 #[derive(Debug, Default, Clone)]
@@ -21,7 +64,7 @@ pub struct SimStats {
     /// Input-queue delivery events at live tasks.  This counts
     /// *deliveries*, not distinct items: an item delivered, destroyed by
     /// a crash, and re-delivered from a materialisation buffer counts
-    /// twice (conservation uses `e2e_count`/`items_in_flight`/
+    /// twice (conservation uses `e2e_count`/`items_in_flight()`/
     /// `accounted_lost`, never this).
     pub items_delivered: u64,
     pub bytes_on_wire: u64,
@@ -53,8 +96,15 @@ pub struct SimStats {
     pub instances_reassigned: u64,
     pub instances_detached: u64,
     pub events_processed: u64,
-    /// Timestamped log of every applied countermeasure, crash and
-    /// failover decision: the replayable action trail that the
+    /// Multi-job lifecycle counters.
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_cancelled: u64,
+    pub jobs_rejected: u64,
+    /// One ledger per registered job, in [`JobId`] order.
+    pub jobs: Vec<JobLedger>,
+    /// Timestamped log of every applied countermeasure, crash, failover
+    /// and job-lifecycle decision: the replayable action trail that the
     /// determinism tests compare byte-for-byte across same-seed runs.
     pub action_log: Vec<String>,
 }
@@ -66,19 +116,33 @@ impl SimCluster {
         self.stats.action_log.push(format!("[{:>12.6}] {msg}", now.as_secs_f64()));
     }
 
+    /// The job a runtime channel belongs to (the sender's job; absorbed
+    /// edges never cross jobs).
+    pub(crate) fn job_of_channel(&self, channel: ChannelId) -> JobId {
+        self.job_of_vertex[self.rg.channel(channel).from.index()]
+    }
+
+    /// Charge an explicit item loss to a job's ledger and the global
+    /// counter.
+    pub(crate) fn account_lost(&mut self, job: JobId, count: u64) {
+        self.stats.accounted_lost += count;
+        self.stats.jobs[job.index()].accounted_lost += count;
+    }
+
     /// Account items destroyed by a crash.  Items emitted by a
     /// `pin_unchainable` task survive in its durable materialisation
     /// buffer (§3.6: pinning preserves materialisation points for fault
     /// tolerance) and are stashed for replay, keyed by the channel they
     /// were travelling; external ingress, items from unpinned producers,
-    /// and items a recovery could never replay anyway (recovery disabled,
-    /// or the channel already detached) are lost and accounted
-    /// explicitly.
-    pub(crate) fn classify_lost(&mut self, channel: u32, items: Vec<ItemRec>) {
+    /// items of a cancelled job, and items a recovery could never replay
+    /// anyway (recovery disabled, or the channel already detached) are
+    /// lost and accounted explicitly against `job`'s ledger.
+    pub(crate) fn classify_lost(&mut self, job: JobId, channel: u32, items: Vec<ItemRec>) {
         if items.is_empty() {
             return;
         }
-        if channel != u32::MAX && self.cfg.recovery.enable_recovery {
+        let cancelled = self.sched.state(job) == Some(JobState::Cancelled);
+        if channel != u32::MAX && self.cfg.recovery.enable_recovery && !cancelled {
             let c = self.rg.channel(ChannelId(channel));
             if !c.detached {
                 let jv = self.rg.vertex(c.from).job_vertex;
@@ -88,14 +152,20 @@ impl SimCluster {
                 }
             }
         }
-        self.stats.accounted_lost += items.len() as u64;
+        self.account_lost(job, items.len() as u64);
     }
 
-    pub(crate) fn record_e2e(&mut self, us: f64) {
+    pub(crate) fn record_e2e(&mut self, job: JobId, us: f64) {
         self.stats.e2e_count += 1;
         self.stats.e2e_sum_us += us;
         if us > self.stats.e2e_max_us {
             self.stats.e2e_max_us = us;
+        }
+        let ledger = &mut self.stats.jobs[job.index()];
+        ledger.at_sinks += 1;
+        ledger.e2e_sum_us += us;
+        if us > ledger.e2e_max_us {
+            ledger.e2e_max_us = us;
         }
         if self.stats.e2e_samples.len() < E2E_RESERVOIR {
             self.stats.e2e_samples.push(us);
@@ -136,6 +206,85 @@ impl SimCluster {
         queued + pending + stashed
     }
 
+    /// Items of one job currently inside the pipeline.  Unlike the
+    /// cluster-wide census this also counts items folded into partial
+    /// merge groups and open window accumulators, so the per-job
+    /// conservation law is exact for merge/window-aggregation jobs.
+    pub fn in_flight_of_job(&self, job: JobId) -> u64 {
+        self.drainable_in_flight(job) + self.aggregation_residue(job)
+    }
+
+    /// Items held in partial merge groups and open window accumulators
+    /// of one job — in flight for conservation, but not drainable: after
+    /// end of stream no further item completes them (completion folds
+    /// them into the `absorbed` ledger instead).
+    fn aggregation_residue(&self, job: JobId) -> u64 {
+        self.tasks
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.job_of_vertex[*i] == job)
+            .map(|(_, t)| {
+                let merged: u64 = t
+                    .groups
+                    .values()
+                    .map(|g| g.values().map(|q| q.len() as u64).sum::<u64>())
+                    .sum();
+                let windowed: u64 = t.windows.values().map(|&(_, n, _)| n).sum();
+                merged + windowed
+            })
+            .sum()
+    }
+
+    /// Check the per-job conservation invariant
+    /// `ingested + produced == at_sinks + in_flight + lost + absorbed`
+    /// (exact once all in-flight network events have drained).
+    pub fn job_conservation(&self, job: JobId) -> Result<()> {
+        let l = &self.stats.jobs[job.index()];
+        let in_flight = self.in_flight_of_job(job);
+        let lhs = l.items_ingested + l.produced;
+        let rhs = l.at_sinks + in_flight + l.accounted_lost + l.absorbed;
+        if lhs != rhs {
+            bail!(
+                "{job} conservation broken: ingested {} + produced {} != at_sinks {} \
+                 + in_flight {in_flight} + lost {} + absorbed {}",
+                l.items_ingested,
+                l.produced,
+                l.at_sinks,
+                l.accounted_lost,
+                l.absorbed
+            );
+        }
+        Ok(())
+    }
+
+    /// In-flight census that decides job completion: queued work, output
+    /// buffers and the replay stash — everything the end-of-stream flush
+    /// cascade still moves.  Partial merge groups and open window
+    /// accumulators are excluded: once the sources have ended and the
+    /// wire is quiet, no further item completes them, so completion
+    /// folds their residue into the `absorbed` ledger instead of waiting
+    /// forever.
+    pub(crate) fn drainable_in_flight(&self, job: JobId) -> u64 {
+        let mut total = 0u64;
+        for (i, t) in self.tasks.iter().enumerate() {
+            if self.job_of_vertex[i] != job {
+                continue;
+            }
+            total += t.queue.iter().map(|b| b.buffer.items.len() as u64).sum::<u64>();
+        }
+        for (i, b) in self.out_bufs.iter().enumerate() {
+            if !b.pending.is_empty() && self.job_of_channel(ChannelId(i as u32)) == job {
+                total += b.pending.len() as u64;
+            }
+        }
+        for (&ch, items) in &self.replay_stash {
+            if self.job_of_channel(ChannelId(ch)) == job {
+                total += items.len() as u64;
+            }
+        }
+        total
+    }
+
     /// Consistency of the runtime rewiring, checked by tests after
     /// scale-up/scale-down: adjacency is bidirectional, no routing-table
     /// entry points at a detached channel, every active non-source
@@ -147,6 +296,13 @@ impl SimCluster {
         }
         if self.out_bufs.len() != self.rg.channels.len() {
             bail!("{} out buffers for {} channels", self.out_bufs.len(), self.rg.channels.len());
+        }
+        if self.job_of_vertex.len() != self.rg.vertices.len() {
+            bail!(
+                "{} job tags for {} vertices",
+                self.job_of_vertex.len(),
+                self.rg.vertices.len()
+            );
         }
         for v in &self.rg.vertices {
             for &cid in self.rg.out_channels(v.id) {
@@ -176,6 +332,11 @@ impl SimCluster {
         }
         for jv in &self.job.vertices {
             if jv.is_source {
+                continue;
+            }
+            // Cancelled jobs keep their (dead) instances in the routing
+            // tables; reachability only applies to live jobs.
+            if self.sched.state(jv.job) == Some(JobState::Cancelled) {
                 continue;
             }
             for &m in self.rg.members(jv.id) {

@@ -10,12 +10,18 @@
 //!   measurement plumbing, worker-side action application, crash
 //!   destruction;
 //! * [`super::master`] — liveness sweep, failure recovery, elastic
-//!   scaling, and the Algorithms 1–3 rebuild driver;
-//! * [`super::accounting`] — the item-conservation ledger and
-//!   consistency invariants.
+//!   scaling, the job lifecycle (submit/complete/cancel), and the
+//!   Algorithms 1–3 rebuild driver;
+//! * [`super::accounting`] — the item-conservation ledger (cluster-wide
+//!   and per job) and consistency invariants.
 //!
-//! Scenario code compiles unchanged: every public name that predates the
-//! split is still reachable through this module.
+//! The cluster is **multi-tenant**: it holds a union job graph across
+//! every submitted job, a [`crate::sched::Scheduler`] that owns the job
+//! registry and the slot ledger, and one QoS runtime (reporters,
+//! managers, failure detector) per job.  The single-job constructor
+//! [`SimCluster::new`] is a compatibility wrapper — one pre-placed job,
+//! unbounded slots — and scenario code written against it compiles and
+//! behaves unchanged.
 
 use super::engine::{Ev, EventCore};
 use super::flow::{ItemRec, OutBufferState};
@@ -25,18 +31,19 @@ use crate::actions::arbiter::BufferUpdateArbiter;
 use crate::config::{EngineConfig, FailureSpec};
 use crate::coordinator::FailureDetector;
 use crate::graph::constraint::JobConstraint;
-use crate::graph::ids::{JobVertexId, VertexId, WorkerId};
+use crate::graph::ids::{JobId, JobVertexId, VertexId, WorkerId};
 use crate::graph::job::JobGraph;
 use crate::graph::runtime::RuntimeGraph;
-use crate::qos::manager::QosManager;
+use crate::qos::manager::{ManagerConfig, QosManager};
 use crate::qos::reporter::QosReporter;
 use crate::qos::setup::{build_qos_runtime, QosRuntime};
+use crate::sched::{JobState, JobSubmission, PlacementPolicy, Scheduler};
 use crate::util::rng::Rng;
 use crate::util::time::{Duration, Time};
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::collections::{BTreeMap, BTreeSet};
 
-pub use super::accounting::SimStats;
+pub use super::accounting::{JobLedger, SimStats};
 pub use super::engine::SimError;
 
 /// External stream feeding a source task (e.g. one camera feeding its
@@ -68,24 +75,53 @@ pub trait SimObserver {
     fn sample(&mut self, cluster: &mut SimCluster, now: Time);
 }
 
+/// Per-job QoS runtime state: each job has its own reporter/manager set
+/// and failure detector, so Algorithms 1–3 rebuilds and liveness
+/// tracking are scoped to the job whose topology changed.
+pub(crate) struct JobQos {
+    pub(crate) id: JobId,
+    /// The job's constraints, in union-graph ids.
+    pub(crate) constraints: Vec<JobConstraint>,
+    /// Countermeasure arming for this job's managers.
+    pub(crate) manager_cfg: ManagerConfig,
+    pub(crate) reporters: BTreeMap<WorkerId, QosReporter>,
+    pub(crate) managers: BTreeMap<WorkerId, QosManager>,
+    /// Master-side liveness tracking over this job's report traffic.
+    pub(crate) detector: FailureDetector,
+    /// This job's sources stop emitting at this time.
+    pub(crate) source_end: Time,
+    /// Consecutive quiet completion-watch checks (see
+    /// [`SimCluster::on_job_watch`]).
+    pub(crate) drain_streak: u8,
+}
+
 /// The simulated cluster.
 pub struct SimCluster {
+    /// Union job graph across every submitted job (single-job clusters:
+    /// exactly that job, tagged `JobId(0)`).
     pub job: JobGraph,
     pub rg: RuntimeGraph,
     pub cfg: EngineConfig,
-    /// QoS constraints (retained: elastic scaling recomputes the QoS
-    /// setup for the changed topology).
-    pub(crate) constraints: Vec<JobConstraint>,
-    /// Per-job-vertex task specs (retained for runtime-spawned instances).
+    /// Job registry + slot ledger + placement policy.
+    pub(crate) sched: Scheduler,
+    /// Per-job QoS runtimes, indexed by `JobId`.
+    pub(crate) jobs: Vec<JobQos>,
+    /// Submission payloads awaiting their `JobSubmit` event.
+    pub(crate) pending: Vec<Option<JobSubmission>>,
+    /// Per-job-vertex task specs, indexed by union `JobVertexId`
+    /// (retained for runtime-spawned instances).
     pub(crate) job_specs: Vec<TaskSpec>,
+    /// Dense vertex -> owning job (hot-path accounting lookup).
+    pub(crate) job_of_vertex: Vec<JobId>,
+    pub(crate) job_of_source: Vec<JobId>,
     pub(crate) sources: Vec<SourceSpec>,
     pub(crate) tasks: Vec<TaskState>,
     pub(crate) out_bufs: Vec<OutBufferState>,
     pub(crate) nics: Vec<Nic>,
     /// Per-worker NTP offset (µs, signed).
     pub(crate) skew_us: Vec<i64>,
-    pub(crate) reporters: BTreeMap<WorkerId, QosReporter>,
-    pub(crate) managers: BTreeMap<WorkerId, QosManager>,
+    /// Worker-side buffer-update arbitration (channel-keyed, so one
+    /// arbiter per worker serves every job).
     pub(crate) arbiters: BTreeMap<WorkerId, BufferUpdateArbiter>,
     /// Fast monitored-element lookup (hot path).
     pub(crate) chan_latency_monitored: Vec<bool>,
@@ -107,13 +143,14 @@ pub struct SimCluster {
     /// Master-side arbitration: when the last rescale of a group was
     /// applied (stale decisions are discarded, mirroring §3.5.1).
     pub(crate) last_scale: BTreeMap<JobVertexId, Time>,
-    /// Workers with a live ReporterFlush / ManagerTick event chain (QoS
-    /// rebuilds must start chains only for workers that lack one).
-    pub(crate) flush_chains: BTreeSet<u32>,
-    pub(crate) tick_chains: BTreeSet<u32>,
+    /// (job, worker) pairs with a live ReporterFlush / ManagerTick event
+    /// chain (QoS rebuilds must start chains only for pairs that lack
+    /// one).
+    pub(crate) flush_chains: BTreeSet<(u32, u32)>,
+    pub(crate) tick_chains: BTreeSet<(u32, u32)>,
     /// Fail-stop state: crashed workers and their (dead) task threads.
     /// `dead_tasks` is also set for instances detached by a
-    /// recovery-disabled failover.
+    /// recovery-disabled failover and for cancelled jobs' instances.
     pub(crate) dead_workers: Vec<bool>,
     pub(crate) dead_tasks: Vec<bool>,
     /// Items destroyed by a crash whose producing task is a
@@ -121,17 +158,18 @@ pub struct SimCluster {
     /// a copy, keyed by the channel the item was travelling, awaiting
     /// replay by a recovery.
     pub(crate) replay_stash: BTreeMap<u32, Vec<ItemRec>>,
-    /// Master-side liveness tracking over QoS report traffic.
-    pub(crate) detector: FailureDetector,
     pub(crate) master_tick_armed: bool,
-    /// Sources stop emitting at this time.
+    /// Cluster-wide source stop (jobs also carry their own).
     pub(crate) source_end: Time,
     pub stats: SimStats,
 }
 
 impl SimCluster {
-    /// Build a cluster for `job` expanded as `rg`, with QoS `constraints`
-    /// in place, per-job-vertex task `specs`, and external `sources`.
+    /// Build a single-job cluster for `job` expanded as `rg`, with QoS
+    /// `constraints` in place, per-job-vertex task `specs`, and external
+    /// `sources`.  The runtime graph arrives pre-placed, so the
+    /// scheduler runs in unbounded-slot compatibility mode; elastic
+    /// scaling keeps the legacy "instance k on worker k mod n" rotation.
     pub fn new(
         job: JobGraph,
         rg: RuntimeGraph,
@@ -160,7 +198,7 @@ impl SimCluster {
         let n_channels = rg.channels.len();
         let n_vertices = rg.vertices.len();
         let job_specs = specs.clone();
-        let tasks = rg
+        let tasks: Vec<TaskState> = rg
             .vertices
             .iter()
             .map(|v| TaskState::new(specs[v.job_vertex.index()]))
@@ -180,22 +218,46 @@ impl SimCluster {
             })
             .collect();
 
+        let mut sched = Scheduler::preplaced(rg.num_workers);
+        let job_id = sched.register("job0", Time::ZERO);
+        let mut usage = vec![0u32; rg.num_workers as usize];
+        for v in &rg.vertices {
+            usage[v.worker.index()] += 1;
+        }
+        sched.seed_usage(job_id, &usage);
+
         let detector =
             FailureDetector::new(cfg.measurement_interval, cfg.recovery.detection_intervals);
+        let job_qos = JobQos {
+            id: job_id,
+            constraints: constraints.to_vec(),
+            manager_cfg: cfg.manager,
+            reporters,
+            managers,
+            detector,
+            source_end: Time(u64::MAX),
+            drain_streak: 0,
+        };
         let num_workers = rg.num_workers as usize;
+        let n_sources = sources.len();
+        let mut stats = SimStats::default();
+        stats.jobs = vec![JobLedger::default()];
+        stats.jobs_submitted = 1;
         let mut cluster = SimCluster {
             job,
             rg,
             cfg,
-            constraints: constraints.to_vec(),
+            sched,
+            jobs: vec![job_qos],
+            pending: vec![None],
             job_specs,
+            job_of_vertex: vec![job_id; n_vertices],
+            job_of_source: vec![job_id; n_sources],
             sources,
             tasks,
             out_bufs,
             nics,
             skew_us,
-            reporters,
-            managers,
             arbiters,
             chan_latency_monitored,
             chan_oblt_monitored,
@@ -214,15 +276,131 @@ impl SimCluster {
             dead_workers: vec![false; num_workers],
             dead_tasks: vec![false; n_vertices],
             replay_stash: BTreeMap::new(),
-            detector,
+            master_tick_armed: false,
+            source_end: Time(u64::MAX),
+            stats,
+        };
+        let reporter_workers: Vec<WorkerId> = cluster.jobs[0].reporters.keys().copied().collect();
+        cluster.jobs[0].detector.track(reporter_workers, Time::ZERO);
+        cluster.schedule_initial();
+        Ok(cluster)
+    }
+
+    /// Build an empty multi-tenant cluster: `num_workers` workers with
+    /// `slots_per_worker` task slots each, and `policy` deciding where
+    /// submitted jobs' instances land.  Jobs arrive dynamically via
+    /// [`SimCluster::submit_job_at`].
+    pub fn new_multi(
+        num_workers: u32,
+        slots_per_worker: u32,
+        policy: PlacementPolicy,
+        cfg: EngineConfig,
+    ) -> Result<SimCluster> {
+        if slots_per_worker == 0 {
+            bail!("need at least one slot per worker");
+        }
+        let rg = RuntimeGraph::empty(num_workers)?;
+        let mut rng = Rng::new(cfg.seed);
+        let nics = (0..num_workers).map(|_| Nic::new(&cfg.cluster)).collect();
+        let max_skew = cfg.cluster.max_clock_skew.as_micros() as i64;
+        let skew_us = (0..num_workers)
+            .map(|_| {
+                if max_skew == 0 {
+                    0
+                } else {
+                    rng.range(0, 2 * max_skew as u64) as i64 - max_skew
+                }
+            })
+            .collect();
+        let mut cluster = SimCluster {
+            job: JobGraph::new(),
+            rg,
+            cfg,
+            sched: Scheduler::new(num_workers, slots_per_worker, policy),
+            jobs: Vec::new(),
+            pending: Vec::new(),
+            job_specs: Vec::new(),
+            job_of_vertex: Vec::new(),
+            job_of_source: Vec::new(),
+            sources: Vec::new(),
+            tasks: Vec::new(),
+            out_bufs: Vec::new(),
+            nics,
+            skew_us,
+            arbiters: BTreeMap::new(),
+            chan_latency_monitored: Vec::new(),
+            chan_oblt_monitored: Vec::new(),
+            vertex_monitored: Vec::new(),
+            next_tag_at: Vec::new(),
+            next_task_sample_at: Vec::new(),
+            queue: EventCore::new(),
+            rng,
+            chain_members: Vec::new(),
+            chain_busy: Vec::new(),
+            chain_sched: Vec::new(),
+            scaled_instances: BTreeMap::new(),
+            last_scale: BTreeMap::new(),
+            flush_chains: BTreeSet::new(),
+            tick_chains: BTreeSet::new(),
+            dead_workers: vec![false; num_workers as usize],
+            dead_tasks: Vec::new(),
+            replay_stash: BTreeMap::new(),
             master_tick_armed: false,
             source_end: Time(u64::MAX),
             stats: SimStats::default(),
         };
-        let reporter_workers: Vec<WorkerId> = cluster.reporters.keys().copied().collect();
-        cluster.detector.track(reporter_workers, Time::ZERO);
-        cluster.schedule_initial();
+        // Worker CPU sampling runs for the cluster's whole life,
+        // independent of which jobs' instances currently occupy it.
+        let interval = cluster.cfg.measurement_interval;
+        for w in 0..num_workers {
+            cluster.queue.push(Time::ZERO + interval, Ev::CpuSample { worker: w });
+        }
         Ok(cluster)
+    }
+
+    /// Queue a job submission for `at` (virtual time).  Placement,
+    /// graph growth and QoS setup happen when the event fires; a job
+    /// the pool cannot hold is rejected there and logged.  Returns the
+    /// registered job id.
+    pub fn submit_job_at(&mut self, mut sub: JobSubmission, at: Duration) -> Result<JobId> {
+        if sub.task_specs.len() != sub.job.vertices.len() {
+            bail!("job {:?}: one TaskSpec per job vertex", sub.name);
+        }
+        for jc in &sub.constraints {
+            jc.validate(&sub.job)?;
+        }
+        for s in &sub.sources {
+            if s.target.index() >= sub.job.vertices.len() {
+                bail!("job {:?}: source targets unknown vertex {}", sub.name, s.target);
+            }
+        }
+        if sub.name.is_empty() {
+            sub.name = format!("job{}", self.jobs.len());
+        }
+        let id = self.sched.register(&sub.name, Time::ZERO + at);
+        let manager_cfg = sub.manager.unwrap_or(self.cfg.manager);
+        self.jobs.push(JobQos {
+            id,
+            constraints: Vec::new(),
+            manager_cfg,
+            reporters: BTreeMap::new(),
+            managers: BTreeMap::new(),
+            detector: FailureDetector::new(
+                self.cfg.measurement_interval,
+                self.cfg.recovery.detection_intervals,
+            ),
+            source_end: Time(u64::MAX),
+            drain_streak: 0,
+        });
+        self.pending.push(Some(sub));
+        self.stats.jobs.push(JobLedger::default());
+        self.queue.push(Time::ZERO + at, Ev::JobSubmit { job: id.0 });
+        Ok(id)
+    }
+
+    /// Queue a cancellation of `job` for `at` (virtual time).
+    pub fn cancel_job_at(&mut self, job: JobId, at: Duration) {
+        self.queue.push(Time::ZERO + at, Ev::JobCancel { job: job.0 });
     }
 
     /// Arm the failure injector: each spec crashes its worker at the
@@ -245,22 +423,23 @@ impl SimCluster {
             let at = Time::ZERO + self.sources[i].offset;
             self.queue.push(at, Ev::Packet { source: i as u32 });
         }
-        let reporter_deadlines: Vec<(WorkerId, Time)> = self
+        let reporter_deadlines: Vec<(WorkerId, Time)> = self.jobs[0]
             .reporters
             .iter()
             .filter_map(|(&w, r)| r.next_deadline().map(|t| (w, t)))
             .collect();
         for (w, t) in reporter_deadlines {
-            self.flush_chains.insert(w.0);
-            self.queue.push(t, Ev::ReporterFlush { worker: w.0 });
+            self.flush_chains.insert((0, w.0));
+            self.queue.push(t, Ev::ReporterFlush { job: 0, worker: w.0 });
         }
         let interval = self.cfg.measurement_interval;
-        let mgr_workers: Vec<WorkerId> = self.managers.keys().copied().collect();
+        let mgr_workers: Vec<WorkerId> = self.jobs[0].managers.keys().copied().collect();
         for w in mgr_workers {
             // Spread manager ticks uniformly over the first interval.
             let offset = Duration::from_micros(self.rng.below(interval.as_micros().max(1)));
-            self.tick_chains.insert(w.0);
-            self.queue.push(Time::ZERO + interval + offset, Ev::ManagerTick { worker: w.0 });
+            self.tick_chains.insert((0, w.0));
+            self.queue
+                .push(Time::ZERO + interval + offset, Ev::ManagerTick { job: 0, worker: w.0 });
         }
         for w in 0..self.rg.num_workers {
             self.queue.push(Time::ZERO + interval, Ev::CpuSample { worker: w });
@@ -272,7 +451,8 @@ impl SimCluster {
         self.queue.now()
     }
 
-    /// Stop external sources from emitting past `t`.
+    /// Stop external sources from emitting past `t` (cluster-wide; jobs
+    /// submitted with a `run_for` horizon also stop on their own).
     pub fn stop_sources_at(&mut self, t: Time) {
         self.source_end = t;
     }
@@ -321,22 +501,28 @@ impl SimCluster {
             Ev::Packet { source } => self.on_packet(now, source),
             Ev::Deliver { buffer } => self.on_deliver(now, buffer),
             Ev::TaskDone { vertex } => return self.on_task_done(now, VertexId(vertex)),
-            Ev::ReporterFlush { worker } => self.on_reporter_flush(now, WorkerId(worker)),
+            Ev::ReporterFlush { job, worker } => {
+                self.on_reporter_flush(now, job, WorkerId(worker))
+            }
             Ev::ReportArrive { report } => {
                 // The master relays the control plane and piggybacks its
-                // liveness tracking on the report traffic.
-                self.detector.note(report.from, now);
+                // liveness tracking on the report traffic, per job.
+                let j = report.job.index();
+                self.jobs[j].detector.note(report.from, now);
                 if !self.dead_workers[report.to_manager.index()] {
-                    if let Some(m) = self.managers.get_mut(&report.to_manager) {
+                    if let Some(m) = self.jobs[j].managers.get_mut(&report.to_manager) {
                         m.ingest(&report);
                     }
                 }
             }
-            Ev::ManagerTick { worker } => self.on_manager_tick(now, WorkerId(worker)),
+            Ev::ManagerTick { job, worker } => self.on_manager_tick(now, job, WorkerId(worker)),
             Ev::CpuSample { worker } => self.on_cpu_sample(now, WorkerId(worker)),
             Ev::ApplyAction { action } => self.on_apply(now, action),
             Ev::WorkerCrash { worker } => self.on_worker_crash(now, WorkerId(worker)),
             Ev::MasterTick => self.on_master_tick(now),
+            Ev::JobSubmit { job } => self.on_job_submit(now, job as usize),
+            Ev::JobWatch { job } => self.on_job_watch(now, job as usize),
+            Ev::JobCancel { job } => self.on_job_cancel(now, job as usize),
         }
         Ok(())
     }
@@ -345,8 +531,40 @@ impl SimCluster {
     // Harness access
     // ------------------------------------------------------------------
 
+    /// All QoS managers across all jobs (single-job clusters: that job's).
     pub fn managers_mut(&mut self) -> impl Iterator<Item = (&WorkerId, &mut QosManager)> {
-        self.managers.iter_mut()
+        self.jobs.iter_mut().flat_map(|j| j.managers.iter_mut())
+    }
+
+    /// One job's QoS managers.
+    pub fn job_managers_mut(
+        &mut self,
+        job: JobId,
+    ) -> impl Iterator<Item = (&WorkerId, &mut QosManager)> {
+        self.jobs
+            .iter_mut()
+            .filter(move |j| j.id == job)
+            .flat_map(|j| j.managers.iter_mut())
+    }
+
+    /// The scheduler: job registry, lifecycle states, slot ledger.
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.sched
+    }
+
+    /// Lifecycle state of a job.
+    pub fn job_state(&self, job: JobId) -> Option<JobState> {
+        self.sched.state(job)
+    }
+
+    /// Per-job conservation ledger.
+    pub fn job_ledger(&self, job: JobId) -> &JobLedger {
+        &self.stats.jobs[job.index()]
+    }
+
+    /// Number of registered jobs.
+    pub fn num_jobs(&self) -> usize {
+        self.jobs.len()
     }
 
     pub fn buffer_size_of(&self, c: crate::graph::ids::ChannelId) -> u32 {
@@ -367,7 +585,6 @@ impl SimCluster {
         self.dead_workers[w.index()]
     }
 }
-
 #[cfg(test)]
 mod tests {
     use super::*;

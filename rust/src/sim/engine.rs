@@ -33,11 +33,24 @@ pub(crate) enum Ev {
     Deliver { buffer: Buffer },
     /// A task (or chain) thread finished its current buffer.
     TaskDone { vertex: u32 },
-    ReporterFlush { worker: u32 },
+    /// Flush one job's QoS reporter on one worker (each job runs its own
+    /// reporter set; the job id routes the event to the right state).
+    ReporterFlush { job: u32, worker: u32 },
     ReportArrive { report: Report },
-    ManagerTick { worker: u32 },
+    /// Tick one job's QoS manager on one worker.
+    ManagerTick { job: u32, worker: u32 },
     CpuSample { worker: u32 },
     ApplyAction { action: Action },
+    /// Job lifecycle (multi-job scheduler): process a queued submission —
+    /// place instances via the scheduler, grow the union graphs, build
+    /// the job's QoS runtime, start its sources.
+    JobSubmit { job: u32 },
+    /// Completion watch: once the job's sources have ended and its
+    /// pipeline has drained, mark it completed and free its slots.
+    JobWatch { job: u32 },
+    /// Cancel a running job: its tasks stop, in-flight items are
+    /// accounted as lost in the job's ledger, its slots are freed.
+    JobCancel { job: u32 },
     /// Fail-stop crash of a worker (injected by a
     /// [`crate::config::FailureSpec`]): its task threads, NIC state and
     /// buffered items are gone.

@@ -1,29 +1,44 @@
 //! Master-side simulation: the liveness sweep over QoS report traffic,
 //! worker-failure handling (recovery or unregistration), elastic task
-//! scaling, and the Algorithms 1–3 driver that rebuilds the QoS setup
-//! after every topology change.
+//! scaling, the multi-job lifecycle (submit / complete / cancel), and
+//! the Algorithms 1–3 driver that rebuilds the QoS setup after every
+//! topology change.
 //!
 //! Everything here models decisions the master node takes; the
 //! worker-side mechanics they act on live in [`super::worker`].
+//!
+//! Multi-tenancy: failure recovery and QoS rebuilds are **scoped by
+//! job** — a crashed worker is fenced once (physically), then every
+//! running job with instances or QoS roles on it recovers its own
+//! slice and rebuilds its own Algorithms 1–3 setup.  Elastic scaling
+//! is arbitrated by the scheduler's slot ledger: a scale-up draws from
+//! the free pool only, never from capacity promised to another job.
 
-use super::cluster::SimCluster;
+use super::cluster::{JobLedger, SimCluster};
 use super::engine::Ev;
 use super::flow::{Buffer, OutBufferState};
 use super::task::{Semantics, TaskState};
-use crate::graph::ids::{ChannelId, JobEdgeId, JobVertexId, VertexId, WorkerId};
-use crate::qos::setup::build_qos_runtime;
-use crate::util::time::Time;
+use crate::graph::ids::{ChannelId, JobEdgeId, JobId, JobVertexId, VertexId, WorkerId};
+use crate::qos::setup::{build_qos_runtime_for, QosRuntime};
+use crate::sched::JobState;
+use crate::util::time::{Duration, Time};
 use anyhow::Result;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 impl SimCluster {
     /// Master-side liveness sweep over the QoS report traffic: workers
-    /// silent past the detection timeout are declared failed and handed
-    /// to the recovery policy.
+    /// silent past the detection timeout in *any* job's report stream
+    /// are declared failed and handed to the recovery policy (a worker
+    /// crash is physical — every job on it is affected).
     pub(crate) fn on_master_tick(&mut self, now: Time) {
-        let silent = self.detector.silent(now);
+        let mut silent: BTreeSet<WorkerId> = BTreeSet::new();
+        for jq in &self.jobs {
+            silent.extend(jq.detector.silent(now));
+        }
         for w in silent {
-            self.detector.confirm(w);
+            for jq in &mut self.jobs {
+                jq.detector.confirm(w);
+            }
             self.handle_worker_failure(now, w);
         }
         self.queue.push(now + self.cfg.measurement_interval, Ev::MasterTick);
@@ -31,35 +46,50 @@ impl SimCluster {
 
     /// React to a detected worker failure.  The worker is fenced first
     /// (even a falsely-suspected one is cut off before its instances are
-    /// redeployed), then either recovered or merely unregistered.
+    /// redeployed), then every affected running job is either recovered
+    /// or merely unregistered from the dead worker.
     fn handle_worker_failure(&mut self, now: Time, w: WorkerId) {
         self.stats.failovers += 1;
         self.on_worker_crash(now, w);
-        if self.cfg.recovery.enable_recovery {
-            self.recover_worker(now, w);
-        } else {
-            self.unregister_worker(now, w);
+        let running: Vec<usize> = (0..self.jobs.len())
+            .filter(|&j| self.sched.state(JobId(j as u32)) == Some(JobState::Running))
+            .collect();
+        for j in running {
+            let affected = !self.active_instances_on_for(w, j).is_empty()
+                || self.jobs[j].reporters.contains_key(&w)
+                || self.jobs[j].managers.contains_key(&w);
+            if !affected {
+                continue;
+            }
+            if self.cfg.recovery.enable_recovery {
+                self.recover_worker_for(now, w, j);
+            } else {
+                self.unregister_worker_for(now, w, j);
+            }
         }
     }
 
-    /// Recovery: redeploy every dead instance of `w` onto the
-    /// least-loaded surviving worker, replay the items stashed at
-    /// `pin_unchainable` materialisation points onto their channels, and
-    /// re-run Algorithms 1–3 so reporters and managers track the new
+    /// Recovery for one job: redeploy its dead instances of `w` onto the
+    /// least-loaded surviving worker, replay the items stashed at its
+    /// `pin_unchainable` materialisation points, and re-run Algorithms
+    /// 1–3 for this job so its reporters and managers track the new
     /// placement.  From here the regular buffer → chaining → scaling
     /// escalation works the residual violation off.
-    fn recover_worker(&mut self, now: Time, w: WorkerId) {
-        let victims = self.active_instances_on(w);
+    fn recover_worker_for(&mut self, now: Time, w: WorkerId, j: usize) {
+        let id = JobId(j as u32);
+        let victims = self.active_instances_on_for(w, j);
         let live_workers: Vec<WorkerId> = (0..self.rg.num_workers)
             .map(WorkerId)
             .filter(|w| !self.dead_workers[w.index()])
             .collect();
         if live_workers.is_empty() {
             // Nothing left to redeploy onto: degrade to unregistering.
-            self.log(now, format!("failover {w}: no surviving workers"));
-            self.unregister_worker(now, w);
+            self.log(now, format!("failover {w} {id}: no surviving workers"));
+            self.unregister_worker_for(now, w, j);
             return;
         }
+        // Cluster-wide live-instance load: redeployments of any job land
+        // on the overall least-loaded survivor.
         let mut load = vec![0u64; self.rg.num_workers as usize];
         for rv in &self.rg.vertices {
             if !self.dead_workers[rv.worker.index()]
@@ -80,23 +110,36 @@ impl SimCluster {
                 let jv = self.rg.vertex(v).job_vertex;
                 self.tasks[v.index()] = TaskState::new(self.job_specs[jv.index()]);
                 self.dead_tasks[v.index()] = false;
+                self.sched.move_reservation(id, w, target);
                 reassigned += 1;
             }
         }
         self.stats.instances_reassigned += reassigned;
-        // Replay from the materialisation points: each stashed buffer
+        // Replay this job's materialisation points: each stashed buffer
         // re-enters its channel (read back from the durable log, so only
         // control-plane and local delivery latency apply).
-        let stash = std::mem::take(&mut self.replay_stash);
         let delay = self.cfg.cluster.control_delay + self.cfg.cluster.local_latency;
+        let job_channels: Vec<u32> = self
+            .replay_stash
+            .keys()
+            .copied()
+            .filter(|&ch| self.job_of_channel(ChannelId(ch)) == id)
+            .collect();
         let mut replayed = 0u64;
-        for (ch, items) in stash {
-            let c = self.rg.channel(ChannelId(ch));
-            if c.detached {
-                self.stats.accounted_lost += items.len() as u64;
+        for ch in job_channels {
+            let items = self
+                .replay_stash
+                .remove(&ch)
+                .expect("key collected from the stash");
+            let (detached, to) = {
+                let c = self.rg.channel(ChannelId(ch));
+                (c.detached, c.to)
+            };
+            if detached {
+                self.account_lost(id, items.len() as u64);
                 continue;
             }
-            if self.dead_tasks[c.to.index()] {
+            if self.dead_tasks[to.index()] {
                 // The receiver sits on another still-dead worker: keep
                 // the entry for that worker's own failover (its recovery
                 // replays it; its unregistration accounts it).
@@ -113,27 +156,31 @@ impl SimCluster {
             );
         }
         self.stats.items_replayed += replayed;
+        self.stats.jobs[j].items_replayed += replayed;
         self.log(
             now,
-            format!("failover {w}: reassigned {reassigned}, replayed {replayed}"),
+            format!("failover {w} {id}: reassigned {reassigned}, replayed {replayed}"),
         );
-        self.after_topology_change("failover");
+        self.after_topology_change(j, "failover");
     }
 
-    /// Recovery disabled: the master only unregisters the dead worker.
-    /// Its instances are detached from the routing tables (key-hash
-    /// routing re-partitions onto the survivors), the materialised
-    /// copies are never replayed, and stranded sender-side buffers on
-    /// the detached channels are accounted as lost.
-    fn unregister_worker(&mut self, now: Time, w: WorkerId) {
-        let victims = self.active_instances_on(w);
+    /// Recovery disabled: the master only unregisters the dead worker
+    /// from this job.  Its instances are detached from the routing
+    /// tables (key-hash routing re-partitions onto the survivors), the
+    /// materialised copies are never replayed, and stranded sender-side
+    /// buffers on the detached channels are accounted as lost against
+    /// the job's ledger.
+    fn unregister_worker_for(&mut self, now: Time, w: WorkerId, j: usize) {
+        let id = JobId(j as u32);
+        let victims = self.active_instances_on_for(w, j);
         let mut detached = 0u64;
         for &v in &victims {
             let in_ch = self.rg.retire_instance(v);
             for cid in in_ch {
                 let (items, _, _) = self.out_bufs[cid.index()].take();
-                self.stats.accounted_lost += items.len() as u64;
+                self.account_lost(id, items.len() as u64);
             }
+            self.sched.release_slot(id, w);
             detached += 1;
         }
         self.stats.instances_detached += detached;
@@ -147,32 +194,48 @@ impl SimCluster {
         self.scaled_instances.retain(|_, instances| !instances.is_empty());
         // Defensive: with recovery disabled nothing ever stashes, but an
         // unregister must leave no phantom in-flight items behind.
-        let stash = std::mem::take(&mut self.replay_stash);
-        let stranded: u64 = stash.values().map(|v| v.len() as u64).sum();
-        self.stats.accounted_lost += stranded;
-        self.log(now, format!("failover {w}: detached {detached}"));
-        self.after_topology_change("failover");
+        let job_channels: Vec<u32> = self
+            .replay_stash
+            .keys()
+            .copied()
+            .filter(|&ch| self.job_of_channel(ChannelId(ch)) == id)
+            .collect();
+        let mut stranded = 0u64;
+        for ch in job_channels {
+            stranded += self
+                .replay_stash
+                .remove(&ch)
+                .map(|v| v.len() as u64)
+                .unwrap_or(0);
+        }
+        self.account_lost(id, stranded);
+        self.log(now, format!("failover {w} {id}: detached {detached}"));
+        self.after_topology_change(j, "failover");
     }
 
-    /// Instances of `w` still in their group's routing tables —
-    /// scale-down-retired instances keep their worker assignment but are
-    /// no longer members and must not be resurrected or re-detached by a
-    /// failover.
-    fn active_instances_on(&self, w: WorkerId) -> Vec<VertexId> {
+    /// Instances of job `j` on `w` still in their group's routing tables
+    /// — scale-down-retired instances keep their worker assignment but
+    /// are no longer members and must not be resurrected or re-detached
+    /// by a failover.
+    fn active_instances_on_for(&self, w: WorkerId, j: usize) -> Vec<VertexId> {
+        let id = JobId(j as u32);
         self.rg
             .vertices_on_worker(w)
-            .filter(|rv| self.rg.members(rv.job_vertex).contains(&rv.id))
+            .filter(|rv| {
+                self.job_of_vertex[rv.id.index()] == id
+                    && self.rg.members(rv.job_vertex).contains(&rv.id)
+            })
             .map(|rv| rv.id)
             .collect()
     }
 
     /// Post-rescale/failover bookkeeping shared by every topology-change
-    /// path: rebuild the QoS setup (Algorithms 1–3); on the
+    /// path: rebuild the job's QoS setup (Algorithms 1–3); on the
     /// never-expected failure keep the dense per-element state sized to
     /// the topology so indexing stays in bounds.
-    fn after_topology_change(&mut self, context: &str) {
-        if let Err(e) = self.rebuild_qos() {
-            eprintln!("warning: QoS rebuild after {context} failed: {e}");
+    pub(crate) fn after_topology_change(&mut self, j: usize, context: &str) {
+        if let Err(e) = self.rebuild_qos(j) {
+            eprintln!("warning: QoS rebuild of j{j} after {context} failed: {e}");
             let nc = self.rg.channels.len();
             let nv = self.rg.vertices.len();
             self.chan_latency_monitored.resize(nc, false);
@@ -188,11 +251,13 @@ impl SimCluster {
     // ------------------------------------------------------------------
 
     /// Apply an elastic-scaling action: spawn or retire instances of
-    /// `group`, rewire their channels, and rebuild the QoS setup so
-    /// reporters and managers track the new topology.  Decisions based on
-    /// measurement state older than the last applied rescale of the group
-    /// are discarded (first-wins, mirroring the §3.5.1 buffer update
-    /// arbitration).  Returns whether the topology changed.
+    /// `group`, rewire their channels, and rebuild the owning job's QoS
+    /// setup so its reporters and managers track the new topology.
+    /// Decisions based on measurement state older than the last applied
+    /// rescale of the group are discarded (first-wins, mirroring the
+    /// §3.5.1 buffer update arbitration); scale-ups are additionally
+    /// arbitrated against the scheduler's slot ledger.  Returns whether
+    /// the topology changed.
     pub fn apply_scaling(
         &mut self,
         now: Time,
@@ -200,6 +265,13 @@ impl SimCluster {
         delta: i32,
         based_on: Time,
     ) -> bool {
+        let job = self.job.vertex(group).job;
+        // A job that completed or was cancelled between the manager's
+        // decision and its application must not be resized.
+        if self.sched.state(job) != Some(JobState::Running) {
+            self.stats.scaling_rejected += 1;
+            return false;
+        }
         if let Some(&t) = self.last_scale.get(&group) {
             if based_on <= t {
                 self.stats.scaling_rejected += 1;
@@ -212,14 +284,14 @@ impl SimCluster {
             // rescale: compute the per-edge map once.
             let edge_size = self.edge_buffer_sizes();
             for _ in 0..delta {
-                if !self.spawn_instance(group, &edge_size) {
+                if !self.spawn_instance(job, group, &edge_size) {
                     break;
                 }
                 changed = true;
             }
         } else {
             for _ in 0..(-delta) {
-                if !self.retire_instance(now, group) {
+                if !self.retire_instance(now, job, group) {
                     break;
                 }
                 changed = true;
@@ -231,7 +303,7 @@ impl SimCluster {
                 now,
                 format!("scale {} {delta:+} -> {}", group, self.rg.members(group).len()),
             );
-            self.after_topology_change(&format!("scaling {group}"));
+            self.after_topology_change(job.index(), &format!("scaling {group}"));
         }
         changed
     }
@@ -256,7 +328,12 @@ impl SimCluster {
     }
 
     /// Spawn one instance of `group` (scale-up step).
-    fn spawn_instance(&mut self, group: JobVertexId, edge_size: &BTreeMap<JobEdgeId, u32>) -> bool {
+    fn spawn_instance(
+        &mut self,
+        job: JobId,
+        group: JobVertexId,
+        edge_size: &BTreeMap<JobEdgeId, u32>,
+    ) -> bool {
         if self.rg.members(group).len() as u32 >= self.cfg.manager.scaling.max_parallelism {
             self.stats.scaling_rejected += 1;
             return false;
@@ -280,13 +357,13 @@ impl SimCluster {
                 return false;
             }
         }
-        // Spread new instances like the initial placement (subtask index
-        // modulo worker count), skipping crashed workers.
-        let idx = self.rg.members(group).len() as u32;
-        let worker = match (0..self.rg.num_workers)
-            .map(|k| WorkerId((idx + k) % self.rg.num_workers))
-            .find(|w| !self.dead_workers[w.index()])
-        {
+        // Slot arbitration: the new instance must fit in the *free* pool
+        // — capacity reserved by other jobs is off limits.  The spread
+        // policy seeds its rotation at the subtask index, reproducing the
+        // legacy single-job placement (instance k on worker k mod n,
+        // skipping crashed workers).
+        let idx = self.rg.members(group).len();
+        let worker = match self.sched.reserve_elastic(job, idx, &self.dead_workers) {
             Some(w) => w,
             None => {
                 self.stats.scaling_rejected += 1;
@@ -297,6 +374,7 @@ impl SimCluster {
             Ok((v, new_channels)) => {
                 self.tasks.push(TaskState::new(self.job_specs[group.index()]));
                 self.dead_tasks.push(false);
+                self.job_of_vertex.push(job);
                 debug_assert_eq!(self.tasks.len(), self.rg.vertices.len());
                 debug_assert_eq!(v.index(), self.tasks.len() - 1);
                 for &cid in &new_channels {
@@ -313,6 +391,7 @@ impl SimCluster {
                 true
             }
             Err(_) => {
+                self.sched.release_slot(job, worker);
                 self.stats.scaling_rejected += 1;
                 false
             }
@@ -331,8 +410,8 @@ impl SimCluster {
     /// accounted-loss path), and loses no items: pending sender-side
     /// buffers on the detached channels are flushed first, and the
     /// instance keeps draining its input queue through its still-wired
-    /// output channels.
-    fn retire_instance(&mut self, now: Time, group: JobVertexId) -> bool {
+    /// output channels.  The freed slot returns to the scheduler's pool.
+    fn retire_instance(&mut self, now: Time, job: JobId, group: JobVertexId) -> bool {
         let v = {
             let tasks = &self.tasks;
             let dead_tasks = &self.dead_tasks;
@@ -363,36 +442,335 @@ impl SimCluster {
             }
         }
         self.rg.retire_instance(v);
+        self.sched.release_slot(job, self.rg.worker(v));
         // Drain whatever is already queued at the retiring instance.
         self.try_schedule(now, v);
         self.stats.scale_downs += 1;
         true
     }
 
-    /// Recompute the QoS setup (Algorithms 1-3) for the current runtime
-    /// graph and swap in fresh reporters and managers.  Managers restart
-    /// with empty measurement windows and re-acquire data within one
-    /// measurement interval; their believed buffer sizes are primed with
-    /// the actual worker-side sizes.
-    fn rebuild_qos(&mut self) -> Result<()> {
-        let qos = build_qos_runtime(
+    // ------------------------------------------------------------------
+    // Job lifecycle (multi-job scheduler)
+    // ------------------------------------------------------------------
+
+    /// Process a queued submission: place instances via the scheduler,
+    /// absorb the job's graphs into the union, grow the dense engine
+    /// state, build the job's QoS runtime and start its sources.
+    pub(crate) fn on_job_submit(&mut self, now: Time, j: usize) {
+        let sub = match self.pending[j].take() {
+            Some(s) => s,
+            None => return,
+        };
+        let id = JobId(j as u32);
+        let demand: u32 = sub.job.vertices.iter().map(|v| v.parallelism).sum();
+        let assigned = match self.sched.place_job(id, demand, &self.dead_workers, now) {
+            Ok(a) => a,
+            Err(e) => {
+                self.stats.jobs_rejected += 1;
+                self.log(now, format!("job {id} ({}) rejected: {e}", sub.name));
+                return;
+            }
+        };
+        let remap = self.job.absorb(&sub.job, id);
+        // Placement lookup in expansion order (one worker per instance).
+        let mut pmap: BTreeMap<(u32, u32), WorkerId> = BTreeMap::new();
+        let mut it = assigned.iter();
+        for jv in &self.job.vertices[remap.vertex_base as usize..] {
+            for s in 0..jv.parallelism {
+                pmap.insert((jv.id.0, s), *it.next().expect("one worker per instance"));
+            }
+        }
+        self.rg
+            .append_job(
+                &self.job,
+                remap.vertex_base as usize,
+                remap.edge_base as usize,
+                &|jv, s| pmap[&(jv.0, s)],
+            )
+            .expect("scheduler-assigned placement is valid");
+
+        // Grow the dense engine state to the new topology.
+        self.job_specs.extend(sub.task_specs.iter().copied());
+        let old_nv = self.tasks.len();
+        for v in &self.rg.vertices[old_nv..] {
+            self.tasks.push(TaskState::new(self.job_specs[v.job_vertex.index()]));
+            self.dead_tasks.push(false);
+            self.job_of_vertex.push(id);
+        }
+        for _ in self.out_bufs.len()..self.rg.channels.len() {
+            self.out_bufs.push(OutBufferState::new(self.cfg.default_buffer_size));
+        }
+        self.jobs[j].constraints = sub.constraints.iter().map(|c| remap.constraint(c)).collect();
+        self.jobs[j].source_end = match sub.run_for {
+            Some(d) => now + d,
+            None => Time(u64::MAX),
+        };
+        for s in &sub.sources {
+            let mut s = *s;
+            s.target = remap.vertex(s.target);
+            let idx = self.sources.len() as u32;
+            self.sources.push(s);
+            self.job_of_source.push(id);
+            self.queue.push(now + s.offset, Ev::Packet { source: idx });
+        }
+        self.stats.jobs_submitted += 1;
+        self.log(
+            now,
+            format!("job {id} ({}) submitted: {demand} instances", sub.name),
+        );
+        if let Err(e) = self.install_qos(j) {
+            // The job still runs, just without QoS management; the
+            // failure is visible in the log and typed (SetupError).
+            self.log(now, format!("job {id}: qos setup failed: {e}"));
+        }
+        if sub.run_for.is_some() {
+            let first_check = self.jobs[j].source_end + Duration::from_secs(1);
+            self.queue.push(first_check, Ev::JobWatch { job: id.0 });
+        }
+    }
+
+    /// Completion watch.  Once the job's sources have ended, each check
+    /// performs the end-of-stream flush — partial output buffers have no
+    /// flush timer, so the final items of a stream would otherwise sit
+    /// in half-filled buffers forever — and the cascade walks the
+    /// residue down the pipeline one hop per tick.  The job completes
+    /// after three consecutive quiet checks (nothing flushed, nothing
+    /// drainable): the wire's longest delivery delay (HDFS-boundary
+    /// handoff, sub-second) is safely inside that window, so nothing can
+    /// still be in flight when the job is declared done.
+    pub(crate) fn on_job_watch(&mut self, now: Time, j: usize) {
+        let id = JobId(j as u32);
+        if self.sched.state(id) != Some(JobState::Running) {
+            return;
+        }
+        let ended = now >= self.jobs[j].source_end.min(self.source_end);
+        if ended {
+            let flushed = self.flush_job_outbufs(now, j);
+            if flushed == 0 && self.drainable_in_flight(id) == 0 {
+                self.jobs[j].drain_streak += 1;
+                if self.jobs[j].drain_streak >= 3 {
+                    self.complete_job(now, j);
+                    return;
+                }
+            } else {
+                self.jobs[j].drain_streak = 0;
+            }
+        }
+        self.queue.push(now + Duration::from_secs(1), Ev::JobWatch { job: id.0 });
+    }
+
+    /// End-of-stream flush: push every non-empty output buffer of the
+    /// job's channels onto the wire.  Returns how many buffers flushed.
+    fn flush_job_outbufs(&mut self, now: Time, j: usize) -> u64 {
+        let id = JobId(j as u32);
+        let pending: Vec<ChannelId> = (0..self.out_bufs.len())
+            .filter(|&c| {
+                !self.out_bufs[c].pending.is_empty()
+                    && !self.out_bufs[c].chained
+                    && self.job_of_channel(ChannelId(c as u32)) == id
+            })
+            .map(|c| ChannelId(c as u32))
+            .collect();
+        let count = pending.len() as u64;
+        for cid in pending {
+            let sender = self.rg.worker(self.rg.channel(cid).from);
+            self.flush_channel(now, cid, sender);
+        }
+        count
+    }
+
+    /// Mark a drained job completed: fold partial merge-group and open
+    /// window residue into the ledger (end-of-stream truncation — the
+    /// wire is quiet, so no further item will ever complete them), free
+    /// the job's slots, and tear down its QoS runtime (the
+    /// reporter/manager event chains prune themselves on their next
+    /// firing).
+    fn complete_job(&mut self, now: Time, j: usize) {
+        let id = JobId(j as u32);
+        let mut residue = 0u64;
+        for (i, t) in self.tasks.iter_mut().enumerate() {
+            if self.job_of_vertex[i] != id {
+                continue;
+            }
+            residue += t.windows.values().map(|&(_, n, _)| n).sum::<u64>();
+            residue += t
+                .groups
+                .values()
+                .map(|g| g.values().map(|q| q.len() as u64).sum::<u64>())
+                .sum::<u64>();
+            t.windows.clear();
+            t.groups.clear();
+        }
+        self.stats.jobs[j].absorbed += residue;
+        let _ = self.sched.complete(id, now);
+        self.jobs[j].reporters.clear();
+        self.jobs[j].managers.clear();
+        self.jobs[j].detector.track(Vec::new(), now);
+        self.stats.jobs_completed += 1;
+        let ledger: &JobLedger = &self.stats.jobs[j];
+        let summary = format!(
+            "job {id} complete: sinks {} of {} ingested, lost {}",
+            ledger.at_sinks, ledger.items_ingested, ledger.accounted_lost
+        );
+        self.log(now, summary);
+    }
+
+    /// Cancel a running job: stop its sources, kill its task threads,
+    /// account every in-flight item (queues, partial aggregation state,
+    /// output buffers, replay stash) as lost in the job's ledger, free
+    /// its slots, and tear down its QoS runtime.
+    pub(crate) fn on_job_cancel(&mut self, now: Time, j: usize) {
+        let id = JobId(j as u32);
+        if self.sched.state(id) == Some(JobState::Pending) {
+            // Cancelled before its submission event fired: drop the
+            // queued payload so the later `JobSubmit` is a no-op.
+            self.pending[j] = None;
+            let _ = self.sched.cancel(id, now);
+            self.stats.jobs_cancelled += 1;
+            self.log(now, format!("job {id} cancelled before submission"));
+            return;
+        }
+        if self.sched.state(id) != Some(JobState::Running) {
+            return;
+        }
+        self.jobs[j].source_end = now;
+        // Transition first: in-flight deliveries arriving after this
+        // classify as plain losses (no materialisation stash).
+        let _ = self.sched.cancel(id, now);
+        let victims: Vec<VertexId> = (0..self.rg.vertices.len())
+            .filter(|&i| self.job_of_vertex[i] == id)
+            .map(|i| VertexId(i as u32))
+            .collect();
+        // Chains die with their job (members never cross jobs).
+        let dead_groups: BTreeSet<u32> = victims
+            .iter()
+            .filter_map(|&v| self.tasks[v.index()].chain)
+            .collect();
+        for g in dead_groups {
+            let members = self.chain_members[g as usize].clone();
+            for pair in members.windows(2) {
+                if let Some(cid) = self.rg.channel_between(pair[0], pair[1]) {
+                    self.out_bufs[cid.index()].chained = false;
+                }
+            }
+            for &m in &members {
+                self.tasks[m.index()].chain = None;
+            }
+            self.chain_sched[g as usize] = false;
+        }
+        let mut lost = 0u64;
+        for &v in &victims {
+            self.dead_tasks[v.index()] = true;
+            let t = &mut self.tasks[v.index()];
+            lost += t.queue.drain(..).map(|qb| qb.buffer.items.len() as u64).sum::<u64>();
+            t.queued_bytes = 0;
+            t.scheduled = false;
+            t.pending_sample = None;
+            t.busy_accum = Duration::ZERO;
+            lost += t
+                .groups
+                .values()
+                .map(|g| g.values().map(|q| q.len() as u64).sum::<u64>())
+                .sum::<u64>();
+            lost += t.windows.values().map(|&(_, n, _)| n).sum::<u64>();
+            t.groups.clear();
+            t.windows.clear();
+            let outs: Vec<ChannelId> = self.rg.out_channels(v).to_vec();
+            for cid in outs {
+                let (items, _, _) = self.out_bufs[cid.index()].take();
+                lost += items.len() as u64;
+            }
+        }
+        let job_channels: Vec<u32> = self
+            .replay_stash
+            .keys()
+            .copied()
+            .filter(|&ch| self.job_of_channel(ChannelId(ch)) == id)
+            .collect();
+        for ch in job_channels {
+            lost += self
+                .replay_stash
+                .remove(&ch)
+                .map(|v| v.len() as u64)
+                .unwrap_or(0);
+        }
+        self.account_lost(id, lost);
+        self.jobs[j].reporters.clear();
+        self.jobs[j].managers.clear();
+        self.jobs[j].detector.track(Vec::new(), now);
+        self.stats.jobs_cancelled += 1;
+        self.log(now, format!("job {id} cancelled: {lost} in-flight items lost"));
+    }
+
+    // ------------------------------------------------------------------
+    // QoS setup (Algorithms 1–3), scoped by job
+    // ------------------------------------------------------------------
+
+    /// First-time QoS setup of a freshly submitted job: like a rebuild,
+    /// but staggered (reporter offsets, manager tick jitter) and not
+    /// counted as a rebuild.
+    fn install_qos(&mut self, j: usize) -> Result<()> {
+        let qos = self.build_job_qos(j)?;
+        self.apply_qos(j, qos, true);
+        Ok(())
+    }
+
+    /// Recompute the QoS setup (Algorithms 1–3) for one job against the
+    /// current runtime graph and swap in fresh reporters and managers.
+    /// Other jobs' runtimes are untouched.  Managers restart with empty
+    /// measurement windows and re-acquire data within one measurement
+    /// interval; their believed buffer sizes are primed with the actual
+    /// worker-side sizes.
+    fn rebuild_qos(&mut self, j: usize) -> Result<()> {
+        let qos = self.build_job_qos(j)?;
+        self.apply_qos(j, qos, false);
+        self.stats.qos_rebuilds += 1;
+        Ok(())
+    }
+
+    fn build_job_qos(&mut self, j: usize) -> Result<QosRuntime> {
+        build_qos_runtime_for(
+            JobId(j as u32),
             &self.job,
             &self.rg,
-            &self.constraints,
+            &self.jobs[j].constraints,
             &self.cfg,
+            self.jobs[j].manager_cfg,
             &mut self.rng,
-        )?;
-        let n_channels = self.rg.channels.len();
-        let n_vertices = self.rg.vertices.len();
-        self.chan_latency_monitored = qos.chan_latency_monitored;
-        self.chan_oblt_monitored = qos.chan_oblt_monitored;
-        self.vertex_monitored = qos.vertex_monitored;
-        self.next_tag_at.resize(n_channels, Time::ZERO);
-        self.next_task_sample_at.resize(n_vertices, Time::ZERO);
-        self.reporters = qos.reporters;
-        self.managers = qos.managers;
+        )
+    }
+
+    /// Swap a freshly built QoS runtime into job `j`'s slot: update the
+    /// dense monitored-element state for this job's elements only, start
+    /// event chains for (job, worker) pairs that gained a role, and
+    /// re-sync the job's liveness tracking.
+    fn apply_qos(&mut self, j: usize, qos: QosRuntime, stagger: bool) {
+        let id = JobId(j as u32);
+        let nc = self.rg.channels.len();
+        let nv = self.rg.vertices.len();
+        self.chan_latency_monitored.resize(nc, false);
+        self.chan_oblt_monitored.resize(nc, false);
+        self.vertex_monitored.resize(nv, false);
+        self.next_tag_at.resize(nc, Time::ZERO);
+        self.next_task_sample_at.resize(nv, Time::ZERO);
+        for c in 0..nc {
+            if self.job_of_channel(ChannelId(c as u32)) == id {
+                self.chan_latency_monitored[c] = qos.chan_latency_monitored[c];
+                self.chan_oblt_monitored[c] = qos.chan_oblt_monitored[c];
+            }
+        }
+        for v in 0..nv {
+            if self.job_of_vertex[v] == id {
+                self.vertex_monitored[v] = qos.vertex_monitored[v];
+            }
+        }
+        for &w in qos.reporters.keys().chain(qos.managers.keys()) {
+            self.arbiters.entry(w).or_default();
+        }
+        self.jobs[j].reporters = qos.reporters;
+        self.jobs[j].managers = qos.managers;
         let sizes: Vec<u32> = self.out_bufs.iter().map(|b| b.size).collect();
-        for mgr in self.managers.values_mut() {
+        for mgr in self.jobs[j].managers.values_mut() {
             let channels: Vec<ChannelId> = mgr
                 .subgraph()
                 .chains
@@ -403,36 +781,62 @@ impl SimCluster {
                 mgr.prime_buffer_size(cid, sizes[cid.index()]);
             }
         }
-        // Start event chains for workers that gained a reporter/manager
-        // role (existing chains keep running through the swapped-in
-        // state; dead ones were pruned by the handlers).
+        // Start event chains for (job, worker) pairs that gained a
+        // reporter/manager role (existing chains keep running through the
+        // swapped-in state; dead ones were pruned by the handlers).
+        let now = self.queue.now();
         let interval = self.cfg.measurement_interval;
-        let new_flush: Vec<u32> = self
-            .reporters
-            .keys()
-            .map(|w| w.0)
-            .filter(|w| !self.flush_chains.contains(w))
-            .collect();
-        for w in new_flush {
-            self.flush_chains.insert(w);
-            self.queue.push(self.queue.now() + interval, Ev::ReporterFlush { worker: w });
+        let jnum = j as u32;
+        if stagger {
+            // Fresh install: honour the reporters' random flush offsets
+            // and jitter the manager ticks, like cluster construction.
+            let deadlines: Vec<(u32, Duration)> = self.jobs[j]
+                .reporters
+                .iter()
+                .filter_map(|(&w, r)| {
+                    r.next_deadline()
+                        .map(|t| (w.0, Duration::from_micros(t.0 % interval.as_micros().max(1))))
+                })
+                .collect();
+            for (w, off) in deadlines {
+                if self.flush_chains.insert((jnum, w)) {
+                    self.queue.push(now + off, Ev::ReporterFlush { job: jnum, worker: w });
+                }
+            }
+            let mgr_workers: Vec<u32> = self.jobs[j].managers.keys().map(|w| w.0).collect();
+            for w in mgr_workers {
+                let off = Duration::from_micros(self.rng.below(interval.as_micros().max(1)));
+                if self.tick_chains.insert((jnum, w)) {
+                    self.queue
+                        .push(now + interval + off, Ev::ManagerTick { job: jnum, worker: w });
+                }
+            }
+        } else {
+            let new_flush: Vec<u32> = self.jobs[j]
+                .reporters
+                .keys()
+                .map(|w| w.0)
+                .filter(|&w| !self.flush_chains.contains(&(jnum, w)))
+                .collect();
+            for w in new_flush {
+                self.flush_chains.insert((jnum, w));
+                self.queue.push(now + interval, Ev::ReporterFlush { job: jnum, worker: w });
+            }
+            let new_ticks: Vec<u32> = self.jobs[j]
+                .managers
+                .keys()
+                .map(|w| w.0)
+                .filter(|&w| !self.tick_chains.contains(&(jnum, w)))
+                .collect();
+            for w in new_ticks {
+                self.tick_chains.insert((jnum, w));
+                self.queue.push(now + interval, Ev::ManagerTick { job: jnum, worker: w });
+            }
         }
-        let new_ticks: Vec<u32> = self
-            .managers
-            .keys()
-            .map(|w| w.0)
-            .filter(|w| !self.tick_chains.contains(w))
-            .collect();
-        for w in new_ticks {
-            self.tick_chains.insert(w);
-            self.queue.push(self.queue.now() + interval, Ev::ManagerTick { worker: w });
-        }
-        // Reporter placement may have changed: re-sync the master's
+        // Reporter placement may have changed: re-sync this job's
         // liveness tracking (workers gaining a role start a fresh grace
         // period, workers losing it stop being monitored).
-        let reporter_workers: Vec<WorkerId> = self.reporters.keys().copied().collect();
-        self.detector.track(reporter_workers, self.queue.now());
-        self.stats.qos_rebuilds += 1;
-        Ok(())
+        let reporter_workers: Vec<WorkerId> = self.jobs[j].reporters.keys().copied().collect();
+        self.jobs[j].detector.track(reporter_workers, now);
     }
 }

@@ -28,7 +28,7 @@ pub mod net;
 pub mod task;
 pub mod worker;
 
-pub use accounting::SimStats;
+pub use accounting::{JobLedger, SimStats};
 pub use cluster::{SimCluster, SimObserver};
 pub use engine::{EventCore, SimError};
 pub use events::EventQueue;

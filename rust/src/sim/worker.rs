@@ -4,8 +4,13 @@
 //! application, and fail-stop crash destruction.
 //!
 //! Everything here models what one worker process does; the master-side
-//! reactions (liveness sweep, recovery, elastic scaling) live in
-//! [`super::master`].
+//! reactions (liveness sweep, recovery, elastic scaling, job lifecycle)
+//! live in [`super::master`].
+//!
+//! Multi-tenancy: items and measurements are tagged with their job —
+//! derived from the element they concern (`job_of_vertex`, the channel's
+//! sender) — so per-job ledgers stay exact and measurements land in the
+//! right job's reporter.
 
 use super::cluster::SimCluster;
 use super::engine::{Ev, SimError};
@@ -15,7 +20,7 @@ use super::task::{QueuedBuffer, Route, Semantics};
 use crate::actions::arbiter::Verdict;
 use crate::actions::chaining::DrainPolicy;
 use crate::actions::Action;
-use crate::graph::ids::{ChannelId, VertexId, WorkerId};
+use crate::graph::ids::{ChannelId, JobId, VertexId, WorkerId};
 use crate::qos::sample::Measurement;
 use crate::util::time::{Duration, Time};
 use std::collections::BTreeSet;
@@ -27,6 +32,7 @@ impl SimCluster {
 
     pub(crate) fn on_packet(&mut self, now: Time, source: u32) {
         let s = self.sources[source as usize];
+        let job = self.job_of_source[source as usize];
         let batch = s.batch.max(1);
         let item = ItemRec::new(s.key, s.bytes, now);
         // Failure handling can shrink the target group; external streams
@@ -38,6 +44,7 @@ impl SimCluster {
             Some(members[s.target_subtask as usize % members.len()])
         };
         self.stats.items_ingested += batch as u64;
+        self.stats.jobs[job.index()].items_ingested += batch as u64;
         let mut next = now + s.interval.max(Duration::from_micros(1));
         match v {
             Some(v) if !self.dead_tasks[v.index()] => {
@@ -64,10 +71,11 @@ impl SimCluster {
                 // The stream's endpoint is dead (or its whole group is
                 // gone): items are lost at the cluster edge — there is no
                 // materialisation point upstream of an external source.
-                self.stats.accounted_lost += batch as u64;
+                self.account_lost(job, batch as u64);
             }
         }
-        if next < self.source_end {
+        let end = self.source_end.min(self.jobs[job.index()].source_end);
+        if next < end {
             self.queue.push(next, Ev::Packet { source });
         }
     }
@@ -78,7 +86,8 @@ impl SimCluster {
             // The receiving task thread is gone: the buffer is lost on
             // arrival (items from pinned producers survive in the
             // materialisation buffer and await replay).
-            self.classify_lost(buffer.channel, buffer.items);
+            let job = self.job_of_vertex[v.index()];
+            self.classify_lost(job, buffer.channel, buffer.items);
             return;
         }
         self.stats.items_delivered += buffer.items.len() as u64;
@@ -271,12 +280,19 @@ impl SimCluster {
                     let born = members.iter().map(|m| m.born).min().unwrap();
                     let out_key = spec.key_map.apply(item.key);
                     let out = ItemRec::new(out_key, spec.out_bytes.apply(total), born);
+                    // Per-job ledger: `arity` items folded away, one
+                    // produced in their place.
+                    let job = self.job_of_vertex[v.index()];
+                    let ledger = &mut self.stats.jobs[job.index()];
+                    ledger.absorbed += members.len() as u64;
+                    ledger.produced += 1;
                     spent += self.emit(exit, v, out);
                 }
             }
             Semantics::Sink => {
                 let e2e = enter.since(item.born).as_micros() as f64;
-                self.record_e2e(e2e);
+                let job = self.job_of_vertex[v.index()];
+                self.record_e2e(job, e2e);
             }
             Semantics::WindowAgg { window } => {
                 let key = spec.key_map.apply(item.key);
@@ -287,10 +303,14 @@ impl SimCluster {
                     .or_insert((enter, 0, 0));
                 entry.1 += 1;
                 entry.2 += item.bytes as u64;
-                let (start, _n, bytes) = *entry;
+                let (start, n, bytes) = *entry;
                 if enter.since(start) >= window {
                     self.tasks[v.index()].windows.remove(&key);
                     let out = ItemRec::new(key, spec.out_bytes.apply(bytes), item.born);
+                    let job = self.job_of_vertex[v.index()];
+                    let ledger = &mut self.stats.jobs[job.index()];
+                    ledger.absorbed += n;
+                    ledger.produced += 1;
                     spent += self.emit(exit, v, out);
                 }
             }
@@ -303,12 +323,13 @@ impl SimCluster {
     /// directly (chained channel) or write to the output buffer.
     /// Returns extra thread time consumed by inline chained successors.
     fn emit(&mut self, exit: Time, v: VertexId, mut item: ItemRec) -> Duration {
+        let job = self.job_of_vertex[v.index()];
         // Close the §3.2.1 sample: "the time difference between a data
         // item entering the user code and the next data item leaving it".
         if let Some(started) = self.tasks[v.index()].pending_sample.take() {
             let worker = self.rg.worker(v);
             let sampled = exit.since(started).as_micros() as f64;
-            self.record(worker, Measurement::task_latency(v, sampled));
+            self.record(job, worker, Measurement::task_latency(v, sampled));
         }
 
         let out_channels = self.rg.out_channels(v);
@@ -316,7 +337,7 @@ impl SimCluster {
             // A non-sink emission with no wired consumer left (every
             // downstream instance detached by failure handling): the item
             // has nowhere to go and is accounted as lost.
-            self.stats.accounted_lost += 1;
+            self.account_lost(job, 1);
             return Duration::ZERO;
         }
         let spec = self.tasks[v.index()].spec;
@@ -343,6 +364,7 @@ impl SimCluster {
             if self.chan_latency_monitored[cid.index()] && exit >= self.next_tag_at[cid.index()] {
                 self.next_tag_at[cid.index()] = exit + self.cfg.measurement_interval;
                 self.record(
+                    job,
                     self.rg.worker(to),
                     Measurement::channel_latency(cid, 1.0),
                 );
@@ -373,7 +395,9 @@ impl SimCluster {
         // Output buffer lifetime (§3.3), measured at the sender.
         if self.chan_oblt_monitored[cid.index()] {
             if let Some(start) = fill_start {
+                let job = self.job_of_channel(cid);
                 self.record(
+                    job,
                     sender_worker,
                     Measurement::output_buffer_lifetime(cid, now.since(start).as_micros() as f64),
                 );
@@ -412,9 +436,13 @@ impl SimCluster {
     // Measurement plumbing
     // ------------------------------------------------------------------
 
-    pub(crate) fn record(&mut self, worker: WorkerId, m: Measurement) {
-        if let Some(r) = self.reporters.get_mut(&worker) {
-            r.record(m);
+    /// Record a measurement into `job`'s reporter on `worker`, if that
+    /// job has one there.
+    pub(crate) fn record(&mut self, job: JobId, worker: WorkerId, m: Measurement) {
+        if let Some(jq) = self.jobs.get_mut(job.index()) {
+            if let Some(r) = jq.reporters.get_mut(&worker) {
+                r.record(m);
+            }
         }
     }
 
@@ -425,23 +453,29 @@ impl SimCluster {
         // synchronisation; §4.2 reports <2 ms).
         let skew = self.skew_us[rw.index()] - self.skew_us[sw.index()];
         let raw = enter.since(tag_created).as_micros() as i64 + skew;
-        self.record(rw, Measurement::channel_latency(cid, raw.max(0) as f64));
+        let job = self.job_of_vertex[c.from.index()];
+        self.record(job, rw, Measurement::channel_latency(cid, raw.max(0) as f64));
     }
 
-    pub(crate) fn on_reporter_flush(&mut self, now: Time, worker: WorkerId) {
+    pub(crate) fn on_reporter_flush(&mut self, now: Time, job: u32, worker: WorkerId) {
         if self.dead_workers[worker.index()] {
             // The reporter process died with its worker: this event chain
             // ends, and the resulting silence is exactly what the master's
             // failure detector keys on.
-            self.flush_chains.remove(&worker.0);
+            self.flush_chains.remove(&(job, worker.0));
             return;
         }
-        let (reports, next) = match self.reporters.get_mut(&worker) {
+        let (reports, next) = match self
+            .jobs
+            .get_mut(job as usize)
+            .and_then(|jq| jq.reporters.get_mut(&worker))
+        {
             Some(r) => (r.flush_due(now), r.next_deadline()),
             None => {
-                // Reporter removed by a QoS rebuild: this event chain ends
-                // (a later rebuild restarts it if the worker reports again).
-                self.flush_chains.remove(&worker.0);
+                // Reporter removed by a QoS rebuild or the job ended: this
+                // event chain ends (a later rebuild restarts it if the
+                // worker reports again for this job).
+                self.flush_chains.remove(&(job, worker.0));
                 return;
             }
         };
@@ -450,34 +484,39 @@ impl SimCluster {
             self.queue.push(now + delay, Ev::ReportArrive { report });
         }
         if let Some(t) = next {
-            self.queue.push(t, Ev::ReporterFlush { worker: worker.0 });
+            self.queue.push(t, Ev::ReporterFlush { job, worker: worker.0 });
         }
     }
 
-    pub(crate) fn on_manager_tick(&mut self, now: Time, worker: WorkerId) {
+    pub(crate) fn on_manager_tick(&mut self, now: Time, job: u32, worker: WorkerId) {
         if self.dead_workers[worker.index()] {
-            self.tick_chains.remove(&worker.0);
+            self.tick_chains.remove(&(job, worker.0));
             return;
         }
-        let actions = match self.managers.get_mut(&worker) {
+        let actions = match self
+            .jobs
+            .get_mut(job as usize)
+            .and_then(|jq| jq.managers.get_mut(&worker))
+        {
             Some(m) => m.act(now),
             None => {
-                self.tick_chains.remove(&worker.0);
+                self.tick_chains.remove(&(job, worker.0));
                 return;
             }
         };
         let delay = self.cfg.cluster.control_delay;
         for action in actions {
             match &action {
-                Action::Unresolvable { manager, constraint, .. } => {
+                Action::Unresolvable { job: aj, manager, constraint, .. } => {
                     self.stats.unresolvable_notices += 1;
-                    self.log(now, format!("unresolvable c{constraint} from {manager}"));
+                    self.stats.jobs[aj.index()].unresolvable += 1;
+                    self.log(now, format!("unresolvable c{constraint} from {manager} ({aj})"));
                 }
                 _ => self.queue.push(now + delay, Ev::ApplyAction { action }),
             }
         }
         let next_tick = now + self.cfg.measurement_interval;
-        self.queue.push(next_tick, Ev::ManagerTick { worker: worker.0 });
+        self.queue.push(next_tick, Ev::ManagerTick { job, worker: worker.0 });
     }
 
     pub(crate) fn on_cpu_sample(&mut self, now: Time, worker: WorkerId) {
@@ -494,7 +533,8 @@ impl SimCluster {
             let busy = std::mem::replace(&mut self.tasks[v.index()].busy_accum, Duration::ZERO);
             if self.vertex_monitored[v.index()] {
                 let util = busy.as_secs_f64() / interval.as_secs_f64();
-                self.record(worker, Measurement::task_cpu(v, util.min(1.0)));
+                let job = self.job_of_vertex[v.index()];
+                self.record(job, worker, Measurement::task_cpu(v, util.min(1.0)));
             }
         }
         self.queue.push(now + interval, Ev::CpuSample { worker: worker.0 });
@@ -513,7 +553,12 @@ impl SimCluster {
                         self.out_bufs[channel.index()].size = size;
                         self.stats.buffer_size_updates += 1;
                         self.log(now, format!("buffer {channel} -> {size}"));
-                        if let Some(r) = self.reporters.get_mut(&worker) {
+                        let job = self.job_of_channel(channel);
+                        if let Some(r) = self
+                            .jobs
+                            .get_mut(job.index())
+                            .and_then(|jq| jq.reporters.get_mut(&worker))
+                        {
                             r.note_buffer_update(channel, size);
                         }
                         // If the partial buffer already exceeds the new
@@ -528,7 +573,10 @@ impl SimCluster {
             Action::ChainTasks { worker: _, tasks, drain } => {
                 self.apply_chain(now, tasks, drain);
             }
-            Action::ScaleTasks { group, delta, based_on } => {
+            Action::ScaleTasks { job: _, group, delta, based_on } => {
+                // The owning job is re-derived from the group inside
+                // `apply_scaling` (the master's slot arbitration charges
+                // that job's reservations).
                 self.apply_scaling(now, group, delta, based_on);
             }
             Action::Unresolvable { .. } => {}
@@ -595,7 +643,7 @@ impl SimCluster {
     /// the pending output buffers of its channels are dropped, chains
     /// sharing a thread on it dissolve, and its NIC state resets.  The
     /// lost items are classified per producer
-    /// ([`SimCluster::classify_lost`]).
+    /// ([`SimCluster::classify_lost`]) and charged to their job's ledger.
     pub(crate) fn on_worker_crash(&mut self, now: Time, w: WorkerId) {
         if self.dead_workers[w.index()] {
             return;
@@ -626,6 +674,7 @@ impl SimCluster {
         }
         for &v in &victims {
             self.dead_tasks[v.index()] = true;
+            let job = self.job_of_vertex[v.index()];
             let (queued, partial) = {
                 let t = &mut self.tasks[v.index()];
                 let queued: Vec<QueuedBuffer> = t.queue.drain(..).collect();
@@ -644,15 +693,15 @@ impl SimCluster {
                 (queued, partial + windowed)
             };
             // Partial merge-group and window state dies with the process.
-            self.stats.accounted_lost += partial;
+            self.account_lost(job, partial);
             for qb in queued {
-                self.classify_lost(qb.buffer.channel, qb.buffer.items);
+                self.classify_lost(job, qb.buffer.channel, qb.buffer.items);
             }
             // Pending sender-side output buffers of the dead task.
             let outs: Vec<ChannelId> = self.rg.out_channels(v).to_vec();
             for cid in outs {
                 let (items, _, _) = self.out_bufs[cid.index()].take();
-                self.classify_lost(cid.0, items);
+                self.classify_lost(job, cid.0, items);
             }
         }
         self.nics[w.index()] = Nic::new(&self.cfg.cluster);

@@ -13,10 +13,13 @@
 
 use nephele::baseline::hadoop::hadoop_online_job;
 use nephele::config::EngineConfig;
+use nephele::experiments::multi::run_multi;
 use nephele::pipeline::failover::{failover_job, FailoverSpec};
+use nephele::pipeline::multi::MultiSpec;
 use nephele::pipeline::scale::ScaleSpec;
 use nephele::pipeline::surge::{surge_job, SurgeSpec};
 use nephele::pipeline::video::video_job;
+use nephele::sched::PlacementPolicy;
 use nephele::sim::cluster::{SimCluster, SimStats};
 use nephele::util::time::Duration;
 
@@ -141,6 +144,34 @@ fn scale_scenario_replays_byte_identically_for_a_seed() {
     // Match an action-log line ("buffer e<N> -> <size>"), not the always
     // present "buffers=" counter key in the fingerprint header.
     assert!(a.contains("buffer e"), "the run must exercise buffer actions:\n{a}");
+}
+
+/// The exact code path of `nephele sim-multi` at the reduced test size:
+/// the multi-job scheduler (dynamic submissions, per-job QoS runtimes,
+/// slot-ledger placement, completion watches) must replay
+/// byte-identically for a seed, under both placement policies — and the
+/// two policies must actually produce different trajectories.
+fn multi_fingerprint(seed: u64, policy: PlacementPolicy) -> String {
+    let cfg = EngineConfig { seed, ..EngineConfig::default() };
+    let report = run_multi(MultiSpec::tiny(), cfg, policy, false).unwrap();
+    report.fingerprint
+}
+
+#[test]
+fn multi_scenario_replays_byte_identically_for_both_policies() {
+    let mut by_policy = Vec::new();
+    for policy in [PlacementPolicy::Spread, PlacementPolicy::Pack] {
+        let a = multi_fingerprint(42, policy);
+        let b = multi_fingerprint(42, policy);
+        assert_eq!(a, b, "same seed must replay the same trajectory ({policy})");
+        assert!(a.contains("submitted"), "the run must exercise submissions:\n{a}");
+        assert!(a.contains("complete"), "jobs must complete:\n{a}");
+        by_policy.push(a);
+    }
+    assert_ne!(
+        by_policy[0], by_policy[1],
+        "spread and pack must place (and therefore behave) differently"
+    );
 }
 
 #[test]

@@ -1,0 +1,227 @@
+//! Multi-job scheduler integration: the `nephele sim-multi` gates at
+//! test size (latency within tolerance, throughput preserved, per-job
+//! conservation, completion), plus the job lifecycle — rejection on an
+//! over-committed pool, cancellation with exact loss accounting, slot
+//! release on completion, and elastic-scaling arbitration that cannot
+//! take capacity promised to another job.
+
+use nephele::config::EngineConfig;
+use nephele::experiments::multi::{run_multi, verify_report};
+use nephele::pipeline::multi::MultiSpec;
+use nephele::pipeline::surge::{surge_job, SurgeSpec};
+use nephele::sched::{JobState, JobSubmission, PlacementPolicy};
+use nephele::sim::cluster::SimCluster;
+use nephele::util::time::Duration;
+
+/// A small deterministic 3-stage submission derived from the surge
+/// pipeline (no surge wave), with `run_for` bounding its sources.
+fn small_submission(name: &str, run_for: Option<u64>) -> JobSubmission {
+    let mut spec = SurgeSpec::default();
+    spec.surge_streams = 0;
+    let sj = surge_job(spec).unwrap();
+    JobSubmission {
+        name: name.to_string(),
+        job: sj.job,
+        constraints: sj.constraints,
+        task_specs: sj.task_specs,
+        sources: sj.sources,
+        run_for: run_for.map(Duration::from_secs),
+        manager: None,
+    }
+}
+
+#[test]
+fn sim_multi_quick_gates_hold_for_every_policy() {
+    // The exact checks `nephele sim-multi` enforces, at the reduced test
+    // size: every latency job within 1.1x of its constraint, the
+    // throughput job's sink rate preserved, per-job conservation, and
+    // all jobs completed — under all three placement policies.
+    for policy in [
+        PlacementPolicy::Spread,
+        PlacementPolicy::Pack,
+        PlacementPolicy::LeastLoaded,
+    ] {
+        let report = run_multi(MultiSpec::tiny(), EngineConfig::default(), policy, false)
+            .unwrap_or_else(|e| panic!("{policy}: run failed: {e}"));
+        verify_report(&report, 1.1).unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(report.outcomes.len(), 3);
+        assert!(report.all_latency_ok(1.1));
+        assert!(report.throughput_ok());
+        assert!(report.conservation_ok());
+        assert!(report.all_completed());
+    }
+}
+
+#[test]
+fn jobs_complete_and_release_their_slots() {
+    let mut cluster = SimCluster::new_multi(
+        2,
+        8,
+        PlacementPolicy::LeastLoaded,
+        EngineConfig::default().unoptimized(),
+    )
+    .unwrap();
+    let dead = vec![false; 2];
+    let free0 = cluster.scheduler().free_slots(&dead);
+    assert_eq!(free0, 16);
+    let id = cluster
+        .submit_job_at(small_submission("short", Some(60)), Duration::ZERO)
+        .unwrap();
+    cluster.run(Duration::from_secs(30), None).unwrap();
+    assert_eq!(cluster.job_state(id), Some(JobState::Running));
+    // 6 instances (3 stages x parallelism 2) hold 6 slots.
+    assert_eq!(cluster.scheduler().free_slots(&dead), 10);
+    assert!(cluster.job_ledger(id).items_ingested > 0);
+    // Sources end at 60 s; the completion watch drains and completes.
+    cluster.run(Duration::from_secs(200), None).unwrap();
+    assert_eq!(cluster.job_state(id), Some(JobState::Completed));
+    assert_eq!(cluster.scheduler().free_slots(&dead), 16, "slots released");
+    cluster.job_conservation(id).unwrap();
+    let l = cluster.job_ledger(id);
+    assert_eq!(l.at_sinks, l.items_ingested, "everything drained to the sink");
+    assert_eq!(cluster.in_flight_of_job(id), 0);
+    assert_eq!(cluster.stats.jobs_completed, 1);
+}
+
+#[test]
+fn cancellation_accounts_in_flight_items_and_frees_slots() {
+    let mut cluster =
+        SimCluster::new_multi(2, 8, PlacementPolicy::Spread, EngineConfig::default().unoptimized())
+            .unwrap();
+    let id = cluster
+        .submit_job_at(small_submission("doomed", None), Duration::ZERO)
+        .unwrap();
+    cluster.cancel_job_at(id, Duration::from_secs(45));
+    // Run past the cancel plus a drain window for wire-borne buffers.
+    cluster.run(Duration::from_secs(120), None).unwrap();
+    assert_eq!(cluster.job_state(id), Some(JobState::Cancelled));
+    assert_eq!(cluster.stats.jobs_cancelled, 1);
+    let dead = vec![false; 2];
+    assert_eq!(cluster.scheduler().free_slots(&dead), 16, "slots released");
+    let l = cluster.job_ledger(id);
+    assert!(l.items_ingested > 0);
+    assert!(l.at_sinks > 0, "items flowed before the cancel");
+    cluster.job_conservation(id).unwrap();
+    assert_eq!(cluster.in_flight_of_job(id), 0, "nothing left in the pipeline");
+    assert_eq!(
+        l.at_sinks + l.accounted_lost,
+        l.items_ingested,
+        "every ingested item is at a sink or in the loss ledger: {l:?}"
+    );
+}
+
+#[test]
+fn cancel_before_submission_drops_the_pending_job() {
+    let mut cluster =
+        SimCluster::new_multi(2, 8, PlacementPolicy::Spread, EngineConfig::default().unoptimized())
+            .unwrap();
+    let id = cluster
+        .submit_job_at(small_submission("never", None), Duration::from_secs(10))
+        .unwrap();
+    cluster.cancel_job_at(id, Duration::from_secs(5));
+    cluster.run(Duration::from_secs(30), None).unwrap();
+    assert_eq!(cluster.job_state(id), Some(JobState::Cancelled));
+    assert!(cluster.rg.vertices.is_empty(), "the submission was never placed");
+    assert_eq!(cluster.job_ledger(id).items_ingested, 0);
+    assert_eq!(cluster.stats.jobs_cancelled, 1);
+    let dead = vec![false; 2];
+    assert_eq!(cluster.scheduler().free_slots(&dead), 16, "no slots were ever taken");
+}
+
+#[test]
+fn oversized_jobs_are_rejected_without_leaking_state() {
+    // 2 workers x 2 slots = 4 slots cannot hold 6 instances.
+    let mut cluster =
+        SimCluster::new_multi(2, 2, PlacementPolicy::Pack, EngineConfig::default().unoptimized())
+            .unwrap();
+    let id = cluster
+        .submit_job_at(small_submission("too-big", Some(30)), Duration::ZERO)
+        .unwrap();
+    cluster.run(Duration::from_secs(60), None).unwrap();
+    assert_eq!(cluster.job_state(id), Some(JobState::Rejected));
+    assert_eq!(cluster.stats.jobs_rejected, 1);
+    let dead = vec![false; 2];
+    assert_eq!(cluster.scheduler().free_slots(&dead), 4, "no reservation leaked");
+    let l = cluster.job_ledger(id);
+    assert_eq!((l.items_ingested, l.at_sinks), (0, 0), "nothing ever ran");
+    assert!(cluster.rg.vertices.is_empty(), "no instances were created");
+}
+
+#[test]
+fn elastic_scaling_cannot_take_capacity_promised_to_another_job() {
+    // Pool of 2x5 = 10 slots.  Job A (surge pipeline, 6 instances,
+    // elastic transcoder) and job B (1-parallelism pipeline, 3
+    // instances) reserve 9, leaving one free slot: the first scale-up
+    // of A's transcoder gets it, the second must be rejected by the
+    // slot arbitration — never carved out of B's reservation.
+    let mut cluster = SimCluster::new_multi(
+        2,
+        5,
+        PlacementPolicy::LeastLoaded,
+        EngineConfig::default().unoptimized(),
+    )
+    .unwrap();
+    // Job A first: its union job-vertex ids equal the standalone ids,
+    // so the surge handle identifies the transcoder group directly.
+    let transcoder = {
+        let mut s = SurgeSpec::default();
+        s.surge_streams = 0;
+        surge_job(s).unwrap().vertices.transcoder
+    };
+    let a = cluster
+        .submit_job_at(small_submission("elastic", None), Duration::ZERO)
+        .unwrap();
+    let b = {
+        let mut s = SurgeSpec::default();
+        s.surge_streams = 0;
+        s.base_streams = 2;
+        s.ingest_parallelism = 1;
+        s.transcoder_parallelism = 1;
+        s.sink_parallelism = 1;
+        let sj = surge_job(s).unwrap();
+        cluster
+            .submit_job_at(
+                JobSubmission {
+                    name: "neighbour".into(),
+                    job: sj.job,
+                    constraints: sj.constraints,
+                    task_specs: sj.task_specs,
+                    sources: sj.sources,
+                    run_for: None,
+                    manager: None,
+                },
+                Duration::ZERO,
+            )
+            .unwrap()
+    };
+    cluster.run(Duration::from_secs(30), None).unwrap();
+    assert_eq!(cluster.job_state(a), Some(JobState::Running));
+    assert_eq!(cluster.job_state(b), Some(JobState::Running));
+    let dead = vec![false; 2];
+    assert_eq!(cluster.scheduler().free_slots(&dead), 1);
+
+    let t = cluster.now();
+    assert!(cluster.apply_scaling(t, transcoder, 1, t), "one free slot: scale-up fits");
+    assert_eq!(cluster.parallelism_of(transcoder), 3);
+    assert_eq!(cluster.scheduler().free_slots(&dead), 0);
+
+    let t2 = t + Duration::from_secs(20);
+    let rejected_before = cluster.stats.scaling_rejected;
+    assert!(
+        !cluster.apply_scaling(t2, transcoder, 1, t2),
+        "pool exhausted: the neighbour's capacity is off limits"
+    );
+    assert_eq!(cluster.stats.scaling_rejected, rejected_before + 1);
+    assert_eq!(cluster.parallelism_of(transcoder), 3);
+    assert_eq!(
+        cluster.scheduler().entry(b).unwrap().reserved(),
+        3,
+        "job B's reservation is untouched"
+    );
+    cluster.routing_consistent().unwrap();
+
+    // Releasing A's extra instance returns the slot to the pool.
+    let t3 = t2 + Duration::from_secs(20);
+    assert!(cluster.apply_scaling(t3, transcoder, -1, t3));
+    assert_eq!(cluster.scheduler().free_slots(&dead), 1);
+}

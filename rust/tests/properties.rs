@@ -262,6 +262,101 @@ fn item_conservation_holds_under_crashes_and_recovery() {
     check(12, conservation_under_failures);
 }
 
+/// Per-job conservation in a multi-tenant cluster: two random pipelines
+/// submitted as separate jobs (staggered), a random worker crash
+/// mid-run with recovery randomly enabled, and a long drain.  Every
+/// job's ledger must balance on its own —
+/// `ingested + produced == at_sinks + in_flight + lost + absorbed` —
+/// and the jobs' ledgers must sum to the cluster-wide counters.
+fn per_job_conservation_two_jobs(g: &mut Gen) -> PropResult {
+    use nephele::sched::{JobSubmission, PlacementPolicy};
+
+    let workers = g.u32(2..=4);
+    let mut cfg = EngineConfig {
+        seed: g.u64(0..=u64::MAX),
+        ..EngineConfig::default()
+    }
+    .fully_optimized();
+    cfg.recovery.enable_recovery = g.bool();
+    let policy = match g.usize(0..=2) {
+        0 => PlacementPolicy::Spread,
+        1 => PlacementPolicy::Pack,
+        _ => PlacementPolicy::LeastLoaded,
+    };
+    // Capacity holds both jobs at their maximum random size (6 stages ×
+    // parallelism ≤ 6 each) regardless of the worker count.
+    let mut cluster = SimCluster::new_multi(workers, 72, policy, cfg)
+        .map_err(|e| format!("cluster build failed: {e}"))?;
+
+    let mut ids = Vec::new();
+    for j in 0..2u32 {
+        let mut rj = random_pipeline(g);
+        // Randomly pin stages: their emissions survive crashes in the
+        // materialisation buffer and are replayed instead of lost.
+        let n_stages = rj.job.vertices.len();
+        for i in 0..n_stages {
+            if g.chance(0.3) {
+                rj.job.vertex_mut(JobVertexId(i as u32)).pin_unchainable = true;
+            }
+        }
+        let submit_at = Duration::from_secs(g.u64(0..=10));
+        let id = cluster
+            .submit_job_at(
+                JobSubmission {
+                    name: format!("rand-{j}"),
+                    job: rj.job,
+                    constraints: vec![rj.constraint],
+                    task_specs: rj.specs,
+                    sources: rj.sources,
+                    run_for: Some(Duration::from_secs(g.u64(20..=45))),
+                    manager: None,
+                },
+                submit_at,
+            )
+            .map_err(|e| format!("submission failed: {e}"))?;
+        ids.push(id);
+    }
+    // Crash a random worker mid-run; detection (and possibly recovery)
+    // happens while both pipelines are loaded.
+    cluster.schedule_failures(&[FailureSpec {
+        worker: WorkerId(g.u32(0..=workers - 1)),
+        at: Duration::from_secs(g.u64(5..=40)),
+    }]);
+    cluster
+        .run(Duration::from_secs(60), None)
+        .map_err(|e| format!("sim engine error: {e}"))?;
+    let t = cluster.now();
+    cluster.stop_sources_at(t);
+    cluster
+        .run(Duration::from_secs(1800), None)
+        .map_err(|e| format!("sim engine error: {e}"))?;
+
+    let mut sum_ingested = 0;
+    let mut sum_sinks = 0;
+    let mut sum_lost = 0;
+    for &id in &ids {
+        let ledger = cluster.job_ledger(id);
+        prop_assert(ledger.items_ingested > 0, format!("{id}: sources must produce"))?;
+        cluster
+            .job_conservation(id)
+            .map_err(|e| format!("per-job conservation: {e}"))?;
+        sum_ingested += ledger.items_ingested;
+        sum_sinks += ledger.at_sinks;
+        sum_lost += ledger.accounted_lost;
+    }
+    let s = &cluster.stats;
+    prop_assert_eq(sum_ingested, s.items_ingested, "ledgers partition ingestion")?;
+    prop_assert_eq(sum_sinks, s.e2e_count, "ledgers partition sink arrivals")?;
+    prop_assert_eq(sum_lost, s.accounted_lost, "ledgers partition losses")?;
+    prop_assert_eq(s.dropped_on_chain, 0, "drain policy drops nothing")?;
+    Ok(())
+}
+
+#[test]
+fn per_job_conservation_holds_for_two_concurrent_jobs_with_crashes() {
+    check(10, per_job_conservation_two_jobs);
+}
+
 // ---------------------------------------------------------------------
 // Countermeasure escalation order (§3.5 extended with elastic scaling):
 // buffer sizing is attempted before chaining, chaining before scaling,
@@ -272,7 +367,7 @@ fn item_conservation_holds_under_crashes_and_recovery() {
 mod escalation {
     use nephele::actions::scaling::ScalingConfig;
     use nephele::actions::Action;
-    use nephele::graph::ids::{ChannelId, JobVertexId, VertexId, WorkerId};
+    use nephele::graph::ids::{ChannelId, JobId, JobVertexId, VertexId, WorkerId};
     use nephele::qos::manager::{ManagerConfig, QosManager};
     use nephele::qos::sample::{ElementKey, MetricKind, Report, ReportEntry};
     use nephele::qos::subgraph::{
@@ -378,6 +473,7 @@ mod escalation {
             },
         ];
         m.ingest(&Report {
+            job: JobId(0),
             from: WorkerId(0),
             to_manager: WorkerId(0),
             at,
