@@ -260,14 +260,52 @@ fn bench_multi_sim_rate(rec: &mut Recorder, quick: bool) {
         )
         .unwrap();
         cluster
-            .submit_job_at(throughput_submission(&spec).unwrap(), Duration::ZERO)
+            .submit_job(throughput_submission(&spec).unwrap(), Duration::ZERO)
             .unwrap();
         for i in 0..spec.latency_jobs {
             cluster
-                .submit_job_at(latency_submission(&spec, i).unwrap(), spec.latency_submit_at(i))
+                .submit_job(latency_submission(&spec, i).unwrap(), spec.latency_submit_at(i))
                 .unwrap();
         }
         cluster.run(Duration::from_secs(virt_secs), None).unwrap();
+        cluster.stats.events_processed
+    });
+    println!("    -> {} events, {:.2} M events/s wall", events, events as f64 / secs / 1e6);
+    rec.add(&name, 1, secs, Some(events as f64 / secs));
+}
+
+fn bench_admission_path(rec: &mut Recorder, quick: bool) {
+    // Admission-path events/second: a stream of bounded submissions
+    // churning through queue -> admit -> complete on a pool that holds
+    // only two at a time, so every scheduler tick re-runs admission and
+    // samples occupancy.  Tracks the scheduler-tick overhead the
+    // resource-governance layer adds.
+    use nephele::pipeline::multi::holder_submission;
+    use nephele::sched::PlacementPolicy;
+
+    let n_jobs: u64 = if quick { 6 } else { 12 };
+    let virt_secs = if quick { 120 } else { 220 };
+    let name = format!(
+        "sim: admission/queue churn ({n_jobs} staggered jobs, 4x4 pool), {virt_secs}s virtual"
+    );
+    let (events, secs) = bench_once(&name, || {
+        let mut cluster = SimCluster::new_multi(
+            4,
+            4,
+            PlacementPolicy::Spread,
+            EngineConfig::default().fully_optimized(),
+        )
+        .unwrap();
+        for i in 0..n_jobs {
+            cluster
+                .submit_job(
+                    holder_submission(&format!("churn-{i}"), Duration::from_secs(25)).unwrap(),
+                    Duration::from_secs(10 * i),
+                )
+                .unwrap();
+        }
+        cluster.run(Duration::from_secs(virt_secs), None).unwrap();
+        assert!(cluster.stats.jobs_queued > 0, "the churn must exercise the queue");
         cluster.stats.events_processed
     });
     println!("    -> {} events, {:.2} M events/s wall", events, events as f64 / secs / 1e6);
@@ -305,6 +343,7 @@ fn main() {
     bench_channel_hot_path(&mut rec, quick);
     bench_video_sim_rate(&mut rec, quick);
     bench_multi_sim_rate(&mut rec, quick);
+    bench_admission_path(&mut rec, quick);
     match rec.write_json(&out_path, "hot_paths", quick) {
         Ok(()) => println!("results written to {out_path}"),
         Err(e) => {

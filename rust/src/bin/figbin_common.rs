@@ -217,11 +217,14 @@ pub fn live_args(argv: &[String]) -> Result<nephele::live::LiveConfig> {
 }
 
 /// Parse `nephele sim-multi`'s arguments (`argv` holds only the flags):
-/// `--quick --seed N --policy spread|pack|least-loaded --tolerance F --quiet`.
-/// Returns `(spec, cfg, policies, tolerance, verbose)`.  Without
-/// `--policy`, both standard policies (spread, pack) are run and
-/// verified; `--policy` narrows the set to one (useful for exploring
-/// `least-loaded`).
+/// `--quick --seed N --policy spread|pack|least-loaded --tolerance F
+/// --phase base|admission|fairness|preempt|all --quiet`.
+/// Returns `(spec, cfg, policies, tolerance, verbose, phases)`.
+/// Without `--policy`, both standard policies (spread, pack) are run
+/// and verified; `--policy` narrows the set to one (useful for
+/// exploring `least-loaded`).  Without `--phase`, every phase runs —
+/// the base contention scenario plus the admission/fairness/preemption
+/// governance phases.
 pub fn multi_args(
     argv: &[String],
 ) -> Result<(
@@ -230,12 +233,14 @@ pub fn multi_args(
     Vec<PlacementPolicy>,
     f64,
     bool,
+    Vec<nephele::experiments::multi::Phase>,
 )> {
     let mut cfg = EngineConfig::default();
     let mut quick = false;
     let mut policies: Option<Vec<PlacementPolicy>> = None;
     let mut tolerance = 1.1;
     let mut verbose = true;
+    let mut phases: Option<Vec<nephele::experiments::multi::Phase>> = None;
     let mut i = 0;
     while i < argv.len() {
         let need = |i: usize| -> Result<&String> {
@@ -262,6 +267,16 @@ pub fn multi_args(
                 tolerance = need(i)?.parse()?;
                 i += 2;
             }
+            "--phase" => {
+                let value = need(i)?;
+                phases =
+                    Some(nephele::experiments::multi::Phase::parse(value).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown phase {value:?} (base|admission|fairness|preempt|all)"
+                        )
+                    })?);
+                i += 2;
+            }
             "--quiet" => {
                 verbose = false;
                 i += 1;
@@ -269,7 +284,7 @@ pub fn multi_args(
             "--help" | "-h" => {
                 println!(
                     "usage: [--quick] [--seed N] [--policy spread|pack|least-loaded] \
-                     [--tolerance F] [--quiet]"
+                     [--tolerance F] [--phase base|admission|fairness|preempt|all] [--quiet]"
                 );
                 std::process::exit(0);
             }
@@ -283,7 +298,9 @@ pub fn multi_args(
     };
     let policies =
         policies.unwrap_or_else(|| vec![PlacementPolicy::Spread, PlacementPolicy::Pack]);
-    Ok((spec, cfg, policies, tolerance, verbose))
+    let phases =
+        phases.unwrap_or_else(|| nephele::experiments::multi::Phase::ALL.to_vec());
+    Ok((spec, cfg, policies, tolerance, verbose, phases))
 }
 
 /// Parse the load-surge driver's arguments (`argv` holds only the
@@ -421,8 +438,17 @@ pub fn print_multi_summary(report: &nephele::experiments::multi::MultiReport) {
     );
     for o in &report.outcomes {
         println!("{}", nephele::experiments::multi::render_outcome(o));
+        println!("      slots {}", o.slots);
     }
     println!("  events: {}", report.events);
+}
+
+/// Shared output of the resource-governance phases (`sim-multi`).
+pub fn print_phase_summary(report: &nephele::experiments::multi::PhaseReport) {
+    println!("== sim-multi phase: {} ==", report.name);
+    for line in &report.lines {
+        println!("{line}");
+    }
 }
 
 /// Shared output of the paper-scale comparison driver.

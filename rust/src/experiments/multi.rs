@@ -1,22 +1,34 @@
 //! The multi-job scheduler scenario (`nephele sim-multi`): several
 //! staggered latency-constrained video pipelines plus one
 //! throughput-oriented Hadoop-Online-style job contend on a shared
-//! worker pool under a placement policy.
+//! worker pool under a placement policy — plus the resource-governance
+//! phases that exercise the typed admission/fairness/preemption API:
 //!
-//! The run passes only if, per job:
-//! * every **latency** job's tail-window mean ground-truth e2e latency
-//!   stays within `tolerance ×` its constraint;
-//! * the **throughput** job's tail sink rate reaches ≥ 80% of its
-//!   theoretical steady-state rate (the same yardstick as
-//!   `experiments/scale.rs`);
-//! * the per-job conservation invariant balances after the drain; and
-//! * (checked by the CLI driver) the same seed reproduces a
-//!   byte-identical [`MultiReport::fingerprint`] — per policy.
+//! * **base** ([`run_multi`]) — the contention workload; passes only if
+//!   every latency job's tail-window mean stays within `tolerance ×`
+//!   its constraint, the throughput job's tail sink rate reaches ≥ 80%
+//!   of theory, every per-job ledger balances, and all jobs complete;
+//! * **admission** ([`run_admission_phase`]) — an oversubscribing burst
+//!   must be *queued* (not rejected) and admitted once a bounded
+//!   running job completes, while an impossible submission is rejected
+//!   with the typed `exceeds-capacity` reason;
+//! * **fairness** ([`run_fairness_phase`]) — two violated jobs
+//!   contesting the free pool receive exactly weight-proportional
+//!   elastic slots (4:2 for weights 2:1 over 6 contested slots);
+//! * **preemption** ([`run_preemption_phase`]) — a latency-critical job
+//!   reclaims a slot from a best-effort job, meets its constraint
+//!   within tolerance, and the victim's ledger still balances.
+//!
+//! Every phase re-runs under the same seed in the CLI driver and must
+//! reproduce a byte-identical fingerprint.
 
 use crate::config::EngineConfig;
-use crate::graph::ids::JobId;
-use crate::pipeline::multi::{latency_submission, throughput_submission, MultiSpec};
-use crate::sched::{JobState, PlacementPolicy};
+use crate::graph::ids::{JobId, JobVertexId};
+use crate::pipeline::multi::{
+    contender_submission, highpri_submission, holder_submission, latency_submission,
+    oversized_submission, throughput_submission, victim_submission, MultiSpec,
+};
+use crate::sched::{AdmissionDecision, JobState, PlacementPolicy};
 use crate::sim::cluster::{SimCluster, SimStats};
 use crate::util::time::Duration;
 use anyhow::{bail, Context, Result};
@@ -40,6 +52,10 @@ pub struct JobOutcome {
     pub at_sinks: u64,
     pub lost: u64,
     pub conservation_ok: bool,
+    /// Rendered admission trail (e.g. "admit" or "queue → admit").
+    pub admission: String,
+    /// Rendered slot-occupancy timeline (scheduler-tick samples).
+    pub slots: String,
 }
 
 impl JobOutcome {
@@ -106,13 +122,15 @@ struct PlannedJob {
 }
 
 /// Byte-exact digest of a multi-job run: global counters, per-job
-/// ledgers (float bit patterns included) and the full action log.
+/// ledgers (float bit patterns included, slot-occupancy timelines
+/// folded into a digest) and the full action log.
 pub fn multi_fingerprint(stats: &SimStats) -> String {
     let mut out = format!(
         "ingested={} delivered={} sinks={} e2e_sum={:x} wire={} flushed={} \
          dropped={} unresolvable={} buffers={} chains={} ups={} downs={} rejected={} \
          rebuilds={} lost={} replayed={} crashed={} failovers={} reassigned={} \
-         detached={} submitted={} completed={} cancelled={} jrejected={} events={}\n",
+         detached={} submitted={} completed={} cancelled={} jrejected={} queued={} \
+         preempted={} deferred={} events={}\n",
         stats.items_ingested,
         stats.items_delivered,
         stats.e2e_count,
@@ -137,12 +155,19 @@ pub fn multi_fingerprint(stats: &SimStats) -> String {
         stats.jobs_completed,
         stats.jobs_cancelled,
         stats.jobs_rejected,
+        stats.jobs_queued,
+        stats.preemptions,
+        stats.elastic_deferred,
         stats.events_processed,
     );
     for (i, l) in stats.jobs.iter().enumerate() {
+        let slot_digest = l
+            .slot_samples
+            .iter()
+            .fold(0u64, |acc, &(t, s)| acc.rotate_left(7) ^ t ^ s as u64);
         out.push_str(&format!(
             "j{i}: in={} sinks={} sum={:x} max={:x} lost={} replayed={} absorbed={} \
-             produced={} unresolvable={}\n",
+             produced={} unresolvable={} preempted={} slots={}/{slot_digest:x}\n",
             l.items_ingested,
             l.at_sinks,
             l.e2e_sum_us.to_bits(),
@@ -152,11 +177,45 @@ pub fn multi_fingerprint(stats: &SimStats) -> String {
             l.absorbed,
             l.produced,
             l.unresolvable,
+            l.slots_preempted,
+            l.slot_samples.len(),
         ));
     }
     out.push_str("log:\n");
     out.push_str(&stats.action_log.join("\n"));
     out
+}
+
+/// Render a job's admission trail ("queue → admit", "reject[...]").
+pub fn render_admission(decisions: &[AdmissionDecision]) -> String {
+    if decisions.is_empty() {
+        return "pending".to_string();
+    }
+    decisions
+        .iter()
+        .map(|d| d.tag().to_string())
+        .collect::<Vec<_>>()
+        .join(" → ")
+}
+
+/// Render a slot-occupancy timeline, downsampled to at most 16 points.
+pub fn render_slot_timeline(samples: &[(u64, u32)]) -> String {
+    if samples.is_empty() {
+        return "no samples".to_string();
+    }
+    let peak = samples.iter().map(|&(_, s)| s).max().unwrap_or(0);
+    let step = samples.len().div_ceil(16);
+    let strip: Vec<String> = samples
+        .iter()
+        .step_by(step.max(1))
+        .map(|&(_, s)| s.to_string())
+        .collect();
+    format!(
+        "[{}] ({} samples over {:.0}s, peak {peak})",
+        strip.join(" "),
+        samples.len(),
+        (samples.last().unwrap().0 - samples[0].0) as f64 / 1e6,
+    )
 }
 
 /// Run the multi-job scenario under one placement policy.
@@ -177,7 +236,7 @@ pub fn run_multi(
     // The throughput job occupies the pool for the whole horizon.
     let tsub = throughput_submission(&spec)?;
     let tid = cluster
-        .submit_job_at(tsub, Duration::ZERO)
+        .submit_job(tsub, Duration::ZERO)
         .context("throughput submission")?;
     plan.push(PlannedJob {
         job: tid,
@@ -193,7 +252,7 @@ pub fn run_multi(
         let at = spec.latency_submit_at(i);
         let sub = latency_submission(&spec, i)?;
         let id = cluster
-            .submit_job_at(sub, at)
+            .submit_job(sub, at)
             .with_context(|| format!("latency submission {i}"))?;
         plan.push(PlannedJob {
             job: id,
@@ -255,6 +314,8 @@ pub fn run_multi(
             at_sinks: l.at_sinks,
             lost: l.accounted_lost,
             conservation_ok: cluster.job_conservation(p.job).is_ok(),
+            admission: render_admission(cluster.admission_log(p.job)),
+            slots: render_slot_timeline(&l.slot_samples),
         });
     }
     if verbose {
@@ -274,11 +335,12 @@ pub fn run_multi(
 /// One line per job for CLI output.
 pub fn render_outcome(o: &JobOutcome) -> String {
     format!(
-        "  {} {:<14} {:<9} | tail {} | rate {:.1}/s (expect {:.1}) | \
+        "  {} {:<14} {:<9} | {} | tail {} | rate {:.1}/s (expect {:.1}) | \
          {} of {} at sinks, lost {} | {}",
         o.job,
         o.name,
         o.state.map_or("?".to_string(), |s| format!("{s:?}").to_lowercase()),
+        o.admission,
         o.tail_mean_ms
             .map_or("n/a".to_string(), |m| format!("{m:.1} ms")),
         o.tail_rate,
@@ -288,6 +350,368 @@ pub fn render_outcome(o: &JobOutcome) -> String {
         o.lost,
         if o.conservation_ok { "conserved" } else { "CONSERVATION BROKEN" },
     )
+}
+
+// ---------------------------------------------------------------------
+// Resource-governance phases (admission / fairness / preemption)
+// ---------------------------------------------------------------------
+
+/// Which `sim-multi` phases to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Base,
+    Admission,
+    Fairness,
+    Preempt,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 4] = [Phase::Base, Phase::Admission, Phase::Fairness, Phase::Preempt];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Base => "base",
+            Phase::Admission => "admission",
+            Phase::Fairness => "fairness",
+            Phase::Preempt => "preempt",
+        }
+    }
+
+    /// Parse a `--phase` flag value into the phase set it selects.
+    pub fn parse(s: &str) -> Option<Vec<Phase>> {
+        match s {
+            "base" => Some(vec![Phase::Base]),
+            "admission" => Some(vec![Phase::Admission]),
+            "fairness" => Some(vec![Phase::Fairness]),
+            "preempt" | "preemption" => Some(vec![Phase::Preempt]),
+            "all" => Some(Phase::ALL.to_vec()),
+            _ => None,
+        }
+    }
+}
+
+/// Outcome of one resource-governance phase: the gates already held
+/// (the runner bails otherwise), the fingerprint pins determinism, and
+/// the lines summarise what happened for the CLI.
+#[derive(Debug, Clone)]
+pub struct PhaseReport {
+    pub name: &'static str,
+    pub fingerprint: String,
+    pub lines: Vec<String>,
+}
+
+/// The union-graph Transcoder group of a submitted job (the elastic
+/// stage of every phase workload).
+fn transcoder_of(cluster: &SimCluster, job: JobId) -> Result<JobVertexId> {
+    cluster
+        .job
+        .vertex_of_job(job, "Transcoder")
+        .map(|v| v.id)
+        .with_context(|| format!("{job} has no Transcoder group in the union graph"))
+}
+
+/// One rendered lifecycle line per job, for phase summaries.
+fn lifecycle_line(cluster: &SimCluster, job: JobId) -> String {
+    let e = cluster.scheduler().entry(job).expect("registered job");
+    let l = cluster.job_ledger(job);
+    format!(
+        "  {} {:<16} {:<9} | {} | {} of {} at sinks, lost {} | slots {}",
+        job,
+        e.name,
+        format!("{:?}", e.state).to_lowercase(),
+        render_admission(&e.decisions),
+        l.at_sinks,
+        l.items_ingested,
+        l.accounted_lost,
+        render_slot_timeline(&l.slot_samples),
+    )
+}
+
+/// **Admission phase.**  Two bounded holder jobs fill 12 of 16 slots; a
+/// 6-slot burst submission oversubscribes the pool and must be *queued*
+/// (a bounded holder releases its capacity at a predicted time), then
+/// admitted when the first holder completes, and run to completion.  An
+/// 18-slot submission exceeds the whole cluster and must be rejected
+/// with the typed `exceeds-capacity` reason.  Slot math only — the
+/// gates hold under every placement policy.
+pub fn run_admission_phase(cfg: EngineConfig, policy: PlacementPolicy) -> Result<PhaseReport> {
+    let mut cluster = SimCluster::new_multi(4, 4, policy, cfg.fully_optimized())?;
+    let a = cluster
+        .submit_job(holder_submission("holder-a", Duration::from_secs(60))?, Duration::ZERO)
+        .context("holder-a")?;
+    let b = cluster
+        .submit_job(holder_submission("holder-b", Duration::from_secs(150))?, Duration::ZERO)
+        .context("holder-b")?;
+    let burst = cluster
+        .submit_job(
+            holder_submission("burst", Duration::from_secs(60))?,
+            Duration::from_secs(10),
+        )
+        .context("burst")?;
+    let giant = cluster
+        .submit_job(oversized_submission("giant")?, Duration::from_secs(12))
+        .context("giant")?;
+
+    cluster.run(Duration::from_secs(20), None)?;
+    if cluster.job_state(burst) != Some(JobState::Queued) {
+        bail!(
+            "admission phase: oversubscribing burst was not queued: state {:?}, trail {}",
+            cluster.job_state(burst),
+            render_admission(cluster.admission_log(burst)),
+        );
+    }
+    match cluster.admission_log(burst) {
+        [AdmissionDecision::Queue { predicted_wait }] => {
+            let wait = predicted_wait.as_secs_f64();
+            if !(30.0..=120.0).contains(&wait) {
+                bail!("admission phase: implausible predicted wait {wait:.0}s for the burst");
+            }
+        }
+        other => bail!("admission phase: burst trail should be a single Queue, got {other:?}"),
+    }
+    if cluster.job_state(giant) != Some(JobState::Rejected) {
+        bail!("admission phase: 18-slot job on a 16-slot cluster not rejected");
+    }
+    let reason = cluster
+        .scheduler()
+        .entry(giant)
+        .and_then(|e| e.reject_reason().map(|r| r.tag()));
+    if reason != Some("exceeds-capacity") {
+        bail!("admission phase: giant rejected with {reason:?}, expected exceeds-capacity");
+    }
+
+    // holder-a completes (~66 s); the capacity release re-admits the
+    // burst, which then runs its own 60 s and drains.
+    cluster.run(Duration::from_secs(240), None)?;
+    let t = cluster.now();
+    cluster.stop_sources_at(t);
+    cluster.run(Duration::from_secs(400), None)?;
+
+    for (job, label) in [(a, "holder-a"), (b, "holder-b"), (burst, "burst")] {
+        if cluster.job_state(job) != Some(JobState::Completed) {
+            bail!(
+                "admission phase: {label} did not complete: {:?} ({})",
+                cluster.job_state(job),
+                render_admission(cluster.admission_log(job)),
+            );
+        }
+        cluster
+            .job_conservation(job)
+            .with_context(|| format!("admission phase: {label} ledger"))?;
+    }
+    let burst_trail = render_admission(cluster.admission_log(burst));
+    if burst_trail != "queue → admit" {
+        bail!("admission phase: burst trail is {burst_trail:?}, expected \"queue → admit\"");
+    }
+    if cluster.stats.jobs_queued != 1 {
+        bail!(
+            "admission phase: expected exactly one queued job, saw {}",
+            cluster.stats.jobs_queued
+        );
+    }
+    let lines = [a, b, burst, giant]
+        .iter()
+        .map(|&j| lifecycle_line(&cluster, j))
+        .collect();
+    Ok(PhaseReport {
+        name: "admission",
+        fingerprint: multi_fingerprint(&cluster.stats),
+        lines,
+    })
+}
+
+/// **Fairness phase.**  Two contenders (weights 2 : 1) hold 12 of 18
+/// slots and then contest the 6 free slots with interleaved elastic
+/// scale-up requests.  The weighted deficit rule must split the
+/// contested pool exactly 4 : 2 — and must actually defer the heavy
+/// job at least once along the way (no FCFS starvation of the light
+/// job).
+pub fn run_fairness_phase(cfg: EngineConfig) -> Result<PhaseReport> {
+    let mut cluster =
+        SimCluster::new_multi(3, 6, PlacementPolicy::Spread, cfg.fully_optimized())?;
+    let heavy = cluster
+        .submit_job(
+            contender_submission("heavy", 2, Duration::from_secs(120))?,
+            Duration::ZERO,
+        )
+        .context("heavy contender")?;
+    let light = cluster
+        .submit_job(
+            contender_submission("light", 1, Duration::from_secs(120))?,
+            Duration::ZERO,
+        )
+        .context("light contender")?;
+    cluster.run(Duration::from_secs(30), None)?;
+    let g_heavy = transcoder_of(&cluster, heavy)?;
+    let g_light = transcoder_of(&cluster, light)?;
+
+    // Interleaved scale-up requests, 1 s apart (fresh measurement-state
+    // stamps keep the master's first-wins arbitration out of the way).
+    let mut granted = (0u32, 0u32);
+    let mut clock = Duration::from_secs(30);
+    for _round in 0..8 {
+        let t = cluster.now();
+        if cluster.apply_scaling(t, g_heavy, 1, t) {
+            granted.0 += 1;
+        }
+        clock = clock + Duration::from_secs(1);
+        cluster.run(clock, None)?;
+        let t = cluster.now();
+        if cluster.apply_scaling(t, g_light, 1, t) {
+            granted.1 += 1;
+        }
+        clock = clock + Duration::from_secs(1);
+        cluster.run(clock, None)?;
+    }
+    if granted != (4, 2) {
+        bail!(
+            "fairness phase: weights 2:1 over 6 contested slots must grant 4:2, got {}:{}",
+            granted.0,
+            granted.1
+        );
+    }
+    if cluster.elastic_granted(heavy) != 4 || cluster.elastic_granted(light) != 2 {
+        bail!(
+            "fairness phase: arbiter ledger disagrees: heavy {} light {}",
+            cluster.elastic_granted(heavy),
+            cluster.elastic_granted(light)
+        );
+    }
+    if cluster.stats.elastic_deferred == 0 {
+        bail!(
+            "fairness phase: the heavy job was never deferred — FCFS would starve the light job"
+        );
+    }
+    cluster.routing_consistent()?;
+
+    // Both contenders finish their bounded runs and drain cleanly with
+    // the scaled topology.
+    cluster.run(Duration::from_secs(200), None)?;
+    let t = cluster.now();
+    cluster.stop_sources_at(t);
+    cluster.run(Duration::from_secs(420), None)?;
+    for (job, label) in [(heavy, "heavy"), (light, "light")] {
+        if cluster.job_state(job) != Some(JobState::Completed) {
+            bail!("fairness phase: {label} did not complete: {:?}", cluster.job_state(job));
+        }
+        cluster
+            .job_conservation(job)
+            .with_context(|| format!("fairness phase: {label} ledger"))?;
+    }
+    let lines = vec![
+        format!(
+            "  contested 6 free slots at weights 2:1 -> granted {}:{} ({} deferrals)",
+            granted.0, granted.1, cluster.stats.elastic_deferred
+        ),
+        lifecycle_line(&cluster, heavy),
+        lifecycle_line(&cluster, light),
+    ];
+    Ok(PhaseReport {
+        name: "fairness",
+        fingerprint: multi_fingerprint(&cluster.stats),
+        lines,
+    })
+}
+
+/// **Preemption phase.**  A best-effort job (6 slots) and a
+/// latency-critical priority-2 job (4 slots, its single Transcoder
+/// overloaded by design) fill the 10-slot pool exactly.  The latency
+/// job's scale-up finds the pool exhausted and must *preempt*: the
+/// master reclaims one slot from the best-effort victim through the
+/// ordinary scale-down path.  Gates: the preemption happened, the
+/// victim scaled down and its ledger still balances, and the latency
+/// job meets its constraint within `tolerance` over the converged tail.
+pub fn run_preemption_phase(cfg: EngineConfig, tolerance: f64) -> Result<PhaseReport> {
+    let mut cluster =
+        SimCluster::new_multi(2, 5, PlacementPolicy::Spread, cfg.fully_optimized())?;
+    let victim = cluster
+        .submit_job(victim_submission(Duration::from_secs(150))?, Duration::ZERO)
+        .context("victim")?;
+    let latency = cluster
+        .submit_job(highpri_submission(Duration::from_secs(240))?, Duration::ZERO)
+        .context("latency-critical")?;
+    cluster.run(Duration::from_secs(30), None)?;
+    let dead = vec![false; 2];
+    if cluster.scheduler().free_slots(&dead) != 0 {
+        bail!(
+            "preemption phase: pool must be exactly full, {} slots free",
+            cluster.scheduler().free_slots(&dead)
+        );
+    }
+    let g_latency = transcoder_of(&cluster, latency)?;
+    let g_victim = transcoder_of(&cluster, victim)?;
+    let t = cluster.now();
+    if !cluster.apply_scaling(t, g_latency, 1, t) {
+        bail!("preemption phase: the priority-2 scale-up failed on the full pool");
+    }
+    if cluster.stats.preemptions != 1 {
+        bail!("preemption phase: expected one preemption, saw {}", cluster.stats.preemptions);
+    }
+    if cluster.parallelism_of(g_victim) != 1 {
+        bail!(
+            "preemption phase: victim Transcoder at {} instances, expected 1",
+            cluster.parallelism_of(g_victim)
+        );
+    }
+    if cluster.parallelism_of(g_latency) != 2 {
+        bail!(
+            "preemption phase: latency Transcoder at {} instances, expected 2",
+            cluster.parallelism_of(g_latency)
+        );
+    }
+    if cluster.job_ledger(victim).slots_preempted != 1 {
+        bail!("preemption phase: victim ledger does not show the preempted slot");
+    }
+    cluster.routing_consistent()?;
+
+    // Converged tail: measure the latency job from 150 s (overload
+    // backlog drained by ~40 s, buffers adapted over the following
+    // measurement windows) to its 240 s source end.
+    cluster.run(Duration::from_secs(150), None)?;
+    let base = {
+        let l = cluster.job_ledger(latency);
+        (l.at_sinks, l.e2e_sum_us)
+    };
+    cluster.run(Duration::from_secs(270), None)?;
+    let t = cluster.now();
+    cluster.stop_sources_at(t);
+    cluster.run(Duration::from_secs(630), None)?;
+
+    let l = cluster.job_ledger(latency).clone();
+    let tail = l.at_sinks.saturating_sub(base.0);
+    if tail == 0 {
+        bail!("preemption phase: no tail-window sink arrivals for the latency job");
+    }
+    let tail_mean_ms = (l.e2e_sum_us - base.1) / tail as f64 / 1e3;
+    let limit_ms = 300.0;
+    if tail_mean_ms > tolerance * limit_ms {
+        bail!(
+            "preemption phase: latency job missed its constraint after preemption: \
+             tail {tail_mean_ms:.1} ms vs {limit_ms} ms × {tolerance}"
+        );
+    }
+    for (job, label) in [(victim, "victim"), (latency, "latency-critical")] {
+        if cluster.job_state(job) != Some(JobState::Completed) {
+            bail!("preemption phase: {label} did not complete: {:?}", cluster.job_state(job));
+        }
+        cluster
+            .job_conservation(job)
+            .with_context(|| format!("preemption phase: {label} ledger"))?;
+    }
+    let lines = vec![
+        format!(
+            "  preemptions {} | victim Transcoder 2 -> 1 | latency tail {:.1} ms \
+             (limit {} ms × {})",
+            cluster.stats.preemptions, tail_mean_ms, limit_ms, tolerance
+        ),
+        lifecycle_line(&cluster, victim),
+        lifecycle_line(&cluster, latency),
+    ];
+    Ok(PhaseReport {
+        name: "preempt",
+        fingerprint: multi_fingerprint(&cluster.stats),
+        lines,
+    })
 }
 
 /// Gate one report; returns a human-readable failure, if any.

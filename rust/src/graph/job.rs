@@ -239,6 +239,26 @@ impl JobGraph {
         self.vertices.iter().filter(move |v| v.job == job)
     }
 
+    /// A job's vertex by name (union-graph view; scenario drivers use
+    /// this to locate a submitted job's task groups after absorption).
+    pub fn vertex_of_job(&self, job: JobId, name: &str) -> Option<&JobVertex> {
+        self.vertices_of_job(job).find(|v| v.name == name)
+    }
+
+    /// Total task-slot demand: one slot per runtime instance.
+    pub fn slot_demand(&self) -> u32 {
+        self.vertices.iter().map(|v| v.parallelism).sum()
+    }
+
+    /// Estimated CPU demand in cores: Σ parallelism × `cpu_utilization`
+    /// (the §3.5.2 profiling input, consumed by predictive admission).
+    pub fn cpu_demand(&self) -> f64 {
+        self.vertices
+            .iter()
+            .map(|v| v.parallelism as f64 * v.cpu_utilization)
+            .sum()
+    }
+
     /// Topological order of job vertices.
     pub fn topo_order(&self) -> Vec<JobVertexId> {
         let n = self.vertices.len();

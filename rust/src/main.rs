@@ -11,7 +11,8 @@
 //! nephele sim-scale  [--quick] [--secs N] [--tail N] [--seed N]
 //!                    [--min-ratio F] [--quiet]
 //! nephele sim-multi  [--quick] [--seed N] [--policy spread|pack|least-loaded]
-//!                    [--tolerance F] [--quiet]
+//!                    [--tolerance F] [--phase base|admission|fairness|preempt|all]
+//!                    [--quiet]
 //! nephele live       [--frames N] [--fps F] [--artifacts DIR]
 //! nephele info
 //! ```
@@ -27,7 +28,13 @@
 //! policy, and exits non-zero unless every latency job holds its
 //! constraint, the throughput job keeps its sink rate, every per-job
 //! conservation ledger balances, and the same seed replays
-//! byte-identically.
+//! byte-identically.  It then runs the resource-governance phases:
+//! **admission** (an oversubscribing burst is queued, not rejected, and
+//! admitted when a bounded job completes; an impossible job is rejected
+//! `exceeds-capacity`), **fairness** (two violated jobs split contested
+//! elastic slots weight-proportionally) and **preemption** (a
+//! latency-critical job reclaims a best-effort slot and meets its
+//! constraint while the victim's ledger stays balanced).
 //!
 //! All flag parsing lives in `bin/figbin_common.rs` (shared with the
 //! figure binaries), so flags, usage strings and the `info` subcommand
@@ -40,7 +47,10 @@ mod figbin;
 use anyhow::{bail, Result};
 use nephele::experiments::failover::run_failover;
 use nephele::experiments::load_surge::run_load_surge;
-use nephele::experiments::multi::{run_multi, verify_report};
+use nephele::experiments::multi::{
+    run_admission_phase, run_fairness_phase, run_multi, run_preemption_phase, verify_report,
+    Phase,
+};
 use nephele::experiments::scale::run_scale;
 use nephele::experiments::video_scenarios::run_video_scenario;
 use nephele::live::run_live;
@@ -118,27 +128,88 @@ fn sim_scale(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Run the multi-job scenario twice per policy: once for the report,
-/// once to pin same-seed byte-identical replay, gating every per-job
-/// check each time.
+/// Run the selected multi-job phases, each twice: once for the report,
+/// once to pin same-seed byte-identical replay, gating every check
+/// each time.  The base contention scenario and the admission phase
+/// run per placement policy; the fairness and preemption phases are
+/// policy-independent and run once.
 fn sim_multi(argv: &[String]) -> Result<()> {
-    let (spec, cfg, policies, tolerance, verbose) = figbin::multi_args(argv)?;
-    for policy in policies {
-        let report = run_multi(spec, cfg, policy, false)?;
-        if verbose {
-            figbin::print_multi_summary(&report);
+    let (spec, cfg, policies, tolerance, verbose, phases) = figbin::multi_args(argv)?;
+    for phase in phases {
+        match phase {
+            Phase::Base => {
+                for &policy in &policies {
+                    let report = run_multi(spec, cfg, policy, false)?;
+                    if verbose {
+                        figbin::print_multi_summary(&report);
+                    }
+                    verify_report(&report, tolerance)?;
+                    let replay = run_multi(spec, cfg, policy, false)?;
+                    verify_report(&replay, tolerance)?;
+                    if report.fingerprint != replay.fingerprint {
+                        bail!(
+                            "policy {policy}: same-seed replay diverged (nondeterministic \
+                             scheduler path)"
+                        );
+                    }
+                    println!(
+                        "policy {policy}: {} jobs ok (latency within {tolerance}x, throughput \
+                         preserved, per-job conservation holds, fingerprints byte-identical)",
+                        report.outcomes.len()
+                    );
+                }
+            }
+            Phase::Admission => {
+                for &policy in &policies {
+                    let report = run_admission_phase(cfg, policy)
+                        .map_err(|e| anyhow::anyhow!("admission phase ({policy}): {e:#}"))?;
+                    let replay = run_admission_phase(cfg, policy)
+                        .map_err(|e| anyhow::anyhow!("admission phase ({policy}): {e:#}"))?;
+                    if report.fingerprint != replay.fingerprint {
+                        bail!("admission phase ({policy}): same-seed replay diverged");
+                    }
+                    if verbose {
+                        figbin::print_phase_summary(&report);
+                    }
+                    println!(
+                        "admission phase ({policy}): burst queued then admitted, oversized \
+                         rejected[exceeds-capacity], fingerprints byte-identical"
+                    );
+                }
+            }
+            Phase::Fairness => {
+                let report = run_fairness_phase(cfg)
+                    .map_err(|e| anyhow::anyhow!("fairness phase: {e:#}"))?;
+                let replay = run_fairness_phase(cfg)
+                    .map_err(|e| anyhow::anyhow!("fairness phase: {e:#}"))?;
+                if report.fingerprint != replay.fingerprint {
+                    bail!("fairness phase: same-seed replay diverged");
+                }
+                if verbose {
+                    figbin::print_phase_summary(&report);
+                }
+                println!(
+                    "fairness phase: contested elastic slots split weight-proportionally (4:2), \
+                     fingerprints byte-identical"
+                );
+            }
+            Phase::Preempt => {
+                let report = run_preemption_phase(cfg, tolerance)
+                    .map_err(|e| anyhow::anyhow!("preemption phase: {e:#}"))?;
+                let replay = run_preemption_phase(cfg, tolerance)
+                    .map_err(|e| anyhow::anyhow!("preemption phase: {e:#}"))?;
+                if report.fingerprint != replay.fingerprint {
+                    bail!("preemption phase: same-seed replay diverged");
+                }
+                if verbose {
+                    figbin::print_phase_summary(&report);
+                }
+                println!(
+                    "preemption phase: latency-critical job reclaimed a best-effort slot and met \
+                     its constraint, victim ledger balanced, fingerprints byte-identical"
+                );
+            }
         }
-        verify_report(&report, tolerance)?;
-        let replay = run_multi(spec, cfg, policy, false)?;
-        verify_report(&replay, tolerance)?;
-        if report.fingerprint != replay.fingerprint {
-            bail!("policy {policy}: same-seed replay diverged (nondeterministic scheduler path)");
-        }
-        println!(
-            "policy {policy}: {} jobs ok (latency within {tolerance}x, throughput preserved, \
-             per-job conservation holds, fingerprints byte-identical)",
-            report.outcomes.len()
-        );
     }
     Ok(())
 }

@@ -16,9 +16,10 @@
 //! divisibility rules of both pipeline builders.
 
 use crate::baseline::hadoop::{hadoop_online_job, HadoopSpec};
+use crate::pipeline::surge::{surge_job, SurgeSpec};
 use crate::pipeline::video::{video_job, VideoSpec};
 use crate::qos::manager::ManagerConfig;
-use crate::sched::JobSubmission;
+use crate::sched::JobSpec;
 use crate::util::time::Duration;
 use anyhow::Result;
 
@@ -149,11 +150,22 @@ impl MultiSpec {
     }
 }
 
-/// Build the submission for latency job `idx`: the §4.1.1 video
-/// pipeline under the paper's constraint, sized per the spec.  The
+/// Monitoring-only countermeasure arming (the HOP/best-effort posture:
+/// constraints are observed, never acted on).
+pub fn monitoring_only() -> ManagerConfig {
+    ManagerConfig {
+        enable_buffer_sizing: false,
+        enable_chaining: false,
+        enable_scaling: false,
+        ..ManagerConfig::default()
+    }
+}
+
+/// Build the spec for latency job `idx`: the §4.1.1 video pipeline
+/// under the paper's constraint, sized per the scenario spec.  The
 /// runtime expansion the builder performs is discarded — placement is
-/// the scheduler's job at submit time.
-pub fn latency_submission(spec: &MultiSpec, idx: u32) -> Result<JobSubmission> {
+/// the scheduler's job at admission time.
+pub fn latency_submission(spec: &MultiSpec, idx: u32) -> Result<JobSpec> {
     let vspec = VideoSpec {
         parallelism: spec.latency_parallelism,
         workers: spec.workers,
@@ -165,22 +177,19 @@ pub fn latency_submission(spec: &MultiSpec, idx: u32) -> Result<JobSubmission> {
         ..VideoSpec::default()
     };
     let vj = video_job(vspec)?;
-    Ok(JobSubmission {
-        name: format!("video-{idx}"),
-        job: vj.job,
-        constraints: vj.constraints,
-        task_specs: vj.task_specs,
-        sources: vj.sources,
-        run_for: Some(Duration::from_secs(spec.latency_job_secs)),
-        manager: None, // engine default: the cluster arms full QoS
-    })
+    // Engine-default manager: the cluster arms full QoS.
+    Ok(
+        JobSpec::new(format!("video-{idx}"), vj.job, vj.constraints, vj.task_specs, vj.sources)
+            .run_for(Duration::from_secs(spec.latency_job_secs)),
+    )
 }
 
 /// Build the throughput job: the §4.1.2 Hadoop-Online expression of the
 /// video workload, running *unoptimised* (static 32 KB buffers, no
 /// chaining — HOP has no QoS management) under a monitoring-only
-/// constraint.  Its yardstick is sink rate, not latency.
-pub fn throughput_submission(spec: &MultiSpec) -> Result<JobSubmission> {
+/// constraint.  Its yardstick is sink rate, not latency; as a
+/// best-effort job it is also the preemption victim class.
+pub fn throughput_submission(spec: &MultiSpec) -> Result<JobSpec> {
     let hspec = HadoopSpec {
         parallelism: spec.throughput_parallelism,
         workers: spec.workers,
@@ -190,20 +199,81 @@ pub fn throughput_submission(spec: &MultiSpec) -> Result<JobSubmission> {
         ..HadoopSpec::default()
     };
     let hj = hadoop_online_job(hspec)?;
-    Ok(JobSubmission {
-        name: "hadoop-batch".to_string(),
-        job: hj.job,
-        constraints: hj.constraints,
-        task_specs: hj.task_specs,
-        sources: hj.sources,
-        run_for: Some(Duration::from_secs(spec.throughput_secs)),
-        manager: Some(ManagerConfig {
-            enable_buffer_sizing: false,
-            enable_chaining: false,
-            enable_scaling: false,
-            ..ManagerConfig::default()
-        }),
-    })
+    Ok(
+        JobSpec::new("hadoop-batch", hj.job, hj.constraints, hj.task_specs, hj.sources)
+            .run_for(Duration::from_secs(spec.throughput_secs))
+            .with_manager(monitoring_only())
+            .best_effort(),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Phase workloads (admission / fairness / preemption scenario phases)
+// ---------------------------------------------------------------------
+
+/// A small deterministic 3-stage pipeline (the surge shape without its
+/// surge wave): 2/2/2 parallelism = 6 slots, base load at ~60% of the
+/// two Transcoders.  The workhorse of the lifecycle phases.
+pub fn holder_submission(name: &str, run_for: Duration) -> Result<JobSpec> {
+    let mut s = SurgeSpec::default();
+    s.surge_streams = 0;
+    let sj = surge_job(s)?;
+    Ok(
+        JobSpec::new(name, sj.job, sj.constraints, sj.task_specs, sj.sources)
+            .run_for(run_for),
+    )
+}
+
+/// A submission whose 6/6/6 = 18-slot demand exceeds the admission
+/// phase's whole 16-slot cluster: must be rejected `exceeds-capacity`.
+pub fn oversized_submission(name: &str) -> Result<JobSpec> {
+    let mut s = SurgeSpec::default();
+    s.surge_streams = 0;
+    s.base_streams = 6;
+    s.ingest_parallelism = 6;
+    s.transcoder_parallelism = 6;
+    s.sink_parallelism = 6;
+    let sj = surge_job(s)?;
+    Ok(JobSpec::new(name, sj.job, sj.constraints, sj.task_specs, sj.sources))
+}
+
+/// A fairness-phase contender: the holder pipeline with an explicit
+/// fair-share weight, competing for elastic slots.
+pub fn contender_submission(name: &str, weight: u32, run_for: Duration) -> Result<JobSpec> {
+    Ok(holder_submission(name, run_for)?.with_weight(weight))
+}
+
+/// The preemption victim: a best-effort (priority 0) holder pipeline at
+/// reduced rate, monitoring-only QoS.  After losing one of its two
+/// Transcoders it still keeps up (4 × 25 fps × 6 ms = 0.6 cores).
+pub fn victim_submission(run_for: Duration) -> Result<JobSpec> {
+    let mut s = SurgeSpec::default();
+    s.surge_streams = 0;
+    s.fps = 25.0;
+    let sj = surge_job(s)?;
+    Ok(
+        JobSpec::new("best-effort", sj.job, sj.constraints, sj.task_specs, sj.sources)
+            .run_for(run_for)
+            .with_manager(monitoring_only())
+            .best_effort(),
+    )
+}
+
+/// The preempting latency-critical job: priority 2, a single Transcoder
+/// that full base load (4 × 50 fps × 6 ms = 1.2 cores) overloads — only
+/// one more Transcoder instance meets the constraint, and on a full
+/// pool that slot must come out of the best-effort victim.
+pub fn highpri_submission(run_for: Duration) -> Result<JobSpec> {
+    let mut s = SurgeSpec::default();
+    s.surge_streams = 0;
+    s.transcoder_parallelism = 1;
+    s.sink_parallelism = 1;
+    let sj = surge_job(s)?;
+    Ok(
+        JobSpec::new("latency-critical", sj.job, sj.constraints, sj.task_specs, sj.sources)
+            .run_for(run_for)
+            .with_priority(2),
+    )
 }
 
 #[cfg(test)]
@@ -231,6 +301,7 @@ mod tests {
 
     #[test]
     fn submissions_build_and_are_consistent() {
+        use crate::sched::QosClass;
         let spec = MultiSpec::tiny();
         for i in 0..spec.latency_jobs {
             let sub = latency_submission(&spec, i).unwrap();
@@ -239,13 +310,39 @@ mod tests {
             assert_eq!(sub.sources.len(), spec.latency_streams as usize);
             assert_eq!(sub.constraints.len(), 1);
             assert!(sub.manager.is_none());
-            let demand: u32 = sub.job.vertices.iter().map(|v| v.parallelism).sum();
-            assert_eq!(demand, 6 * spec.latency_parallelism);
+            assert_eq!(sub.class, QosClass::LatencyConstrained);
+            assert_eq!((sub.priority, sub.weight), (1, 1));
+            assert_eq!(sub.job.slot_demand(), 6 * spec.latency_parallelism);
         }
         let t = throughput_submission(&spec).unwrap();
         assert_eq!(t.job.vertices.len(), 5);
+        assert_eq!(t.class, QosClass::BestEffort);
+        assert_eq!(t.priority, 0);
         let mgr = t.manager.unwrap();
         assert!(!mgr.enable_buffer_sizing && !mgr.enable_chaining && !mgr.enable_scaling);
+    }
+
+    #[test]
+    fn phase_workloads_carry_their_governance_intent() {
+        use crate::sched::QosClass;
+        let h = holder_submission("h", Duration::from_secs(60)).unwrap();
+        assert_eq!(h.job.slot_demand(), 6);
+        assert_eq!(h.run_for, Some(Duration::from_secs(60)));
+        let o = oversized_submission("o").unwrap();
+        assert_eq!(o.job.slot_demand(), 18);
+        let c = contender_submission("c", 2, Duration::from_secs(60)).unwrap();
+        assert_eq!((c.weight, c.job.slot_demand()), (2, 6));
+        let v = victim_submission(Duration::from_secs(60)).unwrap();
+        assert_eq!(v.class, QosClass::BestEffort);
+        assert_eq!(v.job.slot_demand(), 6);
+        // The victim keeps up on one Transcoder after preemption...
+        assert!(v.job.vertex_by_name("Transcoder").unwrap().cpu_utilization * 2.0 <= 0.9);
+        let p = highpri_submission(Duration::from_secs(60)).unwrap();
+        assert_eq!((p.class, p.priority), (QosClass::LatencyConstrained, 2));
+        assert_eq!(p.job.slot_demand(), 4);
+        // ...while the high-priority job overloads its single one (the
+        // profile is clamped at 1.0 core) and needs the preempted slot.
+        assert_eq!(p.job.vertex_by_name("Transcoder").unwrap().cpu_utilization, 1.0);
     }
 
     #[test]

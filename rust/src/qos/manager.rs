@@ -7,8 +7,12 @@
 //! sequence in O(channels), using only elements with fresh measurement
 //! data.  Countermeasures escalate per §3.5: first adaptive output
 //! buffer sizing on the violated sequence's channels, then dynamic task
-//! chaining; if neither applies and the constraint is still violated the
-//! manager reports the failed optimisation to the master.
+//! chaining, then (when armed) elastic scaling — whose slot requests
+//! the master arbitrates by weighted fair share and, for a
+//! higher-priority job on an exhausted pool, satisfies by preempting a
+//! best-effort job ([`ManagerConfig::enable_preemption`]); if nothing
+//! applies and the constraint is still violated the manager reports the
+//! failed optimisation to the master.
 
 use super::sample::{ElementKey, MetricKind, Report};
 use super::subgraph::{Layer, QosSubgraph, VertexRef};
@@ -36,6 +40,14 @@ pub struct ManagerConfig {
     /// default so the three paper scenarios of §4.3 are reproduced
     /// unchanged).
     pub enable_scaling: bool,
+    /// Preemption escalation (tier 3½, master-enacted): when this job's
+    /// scale-up finds the free pool exhausted, the master may reclaim a
+    /// slot from a strictly lower-priority *best-effort* job — through
+    /// the ordinary scale-down path — before the request fails and the
+    /// manager escalates to `Unresolvable`.  On by default: a cluster
+    /// without lower-priority best-effort jobs has no victims, so the
+    /// tier is a no-op for the paper's single-job scenarios.
+    pub enable_preemption: bool,
 }
 
 impl Default for ManagerConfig {
@@ -47,6 +59,7 @@ impl Default for ManagerConfig {
             enable_buffer_sizing: true,
             enable_chaining: true,
             enable_scaling: false,
+            enable_preemption: true,
         }
     }
 }

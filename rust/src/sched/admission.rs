@@ -1,0 +1,438 @@
+//! Predictive admission control (ROADMAP "admission control" item).
+//!
+//! The slot ledger answers "do slots exist right now?"; this module
+//! answers the question the paper's §2 premise actually poses for a
+//! shared framework: *will this job be able to uphold its QoS promises
+//! without breaking anyone else's?*  A submission is checked against the
+//! pool's **residual** capacity along three axes — task slots, CPU cores
+//! (from the job graph's `cpu_utilization` profiles, the same profiling
+//! input §3.5.2 feeds the chaining precondition) and NIC bandwidth
+//! (estimated from the declared external sources) — and the verdict is a
+//! typed [`AdmissionDecision`]:
+//!
+//! * [`AdmissionDecision::Admit`] — the job fits the residual pool now;
+//! * [`AdmissionDecision::Queue`] — it does not fit now, but a running
+//!   job with a bounded lifetime (`run_for`) will release enough
+//!   capacity at a predictable time, so the submission waits instead of
+//!   bouncing (Röger & Mayer's elasticity survey names exactly this
+//!   admission/arbitration layer as the gap between submission and
+//!   enactment);
+//! * [`AdmissionDecision::Reject`] — it can never run: either the
+//!   demand exceeds the whole live cluster, or every slot it needs is
+//!   promised to jobs that never end.
+//!
+//! Rejections carry a typed [`RejectReason`] whose [`RejectReason::tag`]
+//! is a stable string, so scenario scripts can assert on *why* a
+//! submission did not run.
+
+use crate::config::ClusterConfig;
+use crate::graph::ids::WorkerId;
+use crate::graph::job::JobGraph;
+use crate::sim::cluster::SourceSpec;
+use crate::util::time::{Duration, Time};
+use std::fmt;
+
+/// What the user promises (and is owed) for one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QosClass {
+    /// Carries latency constraints the QoS runtime must uphold; never a
+    /// preemption victim.
+    LatencyConstrained,
+    /// Throughput-oriented; runs on whatever capacity is left and may be
+    /// scaled down by a higher-priority job's preemption.
+    BestEffort,
+}
+
+/// Estimated steady-state resource demand of one job.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct JobDemand {
+    /// Task slots (one per instance), the ledger's unit.
+    pub slots: u32,
+    /// CPU cores: Σ parallelism × `cpu_utilization` over the job graph.
+    pub cpu_cores: f64,
+    /// NIC bytes/s: declared source ingress times the number of job
+    /// edges every item crosses (a first-order per-hop estimate; live
+    /// measurements refine reality, this gates admission).
+    pub nic_bytes_per_sec: f64,
+}
+
+/// Estimate a submission's demand from its job graph profile and its
+/// declared external sources.
+pub fn estimate_demand(job: &JobGraph, sources: &[SourceSpec]) -> JobDemand {
+    let ingress: f64 = sources
+        .iter()
+        .map(|s| {
+            s.bytes as f64 * s.batch.max(1) as f64 / s.interval.as_secs_f64().max(1e-6)
+        })
+        .sum();
+    JobDemand {
+        slots: job.slot_demand(),
+        cpu_cores: job.cpu_demand(),
+        nic_bytes_per_sec: ingress * job.edges.len().max(1) as f64,
+    }
+}
+
+/// Per-worker capacity of the pool along the three admission axes.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolCapacity {
+    pub slots_per_worker: u32,
+    pub cores_per_worker: f64,
+    pub nic_per_worker: f64,
+}
+
+impl PoolCapacity {
+    pub fn of(slots_per_worker: u32, cluster: &ClusterConfig) -> PoolCapacity {
+        PoolCapacity {
+            slots_per_worker,
+            cores_per_worker: cluster.cores_per_worker as f64,
+            nic_per_worker: cluster.link_bytes_per_sec,
+        }
+    }
+
+    /// The single-job compatibility mode: the pre-placed scheduler is
+    /// effectively unbounded, so admission never queues or rejects.
+    pub fn unbounded() -> PoolCapacity {
+        PoolCapacity {
+            slots_per_worker: u32::MAX / 2,
+            cores_per_worker: f64::INFINITY,
+            nic_per_worker: f64::INFINITY,
+        }
+    }
+}
+
+/// The admission axis a rejection is blocked on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resource {
+    Slots,
+    Cpu,
+    Nic,
+}
+
+impl fmt::Display for Resource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Resource::Slots => "slots",
+            Resource::Cpu => "cpu",
+            Resource::Nic => "nic",
+        })
+    }
+}
+
+/// Why a submission can never run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RejectReason {
+    /// The demand exceeds the whole live cluster, empty or not.
+    ExceedsCapacity { resource: Resource, needed: f64, capacity: f64 },
+    /// The demand fits the cluster, but the shortfall is promised to
+    /// running jobs with no bounded lifetime — no predictable release
+    /// will ever free it.
+    HeldByUnbounded { resource: Resource, needed: f64, available: f64 },
+    /// The slot ledger refused a placement admission predicted feasible
+    /// (a worker died between decision and enactment).
+    PlacementFailed { needed: u32, free: u32 },
+}
+
+impl RejectReason {
+    /// Stable machine-readable tag for CLI exit messages and scenario
+    /// script assertions.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            RejectReason::ExceedsCapacity { .. } => "exceeds-capacity",
+            RejectReason::HeldByUnbounded { .. } => "held-by-unbounded",
+            RejectReason::PlacementFailed { .. } => "placement-failed",
+        }
+    }
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::ExceedsCapacity { resource, needed, capacity } => write!(
+                f,
+                "exceeds-capacity: needs {needed:.1} {resource}, live cluster holds {capacity:.1}"
+            ),
+            RejectReason::HeldByUnbounded { resource, needed, available } => write!(
+                f,
+                "held-by-unbounded: needs {needed:.1} {resource}, only {available:.1} ever \
+                 predicted free"
+            ),
+            RejectReason::PlacementFailed { needed, free } => {
+                write!(f, "placement-failed: needs {needed} slots, {free} free")
+            }
+        }
+    }
+}
+
+/// The typed verdict on one submission.  Recorded in the job's
+/// [`crate::sched::JobEntry::decisions`] trace, so lifecycle tests and
+/// scenario gates can assert the exact path a job took
+/// (e.g. Queue → Admit).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdmissionDecision {
+    /// Placed now; one worker per instance, in instance order.  (The
+    /// placement is filled in by the scheduler after it reserves the
+    /// slots; [`decide`] returns it empty.)
+    Admit { placement: Vec<WorkerId> },
+    /// Wait: a bounded running job releases enough capacity in
+    /// `predicted_wait`.
+    Queue { predicted_wait: Duration },
+    /// Never: the typed reason says which axis blocks and why.
+    Reject { reason: RejectReason },
+}
+
+impl AdmissionDecision {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            AdmissionDecision::Admit { .. } => "admit",
+            AdmissionDecision::Queue { .. } => "queue",
+            AdmissionDecision::Reject { reason } => reason.tag(),
+        }
+    }
+}
+
+impl fmt::Display for AdmissionDecision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionDecision::Admit { placement } => {
+                write!(f, "admit({} instances)", placement.len())
+            }
+            AdmissionDecision::Queue { predicted_wait } => {
+                write!(f, "queue(wait≈{:.0}s)", predicted_wait.as_secs_f64())
+            }
+            AdmissionDecision::Reject { reason } => write!(f, "reject[{}]", reason.tag()),
+        }
+    }
+}
+
+/// One running job as the admission check sees it: what it holds and
+/// when (if ever) it is predicted to release it.
+#[derive(Debug, Clone, Copy)]
+pub struct Holder {
+    /// Slots currently reserved (ledger truth, including elastic grants).
+    pub slots: u32,
+    pub cpu_cores: f64,
+    pub nic_bytes_per_sec: f64,
+    /// Predicted release time (`started_at + run_for`); `None` for jobs
+    /// that run until the cluster stops.
+    pub release_at: Option<Time>,
+}
+
+/// Slack added to a predicted release: completion needs the end-of-
+/// stream flush cascade plus three quiet watch checks to resolve.
+pub const DRAIN_SLACK: Duration = Duration(10_000_000);
+
+/// Decide one submission against the live pool.
+///
+/// `free_slots` is the slot ledger's answer (authoritative — elastic
+/// scale-ups can push real usage past the sum of initial demands);
+/// CPU/NIC residuals are derived from the holders' demand estimates.
+/// `Admit` is returned with an empty placement; the caller fills it in
+/// after reserving.
+pub fn decide(
+    demand: &JobDemand,
+    live_workers: u32,
+    pool: &PoolCapacity,
+    free_slots: u32,
+    holders: &[Holder],
+    now: Time,
+) -> AdmissionDecision {
+    let cap_slots = pool.slots_per_worker as u64 * live_workers as u64;
+    let cap_cpu = pool.cores_per_worker * live_workers as f64;
+    let cap_nic = pool.nic_per_worker * live_workers as f64;
+    // Absolute feasibility: the empty live cluster must hold the job.
+    if demand.slots as u64 > cap_slots {
+        return AdmissionDecision::Reject {
+            reason: RejectReason::ExceedsCapacity {
+                resource: Resource::Slots,
+                needed: demand.slots as f64,
+                capacity: cap_slots as f64,
+            },
+        };
+    }
+    if demand.cpu_cores > cap_cpu {
+        return AdmissionDecision::Reject {
+            reason: RejectReason::ExceedsCapacity {
+                resource: Resource::Cpu,
+                needed: demand.cpu_cores,
+                capacity: cap_cpu,
+            },
+        };
+    }
+    if demand.nic_bytes_per_sec > cap_nic {
+        return AdmissionDecision::Reject {
+            reason: RejectReason::ExceedsCapacity {
+                resource: Resource::Nic,
+                needed: demand.nic_bytes_per_sec,
+                capacity: cap_nic,
+            },
+        };
+    }
+    let used_cpu: f64 = holders.iter().map(|h| h.cpu_cores).sum();
+    let used_nic: f64 = holders.iter().map(|h| h.nic_bytes_per_sec).sum();
+    // Signed residuals: when dead workers shrank the live capacity
+    // below current usage, the deficit must be paid off by predicted
+    // releases before anything counts as available (clamping at zero
+    // here would queue jobs on promises the arithmetic already
+    // disproves).
+    let mut slots = free_slots as u64;
+    let mut cpu = cap_cpu - used_cpu;
+    let mut nic = cap_nic - used_nic;
+    let fits = |slots: u64, cpu: f64, nic: f64| {
+        demand.slots as u64 <= slots && demand.cpu_cores <= cpu && demand.nic_bytes_per_sec <= nic
+    };
+    if fits(slots, cpu, nic) {
+        return AdmissionDecision::Admit { placement: Vec::new() };
+    }
+    // Predictive queueing: walk the bounded holders in release order,
+    // handing their capacity back (never beyond the live cluster — a
+    // holder's reservations may sit on dead workers), until the
+    // submission fits.  Holders arrive in JobId order, so the stable
+    // sort keeps ties deterministic.
+    let mut bounded: Vec<&Holder> = holders.iter().filter(|h| h.release_at.is_some()).collect();
+    bounded.sort_by_key(|h| h.release_at.expect("filtered on Some"));
+    for h in bounded {
+        slots = (slots + h.slots as u64).min(cap_slots);
+        cpu = (cpu + h.cpu_cores).min(cap_cpu);
+        nic = (nic + h.nic_bytes_per_sec).min(cap_nic);
+        if fits(slots, cpu, nic) {
+            let free_at = h.release_at.expect("filtered on Some") + DRAIN_SLACK;
+            let predicted_wait = free_at.since(now).max(Duration::from_secs(1));
+            return AdmissionDecision::Queue { predicted_wait };
+        }
+    }
+    // Even with every bounded job gone the shortfall remains: the rest
+    // is held by jobs that never end.
+    let (resource, needed, available) = if demand.slots as u64 > slots {
+        (Resource::Slots, demand.slots as f64, slots as f64)
+    } else if demand.cpu_cores > cpu {
+        (Resource::Cpu, demand.cpu_cores, cpu)
+    } else {
+        (Resource::Nic, demand.nic_bytes_per_sec, nic)
+    };
+    AdmissionDecision::Reject {
+        reason: RejectReason::HeldByUnbounded { resource, needed, available },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn pool() -> PoolCapacity {
+        // 4 slots, 8 cores, 125 MB/s per worker.
+        PoolCapacity::of(4, &ClusterConfig::default())
+    }
+
+    fn demand(slots: u32, cpu: f64) -> JobDemand {
+        JobDemand { slots, cpu_cores: cpu, nic_bytes_per_sec: 1e6 }
+    }
+
+    fn holder(slots: u32, cpu: f64, release_secs: Option<u64>) -> Holder {
+        Holder {
+            slots,
+            cpu_cores: cpu,
+            nic_bytes_per_sec: 1e6,
+            release_at: release_secs.map(|s| Time(s * 1_000_000)),
+        }
+    }
+
+    #[test]
+    fn admits_when_the_residual_pool_fits() {
+        let d = decide(&demand(6, 1.0), 4, &pool(), 10, &[holder(6, 1.0, None)], Time::ZERO);
+        assert_eq!(d, AdmissionDecision::Admit { placement: Vec::new() });
+        assert_eq!(d.tag(), "admit");
+    }
+
+    #[test]
+    fn rejects_demand_beyond_the_live_cluster() {
+        // 4 workers x 4 slots = 16: 18 slots can never run.
+        let d = decide(&demand(18, 1.0), 4, &pool(), 16, &[], Time::ZERO);
+        match &d {
+            AdmissionDecision::Reject { reason } => {
+                assert_eq!(reason.tag(), "exceeds-capacity");
+                assert!(matches!(
+                    reason,
+                    RejectReason::ExceedsCapacity { resource: Resource::Slots, .. }
+                ));
+            }
+            other => panic!("expected reject, got {other:?}"),
+        }
+        // Dead workers shrink the live capacity.
+        let d = decide(&demand(14, 1.0), 3, &pool(), 12, &[], Time::ZERO);
+        assert_eq!(d.tag(), "exceeds-capacity");
+    }
+
+    #[test]
+    fn queues_behind_the_earliest_sufficient_bounded_release() {
+        // 16-slot pool; two bounded holders; 6 free.  A 10-slot job must
+        // wait for the first release (6 + 6 >= 10).
+        let holders = [holder(6, 1.0, Some(60)), holder(4, 1.0, Some(150))];
+        let d = decide(&demand(10, 1.0), 4, &pool(), 6, &holders, Time(10_000_000));
+        match d {
+            AdmissionDecision::Queue { predicted_wait } => {
+                // 60 s release + 10 s slack - 10 s now = 60 s.
+                assert_eq!(predicted_wait, Duration::from_secs(60));
+            }
+            other => panic!("expected queue, got {other:?}"),
+        }
+        // Needing both releases pushes the wait to the later one.
+        let d = decide(&demand(14, 1.0), 4, &pool(), 6, &holders, Time(10_000_000));
+        assert_eq!(
+            d,
+            AdmissionDecision::Queue { predicted_wait: Duration::from_secs(150) }
+        );
+    }
+
+    #[test]
+    fn rejects_when_the_shortfall_is_held_by_unbounded_jobs() {
+        let holders = [holder(12, 2.0, None)];
+        let d = decide(&demand(10, 1.0), 4, &pool(), 4, &holders, Time::ZERO);
+        match &d {
+            AdmissionDecision::Reject { reason } => {
+                assert_eq!(reason.tag(), "held-by-unbounded");
+                assert!(matches!(
+                    reason,
+                    RejectReason::HeldByUnbounded { resource: Resource::Slots, .. }
+                ));
+            }
+            other => panic!("expected reject, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cpu_axis_gates_like_the_slot_axis() {
+        // Plenty of slots, but the cpu profile exceeds the residual: an
+        // unbounded holder burns 30 of 32 cores.
+        let holders = [holder(2, 30.0, None)];
+        let d = decide(&demand(2, 4.0), 4, &pool(), 14, &holders, Time::ZERO);
+        assert_eq!(d.tag(), "held-by-unbounded");
+        // And beyond the whole cluster it is an absolute reject.
+        let d = decide(&demand(2, 40.0), 4, &pool(), 16, &[], Time::ZERO);
+        assert_eq!(d.tag(), "exceeds-capacity");
+    }
+
+    #[test]
+    fn unbounded_pool_always_admits() {
+        let d = decide(
+            &demand(1_000_000, 1e9),
+            1,
+            &PoolCapacity::unbounded(),
+            u32::MAX / 2,
+            &[],
+            Time::ZERO,
+        );
+        assert_eq!(d.tag(), "admit");
+    }
+
+    #[test]
+    fn decision_rendering_is_stable() {
+        let q = AdmissionDecision::Queue { predicted_wait: Duration::from_secs(45) };
+        assert_eq!(q.to_string(), "queue(wait≈45s)");
+        assert_eq!(q.tag(), "queue");
+        let r = AdmissionDecision::Reject {
+            reason: RejectReason::PlacementFailed { needed: 6, free: 2 },
+        };
+        assert_eq!(r.to_string(), "reject[placement-failed]");
+    }
+}

@@ -1,0 +1,259 @@
+//! Weighted fair sharing of the free pool (ROADMAP "fairness" item).
+//!
+//! Elastic scale-ups used to draw from the free pool strictly
+//! first-come-first-served, so one violated job whose manager ticks
+//! first could drain every contested slot and starve another violated
+//! job's escalation path.  [`FairShare`] arbitrates instead with a
+//! DRF-style weighted deficit rule over the jobs *currently contending*
+//! for elastic capacity:
+//!
+//! > grant job `j` one more slot iff for every other contender `k`,
+//! > `(granted_j + 1) · w_k ≤ (granted_k + 1) · w_j`.
+//!
+//! Equivalently: after the grant, `j`'s weight-normalised elastic usage
+//! may not exceed any contender's normalised usage *plus one grant* —
+//! the job with the minimum normalised usage always passes, so the rule
+//! can defer but never deadlock, and at pool exhaustion every
+//! contender's share is within one grant of `w_j / Σw` of the contested
+//! slots (no starvation; the property test in `tests/properties.rs`
+//! pins the bound).
+//!
+//! A *contender* is a running job that requested an elastic slot within
+//! the last contender horizon ([`DEFAULT_HORIZON`], re-derived from the
+//! engine's measurement interval via [`FairShare::set_horizon`]); a
+//! satisfied job that stops asking drops out of the comparison and no
+//! longer constrains anyone.  All arithmetic is integer (u128
+//! products), so the arbitration is exact and deterministic.
+
+use crate::util::time::{Duration, Time};
+
+/// Default contender horizon: four default (15 s) measurement
+/// intervals.  Clusters with a non-default interval re-derive it via
+/// [`FairShare::set_horizon`] so contender status always outlives the
+/// managers' own request cadence.
+pub const DEFAULT_HORIZON: Duration = Duration(60_000_000);
+
+/// Per-job weighted-deficit state.  Indexed densely by job id, like the
+/// scheduler's registry.
+#[derive(Debug)]
+pub struct FairShare {
+    weights: Vec<u64>,
+    /// Elastic slots currently held (granted minus released).
+    granted: Vec<u64>,
+    /// Last elastic request per job; `None` = never asked.
+    last_request: Vec<Option<Time>>,
+    /// How long a job stays a contender after its last elastic request.
+    horizon: Duration,
+}
+
+impl Default for FairShare {
+    fn default() -> Self {
+        FairShare {
+            weights: Vec::new(),
+            granted: Vec::new(),
+            last_request: Vec::new(),
+            horizon: DEFAULT_HORIZON,
+        }
+    }
+}
+
+impl FairShare {
+    pub fn new() -> FairShare {
+        FairShare::default()
+    }
+
+    /// Re-derive the contender horizon (e.g. four measurement
+    /// intervals) for clusters whose managers tick slower than the
+    /// default — a violated job must stay a contender across its own
+    /// request cadence or the arbitration degrades to FCFS.
+    pub fn set_horizon(&mut self, horizon: Duration) {
+        self.horizon = horizon.max(Duration::from_secs(1));
+    }
+
+    pub fn horizon(&self) -> Duration {
+        self.horizon
+    }
+
+    /// Register the next job (dense, in registration order).
+    pub fn register(&mut self, weight: u32) {
+        self.weights.push(weight.max(1) as u64);
+        self.granted.push(0);
+        self.last_request.push(None);
+    }
+
+    /// Note that job `j` wants an elastic slot (refreshes its contender
+    /// status whether or not the grant goes through).
+    pub fn note_request(&mut self, j: usize, now: Time) {
+        self.last_request[j] = Some(now);
+    }
+
+    /// The weighted deficit rule.  `is_running(k)` filters the contender
+    /// set to live jobs (completed/cancelled jobs keep their state until
+    /// reset but must not constrain anyone).
+    pub fn may_grant(&self, j: usize, now: Time, is_running: impl Fn(usize) -> bool) -> bool {
+        let wj = self.weights[j] as u128;
+        let gj1 = self.granted[j] as u128 + 1;
+        for k in 0..self.weights.len() {
+            if k == j || !is_running(k) {
+                continue;
+            }
+            let contender = match self.last_request[k] {
+                Some(t) => now.since(t) <= self.horizon,
+                None => false,
+            };
+            if !contender {
+                continue;
+            }
+            let wk = self.weights[k] as u128;
+            if gj1 * wk > (self.granted[k] as u128 + 1) * wj {
+                return false;
+            }
+        }
+        true
+    }
+
+    pub fn on_grant(&mut self, j: usize) {
+        self.granted[j] += 1;
+    }
+
+    /// An elastic slot went back to the pool (scale-down, retire).
+    pub fn on_release(&mut self, j: usize) {
+        self.granted[j] = self.granted[j].saturating_sub(1);
+    }
+
+    /// The job ended: it holds nothing and contends for nothing.
+    pub fn reset(&mut self, j: usize) {
+        self.granted[j] = 0;
+        self.last_request[j] = None;
+    }
+
+    /// Elastic slots currently held by job `j`.
+    pub fn granted(&self, j: usize) -> u64 {
+        self.granted[j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fair(weights: &[u32]) -> FairShare {
+        let mut f = FairShare::new();
+        for &w in weights {
+            f.register(w);
+        }
+        f
+    }
+
+    /// Drive alternating requests against a pool of `free` slots and
+    /// return the per-job grants.
+    fn contest(weights: &[u32], mut free: u32) -> Vec<u64> {
+        let mut f = fair(weights);
+        let now = Time(1_000_000);
+        let mut idle_rounds = 0;
+        while idle_rounds < 1 {
+            idle_rounds = 1;
+            for j in 0..weights.len() {
+                if free == 0 {
+                    return (0..weights.len()).map(|j| f.granted(j)).collect();
+                }
+                f.note_request(j, now);
+                if f.may_grant(j, now, |_| true) {
+                    f.on_grant(j);
+                    free -= 1;
+                    idle_rounds = 0;
+                }
+            }
+        }
+        (0..weights.len()).map(|j| f.granted(j)).collect()
+    }
+
+    #[test]
+    fn two_to_one_weights_split_six_slots_four_to_two() {
+        assert_eq!(contest(&[2, 1], 6), vec![4, 2]);
+    }
+
+    #[test]
+    fn equal_weights_alternate_evenly() {
+        assert_eq!(contest(&[1, 1], 6), vec![3, 3]);
+        assert_eq!(contest(&[3, 3], 7), vec![4, 3]);
+    }
+
+    #[test]
+    fn three_way_contest_is_weight_proportional() {
+        // Weights 3:2:1 over 12 slots -> 6:4:2.
+        assert_eq!(contest(&[3, 2, 1], 12), vec![6, 4, 2]);
+    }
+
+    #[test]
+    fn the_minimum_normalised_job_is_never_deferred() {
+        // Deadlock-freedom: some job passes in every round while
+        // capacity remains, so the contest always consumes the pool.
+        for weights in [[1u32, 4], [2, 3], [4, 1]] {
+            let total: u64 = contest(&weights, 9).iter().sum();
+            assert_eq!(total, 9, "pool not consumed for weights {weights:?}");
+        }
+    }
+
+    #[test]
+    fn solo_requester_is_never_deferred() {
+        let mut f = fair(&[1, 1]);
+        let now = Time(1_000_000);
+        // Job 1 never requests: job 0 faces no contender.
+        for _ in 0..10 {
+            f.note_request(0, now);
+            assert!(f.may_grant(0, now, |_| true));
+            f.on_grant(0);
+        }
+        assert_eq!(f.granted(0), 10);
+    }
+
+    #[test]
+    fn contender_status_expires_after_the_horizon() {
+        let mut f = fair(&[1, 1]);
+        let t0 = Time(1_000_000);
+        f.note_request(1, t0);
+        // Job 1 lags behind at zero grants: it matches job 0's first
+        // grant and defers the second while its request is fresh...
+        f.note_request(0, t0);
+        assert!(f.may_grant(0, t0, |_| true));
+        f.on_grant(0);
+        f.note_request(0, t0);
+        assert!(!f.may_grant(0, t0, |_| true), "lagging fresh contender defers");
+        // ...but not once its last request has aged out.
+        let later = t0 + f.horizon() + Duration::from_secs(1);
+        assert!(f.may_grant(0, later, |_| true));
+        // A widened horizon keeps it a contender again.
+        f.set_horizon(Duration::from_secs(600));
+        assert!(!f.may_grant(0, later, |_| true));
+    }
+
+    #[test]
+    fn non_running_jobs_do_not_constrain() {
+        let mut f = fair(&[1, 1]);
+        let now = Time(1_000_000);
+        f.note_request(1, now);
+        f.note_request(0, now);
+        f.on_grant(0);
+        f.on_grant(0);
+        assert!(!f.may_grant(0, now, |_| true));
+        assert!(f.may_grant(0, now, |k| k != 1), "completed contender ignored");
+        f.reset(1);
+        assert!(f.may_grant(0, now, |_| true), "reset clears the contender");
+    }
+
+    #[test]
+    fn release_returns_headroom() {
+        let mut f = fair(&[1, 1]);
+        let now = Time(1_000_000);
+        f.note_request(0, now);
+        f.note_request(1, now);
+        f.on_grant(0); // (1, 0): one ahead is fine, two is not.
+        assert!(!f.may_grant(0, now, |_| true));
+        f.on_grant(1); // (1, 1): even again.
+        f.on_grant(0); // (2, 1)
+        assert!(!f.may_grant(0, now, |_| true));
+        f.on_release(0); // (1, 1): released capacity restores headroom.
+        assert!(f.may_grant(0, now, |_| true));
+    }
+}

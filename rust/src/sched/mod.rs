@@ -1,26 +1,40 @@
-//! The multi-job scheduler: a job registry with a submit → run →
-//! complete/cancel lifecycle, a per-worker slot ledger, and the
-//! placement policies that map task instances onto the shared worker
-//! pool at submit time.
+//! The multi-job scheduler: a job registry with a typed submit →
+//! admit/queue/reject → run → complete/cancel lifecycle, a per-worker
+//! slot ledger, weighted fair sharing of the free pool, priority
+//! preemption, and the placement policies that map task instances onto
+//! the shared worker pool.
 //!
 //! The design premise follows the paper's §2: individual streams are
 //! trivial, the *aggregate* is not — a massively-parallel streaming
 //! framework wins by multiplexing many jobs over one pool of workers.
 //! The scheduler is the arbitration point that makes that safe:
 //!
-//! * every task instance occupies one **slot**, reserved at submission
+//! * a submission is a typed [`JobSpec`] — graph, QoS class, priority,
+//!   fair-share weight — and its verdict is a typed
+//!   [`AdmissionDecision`]: admitted with a placement, **queued** when a
+//!   bounded running job will predictably release the capacity
+//!   ([`admission`]), or rejected with a machine-readable reason;
+//! * every task instance occupies one **slot**, reserved at admission
 //!   ([`Scheduler::place_job`]) and promised to its job until the job
 //!   completes or is cancelled;
 //! * elastic scaling ([`Scheduler::reserve_elastic`]) draws from the
-//!   *free* pool only — one job's countermeasures can never take
-//!   capacity promised to another job;
+//!   *free* pool only, arbitrated by a weighted deficit rule
+//!   ([`fairness`]) so one violated job cannot starve another's
+//!   escalation path;
+//! * a higher-priority job may reclaim a slot from a best-effort job
+//!   (the master's preemption path retires one victim instance through
+//!   the ordinary scale-down machinery);
 //! * failure recovery moves reservations with the redeployed instances
 //!   ([`Scheduler::move_reservation`]); recovery may overcommit a
 //!   survivor (keeping a job alive beats strict accounting), which the
 //!   ledger records rather than hides.
 
+pub mod admission;
+pub mod fairness;
 pub mod placement;
 
+pub use admission::{AdmissionDecision, JobDemand, QosClass, RejectReason};
+pub use fairness::FairShare;
 pub use placement::PlacementPolicy;
 
 use crate::graph::constraint::JobConstraint;
@@ -34,23 +48,122 @@ use std::fmt;
 
 /// Everything a user hands the cluster to run one job: a validated
 /// standalone job graph (its ids are remapped into the cluster's union
-/// graph at submission), QoS constraints, per-job-vertex task semantics,
-/// external sources (offsets relative to submission time), and how long
-/// the sources run.
-pub struct JobSubmission {
+/// graph at admission), QoS constraints, per-job-vertex task semantics,
+/// external sources (offsets relative to submission time), the job's
+/// lifetime bound, and its **resource-governance intent** — QoS class,
+/// priority and fair-share weight.
+pub struct JobSpec {
     pub name: String,
     pub job: JobGraph,
     pub constraints: Vec<JobConstraint>,
     pub task_specs: Vec<TaskSpec>,
     pub sources: Vec<SourceSpec>,
-    /// Stop this job's sources this long after submission; the job
+    /// Stop this job's sources this long after admission; the job
     /// completes once its pipeline drains.  `None` runs the sources
-    /// until the cluster-wide source stop.
+    /// until the cluster-wide source stop — and tells admission control
+    /// that this job never releases its capacity on its own.
     pub run_for: Option<Duration>,
     /// Per-job countermeasure arming; `None` uses the engine default.
     /// This is how a throughput-oriented baseline job runs unoptimised
     /// next to latency-constrained jobs under full QoS management.
     pub manager: Option<ManagerConfig>,
+    /// Latency-constrained jobs are never preemption victims;
+    /// best-effort jobs may be scaled down by a higher-priority job.
+    pub class: QosClass,
+    /// Higher wins: a job may preempt best-effort jobs of strictly
+    /// lower priority when the free pool is exhausted.
+    pub priority: u8,
+    /// Fair-share weight for contested elastic capacity (≥ 1).
+    pub weight: u32,
+}
+
+impl JobSpec {
+    /// A latency-constrained submission with default governance intent
+    /// (priority 1, weight 1, unbounded lifetime, engine-default QoS).
+    pub fn new(
+        name: impl Into<String>,
+        job: JobGraph,
+        constraints: Vec<JobConstraint>,
+        task_specs: Vec<TaskSpec>,
+        sources: Vec<SourceSpec>,
+    ) -> JobSpec {
+        JobSpec {
+            name: name.into(),
+            job,
+            constraints,
+            task_specs,
+            sources,
+            run_for: None,
+            manager: None,
+            class: QosClass::LatencyConstrained,
+            priority: 1,
+            weight: 1,
+        }
+    }
+
+    /// Bound the job's source lifetime (also feeds admission's release
+    /// prediction).
+    pub fn run_for(mut self, d: Duration) -> Self {
+        self.run_for = Some(d);
+        self
+    }
+
+    /// Override the per-job countermeasure arming.
+    pub fn with_manager(mut self, m: ManagerConfig) -> Self {
+        self.manager = Some(m);
+        self
+    }
+
+    /// Mark the job best-effort (preemptable, priority 0).
+    pub fn best_effort(mut self) -> Self {
+        self.class = QosClass::BestEffort;
+        self.priority = 0;
+        self
+    }
+
+    pub fn with_priority(mut self, p: u8) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn with_weight(mut self, w: u32) -> Self {
+        self.weight = w.max(1);
+        self
+    }
+
+    /// Governance metadata the registry keeps (demand is estimated from
+    /// the graph profile and sources).
+    pub fn meta(&self) -> JobMeta {
+        JobMeta {
+            class: self.class,
+            priority: self.priority,
+            weight: self.weight,
+            demand: admission::estimate_demand(&self.job, &self.sources),
+            run_for: self.run_for,
+        }
+    }
+}
+
+/// Registry-side governance metadata of one job.
+#[derive(Debug, Clone, Copy)]
+pub struct JobMeta {
+    pub class: QosClass,
+    pub priority: u8,
+    pub weight: u32,
+    pub demand: JobDemand,
+    pub run_for: Option<Duration>,
+}
+
+impl Default for JobMeta {
+    fn default() -> Self {
+        JobMeta {
+            class: QosClass::LatencyConstrained,
+            priority: 1,
+            weight: 1,
+            demand: JobDemand::default(),
+            run_for: None,
+        }
+    }
 }
 
 /// Lifecycle of a registered job.
@@ -58,13 +171,18 @@ pub struct JobSubmission {
 pub enum JobState {
     /// Registered, submission event not yet processed.
     Pending,
+    /// Admission predicted infeasibility now but a bounded running job
+    /// will release enough capacity: waiting for a scheduler tick to
+    /// re-admit it.
+    Queued,
     /// Placed and running.
     Running,
     /// Sources ended and the pipeline drained.
     Completed,
     /// Killed by the user; in-flight items were accounted as lost.
     Cancelled,
-    /// Submission rejected (insufficient slot capacity).
+    /// Admission rejected the submission (typed reason in the decision
+    /// trace).
     Rejected,
 }
 
@@ -77,6 +195,19 @@ pub struct JobEntry {
     pub submitted_at: Time,
     pub started_at: Option<Time>,
     pub finished_at: Option<Time>,
+    /// Governance intent from the [`JobSpec`].  `weight` is the
+    /// registry's record of the declared intent; the *operative* copy
+    /// lives in the fairness arbiter (registered once, clamped ≥ 1),
+    /// which is the only thing the grant rule ever consults.
+    pub class: QosClass,
+    pub priority: u8,
+    pub weight: u32,
+    /// Estimated steady-state demand (admission input).
+    pub demand: JobDemand,
+    /// Source-lifetime bound (admission's release prediction).
+    pub run_for: Option<Duration>,
+    /// Admission trail, in decision order (e.g. Queue → Admit).
+    pub decisions: Vec<AdmissionDecision>,
     /// Slots currently reserved by this job, per worker.
     slots: Vec<u32>,
 }
@@ -90,6 +221,21 @@ impl JobEntry {
     /// Slots reserved on one worker.
     pub fn reserved_on(&self, w: WorkerId) -> u32 {
         self.slots[w.index()]
+    }
+
+    /// Whether the job's admission trail includes a Queue verdict.
+    pub fn was_queued(&self) -> bool {
+        self.decisions
+            .iter()
+            .any(|d| matches!(d, AdmissionDecision::Queue { .. }))
+    }
+
+    /// The typed reason of a rejection, if the job was rejected.
+    pub fn reject_reason(&self) -> Option<&RejectReason> {
+        self.decisions.iter().rev().find_map(|d| match d {
+            AdmissionDecision::Reject { reason } => Some(reason),
+            _ => None,
+        })
     }
 }
 
@@ -120,13 +266,27 @@ impl fmt::Display for SchedError {
 
 impl std::error::Error for SchedError {}
 
-/// The scheduler: registry + slot ledger + policy.
+/// Why an elastic slot reservation was denied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElasticDenial {
+    /// The job is not running (completed, cancelled, still queued).
+    NotRunning,
+    /// No free slot exists on any live worker — the trigger for the
+    /// master's priority-preemption path.
+    NoCapacity,
+    /// A free slot exists but granting it would exceed the job's
+    /// weighted fair share while another violated job lags behind.
+    Deferred,
+}
+
+/// The scheduler: registry + slot ledger + fairness arbiter + policy.
 #[derive(Debug)]
 pub struct Scheduler {
     policy: PlacementPolicy,
     capacity: Vec<u32>,
     used: Vec<u32>,
     jobs: Vec<JobEntry>,
+    fair: FairShare,
     /// Round-robin state of the spread policy (persists across jobs so
     /// consecutive submissions continue the rotation).
     rr_cursor: usize,
@@ -141,6 +301,7 @@ impl Scheduler {
             capacity: vec![slots_per_worker; num_workers as usize],
             used: vec![0; num_workers as usize],
             jobs: Vec::new(),
+            fair: FairShare::new(),
             rr_cursor: 0,
         }
     }
@@ -173,9 +334,10 @@ impl Scheduler {
             .min(u32::MAX as u64) as u32
     }
 
-    /// Register a job; returns its dense id.  Slots are reserved later,
-    /// by [`Scheduler::place_job`] at submission-event time.
-    pub fn register(&mut self, name: &str, submitted_at: Time) -> JobId {
+    /// Register a job with its governance metadata; returns its dense
+    /// id.  Slots are reserved later, by [`Scheduler::place_job`] at
+    /// admission-event time.
+    pub fn register(&mut self, name: &str, submitted_at: Time, meta: JobMeta) -> JobId {
         let id = JobId(self.jobs.len() as u32);
         self.jobs.push(JobEntry {
             id,
@@ -184,8 +346,15 @@ impl Scheduler {
             submitted_at,
             started_at: None,
             finished_at: None,
+            class: meta.class,
+            priority: meta.priority,
+            weight: meta.weight.max(1),
+            demand: meta.demand,
+            run_for: meta.run_for,
+            decisions: Vec::new(),
             slots: vec![0; self.capacity.len()],
         });
+        self.fair.register(meta.weight);
         id
     }
 
@@ -201,6 +370,92 @@ impl Scheduler {
         self.entry(job).map(|e| e.state)
     }
 
+    /// Append a typed admission verdict to the job's decision trail.
+    pub fn record_decision(&mut self, job: JobId, decision: AdmissionDecision) {
+        if let Some(e) = self.jobs.get_mut(job.index()) {
+            e.decisions.push(decision);
+        }
+    }
+
+    /// The job's admission trail, in decision order.
+    pub fn decisions(&self, job: JobId) -> &[AdmissionDecision] {
+        self.entry(job).map(|e| e.decisions.as_slice()).unwrap_or(&[])
+    }
+
+    /// Pending → Queued: admission predicted a bounded release.
+    pub fn mark_queued(&mut self, job: JobId, decision: AdmissionDecision) {
+        if let Some(e) = self.jobs.get_mut(job.index()) {
+            debug_assert_eq!(e.state, JobState::Pending);
+            e.state = JobState::Queued;
+            e.decisions.push(decision);
+        }
+    }
+
+    /// Terminal rejection with its typed reason.
+    pub fn reject(&mut self, job: JobId, reason: RejectReason, now: Time) {
+        if let Some(e) = self.jobs.get_mut(job.index()) {
+            e.state = JobState::Rejected;
+            e.finished_at = Some(now);
+            e.decisions.push(AdmissionDecision::Reject { reason });
+        }
+    }
+
+    /// Jobs currently waiting for capacity, in submission (id) order.
+    pub fn queued_jobs(&self) -> Vec<JobId> {
+        self.jobs
+            .iter()
+            .filter(|e| e.state == JobState::Queued)
+            .map(|e| e.id)
+            .collect()
+    }
+
+    pub fn any_queued(&self) -> bool {
+        self.jobs.iter().any(|e| e.state == JobState::Queued)
+    }
+
+    /// Running jobs as admission-control holders: ledger-true slot
+    /// reservations plus the demand estimate and predicted release.
+    pub fn holders(&self) -> Vec<admission::Holder> {
+        self.jobs
+            .iter()
+            .filter(|e| e.state == JobState::Running)
+            .map(|e| admission::Holder {
+                slots: e.reserved(),
+                cpu_cores: e.demand.cpu_cores,
+                nic_bytes_per_sec: e.demand.nic_bytes_per_sec,
+                release_at: e
+                    .run_for
+                    .and_then(|d| e.started_at.map(|t| t + d)),
+            })
+            .collect()
+    }
+
+    /// Elastic slots currently held by a job under the fairness arbiter.
+    pub fn elastic_granted(&self, job: JobId) -> u64 {
+        self.fair.granted(job.index())
+    }
+
+    /// Re-derive the fairness arbiter's contender horizon from the
+    /// engine's measurement interval (violated jobs request at manager
+    /// tick cadence, so the horizon must outlive it).
+    pub fn set_fairness_horizon(&mut self, horizon: Duration) {
+        self.fair.set_horizon(horizon);
+    }
+
+    /// Whether the fairness arbiter would defer an elastic grant to
+    /// `job` right now (free capacity notwithstanding).  The master
+    /// consults this before preempting: a victim must never lose an
+    /// instance for a grant the weighted-share rule would refuse.
+    pub fn would_defer_elastic(&self, job: JobId, now: Time) -> bool {
+        if self.state(job) != Some(JobState::Running) {
+            return true;
+        }
+        let jobs = &self.jobs;
+        !self
+            .fair
+            .may_grant(job.index(), now, |k| jobs[k].state == JobState::Running)
+    }
+
     fn entry_mut(&mut self, job: JobId) -> Result<&mut JobEntry, SchedError> {
         let idx = job.index();
         if idx >= self.jobs.len() {
@@ -209,10 +464,10 @@ impl Scheduler {
         Ok(&mut self.jobs[idx])
     }
 
-    /// Place `demand` instances of a pending job onto the pool: one
-    /// worker per instance, in instance order, per the policy.  Reserves
-    /// the slots and marks the job running; a rejected job keeps zero
-    /// reservations and is marked [`JobState::Rejected`].
+    /// Place `demand` instances of a pending or queued job onto the
+    /// pool: one worker per instance, in instance order, per the policy.
+    /// Reserves the slots and marks the job running; a rejected job
+    /// keeps zero reservations and is marked [`JobState::Rejected`].
     pub fn place_job(
         &mut self,
         job: JobId,
@@ -221,7 +476,7 @@ impl Scheduler {
         now: Time,
     ) -> Result<Vec<WorkerId>, SchedError> {
         let state = self.entry_mut(job)?.state;
-        if state != JobState::Pending {
+        if state != JobState::Pending && state != JobState::Queued {
             return Err(SchedError::WrongState { job, state });
         }
         let free = self.free_slots(dead);
@@ -266,17 +521,23 @@ impl Scheduler {
 
     /// Elastic scale-up arbitration: reserve one extra slot for `job`
     /// from the *free* pool (never from capacity promised to other
-    /// jobs).  `start_hint` seeds the spread rotation — the legacy
-    /// single-job behaviour of spawning instance k on worker k mod n.
+    /// jobs), subject to the weighted fair-share rule against every
+    /// other currently-contending job.  `start_hint` seeds the spread
+    /// rotation — the legacy single-job behaviour of spawning instance
+    /// k on worker k mod n.  The typed denial distinguishes an empty
+    /// pool ([`ElasticDenial::NoCapacity`], the preemption trigger)
+    /// from a fairness deferral ([`ElasticDenial::Deferred`]).
     pub fn reserve_elastic(
         &mut self,
         job: JobId,
         start_hint: usize,
         dead: &[bool],
-    ) -> Option<WorkerId> {
+        now: Time,
+    ) -> Result<WorkerId, ElasticDenial> {
         if self.state(job) != Some(JobState::Running) {
-            return None;
+            return Err(ElasticDenial::NotRunning);
         }
+        self.fair.note_request(job.index(), now);
         let n = self.capacity.len();
         let is_dead = |w: usize| dead.get(w).copied().unwrap_or(false);
         let free = |s: &Self, w: usize| s.capacity[w].saturating_sub(s.used[w]);
@@ -289,16 +550,26 @@ impl Scheduler {
                 .filter(|&w| !is_dead(w) && free(self, w) > 0)
                 .max_by_key(|&w| (free(self, w), std::cmp::Reverse(w))),
         };
-        if let Some(w) = picked {
-            self.used[w] += 1;
-            self.jobs[job.index()].slots[w] += 1;
-            return Some(WorkerId(w as u32));
+        let w = match picked {
+            Some(w) => w,
+            None => return Err(ElasticDenial::NoCapacity),
+        };
+        let jobs = &self.jobs;
+        if !self
+            .fair
+            .may_grant(job.index(), now, |k| jobs[k].state == JobState::Running)
+        {
+            return Err(ElasticDenial::Deferred);
         }
-        None
+        self.used[w] += 1;
+        self.jobs[job.index()].slots[w] += 1;
+        self.fair.on_grant(job.index());
+        Ok(WorkerId(w as u32))
     }
 
     /// Return one slot of `job` on `worker` to the free pool
-    /// (scale-down, instance detach).
+    /// (base-instance detach; see [`Scheduler::release_elastic`] for
+    /// slots granted by the fairness arbiter).
     pub fn release_slot(&mut self, job: JobId, worker: WorkerId) {
         if let Some(e) = self.jobs.get_mut(job.index()) {
             let w = worker.index();
@@ -307,6 +578,14 @@ impl Scheduler {
                 self.used[w] = self.used[w].saturating_sub(1);
             }
         }
+    }
+
+    /// Return one *elastic* slot (scale-down): the fairness arbiter's
+    /// grant count shrinks with the reservation, so released capacity
+    /// no longer counts against the job's fair share.
+    pub fn release_elastic(&mut self, job: JobId, worker: WorkerId) {
+        self.release_slot(job, worker);
+        self.fair.on_release(job.index());
     }
 
     /// Failure recovery: move one of `job`'s reservations from a dead
@@ -324,12 +603,14 @@ impl Scheduler {
         }
     }
 
-    /// Terminal transition: release every slot and stamp the state.
-    /// Cancellation is also legal for a still-pending job (its queued
-    /// submission is simply never placed); completion is not.
+    /// Terminal transition: release every slot, clear the fairness
+    /// state, and stamp the lifecycle state.  Cancellation is also
+    /// legal for a still-pending or queued job (its submission payload
+    /// is simply never placed); completion is not.
     fn finish(&mut self, job: JobId, state: JobState, now: Time) -> Result<(), SchedError> {
         let cur = self.entry_mut(job)?.state;
-        let pending_cancel = cur == JobState::Pending && state == JobState::Cancelled;
+        let pending_cancel = matches!(cur, JobState::Pending | JobState::Queued)
+            && state == JobState::Cancelled;
         if cur != JobState::Running && !pending_cancel {
             return Err(SchedError::WrongState { job, state: cur });
         }
@@ -341,6 +622,7 @@ impl Scheduler {
         e.slots = vec![0; self.capacity.len()];
         e.state = state;
         e.finished_at = Some(now);
+        self.fair.reset(job.index());
         Ok(())
     }
 
@@ -349,7 +631,8 @@ impl Scheduler {
         self.finish(job, JobState::Completed, now)
     }
 
-    /// Mark a running job cancelled and free its slots.
+    /// Mark a running (or still pending/queued) job cancelled and free
+    /// its slots.
     pub fn cancel(&mut self, job: JobId, now: Time) -> Result<(), SchedError> {
         self.finish(job, JobState::Cancelled, now)
     }
@@ -376,10 +659,14 @@ mod tests {
         Scheduler::new(3, 2, policy)
     }
 
+    fn reg(s: &mut Scheduler, name: &str) -> JobId {
+        s.register(name, Time::ZERO, JobMeta::default())
+    }
+
     #[test]
     fn place_reserves_and_rejects_over_capacity() {
         let mut s = sched(PlacementPolicy::Spread);
-        let a = s.register("a", Time::ZERO);
+        let a = reg(&mut s, "a");
         let dead = vec![false; 3];
         let placed = s.place_job(a, 4, &dead, Time::ZERO).unwrap();
         assert_eq!(placed.len(), 4);
@@ -387,13 +674,13 @@ mod tests {
         assert_eq!(s.free_slots(&dead), 2);
         // A second job that does not fit is rejected without leaking
         // reservations.
-        let b = s.register("b", Time::ZERO);
+        let b = reg(&mut s, "b");
         let err = s.place_job(b, 3, &dead, Time::ZERO).unwrap_err();
         assert_eq!(err, SchedError::InsufficientSlots { job: b, needed: 3, free: 2 });
         assert_eq!(s.state(b), Some(JobState::Rejected));
         assert_eq!(s.free_slots(&dead), 2);
         // One that fits runs.
-        let c = s.register("c", Time::ZERO);
+        let c = reg(&mut s, "c");
         assert_eq!(s.place_job(c, 2, &dead, Time::ZERO).unwrap().len(), 2);
         assert_eq!(s.free_slots(&dead), 0);
     }
@@ -401,39 +688,79 @@ mod tests {
     #[test]
     fn elastic_reservations_cannot_take_promised_capacity() {
         let mut s = sched(PlacementPolicy::LeastLoaded);
-        let a = s.register("a", Time::ZERO);
-        let b = s.register("b", Time::ZERO);
+        let a = reg(&mut s, "a");
+        let b = reg(&mut s, "b");
         let dead = vec![false; 3];
         s.place_job(a, 3, &dead, Time::ZERO).unwrap();
         s.place_job(b, 2, &dead, Time::ZERO).unwrap();
         // One free slot in the pool: the first elastic request gets it,
         // the second is refused even though job b "only" uses 2 of 6.
-        assert!(s.reserve_elastic(a, 0, &dead).is_some());
-        assert_eq!(s.reserve_elastic(a, 0, &dead), None);
-        assert_eq!(s.reserve_elastic(b, 0, &dead), None);
+        let now = Time(1);
+        assert!(s.reserve_elastic(a, 0, &dead, now).is_ok());
+        assert_eq!(
+            s.reserve_elastic(a, 0, &dead, now),
+            Err(ElasticDenial::NoCapacity)
+        );
+        assert_eq!(
+            s.reserve_elastic(b, 0, &dead, now),
+            Err(ElasticDenial::NoCapacity)
+        );
         // Releasing returns the slot to the pool.
         let w = WorkerId(0);
-        s.release_slot(a, w);
+        s.release_elastic(a, w);
         assert_eq!(s.free_slots(&dead), 1);
+        assert_eq!(s.elastic_granted(a), 0);
     }
 
     #[test]
     fn spread_elastic_follows_start_hint_rotation() {
         let mut s = Scheduler::preplaced(4);
-        let a = s.register("a", Time::ZERO);
+        let a = reg(&mut s, "a");
         s.seed_usage(a, &[1, 1, 1, 1]);
         let mut dead = vec![false; 4];
         dead[2] = true;
         // Legacy rotation: instance index 2 -> worker 2, dead -> 3.
-        assert_eq!(s.reserve_elastic(a, 2, &dead), Some(WorkerId(3)));
-        assert_eq!(s.reserve_elastic(a, 2, &dead), Some(WorkerId(3)));
+        assert_eq!(s.reserve_elastic(a, 2, &dead, Time::ZERO), Ok(WorkerId(3)));
+        assert_eq!(s.reserve_elastic(a, 2, &dead, Time::ZERO), Ok(WorkerId(3)));
+    }
+
+    #[test]
+    fn weighted_contention_defers_the_job_running_ahead_of_its_share() {
+        // Pool of 2x5 = 10; two weight-1 jobs each hold 3 base slots,
+        // leaving 4 contested.
+        let mut s = Scheduler::new(2, 5, PlacementPolicy::Pack);
+        let a = reg(&mut s, "a");
+        let b = reg(&mut s, "b");
+        let dead = vec![false; 2];
+        s.place_job(a, 3, &dead, Time::ZERO).unwrap();
+        s.place_job(b, 3, &dead, Time::ZERO).unwrap();
+        let now = Time(1_000_000);
+        // a runs two grants ahead before b ever contends (a solo
+        // requester is never deferred)...
+        assert!(s.reserve_elastic(a, 0, &dead, now).is_ok());
+        assert!(s.reserve_elastic(a, 0, &dead, now).is_ok());
+        // ...b contends and catches up one...
+        assert!(s.reserve_elastic(b, 0, &dead, now).is_ok());
+        // ...and now a (2 held) is deferred in favour of b (1 held).
+        assert_eq!(
+            s.reserve_elastic(a, 0, &dead, now).unwrap_err(),
+            ElasticDenial::Deferred,
+            "a is ahead of its share"
+        );
+        assert!(s.reserve_elastic(b, 0, &dead, now).is_ok());
+        assert_eq!((s.elastic_granted(a), s.elastic_granted(b)), (2, 2));
+        assert_eq!(s.free_slots(&dead), 0);
+        assert_eq!(
+            s.reserve_elastic(a, 0, &dead, now).unwrap_err(),
+            ElasticDenial::NoCapacity
+        );
     }
 
     #[test]
     fn complete_frees_promised_slots() {
         let mut s = sched(PlacementPolicy::Pack);
-        let a = s.register("a", Time::ZERO);
-        let b = s.register("b", Time::ZERO);
+        let a = reg(&mut s, "a");
+        let b = reg(&mut s, "b");
         let dead = vec![false; 3];
         s.place_job(a, 4, &dead, Time::ZERO).unwrap();
         let err = s.place_job(b, 4, &dead, Time::ZERO).unwrap_err();
@@ -449,9 +776,70 @@ mod tests {
     }
 
     #[test]
+    fn queued_lifecycle_admits_and_cancels() {
+        let mut s = sched(PlacementPolicy::Spread);
+        let a = reg(&mut s, "a");
+        let dead = vec![false; 3];
+        s.place_job(a, 6, &dead, Time::ZERO).unwrap();
+        let b = reg(&mut s, "b");
+        s.mark_queued(b, AdmissionDecision::Queue { predicted_wait: Duration::from_secs(30) });
+        assert_eq!(s.state(b), Some(JobState::Queued));
+        assert!(s.any_queued());
+        assert_eq!(s.queued_jobs(), vec![b]);
+        assert!(s.entry(b).unwrap().was_queued());
+        // Capacity frees; a queued job places like a pending one.
+        s.complete(a, Time(10)).unwrap();
+        let placed = s.place_job(b, 4, &dead, Time(11)).unwrap();
+        assert_eq!(placed.len(), 4);
+        assert_eq!(s.state(b), Some(JobState::Running));
+        // A queued job may also be cancelled outright.
+        let c = reg(&mut s, "c");
+        s.mark_queued(c, AdmissionDecision::Queue { predicted_wait: Duration::from_secs(1) });
+        s.cancel(c, Time(12)).unwrap();
+        assert_eq!(s.state(c), Some(JobState::Cancelled));
+        assert!(!s.any_queued());
+    }
+
+    #[test]
+    fn typed_rejection_lands_in_the_decision_trail() {
+        let mut s = sched(PlacementPolicy::Spread);
+        let a = reg(&mut s, "a");
+        s.reject(
+            a,
+            RejectReason::ExceedsCapacity {
+                resource: admission::Resource::Slots,
+                needed: 9.0,
+                capacity: 6.0,
+            },
+            Time(3),
+        );
+        assert_eq!(s.state(a), Some(JobState::Rejected));
+        let e = s.entry(a).unwrap();
+        assert_eq!(e.reject_reason().unwrap().tag(), "exceeds-capacity");
+        assert!(!e.was_queued());
+    }
+
+    #[test]
+    fn holders_report_ledger_slots_and_predicted_release() {
+        let mut s = sched(PlacementPolicy::Pack);
+        let a = s.register(
+            "a",
+            Time::ZERO,
+            JobMeta { run_for: Some(Duration::from_secs(60)), ..JobMeta::default() },
+        );
+        let dead = vec![false; 3];
+        s.place_job(a, 3, &dead, Time(5)).unwrap();
+        s.reserve_elastic(a, 0, &dead, Time(6)).unwrap();
+        let holders = s.holders();
+        assert_eq!(holders.len(), 1);
+        assert_eq!(holders[0].slots, 4, "elastic grants count in the ledger");
+        assert_eq!(holders[0].release_at, Some(Time(5) + Duration::from_secs(60)));
+    }
+
+    #[test]
     fn move_reservation_tracks_failover_overcommit() {
         let mut s = sched(PlacementPolicy::Pack);
-        let a = s.register("a", Time::ZERO);
+        let a = reg(&mut s, "a");
         let dead = vec![false; 3];
         s.place_job(a, 6, &dead, Time::ZERO).unwrap();
         // Worker 0 dies; both its instances move to worker 1.
@@ -466,7 +854,7 @@ mod tests {
     #[test]
     fn dead_workers_are_not_placement_targets() {
         let mut s = sched(PlacementPolicy::Spread);
-        let a = s.register("a", Time::ZERO);
+        let a = reg(&mut s, "a");
         let dead = vec![false, true, false];
         let placed = s.place_job(a, 4, &dead, Time::ZERO).unwrap();
         assert!(placed.iter().all(|w| *w != WorkerId(1)));

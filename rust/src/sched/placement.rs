@@ -14,6 +14,11 @@
 //!   touches (more worker-local channels, fewer network hops);
 //! * [`PlacementPolicy::LeastLoaded`] — onto the worker with the most
 //!   free slots, balancing aggregate load under staggered arrivals.
+//!
+//! Policies only pick *where* an instance lands; *whether* a job may
+//! take a slot at all is decided upstream — by predictive admission
+//! ([`super::admission`]) for initial placement and by the weighted
+//! fair-share arbiter ([`super::fairness`]) for elastic scale-ups.
 
 use std::fmt;
 

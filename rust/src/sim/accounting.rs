@@ -48,6 +48,13 @@ pub struct JobLedger {
     pub produced: u64,
     /// Failed-optimisation reports from this job's managers.
     pub unresolvable: u64,
+    /// Slots reclaimed from this job by a higher-priority job's
+    /// preemption.
+    pub slots_preempted: u64,
+    /// Slot-occupancy timeline: `(virtual time µs, reserved slots)`
+    /// sampled at every periodic scheduler tick while the job is queued
+    /// or running (capped at [`SLOT_SAMPLE_CAP`] samples).
+    pub slot_samples: Vec<(u64, u32)>,
 }
 
 impl JobLedger {
@@ -101,6 +108,13 @@ pub struct SimStats {
     pub jobs_completed: u64,
     pub jobs_cancelled: u64,
     pub jobs_rejected: u64,
+    /// Submissions parked by predictive admission (a bounded running
+    /// job was predicted to release the capacity).
+    pub jobs_queued: u64,
+    /// Slots reclaimed from best-effort jobs by priority preemption.
+    pub preemptions: u64,
+    /// Elastic reservations deferred by the weighted fair-share rule.
+    pub elastic_deferred: u64,
     /// One ledger per registered job, in [`JobId`] order.
     pub jobs: Vec<JobLedger>,
     /// Timestamped log of every applied countermeasure, crash, failover
@@ -110,6 +124,10 @@ pub struct SimStats {
 }
 
 pub(crate) const E2E_RESERVOIR: usize = 100_000;
+
+/// Upper bound on a job's slot-occupancy timeline (a 15 s tick cadence
+/// saturates this only after ~17 virtual hours).
+pub(crate) const SLOT_SAMPLE_CAP: usize = 4096;
 
 impl SimCluster {
     pub(crate) fn log(&mut self, now: Time, msg: String) {

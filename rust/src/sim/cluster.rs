@@ -37,7 +37,8 @@ use crate::graph::runtime::RuntimeGraph;
 use crate::qos::manager::{ManagerConfig, QosManager};
 use crate::qos::reporter::QosReporter;
 use crate::qos::setup::{build_qos_runtime, QosRuntime};
-use crate::sched::{JobState, JobSubmission, PlacementPolicy, Scheduler};
+use crate::sched::admission::PoolCapacity;
+use crate::sched::{AdmissionDecision, JobMeta, JobSpec, JobState, PlacementPolicy, Scheduler};
 use crate::util::rng::Rng;
 use crate::util::time::{Duration, Time};
 use anyhow::{bail, Result};
@@ -102,12 +103,16 @@ pub struct SimCluster {
     pub job: JobGraph,
     pub rg: RuntimeGraph,
     pub cfg: EngineConfig,
-    /// Job registry + slot ledger + placement policy.
+    /// Job registry + slot ledger + fairness arbiter + placement policy.
     pub(crate) sched: Scheduler,
+    /// Per-worker pool capacity along the admission axes (slots, CPU,
+    /// NIC); unbounded for the single-job compatibility constructors.
+    pub(crate) pool: PoolCapacity,
     /// Per-job QoS runtimes, indexed by `JobId`.
     pub(crate) jobs: Vec<JobQos>,
-    /// Submission payloads awaiting their `JobSubmit` event.
-    pub(crate) pending: Vec<Option<JobSubmission>>,
+    /// Submission payloads awaiting their `JobSubmit` event (or, for
+    /// queued jobs, their re-admission at a scheduler tick).
+    pub(crate) pending: Vec<Option<JobSpec>>,
     /// Per-job-vertex task specs, indexed by union `JobVertexId`
     /// (retained for runtime-spawned instances).
     pub(crate) job_specs: Vec<TaskSpec>,
@@ -219,7 +224,7 @@ impl SimCluster {
             .collect();
 
         let mut sched = Scheduler::preplaced(rg.num_workers);
-        let job_id = sched.register("job0", Time::ZERO);
+        let job_id = sched.register("job0", Time::ZERO, JobMeta::default());
         let mut usage = vec![0u32; rg.num_workers as usize];
         for v in &rg.vertices {
             usage[v.worker.index()] += 1;
@@ -248,6 +253,7 @@ impl SimCluster {
             rg,
             cfg,
             sched,
+            pool: PoolCapacity::unbounded(),
             jobs: vec![job_qos],
             pending: vec![None],
             job_specs,
@@ -289,7 +295,8 @@ impl SimCluster {
     /// Build an empty multi-tenant cluster: `num_workers` workers with
     /// `slots_per_worker` task slots each, and `policy` deciding where
     /// submitted jobs' instances land.  Jobs arrive dynamically via
-    /// [`SimCluster::submit_job_at`].
+    /// [`SimCluster::submit_job`]; a periodic scheduler tick re-admits
+    /// queued submissions and samples per-job slot occupancy.
     pub fn new_multi(
         num_workers: u32,
         slots_per_worker: u32,
@@ -312,11 +319,19 @@ impl SimCluster {
                 }
             })
             .collect();
+        let pool = PoolCapacity::of(slots_per_worker, &cfg.cluster);
+        let mut sched = Scheduler::new(num_workers, slots_per_worker, policy);
+        // Violated jobs request elastic slots at manager-tick cadence:
+        // contender status must span four of those ticks.
+        sched.set_fairness_horizon(Duration::from_micros(
+            cfg.measurement_interval.as_micros().saturating_mul(4),
+        ));
         let mut cluster = SimCluster {
             job: JobGraph::new(),
             rg,
             cfg,
-            sched: Scheduler::new(num_workers, slots_per_worker, policy),
+            sched,
+            pool,
             jobs: Vec::new(),
             pending: Vec::new(),
             job_specs: Vec::new(),
@@ -355,30 +370,35 @@ impl SimCluster {
         for w in 0..num_workers {
             cluster.queue.push(Time::ZERO + interval, Ev::CpuSample { worker: w });
         }
+        // The scheduler's own heartbeat: queued-submission re-admission
+        // and per-job slot-occupancy sampling.
+        cluster.queue.push(Time::ZERO + interval, Ev::SchedTick { periodic: true });
         Ok(cluster)
     }
 
-    /// Queue a job submission for `at` (virtual time).  Placement,
-    /// graph growth and QoS setup happen when the event fires; a job
-    /// the pool cannot hold is rejected there and logged.  Returns the
+    /// Queue a typed job submission for `at` (virtual time).  Admission
+    /// (predictive feasibility against the residual pool), placement,
+    /// graph growth and QoS setup happen when the event fires; the
+    /// typed [`AdmissionDecision`] trail is recorded in the scheduler's
+    /// registry ([`SimCluster::admission_log`]).  Returns the
     /// registered job id.
-    pub fn submit_job_at(&mut self, mut sub: JobSubmission, at: Duration) -> Result<JobId> {
-        if sub.task_specs.len() != sub.job.vertices.len() {
-            bail!("job {:?}: one TaskSpec per job vertex", sub.name);
+    pub fn submit_job(&mut self, mut spec: JobSpec, at: Duration) -> Result<JobId> {
+        if spec.task_specs.len() != spec.job.vertices.len() {
+            bail!("job {:?}: one TaskSpec per job vertex", spec.name);
         }
-        for jc in &sub.constraints {
-            jc.validate(&sub.job)?;
+        for jc in &spec.constraints {
+            jc.validate(&spec.job)?;
         }
-        for s in &sub.sources {
-            if s.target.index() >= sub.job.vertices.len() {
-                bail!("job {:?}: source targets unknown vertex {}", sub.name, s.target);
+        for s in &spec.sources {
+            if s.target.index() >= spec.job.vertices.len() {
+                bail!("job {:?}: source targets unknown vertex {}", spec.name, s.target);
             }
         }
-        if sub.name.is_empty() {
-            sub.name = format!("job{}", self.jobs.len());
+        if spec.name.is_empty() {
+            spec.name = format!("job{}", self.jobs.len());
         }
-        let id = self.sched.register(&sub.name, Time::ZERO + at);
-        let manager_cfg = sub.manager.unwrap_or(self.cfg.manager);
+        let id = self.sched.register(&spec.name, Time::ZERO + at, spec.meta());
+        let manager_cfg = spec.manager.unwrap_or(self.cfg.manager);
         self.jobs.push(JobQos {
             id,
             constraints: Vec::new(),
@@ -392,7 +412,7 @@ impl SimCluster {
             source_end: Time(u64::MAX),
             drain_streak: 0,
         });
-        self.pending.push(Some(sub));
+        self.pending.push(Some(spec));
         self.stats.jobs.push(JobLedger::default());
         self.queue.push(Time::ZERO + at, Ev::JobSubmit { job: id.0 });
         Ok(id)
@@ -523,6 +543,7 @@ impl SimCluster {
             Ev::JobSubmit { job } => self.on_job_submit(now, job as usize),
             Ev::JobWatch { job } => self.on_job_watch(now, job as usize),
             Ev::JobCancel { job } => self.on_job_cancel(now, job as usize),
+            Ev::SchedTick { periodic } => self.on_sched_tick(now, periodic),
         }
         Ok(())
     }
@@ -555,6 +576,16 @@ impl SimCluster {
     /// Lifecycle state of a job.
     pub fn job_state(&self, job: JobId) -> Option<JobState> {
         self.sched.state(job)
+    }
+
+    /// Typed admission decision trail of a job (e.g. Queue → Admit).
+    pub fn admission_log(&self, job: JobId) -> &[AdmissionDecision] {
+        self.sched.decisions(job)
+    }
+
+    /// Elastic slots a job currently holds under the fairness arbiter.
+    pub fn elastic_granted(&self, job: JobId) -> u64 {
+        self.sched.elastic_granted(job)
     }
 
     /// Per-job conservation ledger.

@@ -51,6 +51,13 @@ pub(crate) enum Ev {
     /// Cancel a running job: its tasks stop, in-flight items are
     /// accounted as lost in the job's ledger, its slots are freed.
     JobCancel { job: u32 },
+    /// Scheduler tick: re-run admission for queued submissions against
+    /// the current residual pool and (on periodic ticks) sample every
+    /// live job's slot occupancy into its ledger.  Periodic ticks
+    /// re-arm at the measurement interval; ad-hoc ticks are pushed by
+    /// capacity releases (job completion/cancellation) so a queued job
+    /// does not wait out the tick cadence.
+    SchedTick { periodic: bool },
     /// Fail-stop crash of a worker (injected by a
     /// [`crate::config::FailureSpec`]): its task threads, NIC state and
     /// buffered items are gone.

@@ -14,13 +14,16 @@
 //! is arbitrated by the scheduler's slot ledger: a scale-up draws from
 //! the free pool only, never from capacity promised to another job.
 
+use super::accounting::SLOT_SAMPLE_CAP;
 use super::cluster::{JobLedger, SimCluster};
 use super::engine::Ev;
 use super::flow::{Buffer, OutBufferState};
 use super::task::{Semantics, TaskState};
 use crate::graph::ids::{ChannelId, JobEdgeId, JobId, JobVertexId, VertexId, WorkerId};
 use crate::qos::setup::{build_qos_runtime_for, QosRuntime};
-use crate::sched::JobState;
+use crate::sched::{
+    admission, AdmissionDecision, ElasticDenial, JobSpec, JobState, QosClass, RejectReason,
+};
 use crate::util::time::{Duration, Time};
 use anyhow::Result;
 use std::collections::{BTreeMap, BTreeSet};
@@ -175,12 +178,25 @@ impl SimCluster {
         let victims = self.active_instances_on_for(w, j);
         let mut detached = 0u64;
         for &v in &victims {
+            // An elastically-granted instance returns its slot through
+            // the fairness arbiter too, or the job's granted count
+            // would stay inflated for the rest of its life and every
+            // later contest would wrongly defer it.
+            let group = self.rg.vertex(v).job_vertex;
+            let was_elastic = self
+                .scaled_instances
+                .get(&group)
+                .map_or(false, |instances| instances.contains(&v));
             let in_ch = self.rg.retire_instance(v);
             for cid in in_ch {
                 let (items, _, _) = self.out_bufs[cid.index()].take();
                 self.account_lost(id, items.len() as u64);
             }
-            self.sched.release_slot(id, w);
+            if was_elastic {
+                self.sched.release_elastic(id, w);
+            } else {
+                self.sched.release_slot(id, w);
+            }
             detached += 1;
         }
         self.stats.instances_detached += detached;
@@ -284,7 +300,7 @@ impl SimCluster {
             // rescale: compute the per-edge map once.
             let edge_size = self.edge_buffer_sizes();
             for _ in 0..delta {
-                if !self.spawn_instance(job, group, &edge_size) {
+                if !self.spawn_instance(now, job, group, &edge_size) {
                     break;
                 }
                 changed = true;
@@ -330,6 +346,7 @@ impl SimCluster {
     /// Spawn one instance of `group` (scale-up step).
     fn spawn_instance(
         &mut self,
+        now: Time,
         job: JobId,
         group: JobVertexId,
         edge_size: &BTreeMap<JobEdgeId, u32>,
@@ -358,12 +375,51 @@ impl SimCluster {
             }
         }
         // Slot arbitration: the new instance must fit in the *free* pool
-        // — capacity reserved by other jobs is off limits.  The spread
-        // policy seeds its rotation at the subtask index, reproducing the
+        // — capacity reserved by other jobs is off limits, and the
+        // weighted fair-share rule may defer a job running ahead of its
+        // share while another violated job lags.  The spread policy
+        // seeds its rotation at the subtask index, reproducing the
         // legacy single-job placement (instance k on worker k mod n,
-        // skipping crashed workers).
+        // skipping crashed workers).  An exhausted pool escalates to
+        // priority preemption: a higher-priority job reclaims one slot
+        // from a best-effort job before giving up.
         let idx = self.rg.members(group).len();
-        let worker = match self.sched.reserve_elastic(job, idx, &self.dead_workers) {
+        let reserved = match self.sched.reserve_elastic(job, idx, &self.dead_workers, now) {
+            Ok(w) => Some(w),
+            Err(ElasticDenial::NoCapacity) => {
+                // Preempt only for a grant the fairness rule would
+                // actually allow: a victim must never lose an instance
+                // just for the requester to be deferred anyway.
+                if self.jobs[job.index()].manager_cfg.enable_preemption
+                    && !self.sched.would_defer_elastic(job, now)
+                    && self.preempt_for(now, job)
+                {
+                    match self.sched.reserve_elastic(job, idx, &self.dead_workers, now) {
+                        Ok(w) => Some(w),
+                        Err(denial) => {
+                            // Releasing the victim's grant can retighten
+                            // the fairness bound in a corner case; keep
+                            // the deferral observable either way.
+                            if denial == ElasticDenial::Deferred {
+                                self.stats.elastic_deferred += 1;
+                                self.log(now, format!("scale {group} deferred (fair share)"));
+                            }
+                            None
+                        }
+                    }
+                } else {
+                    None
+                }
+            }
+            Err(denial) => {
+                if denial == ElasticDenial::Deferred {
+                    self.stats.elastic_deferred += 1;
+                    self.log(now, format!("scale {group} deferred (fair share)"));
+                }
+                None
+            }
+        };
+        let worker = match reserved {
             Some(w) => w,
             None => {
                 self.stats.scaling_rejected += 1;
@@ -391,7 +447,9 @@ impl SimCluster {
                 true
             }
             Err(_) => {
-                self.sched.release_slot(job, worker);
+                // The reservation was an elastic grant: return it with
+                // its fairness charge.
+                self.sched.release_elastic(job, worker);
                 self.stats.scaling_rejected += 1;
                 false
             }
@@ -434,6 +492,19 @@ impl SimCluster {
                 return false;
             }
         };
+        self.detach_for_scaledown(now, job, v, true);
+        self.stats.scale_downs += 1;
+        true
+    }
+
+    /// The loss-free instance-detach tail shared by elastic scale-down
+    /// and priority preemption: flush pending sender-side buffers on the
+    /// instance's input channels, detach it from the routing tables
+    /// (key-hash routing re-partitions onto the survivors), return its
+    /// slot to the pool — `elastic` slots also shrink the fairness
+    /// arbiter's grant count — and let the instance drain whatever is
+    /// already queued through its still-wired outputs.
+    fn detach_for_scaledown(&mut self, now: Time, job: JobId, v: VertexId, elastic: bool) {
         let in_ch: Vec<ChannelId> = self.rg.in_channels(v).to_vec();
         for cid in in_ch {
             if !self.out_bufs[cid.index()].is_empty() {
@@ -442,35 +513,241 @@ impl SimCluster {
             }
         }
         self.rg.retire_instance(v);
-        self.sched.release_slot(job, self.rg.worker(v));
+        let w = self.rg.worker(v);
+        if elastic {
+            self.sched.release_elastic(job, w);
+        } else {
+            self.sched.release_slot(job, w);
+        }
         // Drain whatever is already queued at the retiring instance.
         self.try_schedule(now, v);
-        self.stats.scale_downs += 1;
-        true
+    }
+
+    // ------------------------------------------------------------------
+    // Priority preemption (master side)
+    // ------------------------------------------------------------------
+
+    /// Reclaim one slot for `requester` from a best-effort job of
+    /// strictly lower priority, through the ordinary scale-down path
+    /// (flush, detach, drain — the victim loses capacity, never items).
+    /// Victims are tried lowest priority first (ties: lowest id);
+    /// latency-constrained jobs are never victims.  Returns whether a
+    /// slot was freed.
+    pub(crate) fn preempt_for(&mut self, now: Time, requester: JobId) -> bool {
+        let req_prio = match self.sched.entry(requester) {
+            Some(e) => e.priority,
+            None => return false,
+        };
+        let mut victims: Vec<(u8, u32)> = self
+            .sched
+            .entries()
+            .iter()
+            .filter(|e| {
+                e.id != requester
+                    && e.state == JobState::Running
+                    && e.class == QosClass::BestEffort
+                    && e.priority < req_prio
+            })
+            .map(|e| (e.priority, e.id.0))
+            .collect();
+        victims.sort();
+        for (_, vid) in victims {
+            let victim = JobId(vid);
+            let (group, v, elastic) = match self.pick_preemptable(victim) {
+                Some(p) => p,
+                None => continue,
+            };
+            if elastic {
+                if let Some(instances) = self.scaled_instances.get_mut(&group) {
+                    instances.retain(|&x| x != v);
+                    if instances.is_empty() {
+                        self.scaled_instances.remove(&group);
+                    }
+                }
+            }
+            self.detach_for_scaledown(now, victim, v, elastic);
+            self.stats.preemptions += 1;
+            self.stats.jobs[victim.index()].slots_preempted += 1;
+            self.log(
+                now,
+                format!("preempt {victim} {group}: slot reclaimed for {requester}"),
+            );
+            self.after_topology_change(victim.index(), "preemption");
+            return true;
+        }
+        false
+    }
+
+    /// A retirable instance of the victim, preferring elastically
+    /// scaled instances (their retirement is the mildest cut); falling
+    /// back to a base instance of the widest eligible group.  Eligible
+    /// groups are non-source, unpinned, stateless (Transform/Sink — the
+    /// same re-partitioning rules as scale-up), and keep at least one
+    /// member; eligible instances are live and unchained.
+    fn pick_preemptable(&self, victim: JobId) -> Option<(JobVertexId, VertexId, bool)> {
+        let eligible_group = |jv: &crate::graph::job::JobVertex| {
+            jv.job == victim
+                && !jv.is_source
+                && !jv.pin_unchainable
+                && matches!(
+                    self.job_specs[jv.id.index()].semantics,
+                    Semantics::Transform | Semantics::Sink
+                )
+                && self.rg.members(jv.id).len() >= 2
+        };
+        let retirable = |v: VertexId| {
+            self.tasks[v.index()].chain.is_none() && !self.dead_tasks[v.index()]
+        };
+        // Pass 1: a scaled instance of any eligible group, newest first
+        // (mirrors the scale-down picker).
+        for jv in self.job.vertices.iter().filter(|jv| eligible_group(jv)) {
+            if let Some(instances) = self.scaled_instances.get(&jv.id) {
+                if let Some(&v) = instances.iter().rev().find(|&&v| retirable(v)) {
+                    return Some((jv.id, v, true));
+                }
+            }
+        }
+        // Pass 2: a base instance, preferring the widest eligible group
+        // (ties: lowest group id) but falling back to narrower groups —
+        // the widest one may have no retirable instance (all chained)
+        // while a narrower one does.
+        let mut groups: Vec<&crate::graph::job::JobVertex> =
+            self.job.vertices.iter().filter(|jv| eligible_group(jv)).collect();
+        groups.sort_by_key(|jv| (std::cmp::Reverse(self.rg.members(jv.id).len()), jv.id.0));
+        for jv in groups {
+            if let Some(&v) = self.rg.members(jv.id).iter().rev().find(|&&v| retirable(v)) {
+                return Some((jv.id, v, false));
+            }
+        }
+        None
     }
 
     // ------------------------------------------------------------------
     // Job lifecycle (multi-job scheduler)
     // ------------------------------------------------------------------
 
-    /// Process a queued submission: place instances via the scheduler,
-    /// absorb the job's graphs into the union, grow the dense engine
-    /// state, build the job's QoS runtime and start its sources.
+    /// Process a pending submission: run predictive admission against
+    /// the residual pool and either admit (place, absorb, install QoS,
+    /// start sources), queue (a bounded running job will release the
+    /// capacity — a scheduler tick re-admits it), or reject with a
+    /// typed reason.
     pub(crate) fn on_job_submit(&mut self, now: Time, j: usize) {
-        let sub = match self.pending[j].take() {
+        let spec = match self.pending[j].take() {
             Some(s) => s,
             None => return,
         };
+        let id = JobId(j as u32);
+        match self.admission_verdict(id, now) {
+            AdmissionDecision::Admit { .. } => self.admit_job(now, j, spec),
+            decision @ AdmissionDecision::Queue { .. } => {
+                self.stats.jobs_queued += 1;
+                self.log(now, format!("job {id} ({}) queued: {decision}", spec.name));
+                self.sched.mark_queued(id, decision);
+                self.pending[j] = Some(spec);
+            }
+            AdmissionDecision::Reject { reason } => {
+                self.stats.jobs_rejected += 1;
+                self.log(now, format!("job {id} ({}) rejected: {reason}", spec.name));
+                self.sched.reject(id, reason, now);
+            }
+        }
+    }
+
+    /// Predictive admission (ROADMAP item): slots against the ledger,
+    /// CPU/NIC against the running jobs' profiled demand, queueing
+    /// behind bounded jobs' predicted releases.
+    fn admission_verdict(&self, id: JobId, now: Time) -> AdmissionDecision {
+        let demand = self
+            .sched
+            .entry(id)
+            .map(|e| e.demand)
+            .unwrap_or_default();
+        let live = self.dead_workers.iter().filter(|d| !**d).count() as u32;
+        admission::decide(
+            &demand,
+            live,
+            &self.pool,
+            self.sched.free_slots(&self.dead_workers),
+            &self.sched.holders(),
+            now,
+        )
+    }
+
+    /// Scheduler tick: re-run admission for queued submissions (in
+    /// submission order) and, on periodic ticks, sample every live
+    /// job's slot occupancy into its ledger.
+    pub(crate) fn on_sched_tick(&mut self, now: Time, periodic: bool) {
+        if periodic {
+            for j in 0..self.jobs.len() {
+                let id = JobId(j as u32);
+                if let Some(e) = self.sched.entry(id) {
+                    if matches!(e.state, JobState::Running | JobState::Queued)
+                        && self.stats.jobs[j].slot_samples.len() < SLOT_SAMPLE_CAP
+                    {
+                        let reserved = e.reserved();
+                        self.stats.jobs[j].slot_samples.push((now.0, reserved));
+                    }
+                }
+            }
+        }
+        for id in self.sched.queued_jobs() {
+            let j = id.index();
+            let spec = match self.pending[j].take() {
+                Some(s) => s,
+                None => continue,
+            };
+            match self.admission_verdict(id, now) {
+                AdmissionDecision::Admit { .. } => {
+                    self.log(now, format!("job {id} ({}) admitted from queue", spec.name));
+                    self.admit_job(now, j, spec);
+                }
+                AdmissionDecision::Queue { .. } => {
+                    // Still waiting; keep the original Queue decision.
+                    self.pending[j] = Some(spec);
+                }
+                AdmissionDecision::Reject { reason } => {
+                    // Capacity shrank for good (workers died): the
+                    // queued job can no longer ever run.
+                    self.stats.jobs_rejected += 1;
+                    self.log(
+                        now,
+                        format!("job {id} ({}) rejected from queue: {reason}", spec.name),
+                    );
+                    self.sched.reject(id, reason, now);
+                }
+            }
+        }
+        if periodic {
+            self.queue
+                .push(now + self.cfg.measurement_interval, Ev::SchedTick { periodic: true });
+        }
+    }
+
+    /// Enact an admitted submission: place instances via the scheduler,
+    /// absorb the job's graphs into the union, grow the dense engine
+    /// state, build the job's QoS runtime and start its sources.
+    fn admit_job(&mut self, now: Time, j: usize, sub: JobSpec) {
         let id = JobId(j as u32);
         let demand: u32 = sub.job.vertices.iter().map(|v| v.parallelism).sum();
         let assigned = match self.sched.place_job(id, demand, &self.dead_workers, now) {
             Ok(a) => a,
             Err(e) => {
+                // Admission predicted a fit but the ledger refused (a
+                // worker died between decision and enactment).
+                let free = self.sched.free_slots(&self.dead_workers);
+                self.sched.record_decision(
+                    id,
+                    AdmissionDecision::Reject {
+                        reason: RejectReason::PlacementFailed { needed: demand, free },
+                    },
+                );
                 self.stats.jobs_rejected += 1;
                 self.log(now, format!("job {id} ({}) rejected: {e}", sub.name));
                 return;
             }
         };
+        self.sched
+            .record_decision(id, AdmissionDecision::Admit { placement: assigned.clone() });
         let remap = self.job.absorb(&sub.job, id);
         // Placement lookup in expansion order (one worker per instance).
         let mut pmap: BTreeMap<(u32, u32), WorkerId> = BTreeMap::new();
@@ -613,6 +890,12 @@ impl SimCluster {
             ledger.at_sinks, ledger.items_ingested, ledger.accounted_lost
         );
         self.log(now, summary);
+        // The freed capacity may unblock a queued submission: drain the
+        // queue now instead of waiting out the periodic tick.
+        if self.sched.any_queued() {
+            self.queue
+                .push(now + self.cfg.cluster.control_delay, Ev::SchedTick { periodic: false });
+        }
     }
 
     /// Cancel a running job: stop its sources, kill its task threads,
@@ -621,13 +904,17 @@ impl SimCluster {
     /// its slots, and tear down its QoS runtime.
     pub(crate) fn on_job_cancel(&mut self, now: Time, j: usize) {
         let id = JobId(j as u32);
-        if self.sched.state(id) == Some(JobState::Pending) {
-            // Cancelled before its submission event fired: drop the
-            // queued payload so the later `JobSubmit` is a no-op.
+        if matches!(
+            self.sched.state(id),
+            Some(JobState::Pending) | Some(JobState::Queued)
+        ) {
+            // Cancelled before its submission event fired (or while
+            // waiting in the admission queue): drop the pending payload
+            // so no later JobSubmit/SchedTick ever places it.
             self.pending[j] = None;
             let _ = self.sched.cancel(id, now);
             self.stats.jobs_cancelled += 1;
-            self.log(now, format!("job {id} cancelled before submission"));
+            self.log(now, format!("job {id} cancelled before admission"));
             return;
         }
         if self.sched.state(id) != Some(JobState::Running) {
@@ -700,6 +987,10 @@ impl SimCluster {
         self.jobs[j].detector.track(Vec::new(), now);
         self.stats.jobs_cancelled += 1;
         self.log(now, format!("job {id} cancelled: {lost} in-flight items lost"));
+        if self.sched.any_queued() {
+            self.queue
+                .push(now + self.cfg.cluster.control_delay, Ev::SchedTick { periodic: false });
+        }
     }
 
     // ------------------------------------------------------------------

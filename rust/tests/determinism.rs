@@ -13,7 +13,7 @@
 
 use nephele::baseline::hadoop::hadoop_online_job;
 use nephele::config::EngineConfig;
-use nephele::experiments::multi::run_multi;
+use nephele::experiments::multi::{run_admission_phase, run_multi, run_preemption_phase};
 use nephele::pipeline::failover::{failover_job, FailoverSpec};
 use nephele::pipeline::multi::MultiSpec;
 use nephele::pipeline::scale::ScaleSpec;
@@ -171,6 +171,34 @@ fn multi_scenario_replays_byte_identically_for_both_policies() {
     assert_ne!(
         by_policy[0], by_policy[1],
         "spread and pack must place (and therefore behave) differently"
+    );
+}
+
+/// The resource-governance phases of `nephele sim-multi`: the
+/// oversubscription (queue → admit, typed rejection) and preemption
+/// scenarios must replay byte-identically for a seed — the scheduler
+/// tick, the admission decisions and the preemption path are all on
+/// the deterministic event timeline.
+#[test]
+fn admission_and_preemption_phases_replay_byte_identically() {
+    let cfg = |seed| EngineConfig { seed, ..EngineConfig::default() };
+    for policy in [PlacementPolicy::Spread, PlacementPolicy::Pack] {
+        let a = run_admission_phase(cfg(42), policy).unwrap().fingerprint;
+        let b = run_admission_phase(cfg(42), policy).unwrap().fingerprint;
+        assert_eq!(a, b, "admission phase must replay ({policy})");
+        assert!(a.contains("queued"), "the run must exercise the queue:\n{a}");
+        assert!(
+            a.contains("admitted from queue"),
+            "the queued job must be admitted:\n{a}"
+        );
+        assert!(a.contains("exceeds-capacity"), "typed rejection in the log:\n{a}");
+    }
+    let a = run_preemption_phase(cfg(42), 1.1).unwrap().fingerprint;
+    let b = run_preemption_phase(cfg(42), 1.1).unwrap().fingerprint;
+    assert_eq!(a, b, "preemption phase must replay");
+    assert!(
+        a.contains("slot reclaimed"),
+        "the run must exercise preemption:\n{a}"
     );
 }
 

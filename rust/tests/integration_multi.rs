@@ -1,33 +1,32 @@
 //! Multi-job scheduler integration: the `nephele sim-multi` gates at
 //! test size (latency within tolerance, throughput preserved, per-job
-//! conservation, completion), plus the job lifecycle — rejection on an
-//! over-committed pool, cancellation with exact loss accounting, slot
-//! release on completion, and elastic-scaling arbitration that cannot
-//! take capacity promised to another job.
+//! conservation, completion), plus the typed job lifecycle — predictive
+//! admission (queue on a predicted release, typed rejection reasons),
+//! cancellation with exact loss accounting, slot release on completion,
+//! elastic-scaling arbitration that cannot take capacity promised to
+//! another job, and priority preemption of a best-effort victim.
 
 use nephele::config::EngineConfig;
-use nephele::experiments::multi::{run_multi, verify_report};
+use nephele::experiments::multi::{
+    run_admission_phase, run_fairness_phase, run_preemption_phase, run_multi, verify_report,
+};
 use nephele::pipeline::multi::MultiSpec;
 use nephele::pipeline::surge::{surge_job, SurgeSpec};
-use nephele::sched::{JobState, JobSubmission, PlacementPolicy};
+use nephele::sched::{AdmissionDecision, JobSpec, JobState, PlacementPolicy};
 use nephele::sim::cluster::SimCluster;
 use nephele::util::time::Duration;
 
-/// A small deterministic 3-stage submission derived from the surge
-/// pipeline (no surge wave), with `run_for` bounding its sources.
-fn small_submission(name: &str, run_for: Option<u64>) -> JobSubmission {
+/// A small deterministic 3-stage spec derived from the surge pipeline
+/// (no surge wave), with `run_for` bounding its sources.
+fn small_submission(name: &str, run_for: Option<u64>) -> JobSpec {
     let mut spec = SurgeSpec::default();
     spec.surge_streams = 0;
     let sj = surge_job(spec).unwrap();
-    JobSubmission {
-        name: name.to_string(),
-        job: sj.job,
-        constraints: sj.constraints,
-        task_specs: sj.task_specs,
-        sources: sj.sources,
-        run_for: run_for.map(Duration::from_secs),
-        manager: None,
+    let mut js = JobSpec::new(name, sj.job, sj.constraints, sj.task_specs, sj.sources);
+    if let Some(secs) = run_for {
+        js = js.run_for(Duration::from_secs(secs));
     }
+    js
 }
 
 #[test]
@@ -65,7 +64,7 @@ fn jobs_complete_and_release_their_slots() {
     let free0 = cluster.scheduler().free_slots(&dead);
     assert_eq!(free0, 16);
     let id = cluster
-        .submit_job_at(small_submission("short", Some(60)), Duration::ZERO)
+        .submit_job(small_submission("short", Some(60)), Duration::ZERO)
         .unwrap();
     cluster.run(Duration::from_secs(30), None).unwrap();
     assert_eq!(cluster.job_state(id), Some(JobState::Running));
@@ -89,7 +88,7 @@ fn cancellation_accounts_in_flight_items_and_frees_slots() {
         SimCluster::new_multi(2, 8, PlacementPolicy::Spread, EngineConfig::default().unoptimized())
             .unwrap();
     let id = cluster
-        .submit_job_at(small_submission("doomed", None), Duration::ZERO)
+        .submit_job(small_submission("doomed", None), Duration::ZERO)
         .unwrap();
     cluster.cancel_job_at(id, Duration::from_secs(45));
     // Run past the cancel plus a drain window for wire-borne buffers.
@@ -116,7 +115,7 @@ fn cancel_before_submission_drops_the_pending_job() {
         SimCluster::new_multi(2, 8, PlacementPolicy::Spread, EngineConfig::default().unoptimized())
             .unwrap();
     let id = cluster
-        .submit_job_at(small_submission("never", None), Duration::from_secs(10))
+        .submit_job(small_submission("never", None), Duration::from_secs(10))
         .unwrap();
     cluster.cancel_job_at(id, Duration::from_secs(5));
     cluster.run(Duration::from_secs(30), None).unwrap();
@@ -135,7 +134,7 @@ fn oversized_jobs_are_rejected_without_leaking_state() {
         SimCluster::new_multi(2, 2, PlacementPolicy::Pack, EngineConfig::default().unoptimized())
             .unwrap();
     let id = cluster
-        .submit_job_at(small_submission("too-big", Some(30)), Duration::ZERO)
+        .submit_job(small_submission("too-big", Some(30)), Duration::ZERO)
         .unwrap();
     cluster.run(Duration::from_secs(60), None).unwrap();
     assert_eq!(cluster.job_state(id), Some(JobState::Rejected));
@@ -169,7 +168,7 @@ fn elastic_scaling_cannot_take_capacity_promised_to_another_job() {
         surge_job(s).unwrap().vertices.transcoder
     };
     let a = cluster
-        .submit_job_at(small_submission("elastic", None), Duration::ZERO)
+        .submit_job(small_submission("elastic", None), Duration::ZERO)
         .unwrap();
     let b = {
         let mut s = SurgeSpec::default();
@@ -180,16 +179,8 @@ fn elastic_scaling_cannot_take_capacity_promised_to_another_job() {
         s.sink_parallelism = 1;
         let sj = surge_job(s).unwrap();
         cluster
-            .submit_job_at(
-                JobSubmission {
-                    name: "neighbour".into(),
-                    job: sj.job,
-                    constraints: sj.constraints,
-                    task_specs: sj.task_specs,
-                    sources: sj.sources,
-                    run_for: None,
-                    manager: None,
-                },
+            .submit_job(
+                JobSpec::new("neighbour", sj.job, sj.constraints, sj.task_specs, sj.sources),
                 Duration::ZERO,
             )
             .unwrap()
@@ -224,4 +215,173 @@ fn elastic_scaling_cannot_take_capacity_promised_to_another_job() {
     let t3 = t2 + Duration::from_secs(20);
     assert!(cluster.apply_scaling(t3, transcoder, -1, t3));
     assert_eq!(cluster.scheduler().free_slots(&dead), 1);
+}
+
+#[test]
+fn oversubscription_queues_then_admits_on_capacity_release() {
+    // 2x4 = 8 slots.  A bounded 6-slot holder runs; a second 6-slot job
+    // oversubscribes the pool but fits once the holder ends: predictive
+    // admission must queue it (typed decision, predicted wait), then a
+    // scheduler tick admits it when the holder completes.
+    let mut cluster =
+        SimCluster::new_multi(2, 4, PlacementPolicy::Spread, EngineConfig::default().unoptimized())
+            .unwrap();
+    let a = cluster
+        .submit_job(small_submission("holder", Some(40)), Duration::ZERO)
+        .unwrap();
+    let b = cluster
+        .submit_job(small_submission("burst", Some(40)), Duration::from_secs(5))
+        .unwrap();
+    cluster.run(Duration::from_secs(20), None).unwrap();
+    assert_eq!(cluster.job_state(a), Some(JobState::Running));
+    assert_eq!(cluster.job_state(b), Some(JobState::Queued));
+    assert_eq!(cluster.stats.jobs_queued, 1);
+    match cluster.admission_log(b) {
+        [AdmissionDecision::Queue { predicted_wait }] => {
+            // Holder ends at 40 s + drain slack, seen from t=5.
+            assert_eq!(predicted_wait.as_micros(), 45_000_000, "predicted wait");
+        }
+        other => panic!("expected a single Queue decision, got {other:?}"),
+    }
+    assert_eq!(cluster.job_ledger(b).items_ingested, 0, "queued jobs do not run");
+    // The holder completes (~46 s); the capacity release admits the
+    // burst, which runs its own bounded life and completes.
+    cluster.run(Duration::from_secs(150), None).unwrap();
+    assert_eq!(cluster.job_state(a), Some(JobState::Completed));
+    assert_eq!(cluster.job_state(b), Some(JobState::Completed));
+    assert!(cluster.scheduler().entry(b).unwrap().was_queued());
+    assert_eq!(cluster.admission_log(b).len(), 2, "Queue then Admit");
+    assert!(matches!(
+        cluster.admission_log(b)[1],
+        AdmissionDecision::Admit { .. }
+    ));
+    cluster.job_conservation(a).unwrap();
+    cluster.job_conservation(b).unwrap();
+    let l = cluster.job_ledger(b);
+    assert!(l.items_ingested > 0 && l.at_sinks == l.items_ingested);
+    // The occupancy timeline saw the job both queued (0 slots) and
+    // running (6 slots).
+    let samples = &cluster.job_ledger(b).slot_samples;
+    assert!(samples.iter().any(|&(_, s)| s == 0), "queued sample: {samples:?}");
+    assert!(samples.iter().any(|&(_, s)| s == 6), "running sample: {samples:?}");
+}
+
+#[test]
+fn capacity_held_by_an_unbounded_job_is_a_typed_rejection() {
+    // The holder never ends (run_for: None): a job that needs its slots
+    // can never run, and admission must say exactly that.
+    let mut cluster =
+        SimCluster::new_multi(2, 4, PlacementPolicy::Spread, EngineConfig::default().unoptimized())
+            .unwrap();
+    let a = cluster
+        .submit_job(small_submission("forever", None), Duration::ZERO)
+        .unwrap();
+    let b = cluster
+        .submit_job(small_submission("starved", Some(30)), Duration::from_secs(5))
+        .unwrap();
+    cluster.run(Duration::from_secs(20), None).unwrap();
+    assert_eq!(cluster.job_state(a), Some(JobState::Running));
+    assert_eq!(cluster.job_state(b), Some(JobState::Rejected));
+    let reason = cluster
+        .scheduler()
+        .entry(b)
+        .unwrap()
+        .reject_reason()
+        .expect("typed reason")
+        .tag();
+    assert_eq!(reason, "held-by-unbounded");
+    assert_eq!(cluster.stats.jobs_queued, 0);
+    assert_eq!(cluster.stats.jobs_rejected, 1);
+}
+
+#[test]
+fn priority_preemption_scales_the_best_effort_victim_down() {
+    use nephele::pipeline::multi::{highpri_submission, victim_submission};
+    // 2x5 = 10 slots, filled exactly: best-effort victim (6) +
+    // priority-2 latency job (4).  The latency job's scale-up finds no
+    // free slot and must reclaim one from the victim via the ordinary
+    // scale-down path — losing capacity, never items.
+    let mut cluster =
+        SimCluster::new_multi(2, 5, PlacementPolicy::Spread, EngineConfig::default().unoptimized())
+            .unwrap();
+    let victim = cluster
+        .submit_job(victim_submission(Duration::from_secs(100)).unwrap(), Duration::ZERO)
+        .unwrap();
+    let latency = cluster
+        .submit_job(highpri_submission(Duration::from_secs(100)).unwrap(), Duration::ZERO)
+        .unwrap();
+    cluster.run(Duration::from_secs(30), None).unwrap();
+    let dead = vec![false; 2];
+    assert_eq!(cluster.scheduler().free_slots(&dead), 0, "pool exactly full");
+    let g_latency = cluster.job.vertex_of_job(latency, "Transcoder").unwrap().id;
+    let g_victim = cluster.job.vertex_of_job(victim, "Transcoder").unwrap().id;
+    assert_eq!(cluster.parallelism_of(g_victim), 2);
+
+    let t = cluster.now();
+    assert!(cluster.apply_scaling(t, g_latency, 1, t), "preemption frees the slot");
+    assert_eq!(cluster.stats.preemptions, 1);
+    assert_eq!(cluster.parallelism_of(g_victim), 1, "victim scaled down");
+    assert_eq!(cluster.parallelism_of(g_latency), 2, "requester scaled up");
+    assert_eq!(cluster.job_ledger(victim).slots_preempted, 1);
+    assert_eq!(cluster.scheduler().entry(victim).unwrap().reserved(), 5);
+    assert_eq!(cluster.scheduler().entry(latency).unwrap().reserved(), 5);
+    assert_eq!(cluster.scheduler().free_slots(&dead), 0);
+    cluster.routing_consistent().unwrap();
+
+    // Both jobs finish their bounded runs; the victim's ledger still
+    // balances (preemption cost capacity, not items).
+    cluster.run(Duration::from_secs(130), None).unwrap();
+    let t = cluster.now();
+    cluster.stop_sources_at(t);
+    cluster.run(Duration::from_secs(400), None).unwrap();
+    assert_eq!(cluster.job_state(victim), Some(JobState::Completed));
+    assert_eq!(cluster.job_state(latency), Some(JobState::Completed));
+    cluster.job_conservation(victim).unwrap();
+    cluster.job_conservation(latency).unwrap();
+}
+
+#[test]
+fn latency_constrained_jobs_are_never_preemption_victims() {
+    // Same full pool, but the low-priority job is latency-constrained:
+    // the scale-up must fail instead of preempting it.
+    let mut cluster =
+        SimCluster::new_multi(2, 5, PlacementPolicy::Spread, EngineConfig::default().unoptimized())
+            .unwrap();
+    let protected = cluster
+        .submit_job(
+            {
+                let mut s = SurgeSpec::default();
+                s.surge_streams = 0;
+                s.fps = 25.0;
+                let sj = surge_job(s).unwrap();
+                JobSpec::new("protected", sj.job, sj.constraints, sj.task_specs, sj.sources)
+            },
+            Duration::ZERO,
+        )
+        .unwrap();
+    let latency = cluster
+        .submit_job(
+            nephele::pipeline::multi::highpri_submission(Duration::from_secs(100)).unwrap(),
+            Duration::ZERO,
+        )
+        .unwrap();
+    cluster.run(Duration::from_secs(30), None).unwrap();
+    let g_latency = cluster.job.vertex_of_job(latency, "Transcoder").unwrap().id;
+    let g_protected = cluster.job.vertex_of_job(protected, "Transcoder").unwrap().id;
+    let t = cluster.now();
+    let rejected_before = cluster.stats.scaling_rejected;
+    assert!(!cluster.apply_scaling(t, g_latency, 1, t), "no best-effort victim exists");
+    assert_eq!(cluster.stats.preemptions, 0);
+    assert_eq!(cluster.stats.scaling_rejected, rejected_before + 1);
+    assert_eq!(cluster.parallelism_of(g_protected), 2, "protected job untouched");
+}
+
+#[test]
+fn governance_phases_hold_their_gates() {
+    // The `nephele sim-multi` phase runners enforce their own gates and
+    // bail on any violation: running them is the assertion.
+    let cfg = EngineConfig::default();
+    run_admission_phase(cfg, PlacementPolicy::Spread).expect("admission phase");
+    run_fairness_phase(cfg).expect("fairness phase");
+    run_preemption_phase(cfg, 1.1).expect("preemption phase");
 }

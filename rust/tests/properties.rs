@@ -269,7 +269,7 @@ fn item_conservation_holds_under_crashes_and_recovery() {
 /// `ingested + produced == at_sinks + in_flight + lost + absorbed` —
 /// and the jobs' ledgers must sum to the cluster-wide counters.
 fn per_job_conservation_two_jobs(g: &mut Gen) -> PropResult {
-    use nephele::sched::{JobSubmission, PlacementPolicy};
+    use nephele::sched::{JobSpec, PlacementPolicy};
 
     let workers = g.u32(2..=4);
     let mut cfg = EngineConfig {
@@ -301,16 +301,15 @@ fn per_job_conservation_two_jobs(g: &mut Gen) -> PropResult {
         }
         let submit_at = Duration::from_secs(g.u64(0..=10));
         let id = cluster
-            .submit_job_at(
-                JobSubmission {
-                    name: format!("rand-{j}"),
-                    job: rj.job,
-                    constraints: vec![rj.constraint],
-                    task_specs: rj.specs,
-                    sources: rj.sources,
-                    run_for: Some(Duration::from_secs(g.u64(20..=45))),
-                    manager: None,
-                },
+            .submit_job(
+                JobSpec::new(
+                    format!("rand-{j}"),
+                    rj.job,
+                    vec![rj.constraint],
+                    rj.specs,
+                    rj.sources,
+                )
+                .run_for(Duration::from_secs(g.u64(20..=45))),
                 submit_at,
             )
             .map_err(|e| format!("submission failed: {e}"))?;
@@ -355,6 +354,86 @@ fn per_job_conservation_two_jobs(g: &mut Gen) -> PropResult {
 #[test]
 fn per_job_conservation_holds_for_two_concurrent_jobs_with_crashes() {
     check(10, per_job_conservation_two_jobs);
+}
+
+/// Weighted fair sharing of contested elastic slots: two running jobs
+/// with random weights fire interleaved (randomly ordered) scale-up
+/// requests until the pool is exhausted.  The deficit rule must (a)
+/// consume the whole contested pool — the minimum-normalised job is
+/// never deferred, so free capacity cannot strand — and (b) give every
+/// job a deficit-proportional share: `granted_i ≥ w_i·F/W − 2` slots of
+/// the F contested (no starvation, the slack from at most one grant of
+/// head start per contender plus integer rounding).
+fn weighted_share_is_deficit_proportional(g: &mut Gen) -> PropResult {
+    use nephele::sched::{ElasticDenial, JobMeta, PlacementPolicy, Scheduler};
+    use nephele::util::time::Time;
+
+    let workers = g.u32(2..=4);
+    let spw = g.u32(2..=6);
+    let weights = [g.u32(1..=4), g.u32(1..=4)];
+    let mut s = Scheduler::new(workers, spw, PlacementPolicy::LeastLoaded);
+    let jobs = [
+        s.register("a", Time::ZERO, JobMeta { weight: weights[0], ..JobMeta::default() }),
+        s.register("b", Time::ZERO, JobMeta { weight: weights[1], ..JobMeta::default() }),
+    ];
+    let dead = vec![false; workers as usize];
+    // Zero-demand placement: both jobs Running, the whole pool free and
+    // contested.
+    for &j in &jobs {
+        s.place_job(j, 0, &dead, Time::ZERO)
+            .map_err(|e| format!("placement: {e}"))?;
+    }
+    let pool = (workers * spw) as u64;
+    let mut granted = [0u64; 2];
+    let mut now = Time(1_000_000);
+    for _round in 0..10_000 {
+        let order = if g.bool() { [0, 1] } else { [1, 0] };
+        let mut any = false;
+        let mut capacity_left = true;
+        for &i in &order {
+            match s.reserve_elastic(jobs[i], 0, &dead, now) {
+                Ok(_) => {
+                    granted[i] += 1;
+                    any = true;
+                }
+                Err(ElasticDenial::NoCapacity) => capacity_left = false,
+                Err(ElasticDenial::Deferred) => {}
+                Err(e) => return Err(format!("unexpected denial {e:?}")),
+            }
+        }
+        now = now + Duration::from_secs(1);
+        if !any {
+            // No grant in a full round: with capacity left this would
+            // be a fairness deadlock (both deferred), which the rule
+            // makes impossible.
+            prop_assert(!capacity_left, "both contenders deferred with free capacity")?;
+            break;
+        }
+    }
+    let total: u64 = granted.iter().sum();
+    prop_assert_eq(total, pool, "contested pool fully consumed")?;
+    prop_assert_eq(
+        granted[0] + granted[1],
+        s.elastic_granted(jobs[0]) + s.elastic_granted(jobs[1]),
+        "arbiter ledger matches the grants",
+    )?;
+    let w_total = (weights[0] + weights[1]) as u64;
+    for i in 0..2 {
+        let w = weights[i] as u64;
+        // granted_i ≥ w_i·F/W − 2, in integer math: (granted_i + 2)·W ≥ w_i·F.
+        prop_assert(
+            (granted[i] + 2) * w_total >= w * pool,
+            format!(
+                "starved: weights {weights:?}, pool {pool}, granted {granted:?} (job {i})"
+            ),
+        )?;
+    }
+    Ok(())
+}
+
+#[test]
+fn weighted_elastic_sharing_never_starves_a_contender() {
+    check(60, weighted_share_is_deficit_proportional);
 }
 
 // ---------------------------------------------------------------------
