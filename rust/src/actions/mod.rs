@@ -53,6 +53,21 @@ pub enum Action {
         /// of the group (first-wins, mirroring §3.5.1 buffer arbitration).
         based_on: Time,
     },
+    /// Move one task instance off a saturated worker onto a survivor
+    /// (governance-loop migration tier; sits before scaling and
+    /// preemption in the escalation).  Applied by the master: it flushes
+    /// the instance's pending buffers, reassigns it in the runtime
+    /// graph, moves the slot reservation and rebuilds the job's QoS
+    /// setup.  `from` pins the placement the decision was based on: if
+    /// the instance moved (or either worker died) in between, the
+    /// action is stale and dropped.
+    MigrateInstance {
+        job: JobId,
+        /// The runtime instance to move.
+        vertex: VertexId,
+        from: WorkerId,
+        to: WorkerId,
+    },
     /// All countermeasure preconditions are exhausted but the constraint
     /// is still violated: notify the master, who notifies the user "who
     /// has to either change the job or revise the constraints" (§3.5).

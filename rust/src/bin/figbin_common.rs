@@ -218,13 +218,13 @@ pub fn live_args(argv: &[String]) -> Result<nephele::live::LiveConfig> {
 
 /// Parse `nephele sim-multi`'s arguments (`argv` holds only the flags):
 /// `--quick --seed N --policy spread|pack|least-loaded --tolerance F
-/// --phase base|admission|fairness|preempt|all --quiet`.
+/// --phase base|admission|fairness|preempt|migrate|all --quiet`.
 /// Returns `(spec, cfg, policies, tolerance, verbose, phases)`.
 /// Without `--policy`, both standard policies (spread, pack) are run
 /// and verified; `--policy` narrows the set to one (useful for
 /// exploring `least-loaded`).  Without `--phase`, every phase runs —
 /// the base contention scenario plus the admission/fairness/preemption
-/// governance phases.
+/// /migration governance phases.
 pub fn multi_args(
     argv: &[String],
 ) -> Result<(
@@ -272,7 +272,8 @@ pub fn multi_args(
                 phases =
                     Some(nephele::experiments::multi::Phase::parse(value).ok_or_else(|| {
                         anyhow::anyhow!(
-                            "unknown phase {value:?} (base|admission|fairness|preempt|all)"
+                            "unknown phase {value:?} \
+                             (base|admission|fairness|preempt|migrate|all)"
                         )
                     })?);
                 i += 2;
@@ -284,7 +285,8 @@ pub fn multi_args(
             "--help" | "-h" => {
                 println!(
                     "usage: [--quick] [--seed N] [--policy spread|pack|least-loaded] \
-                     [--tolerance F] [--phase base|admission|fairness|preempt|all] [--quiet]"
+                     [--tolerance F] [--phase base|admission|fairness|preempt|migrate|all] \
+                     [--quiet]"
                 );
                 std::process::exit(0);
             }

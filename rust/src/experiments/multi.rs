@@ -17,7 +17,12 @@
 //!   elastic slots (4:2 for weights 2:1 over 6 contested slots);
 //! * **preemption** ([`run_preemption_phase`]) — a latency-critical job
 //!   reclaims a slot from a best-effort job, meets its constraint
-//!   within tolerance, and the victim's ledger still balances.
+//!   within tolerance, and the victim's ledger still balances;
+//! * **migrate** ([`run_migration_phase`]) — a best-effort NIC hog
+//!   saturates the link of the worker it shares with a latency job's
+//!   Transcoder; the governance loop's migration tier must clear the
+//!   saturation and recover the latency constraint *without* spawning
+//!   a single new instance (zero scale-ups, zero preemptions).
 //!
 //! Every phase re-runs under the same seed in the CLI driver and must
 //! reproduce a byte-identical fingerprint.
@@ -26,7 +31,8 @@ use crate::config::EngineConfig;
 use crate::graph::ids::{JobId, JobVertexId};
 use crate::pipeline::multi::{
     contender_submission, highpri_submission, holder_submission, latency_submission,
-    oversized_submission, throughput_submission, victim_submission, MultiSpec,
+    nic_noise_submission, nic_victim_submission, oversized_submission, throughput_submission,
+    victim_submission, MultiSpec,
 };
 use crate::sched::{AdmissionDecision, JobState, PlacementPolicy};
 use crate::sim::cluster::{SimCluster, SimStats};
@@ -130,7 +136,7 @@ pub fn multi_fingerprint(stats: &SimStats) -> String {
          dropped={} unresolvable={} buffers={} chains={} ups={} downs={} rejected={} \
          rebuilds={} lost={} replayed={} crashed={} failovers={} reassigned={} \
          detached={} submitted={} completed={} cancelled={} jrejected={} queued={} \
-         preempted={} deferred={} events={}\n",
+         preempted={} deferred={} migrations={} refreshes={} events={}\n",
         stats.items_ingested,
         stats.items_delivered,
         stats.e2e_count,
@@ -158,6 +164,8 @@ pub fn multi_fingerprint(stats: &SimStats) -> String {
         stats.jobs_queued,
         stats.preemptions,
         stats.elastic_deferred,
+        stats.migrations,
+        stats.admission_refreshes,
         stats.events_processed,
     );
     for (i, l) in stats.jobs.iter().enumerate() {
@@ -363,10 +371,12 @@ pub enum Phase {
     Admission,
     Fairness,
     Preempt,
+    Migrate,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 4] = [Phase::Base, Phase::Admission, Phase::Fairness, Phase::Preempt];
+    pub const ALL: [Phase; 5] =
+        [Phase::Base, Phase::Admission, Phase::Fairness, Phase::Preempt, Phase::Migrate];
 
     pub fn name(&self) -> &'static str {
         match self {
@@ -374,6 +384,7 @@ impl Phase {
             Phase::Admission => "admission",
             Phase::Fairness => "fairness",
             Phase::Preempt => "preempt",
+            Phase::Migrate => "migrate",
         }
     }
 
@@ -384,6 +395,7 @@ impl Phase {
             "admission" => Some(vec![Phase::Admission]),
             "fairness" => Some(vec![Phase::Fairness]),
             "preempt" | "preemption" => Some(vec![Phase::Preempt]),
+            "migrate" | "migration" => Some(vec![Phase::Migrate]),
             "all" => Some(Phase::ALL.to_vec()),
             _ => None,
         }
@@ -709,6 +721,136 @@ pub fn run_preemption_phase(cfg: EngineConfig, tolerance: f64) -> Result<PhaseRe
     ];
     Ok(PhaseReport {
         name: "preempt",
+        fingerprint: multi_fingerprint(&cluster.stats),
+        lines,
+    })
+}
+
+/// **Migration phase.**  On a 3-worker pool with throttled 2 MB/s
+/// links, Spread placement co-locates a latency job's Transcoder with a
+/// best-effort NIC hog whose 3.3 MB/s egress saturates the shared
+/// worker's link — backlog (and the latency job's e2e latency) grows
+/// without bound.  Neither job's own manager can fix this: the hog is
+/// monitoring-only and the latency job's buffer/chain countermeasures
+/// don't touch a foreign job's traffic, while scaling is disabled.  The
+/// *cluster-level* governance loop must resolve it from live
+/// measurements alone: the per-tick NIC backlog sample crosses the
+/// saturation limit, the migration tier moves instances off the hot
+/// worker, and the latency job's tail recovers within `tolerance` —
+/// with zero scale-ups and zero preemptions, so migration alone gets
+/// the credit.
+pub fn run_migration_phase(cfg: EngineConfig, tolerance: f64) -> Result<PhaseReport> {
+    let mut cfg = cfg;
+    // Throttle the links so the hog's egress is a structural overload
+    // (default 125 MB/s would need an implausibly fat stream).
+    cfg.cluster.link_bytes_per_sec = 2.0e6;
+    let mut cluster =
+        SimCluster::new_multi(3, 3, PlacementPolicy::Spread, cfg.fully_optimized())?;
+    let victim = cluster
+        .submit_job(nic_victim_submission(Duration::from_secs(240))?, Duration::ZERO)
+        .context("latency-victim")?;
+    let noise = cluster
+        .submit_job(nic_noise_submission(Duration::from_secs(240))?, Duration::ZERO)
+        .context("nic-hog")?;
+
+    // Precondition (checked before the first 15 s governance tick can
+    // migrate anything): Spread round-robin lands both single-instance
+    // Transcoders on the same worker, whose NIC the hog saturates.
+    cluster.run(Duration::from_secs(5), None)?;
+    let v_inst = *cluster
+        .instances_of(transcoder_of(&cluster, victim)?)
+        .first()
+        .context("victim Transcoder instance")?;
+    let n_inst = *cluster
+        .instances_of(transcoder_of(&cluster, noise)?)
+        .first()
+        .context("hog Transcoder instance")?;
+    let hot = cluster.worker_of(v_inst);
+    if cluster.worker_of(n_inst) != hot {
+        bail!(
+            "migration phase: Transcoders not co-located ({} vs {}) — the scenario \
+             needs a shared hot link",
+            hot,
+            cluster.worker_of(n_inst)
+        );
+    }
+
+    // Two governance rounds (saturation at the 15 s tick, cooldown,
+    // second migration at 45 s) must split the Transcoders onto
+    // different workers and take the hot link out of the victim's path.
+    cluster.run(Duration::from_secs(60), None)?;
+    if cluster.stats.migrations == 0 {
+        bail!("migration phase: NIC saturation never triggered a migration");
+    }
+    if cluster.worker_of(v_inst) == cluster.worker_of(n_inst) {
+        bail!(
+            "migration phase: Transcoders still co-located on {} after {} migration(s)",
+            cluster.worker_of(v_inst),
+            cluster.stats.migrations
+        );
+    }
+    if cluster.stats.admission_refreshes == 0 {
+        bail!("migration phase: the admission refresh never ran");
+    }
+    cluster.routing_consistent()?;
+
+    // Converged tail: by 150 s the hot link's backlog has drained and
+    // the victim's buffers have adapted on the post-migration paths.
+    cluster.run(Duration::from_secs(150), None)?;
+    let base = {
+        let l = cluster.job_ledger(victim);
+        (l.at_sinks, l.e2e_sum_us)
+    };
+    cluster.run(Duration::from_secs(270), None)?;
+    let t = cluster.now();
+    cluster.stop_sources_at(t);
+    cluster.run(Duration::from_secs(630), None)?;
+
+    // Migration alone gets the credit: nothing was scaled or preempted.
+    if cluster.stats.scale_ups != 0 || cluster.stats.preemptions != 0 {
+        bail!(
+            "migration phase: recovery must not involve scaling or preemption \
+             (scale_ups {}, preemptions {})",
+            cluster.stats.scale_ups,
+            cluster.stats.preemptions
+        );
+    }
+    let l = cluster.job_ledger(victim).clone();
+    let tail = l.at_sinks.saturating_sub(base.0);
+    if tail == 0 {
+        bail!("migration phase: no tail-window sink arrivals for the latency job");
+    }
+    let tail_mean_ms = (l.e2e_sum_us - base.1) / tail as f64 / 1e3;
+    let limit_ms = 300.0;
+    if tail_mean_ms > tolerance * limit_ms {
+        bail!(
+            "migration phase: latency job missed its constraint after migration: \
+             tail {tail_mean_ms:.1} ms vs {limit_ms} ms × {tolerance}"
+        );
+    }
+    for (job, label) in [(victim, "latency-victim"), (noise, "nic-hog")] {
+        if cluster.job_state(job) != Some(JobState::Completed) {
+            bail!("migration phase: {label} did not complete: {:?}", cluster.job_state(job));
+        }
+        cluster
+            .job_conservation(job)
+            .with_context(|| format!("migration phase: {label} ledger"))?;
+    }
+    let lines = vec![
+        format!(
+            "  migrations {} (refreshes {}) | hot worker {hot} relieved | victim tail \
+             {:.1} ms (limit {} ms × {}) | scale-ups 0, preemptions 0",
+            cluster.stats.migrations,
+            cluster.stats.admission_refreshes,
+            tail_mean_ms,
+            limit_ms,
+            tolerance
+        ),
+        lifecycle_line(&cluster, victim),
+        lifecycle_line(&cluster, noise),
+    ];
+    Ok(PhaseReport {
+        name: "migrate",
         fingerprint: multi_fingerprint(&cluster.stats),
         lines,
     })

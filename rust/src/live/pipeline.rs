@@ -301,8 +301,9 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
                         chained = true;
                     }
                     // The live mini-cluster is a fixed 1-worker pipeline:
-                    // elastic scaling does not apply.
+                    // elastic scaling and migration do not apply.
                     Action::ScaleTasks { .. } => {}
+                    Action::MigrateInstance { .. } => {}
                     Action::Unresolvable { .. } => {}
                 }
             }

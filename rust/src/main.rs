@@ -11,7 +11,7 @@
 //! nephele sim-scale  [--quick] [--secs N] [--tail N] [--seed N]
 //!                    [--min-ratio F] [--quiet]
 //! nephele sim-multi  [--quick] [--seed N] [--policy spread|pack|least-loaded]
-//!                    [--tolerance F] [--phase base|admission|fairness|preempt|all]
+//!                    [--tolerance F] [--phase base|admission|fairness|preempt|migrate|all]
 //!                    [--quiet]
 //! nephele live       [--frames N] [--fps F] [--artifacts DIR]
 //! nephele info
@@ -32,9 +32,12 @@
 //! **admission** (an oversubscribing burst is queued, not rejected, and
 //! admitted when a bounded job completes; an impossible job is rejected
 //! `exceeds-capacity`), **fairness** (two violated jobs split contested
-//! elastic slots weight-proportionally) and **preemption** (a
+//! elastic slots weight-proportionally), **preemption** (a
 //! latency-critical job reclaims a best-effort slot and meets its
-//! constraint while the victim's ledger stays balanced).
+//! constraint while the victim's ledger stays balanced) and
+//! **migrate** (the governance loop's live NIC measurements detect a
+//! saturated worker and a migration — no new instances — recovers the
+//! co-located latency job's constraint).
 //!
 //! All flag parsing lives in `bin/figbin_common.rs` (shared with the
 //! figure binaries), so flags, usage strings and the `info` subcommand
@@ -48,8 +51,8 @@ use anyhow::{bail, Result};
 use nephele::experiments::failover::run_failover;
 use nephele::experiments::load_surge::run_load_surge;
 use nephele::experiments::multi::{
-    run_admission_phase, run_fairness_phase, run_multi, run_preemption_phase, verify_report,
-    Phase,
+    run_admission_phase, run_fairness_phase, run_migration_phase, run_multi,
+    run_preemption_phase, verify_report, Phase,
 };
 use nephele::experiments::scale::run_scale;
 use nephele::experiments::video_scenarios::run_video_scenario;
@@ -207,6 +210,22 @@ fn sim_multi(argv: &[String]) -> Result<()> {
                 println!(
                     "preemption phase: latency-critical job reclaimed a best-effort slot and met \
                      its constraint, victim ledger balanced, fingerprints byte-identical"
+                );
+            }
+            Phase::Migrate => {
+                let report = run_migration_phase(cfg, tolerance)
+                    .map_err(|e| anyhow::anyhow!("migration phase: {e:#}"))?;
+                let replay = run_migration_phase(cfg, tolerance)
+                    .map_err(|e| anyhow::anyhow!("migration phase: {e:#}"))?;
+                if report.fingerprint != replay.fingerprint {
+                    bail!("migration phase: same-seed replay diverged");
+                }
+                if verbose {
+                    figbin::print_phase_summary(&report);
+                }
+                println!(
+                    "migration phase: NIC saturation resolved by migration alone (no scale-ups, \
+                     no preemptions), constraint recovered, fingerprints byte-identical"
                 );
             }
         }

@@ -259,6 +259,52 @@ pub fn victim_submission(run_for: Duration) -> Result<JobSpec> {
     )
 }
 
+/// The migration phase's latency job: a minimal 1/1/1 pipeline at low
+/// rate (2 × 25 fps) under the engine-default manager.  Spread
+/// placement puts its Transcoder on the same worker as [`nic_noise_submission`]'s,
+/// so its sink traffic queues behind the noise job's NIC backlog until
+/// the governance loop migrates one of them off the hot link.
+pub fn nic_victim_submission(run_for: Duration) -> Result<JobSpec> {
+    let mut s = SurgeSpec::default();
+    s.surge_streams = 0;
+    s.base_streams = 2;
+    s.ingest_parallelism = 1;
+    s.transcoder_parallelism = 1;
+    s.sink_parallelism = 1;
+    s.fps = 25.0;
+    let sj = surge_job(s)?;
+    Ok(
+        JobSpec::new("latency-victim", sj.job, sj.constraints, sj.task_specs, sj.sources)
+            .run_for(run_for),
+    )
+}
+
+/// The migration phase's NIC hog: same 1/1/1 shape, negligible CPU
+/// (1 ms service), but 64 KiB transcoded packets — 50/s × 64 KiB =
+/// 3.28 MB/s of Transcoder egress against the phase's throttled 2 MB/s
+/// links, so the shared worker's NIC backlog grows without bound.
+/// Best-effort and monitoring-only: *its* manager never acts; only the
+/// cluster-level governance loop can resolve the saturation.
+pub fn nic_noise_submission(run_for: Duration) -> Result<JobSpec> {
+    let mut s = SurgeSpec::default();
+    s.surge_streams = 0;
+    s.base_streams = 2;
+    s.ingest_parallelism = 1;
+    s.transcoder_parallelism = 1;
+    s.sink_parallelism = 1;
+    s.fps = 25.0;
+    s.packet_bytes = 512;
+    s.transcoded_bytes = 64 * 1024;
+    s.transcode_service = Duration::from_micros(1_000);
+    let sj = surge_job(s)?;
+    Ok(
+        JobSpec::new("nic-hog", sj.job, sj.constraints, sj.task_specs, sj.sources)
+            .run_for(run_for)
+            .with_manager(monitoring_only())
+            .best_effort(),
+    )
+}
+
 /// The preempting latency-critical job: priority 2, a single Transcoder
 /// that full base load (4 × 50 fps × 6 ms = 1.2 cores) overloads — only
 /// one more Transcoder instance meets the constraint, and on a full
@@ -337,6 +383,18 @@ mod tests {
         assert_eq!(v.job.slot_demand(), 6);
         // The victim keeps up on one Transcoder after preemption...
         assert!(v.job.vertex_by_name("Transcoder").unwrap().cpu_utilization * 2.0 <= 0.9);
+        let nv = nic_victim_submission(Duration::from_secs(60)).unwrap();
+        assert_eq!(nv.job.slot_demand(), 3);
+        assert_eq!(nv.class, QosClass::LatencyConstrained);
+        assert!(nv.manager.is_none(), "the victim runs the engine-default manager");
+        let nh = nic_noise_submission(Duration::from_secs(60)).unwrap();
+        assert_eq!(nh.job.slot_demand(), 3);
+        assert_eq!(nh.class, QosClass::BestEffort);
+        assert!(nh.manager.is_some(), "the hog is monitoring-only");
+        // The hog's transcoder egress alone exceeds the migrate phase's
+        // 2 MB/s link rate — the saturation is structural, not a burst.
+        let rate = 2.0 * 25.0;
+        assert!(rate * 64.0 * 1024.0 > 2.0e6);
         let p = highpri_submission(Duration::from_secs(60)).unwrap();
         assert_eq!((p.class, p.priority), (QosClass::LatencyConstrained, 2));
         assert_eq!(p.job.slot_demand(), 4);

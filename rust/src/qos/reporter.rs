@@ -134,6 +134,20 @@ impl QosReporter {
         self.pending_buffer_updates.push((channel, size));
     }
 
+    /// Drop a retired element (instance scale-down, preemption,
+    /// migration off this worker) from the reporter mid-interval: its
+    /// interest routing goes away immediately, and a manager left with
+    /// no interested element stops being a flush target.  Residual
+    /// accumulator entries for the element are dropped lazily by the
+    /// next [`Self::flush_due`].
+    pub fn retire_element(&mut self, element: ElementKey) {
+        self.interest.retain(|&(e, _), _| e != element);
+        let mut live: Vec<WorkerId> = self.interest.values().flatten().copied().collect();
+        live.sort();
+        live.dedup();
+        self.next_flush.retain(|m, _| live.binary_search(m).is_ok());
+    }
+
     /// Earliest pending flush deadline (for event scheduling).
     pub fn next_deadline(&self) -> Option<Time> {
         self.next_flush.values().min().copied()
@@ -157,7 +171,13 @@ impl QosReporter {
         let mut reports: BTreeMap<WorkerId, Report> = BTreeMap::new();
         let keys: Vec<(ElementKey, MetricKind)> = self.acc.keys().copied().collect();
         for key in keys {
-            let interested = &self.interest[&key];
+            let Some(interested) = self.interest.get(&key) else {
+                // The element retired mid-interval (scale-down,
+                // preemption, migration off this worker): its residual
+                // aggregate has no consumer left.
+                self.acc.remove(&key);
+                continue;
+            };
             // Only drain if *every* interested manager is due, otherwise
             // the non-due managers would lose this interval's data.
             // (With a shared interval per reporter the offsets differ per
@@ -207,9 +227,13 @@ impl QosReporter {
             }
             self.pending_buffer_updates.clear();
         }
-        // Re-arm deadlines for due managers.
+        // Re-arm deadlines for due managers.  Tolerant lookup: a manager
+        // retired between deadline collection and here (all its elements
+        // moved away) must not be re-armed — and must not panic.
         for m in due {
-            *self.next_flush.get_mut(&m).unwrap() = now + self.interval;
+            if let Some(t) = self.next_flush.get_mut(&m) {
+                *t = now + self.interval;
+            }
         }
         reports
             .into_values()
@@ -318,6 +342,67 @@ mod tests {
             deadlines.iter().map(|t| t.0).collect();
         assert!(distinct.len() > 1, "offsets should differ: {deadlines:?}");
         assert!(deadlines.iter().all(|t| t.0 < 15_000_000));
+    }
+
+    /// Regression: an element retiring between two flush ticks (scale-
+    /// down, preemption, migration) used to leave a stale accumulator
+    /// key behind; the next flush then panicked indexing the pruned
+    /// interest map (and, for a fully retired manager, the deadline
+    /// re-arm `unwrap`ped on the missing `next_flush` entry).
+    #[test]
+    fn retiring_an_element_mid_interval_does_not_panic_the_flush() {
+        let mgr = WorkerId(9);
+        let mut rng = Rng::new(1);
+        let mut r = QosReporter::new(
+            WorkerId(0),
+            Duration::from_secs(15),
+            interest_for(mgr),
+            &mut rng,
+        );
+        r.record(Measurement::channel_latency(ChannelId(0), 1000.0));
+        r.record(Measurement::task_latency(VertexId(1), 500.0));
+        assert_eq!(r.flush_due(Time::from_secs_f64(20.0)).len(), 1);
+
+        // Fresh data for both elements, then the vertex retires before
+        // the next flush fires.
+        r.record(Measurement::channel_latency(ChannelId(0), 2000.0));
+        r.record(Measurement::task_latency(VertexId(1), 700.0));
+        r.retire_element(ElementKey::Vertex(VertexId(1)));
+
+        let reports = r.flush_due(Time::from_secs_f64(40.0));
+        assert_eq!(reports.len(), 1);
+        assert!(
+            reports[0]
+                .entries
+                .iter()
+                .all(|e| e.element != ElementKey::Vertex(VertexId(1))),
+            "retired element leaked into a report: {:?}",
+            reports[0].entries
+        );
+        // The channel's aggregate still flowed.
+        assert!(reports[0]
+            .entries
+            .iter()
+            .any(|e| e.element == ElementKey::Channel(ChannelId(0))));
+    }
+
+    #[test]
+    fn retiring_the_last_element_of_a_manager_ends_its_flush_chain() {
+        let mgr = WorkerId(9);
+        let mut rng = Rng::new(1);
+        let mut r = QosReporter::new(
+            WorkerId(0),
+            Duration::from_secs(15),
+            interest_for(mgr),
+            &mut rng,
+        );
+        r.record(Measurement::channel_latency(ChannelId(0), 1000.0));
+        r.retire_element(ElementKey::Channel(ChannelId(0)));
+        r.retire_element(ElementKey::Vertex(VertexId(1)));
+        assert_eq!(r.managers().count(), 0);
+        assert_eq!(r.next_deadline(), None);
+        // Both tolerant paths: stale accumulator key, no due manager.
+        assert!(r.flush_due(Time::from_secs_f64(40.0)).is_empty());
     }
 
     #[test]

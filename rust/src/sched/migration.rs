@@ -1,0 +1,216 @@
+//! The migration tier of the governance loop: detect a worker the live
+//! measurements show CPU- or NIC-saturated and pick the survivor one of
+//! its instances should move to.
+//!
+//! This module is pure decision logic over per-worker measurement
+//! samples — the master owns enactment (victim choice among the
+//! worker's instances, the loss-free buffer flush, the runtime-graph
+//! reassignment and the slot-ledger move) so the policy stays unit-
+//! testable without a cluster.  In the countermeasure escalation the
+//! migration tier sits *before* scaling and preemption: moving an
+//! existing instance costs no new slot and takes nothing from anyone,
+//! so it is tried first when a placement (not the job's parallelism)
+//! is what violates the constraint.
+//!
+//! Determinism: workers are scanned in id order and every tie breaks
+//! toward the lowest [`WorkerId`], so same-seed runs replay the same
+//! migration decisions byte-for-byte.
+
+use crate::graph::ids::WorkerId;
+use crate::util::time::Duration;
+
+/// Saturation thresholds of the migration policy.
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationConfig {
+    /// A worker is CPU-saturated when its measured busy cores exceed
+    /// this fraction of its core capacity.
+    pub cpu_saturation: f64,
+    /// A worker is NIC-saturated when its send backlog (the time its
+    /// link needs to drain what is already queued) exceeds this bound.
+    pub nic_backlog_limit: Duration,
+}
+
+impl MigrationConfig {
+    /// Defaults derived from the engine's measurement interval: CPU
+    /// saturation at 90% of capacity, NIC saturation when the link is
+    /// more than half a measurement interval behind.
+    pub fn for_interval(measurement_interval: Duration) -> MigrationConfig {
+        MigrationConfig {
+            cpu_saturation: 0.9,
+            nic_backlog_limit: Duration(measurement_interval.0 / 2),
+        }
+    }
+}
+
+/// The axis that saturated a worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Saturation {
+    Cpu,
+    Nic,
+}
+
+impl std::fmt::Display for Saturation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Saturation::Cpu => "cpu",
+            Saturation::Nic => "nic",
+        })
+    }
+}
+
+/// One worker as the policy sees it at a scheduler tick.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerSample {
+    /// Busy CPU cores measured over the last interval (sum of task busy
+    /// time divided by the interval).
+    pub cpu_cores: f64,
+    /// Send backlog of the worker's NIC: how long the link needs to
+    /// drain what is already queued.
+    pub nic_backlog: Duration,
+    /// Live task instances currently placed on the worker (the load
+    /// figure placement balances).
+    pub live_members: u32,
+}
+
+/// Severity of a worker's overload: its worst axis as a multiple of
+/// that axis' saturation threshold.  `>= 1.0` means saturated.
+fn severity(s: &WorkerSample, cores_per_worker: f64, cfg: &MigrationConfig) -> (f64, Saturation) {
+    let cpu = s.cpu_cores / (cores_per_worker * cfg.cpu_saturation).max(f64::MIN_POSITIVE);
+    let nic = s.nic_backlog.0 as f64 / (cfg.nic_backlog_limit.0 as f64).max(1.0);
+    // Strict comparison: a tie keeps the CPU attribution, scanned first.
+    if nic > cpu {
+        (nic, Saturation::Nic)
+    } else {
+        (cpu, Saturation::Cpu)
+    }
+}
+
+/// The most-overloaded saturated live worker, if any: the candidate a
+/// migration should unload.  Ties break toward the lowest worker id.
+pub fn find_saturated(
+    samples: &[WorkerSample],
+    dead: &[bool],
+    cores_per_worker: f64,
+    cfg: &MigrationConfig,
+) -> Option<(WorkerId, Saturation)> {
+    let mut best: Option<(f64, WorkerId, Saturation)> = None;
+    for (w, s) in samples.iter().enumerate() {
+        if dead.get(w).copied().unwrap_or(false) {
+            continue;
+        }
+        let (sev, kind) = severity(s, cores_per_worker, cfg);
+        if sev < 1.0 {
+            continue;
+        }
+        // Strict > keeps the first (lowest-id) worker on ties.
+        if best.map(|(b, _, _)| sev > b).unwrap_or(true) {
+            best = Some((sev, WorkerId(w as u32), kind));
+        }
+    }
+    best.map(|(_, w, kind)| (w, kind))
+}
+
+/// The migration target: the least-loaded live survivor (by live member
+/// count, ties toward the lowest id) that is itself unsaturated —
+/// moving load onto another saturated worker would only relocate the
+/// violation.  `None` when no such worker exists.
+pub fn pick_target(
+    samples: &[WorkerSample],
+    dead: &[bool],
+    from: WorkerId,
+    cores_per_worker: f64,
+    cfg: &MigrationConfig,
+) -> Option<WorkerId> {
+    let mut best: Option<(u32, WorkerId)> = None;
+    for (w, s) in samples.iter().enumerate() {
+        if w == from.index() || dead.get(w).copied().unwrap_or(false) {
+            continue;
+        }
+        if severity(s, cores_per_worker, cfg).0 >= 1.0 {
+            continue;
+        }
+        if best.map(|(m, _)| s.live_members < m).unwrap_or(true) {
+            best = Some((s.live_members, WorkerId(w as u32)));
+        }
+    }
+    best.map(|(_, w)| w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORES: f64 = 8.0;
+
+    fn cfg() -> MigrationConfig {
+        MigrationConfig::for_interval(Duration::from_secs(1))
+    }
+
+    fn idle(members: u32) -> WorkerSample {
+        WorkerSample { cpu_cores: 1.0, nic_backlog: Duration::ZERO, live_members: members }
+    }
+
+    #[test]
+    fn detects_cpu_and_nic_saturation() {
+        let c = cfg();
+        // 7.5 of 8 cores busy: over the 0.9 threshold (7.2).
+        let cpu_hot = WorkerSample { cpu_cores: 7.5, ..idle(3) };
+        // 600 ms backlog against the 500 ms limit.
+        let nic_hot = WorkerSample { nic_backlog: Duration(600_000), ..idle(3) };
+        let dead = vec![false; 3];
+        assert_eq!(
+            find_saturated(&[idle(2), cpu_hot, idle(2)], &dead, CORES, &c),
+            Some((WorkerId(1), Saturation::Cpu))
+        );
+        assert_eq!(
+            find_saturated(&[idle(2), idle(2), nic_hot], &dead, CORES, &c),
+            Some((WorkerId(2), Saturation::Nic))
+        );
+        assert_eq!(find_saturated(&[idle(2), idle(2)], &dead, CORES, &c), None);
+    }
+
+    #[test]
+    fn picks_the_worst_overload_and_skips_dead_workers() {
+        let c = cfg();
+        let mild = WorkerSample { cpu_cores: 7.3, ..idle(3) };
+        // 2x the NIC limit outranks 7.3/7.2 cores.
+        let severe = WorkerSample { nic_backlog: Duration(1_000_000), ..idle(3) };
+        let dead = vec![false, false, false];
+        assert_eq!(
+            find_saturated(&[mild, severe, idle(1)], &dead, CORES, &c),
+            Some((WorkerId(1), Saturation::Nic))
+        );
+        // The severe worker dying leaves the mild one.
+        let dead = vec![false, true, false];
+        assert_eq!(
+            find_saturated(&[mild, severe, idle(1)], &dead, CORES, &c),
+            Some((WorkerId(0), Saturation::Cpu))
+        );
+    }
+
+    #[test]
+    fn target_is_the_least_loaded_unsaturated_survivor() {
+        let c = cfg();
+        let hot = WorkerSample { cpu_cores: 8.0, ..idle(4) };
+        let dead = vec![false; 4];
+        // Lowest member count wins; ties break toward the lowest id.
+        assert_eq!(
+            pick_target(&[hot, idle(3), idle(1), idle(1)], &dead, WorkerId(0), CORES, &c),
+            Some(WorkerId(2))
+        );
+        // A saturated or dead worker is never a target, even if emptier.
+        let also_hot = WorkerSample { cpu_cores: 7.9, ..idle(0) };
+        assert_eq!(
+            pick_target(&[hot, also_hot, idle(2)], &dead, WorkerId(0), CORES, &c),
+            Some(WorkerId(2))
+        );
+        let dead = vec![false, true, false];
+        assert_eq!(
+            pick_target(&[hot, idle(0), idle(2)], &dead, WorkerId(0), CORES, &c),
+            Some(WorkerId(2))
+        );
+        // No survivor at all: nothing to move to.
+        let dead = vec![false, true, true];
+        assert_eq!(pick_target(&[hot, idle(0), idle(0)], &dead, WorkerId(0), CORES, &c), None);
+    }
+}

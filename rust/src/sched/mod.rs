@@ -31,6 +31,7 @@
 
 pub mod admission;
 pub mod fairness;
+pub mod migration;
 pub mod placement;
 
 pub use admission::{AdmissionDecision, JobDemand, QosClass, RejectReason};
@@ -204,6 +205,12 @@ pub struct JobEntry {
     pub weight: u32,
     /// Estimated steady-state demand (admission input).
     pub demand: JobDemand,
+    /// Measurement-refreshed demand: an EWMA of the QoS managers' live
+    /// CPU/NIC samples, folded in at scheduler ticks
+    /// ([`Scheduler::refresh_demand`]).  `None` until the first refresh;
+    /// when present, admission prices this holder from it instead of the
+    /// static submit-time profile.
+    pub live_demand: Option<JobDemand>,
     /// Source-lifetime bound (admission's release prediction).
     pub run_for: Option<Duration>,
     /// Admission trail, in decision order (e.g. Queue → Admit).
@@ -350,6 +357,7 @@ impl Scheduler {
             priority: meta.priority,
             weight: meta.weight.max(1),
             demand: meta.demand,
+            live_demand: None,
             run_for: meta.run_for,
             decisions: Vec::new(),
             slots: vec![0; self.capacity.len()],
@@ -415,19 +423,54 @@ impl Scheduler {
 
     /// Running jobs as admission-control holders: ledger-true slot
     /// reservations plus the demand estimate and predicted release.
+    /// CPU/NIC figures come from the measurement-refreshed demand when
+    /// one exists, so residual-capacity estimates track what holders
+    /// actually consume rather than what they declared at submit time.
     pub fn holders(&self) -> Vec<admission::Holder> {
         self.jobs
             .iter()
             .filter(|e| e.state == JobState::Running)
-            .map(|e| admission::Holder {
-                slots: e.reserved(),
-                cpu_cores: e.demand.cpu_cores,
-                nic_bytes_per_sec: e.demand.nic_bytes_per_sec,
-                release_at: e
-                    .run_for
-                    .and_then(|d| e.started_at.map(|t| t + d)),
+            .map(|e| {
+                let d = e.live_demand.unwrap_or(e.demand);
+                admission::Holder {
+                    slots: e.reserved(),
+                    cpu_cores: d.cpu_cores,
+                    nic_bytes_per_sec: d.nic_bytes_per_sec,
+                    release_at: e
+                        .run_for
+                        .and_then(|d| e.started_at.map(|t| t + d)),
+                }
             })
             .collect()
+    }
+
+    /// Fold a live utilisation measurement into a running job's
+    /// admission demand: an EWMA with smoothing factor `alpha` toward
+    /// the measured CPU cores and NIC bytes/s, seeded from the static
+    /// profile on the first refresh.  Slots stay ledger-true (the slot
+    /// count is the reservation, not a measurement).  Returns whether a
+    /// refresh happened (the job was running).
+    pub fn refresh_demand(
+        &mut self,
+        job: JobId,
+        measured_cpu_cores: f64,
+        measured_nic_bytes_per_sec: f64,
+        alpha: f64,
+    ) -> bool {
+        let Some(e) = self.jobs.get_mut(job.index()) else {
+            return false;
+        };
+        if e.state != JobState::Running {
+            return false;
+        }
+        let prev = e.live_demand.unwrap_or(e.demand);
+        e.live_demand = Some(JobDemand {
+            slots: e.demand.slots,
+            cpu_cores: prev.cpu_cores + alpha * (measured_cpu_cores - prev.cpu_cores),
+            nic_bytes_per_sec: prev.nic_bytes_per_sec
+                + alpha * (measured_nic_bytes_per_sec - prev.nic_bytes_per_sec),
+        });
+        true
     }
 
     /// Elastic slots currently held by a job under the fairness arbiter.
@@ -622,6 +665,7 @@ impl Scheduler {
         e.slots = vec![0; self.capacity.len()];
         e.state = state;
         e.finished_at = Some(now);
+        e.live_demand = None;
         self.fair.reset(job.index());
         Ok(())
     }
@@ -834,6 +878,45 @@ mod tests {
         assert_eq!(holders.len(), 1);
         assert_eq!(holders[0].slots, 4, "elastic grants count in the ledger");
         assert_eq!(holders[0].release_at, Some(Time(5) + Duration::from_secs(60)));
+    }
+
+    #[test]
+    fn refreshed_demand_flips_a_queue_verdict_to_admit() {
+        use crate::config::ClusterConfig;
+        // 3 workers x 2 slots, 8 cores each: 24 live cores.  The holder
+        // declared 20 cores at submit time but actually burns ~2.
+        let mut s = sched(PlacementPolicy::Pack);
+        let a = s.register(
+            "holder",
+            Time::ZERO,
+            JobMeta {
+                demand: JobDemand { slots: 2, cpu_cores: 20.0, nic_bytes_per_sec: 1e6 },
+                run_for: Some(Duration::from_secs(120)),
+                ..JobMeta::default()
+            },
+        );
+        let dead = vec![false; 3];
+        s.place_job(a, 2, &dead, Time::ZERO).unwrap();
+        let pool = admission::PoolCapacity::of(2, &ClusterConfig::default());
+        let newcomer = JobDemand { slots: 2, cpu_cores: 10.0, nic_bytes_per_sec: 1e6 };
+        let verdict = |s: &Scheduler| {
+            admission::decide(&newcomer, 3, &pool, s.free_slots(&dead), &s.holders(), Time(1))
+        };
+        // Priced from the static profile, the CPU residual (24 - 20) is
+        // short: the newcomer queues behind the bounded release.
+        assert_eq!(verdict(&s).tag(), "queue");
+        // Live measurements show the holder far below its profile; the
+        // EWMA walks the priced demand down and the verdict flips.
+        assert!(s.refresh_demand(a, 2.0, 1e6, 0.5));
+        assert!(s.refresh_demand(a, 2.0, 1e6, 0.5));
+        let h = &s.holders()[0];
+        assert!(h.cpu_cores < 7.0, "EWMA must track the measurement: {}", h.cpu_cores);
+        assert_eq!(verdict(&s).tag(), "admit");
+        // A finished holder drops its refreshed demand with the rest of
+        // its state; a non-running job is never refreshed.
+        s.complete(a, Time(2)).unwrap();
+        assert!(!s.refresh_demand(a, 2.0, 1e6, 0.5));
+        assert!(s.entry(a).unwrap().live_demand.is_none());
     }
 
     #[test]

@@ -115,6 +115,11 @@ pub struct SimStats {
     pub preemptions: u64,
     /// Elastic reservations deferred by the weighted fair-share rule.
     pub elastic_deferred: u64,
+    /// Instances moved off a saturated worker by the migration tier.
+    pub migrations: u64,
+    /// Running holders whose admission demand was refreshed from live
+    /// measurements at a scheduler tick.
+    pub admission_refreshes: u64,
     /// One ledger per registered job, in [`JobId`] order.
     pub jobs: Vec<JobLedger>,
     /// Timestamped log of every applied countermeasure, crash, failover

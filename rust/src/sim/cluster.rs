@@ -166,6 +166,15 @@ pub struct SimCluster {
     pub(crate) master_tick_armed: bool,
     /// Cluster-wide source stop (jobs also carry their own).
     pub(crate) source_end: Time,
+    /// Governance-loop measurement taps, accumulated on the data path
+    /// and drained by the periodic scheduler tick: per-worker busy CPU
+    /// time, per-job busy CPU time, per-job cross-worker wire bytes.
+    pub(crate) worker_busy: Vec<Duration>,
+    pub(crate) job_busy: Vec<Duration>,
+    pub(crate) job_wire_bytes: Vec<u64>,
+    /// Migration cooldown: no new migration is planned before this time
+    /// (lets the previous move settle into fresh measurements).
+    pub(crate) next_migration_at: Time,
     pub stats: SimStats,
 }
 
@@ -284,6 +293,10 @@ impl SimCluster {
             replay_stash: BTreeMap::new(),
             master_tick_armed: false,
             source_end: Time(u64::MAX),
+            worker_busy: vec![Duration::ZERO; num_workers],
+            job_busy: vec![Duration::ZERO; 1],
+            job_wire_bytes: vec![0; 1],
+            next_migration_at: Time::ZERO,
             stats,
         };
         let reporter_workers: Vec<WorkerId> = cluster.jobs[0].reporters.keys().copied().collect();
@@ -362,6 +375,10 @@ impl SimCluster {
             replay_stash: BTreeMap::new(),
             master_tick_armed: false,
             source_end: Time(u64::MAX),
+            worker_busy: vec![Duration::ZERO; num_workers as usize],
+            job_busy: Vec::new(),
+            job_wire_bytes: Vec::new(),
+            next_migration_at: Time::ZERO,
             stats: SimStats::default(),
         };
         // Worker CPU sampling runs for the cluster's whole life,
@@ -414,6 +431,8 @@ impl SimCluster {
         });
         self.pending.push(Some(spec));
         self.stats.jobs.push(JobLedger::default());
+        self.job_busy.push(Duration::ZERO);
+        self.job_wire_bytes.push(0);
         self.queue.push(Time::ZERO + at, Ev::JobSubmit { job: id.0 });
         Ok(id)
     }
@@ -609,6 +628,31 @@ impl SimCluster {
     /// Current degree of parallelism of a task group.
     pub fn parallelism_of(&self, jv: JobVertexId) -> usize {
         self.rg.members(jv).len()
+    }
+
+    /// Runtime instances of a task group, in id order.
+    pub fn instances_of(&self, jv: JobVertexId) -> Vec<VertexId> {
+        self.rg.members(jv).to_vec()
+    }
+
+    /// Worker currently hosting a runtime instance.
+    pub fn worker_of(&self, v: VertexId) -> WorkerId {
+        self.rg.worker(v)
+    }
+
+    /// Directly request a live move of instance `v` to worker `to` (the
+    /// harness entry to the migration enactment; the governance loop
+    /// issues the same move via [`crate::actions::Action::MigrateInstance`]).
+    /// Returns whether the move applied — ineligible, dead or stale
+    /// requests are refused, never panicked on.
+    pub fn migrate_instance(&mut self, v: VertexId, to: WorkerId) -> bool {
+        if v.index() >= self.rg.vertices.len() || to.index() >= self.rg.num_workers as usize {
+            return false;
+        }
+        let now = self.queue.now();
+        let job = self.job_of_vertex[v.index()];
+        let from = self.rg.worker(v);
+        self.apply_migration(now, job, v, from, to)
     }
 
     /// Whether a worker has crashed (or been fenced by the master).

@@ -19,14 +19,23 @@ use super::cluster::{JobLedger, SimCluster};
 use super::engine::Ev;
 use super::flow::{Buffer, OutBufferState};
 use super::task::{Semantics, TaskState};
+use crate::actions::Action;
 use crate::graph::ids::{ChannelId, JobEdgeId, JobId, JobVertexId, VertexId, WorkerId};
+use crate::qos::sample::ElementKey;
 use crate::qos::setup::{build_qos_runtime_for, QosRuntime};
+use crate::sched::migration::{self, MigrationConfig, WorkerSample};
 use crate::sched::{
     admission, AdmissionDecision, ElasticDenial, JobSpec, JobState, QosClass, RejectReason,
 };
 use crate::util::time::{Duration, Time};
 use anyhow::Result;
 use std::collections::{BTreeMap, BTreeSet};
+
+/// EWMA weight folding each interval's measured utilization into a
+/// running holder's admission demand (governance loop, tier "refresh"):
+/// an equal blend converges within a few intervals yet rides out one
+/// noisy interval.
+const DEMAND_EWMA_ALPHA: f64 = 0.5;
 
 impl SimCluster {
     /// Master-side liveness sweep over the QoS report traffic: workers
@@ -69,6 +78,14 @@ impl SimCluster {
             } else {
                 self.unregister_worker_for(now, w, j);
             }
+        }
+        // Stale-capacity fix: the pool just shrank, so queued jobs'
+        // verdicts and predicted waits must be recomputed now — not at
+        // the next periodic tick, which could keep quoting the
+        // pre-crash pool for most of an interval.
+        if self.sched.any_queued() {
+            self.queue
+                .push(now + self.cfg.cluster.control_delay, Ev::SchedTick { periodic: false });
         }
     }
 
@@ -623,6 +640,203 @@ impl SimCluster {
     }
 
     // ------------------------------------------------------------------
+    // Governance loop: live-measurement admission refresh + migration
+    // ------------------------------------------------------------------
+
+    /// Feed the live measurements back into the scheduler at a periodic
+    /// tick.  (a) Admission refresh: every running holder's demand
+    /// becomes an EWMA of its measured CPU busy time and cross-worker
+    /// egress, so residual-capacity estimates and queue predictions
+    /// track reality instead of submit-time profiles.  (b) Migration
+    /// tier: a CPU- or NIC-saturated worker sheds one instance to the
+    /// least-loaded unsaturated survivor — tried *before* scaling or
+    /// preemption, because a move costs no new slot and takes nothing
+    /// from anyone.
+    fn governance_tick(&mut self, now: Time) {
+        let secs = self.cfg.measurement_interval.as_secs_f64();
+        for j in 0..self.jobs.len() {
+            let busy = std::mem::replace(&mut self.job_busy[j], Duration::ZERO);
+            let bytes = std::mem::replace(&mut self.job_wire_bytes[j], 0);
+            let id = JobId(j as u32);
+            if self.sched.refresh_demand(
+                id,
+                busy.as_secs_f64() / secs,
+                bytes as f64 / secs,
+                DEMAND_EWMA_ALPHA,
+            ) {
+                self.stats.admission_refreshes += 1;
+            }
+        }
+        let cores = self.cfg.cluster.cores_per_worker as f64;
+        let mcfg = MigrationConfig::for_interval(self.cfg.measurement_interval);
+        let n = self.rg.num_workers as usize;
+        let mut samples = vec![WorkerSample::default(); n];
+        for (w, s) in samples.iter_mut().enumerate() {
+            let busy = std::mem::replace(&mut self.worker_busy[w], Duration::ZERO);
+            s.cpu_cores = busy.as_secs_f64() / secs;
+            s.nic_backlog = self.nics[w].backlog(now);
+        }
+        for rv in &self.rg.vertices {
+            if !self.dead_workers[rv.worker.index()]
+                && !self.dead_tasks[rv.id.index()]
+                && self.rg.members(rv.job_vertex).contains(&rv.id)
+            {
+                samples[rv.worker.index()].live_members += 1;
+            }
+        }
+        // Cooldown: let the previous move settle into fresh measurements
+        // before judging saturation again (the drained NIC of the last
+        // source worker looks hot for a while after the move).
+        if now < self.next_migration_at {
+            return;
+        }
+        let Some((from, kind)) = migration::find_saturated(&samples, &self.dead_workers, cores, &mcfg)
+        else {
+            return;
+        };
+        let Some(to) = migration::pick_target(&samples, &self.dead_workers, from, cores, &mcfg)
+        else {
+            return;
+        };
+        let Some((job, v)) = self.pick_migratable(from) else {
+            return;
+        };
+        self.next_migration_at =
+            now + self.cfg.measurement_interval + self.cfg.measurement_interval;
+        self.log(
+            now,
+            format!("migrate {v} planned: {from} {kind}-saturated -> {to} ({job})"),
+        );
+        self.queue.push(
+            now + self.cfg.cluster.control_delay,
+            Ev::ApplyAction { action: Action::MigrateInstance { job, vertex: v, from, to } },
+        );
+    }
+
+    /// The instance a saturated worker should shed: the first (lowest
+    /// vertex id) live, unchained, movable instance of a running job —
+    /// preferring one with out-channels (moving a sender takes egress
+    /// off a NIC-saturated worker), falling back to a sink.  Movability
+    /// follows the scale-up re-partitioning rules (non-source, unpinned,
+    /// stateless), minus the members>=2 floor: a migration moves the
+    /// instance, it does not retire it, so singleton groups are fine.
+    fn pick_migratable(&self, from: WorkerId) -> Option<(JobId, VertexId)> {
+        let mut fallback = None;
+        for rv in self.rg.vertices_on_worker(from) {
+            let v = rv.id;
+            let jv = rv.job_vertex;
+            let job = self.job_of_vertex[v.index()];
+            if self.sched.state(job) != Some(JobState::Running) {
+                continue;
+            }
+            if self.dead_tasks[v.index()] || self.tasks[v.index()].chain.is_some() {
+                continue;
+            }
+            if !self.rg.members(jv).contains(&v) {
+                continue;
+            }
+            let jvx = self.job.vertex(jv);
+            if jvx.is_source || jvx.pin_unchainable {
+                continue;
+            }
+            if !matches!(
+                self.job_specs[jv.index()].semantics,
+                Semantics::Transform | Semantics::Sink
+            ) {
+                continue;
+            }
+            if self.rg.out_channels(v).is_empty() {
+                if fallback.is_none() {
+                    fallback = Some((job, v));
+                }
+            } else {
+                return Some((job, v));
+            }
+        }
+        fallback
+    }
+
+    /// Enact a migration: move instance `v` of `job` from worker `from`
+    /// to `to`, loss-free and ledger-balanced.  Pending sender-side
+    /// buffers on its in-channels flush first (their items transit
+    /// under the old routing), as do the instance's own out-buffers
+    /// (they serialise from the old worker's NIC); then the runtime
+    /// graph reassigns the instance, the slot reservation moves with
+    /// it, and the job's QoS setup is rebuilt for the new placement.
+    /// Task state (queue, busy horizon) travels with the instance.
+    ///
+    /// Stale decisions are refused, never panicked on: a crash of
+    /// either worker on the same tick, a death or retirement of the
+    /// instance, or a placement that changed since the decision all
+    /// drop the action (mirroring the scale-down/crash race rule).
+    pub(crate) fn apply_migration(
+        &mut self,
+        now: Time,
+        job: JobId,
+        v: VertexId,
+        from: WorkerId,
+        to: WorkerId,
+    ) -> bool {
+        if from == to
+            || self.sched.state(job) != Some(JobState::Running)
+            || self.dead_workers[from.index()]
+            || self.dead_workers[to.index()]
+            || self.dead_tasks[v.index()]
+            || self.rg.worker(v) != from
+            || self.job_of_vertex[v.index()] != job
+            || self.tasks[v.index()].chain.is_some()
+        {
+            return false;
+        }
+        let jv = self.rg.vertex(v).job_vertex;
+        if !self.rg.members(jv).contains(&v) {
+            return false;
+        }
+        let jvx = self.job.vertex(jv);
+        if jvx.is_source || jvx.pin_unchainable {
+            return false;
+        }
+        match self.job_specs[jv.index()].semantics {
+            Semantics::Transform | Semantics::Sink => {}
+            _ => return false,
+        }
+        // Loss-free hand-off: whatever is buffered under the old
+        // placement transits under the old placement.
+        let in_ch: Vec<ChannelId> = self.rg.in_channels(v).to_vec();
+        for cid in in_ch {
+            if !self.out_bufs[cid.index()].is_empty() {
+                let sender = self.rg.worker(self.rg.channel(cid).from);
+                self.flush_channel(now, cid, sender);
+            }
+        }
+        let out_ch: Vec<ChannelId> = self.rg.out_channels(v).to_vec();
+        for cid in out_ch {
+            if !self.out_bufs[cid.index()].is_empty() {
+                self.flush_channel(now, cid, from);
+            }
+        }
+        // The source worker's reporter stops owning the instance's
+        // samples the moment it moves; the rebuild below swaps full
+        // interest maps in, but must not trip over a key recorded in
+        // between.
+        if let Some(r) = self
+            .jobs
+            .get_mut(job.index())
+            .and_then(|jq| jq.reporters.get_mut(&from))
+        {
+            r.retire_element(ElementKey::Vertex(v));
+        }
+        if self.rg.reassign_instance(v, to).is_err() {
+            return false;
+        }
+        self.sched.move_reservation(job, from, to);
+        self.stats.migrations += 1;
+        self.log(now, format!("migrate {v} {jv}: {from} -> {to} ({job})"));
+        self.after_topology_change(job.index(), "migration");
+        true
+    }
+
+    // ------------------------------------------------------------------
     // Job lifecycle (multi-job scheduler)
     // ------------------------------------------------------------------
 
@@ -689,6 +903,9 @@ impl SimCluster {
                     }
                 }
             }
+            // Close the governance loop before re-admitting queued jobs:
+            // their verdicts should see refreshed holder demand.
+            self.governance_tick(now);
         }
         for id in self.sched.queued_jobs() {
             let j = id.index();
@@ -1129,5 +1346,180 @@ impl SimCluster {
         // period, workers losing it stop being monitored).
         let reporter_workers: Vec<WorkerId> = self.jobs[j].reporters.keys().copied().collect();
         self.jobs[j].detector.track(reporter_workers, now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::pipeline::multi::holder_submission;
+    use crate::sched::PlacementPolicy;
+
+    /// A 3-worker multi cluster with one running 6-slot holder job,
+    /// advanced past QoS warm-up so migrations have live state to move.
+    fn cluster_with_holder() -> (SimCluster, JobId) {
+        let mut cluster = SimCluster::new_multi(
+            3,
+            4,
+            PlacementPolicy::Spread,
+            EngineConfig::default().fully_optimized(),
+        )
+        .unwrap();
+        let a = cluster
+            .submit_job(
+                holder_submission("holder", Duration::from_secs(300)).unwrap(),
+                Duration::ZERO,
+            )
+            .unwrap();
+        cluster.run(Duration::from_secs(30), None).unwrap();
+        assert_eq!(cluster.job_state(a), Some(JobState::Running));
+        (cluster, a)
+    }
+
+    /// One movable Transcoder instance of the holder job, with its
+    /// current worker and a distinct live target.
+    fn movable_transcoder(cluster: &SimCluster, a: JobId) -> (VertexId, WorkerId, WorkerId) {
+        let jv = cluster
+            .job
+            .vertex_of_job(a, "Transcoder")
+            .expect("holder has a Transcoder group")
+            .id;
+        let v = *cluster
+            .rg
+            .members(jv)
+            .iter()
+            .find(|&&v| cluster.tasks[v.index()].chain.is_none())
+            .expect("an unchained Transcoder instance");
+        let from = cluster.rg.worker(v);
+        let to = WorkerId((from.0 + 1) % 3);
+        (v, from, to)
+    }
+
+    /// Regression (stale capacity after a worker crash): a queued job's
+    /// verdict must be recomputed on the crash-handling path itself, not
+    /// at the next periodic scheduler tick — a 6-slot job queued behind
+    /// a bounded holder becomes infeasible the moment the pool shrinks
+    /// from 6 to 4 slots, and must flip to a typed rejection promptly.
+    #[test]
+    fn worker_crash_recomputes_queued_verdicts_immediately() {
+        let mut cluster = SimCluster::new_multi(
+            3,
+            2,
+            PlacementPolicy::Spread,
+            EngineConfig::default().fully_optimized(),
+        )
+        .unwrap();
+        let a = cluster
+            .submit_job(
+                holder_submission("holder", Duration::from_secs(120)).unwrap(),
+                Duration::ZERO,
+            )
+            .unwrap();
+        let b = cluster
+            .submit_job(
+                holder_submission("waiter", Duration::from_secs(60)).unwrap(),
+                Duration::from_secs(10),
+            )
+            .unwrap();
+        cluster.run(Duration::from_secs(20), None).unwrap();
+        assert_eq!(cluster.job_state(a), Some(JobState::Running));
+        assert_eq!(cluster.job_state(b), Some(JobState::Queued));
+
+        // The master's sweep path reacts to a confirmed-dead worker.
+        let t = cluster.now();
+        cluster.handle_worker_failure(t, WorkerId(2));
+        // One control delay later — far inside the current measurement
+        // interval, so a verdict still quoting the pre-crash pool would
+        // be visible here as a stale Queued state.
+        cluster
+            .run(t.since(Time::ZERO) + Duration::from_secs(1), None)
+            .unwrap();
+        assert_eq!(
+            cluster.job_state(b),
+            Some(JobState::Rejected),
+            "queued job must be re-judged against the shrunken pool immediately"
+        );
+        let reason = cluster
+            .scheduler()
+            .entry(b)
+            .and_then(|e| e.reject_reason().map(|r| r.tag()));
+        assert_eq!(reason, Some("exceeds-capacity"));
+    }
+
+    /// Regression (migration/crash same-tick race, source side): a
+    /// planned migration whose source worker crashes on the same tick
+    /// pops *after* the crash (insertion order) and must be dropped —
+    /// no panic, no ledger movement, no migration counted.
+    #[test]
+    fn migration_racing_a_source_worker_crash_is_dropped() {
+        let (mut cluster, a) = cluster_with_holder();
+        let (v, from, to) = movable_transcoder(&cluster, a);
+        let t = cluster.now() + Duration::from_secs(1);
+        cluster.queue.push(t, Ev::WorkerCrash { worker: from.0 });
+        cluster.queue.push(
+            t,
+            Ev::ApplyAction { action: Action::MigrateInstance { job: a, vertex: v, from, to } },
+        );
+        cluster
+            .run(t.since(Time::ZERO) + Duration::from_secs(1), None)
+            .unwrap();
+        assert!(cluster.worker_dead(from));
+        assert_eq!(cluster.stats.migrations, 0, "stale migration must be dropped");
+        assert!(cluster.dead_tasks[v.index()], "the crash, not the move, owns the instance");
+        assert_eq!(
+            cluster.scheduler().entry(a).unwrap().reserved_on(to),
+            2,
+            "no reservation may move with a dropped migration"
+        );
+        cluster.routing_consistent().unwrap();
+    }
+
+    /// Regression (migration/crash same-tick race, target side): same
+    /// rule when the *target* worker is the one that crashed.
+    #[test]
+    fn migration_racing_a_target_worker_crash_is_dropped() {
+        let (mut cluster, a) = cluster_with_holder();
+        let (v, from, to) = movable_transcoder(&cluster, a);
+        let t = cluster.now() + Duration::from_secs(1);
+        cluster.queue.push(t, Ev::WorkerCrash { worker: to.0 });
+        cluster.queue.push(
+            t,
+            Ev::ApplyAction { action: Action::MigrateInstance { job: a, vertex: v, from, to } },
+        );
+        cluster
+            .run(t.since(Time::ZERO) + Duration::from_secs(1), None)
+            .unwrap();
+        assert!(cluster.worker_dead(to));
+        assert_eq!(cluster.stats.migrations, 0, "migration onto a dead worker must be dropped");
+        assert_eq!(cluster.rg.worker(v), from, "the instance stays put");
+        assert!(!cluster.dead_tasks[v.index()]);
+        cluster.routing_consistent().unwrap();
+    }
+
+    /// Positive control for the race tests: without a crash, the same
+    /// action moves the instance and its slot reservation.
+    #[test]
+    fn a_clean_migration_moves_the_instance_and_its_reservation() {
+        let (mut cluster, a) = cluster_with_holder();
+        let (v, from, to) = movable_transcoder(&cluster, a);
+        let before_from = cluster.scheduler().entry(a).unwrap().reserved_on(from);
+        let before_to = cluster.scheduler().entry(a).unwrap().reserved_on(to);
+        let total = cluster.scheduler().entry(a).unwrap().reserved();
+        assert!(cluster.migrate_instance(v, to));
+        assert_eq!(cluster.stats.migrations, 1);
+        assert_eq!(cluster.rg.worker(v), to);
+        let e = cluster.scheduler().entry(a).unwrap();
+        assert_eq!(e.reserved_on(from), before_from - 1);
+        assert_eq!(e.reserved_on(to), before_to + 1);
+        assert_eq!(e.reserved(), total, "migration must not mint or leak slots");
+        cluster.routing_consistent().unwrap();
+
+        // The moved pipeline keeps flowing and still balances.
+        cluster.run(Duration::from_secs(120), None).unwrap();
+        let t = cluster.now();
+        cluster.stop_sources_at(t);
+        cluster.run(Duration::from_secs(900), None).unwrap();
+        cluster.job_conservation(a).unwrap();
     }
 }

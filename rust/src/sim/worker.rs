@@ -418,7 +418,15 @@ impl SimCluster {
             };
             arrival = nic.send(now, chunk, local);
         }
-        self.stats.bytes_on_wire += if local { 0 } else { bytes };
+        if !local {
+            self.stats.bytes_on_wire += bytes;
+            // Live NIC tap for the governance loop: per-job wire bytes,
+            // drained into an egress-rate EWMA by the scheduler tick.
+            let job = self.job_of_channel(cid);
+            if let Some(b) = self.job_wire_bytes.get_mut(job.index()) {
+                *b += bytes;
+            }
+        }
         self.stats.buffers_flushed += sub_buffers;
         // Extra delivery delay of the sending task type (zero for Nephele
         // push channels; models HOP shuffle/HDFS handoff, §4.1.2).
@@ -531,9 +539,15 @@ impl SimCluster {
             .collect();
         for v in verts {
             let busy = std::mem::replace(&mut self.tasks[v.index()].busy_accum, Duration::ZERO);
+            let job = self.job_of_vertex[v.index()];
+            // Live-measurement tap for the governance loop: per-worker
+            // and per-job busy time, drained by the scheduler tick.
+            self.worker_busy[worker.index()] += busy;
+            if let Some(b) = self.job_busy.get_mut(job.index()) {
+                *b += busy;
+            }
             if self.vertex_monitored[v.index()] {
                 let util = busy.as_secs_f64() / interval.as_secs_f64();
-                let job = self.job_of_vertex[v.index()];
                 self.record(job, worker, Measurement::task_cpu(v, util.min(1.0)));
             }
         }
@@ -578,6 +592,9 @@ impl SimCluster {
                 // `apply_scaling` (the master's slot arbitration charges
                 // that job's reservations).
                 self.apply_scaling(now, group, delta, based_on);
+            }
+            Action::MigrateInstance { job, vertex, from, to } => {
+                self.apply_migration(now, job, vertex, from, to);
             }
             Action::Unresolvable { .. } => {}
         }
@@ -705,5 +722,8 @@ impl SimCluster {
             }
         }
         self.nics[w.index()] = Nic::new(&self.cfg.cluster);
+        // The governance tap dies with the worker: a crashed worker must
+        // not look CPU-loaded at the next scheduler tick.
+        self.worker_busy[w.index()] = Duration::ZERO;
     }
 }

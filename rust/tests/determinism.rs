@@ -13,7 +13,9 @@
 
 use nephele::baseline::hadoop::hadoop_online_job;
 use nephele::config::EngineConfig;
-use nephele::experiments::multi::{run_admission_phase, run_multi, run_preemption_phase};
+use nephele::experiments::multi::{
+    run_admission_phase, run_migration_phase, run_multi, run_preemption_phase,
+};
 use nephele::pipeline::failover::{failover_job, FailoverSpec};
 use nephele::pipeline::multi::MultiSpec;
 use nephele::pipeline::scale::ScaleSpec;
@@ -199,6 +201,28 @@ fn admission_and_preemption_phases_replay_byte_identically() {
     assert!(
         a.contains("slot reclaimed"),
         "the run must exercise preemption:\n{a}"
+    );
+}
+
+/// The governance loop's migration phase: live NIC-backlog measurements
+/// feed the saturation detector, the saturation detector feeds the
+/// event queue — the whole measurement → decision → migration chain
+/// must sit on the deterministic timeline and replay byte-identically.
+#[test]
+fn migration_phase_replays_byte_identically() {
+    let cfg = |seed| EngineConfig { seed, ..EngineConfig::default() };
+    let a = run_migration_phase(cfg(42), 1.1).unwrap().fingerprint;
+    let b = run_migration_phase(cfg(42), 1.1).unwrap().fingerprint;
+    assert_eq!(a, b, "migration phase must replay");
+    assert!(
+        a.contains("nic-saturated"),
+        "the run must exercise saturation-driven migration:\n{a}"
+    );
+    assert!(a.contains("migrations="), "migration counter in the fingerprint:\n{a}");
+    assert_ne!(
+        a,
+        run_migration_phase(cfg(7), 1.1).unwrap().fingerprint,
+        "a different seed must shift the trajectory"
     );
 }
 

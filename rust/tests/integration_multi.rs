@@ -8,7 +8,8 @@
 
 use nephele::config::EngineConfig;
 use nephele::experiments::multi::{
-    run_admission_phase, run_fairness_phase, run_preemption_phase, run_multi, verify_report,
+    run_admission_phase, run_fairness_phase, run_migration_phase, run_multi,
+    run_preemption_phase, verify_report,
 };
 use nephele::pipeline::multi::MultiSpec;
 use nephele::pipeline::surge::{surge_job, SurgeSpec};
@@ -384,4 +385,5 @@ fn governance_phases_hold_their_gates() {
     run_admission_phase(cfg, PlacementPolicy::Spread).expect("admission phase");
     run_fairness_phase(cfg).expect("fairness phase");
     run_preemption_phase(cfg, 1.1).expect("preemption phase");
+    run_migration_phase(cfg, 1.1).expect("migration phase");
 }

@@ -356,6 +356,110 @@ fn per_job_conservation_holds_for_two_concurrent_jobs_with_crashes() {
     check(10, per_job_conservation_two_jobs);
 }
 
+/// Per-job conservation under random *migrations* interleaved with a
+/// crash and recovery: a burst of arbitrary `migrate_instance` requests
+/// (many invalid — sources, dead workers, self-moves — which must be
+/// safe no-ops) is fired while two random pipelines run and a worker
+/// dies.  Every accepted move is loss-free and ledger-balanced, so each
+/// job's conservation ledger still closes after the drain and the
+/// ledgers still partition the cluster-wide counters.
+fn per_job_conservation_under_random_migrations(g: &mut Gen) -> PropResult {
+    use nephele::sched::{JobSpec, PlacementPolicy};
+
+    let workers = g.u32(2..=4);
+    let mut cfg = EngineConfig {
+        seed: g.u64(0..=u64::MAX),
+        ..EngineConfig::default()
+    }
+    .fully_optimized();
+    cfg.recovery.enable_recovery = g.bool();
+    let policy = match g.usize(0..=2) {
+        0 => PlacementPolicy::Spread,
+        1 => PlacementPolicy::Pack,
+        _ => PlacementPolicy::LeastLoaded,
+    };
+    let mut cluster = SimCluster::new_multi(workers, 72, policy, cfg)
+        .map_err(|e| format!("cluster build failed: {e}"))?;
+
+    let mut ids = Vec::new();
+    for j in 0..2u32 {
+        let rj = random_pipeline(g);
+        let id = cluster
+            .submit_job(
+                JobSpec::new(
+                    format!("rand-{j}"),
+                    rj.job,
+                    vec![rj.constraint],
+                    rj.specs,
+                    rj.sources,
+                )
+                .run_for(Duration::from_secs(g.u64(20..=45))),
+                Duration::from_secs(g.u64(0..=5)),
+            )
+            .map_err(|e| format!("submission failed: {e}"))?;
+        ids.push(id);
+    }
+    cluster.schedule_failures(&[FailureSpec {
+        worker: WorkerId(g.u32(0..=workers - 1)),
+        at: Duration::from_secs(g.u64(5..=40)),
+    }]);
+
+    // Migration storm across the crash window: any instance of any
+    // group to any worker, valid or not.
+    let mut clock = Duration::from_secs(10);
+    for _round in 0..12 {
+        cluster
+            .run(clock, None)
+            .map_err(|e| format!("sim engine error: {e}"))?;
+        let groups: Vec<JobVertexId> = cluster.job.vertices.iter().map(|v| v.id).collect();
+        let jv = groups[g.usize(0..=groups.len() - 1)];
+        let insts = cluster.instances_of(jv);
+        if !insts.is_empty() {
+            let v = insts[g.usize(0..=insts.len() - 1)];
+            let to = WorkerId(g.u32(0..=workers - 1));
+            // Invalid requests (sources, pinned, dead endpoints,
+            // self-moves, chained tasks) must refuse, not panic.
+            let _ = cluster.migrate_instance(v, to);
+        }
+        clock = clock + Duration::from_secs(4);
+    }
+
+    cluster
+        .run(Duration::from_secs(70), None)
+        .map_err(|e| format!("sim engine error: {e}"))?;
+    let t = cluster.now();
+    cluster.stop_sources_at(t);
+    cluster
+        .run(Duration::from_secs(1800), None)
+        .map_err(|e| format!("sim engine error: {e}"))?;
+
+    let mut sum_ingested = 0;
+    let mut sum_sinks = 0;
+    let mut sum_lost = 0;
+    for &id in &ids {
+        let ledger = cluster.job_ledger(id);
+        cluster
+            .job_conservation(id)
+            .map_err(|e| format!("per-job conservation after migrations: {e}"))?;
+        sum_ingested += ledger.items_ingested;
+        sum_sinks += ledger.at_sinks;
+        sum_lost += ledger.accounted_lost;
+    }
+    cluster
+        .routing_consistent()
+        .map_err(|e| format!("routing after migrations: {e}"))?;
+    let s = &cluster.stats;
+    prop_assert_eq(sum_ingested, s.items_ingested, "ledgers partition ingestion")?;
+    prop_assert_eq(sum_sinks, s.e2e_count, "ledgers partition sink arrivals")?;
+    prop_assert_eq(sum_lost, s.accounted_lost, "ledgers partition losses")?;
+    Ok(())
+}
+
+#[test]
+fn per_job_conservation_holds_under_random_migrations_and_crashes() {
+    check(8, per_job_conservation_under_random_migrations);
+}
+
 /// Weighted fair sharing of contested elastic slots: two running jobs
 /// with random weights fire interleaved (randomly ordered) scale-up
 /// requests until the pool is exhausted.  The deficit rule must (a)
@@ -594,6 +698,7 @@ mod escalation {
             Action::SetBufferSize { .. } => "buffer",
             Action::ChainTasks { .. } => "chain",
             Action::ScaleTasks { .. } => "scale",
+            Action::MigrateInstance { .. } => "migrate",
             Action::Unresolvable { .. } => "unresolvable",
         }
     }

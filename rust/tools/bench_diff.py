@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Diff a fresh hot-path bench run against the committed baseline.
+
+Usage: bench_diff.py BASELINE.json CURRENT.json
+
+Both files are Recorder JSON (``BENCH_hot_paths.json`` format).  Entries
+are matched by name with digit runs normalised (``200000 sim-shaped
+pops`` == ``2000000 sim-shaped pops``), so quick/full pop counts and
+config-derived entry counts don't break the pairing.  The gate is
+deliberately loose — CI runners vary a lot — and only fails when:
+
+  * a matched events/sec entry drops below 30% of the baseline, or
+  * the headline ``event_core_speedup`` falls below 2.0x (the ROADMAP
+    perf target is >=3x; 2.0 leaves room for runner noise).
+
+Everything else (faster runs, unmatched entries, missing throughput
+numbers) is reported but non-fatal.  Stdlib only — no third-party
+dependencies.
+"""
+
+import json
+import re
+import sys
+
+REGRESSION_RATIO = 0.30
+MIN_SPEEDUP = 2.0
+
+
+def normalise(name):
+    return re.sub(r"\d+", "N", name)
+
+
+def by_name(report):
+    out = {}
+    for entry in report.get("results", []):
+        out.setdefault(normalise(entry["name"]), entry)
+    return out
+
+
+def main(baseline_path, current_path):
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(current_path) as f:
+        current = json.load(f)
+
+    base_entries = by_name(baseline)
+    cur_entries = by_name(current)
+    failures = []
+
+    print(f"baseline: {baseline_path} (quick={baseline.get('quick')})")
+    print(f"current:  {current_path} (quick={current.get('quick')})")
+    print()
+    print(f"{'benchmark':<58} {'base ev/s':>12} {'cur ev/s':>12} {'ratio':>7}")
+    for key in base_entries:
+        base = base_entries[key]
+        cur = cur_entries.get(key)
+        if cur is None:
+            print(f"{base['name']:<58} {'-':>12} {'(missing)':>12} {'-':>7}")
+            continue
+        beps, ceps = base.get("events_per_sec"), cur.get("events_per_sec")
+        if not beps or not ceps:
+            print(f"{base['name']:<58} {'-':>12} {'-':>12} {'-':>7}")
+            continue
+        ratio = ceps / beps
+        flag = "  REGRESSION" if ratio < REGRESSION_RATIO else ""
+        print(f"{cur['name']:<58} {beps:>12.3e} {ceps:>12.3e} {ratio:>6.2f}x{flag}")
+        if ratio < REGRESSION_RATIO:
+            failures.append(
+                f"{cur['name']}: {ceps:.3e} ev/s is below "
+                f"{REGRESSION_RATIO:.0%} of baseline {beps:.3e}"
+            )
+    for key in cur_entries:
+        if key not in base_entries:
+            print(f"{cur_entries[key]['name']:<58} {'(new)':>12}")
+
+    base_speedup = baseline.get("event_core_speedup")
+    cur_speedup = current.get("event_core_speedup")
+    print()
+    print(f"event_core_speedup: baseline {base_speedup}, current {cur_speedup}")
+    if cur_speedup is not None and cur_speedup < MIN_SPEEDUP:
+        failures.append(
+            f"event_core_speedup {cur_speedup:.2f}x fell below the {MIN_SPEEDUP}x floor"
+        )
+
+    if failures:
+        print("\nFAIL:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("\nOK: no events/sec regression beyond the tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1], sys.argv[2]))
