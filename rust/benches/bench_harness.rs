@@ -91,12 +91,22 @@ impl Recorder {
     }
 
     /// Serialise everything to `path` (no serde in the offline build —
-    /// the format is flat enough to emit by hand).
-    pub fn write_json(&self, path: &str, bench_name: &str, quick: bool) -> std::io::Result<()> {
+    /// the format is flat enough to emit by hand).  `provenance` records
+    /// how the numbers came to be: the bench always writes "measured";
+    /// a hand-estimated committed baseline says "estimated" so the diff
+    /// tool can warn until a real run replaces it (`--refresh`).
+    pub fn write_json(
+        &self,
+        path: &str,
+        bench_name: &str,
+        quick: bool,
+        provenance: &str,
+    ) -> std::io::Result<()> {
         let mut out = String::new();
         out.push_str("{\n");
         out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(bench_name)));
         out.push_str(&format!("  \"quick\": {quick},\n"));
+        out.push_str(&format!("  \"provenance\": \"{}\",\n", json_escape(provenance)));
         for (name, value) in &self.scalars {
             out.push_str(&format!("  \"{}\": {},\n", json_escape(name), json_f64(*value)));
         }

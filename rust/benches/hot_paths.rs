@@ -1,7 +1,8 @@
 //! Hot-path microbenchmarks (the §Perf targets in EXPERIMENTS.md):
 //! event-core throughput (arena + time wheel vs the legacy binary
-//! heap), the channel send/flush path, QoS setup at paper scale,
-//! manager ingest/evaluate, and the buffer-sizing decision.
+//! heap), the sharded parallel runner vs its 1-shard serial oracle,
+//! the channel send/flush path, QoS setup at paper scale, manager
+//! ingest/evaluate, and the buffer-sizing decision.
 //!
 //! Run with `cargo bench --bench hot_paths`.  Results are persisted to
 //! `BENCH_hot_paths.json` (override with `NEPHELE_BENCH_OUT`); set
@@ -100,6 +101,89 @@ fn bench_event_core(rec: &mut Recorder, quick: bool) {
         n_pops as f64 / secs_new / 1e6,
     );
     rec.scalar("event_core_speedup", speedup);
+}
+
+/// The sharded-core scenario: the identical self-contained stream
+/// workload on the conservative parallel runner, once at 1 shard (the
+/// serial-oracle arm) and once at one shard per core (capped at 8).
+/// Event times are pure functions of the stream state, so both arms
+/// must process the identical event multiset up to the virtual-time
+/// horizon — count and order-independent digest are asserted equal —
+/// and the recorded speedup therefore compares equal work.
+fn bench_sharded_core(rec: &mut Recorder, quick: bool) {
+    use nephele::sim::shard::ShardedEventCore;
+
+    fn mix(mut x: u64) -> u64 {
+        x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^ (x >> 31)
+    }
+
+    let streams: u64 = 1024;
+    let virt_secs: u64 = if quick { 1 } else { 8 };
+    let virt = Time(virt_secs * 1_000_000);
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get() as u32);
+    let shards = cores.clamp(2, 8);
+
+    let run = |n_shards: u32| -> (u64, u64) {
+        let mut core: ShardedEventCore<u64> =
+            ShardedEventCore::new(n_shards, Duration::from_millis(10));
+        for s in 0..streams {
+            core.push_to((s % n_shards as u64) as u32, Time(100 + s % 1_000), mix(s));
+        }
+        let mut states = vec![(0u64, 0u64); n_shards as usize];
+        let report = core.run_parallel(virt, &mut states, |acc, _shard, t, ev, em| {
+            acc.0 += 1;
+            acc.1 ^= t.0.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ ev;
+            let next = mix(ev ^ t.0);
+            if next % 16 == 0 {
+                // Cross-shard hop at >= one lookahead horizon (a remote
+                // NIC transit); self-routes at one shard.
+                let dest = ((next >> 32) % n_shards as u64) as u32;
+                em.remote(dest, Time(t.0 + 10_000 + next % 5_000), next);
+            } else {
+                em.local(Time(t.0 + 100 + next % 1_800), next);
+            }
+        });
+        let count: u64 = states.iter().map(|s| s.0).sum();
+        assert_eq!(count, report.events, "runner event count disagrees with the states");
+        (count, states.iter().fold(0u64, |a, s| a ^ s.1))
+    };
+
+    let name_serial = format!(
+        "event core: sharded runner, 1 shard (serial oracle), {streams} streams, \
+         {virt_secs}s virtual"
+    );
+    let ((count_1, digest_1), secs_1) = bench_once(&name_serial, || run(1));
+    rec.add(&name_serial, 1, secs_1, Some(count_1 as f64 / secs_1));
+
+    let name_sharded = format!(
+        "event core: sharded runner, {shards} shards, {streams} streams, {virt_secs}s virtual"
+    );
+    let ((count_s, digest_s), secs_s) = bench_once(&name_sharded, || run(shards));
+    rec.add(&name_sharded, 1, secs_s, Some(count_s as f64 / secs_s));
+
+    assert_eq!(
+        (count_1, digest_1),
+        (count_s, digest_s),
+        "both arms must process the identical event multiset"
+    );
+    let speedup = secs_1 / secs_s;
+    println!(
+        "    -> {:.2} M ev/s serial vs {:.2} M ev/s on {shards} shards = {speedup:.2}x \
+         ({cores} cores)",
+        count_1 as f64 / secs_1 / 1e6,
+        count_s as f64 / secs_s / 1e6,
+    );
+    rec.scalar("sharded_core_speedup", speedup);
+    rec.scalar("cores", cores as f64);
+    if quick && cores >= 4 {
+        assert!(speedup >= 2.0, "sharded core below 2x on {cores} cores: {speedup:.2}x");
+    }
+    if !quick && cores >= 8 {
+        assert!(speedup >= 4.0, "sharded core below 4x on {cores} cores: {speedup:.2}x");
+    }
 }
 
 fn bench_event_queue(rec: &mut Recorder) {
@@ -336,6 +420,7 @@ fn main() {
     );
     let mut rec = Recorder::new();
     bench_event_core(&mut rec, quick);
+    bench_sharded_core(&mut rec, quick);
     bench_event_queue(&mut rec);
     bench_buffer_sizing(&mut rec);
     bench_qos_setup(&mut rec, quick);
@@ -344,7 +429,7 @@ fn main() {
     bench_video_sim_rate(&mut rec, quick);
     bench_multi_sim_rate(&mut rec, quick);
     bench_admission_path(&mut rec, quick);
-    match rec.write_json(&out_path, "hot_paths", quick) {
+    match rec.write_json(&out_path, "hot_paths", quick, "measured") {
         Ok(()) => println!("results written to {out_path}"),
         Err(e) => {
             eprintln!("failed to write {out_path}: {e}");

@@ -218,7 +218,8 @@ pub fn live_args(argv: &[String]) -> Result<nephele::live::LiveConfig> {
 
 /// Parse `nephele sim-multi`'s arguments (`argv` holds only the flags):
 /// `--quick --seed N --policy spread|pack|least-loaded --tolerance F
-/// --phase base|admission|fairness|preempt|migrate|all --quiet`.
+/// --threads N --phase base|admission|fairness|preempt|migrate|all
+/// --quiet`.
 /// Returns `(spec, cfg, policies, tolerance, verbose, phases)`.
 /// Without `--policy`, both standard policies (spread, pack) are run
 /// and verified; `--policy` narrows the set to one (useful for
@@ -267,6 +268,10 @@ pub fn multi_args(
                 tolerance = need(i)?.parse()?;
                 i += 2;
             }
+            "--threads" => {
+                cfg.threads = need(i)?.parse()?;
+                i += 2;
+            }
             "--phase" => {
                 let value = need(i)?;
                 phases =
@@ -285,7 +290,8 @@ pub fn multi_args(
             "--help" | "-h" => {
                 println!(
                     "usage: [--quick] [--seed N] [--policy spread|pack|least-loaded] \
-                     [--tolerance F] [--phase base|admission|fairness|preempt|migrate|all] \
+                     [--tolerance F] [--threads N] \
+                     [--phase base|admission|fairness|preempt|migrate|all] \
                      [--quiet]"
                 );
                 std::process::exit(0);

@@ -100,6 +100,12 @@ pub struct EngineConfig {
     pub recovery: RecoveryConfig,
     /// Deterministic seed for workloads, offsets, skew.
     pub seed: u64,
+    /// Event-core shards (`--threads`): 1 keeps the serial oracle,
+    /// N >= 2 partitions the event arena per worker group with merged,
+    /// sequential-equivalent pops — same-seed trajectories are
+    /// byte-identical across shard counts (enforced by the determinism
+    /// suite; see `sim::shard` and DESIGN.md §10).
+    pub threads: u32,
 }
 
 impl Default for EngineConfig {
@@ -111,6 +117,7 @@ impl Default for EngineConfig {
             manager: ManagerConfig::default(),
             recovery: RecoveryConfig::default(),
             seed: 42,
+            threads: 1,
         }
     }
 }

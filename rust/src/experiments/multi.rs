@@ -136,7 +136,7 @@ pub fn multi_fingerprint(stats: &SimStats) -> String {
          dropped={} unresolvable={} buffers={} chains={} ups={} downs={} rejected={} \
          rebuilds={} lost={} replayed={} crashed={} failovers={} reassigned={} \
          detached={} submitted={} completed={} cancelled={} jrejected={} queued={} \
-         preempted={} deferred={} migrations={} refreshes={} events={}\n",
+         preempted={} deferred={} migrations={} refreshes={} events={} clamps={}\n",
         stats.items_ingested,
         stats.items_delivered,
         stats.e2e_count,
@@ -167,6 +167,7 @@ pub fn multi_fingerprint(stats: &SimStats) -> String {
         stats.migrations,
         stats.admission_refreshes,
         stats.events_processed,
+        stats.past_clamps,
     );
     for (i, l) in stats.jobs.iter().enumerate() {
         let slot_digest = l

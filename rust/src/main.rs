@@ -11,7 +11,8 @@
 //! nephele sim-scale  [--quick] [--secs N] [--tail N] [--seed N]
 //!                    [--min-ratio F] [--quiet]
 //! nephele sim-multi  [--quick] [--seed N] [--policy spread|pack|least-loaded]
-//!                    [--tolerance F] [--phase base|admission|fairness|preempt|migrate|all]
+//!                    [--tolerance F] [--threads N]
+//!                    [--phase base|admission|fairness|preempt|migrate|all]
 //!                    [--quiet]
 //! nephele live       [--frames N] [--fps F] [--artifacts DIR]
 //! nephele info

@@ -103,6 +103,10 @@ pub struct SimStats {
     pub instances_reassigned: u64,
     pub instances_detached: u64,
     pub events_processed: u64,
+    /// Pushes scheduled in the past and clamped to `now` by the event
+    /// queue.  Always a caller logic error; clean scenarios assert zero
+    /// (the count is part of the replay fingerprint, `clamps=`).
+    pub past_clamps: u64,
     /// Multi-job lifecycle counters.
     pub jobs_submitted: u64,
     pub jobs_completed: u64,

@@ -23,9 +23,10 @@
 //! unbounded slots — and scenario code written against it compiles and
 //! behaves unchanged.
 
-use super::engine::{Ev, EventCore};
+use super::engine::Ev;
 use super::flow::{ItemRec, OutBufferState};
-use super::net::Nic;
+use super::net::{min_transit, Nic};
+use super::shard::EngineQueue;
 use super::task::{TaskSpec, TaskState};
 use crate::actions::arbiter::BufferUpdateArbiter;
 use crate::config::{EngineConfig, FailureSpec};
@@ -136,7 +137,10 @@ pub struct SimCluster {
     /// HashMap-based gate costs a hash per emitted item).
     pub(crate) next_tag_at: Vec<Time>,
     pub(crate) next_task_sample_at: Vec<Time>,
-    pub(crate) queue: EventCore<Ev>,
+    /// Event queue: the serial `EventCore` oracle at `cfg.threads <= 1`,
+    /// the per-worker-group sharded core above that (same pop order by
+    /// construction — see `super::shard`).
+    pub(crate) queue: EngineQueue,
     pub(crate) rng: Rng,
     /// Chained execution groups: member tasks share one thread.
     pub(crate) chain_members: Vec<Vec<VertexId>>,
@@ -279,7 +283,7 @@ impl SimCluster {
             vertex_monitored,
             next_tag_at: vec![Time::ZERO; n_channels],
             next_task_sample_at: vec![Time::ZERO; n_vertices],
-            queue: EventCore::new(),
+            queue: EngineQueue::new(cfg.threads, min_transit(&cfg.cluster)),
             rng,
             chain_members: Vec::new(),
             chain_busy: Vec::new(),
@@ -301,6 +305,7 @@ impl SimCluster {
         };
         let reporter_workers: Vec<WorkerId> = cluster.jobs[0].reporters.keys().copied().collect();
         cluster.jobs[0].detector.track(reporter_workers, Time::ZERO);
+        cluster.sync_queue_topology();
         cluster.schedule_initial();
         Ok(cluster)
     }
@@ -361,7 +366,7 @@ impl SimCluster {
             vertex_monitored: Vec::new(),
             next_tag_at: Vec::new(),
             next_task_sample_at: Vec::new(),
-            queue: EventCore::new(),
+            queue: EngineQueue::new(cfg.threads, min_transit(&cfg.cluster)),
             rng,
             chain_members: Vec::new(),
             chain_busy: Vec::new(),
@@ -381,6 +386,7 @@ impl SimCluster {
             next_migration_at: Time::ZERO,
             stats: SimStats::default(),
         };
+        cluster.sync_queue_topology();
         // Worker CPU sampling runs for the cluster's whole life,
         // independent of which jobs' instances currently occupy it.
         let interval = cluster.cfg.measurement_interval;
@@ -532,7 +538,39 @@ impl SimCluster {
             self.stats.events_processed += 1;
             self.handle(now, ev)?;
         }
+        // Surface past-time scheduling: a push that had to be clamped to
+        // `now` is a caller logic error the queue used to mask silently.
+        // The count lands in the fingerprint, so clean scenarios assert
+        // `clamps=0` and a regression shows up as a replay divergence.
+        self.stats.past_clamps = self.queue.clamped_pushes();
         Ok(())
+    }
+
+    /// Refresh the sharded queue's advisory topology maps (no-op for the
+    /// serial oracle).  Called at the topology chokepoints: cluster
+    /// construction, job admission, and every failover/scaling/migration
+    /// rebuild (`after_topology_change`).  The maps only steer events to
+    /// worker shards — with merged sequential-equivalent pops a stale
+    /// entry can never change the trajectory, so refreshing *after* the
+    /// topology settles is always safe.
+    pub(crate) fn sync_queue_topology(&mut self) {
+        let source_workers: Vec<u32> = self
+            .sources
+            .iter()
+            .map(|s| {
+                let members = self.rg.members(s.target);
+                if members.is_empty() {
+                    0
+                } else {
+                    // Failure handling reconnects external streams to a
+                    // surviving member, index modulo live members —
+                    // mirrored from `on_packet`.
+                    let v = members[s.target_subtask as usize % members.len()];
+                    self.rg.worker(v).0
+                }
+            })
+            .collect();
+        self.queue.sync_topology(&self.rg, &source_workers);
     }
 
     fn handle(&mut self, now: Time, ev: Ev) -> Result<(), SimError> {
@@ -1005,5 +1043,28 @@ mod tests {
         assert_eq!(cluster.stats.scale_ups, 0);
         assert_eq!(cluster.stats.scaling_rejected, 1);
         assert_eq!(cluster.parallelism_of(ingest), 2);
+    }
+
+    /// Regression for the silently-masked past-time push: `EventCore::push`
+    /// clamps a stale `at` to `now` to stay monotonic, but the clamp used
+    /// to vanish without a trace.  A clean run must report zero clamps,
+    /// and a deliberately-stale push must be detected — on the serial
+    /// oracle and on the sharded core alike.
+    #[test]
+    fn stale_push_is_counted_not_masked() {
+        for threads in [1u32, 4] {
+            let mut cfg = EngineConfig::default();
+            cfg.threads = threads;
+            let mut cluster = SimCluster::new_multi(2, 4, PlacementPolicy::Spread, cfg).unwrap();
+            cluster.run(Duration::from_secs(20), None).unwrap();
+            assert_eq!(cluster.stats.past_clamps, 0, "clean run must not clamp");
+            assert!(cluster.now() > Time(1_000_000), "the cluster actually ran");
+            // An ad-hoc scheduler tick scheduled in the past: harmless in
+            // effect (it fires immediately at `now`), but a logic error
+            // the queue must count rather than mask.
+            cluster.queue.push(Time(1_000_000), Ev::SchedTick { periodic: false });
+            cluster.run(Duration::from_secs(21), None).unwrap();
+            assert_eq!(cluster.stats.past_clamps, 1, "stale push went undetected");
+        }
     }
 }

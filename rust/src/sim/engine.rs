@@ -151,6 +151,11 @@ pub struct EventCore<E> {
     seq: u64,
     now: Time,
     len: usize,
+    /// Pushes whose `at` lay in the past and were clamped to `now`.
+    /// A past-time push is a logic error in the caller that used to be
+    /// silently masked; the counter surfaces it (`SimStats.past_clamps`)
+    /// and the determinism suite asserts it stays zero on clean runs.
+    clamped: u64,
 }
 
 impl<E> Default for EventCore<E> {
@@ -171,6 +176,7 @@ impl<E> EventCore<E> {
             seq: 0,
             now: Time::ZERO,
             len: 0,
+            clamped: 0,
         }
     }
 
@@ -187,10 +193,45 @@ impl<E> EventCore<E> {
         self.len == 0
     }
 
+    /// How many pushes scheduled in the past and were clamped to `now`.
+    pub fn clamped_pushes(&self) -> u64 {
+        self.clamped
+    }
+
+    /// Next internal sequence number (sharded-core bookkeeping: after a
+    /// parallel run the global counter must stay ahead of every shard).
+    pub fn next_seq(&self) -> u64 {
+        self.seq
+    }
+
     /// Schedule `ev` at absolute time `at`.  Scheduling in the past is a
-    /// logic error in the caller; we clamp to `now` to stay monotonic.
+    /// logic error in the caller; we clamp to `now` to stay monotonic —
+    /// but no longer silently: every clamp is counted so tests can
+    /// assert the run was clean (see [`Self::clamped_pushes`]).
     pub fn push(&mut self, at: Time, ev: E) {
+        if at < self.now {
+            self.clamped += 1;
+        }
         let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.insert(at, seq, ev);
+    }
+
+    /// Schedule `ev` with a caller-supplied sequence number and no
+    /// past-time clamping.  Used by the sharded core, which assigns
+    /// *global* sequence numbers (so the merged pop order is identical
+    /// to the serial core's) and clamps against the *global* frontier
+    /// before the event ever reaches a shard — a shard's local `now`
+    /// lags the global one, so clamping here again would be wrong.
+    /// The internal counter is kept ahead of `seq` so interleaved
+    /// [`Self::push`] calls cannot collide with caller-supplied keys.
+    pub fn push_keyed(&mut self, at: Time, seq: u64, ev: E) {
+        self.seq = self.seq.max(seq + 1);
+        self.insert(at, seq, ev);
+    }
+
+    fn insert(&mut self, at: Time, seq: u64, ev: E) {
         let idx = match self.free.pop() {
             Some(i) => {
                 self.slots[i as usize] = Some(ev);
@@ -201,8 +242,7 @@ impl<E> EventCore<E> {
                 (self.slots.len() - 1) as u32
             }
         };
-        let key = Key { at, seq: self.seq, idx };
-        self.seq += 1;
+        let key = Key { at, seq, idx };
         self.len += 1;
         let bucket = at.0 >> BUCKET_SHIFT;
         if bucket <= self.cursor {
@@ -231,6 +271,15 @@ impl<E> EventCore<E> {
     pub fn peek_time(&mut self) -> Option<Time> {
         self.prime();
         self.near.peek().map(|Reverse(k)| k.at)
+    }
+
+    /// Peek at the next event's full ordering key `(at, seq)`.  The
+    /// sharded core merges shards by scanning every shard's head key and
+    /// popping the global minimum — with global sequence numbers this
+    /// reproduces the serial pop order exactly.
+    pub fn peek_key(&mut self) -> Option<(Time, u64)> {
+        self.prime();
+        self.near.peek().map(|Reverse(k)| (k.at, k.seq))
     }
 
     /// Ensure `near` holds the globally next event (drain wheel buckets
@@ -322,10 +371,53 @@ mod tests {
     fn now_advances_and_past_push_clamps() {
         let mut q = EventCore::new();
         q.push(Time(100), "x");
+        assert_eq!(q.clamped_pushes(), 0, "future pushes never clamp");
         assert_eq!(q.pop().unwrap().0, Time(100));
         assert_eq!(q.now(), Time(100));
         q.push(Time(50), "past");
         assert_eq!(q.pop().unwrap().0, Time(100), "clamped to now");
+        assert_eq!(q.clamped_pushes(), 1, "the stale push is detected, not masked");
+        // Exactly-at-now is legal scheduling, not a clamp.
+        q.push(Time(100), "at-now");
+        assert_eq!(q.clamped_pushes(), 1);
+    }
+
+    #[test]
+    fn keyed_pushes_reproduce_serial_order_and_skip_clamping() {
+        // Two shard-local cores fed with globally-sequenced keys must
+        // merge (by minimum (at, seq) head) into the serial order.
+        let mut serial = EventCore::new();
+        let mut s0 = EventCore::new();
+        let mut s1 = EventCore::new();
+        let evs = [(Time(40), 0u64), (Time(10), 1), (Time(10), 2), (Time(25), 3)];
+        for (i, &(at, seq)) in evs.iter().enumerate() {
+            serial.push(at, i as u32);
+            let shard = if i % 2 == 0 { &mut s0 } else { &mut s1 };
+            shard.push_keyed(at, seq, i as u32);
+        }
+        let mut merged = Vec::new();
+        loop {
+            let h0 = s0.peek_key();
+            let h1 = s1.peek_key();
+            let from0 = match (h0, h1) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(a), Some(b)) => a < b,
+            };
+            let (t, v) = if from0 { s0.pop() } else { s1.pop() }.unwrap();
+            merged.push((t, v));
+        }
+        let serial_order: Vec<(Time, u32)> = std::iter::from_fn(|| serial.pop()).collect();
+        assert_eq!(merged, serial_order);
+        // push_keyed never clamps: the sharded layer clamps against the
+        // global frontier before routing.
+        let mut q = EventCore::new();
+        q.push(Time(100), 1u32);
+        q.pop();
+        q.push_keyed(Time(5), 7, 2u32);
+        assert_eq!(q.clamped_pushes(), 0);
+        assert_eq!(q.pop().unwrap().0, Time(5), "keyed push keeps its past time");
     }
 
     #[test]

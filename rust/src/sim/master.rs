@@ -277,6 +277,9 @@ impl SimCluster {
             self.next_tag_at.resize(nc, Time::ZERO);
             self.next_task_sample_at.resize(nv, Time::ZERO);
         }
+        // The sharded queue's worker-affinity maps follow every topology
+        // change (advisory only: routing never affects the pop order).
+        self.sync_queue_topology();
     }
 
     // ------------------------------------------------------------------
@@ -1007,6 +1010,9 @@ impl SimCluster {
             self.job_of_source.push(id);
             self.queue.push(now + s.offset, Ev::Packet { source: idx });
         }
+        // New vertices, channels and sources joined the union graph:
+        // refresh the sharded queue's worker-affinity maps.
+        self.sync_queue_topology();
         self.stats.jobs_submitted += 1;
         self.log(
             now,

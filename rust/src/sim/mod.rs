@@ -13,9 +13,11 @@
 //!
 //! The engine is split by responsibility behind the [`SimCluster`]
 //! facade (DESIGN.md §6): [`engine`] (event arena + time wheel, typed
-//! errors), [`worker`] (data path and crash destruction), [`master`]
-//! (liveness sweep, recovery, scaling, QoS rebuilds) and [`accounting`]
-//! (the item-conservation ledger).
+//! errors), [`shard`] (per-worker-group partition of the arena with
+//! conservative lookahead windows, DESIGN.md §10), [`worker`] (data
+//! path and crash destruction), [`master`] (liveness sweep, recovery,
+//! scaling, QoS rebuilds) and [`accounting`] (the item-conservation
+//! ledger).
 
 pub mod accounting;
 pub mod cluster;
@@ -25,6 +27,7 @@ pub mod flow;
 pub mod master;
 pub mod metrics;
 pub mod net;
+pub mod shard;
 pub mod task;
 pub mod worker;
 
@@ -34,4 +37,5 @@ pub use engine::{EventCore, SimError};
 pub use events::EventQueue;
 pub use flow::{Buffer, ItemRec};
 pub use net::Nic;
+pub use shard::{Emitter, ShardRunReport, ShardedEventCore};
 pub use task::{KeyMap, OutBytes, Route, Semantics, TaskSpec};

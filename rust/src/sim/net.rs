@@ -6,6 +6,17 @@
 use crate::config::ClusterConfig;
 use crate::util::time::{Duration, Time};
 
+/// Minimum transit of any cross-worker buffer: per-buffer overhead plus
+/// the base network latency, with zero wire time and an idle link.  No
+/// delivery between two workers can arrive earlier than this after its
+/// send, which makes it the conservative lookahead horizon of the
+/// sharded event core (`super::shard`, DESIGN.md §10): a shard may
+/// advance `min_transit` past the global frontier before it must hear
+/// from its peers.
+pub fn min_transit(cfg: &ClusterConfig) -> Duration {
+    cfg.per_buffer_overhead + cfg.base_latency
+}
+
 /// Egress link state of one worker.
 #[derive(Debug, Clone)]
 pub struct Nic {
@@ -93,6 +104,17 @@ mod tests {
         assert!((a.as_secs_f64() - 0.018).abs() < 0.001, "local {a}");
         // And the egress link frontier is untouched.
         assert_eq!(n.backlog(Time::ZERO), crate::util::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn min_transit_lower_bounds_every_remote_send() {
+        let cfg = ClusterConfig::default();
+        let mut n = Nic::new(&cfg);
+        let floor = min_transit(&cfg);
+        assert!(floor > Duration::ZERO);
+        // Even a 1-byte buffer on an idle link pays at least the floor.
+        let arrival = n.send(Time::ZERO, 1, false);
+        assert!(arrival.since(Time::ZERO) >= floor, "arrival {arrival} under floor");
     }
 
     #[test]

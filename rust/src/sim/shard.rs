@@ -1,0 +1,528 @@
+//! Sharded parallel event core with conservative synchronization.
+//!
+//! [`ShardedEventCore`] partitions the event population across several
+//! [`EventCore`] shards — one per worker group — so the simulator's hot
+//! path can run on threads.  Two execution modes share the same storage:
+//!
+//! * **Merged pops** ([`ShardedEventCore::pop`]): every push carries a
+//!   *global* sequence number, and a pop scans the shard heads for the
+//!   minimum `(time, seq)` key.  This is sequential-equivalent — the pop
+//!   order is byte-identical to one serial [`EventCore`] fed the same
+//!   pushes — which is what the in-cluster run loop uses so same-seed
+//!   fingerprints stay identical across shard counts {1, 2, 4, …}.
+//!   The serial core remains intact as the differential oracle, exactly
+//!   as the legacy heap was kept when the time-wheel core landed.
+//!
+//! * **Conservative windows** ([`ShardedEventCore::run_parallel`]): one
+//!   thread per shard advances through bounded-lookahead windows.  The
+//!   lookahead horizon is the minimum cross-shard (NIC transit) latency:
+//!   since any event one shard schedules onto another lies at least one
+//!   transit beyond the sender's clock, every shard may safely process
+//!   everything strictly before `frontier + lookahead` without hearing
+//!   from its peers.  At the window barrier the shards exchange
+//!   cross-shard batches (sorted by `(time, source shard, send order)`
+//!   so admission into the receiving wheel is schedule-deterministic),
+//!   publish their new local minima, and agree on the next frontier.
+//!   The result is independent of thread interleaving by construction:
+//!   a shard's trajectory depends only on its own queue and the sorted
+//!   batches it receives.
+//!
+//! [`EngineQueue`] is the cluster-facing switch: `--threads 1` keeps the
+//! serial oracle, `--threads N` shards the arena per worker group with
+//! merged pops.  Master-side governance events (scheduler ticks,
+//! liveness sweeps, admission, failures) always route to the
+//! coordinator shard 0, so governance observes one consistent frontier.
+
+use super::engine::{Ev, EventCore};
+use crate::graph::runtime::RuntimeGraph;
+use crate::util::time::{Duration, Time};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+
+/// Shard that receives every master-side / governance event.
+pub const COORDINATOR_SHARD: u32 = 0;
+
+/// A cross-shard event in flight between two window barriers.
+struct Relay<E> {
+    at: Time,
+    src: u32,
+    order: u64,
+    ev: E,
+}
+
+/// Handle the worker threads use to schedule follow-up events during
+/// [`ShardedEventCore::run_parallel`].
+pub struct Emitter<'a, E> {
+    shard: u32,
+    now: Time,
+    lookahead: Duration,
+    core: &'a mut EventCore<E>,
+    outboxes: &'a mut [Vec<Relay<E>>],
+    sent: &'a mut u64,
+}
+
+impl<E> Emitter<'_, E> {
+    /// Schedule a shard-local follow-up (same worker group; the vast
+    /// majority of traffic — task wake-ups, local deliveries).
+    pub fn local(&mut self, at: Time, ev: E) {
+        self.core.push(at, ev);
+    }
+
+    /// Schedule a cross-shard event.  The conservative protocol needs
+    /// `at >= now + lookahead` (one NIC transit); anything earlier is
+    /// lifted to the horizon so the receiving shard — which may already
+    /// have advanced to the window end — never sees time regress.
+    pub fn remote(&mut self, to: u32, at: Time, ev: E) {
+        if to == self.shard {
+            self.local(at, ev);
+            return;
+        }
+        let at = at.max(self.now + self.lookahead);
+        let order = *self.sent;
+        *self.sent += 1;
+        self.outboxes[to as usize].push(Relay { at, src: self.shard, order, ev });
+    }
+}
+
+/// Outcome of one [`ShardedEventCore::run_parallel`] drive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRunReport {
+    /// Events handled across all shards.
+    pub events: u64,
+    /// Synchronization windows (barrier rounds) it took.
+    pub windows: u64,
+}
+
+/// Per-worker-group partition of the event arena and time wheel.
+pub struct ShardedEventCore<E> {
+    shards: Vec<EventCore<E>>,
+    lookahead: Duration,
+    /// Global push sequence: makes merged pops sequential-equivalent.
+    seq: u64,
+    /// Global frontier (time of the last merged pop).
+    now: Time,
+    len: usize,
+    /// Past-time pushes clamped against the *global* frontier.
+    clamped: u64,
+}
+
+impl<E> ShardedEventCore<E> {
+    pub fn new(n_shards: u32, lookahead: Duration) -> Self {
+        let n = n_shards.max(1) as usize;
+        ShardedEventCore {
+            shards: (0..n).map(|_| EventCore::new()).collect(),
+            lookahead,
+            seq: 0,
+            now: Time::ZERO,
+            len: 0,
+            clamped: 0,
+        }
+    }
+
+    pub fn num_shards(&self) -> u32 {
+        self.shards.len() as u32
+    }
+
+    /// Current virtual time (global frontier of merged pops).
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Past-time pushes detected across the global frontier and every
+    /// shard-local clock (see [`EventCore::clamped_pushes`]).
+    pub fn clamped_pushes(&self) -> u64 {
+        self.clamped + self.shards.iter().map(|s| s.clamped_pushes()).sum::<u64>()
+    }
+
+    /// Schedule `ev` on `shard` at absolute time `at`, stamped with the
+    /// next global sequence number.  Clamping happens here, against the
+    /// global frontier — a shard's local clock lags it, so the shard
+    /// level deliberately skips its own clamp (`push_keyed`).
+    pub fn push_to(&mut self, shard: u32, at: Time, ev: E) {
+        if at < self.now {
+            self.clamped += 1;
+        }
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        let n = self.shards.len();
+        self.shards[(shard as usize).min(n - 1)].push_keyed(at, seq, ev);
+        self.len += 1;
+    }
+
+    /// Pop the globally next event: the minimum `(time, seq)` over all
+    /// shard heads.  With global sequence numbers this reproduces the
+    /// serial [`EventCore`] order exactly — the determinism suite pins
+    /// fingerprints across shard counts on precisely this property.
+    pub fn pop(&mut self) -> Option<(Time, E)> {
+        let best = self.min_shard()?;
+        let (t, ev) = self.shards[best].pop()?;
+        self.now = t;
+        self.len -= 1;
+        Some((t, ev))
+    }
+
+    /// Peek at the globally next event time.
+    pub fn peek_time(&mut self) -> Option<Time> {
+        let best = self.min_shard()?;
+        self.shards[best].peek_key().map(|(t, _)| t)
+    }
+
+    fn min_shard(&mut self) -> Option<usize> {
+        let mut best: Option<((Time, u64), usize)> = None;
+        for i in 0..self.shards.len() {
+            if let Some(k) = self.shards[i].peek_key() {
+                if best.map_or(true, |(bk, _)| k < bk) {
+                    best = Some((k, i));
+                }
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Drive all shards on threads through conservative bounded-lookahead
+    /// windows until every event at or before `until` is handled.
+    ///
+    /// `handler` runs on the shard's thread and must touch only the
+    /// shard's own `states` slot; follow-ups go through the [`Emitter`]
+    /// (cross-shard ones at `>= now + lookahead`).  The trajectory is
+    /// deterministic regardless of thread scheduling: each shard depends
+    /// only on its own queue plus the relay batches it drains in sorted
+    /// `(time, source shard, send order)` order at each barrier.
+    pub fn run_parallel<S, F>(
+        &mut self,
+        until: Time,
+        states: &mut [S],
+        handler: F,
+    ) -> ShardRunReport
+    where
+        E: Send,
+        S: Send,
+        F: Fn(&mut S, u32, Time, E, &mut Emitter<'_, E>) + Sync,
+    {
+        let n = self.shards.len();
+        assert_eq!(states.len(), n, "one handler state per shard");
+        // A zero horizon would never let the frontier shard advance.
+        let lookahead_us = self.lookahead.as_micros().max(1);
+        let until_us = until.0;
+        let published: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let inboxes: Vec<Mutex<Vec<Relay<E>>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
+        let barrier = Barrier::new(n);
+        let events = AtomicU64::new(0);
+        let windows = AtomicU64::new(0);
+        {
+            let (published, inboxes, barrier) = (&published, &inboxes, &barrier);
+            let (events, windows, handler) = (&events, &windows, &handler);
+            std::thread::scope(|scope| {
+                for ((shard, core), state) in
+                    self.shards.iter_mut().enumerate().zip(states.iter_mut())
+                {
+                    scope.spawn(move || {
+                        let shard_u = shard as u32;
+                        let mut outboxes: Vec<Vec<Relay<E>>> = (0..n).map(|_| Vec::new()).collect();
+                        let mut sent = 0u64;
+                        let mut processed = 0u64;
+                        let mut rounds = 0u64;
+                        loop {
+                            // Publish the local head, agree on the frontier.
+                            let head = core.peek_key().map_or(u64::MAX, |(t, _)| t.0);
+                            published[shard].store(head, Ordering::SeqCst);
+                            barrier.wait();
+                            let frontier = published
+                                .iter()
+                                .map(|p| p.load(Ordering::SeqCst))
+                                .min()
+                                .unwrap_or(u64::MAX);
+                            if frontier == u64::MAX || frontier > until_us {
+                                break;
+                            }
+                            rounds += 1;
+                            // Safe horizon: nothing can arrive from a peer
+                            // below frontier + lookahead (one NIC transit).
+                            let window_end = frontier
+                                .saturating_add(lookahead_us)
+                                .min(until_us.saturating_add(1));
+                            while let Some((t, _)) = core.peek_key() {
+                                if t.0 >= window_end {
+                                    break;
+                                }
+                                let Some((t, ev)) = core.pop() else { break };
+                                processed += 1;
+                                let mut em = Emitter {
+                                    shard: shard_u,
+                                    now: t,
+                                    lookahead: Duration(lookahead_us),
+                                    core: &mut *core,
+                                    outboxes: &mut outboxes,
+                                    sent: &mut sent,
+                                };
+                                handler(state, shard_u, t, ev, &mut em);
+                            }
+                            // Exchange cross-shard batches at the barrier.
+                            for (to, out) in outboxes.iter_mut().enumerate() {
+                                if !out.is_empty() {
+                                    inboxes[to].lock().unwrap().append(out);
+                                }
+                            }
+                            barrier.wait();
+                            let inbox = &inboxes[shard];
+                            let mut incoming = std::mem::take(&mut *inbox.lock().unwrap());
+                            let key = |r: &Relay<E>| (r.at, r.src, r.order);
+                            incoming.sort_by(|a, b| key(a).cmp(&key(b)));
+                            for r in incoming {
+                                core.push(r.at, r.ev);
+                            }
+                        }
+                        events.fetch_add(processed, Ordering::Relaxed);
+                        windows.fetch_max(rounds, Ordering::Relaxed);
+                    });
+                }
+            });
+        }
+        // Re-align the global bookkeeping with what the threads did.
+        self.len = self.shards.iter().map(|s| s.len()).sum();
+        for s in &self.shards {
+            if s.now() > self.now {
+                self.now = s.now();
+            }
+            self.seq = self.seq.max(s.next_seq());
+        }
+        ShardRunReport {
+            events: events.load(Ordering::Relaxed),
+            windows: windows.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The cluster's event queue: the serial oracle below `--threads 2`, the
+/// sharded core (merged, sequential-equivalent pops) above it.
+pub(crate) enum EngineQueue {
+    Serial(EventCore<Ev>),
+    Sharded(ShardedEvQueue),
+}
+
+/// [`ShardedEventCore`] plus the advisory topology maps that route each
+/// [`Ev`] to its worker's shard.  The maps are refreshed at topology
+/// chokepoints (`SimCluster::sync_queue_topology`); a stale or missing
+/// entry merely routes to the coordinator shard — with merged pops the
+/// placement is a locality hint, never a correctness input.
+pub(crate) struct ShardedEvQueue {
+    core: ShardedEventCore<Ev>,
+    shard_of_worker: Vec<u32>,
+    shard_of_source: Vec<u32>,
+    shard_of_vertex: Vec<u32>,
+    shard_of_channel: Vec<u32>,
+}
+
+fn pick(map: &[u32], i: u32) -> u32 {
+    map.get(i as usize).copied().unwrap_or(COORDINATOR_SHARD)
+}
+
+impl ShardedEvQueue {
+    /// Worker-affine events follow their worker's shard; master-side
+    /// governance (reports, actions, job lifecycle, scheduler/liveness
+    /// ticks) stays on the coordinator shard so admission, migration and
+    /// preemption decisions observe one consistent frontier.
+    fn route(&self, ev: &Ev) -> u32 {
+        match ev {
+            Ev::Packet { source } => pick(&self.shard_of_source, *source),
+            Ev::Deliver { buffer } => pick(&self.shard_of_channel, buffer.channel),
+            Ev::TaskDone { vertex } => pick(&self.shard_of_vertex, *vertex),
+            Ev::ReporterFlush { worker, .. }
+            | Ev::ManagerTick { worker, .. }
+            | Ev::CpuSample { worker }
+            | Ev::WorkerCrash { worker } => pick(&self.shard_of_worker, *worker),
+            Ev::ReportArrive { .. }
+            | Ev::ApplyAction { .. }
+            | Ev::JobSubmit { .. }
+            | Ev::JobWatch { .. }
+            | Ev::JobCancel { .. }
+            | Ev::SchedTick { .. }
+            | Ev::MasterTick => COORDINATOR_SHARD,
+        }
+    }
+}
+
+impl EngineQueue {
+    /// `threads <= 1`: the serial [`EventCore`] oracle, bit-for-bit the
+    /// pre-sharding engine.  `threads >= 2`: one shard per worker group.
+    pub(crate) fn new(threads: u32, lookahead: Duration) -> EngineQueue {
+        if threads <= 1 {
+            EngineQueue::Serial(EventCore::new())
+        } else {
+            EngineQueue::Sharded(ShardedEvQueue {
+                core: ShardedEventCore::new(threads, lookahead),
+                shard_of_worker: Vec::new(),
+                shard_of_source: Vec::new(),
+                shard_of_vertex: Vec::new(),
+                shard_of_channel: Vec::new(),
+            })
+        }
+    }
+
+    pub(crate) fn push(&mut self, at: Time, ev: Ev) {
+        match self {
+            EngineQueue::Serial(q) => q.push(at, ev),
+            EngineQueue::Sharded(s) => {
+                let shard = s.route(&ev);
+                s.core.push_to(shard, at, ev);
+            }
+        }
+    }
+
+    pub(crate) fn pop(&mut self) -> Option<(Time, Ev)> {
+        match self {
+            EngineQueue::Serial(q) => q.pop(),
+            EngineQueue::Sharded(s) => s.core.pop(),
+        }
+    }
+
+    pub(crate) fn peek_time(&mut self) -> Option<Time> {
+        match self {
+            EngineQueue::Serial(q) => q.peek_time(),
+            EngineQueue::Sharded(s) => s.core.peek_time(),
+        }
+    }
+
+    pub(crate) fn now(&self) -> Time {
+        match self {
+            EngineQueue::Serial(q) => q.now(),
+            EngineQueue::Sharded(s) => s.core.now(),
+        }
+    }
+
+    pub(crate) fn clamped_pushes(&self) -> u64 {
+        match self {
+            EngineQueue::Serial(q) => q.clamped_pushes(),
+            EngineQueue::Sharded(s) => s.core.clamped_pushes(),
+        }
+    }
+
+    /// Refresh the advisory shard maps from the union runtime graph.
+    /// `source_workers[i]` is the worker hosting external source `i`'s
+    /// target instance (failure handling reconnects modulo survivors,
+    /// mirroring `on_packet`).  Workers are grouped round-robin.
+    pub(crate) fn sync_topology(&mut self, rg: &RuntimeGraph, source_workers: &[u32]) {
+        let EngineQueue::Sharded(s) = self else { return };
+        let n = s.core.num_shards();
+        let group = |w: u32| w % n;
+        s.shard_of_worker = (0..rg.num_workers).map(group).collect();
+        s.shard_of_vertex = rg.vertices.iter().map(|v| group(v.worker.0)).collect();
+        s.shard_of_channel = rg.channels.iter().map(|c| group(rg.worker(c.to).0)).collect();
+        s.shard_of_source = source_workers.iter().map(|&w| group(w)).collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Differential test against the serial core: any interleaving of
+    /// (randomly sharded) pushes and merged pops must produce the
+    /// identical (time, payload) sequence for every shard count — the
+    /// property the cross-shard-count fingerprint suite relies on.
+    #[test]
+    fn merged_pops_match_the_serial_core_exactly() {
+        for &shards in &[1u32, 2, 3, 4] {
+            let mut rng = Rng::new(0xBEEF + shards as u64);
+            let mut serial: EventCore<u32> = EventCore::new();
+            let mut sharded: ShardedEventCore<u32> =
+                ShardedEventCore::new(shards, Duration::from_millis(35));
+            let mut pending = 0u32;
+            for round in 0..4_000u32 {
+                if pending == 0 || rng.chance(0.6) {
+                    let at = Time(serial.now().0 + rng.below(40_000_000));
+                    serial.push(at, round);
+                    sharded.push_to(rng.below(shards as u64) as u32, at, round);
+                    pending += 1;
+                } else {
+                    assert_eq!(serial.pop(), sharded.pop());
+                    pending -= 1;
+                }
+            }
+            loop {
+                let (x, y) = (serial.pop(), sharded.pop());
+                assert_eq!(x, y);
+                if x.is_none() {
+                    break;
+                }
+            }
+            assert_eq!(serial.now(), sharded.now());
+            assert!(sharded.is_empty());
+            assert_eq!(sharded.clamped_pushes(), 0);
+        }
+    }
+
+    #[test]
+    fn sharded_clamping_uses_the_global_frontier() {
+        let mut q: ShardedEventCore<u32> = ShardedEventCore::new(4, Duration::from_millis(1));
+        q.push_to(1, Time(100), 1);
+        assert_eq!(q.pop().unwrap().0, Time(100));
+        // A stale push routed to an idle shard (local clock still zero)
+        // is still clamped — and counted — against the global frontier.
+        q.push_to(2, Time(40), 2);
+        assert_eq!(q.clamped_pushes(), 1);
+        assert_eq!(q.pop().unwrap().0, Time(100), "clamped to the global now");
+        assert!(q.is_empty());
+    }
+
+    fn mix(mut x: u64) -> u64 {
+        x = x.wrapping_add(0x9E3779B97F4A7C15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+        x ^ (x >> 31)
+    }
+
+    /// Drive self-contained event trajectories through the threaded
+    /// conservative windows: the processed multiset (count + XOR digest)
+    /// must be identical run-to-run and across shard counts, because
+    /// each event's handling time is its scheduled time — independent of
+    /// thread interleaving and of which shard hosts the stream.
+    #[test]
+    fn parallel_windows_match_the_serial_multiset() {
+        fn run(shards: u32) -> (u64, u64, u64) {
+            let lookahead = Duration::from_millis(10);
+            let mut core: ShardedEventCore<u64> = ShardedEventCore::new(shards, lookahead);
+            for s in 0..64u64 {
+                core.push_to((s % shards as u64) as u32, Time(1 + s), mix(s));
+            }
+            let mut states: Vec<(u64, u64)> = vec![(0, 0); shards as usize];
+            let until = Time(2_000_000);
+            let report = core.run_parallel(until, &mut states, |acc, shard, t, ev, em| {
+                acc.0 += 1;
+                acc.1 ^= ev.rotate_left((t.0 % 63) as u32);
+                let next = mix(ev ^ t.0);
+                if next % 16 == 0 {
+                    // Cross-shard hop: at least one lookahead out.
+                    let dest = ((next >> 32) % core_shards(em)) as u32;
+                    em.remote(dest, Time(t.0 + 10_000 + next % 5_000), next);
+                } else {
+                    em.local(Time(t.0 + 100 + next % 30_000), next);
+                }
+                let _ = shard;
+            });
+            let count: u64 = states.iter().map(|s| s.0).sum();
+            assert_eq!(report.events, count);
+            (count, states.iter().fold(0, |a, s| a ^ s.1), report.windows)
+        }
+        fn core_shards<E>(em: &Emitter<'_, E>) -> u64 {
+            em.outboxes.len() as u64
+        }
+        let serial = run(1);
+        let par = run(4);
+        let par_again = run(4);
+        assert_eq!(par, par_again, "same seed, same shards: identical digest");
+        assert_eq!(serial.0, par.0, "event count independent of shard count");
+        assert_eq!(serial.1, par.1, "event digest independent of shard count");
+        assert!(par.2 >= 1, "the parallel drive took at least one window");
+    }
+}

@@ -432,6 +432,13 @@ impl SimCluster {
         // push channels; models HOP shuffle/HDFS handoff, §4.1.2).
         let sender = self.rg.channel(cid).from;
         let arrival = arrival + self.tasks[sender.index()].spec.downstream_delay;
+        // The sharded core's lookahead invariant (DESIGN.md §10): a
+        // cross-worker delivery never lands closer than one minimum NIC
+        // transit, so a shard may run `min_transit` ahead of its peers.
+        debug_assert!(
+            local || arrival >= now + super::net::min_transit(&self.cfg.cluster),
+            "remote delivery inside the lookahead horizon: {now} -> {arrival}"
+        );
         self.queue.push(
             arrival,
             Ev::Deliver {

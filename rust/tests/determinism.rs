@@ -9,7 +9,11 @@
 //! (cluster → engine/worker/master/accounting + the arena/time-wheel
 //! event core): the split preserved the `(time, insertion seq)` event
 //! order exactly, so the same-seed trajectories — metrics and action
-//! logs byte-for-byte — are unchanged from the pre-split engine.
+//! logs byte-for-byte — are unchanged from the pre-split engine.  The
+//! same fingerprints gate the sharded event core (`--threads N`): the
+//! serial core is kept as the differential oracle, and
+//! `shard_count_never_changes_the_trajectory` pins that shard count
+//! can never alter a trajectory (DESIGN.md §10).
 
 use nephele::baseline::hadoop::hadoop_online_job;
 use nephele::config::EngineConfig;
@@ -40,7 +44,7 @@ fn fingerprint(stats: &SimStats) -> String {
         "ingested={} delivered={} sinks={} e2e_sum={:x} e2e_max={:x} samples={}/{:x} \
          wire={} flushed={} dropped={} unresolvable={} buffers={} chains={} \
          ups={} downs={} rejected={} rebuilds={} lost={} replayed={} crashed={} \
-         failovers={} reassigned={} detached={} events={}\nlog:\n{}",
+         failovers={} reassigned={} detached={} events={} clamps={}\nlog:\n{}",
         stats.items_ingested,
         stats.items_delivered,
         stats.e2e_count,
@@ -65,23 +69,24 @@ fn fingerprint(stats: &SimStats) -> String {
         stats.instances_reassigned,
         stats.instances_detached,
         stats.events_processed,
+        stats.past_clamps,
         stats.action_log.join("\n"),
     )
 }
 
-fn surge_fingerprint(seed: u64, secs: u64) -> String {
+fn surge_fingerprint(seed: u64, secs: u64, threads: u32) -> String {
     let sj = surge_job(SurgeSpec::default()).unwrap();
-    let cfg = EngineConfig { seed, ..EngineConfig::default() }.with_scaling();
+    let cfg = EngineConfig { seed, threads, ..EngineConfig::default() }.with_scaling();
     let mut cluster =
         SimCluster::new(sj.job, sj.rg, &sj.constraints, sj.task_specs, sj.sources, cfg).unwrap();
     cluster.run(Duration::from_secs(secs), None).unwrap();
     fingerprint(&cluster.stats)
 }
 
-fn failover_fingerprint(seed: u64, enable_recovery: bool, secs: u64) -> String {
+fn failover_fingerprint(seed: u64, enable_recovery: bool, secs: u64, threads: u32) -> String {
     let spec = FailoverSpec::default();
     let fj = failover_job(spec).unwrap();
-    let mut cfg = EngineConfig { seed, ..EngineConfig::default() };
+    let mut cfg = EngineConfig { seed, threads, ..EngineConfig::default() };
     cfg.recovery.enable_recovery = enable_recovery;
     let mut cluster =
         SimCluster::new(fj.job, fj.rg, &fj.constraints, fj.task_specs, fj.sources, cfg).unwrap();
@@ -115,17 +120,18 @@ fn scale_fingerprint(seed: u64, secs: u64) -> String {
 fn surge_scenario_replays_byte_identically_for_a_seed() {
     // 360 s is the horizon integration_scaling.rs proves reaches the
     // scaling tier, so the compared logs include rescale decisions.
-    let a = surge_fingerprint(42, 360);
-    let b = surge_fingerprint(42, 360);
+    let a = surge_fingerprint(42, 360, 1);
+    let b = surge_fingerprint(42, 360, 1);
     assert_eq!(a, b, "same seed must replay the same trajectory");
     assert!(a.contains("scale"), "the run must exercise scaling actions:\n{a}");
+    assert!(a.contains("clamps=0"), "a clean run must not clamp past-time pushes:\n{a}");
 }
 
 #[test]
 fn failover_scenario_replays_byte_identically_for_a_seed() {
     for enable_recovery in [true, false] {
-        let a = failover_fingerprint(42, enable_recovery, 420);
-        let b = failover_fingerprint(42, enable_recovery, 420);
+        let a = failover_fingerprint(42, enable_recovery, 420, 1);
+        let b = failover_fingerprint(42, enable_recovery, 420, 1);
         assert_eq!(
             a, b,
             "same seed must replay the same trajectory (recovery={enable_recovery})"
@@ -153,8 +159,8 @@ fn scale_scenario_replays_byte_identically_for_a_seed() {
 /// slot-ledger placement, completion watches) must replay
 /// byte-identically for a seed, under both placement policies — and the
 /// two policies must actually produce different trajectories.
-fn multi_fingerprint(seed: u64, policy: PlacementPolicy) -> String {
-    let cfg = EngineConfig { seed, ..EngineConfig::default() };
+fn multi_fingerprint(seed: u64, policy: PlacementPolicy, threads: u32) -> String {
+    let cfg = EngineConfig { seed, threads, ..EngineConfig::default() };
     let report = run_multi(MultiSpec::tiny(), cfg, policy, false).unwrap();
     report.fingerprint
 }
@@ -163,8 +169,8 @@ fn multi_fingerprint(seed: u64, policy: PlacementPolicy) -> String {
 fn multi_scenario_replays_byte_identically_for_both_policies() {
     let mut by_policy = Vec::new();
     for policy in [PlacementPolicy::Spread, PlacementPolicy::Pack] {
-        let a = multi_fingerprint(42, policy);
-        let b = multi_fingerprint(42, policy);
+        let a = multi_fingerprint(42, policy, 1);
+        let b = multi_fingerprint(42, policy, 1);
         assert_eq!(a, b, "same seed must replay the same trajectory ({policy})");
         assert!(a.contains("submitted"), "the run must exercise submissions:\n{a}");
         assert!(a.contains("complete"), "jobs must complete:\n{a}");
@@ -226,13 +232,50 @@ fn migration_phase_replays_byte_identically() {
     );
 }
 
+/// The sharded event core's tentpole guarantee: shard count is a
+/// performance knob, never a semantics knob.  With the same seed, the
+/// serial oracle (`threads = 1`) and the per-worker-group sharded
+/// arena (`threads = 2, 4`) must produce byte-identical fingerprints —
+/// metrics, clamp counters and the full timestamped action log — on
+/// the elastic-scaling, crash/recovery and multi-job governance paths.
+#[test]
+fn shard_count_never_changes_the_trajectory() {
+    let surge_serial = surge_fingerprint(42, 360, 1);
+    let failover_serial = failover_fingerprint(42, true, 420, 1);
+    let multi_serial = multi_fingerprint(42, PlacementPolicy::Spread, 1);
+    for threads in [2u32, 4] {
+        assert_eq!(
+            surge_serial,
+            surge_fingerprint(42, 360, threads),
+            "surge trajectory diverged from the serial oracle at {threads} shards"
+        );
+        assert_eq!(
+            failover_serial,
+            failover_fingerprint(42, true, 420, threads),
+            "failover trajectory diverged from the serial oracle at {threads} shards"
+        );
+        assert_eq!(
+            multi_serial,
+            multi_fingerprint(42, PlacementPolicy::Spread, threads),
+            "multi-job trajectory diverged from the serial oracle at {threads} shards"
+        );
+    }
+    // The compared runs must actually exercise the interesting paths.
+    assert!(surge_serial.contains("scale"), "scaling actions:\n{surge_serial}");
+    assert!(
+        failover_serial.contains("failover w2"),
+        "crash detection:\n{failover_serial}"
+    );
+    assert!(surge_serial.contains("clamps=0"), "clean runs must not clamp");
+}
+
 #[test]
 fn different_seeds_diverge() {
     // Sanity that the fingerprint is actually sensitive: a different
     // seed shifts clock skew, report offsets and reservoir sampling.
-    assert_ne!(surge_fingerprint(1, 120), surge_fingerprint(2, 120));
+    assert_ne!(surge_fingerprint(1, 120, 1), surge_fingerprint(2, 120, 1));
     assert_ne!(
-        failover_fingerprint(1, true, 150),
-        failover_fingerprint(2, true, 150)
+        failover_fingerprint(1, true, 150, 1),
+        failover_fingerprint(2, true, 150, 1)
     );
 }

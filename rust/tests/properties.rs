@@ -460,6 +460,110 @@ fn per_job_conservation_holds_under_random_migrations_and_crashes() {
     check(8, per_job_conservation_under_random_migrations);
 }
 
+/// Tentpole differential property for the sharded event core: at any
+/// shard count the core must be an *exact* stand-in for the serial
+/// oracle on arbitrary multi-job scenarios — staggered random
+/// pipelines, a mid-run worker crash, a migration storm — not just the
+/// curated determinism scenarios.  The scenario is re-derived from one
+/// pre-drawn seed per run, so shard count is the only thing that
+/// varies; the full fingerprint (global counters, per-job conservation
+/// ledgers, clamp counter, action log) must be byte-identical at shard
+/// counts 1, 2 and 4, and every ledger must balance at each count.
+fn sharded_core_matches_the_serial_oracle(g: &mut Gen) -> PropResult {
+    use nephele::experiments::multi::multi_fingerprint;
+    use nephele::sched::{JobSpec, PlacementPolicy};
+
+    let scenario = g.u64(0..=u64::MAX);
+    let run = |threads: u32| -> Result<String, String> {
+        let mut g = Gen::new(scenario);
+        let workers = g.u32(2..=4);
+        let mut cfg = EngineConfig {
+            seed: g.u64(0..=u64::MAX),
+            threads,
+            ..EngineConfig::default()
+        }
+        .fully_optimized();
+        cfg.recovery.enable_recovery = g.bool();
+        let policy = match g.usize(0..=2) {
+            0 => PlacementPolicy::Spread,
+            1 => PlacementPolicy::Pack,
+            _ => PlacementPolicy::LeastLoaded,
+        };
+        let mut cluster = SimCluster::new_multi(workers, 72, policy, cfg)
+            .map_err(|e| format!("cluster build failed: {e}"))?;
+        let mut ids = Vec::new();
+        for j in 0..2u32 {
+            let rj = random_pipeline(&mut g);
+            let id = cluster
+                .submit_job(
+                    JobSpec::new(
+                        format!("rand-{j}"),
+                        rj.job,
+                        vec![rj.constraint],
+                        rj.specs,
+                        rj.sources,
+                    )
+                    .run_for(Duration::from_secs(g.u64(20..=45))),
+                    Duration::from_secs(g.u64(0..=10)),
+                )
+                .map_err(|e| format!("submission failed: {e}"))?;
+            ids.push(id);
+        }
+        cluster.schedule_failures(&[FailureSpec {
+            worker: WorkerId(g.u32(0..=workers - 1)),
+            at: Duration::from_secs(g.u64(5..=40)),
+        }]);
+        // A short migration storm across the crash window.  The picks
+        // depend on live cluster state, so identical trajectories make
+        // identical picks — and any divergence lands in the digest.
+        let mut clock = Duration::from_secs(10);
+        for _round in 0..6 {
+            cluster
+                .run(clock, None)
+                .map_err(|e| format!("sim engine error: {e}"))?;
+            let groups: Vec<JobVertexId> =
+                cluster.job.vertices.iter().map(|v| v.id).collect();
+            let jv = groups[g.usize(0..=groups.len() - 1)];
+            let insts = cluster.instances_of(jv);
+            if !insts.is_empty() {
+                let v = insts[g.usize(0..=insts.len() - 1)];
+                let _ = cluster.migrate_instance(v, WorkerId(g.u32(0..=workers - 1)));
+            }
+            clock = clock + Duration::from_secs(6);
+        }
+        cluster
+            .run(Duration::from_secs(60), None)
+            .map_err(|e| format!("sim engine error: {e}"))?;
+        let t = cluster.now();
+        cluster.stop_sources_at(t);
+        cluster
+            .run(Duration::from_secs(1200), None)
+            .map_err(|e| format!("sim engine error: {e}"))?;
+        for &id in &ids {
+            cluster
+                .job_conservation(id)
+                .map_err(|e| format!("per-job conservation at {threads} shard(s): {e}"))?;
+        }
+        Ok(multi_fingerprint(&cluster.stats))
+    };
+    let serial = run(1)?;
+    for threads in [2u32, 4] {
+        let sharded = run(threads)?;
+        if serial != sharded {
+            return Err(format!(
+                "trajectory diverged from the serial oracle at {threads} shards \
+                 (scenario seed {scenario:#x})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn sharded_multi_job_runs_match_the_serial_oracle() {
+    check(6, sharded_core_matches_the_serial_oracle);
+}
+
 /// Weighted fair sharing of contested elastic slots: two running jobs
 /// with random weights fire interleaved (randomly ordered) scale-up
 /// requests until the pool is exhausted.  The deficit rule must (a)

@@ -2,20 +2,34 @@
 """Diff a fresh hot-path bench run against the committed baseline.
 
 Usage: bench_diff.py BASELINE.json CURRENT.json
+       bench_diff.py --refresh CURRENT.json BASELINE.json
+       bench_diff.py --selftest
 
 Both files are Recorder JSON (``BENCH_hot_paths.json`` format).  Entries
 are matched by name with digit runs normalised (``200000 sim-shaped
 pops`` == ``2000000 sim-shaped pops``), so quick/full pop counts and
 config-derived entry counts don't break the pairing.  The gate is
-deliberately loose — CI runners vary a lot — and only fails when:
+deliberately loose — CI runners vary a lot — but it fails when:
 
-  * a matched events/sec entry drops below 30% of the baseline, or
+  * a matched events/sec entry drops below 30% of the baseline,
+  * a baseline entry is missing from the current run (a silently
+    dropped benchmark is a masked regression, not a pass),
   * the headline ``event_core_speedup`` falls below 2.0x (the ROADMAP
-    perf target is >=3x; 2.0 leaves room for runner noise).
+    perf target is >=3x; 2.0 leaves room for runner noise), or
+  * ``sharded_core_speedup`` falls below 2.0x while the current run
+    reports >= 4 cores (the full-bench target is >=4x on >=8 cores;
+    2.0 is the quick/CI floor).
 
-Everything else (faster runs, unmatched entries, missing throughput
-numbers) is reported but non-fatal.  Stdlib only — no third-party
-dependencies.
+A baseline whose ``provenance`` is ``estimated`` (hand-written numbers,
+never produced by a real run) is called out with a warning: refresh it
+from a real run with ``--refresh CURRENT.json BASELINE.json``, which
+validates the current report against the old baseline first and then
+copies it over, stamping today's numbers as the new baseline.
+
+Everything else (faster runs, new entries, missing throughput numbers)
+is reported but non-fatal.  Stdlib only — no third-party dependencies.
+``--selftest`` runs the embedded fixtures (unmatched-entry failure,
+clean pass, regression failure) and exits non-zero on any mismatch.
 """
 
 import json
@@ -24,6 +38,8 @@ import sys
 
 REGRESSION_RATIO = 0.30
 MIN_SPEEDUP = 2.0
+MIN_SHARDED_SPEEDUP = 2.0
+SHARDED_GATE_MIN_CORES = 4
 
 
 def normalise(name):
@@ -37,25 +53,33 @@ def by_name(report):
     return out
 
 
-def main(baseline_path, current_path):
-    with open(baseline_path) as f:
-        baseline = json.load(f)
-    with open(current_path) as f:
-        current = json.load(f)
+def diff(baseline, current):
+    """Compare two loaded Recorder reports.
 
+    Returns (failures, warnings): lists of human-readable messages.
+    Prints the comparison table as a side effect.
+    """
     base_entries = by_name(baseline)
     cur_entries = by_name(current)
     failures = []
+    warnings = []
 
-    print(f"baseline: {baseline_path} (quick={baseline.get('quick')})")
-    print(f"current:  {current_path} (quick={current.get('quick')})")
-    print()
+    if baseline.get("provenance", "measured") == "estimated":
+        warnings.append(
+            "baseline provenance is 'estimated' (hand-written numbers): refresh it "
+            "from a real run with --refresh CURRENT.json BASELINE.json"
+        )
+
     print(f"{'benchmark':<58} {'base ev/s':>12} {'cur ev/s':>12} {'ratio':>7}")
     for key in base_entries:
         base = base_entries[key]
         cur = cur_entries.get(key)
         if cur is None:
-            print(f"{base['name']:<58} {'-':>12} {'(missing)':>12} {'-':>7}")
+            print(f"{base['name']:<58} {'-':>12} {'(MISSING)':>12} {'-':>7}")
+            failures.append(
+                f"{base['name']}: present in the baseline but missing from the "
+                f"current run (dropped benchmarks mask regressions)"
+            )
             continue
         beps, ceps = base.get("events_per_sec"), cur.get("events_per_sec")
         if not beps or not ceps:
@@ -82,6 +106,30 @@ def main(baseline_path, current_path):
             f"event_core_speedup {cur_speedup:.2f}x fell below the {MIN_SPEEDUP}x floor"
         )
 
+    sharded = current.get("sharded_core_speedup")
+    cores = current.get("cores")
+    print(
+        f"sharded_core_speedup: baseline {baseline.get('sharded_core_speedup')}, "
+        f"current {sharded} (cores {cores})"
+    )
+    if sharded is not None and cores is not None and cores >= SHARDED_GATE_MIN_CORES:
+        if sharded < MIN_SHARDED_SPEEDUP:
+            failures.append(
+                f"sharded_core_speedup {sharded:.2f}x fell below the "
+                f"{MIN_SHARDED_SPEEDUP}x floor on {cores:.0f} cores"
+            )
+
+    return failures, warnings
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def report(failures, warnings):
+    for msg in warnings:
+        print(f"\nWARNING: {msg}")
     if failures:
         print("\nFAIL:")
         for msg in failures:
@@ -91,7 +139,117 @@ def main(baseline_path, current_path):
     return 0
 
 
+def main(baseline_path, current_path):
+    baseline = load(baseline_path)
+    current = load(current_path)
+    print(f"baseline: {baseline_path} (quick={baseline.get('quick')})")
+    print(f"current:  {current_path} (quick={current.get('quick')})")
+    print()
+    failures, warnings = diff(baseline, current)
+    return report(failures, warnings)
+
+
+def refresh(current_path, baseline_path):
+    """Validate CURRENT against the old baseline, then install it as the
+    new baseline.  Refuses to install a report that fails the diff gate
+    or was not produced by a real run (provenance != "measured")."""
+    baseline = load(baseline_path)
+    current = load(current_path)
+    print(f"refreshing baseline {baseline_path} from {current_path}")
+    print()
+    failures, _warnings = diff(baseline, current)
+    if current.get("provenance") != "measured":
+        failures.append(
+            f"current report provenance is {current.get('provenance')!r}, "
+            f"expected 'measured' — refresh only from a real bench run"
+        )
+    if failures:
+        print("\nREFRESH REFUSED:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    with open(baseline_path, "w") as f:
+        json.dump(current, f, indent=2)
+        f.write("\n")
+    print(f"\nOK: {baseline_path} now holds the measured run from {current_path}")
+    return 0
+
+
+# --- self-test fixtures --------------------------------------------------
+
+FIX_BASE = {
+    "bench": "hot_paths",
+    "quick": True,
+    "provenance": "measured",
+    "event_core_speedup": 3.4,
+    "sharded_core_speedup": 2.5,
+    "results": [
+        {"name": "core: 200 pops", "iters": 1, "secs": 0.1, "events_per_sec": 2000.0},
+        {"name": "sim: 90s virtual", "iters": 1, "secs": 1.0, "events_per_sec": 5000.0},
+    ],
+}
+
+
+def _with(base, **kv):
+    out = json.loads(json.dumps(base))
+    out.update(kv)
+    return out
+
+
+def selftest():
+    checks = []
+
+    # 1. Identical reports pass.
+    f, _ = diff(FIX_BASE, FIX_BASE)
+    checks.append(("identical reports pass", not f))
+
+    # 2. A baseline entry missing from the current run must FAIL — this
+    # is the masked-bug regression: the old tool printed "(missing)" and
+    # passed vacuously.
+    cur = _with(FIX_BASE, results=[FIX_BASE["results"][0]])
+    f, _ = diff(FIX_BASE, cur)
+    checks.append(("unmatched baseline entry fails", any("missing" in m for m in f)))
+
+    # 3. An events/sec collapse beyond the tolerance fails.
+    cur = json.loads(json.dumps(FIX_BASE))
+    cur["results"][1]["events_per_sec"] = 100.0
+    f, _ = diff(FIX_BASE, cur)
+    checks.append(("throughput regression fails", any("below" in m for m in f)))
+
+    # 4. New current-only entries stay non-fatal.
+    cur = json.loads(json.dumps(FIX_BASE))
+    cur["results"].append(
+        {"name": "new: 5 things", "iters": 1, "secs": 0.1, "events_per_sec": 10.0}
+    )
+    f, _ = diff(FIX_BASE, cur)
+    checks.append(("new entries are non-fatal", not f))
+
+    # 5. The sharded-core gate trips only when the runner has the cores.
+    cur = _with(FIX_BASE, sharded_core_speedup=1.2, cores=8.0)
+    f, _ = diff(FIX_BASE, cur)
+    checks.append(("low sharded speedup on 8 cores fails", any("sharded" in m for m in f)))
+    cur = _with(FIX_BASE, sharded_core_speedup=1.2, cores=2.0)
+    f, _ = diff(FIX_BASE, cur)
+    checks.append(("low sharded speedup on 2 cores passes", not f))
+
+    # 6. An estimated baseline warns but does not fail.
+    base = _with(FIX_BASE, provenance="estimated")
+    f, w = diff(base, FIX_BASE)
+    checks.append(("estimated baseline warns", not f and any("estimated" in m for m in w)))
+
+    print()
+    bad = 0
+    for name, ok in checks:
+        print(f"  {'ok' if ok else 'FAIL'}: {name}")
+        bad += 0 if ok else 1
+    return 1 if bad else 0
+
+
 if __name__ == "__main__":
+    if len(sys.argv) == 2 and sys.argv[1] == "--selftest":
+        sys.exit(selftest())
+    if len(sys.argv) == 4 and sys.argv[1] == "--refresh":
+        sys.exit(refresh(sys.argv[2], sys.argv[3]))
     if len(sys.argv) != 3:
         print(__doc__)
         sys.exit(2)
