@@ -13,7 +13,7 @@ use nephele::sched::PlacementPolicy;
 /// The subcommand set, shared by `nephele info` and the usage error so
 /// the two cannot drift.
 pub const SUBCOMMANDS: &str =
-    "sim-video | sim-meter | sim-surge | sim-failover | sim-scale | sim-multi | live | info";
+    "sim-video | sim-meter | sim-surge | sim-failover | sim-scale | sim-multi | live | lint | info";
 
 /// Parse `--scale small|paper --secs N --seed N --quiet --constraint-ms N`.
 #[allow(dead_code)]

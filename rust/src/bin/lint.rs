@@ -1,0 +1,14 @@
+//! `nephele-lint` — standalone entry point for the in-repo static
+//! analysis pass, equivalent to `nephele lint` but buildable and
+//! runnable on its own (CI invokes this binary so the gate does not
+//! depend on the full coordinator CLI linking).
+//!
+//! See `nephele::lint` for the rules and `DESIGN.md` §11 for their
+//! semantics, the suppression syntax and the ratchet workflow.
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    nephele::lint::cli_main(&argv)
+}

@@ -27,6 +27,7 @@ pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod graph;
+pub mod lint;
 pub mod live;
 pub mod pipeline;
 pub mod qos;

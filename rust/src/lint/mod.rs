@@ -1,0 +1,560 @@
+//! `nephele-lint`: the in-repo determinism & event-path-hygiene static
+//! analysis pass.
+//!
+//! The repo's load-bearing invariant is byte-identical same-seed replay;
+//! the two bug classes that have actually bitten it — unordered
+//! `HashSet` iteration feeding fingerprints, and silently-masked event
+//! anomalies behind `unwrap()` panic points — are lexically detectable.
+//! This module is a hand-rolled line scanner over `src/**/*.rs` (the
+//! offline build environment forbids `syn`/dylint, so there is no AST):
+//! comments and string-literal interiors are masked first, then four
+//! rules run over the masked lines:
+//!
+//! * [`rules::DET_HASH_ITER`] — no hash-ordered iteration in
+//!   fingerprint-affecting modules (`sim/`, `sched/`, `qos/`,
+//!   `actions/`),
+//! * [`rules::DET_WALLCLOCK`] — no wall clocks, ambient randomness or
+//!   environment reads in simulation code,
+//! * [`rules::EVT_UNWRAP_RATCHET`] — per-file `unwrap()/expect()`
+//!   budgets in `lint_ratchet.toml` that may only decrease,
+//! * [`rules::SHARD_LOCK`] — poison-handled, ascending-order lock
+//!   acquisition in the sharded event core.
+//!
+//! A finding is silenced only by an *explicit, reasoned* suppression on
+//! or directly above the offending line:
+//!
+//! ```text
+//! // lint:allow(DET-HASH-ITER): order-insensitive sum over window counts
+//! ```
+//!
+//! A suppression without a reason (or naming an unknown rule) is itself
+//! a finding.  The report is deterministic (sorted, stable text/JSON),
+//! so CI diffs and fixture self-tests can key on it byte-for-byte.
+
+pub mod ratchet;
+pub mod report;
+pub mod rules;
+
+use anyhow::{bail, Result};
+use ratchet::{Budget, Ratchet};
+use report::{Finding, LintReport};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+/// Marker that introduces a suppression inside a comment.  Assembled at
+/// compile time from two halves so the scanner never flags its own
+/// source as a malformed suppression.
+const ALLOW_MARKER: &str = concat!("lint:", "allow(");
+
+/// Where to lint: `root` is the crate directory holding `src/` and (by
+/// default) `lint_ratchet.toml`.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    pub root: PathBuf,
+    pub ratchet_path: PathBuf,
+}
+
+impl LintConfig {
+    pub fn at_root(root: impl Into<PathBuf>) -> LintConfig {
+        let root = root.into();
+        let ratchet_path = root.join("lint_ratchet.toml");
+        LintConfig { root, ratchet_path }
+    }
+}
+
+/// One parsed source file: masked lines plus suppression / test-region
+/// metadata the rules consult.
+pub struct SourceFile {
+    /// Root-relative path with forward slashes (`src/sim/master.rs`).
+    pub path: String,
+    /// Source lines with comments and string interiors blanked.
+    pub masked: Vec<String>,
+    /// Rule id -> 0-based line indexes a valid suppression covers.
+    suppressed: BTreeMap<&'static str, BTreeSet<usize>>,
+    /// Malformed suppressions: `(line index, message)`.
+    bad_suppressions: Vec<(usize, String)>,
+    /// 0-based index of a top-level `#[cfg(test)]`, if any; everything
+    /// from there on is test code.
+    test_start: Option<usize>,
+}
+
+impl SourceFile {
+    pub fn parse(path: String, text: &str) -> SourceFile {
+        let (masked, comments) = mask_source(text);
+        let test_start = masked
+            .iter()
+            .position(|l| l.trim_end() == "#[cfg(test)]" && !l.starts_with(char::is_whitespace));
+        let mut file = SourceFile {
+            path,
+            masked,
+            suppressed: BTreeMap::new(),
+            bad_suppressions: Vec::new(),
+            test_start,
+        };
+        file.collect_suppressions(&comments);
+        file
+    }
+
+    /// Whether 0-based line `idx` is inside the trailing test module.
+    pub fn in_test_region(&self, idx: usize) -> bool {
+        self.test_start.is_some_and(|t| idx >= t)
+    }
+
+    /// Whether a valid suppression for `rule` covers 0-based line `idx`.
+    pub fn suppressed(&self, idx: usize, rule: &str) -> bool {
+        self.suppressed.get(rule).is_some_and(|s| s.contains(&idx))
+    }
+
+    /// The logical statement starting at 0-based line `idx`: lines
+    /// joined until one ends in `;`, `{` or `}` (capped at 5 lines), so
+    /// rules can see a chained call that rustfmt wrapped.
+    pub fn statement_at(&self, idx: usize) -> String {
+        let mut out = String::new();
+        for line in self.masked.iter().skip(idx).take(5) {
+            out.push_str(line.trim());
+            out.push(' ');
+            let t = line.trim_end();
+            if t.ends_with(';') || t.ends_with('{') || t.ends_with('}') {
+                break;
+            }
+        }
+        out
+    }
+
+    fn collect_suppressions(&mut self, comments: &[(usize, String)]) {
+        for (idx, text) in comments {
+            let Some(pos) = text.find(ALLOW_MARKER) else { continue };
+            let rest = &text[pos + ALLOW_MARKER.len()..];
+            let Some(close) = rest.find(')') else {
+                self.bad_suppressions
+                    .push((*idx, "unterminated suppression: missing `)`".to_string()));
+                continue;
+            };
+            let rule = rest[..close].trim();
+            let Some(known) = rules::ALL_RULES.iter().find(|r| **r == rule) else {
+                self.bad_suppressions.push((
+                    *idx,
+                    format!("suppression names unknown rule {rule:?}"),
+                ));
+                continue;
+            };
+            let after = &rest[close + 1..];
+            let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+            if reason.is_empty() {
+                self.bad_suppressions.push((
+                    *idx,
+                    format!(
+                        "suppression for {rule} has no reason; write \
+                         `{ALLOW_MARKER}{rule}): <why this is safe>`"
+                    ),
+                ));
+                continue;
+            }
+            // A trailing suppression covers its own line; a standalone
+            // comment line covers the next line that has code.
+            let mut covered = BTreeSet::from([*idx]);
+            if self.masked[*idx].trim().is_empty() {
+                if let Some(next) =
+                    (*idx + 1..self.masked.len()).find(|&i| !self.masked[i].trim().is_empty())
+                {
+                    covered.insert(next);
+                }
+            }
+            self.suppressed.entry(known).or_default().extend(covered);
+        }
+    }
+}
+
+/// Blank comments and string-literal interiors, preserving line count
+/// and column positions.  Returns the masked lines plus the comment
+/// texts (for suppression parsing) as `(0-based line, text)`.
+fn mask_source(text: &str) -> (Vec<String>, Vec<(usize, String)>) {
+    #[derive(Clone, Copy)]
+    enum St {
+        Code,
+        Block(u32),
+        Str,
+        RawStr(u32),
+    }
+    let mut state = St::Code;
+    let mut masked = Vec::new();
+    let mut comments = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let b = line.as_bytes();
+        let mut out = vec![b' '; b.len()];
+        let mut i = 0;
+        while i < b.len() {
+            match state {
+                St::Code => {
+                    if b[i] == b'/' && b.get(i + 1) == Some(&b'/') {
+                        comments.push((lineno, line[i + 2..].to_string()));
+                        i = b.len();
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        state = St::Block(1);
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        out[i] = b'"';
+                        state = St::Str;
+                        i += 1;
+                    } else if b[i] == b'r' || b[i] == b'b' {
+                        // Possible raw/byte string: r", br", r#", r##"…
+                        let mut j = i + 1;
+                        if b[i] == b'b' && b.get(j) == Some(&b'r') {
+                            j += 1;
+                        }
+                        let mut hashes = 0u32;
+                        while b.get(j) == Some(&b'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if b.get(j) == Some(&b'"') && (j > i + 1 || b[i] == b'r') {
+                            out[i..j].copy_from_slice(&b[i..j]);
+                            out[j] = b'"';
+                            state = St::RawStr(hashes);
+                            i = j + 1;
+                        } else {
+                            out[i] = b[i];
+                            i += 1;
+                        }
+                    } else if b[i] == b'\'' {
+                        // Char literal vs lifetime: a literal closes
+                        // within a few chars; a lifetime has none.
+                        out[i] = b[i];
+                        if b.get(i + 1) == Some(&b'\\') {
+                            let close =
+                                (i + 2..b.len().min(i + 12)).find(|&k| b[k] == b'\'');
+                            if let Some(c) = close {
+                                out[c] = b'\'';
+                                i = c + 1;
+                            } else {
+                                i += 1;
+                            }
+                        } else if b.get(i + 2) == Some(&b'\'') {
+                            out[i + 2] = b'\'';
+                            i += 3;
+                        } else {
+                            i += 1;
+                        }
+                    } else {
+                        out[i] = b[i];
+                        i += 1;
+                    }
+                }
+                St::Block(depth) => {
+                    if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        state = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                        i += 2;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        state = St::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                St::Str => {
+                    if b[i] == b'\\' {
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        out[i] = b'"';
+                        state = St::Code;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                St::RawStr(hashes) => {
+                    if b[i] == b'"' {
+                        let n = hashes as usize;
+                        if b[i + 1..].len() >= n
+                            && b[i + 1..i + 1 + n].iter().all(|&c| c == b'#')
+                        {
+                            out[i] = b'"';
+                            for slot in out.iter_mut().skip(i + 1).take(n) {
+                                *slot = b'#';
+                            }
+                            state = St::Code;
+                            i += 1 + n;
+                        } else {
+                            i += 1;
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        masked.push(String::from_utf8_lossy(&out).into_owned());
+    }
+    (masked, comments)
+}
+
+/// Run the full lint pass.  IO problems are `Err`; rule violations are
+/// findings inside the `Ok` report.
+pub fn run(cfg: &LintConfig) -> Result<(LintReport, Ratchet)> {
+    let src = cfg.root.join("src");
+    if !src.is_dir() {
+        bail!("lint root {} has no src/ directory", cfg.root.display());
+    }
+    let baseline = match std::fs::read_to_string(&cfg.ratchet_path) {
+        Ok(text) => ratchet::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", cfg.ratchet_path.display()))?,
+        Err(_) => Ratchet::new(),
+    };
+
+    let mut paths = Vec::new();
+    walk(&src, &mut paths)?;
+    paths.sort();
+
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", p.display()))?;
+        let rel = p
+            .strip_prefix(&cfg.root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(SourceFile::parse(rel, &text));
+    }
+
+    // Crate-wide field/annotation names (annotation form only), so a
+    // HashMap field declared in one module is recognized when iterated
+    // (dotted) in another.  Names that are annotated as something else
+    // anywhere in the crate are dropped as ambiguous (`vertices` is a
+    // HashSet on one struct, a Vec on another).
+    let mut global_names = BTreeSet::new();
+    for f in &files {
+        global_names.extend(rules::annotated_hash_names(&f.masked, false));
+    }
+    for f in &files {
+        let ambiguous = rules::ambiguous_names(&f.masked, &global_names);
+        global_names.retain(|n| !ambiguous.contains(n));
+    }
+
+    let mut report = LintReport { files_scanned: files.len(), ..LintReport::default() };
+    let mut live_ratchet = Ratchet::new();
+    for f in &files {
+        let mut local_names = rules::annotated_hash_names(&f.masked, true);
+        let ambiguous = rules::ambiguous_names(&f.masked, &local_names);
+        local_names.retain(|n| !ambiguous.contains(n));
+        let mut raw = Vec::new();
+        rules::det_hash_iter(f, &local_names, &global_names, &mut raw);
+        rules::det_wallclock(f, &mut raw);
+        rules::shard_lock(f, &mut raw);
+        // Per-line suppressions (the ratchet rule consumes suppressions
+        // during counting instead — a budget finding has no single line).
+        raw.retain(|fi| !f.suppressed(fi.line as usize - 1, fi.rule));
+        report.findings.append(&mut raw);
+        if let Some((key, live)) =
+            rules::unwrap_ratchet(f, &baseline, &mut report.findings, &mut report.suggestions)
+        {
+            live_ratchet.insert(key, live);
+        }
+        for (idx, msg) in &f.bad_suppressions {
+            report.findings.push(Finding::new(
+                &f.path,
+                *idx as u32 + 1,
+                rules::LINT_SUPPRESS,
+                msg.clone(),
+            ));
+        }
+    }
+    // A baseline entry whose file is gone would grant budget to a future
+    // file of the same name; keep the ratchet honest.
+    for stale in baseline.keys().filter(|k| !live_ratchet.contains_key(*k)) {
+        report.findings.push(Finding::new(
+            "lint_ratchet.toml",
+            1,
+            rules::EVT_UNWRAP_RATCHET,
+            format!("ratchet entry {stale:?} has no matching file under src/sim/; remove it"),
+        ));
+    }
+    // Files at their budget stay out of the suggested ratchet only if
+    // zero; every non-zero count keeps an explicit entry.
+    live_ratchet.retain(|_, b| *b != Budget::default());
+    report.sort();
+    Ok((report, live_ratchet))
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Shared CLI entry for `nephele lint` and the standalone `nephele-lint`
+/// binary.
+///
+/// ```text
+/// nephele lint [--root DIR] [--ratchet FILE] [--format text|json]
+///              [--update-ratchet] [--quiet]
+/// ```
+///
+/// Exits non-zero (via `Err`) when any finding survives suppression.
+/// `--update-ratchet` rewrites the ratchet file with the live (lower)
+/// counts; it refuses to run while findings are outstanding, so it can
+/// never raise a budget.
+pub fn cli_main(argv: &[String]) -> Result<()> {
+    let mut root: Option<PathBuf> = None;
+    let mut ratchet_path: Option<PathBuf> = None;
+    let mut json = false;
+    let mut update = false;
+    let mut quiet = false;
+    let mut i = 0;
+    while i < argv.len() {
+        let need = |i: usize| -> Result<&String> {
+            argv.get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("missing value after {}", argv[i]))
+        };
+        match argv[i].as_str() {
+            "--root" => {
+                root = Some(PathBuf::from(need(i)?));
+                i += 2;
+            }
+            "--ratchet" => {
+                ratchet_path = Some(PathBuf::from(need(i)?));
+                i += 2;
+            }
+            "--format" => {
+                json = match need(i)?.as_str() {
+                    "json" => true,
+                    "text" => false,
+                    other => bail!("unknown format {other:?} (text|json)"),
+                };
+                i += 2;
+            }
+            "--update-ratchet" => {
+                update = true;
+                i += 1;
+            }
+            "--quiet" => {
+                quiet = true;
+                i += 1;
+            }
+            "--help" | "-h" => {
+                println!(
+                    "usage: nephele lint [--root DIR] [--ratchet FILE] \
+                     [--format text|json] [--update-ratchet] [--quiet]"
+                );
+                return Ok(());
+            }
+            other => bail!("unknown lint flag {other:?} (try --help)"),
+        }
+    }
+    let root = match root {
+        Some(r) => r,
+        None => locate_root()?,
+    };
+    let mut cfg = LintConfig::at_root(root);
+    if let Some(p) = ratchet_path {
+        cfg.ratchet_path = p;
+    }
+    let (report, live) = run(&cfg)?;
+    if json {
+        print!("{}", report.render_json());
+    } else if !quiet || !report.clean() {
+        print!("{}", report.render_text());
+    }
+    if !report.clean() {
+        bail!("nephele-lint: {} finding(s)", report.findings.len());
+    }
+    if update && !report.suggestions.is_empty() {
+        std::fs::write(&cfg.ratchet_path, ratchet::render(&live))
+            .map_err(|e| anyhow::anyhow!("{}: {e}", cfg.ratchet_path.display()))?;
+        if !quiet {
+            println!("ratchet lowered: wrote {}", cfg.ratchet_path.display());
+        }
+    }
+    Ok(())
+}
+
+/// Default root: the crate dir when run from `rust/`, `rust/` when run
+/// from the repo root.
+fn locate_root() -> Result<PathBuf> {
+    for cand in [".", "rust"] {
+        let p = PathBuf::from(cand);
+        if p.join("src").join("lib.rs").is_file() {
+            return Ok(p);
+        }
+    }
+    bail!("cannot locate the crate root (run from the repo or pass --root DIR)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> SourceFile {
+        SourceFile::parse("src/sim/x.rs".to_string(), text)
+    }
+
+    #[test]
+    fn masking_blanks_comments_and_string_interiors() {
+        let f = parse("let a = \"HashMap<in a string>\"; // HashMap<in a comment>\n/* HashMap<b> */ let b = 1;\n");
+        assert!(!f.masked[0].contains("HashMap"));
+        assert!(f.masked[0].contains("let a ="));
+        assert!(!f.masked[1].contains("HashMap"));
+        assert!(f.masked[1].contains("let b = 1;"));
+    }
+
+    #[test]
+    fn masking_handles_raw_strings_and_char_literals() {
+        let f = parse("let r = r#\"HashMap<raw>\"#;\nlet c = '\\n'; let l: &'static str = \"x\";\nlet d = b\"HashMap<bytes>\";\n");
+        assert!(!f.masked[0].contains("HashMap"));
+        assert!(f.masked[1].contains("&'static str"), "lifetimes survive: {}", f.masked[1]);
+        assert!(!f.masked[2].contains("HashMap"));
+    }
+
+    #[test]
+    fn suppressions_cover_their_line_or_the_next() {
+        let marker = ALLOW_MARKER;
+        let f = parse(&format!(
+            "foo(); // {marker}DET-HASH-ITER): trailing case\n\
+             // {marker}DET-WALLCLOCK): standalone case\n\
+             bar();\n"
+        ));
+        assert!(f.suppressed(0, rules::DET_HASH_ITER));
+        assert!(f.suppressed(2, rules::DET_WALLCLOCK));
+        assert!(!f.suppressed(2, rules::DET_HASH_ITER));
+        assert!(f.bad_suppressions.is_empty());
+    }
+
+    #[test]
+    fn reasonless_and_unknown_suppressions_are_findings() {
+        let marker = ALLOW_MARKER;
+        let f = parse(&format!(
+            "foo(); // {marker}DET-HASH-ITER)\n\
+             bar(); // {marker}NOT-A-RULE): whatever\n\
+             baz(); // {marker}DET-HASH-ITER):   \n"
+        ));
+        assert_eq!(f.bad_suppressions.len(), 3);
+        assert!(!f.suppressed(0, rules::DET_HASH_ITER));
+        assert!(!f.suppressed(2, rules::DET_HASH_ITER));
+    }
+
+    #[test]
+    fn test_region_starts_at_top_level_cfg_test() {
+        let f = parse("fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\n");
+        assert!(!f.in_test_region(0));
+        assert!(f.in_test_region(1));
+        assert!(f.in_test_region(3));
+        let g = parse("fn a() {\n    #[cfg(test)]\n    fn inner() {}\n}\n");
+        assert!(g.test_start.is_none(), "indented cfg(test) is not the file's test tail");
+    }
+
+    #[test]
+    fn statement_joining_stops_at_terminators() {
+        let f = parse("let x = foo\n    .bar()\n    .baz();\nnext();\n");
+        let stmt = f.statement_at(0);
+        assert!(stmt.contains(".baz();"));
+        assert!(!stmt.contains("next"));
+    }
+}

@@ -1,0 +1,121 @@
+//! The `EVT-UNWRAP-RATCHET` baseline file (`lint_ratchet.toml`).
+//!
+//! A hand-rolled reader/writer for the tiny TOML subset the ratchet
+//! needs — quoted-path section headers and `key = integer` pairs — so
+//! the linter stays dependency-free in the offline build:
+//!
+//! ```toml
+//! ["sim/master.rs"]
+//! unwrap = 0
+//! expect = 2
+//! ```
+//!
+//! Paths are relative to `src/`.  The contract is one-directional:
+//! counts in the tree may only move *down* relative to the committed
+//! baseline.  `nephele lint` fails when a file exceeds its budget,
+//! suggests the lowered baseline when a file dips below it, and
+//! `--update-ratchet` rewrites this file with the (lower) live counts.
+
+use std::collections::BTreeMap;
+
+/// Per-file unwrap/expect budget.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Budget {
+    pub unwrap: u64,
+    pub expect: u64,
+}
+
+/// The full baseline: `src/`-relative path → budget, ordered.
+pub type Ratchet = BTreeMap<String, Budget>;
+
+/// Parse the ratchet file.  Unknown keys, malformed headers and
+/// non-integer values are hard errors — a typo in the baseline must not
+/// silently grant an unlimited budget.
+pub fn parse(text: &str) -> Result<Ratchet, String> {
+    let mut out = Ratchet::new();
+    let mut current: Option<String> = None;
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        let lineno = i + 1;
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let inner = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {lineno}: unterminated section header"))?
+                .trim()
+                .trim_matches('"');
+            if inner.is_empty() {
+                return Err(format!("line {lineno}: empty section header"));
+            }
+            if out.contains_key(inner) {
+                return Err(format!("line {lineno}: duplicate section {inner:?}"));
+            }
+            out.insert(inner.to_string(), Budget::default());
+            current = Some(inner.to_string());
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {lineno}: expected `key = value`"))?;
+        let section = current
+            .as_ref()
+            .ok_or_else(|| format!("line {lineno}: key outside any [\"file\"] section"))?;
+        let n: u64 = value
+            .trim()
+            .parse()
+            .map_err(|_| format!("line {lineno}: value is not an unsigned integer"))?;
+        let budget = out.get_mut(section).expect("section inserted when header was read");
+        match key.trim() {
+            "unwrap" => budget.unwrap = n,
+            "expect" => budget.expect = n,
+            other => return Err(format!("line {lineno}: unknown key {other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+/// Deterministic serialization (sorted by path; fixed key order).
+pub fn render(r: &Ratchet) -> String {
+    let mut out = String::from(
+        "# EVT-UNWRAP-RATCHET baselines: whole-file `.unwrap()` / `.expect(` counts\n\
+         # for the event-path modules (src/sim/).  Counts may only decrease; run\n\
+         # `nephele lint --update-ratchet` after burning debt down.  Raising a\n\
+         # budget is a reviewed edit of this file, never an automated one.\n",
+    );
+    for (file, b) in r {
+        out.push_str(&format!("\n[\"{file}\"]\nunwrap = {}\nexpect = {}\n", b.unwrap, b.expect));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_render_roundtrip() {
+        let mut r = Ratchet::new();
+        r.insert("sim/cluster.rs".into(), Budget { unwrap: 48, expect: 0 });
+        r.insert("sim/master.rs".into(), Budget { unwrap: 0, expect: 2 });
+        let text = render(&r);
+        assert_eq!(parse(&text).unwrap(), r);
+        assert_eq!(render(&parse(&text).unwrap()), text);
+    }
+
+    #[test]
+    fn malformed_ratchets_are_rejected() {
+        assert!(parse("unwrap = 3").is_err(), "key outside a section");
+        assert!(parse("[\"a.rs\"]\nunwrap = x").is_err(), "non-integer value");
+        assert!(parse("[\"a.rs\"]\nwobble = 3").is_err(), "unknown key");
+        assert!(parse("[\"a.rs\"\nunwrap = 3").is_err(), "unterminated header");
+        assert!(parse("[\"a.rs\"]\n[\"a.rs\"]").is_err(), "duplicate section");
+    }
+
+    #[test]
+    fn missing_keys_default_to_zero() {
+        let r = parse("[\"sim/x.rs\"]\nunwrap = 7\n").unwrap();
+        assert_eq!(r["sim/x.rs"], Budget { unwrap: 7, expect: 0 });
+    }
+}

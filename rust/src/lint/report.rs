@@ -1,0 +1,150 @@
+//! Findings and the deterministic machine-readable report.
+//!
+//! The report is consumed by CI and by the fixture self-tests, so its
+//! rendering is fully deterministic: findings are sorted by
+//! `(file, line, rule, message)` and both the text and JSON forms are
+//! produced by hand (no formatter state, no hash iteration).
+
+use std::fmt::Write as _;
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    /// Root-relative path with forward slashes (e.g. `src/sim/master.rs`).
+    pub file: String,
+    /// 1-based line number the finding anchors to.
+    pub line: u32,
+    /// Stable rule id (e.g. `DET-HASH-ITER`).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(file: &str, line: u32, rule: &'static str, message: String) -> Finding {
+        Finding { file: file.to_string(), line, rule, message }
+    }
+}
+
+/// Outcome of one lint run over a tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Violations, sorted by `(file, line, rule, message)`.
+    pub findings: Vec<Finding>,
+    /// Non-failing notes (e.g. "ratchet for X may be lowered to N"),
+    /// sorted lexicographically.
+    pub suggestions: Vec<String>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn sort(&mut self) {
+        self.findings.sort();
+        self.findings.dedup();
+        self.suggestions.sort();
+    }
+
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Stable line-oriented text form: one `RULE file:line message` per
+    /// finding, then suggestions, then a summary line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let _ = writeln!(out, "{} {}:{} {}", f.rule, f.file, f.line, f.message);
+        }
+        for s in &self.suggestions {
+            let _ = writeln!(out, "note: {s}");
+        }
+        let _ = writeln!(
+            out,
+            "nephele-lint: {} finding(s), {} suggestion(s), {} file(s) scanned",
+            self.findings.len(),
+            self.suggestions.len(),
+            self.files_scanned
+        );
+        out
+    }
+
+    /// Stable JSON form (hand-rolled; the offline build has no serde).
+    pub fn render_json(&self) -> String {
+        let mut out = String::from("{\n  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            let _ = write!(
+                out,
+                "{sep}\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \
+                 \"message\": \"{}\"}}",
+                escape_json(f.rule),
+                escape_json(&f.file),
+                f.line,
+                escape_json(&f.message)
+            );
+        }
+        if !self.findings.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("],\n  \"suggestions\": [");
+        for (i, s) in self.suggestions.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            let _ = write!(out, "{sep}\n    \"{}\"", escape_json(s));
+        }
+        if !self.suggestions.is_empty() {
+            out.push_str("\n  ");
+        }
+        let _ = write!(out, "],\n  \"files_scanned\": {}\n}}\n", self.files_scanned);
+        out
+    }
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_rendering_is_sorted_and_stable() {
+        let mut r = LintReport::default();
+        r.findings.push(Finding::new("src/sim/b.rs", 9, "DET-WALLCLOCK", "x".into()));
+        r.findings.push(Finding::new("src/sim/a.rs", 3, "DET-HASH-ITER", "y".into()));
+        r.suggestions.push("zzz".into());
+        r.suggestions.push("aaa".into());
+        r.files_scanned = 2;
+        r.sort();
+        let text = r.render_text();
+        let a = text.find("src/sim/a.rs:3").unwrap();
+        let b = text.find("src/sim/b.rs:9").unwrap();
+        assert!(a < b);
+        assert!(text.find("note: aaa").unwrap() < text.find("note: zzz").unwrap());
+        assert!(text.ends_with("2 file(s) scanned\n"));
+        assert_eq!(text, r.render_text(), "rendering must be pure");
+    }
+
+    #[test]
+    fn json_escapes_quotes_and_newlines() {
+        let mut r = LintReport::default();
+        r.findings.push(Finding::new("a.rs", 1, "DET-HASH-ITER", "say \"hi\"\n".into()));
+        r.files_scanned = 1;
+        let json = r.render_json();
+        assert!(json.contains("say \\\"hi\\\"\\n"));
+        assert!(json.contains("\"files_scanned\": 1"));
+    }
+}

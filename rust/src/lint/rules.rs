@@ -1,0 +1,484 @@
+//! The four `nephele-lint` rules.
+//!
+//! All rules operate on *masked* source lines (string-literal interiors
+//! and comments blanked by [`super::SourceFile`]), so trigger tokens
+//! inside log messages or docs never fire.  The analysis is a
+//! hand-rolled lexical scan — the offline build forbids `syn`/dylint —
+//! which buys zero dependencies at the cost of being name-based rather
+//! than type-based.  The escape hatch for the resulting (rare) false
+//! positives is an explicit, reasoned `lint:allow` suppression; see
+//! `DESIGN.md` §11 for each rule's exact semantics and limits.
+
+use super::ratchet::{Budget, Ratchet};
+use super::report::Finding;
+use super::SourceFile;
+use std::collections::BTreeSet;
+
+/// Rule ids, stable across releases (reports, suppressions and fixtures
+/// key on them).
+pub const DET_HASH_ITER: &str = "DET-HASH-ITER";
+pub const DET_WALLCLOCK: &str = "DET-WALLCLOCK";
+pub const EVT_UNWRAP_RATCHET: &str = "EVT-UNWRAP-RATCHET";
+pub const SHARD_LOCK: &str = "SHARD-LOCK";
+/// Meta-rule for malformed suppressions; not itself suppressible.
+pub const LINT_SUPPRESS: &str = "LINT-SUPPRESS";
+
+pub const ALL_RULES: [&str; 4] =
+    [DET_HASH_ITER, DET_WALLCLOCK, EVT_UNWRAP_RATCHET, SHARD_LOCK];
+
+/// Modules whose event order or fingerprints same-seed replay depends
+/// on: the determinism rules apply here.
+const DET_SCOPES: [&str; 4] = ["src/sim/", "src/sched/", "src/qos/", "src/actions/"];
+
+/// Event-path modules under the unwrap ratchet.
+const RATCHET_SCOPE: &str = "src/sim/";
+
+pub fn in_det_scope(path: &str) -> bool {
+    DET_SCOPES.iter().any(|s| path.starts_with(s))
+}
+
+pub fn in_ratchet_scope(path: &str) -> bool {
+    path.starts_with(RATCHET_SCOPE)
+}
+
+pub fn is_shard_file(path: &str) -> bool {
+    path.ends_with("sim/shard.rs")
+}
+
+fn is_ident_char(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// The identifier ending at byte `end` (exclusive), if any.
+fn ident_ending_at(line: &str, end: usize) -> Option<&str> {
+    let b = line.as_bytes();
+    let mut start = end;
+    while start > 0 && is_ident_char(b[start - 1]) {
+        start -= 1;
+    }
+    if start == end || b[start].is_ascii_digit() {
+        None
+    } else {
+        Some(&line[start..end])
+    }
+}
+
+// ---------------------------------------------------------------------
+// DET-HASH-ITER
+// ---------------------------------------------------------------------
+
+/// Collect names *declared* with a `HashMap`/`HashSet` type on a masked
+/// line: struct fields, lets, params, struct-literal inits
+/// (`name: HashMap<...>` / `name = std::collections::HashSet::new()`).
+///
+/// With `initializers` set, `=`-introduced bindings count too — that is
+/// the per-file (local) mode.  Crate-wide the caller passes `false`, so
+/// only `:`-annotated names (fields, typed lets) travel across files; a
+/// field declared in `sim/task.rs` is then recognized when iterated as
+/// `self.tasks[i].field.iter()` in `sim/worker.rs`, while short local
+/// binding names cannot leak into other files' dotted accesses.
+pub fn annotated_hash_names(masked_lines: &[String], initializers: bool) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for line in masked_lines {
+        for needle in ["HashMap<", "HashSet<", "HashMap::", "HashSet::"] {
+            for pos in match_positions(line, needle) {
+                if let Some((name, intro)) = decl_name_before(line, pos) {
+                    if (intro == b':' || initializers)
+                        && !matches!(
+                            name,
+                            "mut" | "let" | "pub" | "crate" | "collections" | "std"
+                        )
+                    {
+                        names.insert(name.to_string());
+                    }
+                }
+            }
+        }
+    }
+    names
+}
+
+/// The name being declared (or assigned) when a `Hash*` type token
+/// starts at byte `pos`: walks back over an optional
+/// `std::collections::` path to a `:` annotation or `=` initializer and
+/// returns the identifier in front of it plus the introducer byte.
+/// Return-type positions, tuple/turbofish contexts and `::` paths yield
+/// `None`.
+fn decl_name_before(line: &str, pos: usize) -> Option<(&str, u8)> {
+    let b = line.as_bytes();
+    let mut i = pos;
+    while i > 0 && (is_ident_char(b[i - 1]) || b[i - 1] == b':') {
+        i -= 1;
+    }
+    while i > 0 && b[i - 1].is_ascii_whitespace() {
+        i -= 1;
+    }
+    if i == 0 {
+        return None;
+    }
+    let intro = match b[i - 1] {
+        b':' if i < 2 || b[i - 2] != b':' => b':',
+        b'=' if i < 2 || !matches!(b[i - 2], b'=' | b'!' | b'<' | b'>') => b'=',
+        _ => return None,
+    };
+    i -= 1;
+    while i > 0 && b[i - 1].is_ascii_whitespace() {
+        i -= 1;
+    }
+    ident_ending_at(line, i).map(|name| (name, intro))
+}
+
+/// Of `names`, the ones that also appear somewhere in `masked_lines`
+/// with a *non-hash* `: Type` annotation (or struct-literal
+/// initializer).  A name-based pass must drop those: `vertices` may be
+/// a `HashSet` field on one struct and a `Vec` on another, and flagging
+/// every `rg.vertices.iter()` would drown the signal.  Conservative by
+/// design — an ambiguous name is silently untracked, which DESIGN.md
+/// §11 lists as the price of a dependency-free lexical analysis.
+pub fn ambiguous_names(
+    masked_lines: &[String],
+    names: &BTreeSet<String>,
+) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for line in masked_lines {
+        for name in names {
+            if out.contains(name) {
+                continue;
+            }
+            for pos in match_positions(line, name) {
+                let b = line.as_bytes();
+                // Ident-boundary occurrence followed by a single `:`.
+                if pos > 0 && is_ident_char(b[pos - 1]) {
+                    continue;
+                }
+                let mut i = pos + name.len();
+                if i < b.len() && is_ident_char(b[i]) {
+                    continue;
+                }
+                while i < b.len() && b[i].is_ascii_whitespace() {
+                    i += 1;
+                }
+                if i >= b.len() || b[i] != b':' || b.get(i + 1) == Some(&b':') {
+                    continue;
+                }
+                // The annotated type (or initializer expression): strip
+                // references, `mut` and module paths, then ask whether a
+                // hash collection remains.
+                let mut ty = line[i + 1..].trim_start();
+                loop {
+                    if let Some(rest) = ty.strip_prefix('&') {
+                        ty = rest.trim_start();
+                    } else if let Some(rest) = ty.strip_prefix("mut ") {
+                        ty = rest.trim_start();
+                    } else {
+                        break;
+                    }
+                }
+                while let Some(sep) = ty.find("::") {
+                    if ty[..sep].bytes().all(is_ident_char) {
+                        ty = &ty[sep + 2..];
+                    } else {
+                        break;
+                    }
+                }
+                if !ty.starts_with("HashMap") && !ty.starts_with("HashSet") {
+                    out.insert(name.clone());
+                }
+            }
+        }
+    }
+    out
+}
+
+fn match_positions(line: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = line[from..].find(needle) {
+        out.push(from + p);
+        from += p + needle.len();
+    }
+    out
+}
+
+/// Iteration adaptors whose visit order is the hash order.
+const ITER_METHODS: [&str; 11] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+    ".retain(",
+    ".extract_if(",
+];
+
+/// DET-HASH-ITER: iterating a `HashMap`/`HashSet` in a module whose
+/// event order or replay fingerprint the iteration can reach.  The fix
+/// is a `BTreeMap`/`BTreeSet` or an explicit sort; genuinely
+/// order-insensitive folds (counters, sums) may be suppressed *with a
+/// reason*.  A statement that already sorts or collects into a BTree
+/// container is exempt.
+pub fn det_hash_iter(
+    file: &SourceFile,
+    local_names: &BTreeSet<String>,
+    global_field_names: &BTreeSet<String>,
+    findings: &mut Vec<Finding>,
+) {
+    if !in_det_scope(&file.path) {
+        return;
+    }
+    for (idx, line) in file.masked.iter().enumerate() {
+        if file.in_test_region(idx) {
+            continue;
+        }
+        let mut hits: Vec<(usize, String)> = Vec::new();
+        for m in ITER_METHODS {
+            for pos in match_positions(line, m) {
+                if let Some(seg) = ident_ending_at(line, pos) {
+                    let dotted = pos > seg.len()
+                        && line.as_bytes()[pos - seg.len() - 1] == b'.';
+                    let local = local_names.contains(seg);
+                    if local || (dotted && global_field_names.contains(seg)) {
+                        hits.push((pos, seg.to_string()));
+                    }
+                }
+            }
+        }
+        // `for x in map` / `for x in &map` without an adaptor call.
+        if let Some(p) = line.find("for ") {
+            if let Some(inp) = line[p..].find(" in ") {
+                let expr = line[p + inp + 4..].trim_end().trim_end_matches('{').trim();
+                let expr = expr.trim_start_matches('&').trim_start_matches("mut ").trim();
+                if !expr.is_empty()
+                    && expr.bytes().all(|c| is_ident_char(c) || c == b'.' || c == b':')
+                {
+                    let seg = expr.rsplit(['.', ':']).next().unwrap_or(expr);
+                    let dotted = expr.contains('.');
+                    if local_names.contains(seg)
+                        || (dotted && global_field_names.contains(seg))
+                    {
+                        hits.push((p, seg.to_string()));
+                    }
+                }
+            }
+        }
+        if hits.is_empty() {
+            continue;
+        }
+        // Statement-level exemption: an adjacent sort or BTree collect
+        // makes the order deterministic.
+        let stmt = file.statement_at(idx);
+        if stmt.contains("sort") || stmt.contains("BTree") {
+            continue;
+        }
+        hits.sort();
+        hits.dedup();
+        for (_, name) in hits {
+            findings.push(Finding::new(
+                &file.path,
+                idx as u32 + 1,
+                DET_HASH_ITER,
+                format!(
+                    "iteration over hash-ordered collection `{name}` in a \
+                     fingerprint-affecting module; use BTreeMap/BTreeSet or sort into a \
+                     Vec first"
+                ),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// DET-WALLCLOCK
+// ---------------------------------------------------------------------
+
+const WALLCLOCK_TOKENS: [&str; 5] =
+    ["SystemTime", "Instant::now", "thread_rng", "rand::random", "env::var"];
+
+/// DET-WALLCLOCK: wall-clock reads, ambient randomness and environment
+/// lookups inside simulation code break same-seed replay.  Virtual time
+/// comes from `util::time`, randomness from the seeded `util::rng`.
+pub fn det_wallclock(file: &SourceFile, findings: &mut Vec<Finding>) {
+    if !in_det_scope(&file.path) {
+        return;
+    }
+    for (idx, line) in file.masked.iter().enumerate() {
+        if file.in_test_region(idx) {
+            continue;
+        }
+        for tok in WALLCLOCK_TOKENS {
+            if line.contains(tok) {
+                findings.push(Finding::new(
+                    &file.path,
+                    idx as u32 + 1,
+                    DET_WALLCLOCK,
+                    format!(
+                        "`{tok}` in simulation code: nondeterministic input breaks \
+                         same-seed replay (use util::time / the seeded util::rng)"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// EVT-UNWRAP-RATCHET
+// ---------------------------------------------------------------------
+
+/// Count of `.unwrap()` / `.expect(` occurrences on unsuppressed lines.
+pub fn unwrap_counts(file: &SourceFile) -> Budget {
+    let mut b = Budget::default();
+    for (idx, line) in file.masked.iter().enumerate() {
+        if file.suppressed(idx, EVT_UNWRAP_RATCHET) {
+            continue;
+        }
+        b.unwrap += match_positions(line, ".unwrap()").len() as u64;
+        b.expect += match_positions(line, ".expect(").len() as u64;
+    }
+    b
+}
+
+fn first_occurrence(file: &SourceFile, needle: &str) -> u32 {
+    for (idx, line) in file.masked.iter().enumerate() {
+        if !file.suppressed(idx, EVT_UNWRAP_RATCHET) && line.contains(needle) {
+            return idx as u32 + 1;
+        }
+    }
+    1
+}
+
+/// EVT-UNWRAP-RATCHET: event-path modules hold their panic-point debt
+/// at or below the committed baseline.  Returns this file's live counts
+/// so the caller can assemble the suggested (lowered) ratchet.
+pub fn unwrap_ratchet(
+    file: &SourceFile,
+    baseline: &Ratchet,
+    findings: &mut Vec<Finding>,
+    suggestions: &mut Vec<String>,
+) -> Option<(String, Budget)> {
+    if !in_ratchet_scope(&file.path) {
+        return None;
+    }
+    let key = file.path.trim_start_matches("src/").to_string();
+    let live = unwrap_counts(file);
+    let budget = baseline.get(&key).copied().unwrap_or_default();
+    for (kind, live_n, budget_n, needle) in [
+        ("unwrap", live.unwrap, budget.unwrap, ".unwrap()"),
+        ("expect", live.expect, budget.expect, ".expect("),
+    ] {
+        if live_n > budget_n {
+            findings.push(Finding::new(
+                &file.path,
+                first_occurrence(file, needle),
+                EVT_UNWRAP_RATCHET,
+                format!(
+                    "`{needle}` count {live_n} exceeds the ratchet budget {budget_n} \
+                     for {key}; propagate a typed SimError instead (the ratchet only \
+                     goes down)"
+                ),
+            ));
+        } else if live_n < budget_n {
+            suggestions.push(format!(
+                "ratchet for {key} may be lowered: {kind} {budget_n} -> {live_n} \
+                 (run `nephele lint --update-ratchet`)"
+            ));
+        }
+    }
+    Some((key, live))
+}
+
+// ---------------------------------------------------------------------
+// SHARD-LOCK
+// ---------------------------------------------------------------------
+
+/// SHARD-LOCK: in the sharded event core, (a) every `Mutex::lock()`
+/// result must handle poisoning explicitly — `PoisonError::into_inner`,
+/// a `match`/`if let` on the `Result` — or carry a reasoned
+/// suppression; (b) a lock acquired inside a `for` loop (the cross-shard
+/// outbox flush) must walk shards in ascending id order (an
+/// `.enumerate()` run or a `0..n` range), the static counterpart of the
+/// lock-ordering deadlock rule the ThreadSanitizer job checks
+/// dynamically.
+pub fn shard_lock(file: &SourceFile, findings: &mut Vec<Finding>) {
+    if !is_shard_file(&file.path) {
+        return;
+    }
+    for (idx, line) in file.masked.iter().enumerate() {
+        if !line.contains(".lock()") {
+            continue;
+        }
+        let stmt = file.statement_at(idx);
+        let handled = (stmt.contains("unwrap_or_else") && stmt.contains("into_inner"))
+            || stmt.trim_start().starts_with("match ")
+            || stmt.contains("if let ");
+        if !handled && !file.suppressed(idx, SHARD_LOCK) {
+            findings.push(Finding::new(
+                &file.path,
+                idx as u32 + 1,
+                SHARD_LOCK,
+                "Mutex::lock() must handle poisoning (PoisonError::into_inner or an \
+                 explicit match) — a peer shard's panic otherwise cascades as an \
+                 unrelated lock panic"
+                    .to_string(),
+            ));
+        }
+        if let Some((for_idx, header)) = enclosing_for_header(file, idx) {
+            let ascending = header.contains(".enumerate()") || header.contains("0..");
+            if !ascending && !file.suppressed(idx, SHARD_LOCK) {
+                findings.push(Finding::new(
+                    &file.path,
+                    for_idx as u32 + 1,
+                    SHARD_LOCK,
+                    "cross-shard locks inside a `for` loop must be acquired in \
+                     ascending shard-id order (iterate with `.enumerate()` or a `0..` \
+                     range) to keep the lock order total"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+/// The nearest enclosing `for` header above `idx`, found by walking up
+/// through strictly-shallower block openers (rustfmt indentation makes
+/// openers shallower than their bodies).  Returns the header line index
+/// and its text joined with up to two continuation lines, so a wrapped
+/// `for x in\n  xs.iter().enumerate()` still exposes its iterator.
+fn enclosing_for_header(file: &SourceFile, idx: usize) -> Option<(usize, String)> {
+    let indent_of = |s: &str| s.len() - s.trim_start().len();
+    let mut limit = indent_of(&file.masked[idx]);
+    for j in (0..idx).rev() {
+        let line = &file.masked[j];
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ind = indent_of(line);
+        if ind >= limit {
+            continue;
+        }
+        let trimmed = line.trim_start();
+        if trimmed.starts_with("fn ") || trimmed.contains(" fn ") {
+            return None;
+        }
+        if trimmed.starts_with("for ") {
+            let mut header = trimmed.to_string();
+            for cont in file.masked.iter().skip(j + 1).take(2) {
+                if header.trim_end().ends_with('{') {
+                    break;
+                }
+                header.push(' ');
+                header.push_str(cont.trim());
+            }
+            return Some((j, header));
+        }
+        limit = ind;
+        if limit == 0 {
+            return None;
+        }
+    }
+    None
+}

@@ -15,6 +15,8 @@
 //!                    [--phase base|admission|fairness|preempt|migrate|all]
 //!                    [--quiet]
 //! nephele live       [--frames N] [--fps F] [--artifacts DIR]
+//! nephele lint       [--root DIR] [--ratchet FILE] [--format text|json]
+//!                    [--update-ratchet] [--quiet]
 //! nephele info
 //! ```
 //!
@@ -73,6 +75,7 @@ fn main() -> Result<()> {
         Some("sim-scale") => sim_scale(&argv[1..]),
         Some("sim-multi") => sim_multi(&argv[1..]),
         Some("live") => live(&argv[1..]),
+        Some("lint") => nephele::lint::cli_main(&argv[1..]),
         Some("info") | None => {
             println!("nephele-streaming — reproduction of 'Nephele Streaming: Stream");
             println!("Processing under QoS Constraints at Scale' (Cluster Computing 2013).");

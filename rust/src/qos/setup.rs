@@ -412,13 +412,16 @@ fn add_interest(
 pub fn manager_elements(
     sub: &QosSubgraph,
 ) -> (HashSet<VertexId>, HashSet<crate::graph::ids::ChannelId>) {
-    let mut vs = HashSet::new();
-    let mut cs = HashSet::new();
+    // Named distinctly from the `vs`/`cs` layer bindings above: the
+    // name-based DET-HASH-ITER pass tracks hash collections per file,
+    // and a shared name would conflate these sets with plain Vec slices.
+    let mut vset = HashSet::new();
+    let mut cset = HashSet::new();
     for chain in &sub.chains {
-        vs.extend(chain.vertices().map(|v| v.id));
-        cs.extend(chain.channels().map(|c| c.id));
+        vset.extend(chain.vertices().map(|v| v.id));
+        cset.extend(chain.channels().map(|c| c.id));
     }
-    (vs, cs)
+    (vset, cset)
 }
 
 /// Build a [`super::reporter::QosReporter`]-compatible interest map from

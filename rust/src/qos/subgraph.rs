@@ -98,8 +98,9 @@ impl ChainSpec {
     /// branch factors, respecting connectivity).
     pub fn sequence_count(&self) -> u128 {
         // DP counting identical in structure to JobSequence::count_runtime
-        // but restricted to the chain's members.
-        let mut counts: std::collections::HashMap<VertexId, u128> = Default::default();
+        // but restricted to the chain's members.  BTreeMap keeps the
+        // retain/sum walks replay-stable (DET-HASH-ITER).
+        let mut counts: std::collections::BTreeMap<VertexId, u128> = Default::default();
         let mut edge_total: u128 = 0;
         for (i, layer) in self.layers.iter().enumerate() {
             match layer {
@@ -113,7 +114,7 @@ impl ChainSpec {
                     }
                 }
                 Layer::Channels(cs) => {
-                    let mut next: std::collections::HashMap<VertexId, u128> = Default::default();
+                    let mut next: std::collections::BTreeMap<VertexId, u128> = Default::default();
                     edge_total = 0;
                     for c in cs {
                         let w = if i == 0 { 1 } else { *counts.get(&c.from).unwrap_or(&0) };

@@ -596,11 +596,11 @@ impl SimCluster {
             Ev::CpuSample { worker } => self.on_cpu_sample(now, WorkerId(worker)),
             Ev::ApplyAction { action } => self.on_apply(now, action),
             Ev::WorkerCrash { worker } => self.on_worker_crash(now, WorkerId(worker)),
-            Ev::MasterTick => self.on_master_tick(now),
-            Ev::JobSubmit { job } => self.on_job_submit(now, job as usize),
+            Ev::MasterTick => return self.on_master_tick(now),
+            Ev::JobSubmit { job } => return self.on_job_submit(now, job as usize),
             Ev::JobWatch { job } => self.on_job_watch(now, job as usize),
             Ev::JobCancel { job } => self.on_job_cancel(now, job as usize),
-            Ev::SchedTick { periodic } => self.on_sched_tick(now, periodic),
+            Ev::SchedTick { periodic } => return self.on_sched_tick(now, periodic),
         }
         Ok(())
     }

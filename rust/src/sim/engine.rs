@@ -77,6 +77,13 @@ pub enum SimError {
     /// chain member's input queue after it was selected for being
     /// non-empty.
     DrainedQueue { context: &'static str },
+    /// A recovery path needed a surviving worker but the live set was
+    /// empty where the caller's guard guaranteed otherwise.
+    NoLiveWorker { context: &'static str },
+    /// A scheduler-produced placement did not line up with the job
+    /// graph it was produced for (wrong instance count or an assignment
+    /// the runtime graph refused).
+    PlacementMismatch { context: &'static str },
 }
 
 impl fmt::Display for SimError {
@@ -84,6 +91,12 @@ impl fmt::Display for SimError {
         match self {
             SimError::DrainedQueue { context } => {
                 write!(f, "simulator queue drained unexpectedly: {context}")
+            }
+            SimError::NoLiveWorker { context } => {
+                write!(f, "no surviving worker available: {context}")
+            }
+            SimError::PlacementMismatch { context } => {
+                write!(f, "placement does not match the job graph: {context}")
             }
         }
     }

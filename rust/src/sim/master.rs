@@ -16,7 +16,7 @@
 
 use super::accounting::SLOT_SAMPLE_CAP;
 use super::cluster::{JobLedger, SimCluster};
-use super::engine::Ev;
+use super::engine::{Ev, SimError};
 use super::flow::{Buffer, OutBufferState};
 use super::task::{Semantics, TaskState};
 use crate::actions::Action;
@@ -42,7 +42,7 @@ impl SimCluster {
     /// silent past the detection timeout in *any* job's report stream
     /// are declared failed and handed to the recovery policy (a worker
     /// crash is physical — every job on it is affected).
-    pub(crate) fn on_master_tick(&mut self, now: Time) {
+    pub(crate) fn on_master_tick(&mut self, now: Time) -> Result<(), SimError> {
         let mut silent: BTreeSet<WorkerId> = BTreeSet::new();
         for jq in &self.jobs {
             silent.extend(jq.detector.silent(now));
@@ -51,16 +51,17 @@ impl SimCluster {
             for jq in &mut self.jobs {
                 jq.detector.confirm(w);
             }
-            self.handle_worker_failure(now, w);
+            self.handle_worker_failure(now, w)?;
         }
         self.queue.push(now + self.cfg.measurement_interval, Ev::MasterTick);
+        Ok(())
     }
 
     /// React to a detected worker failure.  The worker is fenced first
     /// (even a falsely-suspected one is cut off before its instances are
     /// redeployed), then every affected running job is either recovered
     /// or merely unregistered from the dead worker.
-    fn handle_worker_failure(&mut self, now: Time, w: WorkerId) {
+    fn handle_worker_failure(&mut self, now: Time, w: WorkerId) -> Result<(), SimError> {
         self.stats.failovers += 1;
         self.on_worker_crash(now, w);
         let running: Vec<usize> = (0..self.jobs.len())
@@ -74,7 +75,7 @@ impl SimCluster {
                 continue;
             }
             if self.cfg.recovery.enable_recovery {
-                self.recover_worker_for(now, w, j);
+                self.recover_worker_for(now, w, j)?;
             } else {
                 self.unregister_worker_for(now, w, j);
             }
@@ -87,6 +88,7 @@ impl SimCluster {
             self.queue
                 .push(now + self.cfg.cluster.control_delay, Ev::SchedTick { periodic: false });
         }
+        Ok(())
     }
 
     /// Recovery for one job: redeploy its dead instances of `w` onto the
@@ -95,7 +97,7 @@ impl SimCluster {
     /// 1–3 for this job so its reporters and managers track the new
     /// placement.  From here the regular buffer → chaining → scaling
     /// escalation works the residual violation off.
-    fn recover_worker_for(&mut self, now: Time, w: WorkerId, j: usize) {
+    fn recover_worker_for(&mut self, now: Time, w: WorkerId, j: usize) -> Result<(), SimError> {
         let id = JobId(j as u32);
         let victims = self.active_instances_on_for(w, j);
         let live_workers: Vec<WorkerId> = (0..self.rg.num_workers)
@@ -106,7 +108,7 @@ impl SimCluster {
             // Nothing left to redeploy onto: degrade to unregistering.
             self.log(now, format!("failover {w} {id}: no surviving workers"));
             self.unregister_worker_for(now, w, j);
-            return;
+            return Ok(());
         }
         // Cluster-wide live-instance load: redeployments of any job land
         // on the overall least-loaded survivor.
@@ -124,7 +126,7 @@ impl SimCluster {
             let target = *live_workers
                 .iter()
                 .min_by_key(|t| (load[t.index()], t.0))
-                .expect("live_workers is non-empty");
+                .ok_or(SimError::NoLiveWorker { context: "failover redeploy target" })?;
             if self.rg.reassign_instance(v, target).is_ok() {
                 load[target.index()] += 1;
                 let jv = self.rg.vertex(v).job_vertex;
@@ -147,10 +149,9 @@ impl SimCluster {
             .collect();
         let mut replayed = 0u64;
         for ch in job_channels {
-            let items = self
-                .replay_stash
-                .remove(&ch)
-                .expect("key collected from the stash");
+            // The key was collected from the stash just above; a racing
+            // removal would simply mean nothing left to replay here.
+            let Some(items) = self.replay_stash.remove(&ch) else { continue };
             let (detached, to) = {
                 let c = self.rg.channel(ChannelId(ch));
                 (c.detached, c.to)
@@ -182,6 +183,7 @@ impl SimCluster {
             format!("failover {w} {id}: reassigned {reassigned}, replayed {replayed}"),
         );
         self.after_topology_change(j, "failover");
+        Ok(())
     }
 
     /// Recovery disabled: the master only unregisters the dead worker
@@ -848,14 +850,14 @@ impl SimCluster {
     /// start sources), queue (a bounded running job will release the
     /// capacity — a scheduler tick re-admits it), or reject with a
     /// typed reason.
-    pub(crate) fn on_job_submit(&mut self, now: Time, j: usize) {
+    pub(crate) fn on_job_submit(&mut self, now: Time, j: usize) -> Result<(), SimError> {
         let spec = match self.pending[j].take() {
             Some(s) => s,
-            None => return,
+            None => return Ok(()),
         };
         let id = JobId(j as u32);
         match self.admission_verdict(id, now) {
-            AdmissionDecision::Admit { .. } => self.admit_job(now, j, spec),
+            AdmissionDecision::Admit { .. } => self.admit_job(now, j, spec)?,
             decision @ AdmissionDecision::Queue { .. } => {
                 self.stats.jobs_queued += 1;
                 self.log(now, format!("job {id} ({}) queued: {decision}", spec.name));
@@ -868,6 +870,7 @@ impl SimCluster {
                 self.sched.reject(id, reason, now);
             }
         }
+        Ok(())
     }
 
     /// Predictive admission (ROADMAP item): slots against the ledger,
@@ -893,7 +896,7 @@ impl SimCluster {
     /// Scheduler tick: re-run admission for queued submissions (in
     /// submission order) and, on periodic ticks, sample every live
     /// job's slot occupancy into its ledger.
-    pub(crate) fn on_sched_tick(&mut self, now: Time, periodic: bool) {
+    pub(crate) fn on_sched_tick(&mut self, now: Time, periodic: bool) -> Result<(), SimError> {
         if periodic {
             for j in 0..self.jobs.len() {
                 let id = JobId(j as u32);
@@ -919,7 +922,7 @@ impl SimCluster {
             match self.admission_verdict(id, now) {
                 AdmissionDecision::Admit { .. } => {
                     self.log(now, format!("job {id} ({}) admitted from queue", spec.name));
-                    self.admit_job(now, j, spec);
+                    self.admit_job(now, j, spec)?;
                 }
                 AdmissionDecision::Queue { .. } => {
                     // Still waiting; keep the original Queue decision.
@@ -941,12 +944,13 @@ impl SimCluster {
             self.queue
                 .push(now + self.cfg.measurement_interval, Ev::SchedTick { periodic: true });
         }
+        Ok(())
     }
 
     /// Enact an admitted submission: place instances via the scheduler,
     /// absorb the job's graphs into the union, grow the dense engine
     /// state, build the job's QoS runtime and start its sources.
-    fn admit_job(&mut self, now: Time, j: usize, sub: JobSpec) {
+    fn admit_job(&mut self, now: Time, j: usize, sub: JobSpec) -> Result<(), SimError> {
         let id = JobId(j as u32);
         let demand: u32 = sub.job.vertices.iter().map(|v| v.parallelism).sum();
         let assigned = match self.sched.place_job(id, demand, &self.dead_workers, now) {
@@ -963,7 +967,7 @@ impl SimCluster {
                 );
                 self.stats.jobs_rejected += 1;
                 self.log(now, format!("job {id} ({}) rejected: {e}", sub.name));
-                return;
+                return Ok(());
             }
         };
         self.sched
@@ -974,7 +978,10 @@ impl SimCluster {
         let mut it = assigned.iter();
         for jv in &self.job.vertices[remap.vertex_base as usize..] {
             for s in 0..jv.parallelism {
-                pmap.insert((jv.id.0, s), *it.next().expect("one worker per instance"));
+                let w = *it
+                    .next()
+                    .ok_or(SimError::PlacementMismatch { context: "one worker per instance" })?;
+                pmap.insert((jv.id.0, s), w);
             }
         }
         self.rg
@@ -984,7 +991,9 @@ impl SimCluster {
                 remap.edge_base as usize,
                 &|jv, s| pmap[&(jv.0, s)],
             )
-            .expect("scheduler-assigned placement is valid");
+            .map_err(|_| SimError::PlacementMismatch {
+                context: "scheduler-assigned placement refused by the runtime graph",
+            })?;
 
         // Grow the dense engine state to the new topology.
         self.job_specs.extend(sub.task_specs.iter().copied());
@@ -1027,6 +1036,7 @@ impl SimCluster {
             let first_check = self.jobs[j].source_end + Duration::from_secs(1);
             self.queue.push(first_check, Ev::JobWatch { job: id.0 });
         }
+        Ok(())
     }
 
     /// Completion watch.  Once the job's sources have ended, each check
@@ -1361,45 +1371,46 @@ mod tests {
     use crate::config::EngineConfig;
     use crate::pipeline::multi::holder_submission;
     use crate::sched::PlacementPolicy;
+    use anyhow::Context as _;
 
     /// A 3-worker multi cluster with one running 6-slot holder job,
     /// advanced past QoS warm-up so migrations have live state to move.
-    fn cluster_with_holder() -> (SimCluster, JobId) {
+    fn cluster_with_holder() -> Result<(SimCluster, JobId)> {
         let mut cluster = SimCluster::new_multi(
             3,
             4,
             PlacementPolicy::Spread,
             EngineConfig::default().fully_optimized(),
-        )
-        .unwrap();
-        let a = cluster
-            .submit_job(
-                holder_submission("holder", Duration::from_secs(300)).unwrap(),
-                Duration::ZERO,
-            )
-            .unwrap();
-        cluster.run(Duration::from_secs(30), None).unwrap();
+        )?;
+        let a = cluster.submit_job(
+            holder_submission("holder", Duration::from_secs(300))?,
+            Duration::ZERO,
+        )?;
+        cluster.run(Duration::from_secs(30), None)?;
         assert_eq!(cluster.job_state(a), Some(JobState::Running));
-        (cluster, a)
+        Ok((cluster, a))
     }
 
     /// One movable Transcoder instance of the holder job, with its
     /// current worker and a distinct live target.
-    fn movable_transcoder(cluster: &SimCluster, a: JobId) -> (VertexId, WorkerId, WorkerId) {
+    fn movable_transcoder(
+        cluster: &SimCluster,
+        a: JobId,
+    ) -> Result<(VertexId, WorkerId, WorkerId)> {
         let jv = cluster
             .job
             .vertex_of_job(a, "Transcoder")
-            .expect("holder has a Transcoder group")
+            .context("holder has a Transcoder group")?
             .id;
         let v = *cluster
             .rg
             .members(jv)
             .iter()
             .find(|&&v| cluster.tasks[v.index()].chain.is_none())
-            .expect("an unchained Transcoder instance");
+            .context("an unchained Transcoder instance")?;
         let from = cluster.rg.worker(v);
         let to = WorkerId((from.0 + 1) % 3);
-        (v, from, to)
+        Ok((v, from, to))
     }
 
     /// Regression (stale capacity after a worker crash): a queued job's
@@ -1408,39 +1419,32 @@ mod tests {
     /// a bounded holder becomes infeasible the moment the pool shrinks
     /// from 6 to 4 slots, and must flip to a typed rejection promptly.
     #[test]
-    fn worker_crash_recomputes_queued_verdicts_immediately() {
+    fn worker_crash_recomputes_queued_verdicts_immediately() -> Result<()> {
         let mut cluster = SimCluster::new_multi(
             3,
             2,
             PlacementPolicy::Spread,
             EngineConfig::default().fully_optimized(),
-        )
-        .unwrap();
-        let a = cluster
-            .submit_job(
-                holder_submission("holder", Duration::from_secs(120)).unwrap(),
-                Duration::ZERO,
-            )
-            .unwrap();
-        let b = cluster
-            .submit_job(
-                holder_submission("waiter", Duration::from_secs(60)).unwrap(),
-                Duration::from_secs(10),
-            )
-            .unwrap();
-        cluster.run(Duration::from_secs(20), None).unwrap();
+        )?;
+        let a = cluster.submit_job(
+            holder_submission("holder", Duration::from_secs(120))?,
+            Duration::ZERO,
+        )?;
+        let b = cluster.submit_job(
+            holder_submission("waiter", Duration::from_secs(60))?,
+            Duration::from_secs(10),
+        )?;
+        cluster.run(Duration::from_secs(20), None)?;
         assert_eq!(cluster.job_state(a), Some(JobState::Running));
         assert_eq!(cluster.job_state(b), Some(JobState::Queued));
 
         // The master's sweep path reacts to a confirmed-dead worker.
         let t = cluster.now();
-        cluster.handle_worker_failure(t, WorkerId(2));
+        cluster.handle_worker_failure(t, WorkerId(2))?;
         // One control delay later — far inside the current measurement
         // interval, so a verdict still quoting the pre-crash pool would
         // be visible here as a stale Queued state.
-        cluster
-            .run(t.since(Time::ZERO) + Duration::from_secs(1), None)
-            .unwrap();
+        cluster.run(t.since(Time::ZERO) + Duration::from_secs(1), None)?;
         assert_eq!(
             cluster.job_state(b),
             Some(JobState::Rejected),
@@ -1451,6 +1455,7 @@ mod tests {
             .entry(b)
             .and_then(|e| e.reject_reason().map(|r| r.tag()));
         assert_eq!(reason, Some("exceeds-capacity"));
+        Ok(())
     }
 
     /// Regression (migration/crash same-tick race, source side): a
@@ -1458,74 +1463,75 @@ mod tests {
     /// pops *after* the crash (insertion order) and must be dropped —
     /// no panic, no ledger movement, no migration counted.
     #[test]
-    fn migration_racing_a_source_worker_crash_is_dropped() {
-        let (mut cluster, a) = cluster_with_holder();
-        let (v, from, to) = movable_transcoder(&cluster, a);
+    fn migration_racing_a_source_worker_crash_is_dropped() -> Result<()> {
+        let (mut cluster, a) = cluster_with_holder()?;
+        let (v, from, to) = movable_transcoder(&cluster, a)?;
         let t = cluster.now() + Duration::from_secs(1);
         cluster.queue.push(t, Ev::WorkerCrash { worker: from.0 });
         cluster.queue.push(
             t,
             Ev::ApplyAction { action: Action::MigrateInstance { job: a, vertex: v, from, to } },
         );
-        cluster
-            .run(t.since(Time::ZERO) + Duration::from_secs(1), None)
-            .unwrap();
+        cluster.run(t.since(Time::ZERO) + Duration::from_secs(1), None)?;
         assert!(cluster.worker_dead(from));
         assert_eq!(cluster.stats.migrations, 0, "stale migration must be dropped");
         assert!(cluster.dead_tasks[v.index()], "the crash, not the move, owns the instance");
+        let e = cluster.scheduler().entry(a).context("holder has a ledger entry")?;
         assert_eq!(
-            cluster.scheduler().entry(a).unwrap().reserved_on(to),
+            e.reserved_on(to),
             2,
             "no reservation may move with a dropped migration"
         );
-        cluster.routing_consistent().unwrap();
+        cluster.routing_consistent()?;
+        Ok(())
     }
 
     /// Regression (migration/crash same-tick race, target side): same
     /// rule when the *target* worker is the one that crashed.
     #[test]
-    fn migration_racing_a_target_worker_crash_is_dropped() {
-        let (mut cluster, a) = cluster_with_holder();
-        let (v, from, to) = movable_transcoder(&cluster, a);
+    fn migration_racing_a_target_worker_crash_is_dropped() -> Result<()> {
+        let (mut cluster, a) = cluster_with_holder()?;
+        let (v, from, to) = movable_transcoder(&cluster, a)?;
         let t = cluster.now() + Duration::from_secs(1);
         cluster.queue.push(t, Ev::WorkerCrash { worker: to.0 });
         cluster.queue.push(
             t,
             Ev::ApplyAction { action: Action::MigrateInstance { job: a, vertex: v, from, to } },
         );
-        cluster
-            .run(t.since(Time::ZERO) + Duration::from_secs(1), None)
-            .unwrap();
+        cluster.run(t.since(Time::ZERO) + Duration::from_secs(1), None)?;
         assert!(cluster.worker_dead(to));
         assert_eq!(cluster.stats.migrations, 0, "migration onto a dead worker must be dropped");
         assert_eq!(cluster.rg.worker(v), from, "the instance stays put");
         assert!(!cluster.dead_tasks[v.index()]);
-        cluster.routing_consistent().unwrap();
+        cluster.routing_consistent()?;
+        Ok(())
     }
 
     /// Positive control for the race tests: without a crash, the same
     /// action moves the instance and its slot reservation.
     #[test]
-    fn a_clean_migration_moves_the_instance_and_its_reservation() {
-        let (mut cluster, a) = cluster_with_holder();
-        let (v, from, to) = movable_transcoder(&cluster, a);
-        let before_from = cluster.scheduler().entry(a).unwrap().reserved_on(from);
-        let before_to = cluster.scheduler().entry(a).unwrap().reserved_on(to);
-        let total = cluster.scheduler().entry(a).unwrap().reserved();
+    fn a_clean_migration_moves_the_instance_and_its_reservation() -> Result<()> {
+        let (mut cluster, a) = cluster_with_holder()?;
+        let (v, from, to) = movable_transcoder(&cluster, a)?;
+        let before = cluster.scheduler().entry(a).context("holder has a ledger entry")?;
+        let before_from = before.reserved_on(from);
+        let before_to = before.reserved_on(to);
+        let total = before.reserved();
         assert!(cluster.migrate_instance(v, to));
         assert_eq!(cluster.stats.migrations, 1);
         assert_eq!(cluster.rg.worker(v), to);
-        let e = cluster.scheduler().entry(a).unwrap();
+        let e = cluster.scheduler().entry(a).context("holder has a ledger entry")?;
         assert_eq!(e.reserved_on(from), before_from - 1);
         assert_eq!(e.reserved_on(to), before_to + 1);
         assert_eq!(e.reserved(), total, "migration must not mint or leak slots");
-        cluster.routing_consistent().unwrap();
+        cluster.routing_consistent()?;
 
         // The moved pipeline keeps flowing and still balances.
-        cluster.run(Duration::from_secs(120), None).unwrap();
+        cluster.run(Duration::from_secs(120), None)?;
         let t = cluster.now();
         cluster.stop_sources_at(t);
-        cluster.run(Duration::from_secs(900), None).unwrap();
-        cluster.job_conservation(a).unwrap();
+        cluster.run(Duration::from_secs(900), None)?;
+        cluster.job_conservation(a)?;
+        Ok(())
     }
 }

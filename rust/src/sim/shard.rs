@@ -267,14 +267,29 @@ impl<E> ShardedEventCore<E> {
                                 handler(state, shard_u, t, ev, &mut em);
                             }
                             // Exchange cross-shard batches at the barrier.
+                            // Poisoning: a peer panicking mid-append leaves
+                            // the inbox consistent (Vec::append is
+                            // all-or-nothing here), and std::thread::scope
+                            // re-raises the original panic at join — so the
+                            // recovered data is never silently trusted.
+                            // Locks are taken in ascending shard-id order
+                            // (the `.enumerate()` walk), keeping the
+                            // cross-shard lock order total (SHARD-LOCK).
                             for (to, out) in outboxes.iter_mut().enumerate() {
                                 if !out.is_empty() {
-                                    inboxes[to].lock().unwrap().append(out);
+                                    inboxes[to]
+                                        .lock()
+                                        .unwrap_or_else(std::sync::PoisonError::into_inner)
+                                        .append(out);
                                 }
                             }
                             barrier.wait();
                             let inbox = &inboxes[shard];
-                            let mut incoming = std::mem::take(&mut *inbox.lock().unwrap());
+                            let mut incoming = std::mem::take(
+                                &mut *inbox
+                                    .lock()
+                                    .unwrap_or_else(std::sync::PoisonError::into_inner),
+                            );
                             let key = |r: &Relay<E>| (r.at, r.src, r.order);
                             incoming.sort_by(|a, b| key(a).cmp(&key(b)));
                             for r in incoming {

@@ -7,7 +7,7 @@
 
 use super::flow::{Buffer, ItemRec, OutBufferState};
 use crate::util::time::{Duration, Time};
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 /// Size of emitted items.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -133,7 +133,9 @@ pub struct TaskState {
     /// Merge state: group id -> per-member pending items.
     pub groups: BTreeMap<u32, BTreeMap<u32, VecDeque<ItemRec>>>,
     /// Window state: key -> (window start, accumulated items/bytes).
-    pub windows: HashMap<u32, (Time, u64, u64)>,
+    /// Ordered so aggregations over open windows visit keys in a
+    /// replay-stable order (DET-HASH-ITER).
+    pub windows: BTreeMap<u32, (Time, u64, u64)>,
     /// §3.2.1 task-latency sampling: set when a sampled item enters user
     /// code; closed by the next emission.
     pub pending_sample: Option<Time>,
@@ -155,7 +157,7 @@ impl TaskState {
             busy_until: Time::ZERO,
             scheduled: false,
             groups: BTreeMap::new(),
-            windows: HashMap::new(),
+            windows: BTreeMap::new(),
             pending_sample: None,
             busy_accum: Duration::ZERO,
             chain: None,

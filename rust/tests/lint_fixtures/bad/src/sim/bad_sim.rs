@@ -1,0 +1,38 @@
+//! Seeded determinism violations for the linter self-test fixture.
+use std::collections::HashMap;
+
+pub struct Registry {
+    pub routes: HashMap<u32, u32>,
+}
+
+pub fn hash_iteration(reg: &Registry) -> u64 {
+    let mut total = 0;
+    for (_k, v) in reg.routes.iter() {
+        total += u64::from(*v);
+    }
+    total
+}
+
+pub fn wallclock() -> bool {
+    std::time::SystemTime::now().elapsed().is_ok()
+}
+
+pub fn reasonless(reg: &Registry) -> usize {
+    // lint:allow(DET-HASH-ITER)
+    reg.routes.keys().count()
+}
+
+pub fn unknown_rule(reg: &Registry) -> usize {
+    // lint:allow(NOT-A-RULE): misspelled rule id
+    reg.routes.values().count()
+}
+
+pub fn exempt_sorted(reg: &Registry) -> u64 {
+    let sorted: std::collections::BTreeMap<u32, u32> = reg.routes.iter().map(|(k, v)| (*k, *v)).collect();
+    sorted.values().map(|v| u64::from(*v)).sum()
+}
+
+pub fn suppressed_ok(reg: &Registry) -> u64 {
+    // lint:allow(DET-HASH-ITER): order-insensitive sum over route weights
+    reg.routes.values().map(|v| u64::from(*v)).sum()
+}

@@ -1,0 +1,4 @@
+//! Exceeds its committed unwrap budget of 1: the ratchet only goes down.
+pub fn both(a: Option<u32>, b: Option<u32>) -> u32 {
+    a.unwrap() + b.unwrap()
+}

@@ -1,0 +1,11 @@
+//! Seeded SHARD-LOCK violations: an unhandled poison result inside a
+//! descending-order lock walk.
+use std::sync::Mutex;
+
+pub fn flush(inboxes: &[Mutex<Vec<u32>>], batches: Vec<Vec<u32>>) {
+    for batch in batches {
+        for q in inboxes.iter().rev() {
+            q.lock().unwrap().extend(batch.iter().copied());
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! A compliant event-path module: ordered collections, virtual time,
+//! debt exactly at budget, and a properly reasoned suppression.
+use std::collections::BTreeMap;
+
+pub struct State {
+    pub windows: BTreeMap<u32, u64>,
+}
+
+pub fn total(s: &State, fallback: Option<u64>) -> u64 {
+    let base = fallback.unwrap();
+    s.windows.values().sum::<u64>() + base
+}
+
+pub fn suppressed(s: &State) -> u64 {
+    // lint:allow(EVT-UNWRAP-RATCHET): fixture demonstrates a reasoned suppression
+    s.windows.len() as u64
+}

@@ -1,0 +1,6 @@
+//! Debt was burned down below the committed baseline (5 unwraps / 2
+//! expects budgeted, 1 / 0 live): lint passes and suggests the lower
+//! ratchet.
+pub fn one(a: Option<u32>) -> u32 {
+    a.unwrap()
+}

@@ -1,0 +1,149 @@
+//! `nephele-lint` fixture self-tests.
+//!
+//! The linter is itself load-bearing CI infrastructure, so it gets the
+//! same treatment as the simulator: known-bad snippets under
+//! `tests/lint_fixtures/` must produce exactly the expected rule ids at
+//! exactly the expected lines, a compliant tree must pass, malformed
+//! suppressions must fail, a ratchet increase must fail and a decrease
+//! must suggest the lowered baseline — plus the gate that matters most:
+//! the real `src/` tree is lint-clean with a tight ratchet.
+//!
+//! Cargo only compiles direct children of `tests/`, so the fixture
+//! `.rs` files below `tests/lint_fixtures/` are data, not code.
+
+use nephele::lint::ratchet::Budget;
+use nephele::lint::report::LintReport;
+use nephele::lint::rules;
+use nephele::lint::{run, LintConfig};
+
+fn fixture(name: &str) -> LintConfig {
+    LintConfig::at_root(format!(
+        "{}/tests/lint_fixtures/{name}",
+        env!("CARGO_MANIFEST_DIR")
+    ))
+}
+
+fn lint(name: &str) -> (LintReport, nephele::lint::ratchet::Ratchet) {
+    run(&fixture(name)).expect("fixture tree is readable")
+}
+
+#[test]
+fn bad_fixture_produces_the_expected_rule_ids_and_lines() {
+    let (report, _) = lint("bad");
+    let got: Vec<(&str, u32, &str)> = report
+        .findings
+        .iter()
+        .map(|f| (f.file.as_str(), f.line, f.rule))
+        .collect();
+    let want = vec![
+        // Hash-ordered iteration reaching a fingerprint path.
+        ("src/sim/bad_sim.rs", 10, rules::DET_HASH_ITER),
+        // Wall-clock read inside simulation code.
+        ("src/sim/bad_sim.rs", 17, rules::DET_WALLCLOCK),
+        // Suppression without a reason is itself a finding...
+        ("src/sim/bad_sim.rs", 21, rules::LINT_SUPPRESS),
+        // ...and does NOT silence the line it hoped to cover.
+        ("src/sim/bad_sim.rs", 22, rules::DET_HASH_ITER),
+        // Suppression naming an unknown rule, same story.
+        ("src/sim/bad_sim.rs", 26, rules::LINT_SUPPRESS),
+        ("src/sim/bad_sim.rs", 27, rules::DET_HASH_ITER),
+        // Two unwraps against a committed budget of one.
+        ("src/sim/over_budget.rs", 3, rules::EVT_UNWRAP_RATCHET),
+        // Descending-order lock walk (the `for` header line)...
+        ("src/sim/shard.rs", 7, rules::SHARD_LOCK),
+        // ...and the unhandled poison result inside it.
+        ("src/sim/shard.rs", 8, rules::SHARD_LOCK),
+    ];
+    assert_eq!(got, want, "full report:\n{}", report.render_text());
+}
+
+#[test]
+fn bad_fixture_exemptions_hold() {
+    // The sorted/BTree statement exemption and the reasoned suppression
+    // in bad_sim.rs (lines 31 and 37) must NOT appear among findings.
+    let (report, _) = lint("bad");
+    for f in &report.findings {
+        assert!(
+            f.file != "src/sim/bad_sim.rs" || (f.line != 31 && f.line != 37),
+            "exempt line flagged: {} {}:{}",
+            f.rule,
+            f.file,
+            f.line
+        );
+    }
+    // The over-budget message names both counts so the fix is obvious.
+    let ratchet_finding = report
+        .findings
+        .iter()
+        .find(|f| f.rule == rules::EVT_UNWRAP_RATCHET)
+        .expect("over_budget.rs finding present");
+    assert!(
+        ratchet_finding.message.contains("count 2")
+            && ratchet_finding.message.contains("budget 1"),
+        "message: {}",
+        ratchet_finding.message
+    );
+}
+
+#[test]
+fn bad_fixture_report_is_deterministic() {
+    let (a, _) = lint("bad");
+    let (b, _) = lint("bad");
+    assert_eq!(a.render_text(), b.render_text());
+    assert_eq!(a.render_json(), b.render_json());
+    // Findings arrive sorted by (file, line, rule, message).
+    let mut sorted = a.findings.clone();
+    sorted.sort();
+    assert_eq!(a.findings, sorted);
+}
+
+#[test]
+fn clean_fixture_passes_without_suggestions() {
+    let (report, live) = lint("clean");
+    assert!(report.clean(), "unexpected findings:\n{}", report.render_text());
+    assert!(report.suggestions.is_empty(), "budget is exact; nothing to lower");
+    assert_eq!(report.files_scanned, 1);
+    assert_eq!(
+        live.get("sim/good_sim.rs"),
+        Some(&Budget { unwrap: 1, expect: 0 }),
+        "live counts power --update-ratchet"
+    );
+}
+
+#[test]
+fn ratchet_decrease_passes_and_suggests_the_lower_baseline() {
+    let (report, live) = lint("ratchet_decrease");
+    assert!(report.clean(), "a decrease is progress, not a finding:\n{}", report.render_text());
+    assert_eq!(report.suggestions.len(), 2, "one per over-budgeted kind");
+    assert!(
+        report.suggestions.iter().any(|s| s.contains("unwrap 5 -> 1")),
+        "suggestions: {:?}",
+        report.suggestions
+    );
+    assert!(
+        report.suggestions.iter().any(|s| s.contains("expect 2 -> 0")),
+        "suggestions: {:?}",
+        report.suggestions
+    );
+    // What --update-ratchet would write: the lowered counts, rendered
+    // deterministically and parseable back to the same budgets.
+    assert_eq!(live.get("sim/improved.rs"), Some(&Budget { unwrap: 1, expect: 0 }));
+    let text = nephele::lint::ratchet::render(&live);
+    assert_eq!(nephele::lint::ratchet::parse(&text).expect("render is parseable"), live);
+}
+
+#[test]
+fn the_real_tree_is_lint_clean_with_a_tight_ratchet() {
+    // The gate CI enforces, kept inside `cargo test` as well so a local
+    // run cannot pass while the lint job would fail.  Suggestions are
+    // rejected too: burned-down debt must be committed to the ratchet,
+    // not left slack that a later regression could hide inside.
+    let cfg = LintConfig::at_root(env!("CARGO_MANIFEST_DIR"));
+    let (report, _) = run(&cfg).expect("crate tree is readable");
+    assert!(report.clean(), "lint findings on the real tree:\n{}", report.render_text());
+    assert!(
+        report.suggestions.is_empty(),
+        "ratchet has slack — run `nephele lint --update-ratchet` and commit:\n{}",
+        report.render_text()
+    );
+}
