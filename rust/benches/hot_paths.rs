@@ -258,6 +258,54 @@ fn bench_video_sim_rate(rec: &mut Recorder, quick: bool) {
     rec.add(&name, 1, secs, Some(events as f64 / secs));
 }
 
+/// The telemetry on/off pair: the full-QoS video sim with metrics
+/// sampling enabled (the default) and disabled.  The journal is always
+/// on — the action log derives from it — so this isolates exactly what
+/// `EngineConfig::telemetry = false` turns off.  Min-of-two runs per
+/// arm damps runner noise; the recorded `telemetry_overhead_pct`
+/// scalar is gated at 5% in tools/bench_diff.py.
+fn bench_telemetry_overhead(rec: &mut Recorder, quick: bool) {
+    let vj = video_job(VideoSpec::small()).unwrap();
+    let virt_secs: u64 = if quick { 60 } else { 180 };
+    let mut measure = |telemetry: bool| -> (u64, f64) {
+        let mut cfg = EngineConfig::default().fully_optimized();
+        cfg.telemetry = telemetry;
+        let mut best = f64::INFINITY;
+        let mut events = 0u64;
+        for _ in 0..2 {
+            let mut cluster = SimCluster::new(
+                vj.job.clone(),
+                vj.rg.clone(),
+                &vj.constraints,
+                vj.task_specs.clone(),
+                vj.sources.clone(),
+                cfg,
+            )
+            .unwrap();
+            let t0 = std::time::Instant::now();
+            cluster.run(Duration::from_secs(virt_secs), None).unwrap();
+            best = best.min(t0.elapsed().as_secs_f64());
+            events = cluster.stats.events_processed;
+        }
+        (events, best)
+    };
+    let (ev_on, secs_on) = measure(true);
+    let (ev_off, secs_off) = measure(false);
+    assert_eq!(
+        ev_on, ev_off,
+        "metrics sampling must never perturb the event trajectory"
+    );
+    let name_on = format!("sim: small video job telemetry on, {virt_secs}s virtual");
+    println!("{name_on:<56} {secs_on:>10.3} s (min of 2)");
+    rec.add(&name_on, 1, secs_on, Some(ev_on as f64 / secs_on));
+    let name_off = format!("sim: small video job telemetry off, {virt_secs}s virtual");
+    println!("{name_off:<56} {secs_off:>10.3} s (min of 2)");
+    rec.add(&name_off, 1, secs_off, Some(ev_off as f64 / secs_off));
+    let pct = (secs_on / secs_off - 1.0) * 100.0;
+    println!("    -> telemetry overhead {pct:+.2}% ({secs_on:.3}s on vs {secs_off:.3}s off)");
+    rec.scalar("telemetry_overhead_pct", pct);
+}
+
 fn bench_qos_setup(rec: &mut Recorder, quick: bool) {
     // Algorithm 1-3 at the paper's full scale (512e6 runtime constraints);
     // the quick configuration uses the laptop-scale job.
@@ -427,6 +475,7 @@ fn main() {
     bench_manager(&mut rec, quick);
     bench_channel_hot_path(&mut rec, quick);
     bench_video_sim_rate(&mut rec, quick);
+    bench_telemetry_overhead(&mut rec, quick);
     bench_multi_sim_rate(&mut rec, quick);
     bench_admission_path(&mut rec, quick);
     match rec.write_json(&out_path, "hot_paths", quick, "measured") {

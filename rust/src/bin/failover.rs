@@ -12,8 +12,9 @@ use nephele::experiments::failover::run_failover;
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let (spec, cfg, secs, recovery, verbose) = figbin::failover_args(&argv, 600)?;
+    let (spec, cfg, secs, recovery, verbose, tel) = figbin::failover_args(&argv, 600)?;
     let report = run_failover(spec, cfg, recovery, secs, verbose)?;
     figbin::print_failover_summary(&report);
+    tel.write(&[("failover".to_string(), report.telemetry)])?;
     Ok(())
 }

@@ -15,6 +15,70 @@ use nephele::sched::PlacementPolicy;
 pub const SUBCOMMANDS: &str =
     "sim-video | sim-meter | sim-surge | sim-failover | sim-scale | sim-multi | live | lint | info";
 
+/// Telemetry export destinations, shared by the scenario drivers:
+/// `--trace-out FILE` (Chrome trace-event JSON, Perfetto-loadable),
+/// `--metrics-out FILE` (Prometheus-style text), `--journal-out FILE`
+/// (JSONL decision journal).  All optional; nothing is written unless
+/// the flag is given.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryOut {
+    pub trace_out: Option<std::path::PathBuf>,
+    pub metrics_out: Option<std::path::PathBuf>,
+    pub journal_out: Option<std::path::PathBuf>,
+}
+
+impl TelemetryOut {
+    /// Absorb one flag/value pair if it is one of ours.
+    pub fn accept(&mut self, flag: &str, value: &str) -> bool {
+        match flag {
+            "--trace-out" => self.trace_out = Some(value.into()),
+            "--metrics-out" => self.metrics_out = Some(value.into()),
+            "--journal-out" => self.journal_out = Some(value.into()),
+            _ => return false,
+        }
+        true
+    }
+
+    /// Write the collected `(label, snapshot)` sections to whichever
+    /// destinations were requested.  Sections become Chrome trace
+    /// "processes", Prometheus comment-delimited blocks, and JSONL
+    /// section-header records respectively.
+    pub fn write(
+        &self,
+        sections: &[(String, nephele::telemetry::TelemetrySnapshot)],
+    ) -> Result<()> {
+        if let Some(path) = &self.trace_out {
+            let journals: Vec<(String, &nephele::telemetry::Journal)> =
+                sections.iter().map(|(l, s)| (l.clone(), &s.journal)).collect();
+            std::fs::write(path, nephele::telemetry::chrome_trace(&journals))?;
+        }
+        if let Some(path) = &self.metrics_out {
+            let mut out = String::new();
+            for (label, s) in sections {
+                out.push_str(&format!("# section: {label} (journal {})\n", s.journal_digest));
+                out.push_str(&s.metrics_text);
+            }
+            std::fs::write(path, out)?;
+        }
+        if let Some(path) = &self.journal_out {
+            let mut out = String::new();
+            for (label, s) in sections {
+                // Keep every line valid JSON: the section header is a
+                // record too, not a comment.
+                out.push_str(&format!(
+                    "{{\"section\":\"{}\",\"digest\":\"{}\",\"records\":{}}}\n",
+                    nephele::telemetry::export::json_escape(label),
+                    s.journal_digest,
+                    s.journal.len(),
+                ));
+                out.push_str(&nephele::telemetry::journal_jsonl(&s.journal));
+            }
+            std::fs::write(path, out)?;
+        }
+        Ok(())
+    }
+}
+
 /// Parse `--scale small|paper --secs N --seed N --quiet --constraint-ms N`.
 #[allow(dead_code)]
 pub fn video_args(
@@ -220,7 +284,7 @@ pub fn live_args(argv: &[String]) -> Result<nephele::live::LiveConfig> {
 /// `--quick --seed N --policy spread|pack|least-loaded --tolerance F
 /// --threads N --phase base|admission|fairness|preempt|migrate|all
 /// --quiet`.
-/// Returns `(spec, cfg, policies, tolerance, verbose, phases)`.
+/// Returns `(spec, cfg, policies, tolerance, verbose, phases, tel)`.
 /// Without `--policy`, both standard policies (spread, pack) are run
 /// and verified; `--policy` narrows the set to one (useful for
 /// exploring `least-loaded`).  Without `--phase`, every phase runs —
@@ -235,6 +299,7 @@ pub fn multi_args(
     f64,
     bool,
     Vec<nephele::experiments::multi::Phase>,
+    TelemetryOut,
 )> {
     let mut cfg = EngineConfig::default();
     let mut quick = false;
@@ -242,6 +307,7 @@ pub fn multi_args(
     let mut tolerance = 1.1;
     let mut verbose = true;
     let mut phases: Option<Vec<nephele::experiments::multi::Phase>> = None;
+    let mut tel = TelemetryOut::default();
     let mut i = 0;
     while i < argv.len() {
         let need = |i: usize| -> Result<&String> {
@@ -287,11 +353,16 @@ pub fn multi_args(
                 verbose = false;
                 i += 1;
             }
+            flag @ ("--trace-out" | "--metrics-out" | "--journal-out") => {
+                tel.accept(flag, need(i)?);
+                i += 2;
+            }
             "--help" | "-h" => {
                 println!(
                     "usage: [--quick] [--seed N] [--policy spread|pack|least-loaded] \
                      [--tolerance F] [--threads N] \
                      [--phase base|admission|fairness|preempt|migrate|all] \
+                     [--trace-out FILE] [--metrics-out FILE] [--journal-out FILE] \
                      [--quiet]"
                 );
                 std::process::exit(0);
@@ -308,7 +379,7 @@ pub fn multi_args(
         policies.unwrap_or_else(|| vec![PlacementPolicy::Spread, PlacementPolicy::Pack]);
     let phases =
         phases.unwrap_or_else(|| nephele::experiments::multi::Phase::ALL.to_vec());
-    Ok((spec, cfg, policies, tolerance, verbose, phases))
+    Ok((spec, cfg, policies, tolerance, verbose, phases, tel))
 }
 
 /// Parse the load-surge driver's arguments (`argv` holds only the
@@ -344,21 +415,35 @@ pub fn surge_args(
 
 /// Parse the failover driver's arguments (`argv` holds only the flags,
 /// with the program/subcommand name already stripped):
-/// `--secs N --seed N --recovery true|false --fail-at SECS --constraint-ms N --quiet`.
-/// Returns `(spec, cfg, secs, recovery_enabled, verbose)`.
+/// `--secs N --seed N --recovery true|false --fail-at SECS --constraint-ms N
+/// --trace-out FILE --metrics-out FILE --journal-out FILE --quiet`.
+/// Returns `(spec, cfg, secs, recovery_enabled, verbose, tel)`.
 pub fn failover_args(
     argv: &[String],
     default_secs: u64,
-) -> Result<(nephele::pipeline::failover::FailoverSpec, EngineConfig, u64, bool, bool)> {
+) -> Result<(
+    nephele::pipeline::failover::FailoverSpec,
+    EngineConfig,
+    u64,
+    bool,
+    bool,
+    TelemetryOut,
+)> {
     let mut spec = nephele::pipeline::failover::FailoverSpec::default();
     let mut recovery = true;
+    let mut tel = TelemetryOut::default();
     let (cfg, secs, verbose) = scenario_args(
         argv,
         default_secs,
         "usage: [--secs N] [--seed N] [--recovery true|false] [--fail-at SECS] \
-         [--constraint-ms N] [--quiet]",
-        &["--recovery", "--fail-at", "--constraint-ms"],
+         [--constraint-ms N] [--trace-out FILE] [--metrics-out FILE] \
+         [--journal-out FILE] [--quiet]",
+        &["--recovery", "--fail-at", "--constraint-ms", "--trace-out", "--metrics-out",
+          "--journal-out"],
         &mut |flag, value| {
+            if tel.accept(flag, value) {
+                return Ok(());
+            }
             match flag {
                 "--recovery" => recovery = value.parse()?,
                 "--fail-at" => {
@@ -370,24 +455,33 @@ pub fn failover_args(
             Ok(())
         },
     )?;
-    Ok((spec, cfg, secs, recovery, verbose))
+    Ok((spec, cfg, secs, recovery, verbose, tel))
 }
 
 /// Parse the paper-scale comparison driver's arguments (`argv` holds
 /// only the flags, with the program/subcommand name already stripped):
 /// `--quick --secs N --tail N --seed N --min-ratio F --quiet`.
-/// Returns `(spec, cfg, secs, tail_secs, min_ratio, verbose)`.
+/// Returns `(spec, cfg, secs, tail_secs, min_ratio, verbose, tel)`.
 /// Defaults: 200 workers, 600 s with a 300 s measurement tail; `--quick`
 /// drops to 20 workers, 420 s with a 180 s tail (same code path).
 pub fn scale_args(
     argv: &[String],
-) -> Result<(nephele::pipeline::scale::ScaleSpec, EngineConfig, u64, u64, f64, bool)> {
+) -> Result<(
+    nephele::pipeline::scale::ScaleSpec,
+    EngineConfig,
+    u64,
+    u64,
+    f64,
+    bool,
+    TelemetryOut,
+)> {
     let mut cfg = EngineConfig::default();
     let mut quick = false;
     let mut secs: Option<u64> = None;
     let mut tail: Option<u64> = None;
     let mut min_ratio = 13.0;
     let mut verbose = true;
+    let mut tel = TelemetryOut::default();
     let mut i = 0;
     while i < argv.len() {
         let need = |i: usize| -> Result<&String> {
@@ -419,9 +513,14 @@ pub fn scale_args(
                 verbose = false;
                 i += 1;
             }
+            flag @ ("--trace-out" | "--metrics-out" | "--journal-out") => {
+                tel.accept(flag, need(i)?);
+                i += 2;
+            }
             "--help" | "-h" => {
                 println!(
-                    "usage: [--quick] [--secs N] [--tail N] [--seed N] [--min-ratio F] [--quiet]"
+                    "usage: [--quick] [--secs N] [--tail N] [--seed N] [--min-ratio F] \
+                     [--trace-out FILE] [--metrics-out FILE] [--journal-out FILE] [--quiet]"
                 );
                 std::process::exit(0);
             }
@@ -435,7 +534,7 @@ pub fn scale_args(
     };
     let secs = secs.unwrap_or(if quick { 420 } else { 600 });
     let tail = tail.unwrap_or(if quick { 180 } else { 300 });
-    Ok((spec, cfg, secs, tail, min_ratio, verbose))
+    Ok((spec, cfg, secs, tail, min_ratio, verbose, tel))
 }
 
 /// Shared output of the multi-job scheduler driver.

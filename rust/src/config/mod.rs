@@ -106,6 +106,12 @@ pub struct EngineConfig {
     /// byte-identical across shard counts (enforced by the determinism
     /// suite; see `sim::shard` and DESIGN.md §10).
     pub threads: u32,
+    /// Sample the deterministic metrics registry (gauges on scheduler
+    /// ticks, CPU-utilisation gauges on CPU samples, per-job e2e latency
+    /// histograms on sink delivery).  The typed trace journal is always
+    /// on — only metrics sampling is gated, so the overhead of the whole
+    /// observability layer can be measured (DESIGN.md §12).
+    pub telemetry: bool,
 }
 
 impl Default for EngineConfig {
@@ -118,6 +124,7 @@ impl Default for EngineConfig {
             recovery: RecoveryConfig::default(),
             seed: 42,
             threads: 1,
+            telemetry: true,
         }
     }
 }

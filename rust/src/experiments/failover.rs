@@ -11,6 +11,7 @@ use crate::config::EngineConfig;
 use crate::pipeline::failover::{failover_job, FailoverSpec};
 use crate::sim::cluster::SimCluster;
 use crate::sim::metrics::{breakdown, Breakdown, BreakdownPrinter};
+use crate::telemetry::TelemetrySnapshot;
 use crate::util::time::Duration;
 use anyhow::Result;
 
@@ -40,6 +41,8 @@ pub struct FailoverReport {
     pub items_in_flight: u64,
     pub e2e_mean_ms: Option<f64>,
     pub events: u64,
+    /// Typed decision journal + metrics snapshot for export.
+    pub telemetry: TelemetrySnapshot,
 }
 
 /// Run the failover scenario for `sim_secs` of virtual time.  The
@@ -99,6 +102,7 @@ pub fn run_failover(
         items_in_flight: cluster.items_in_flight(),
         e2e_mean_ms: cluster.mean_e2e_ms(),
         events: cluster.stats.events_processed,
+        telemetry: TelemetrySnapshot::capture(&cluster.stats.journal, &cluster.metrics),
     })
 }
 

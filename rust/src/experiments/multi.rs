@@ -36,6 +36,7 @@ use crate::pipeline::multi::{
 };
 use crate::sched::{AdmissionDecision, JobState, PlacementPolicy};
 use crate::sim::cluster::{SimCluster, SimStats};
+use crate::telemetry::TelemetrySnapshot;
 use crate::util::time::Duration;
 use anyhow::{bail, Context, Result};
 
@@ -95,6 +96,9 @@ pub struct MultiReport {
     /// Byte-exact digest of the run (global counters, every per-job
     /// ledger, the full action log): two same-seed runs must match.
     pub fingerprint: String,
+    /// Typed decision journal + metrics snapshot for `--trace-out` /
+    /// `--metrics-out` / `--journal-out` export.
+    pub telemetry: TelemetrySnapshot,
 }
 
 impl MultiReport {
@@ -338,6 +342,7 @@ pub fn run_multi(
         outcomes,
         events: cluster.stats.events_processed,
         fingerprint: multi_fingerprint(&cluster.stats),
+        telemetry: TelemetrySnapshot::capture(&cluster.stats.journal, &cluster.metrics),
     })
 }
 
@@ -411,6 +416,8 @@ pub struct PhaseReport {
     pub name: &'static str,
     pub fingerprint: String,
     pub lines: Vec<String>,
+    /// Typed decision journal + metrics snapshot for export.
+    pub telemetry: TelemetrySnapshot,
 }
 
 /// The union-graph Transcoder group of a submitted job (the elastic
@@ -530,6 +537,7 @@ pub fn run_admission_phase(cfg: EngineConfig, policy: PlacementPolicy) -> Result
         name: "admission",
         fingerprint: multi_fingerprint(&cluster.stats),
         lines,
+        telemetry: TelemetrySnapshot::capture(&cluster.stats.journal, &cluster.metrics),
     })
 }
 
@@ -623,6 +631,7 @@ pub fn run_fairness_phase(cfg: EngineConfig) -> Result<PhaseReport> {
         name: "fairness",
         fingerprint: multi_fingerprint(&cluster.stats),
         lines,
+        telemetry: TelemetrySnapshot::capture(&cluster.stats.journal, &cluster.metrics),
     })
 }
 
@@ -724,6 +733,7 @@ pub fn run_preemption_phase(cfg: EngineConfig, tolerance: f64) -> Result<PhaseRe
         name: "preempt",
         fingerprint: multi_fingerprint(&cluster.stats),
         lines,
+        telemetry: TelemetrySnapshot::capture(&cluster.stats.journal, &cluster.metrics),
     })
 }
 
@@ -854,6 +864,7 @@ pub fn run_migration_phase(cfg: EngineConfig, tolerance: f64) -> Result<PhaseRep
         name: "migrate",
         fingerprint: multi_fingerprint(&cluster.stats),
         lines,
+        telemetry: TelemetrySnapshot::capture(&cluster.stats.journal, &cluster.metrics),
     })
 }
 

@@ -17,6 +17,7 @@ use crate::pipeline::scale::ScaleSpec;
 use crate::pipeline::video::video_job;
 use crate::sim::cluster::SimCluster;
 use crate::sim::metrics::{breakdown, Breakdown};
+use crate::telemetry::TelemetrySnapshot;
 use crate::util::time::Duration;
 use anyhow::{bail, Result};
 
@@ -36,6 +37,8 @@ pub struct ArmReport {
     pub unresolvable: u64,
     pub items_at_sinks: u64,
     pub events: u64,
+    /// Typed decision journal + metrics snapshot for export.
+    pub telemetry: TelemetrySnapshot,
 }
 
 /// Outcome of the paired comparison.
@@ -92,6 +95,7 @@ fn run_arm(
         unresolvable: cluster.stats.unresolvable_notices,
         items_at_sinks: cluster.stats.e2e_count,
         events: cluster.stats.events_processed,
+        telemetry: TelemetrySnapshot::capture(&cluster.stats.journal, &cluster.metrics),
     })
 }
 

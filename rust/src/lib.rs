@@ -34,4 +34,5 @@ pub mod qos;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod telemetry;
 pub mod util;

@@ -12,7 +12,7 @@
 //!
 //! * [`rules::DET_HASH_ITER`] — no hash-ordered iteration in
 //!   fingerprint-affecting modules (`sim/`, `sched/`, `qos/`,
-//!   `actions/`),
+//!   `actions/`, `telemetry/`),
 //! * [`rules::DET_WALLCLOCK`] — no wall clocks, ambient randomness or
 //!   environment reads in simulation code,
 //! * [`rules::EVT_UNWRAP_RATCHET`] — per-file `unwrap()/expect()`
@@ -366,7 +366,10 @@ pub fn run(cfg: &LintConfig) -> Result<(LintReport, Ratchet)> {
             "lint_ratchet.toml",
             1,
             rules::EVT_UNWRAP_RATCHET,
-            format!("ratchet entry {stale:?} has no matching file under src/sim/; remove it"),
+            format!(
+                "ratchet entry {stale:?} has no matching file under the ratchet scope \
+                 (src/sim/, src/telemetry/); remove it"
+            ),
         ));
     }
     // Files at their budget stay out of the suggested ratchet only if

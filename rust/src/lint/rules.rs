@@ -27,18 +27,23 @@ pub const ALL_RULES: [&str; 4] =
     [DET_HASH_ITER, DET_WALLCLOCK, EVT_UNWRAP_RATCHET, SHARD_LOCK];
 
 /// Modules whose event order or fingerprints same-seed replay depends
-/// on: the determinism rules apply here.
-const DET_SCOPES: [&str; 4] = ["src/sim/", "src/sched/", "src/qos/", "src/actions/"];
+/// on: the determinism rules apply here.  `src/telemetry/` is in scope
+/// because the journal digest and metrics dump are replay fingerprints
+/// themselves — a wall-clock read or hash-ordered render there breaks
+/// the cross-thread digest guarantee just as surely as in the engine.
+const DET_SCOPES: [&str; 5] =
+    ["src/sim/", "src/sched/", "src/qos/", "src/actions/", "src/telemetry/"];
 
-/// Event-path modules under the unwrap ratchet.
-const RATCHET_SCOPE: &str = "src/sim/";
+/// Modules under the unwrap ratchet: the event path plus the telemetry
+/// layer (which observes every decision and must never panic mid-run).
+const RATCHET_SCOPES: [&str; 2] = ["src/sim/", "src/telemetry/"];
 
 pub fn in_det_scope(path: &str) -> bool {
     DET_SCOPES.iter().any(|s| path.starts_with(s))
 }
 
 pub fn in_ratchet_scope(path: &str) -> bool {
-    path.starts_with(RATCHET_SCOPE)
+    RATCHET_SCOPES.iter().any(|s| path.starts_with(s))
 }
 
 pub fn is_shard_file(path: &str) -> bool {

@@ -7,12 +7,17 @@
 //! nephele sim-surge  [--secs N] [--seed N] [--scaling true|false]
 //!                    [--surge-at SECS] [--constraint-ms N] [--quiet]
 //! nephele sim-failover [--secs N] [--seed N] [--recovery true|false]
-//!                    [--fail-at SECS] [--constraint-ms N] [--quiet]
+//!                    [--fail-at SECS] [--constraint-ms N]
+//!                    [--trace-out FILE] [--metrics-out FILE] [--journal-out FILE]
+//!                    [--quiet]
 //! nephele sim-scale  [--quick] [--secs N] [--tail N] [--seed N]
-//!                    [--min-ratio F] [--quiet]
+//!                    [--min-ratio F]
+//!                    [--trace-out FILE] [--metrics-out FILE] [--journal-out FILE]
+//!                    [--quiet]
 //! nephele sim-multi  [--quick] [--seed N] [--policy spread|pack|least-loaded]
 //!                    [--tolerance F] [--threads N]
 //!                    [--phase base|admission|fairness|preempt|migrate|all]
+//!                    [--trace-out FILE] [--metrics-out FILE] [--journal-out FILE]
 //!                    [--quiet]
 //! nephele live       [--frames N] [--fps F] [--artifacts DIR]
 //! nephele lint       [--root DIR] [--ratchet FILE] [--format text|json]
@@ -107,16 +112,21 @@ fn sim_surge(argv: &[String]) -> Result<()> {
 }
 
 fn sim_failover(argv: &[String]) -> Result<()> {
-    let (spec, cfg, secs, recovery, verbose) = figbin::failover_args(argv, 600)?;
+    let (spec, cfg, secs, recovery, verbose, tel) = figbin::failover_args(argv, 600)?;
     let report = run_failover(spec, cfg, recovery, secs, verbose)?;
     figbin::print_failover_summary(&report);
+    tel.write(&[("failover".to_string(), report.telemetry)])?;
     Ok(())
 }
 
 fn sim_scale(argv: &[String]) -> Result<()> {
-    let (spec, cfg, secs, tail, min_ratio, verbose) = figbin::scale_args(argv)?;
+    let (spec, cfg, secs, tail, min_ratio, verbose, tel) = figbin::scale_args(argv)?;
     let report = run_scale(spec, cfg, secs, tail, verbose)?;
     figbin::print_scale_summary(&report);
+    tel.write(&[
+        ("nephele".to_string(), report.nephele.telemetry.clone()),
+        ("hadoop-online".to_string(), report.hadoop.telemetry.clone()),
+    ])?;
     if !(report.latency_ratio >= min_ratio) {
         bail!(
             "latency ratio {:.2}x below the required {min_ratio}x",
@@ -141,7 +151,11 @@ fn sim_scale(argv: &[String]) -> Result<()> {
 /// run per placement policy; the fairness and preemption phases are
 /// policy-independent and run once.
 fn sim_multi(argv: &[String]) -> Result<()> {
-    let (spec, cfg, policies, tolerance, verbose, phases) = figbin::multi_args(argv)?;
+    let (spec, cfg, policies, tolerance, verbose, phases, tel) = figbin::multi_args(argv)?;
+    // Telemetry sections for --trace-out/--metrics-out/--journal-out:
+    // one per phase run (the first run of each pair; the replay only
+    // gates determinism).
+    let mut sections: Vec<(String, nephele::telemetry::TelemetrySnapshot)> = Vec::new();
     for phase in phases {
         match phase {
             Phase::Base => {
@@ -159,11 +173,15 @@ fn sim_multi(argv: &[String]) -> Result<()> {
                              scheduler path)"
                         );
                     }
+                    if report.telemetry.journal_digest != replay.telemetry.journal_digest {
+                        bail!("policy {policy}: same-seed replay diverged in the journal");
+                    }
                     println!(
                         "policy {policy}: {} jobs ok (latency within {tolerance}x, throughput \
                          preserved, per-job conservation holds, fingerprints byte-identical)",
                         report.outcomes.len()
                     );
+                    sections.push((format!("base/{policy}"), report.telemetry));
                 }
             }
             Phase::Admission => {
@@ -175,6 +193,9 @@ fn sim_multi(argv: &[String]) -> Result<()> {
                     if report.fingerprint != replay.fingerprint {
                         bail!("admission phase ({policy}): same-seed replay diverged");
                     }
+                    if report.telemetry.journal_digest != replay.telemetry.journal_digest {
+                        bail!("admission phase ({policy}): replay diverged in the journal");
+                    }
                     if verbose {
                         figbin::print_phase_summary(&report);
                     }
@@ -182,6 +203,7 @@ fn sim_multi(argv: &[String]) -> Result<()> {
                         "admission phase ({policy}): burst queued then admitted, oversized \
                          rejected[exceeds-capacity], fingerprints byte-identical"
                     );
+                    sections.push((format!("admission/{policy}"), report.telemetry));
                 }
             }
             Phase::Fairness => {
@@ -192,6 +214,9 @@ fn sim_multi(argv: &[String]) -> Result<()> {
                 if report.fingerprint != replay.fingerprint {
                     bail!("fairness phase: same-seed replay diverged");
                 }
+                if report.telemetry.journal_digest != replay.telemetry.journal_digest {
+                    bail!("fairness phase: same-seed replay diverged in the journal");
+                }
                 if verbose {
                     figbin::print_phase_summary(&report);
                 }
@@ -199,6 +224,7 @@ fn sim_multi(argv: &[String]) -> Result<()> {
                     "fairness phase: contested elastic slots split weight-proportionally (4:2), \
                      fingerprints byte-identical"
                 );
+                sections.push(("fairness".to_string(), report.telemetry));
             }
             Phase::Preempt => {
                 let report = run_preemption_phase(cfg, tolerance)
@@ -208,6 +234,9 @@ fn sim_multi(argv: &[String]) -> Result<()> {
                 if report.fingerprint != replay.fingerprint {
                     bail!("preemption phase: same-seed replay diverged");
                 }
+                if report.telemetry.journal_digest != replay.telemetry.journal_digest {
+                    bail!("preemption phase: same-seed replay diverged in the journal");
+                }
                 if verbose {
                     figbin::print_phase_summary(&report);
                 }
@@ -215,6 +244,7 @@ fn sim_multi(argv: &[String]) -> Result<()> {
                     "preemption phase: latency-critical job reclaimed a best-effort slot and met \
                      its constraint, victim ledger balanced, fingerprints byte-identical"
                 );
+                sections.push(("preempt".to_string(), report.telemetry));
             }
             Phase::Migrate => {
                 let report = run_migration_phase(cfg, tolerance)
@@ -224,6 +254,9 @@ fn sim_multi(argv: &[String]) -> Result<()> {
                 if report.fingerprint != replay.fingerprint {
                     bail!("migration phase: same-seed replay diverged");
                 }
+                if report.telemetry.journal_digest != replay.telemetry.journal_digest {
+                    bail!("migration phase: same-seed replay diverged in the journal");
+                }
                 if verbose {
                     figbin::print_phase_summary(&report);
                 }
@@ -231,9 +264,11 @@ fn sim_multi(argv: &[String]) -> Result<()> {
                     "migration phase: NIC saturation resolved by migration alone (no scale-ups, \
                      no preemptions), constraint recovered, fingerprints byte-identical"
                 );
+                sections.push(("migrate".to_string(), report.telemetry));
             }
         }
     }
+    tel.write(&sections)?;
     Ok(())
 }
 

@@ -111,6 +111,11 @@ pub struct QosManager {
     scale_requests: BTreeMap<JobVertexId, u32>,
     /// Maximum constraint window (used as measurement freshness horizon).
     max_window: Duration,
+    /// Constraint violations observed by the latest [`QosManager::act`]
+    /// pass: `(constraint index, worst sequence latency µs)`.  Drained
+    /// by the host via [`QosManager::take_violations`] so the decision
+    /// journal can record them alongside the actions they caused.
+    violations: Vec<(usize, f64)>,
 }
 
 impl QosManager {
@@ -143,6 +148,7 @@ impl QosManager {
             reported_unresolvable,
             scale_requests: BTreeMap::new(),
             max_window,
+            violations: Vec::new(),
         }
     }
 
@@ -371,6 +377,7 @@ impl QosManager {
                 }
                 continue;
             }
+            self.violations.push((eval.constraint, eval.worst_us));
 
             let mut chain_actions = Vec::new();
             if self.cfg.enable_buffer_sizing {
@@ -421,6 +428,13 @@ impl QosManager {
             }
         }
         actions
+    }
+
+    /// Drain the constraint violations recorded by the latest
+    /// [`QosManager::act`] pass (journal-only observability; does not
+    /// affect countermeasure decisions).
+    pub fn take_violations(&mut self) -> Vec<(usize, f64)> {
+        std::mem::take(&mut self.violations)
     }
 
     /// §3.5.1: buffer decisions for the channels of the violated

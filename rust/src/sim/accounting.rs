@@ -21,6 +21,7 @@ use super::cluster::SimCluster;
 use super::flow::ItemRec;
 use crate::graph::ids::{ChannelId, JobId};
 use crate::sched::JobState;
+use crate::telemetry::trace::{Journal, TraceId, TraceKind};
 use crate::util::time::Time;
 use anyhow::{bail, Result};
 
@@ -129,7 +130,14 @@ pub struct SimStats {
     /// Timestamped log of every applied countermeasure, crash, failover
     /// and job-lifecycle decision: the replayable action trail that the
     /// determinism tests compare byte-for-byte across same-seed runs.
+    /// Since the telemetry journal landed this is a *derived rendering*
+    /// of [`SimStats::journal`] — see [`TraceKind::render`].
     pub action_log: Vec<String>,
+    /// The typed decision journal behind `action_log` (DESIGN.md §12):
+    /// every governance/lifecycle decision as a cause-linked record,
+    /// including journal-only events that never had a log line
+    /// (admission refreshes, constraint violations).
+    pub journal: Journal,
 }
 
 pub(crate) const E2E_RESERVOIR: usize = 100_000;
@@ -139,8 +147,23 @@ pub(crate) const E2E_RESERVOIR: usize = 100_000;
 pub(crate) const SLOT_SAMPLE_CAP: usize = 4096;
 
 impl SimCluster {
-    pub(crate) fn log(&mut self, now: Time, msg: String) {
-        self.stats.action_log.push(format!("[{:>12.6}] {msg}", now.as_secs_f64()));
+    /// Append a typed decision record; if it renders to a legacy log
+    /// line, push that line (sim-time-stamped, byte-identical to the
+    /// pre-journal `format!`) onto `action_log` as well.
+    pub(crate) fn trace(&mut self, now: Time, kind: TraceKind) -> TraceId {
+        self.trace_caused(now, None, kind)
+    }
+
+    pub(crate) fn trace_caused(
+        &mut self,
+        now: Time,
+        cause: Option<TraceId>,
+        kind: TraceKind,
+    ) -> TraceId {
+        if let Some(line) = kind.render() {
+            self.stats.action_log.push(format!("[{:>12.6}] {line}", now.as_secs_f64()));
+        }
+        self.stats.journal.append(now, cause, kind)
     }
 
     /// The job a runtime channel belongs to (the sender's job; absorbed
@@ -183,6 +206,9 @@ impl SimCluster {
     }
 
     pub(crate) fn record_e2e(&mut self, job: JobId, us: f64) {
+        if self.cfg.telemetry {
+            self.metrics.observe_e2e(job.index(), us / 1e3);
+        }
         self.stats.e2e_count += 1;
         self.stats.e2e_sum_us += us;
         if us > self.stats.e2e_max_us {

@@ -40,6 +40,8 @@ use crate::qos::reporter::QosReporter;
 use crate::qos::setup::{build_qos_runtime, QosRuntime};
 use crate::sched::admission::PoolCapacity;
 use crate::sched::{AdmissionDecision, JobMeta, JobSpec, JobState, PlacementPolicy, Scheduler};
+use crate::telemetry::metrics::MetricsRegistry;
+use crate::telemetry::trace::TraceId;
 use crate::util::rng::Rng;
 use crate::util::time::{Duration, Time};
 use anyhow::{bail, Result};
@@ -179,6 +181,18 @@ pub struct SimCluster {
     /// Migration cooldown: no new migration is planned before this time
     /// (lets the previous move settle into fresh measurements).
     pub(crate) next_migration_at: Time,
+    /// Telemetry cause threading (DESIGN.md §12): the journal record of
+    /// each worker's crash (failover records link back to it), the
+    /// record of each job's queue verdict (admit/reject-from-queue link
+    /// back), the cause of the action currently being applied, and the
+    /// preemption record a follow-up scale-up should cite.
+    pub(crate) crash_trace: BTreeMap<u32, TraceId>,
+    pub(crate) queue_trace: BTreeMap<u32, TraceId>,
+    pub(crate) action_cause: Option<TraceId>,
+    pub(crate) last_preempt_trace: Option<TraceId>,
+    /// The deterministic metrics registry (counters/gauges/histograms),
+    /// sampled on scheduler and CPU-sample ticks when `cfg.telemetry`.
+    pub metrics: MetricsRegistry,
     pub stats: SimStats,
 }
 
@@ -301,6 +315,11 @@ impl SimCluster {
             job_busy: vec![Duration::ZERO; 1],
             job_wire_bytes: vec![0; 1],
             next_migration_at: Time::ZERO,
+            crash_trace: BTreeMap::new(),
+            queue_trace: BTreeMap::new(),
+            action_cause: None,
+            last_preempt_trace: None,
+            metrics: MetricsRegistry::default(),
             stats,
         };
         let reporter_workers: Vec<WorkerId> = cluster.jobs[0].reporters.keys().copied().collect();
@@ -384,6 +403,11 @@ impl SimCluster {
             job_busy: Vec::new(),
             job_wire_bytes: Vec::new(),
             next_migration_at: Time::ZERO,
+            crash_trace: BTreeMap::new(),
+            queue_trace: BTreeMap::new(),
+            action_cause: None,
+            last_preempt_trace: None,
+            metrics: MetricsRegistry::default(),
             stats: SimStats::default(),
         };
         cluster.sync_queue_topology();
@@ -594,7 +618,7 @@ impl SimCluster {
             }
             Ev::ManagerTick { job, worker } => self.on_manager_tick(now, job, WorkerId(worker)),
             Ev::CpuSample { worker } => self.on_cpu_sample(now, WorkerId(worker)),
-            Ev::ApplyAction { action } => self.on_apply(now, action),
+            Ev::ApplyAction { action, cause } => self.on_apply(now, action, cause),
             Ev::WorkerCrash { worker } => self.on_worker_crash(now, WorkerId(worker)),
             Ev::MasterTick => return self.on_master_tick(now),
             Ev::JobSubmit { job } => return self.on_job_submit(now, job as usize),

@@ -19,6 +19,7 @@
 use super::flow::Buffer;
 use crate::actions::Action;
 use crate::qos::sample::Report;
+use crate::telemetry::trace::TraceId;
 use crate::util::time::Time;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -40,7 +41,11 @@ pub(crate) enum Ev {
     /// Tick one job's QoS manager on one worker.
     ManagerTick { job: u32, worker: u32 },
     CpuSample { worker: u32 },
-    ApplyAction { action: Action },
+    /// Enact a countermeasure after the control-plane delay.  `cause`
+    /// is the journal record (e.g. a constraint violation or a planned
+    /// migration) that produced the action, threaded through so the
+    /// applied-action record links back to its trigger.
+    ApplyAction { action: Action, cause: Option<TraceId> },
     /// Job lifecycle (multi-job scheduler): process a queued submission —
     /// place instances via the scheduler, grow the union graphs, build
     /// the job's QoS runtime, start its sources.

@@ -27,6 +27,8 @@ use crate::sched::migration::{self, MigrationConfig, WorkerSample};
 use crate::sched::{
     admission, AdmissionDecision, ElasticDenial, JobSpec, JobState, QosClass, RejectReason,
 };
+use crate::telemetry::metrics::MetricKey;
+use crate::telemetry::trace::{TraceId, TraceKind};
 use crate::util::time::{Duration, Time};
 use anyhow::Result;
 use std::collections::{BTreeMap, BTreeSet};
@@ -106,7 +108,8 @@ impl SimCluster {
             .collect();
         if live_workers.is_empty() {
             // Nothing left to redeploy onto: degrade to unregistering.
-            self.log(now, format!("failover {w} {id}: no surviving workers"));
+            let cause = self.crash_trace.get(&w.0).copied();
+            self.trace_caused(now, cause, TraceKind::FailoverStranded { worker: w, job: id });
             self.unregister_worker_for(now, w, j);
             return Ok(());
         }
@@ -178,9 +181,11 @@ impl SimCluster {
         }
         self.stats.items_replayed += replayed;
         self.stats.jobs[j].items_replayed += replayed;
-        self.log(
+        let cause = self.crash_trace.get(&w.0).copied();
+        self.trace_caused(
             now,
-            format!("failover {w} {id}: reassigned {reassigned}, replayed {replayed}"),
+            cause,
+            TraceKind::FailoverRecovered { worker: w, job: id, reassigned, replayed },
         );
         self.after_topology_change(j, "failover");
         Ok(())
@@ -244,7 +249,12 @@ impl SimCluster {
                 .unwrap_or(0);
         }
         self.account_lost(id, stranded);
-        self.log(now, format!("failover {w} {id}: detached {detached}"));
+        let cause = self.crash_trace.get(&w.0).copied();
+        self.trace_caused(
+            now,
+            cause,
+            TraceKind::FailoverDetached { worker: w, job: id, detached },
+        );
         self.after_topology_change(j, "failover");
     }
 
@@ -337,12 +347,21 @@ impl SimCluster {
         }
         if changed {
             self.last_scale.insert(group, now);
-            self.log(
+            // A scale-up that went through preemption cites the
+            // preemption record; otherwise the triggering violation.
+            let cause = self.last_preempt_trace.take().or(self.action_cause);
+            self.trace_caused(
                 now,
-                format!("scale {} {delta:+} -> {}", group, self.rg.members(group).len()),
+                cause,
+                TraceKind::ScaleApplied {
+                    group,
+                    delta: delta as i64,
+                    members: self.rg.members(group).len(),
+                },
             );
             self.after_topology_change(job.index(), &format!("scaling {group}"));
         }
+        self.last_preempt_trace = None;
         changed
     }
 
@@ -424,7 +443,8 @@ impl SimCluster {
                             // the deferral observable either way.
                             if denial == ElasticDenial::Deferred {
                                 self.stats.elastic_deferred += 1;
-                                self.log(now, format!("scale {group} deferred (fair share)"));
+                                let cause = self.action_cause;
+                                self.trace_caused(now, cause, TraceKind::ScaleDeferred { group });
                             }
                             None
                         }
@@ -436,7 +456,8 @@ impl SimCluster {
             Err(denial) => {
                 if denial == ElasticDenial::Deferred {
                     self.stats.elastic_deferred += 1;
-                    self.log(now, format!("scale {group} deferred (fair share)"));
+                    let cause = self.action_cause;
+                    self.trace_caused(now, cause, TraceKind::ScaleDeferred { group });
                 }
                 None
             }
@@ -590,10 +611,14 @@ impl SimCluster {
             self.detach_for_scaledown(now, victim, v, elastic);
             self.stats.preemptions += 1;
             self.stats.jobs[victim.index()].slots_preempted += 1;
-            self.log(
+            let cause = self.action_cause;
+            let id = self.trace_caused(
                 now,
-                format!("preempt {victim} {group}: slot reclaimed for {requester}"),
+                cause,
+                TraceKind::Preempted { victim, group, requester },
             );
+            // The scale-up this preemption unblocked cites it as cause.
+            self.last_preempt_trace = Some(id);
             self.after_topology_change(victim.index(), "preemption");
             return true;
         }
@@ -670,6 +695,8 @@ impl SimCluster {
                 DEMAND_EWMA_ALPHA,
             ) {
                 self.stats.admission_refreshes += 1;
+                // Journal-only (no legacy log line, so fingerprints hold).
+                self.trace(now, TraceKind::AdmissionRefreshed { job: id });
             }
         }
         let cores = self.cfg.cluster.cores_per_worker as f64;
@@ -708,13 +735,16 @@ impl SimCluster {
         };
         self.next_migration_at =
             now + self.cfg.measurement_interval + self.cfg.measurement_interval;
-        self.log(
+        let plan = self.trace(
             now,
-            format!("migrate {v} planned: {from} {kind}-saturated -> {to} ({job})"),
+            TraceKind::MigrationPlanned { vertex: v, from, kind, to, job },
         );
         self.queue.push(
             now + self.cfg.cluster.control_delay,
-            Ev::ApplyAction { action: Action::MigrateInstance { job, vertex: v, from, to } },
+            Ev::ApplyAction {
+                action: Action::MigrateInstance { job, vertex: v, from, to },
+                cause: Some(plan),
+            },
         );
     }
 
@@ -836,7 +866,12 @@ impl SimCluster {
         }
         self.sched.move_reservation(job, from, to);
         self.stats.migrations += 1;
-        self.log(now, format!("migrate {v} {jv}: {from} -> {to} ({job})"));
+        let cause = self.action_cause;
+        self.trace_caused(
+            now,
+            cause,
+            TraceKind::Migrated { vertex: v, group: jv, from, to, job },
+        );
         self.after_topology_change(job.index(), "migration");
         true
     }
@@ -857,16 +892,32 @@ impl SimCluster {
         };
         let id = JobId(j as u32);
         match self.admission_verdict(id, now) {
-            AdmissionDecision::Admit { .. } => self.admit_job(now, j, spec)?,
+            AdmissionDecision::Admit { .. } => self.admit_job(now, j, spec, None)?,
             decision @ AdmissionDecision::Queue { .. } => {
                 self.stats.jobs_queued += 1;
-                self.log(now, format!("job {id} ({}) queued: {decision}", spec.name));
+                let queued = self.trace(
+                    now,
+                    TraceKind::JobQueued {
+                        job: id,
+                        name: spec.name.clone(),
+                        decision: decision.clone(),
+                    },
+                );
+                self.queue_trace.insert(id.0, queued);
                 self.sched.mark_queued(id, decision);
                 self.pending[j] = Some(spec);
             }
             AdmissionDecision::Reject { reason } => {
                 self.stats.jobs_rejected += 1;
-                self.log(now, format!("job {id} ({}) rejected: {reason}", spec.name));
+                self.trace(
+                    now,
+                    TraceKind::JobRejected {
+                        job: id,
+                        name: spec.name.clone(),
+                        reason,
+                        from_queue: false,
+                    },
+                );
                 self.sched.reject(id, reason, now);
             }
         }
@@ -912,6 +963,28 @@ impl SimCluster {
             // Close the governance loop before re-admitting queued jobs:
             // their verdicts should see refreshed holder demand.
             self.governance_tick(now);
+            if self.cfg.telemetry {
+                let (mut running, mut queued) = (0u64, 0u64);
+                for e in self.sched.entries() {
+                    match e.state {
+                        JobState::Running => running += 1,
+                        JobState::Queued => queued += 1,
+                        _ => {}
+                    }
+                }
+                self.metrics.gauge(MetricKey::plain("nephele_jobs_running"), running as f64);
+                self.metrics.gauge(MetricKey::plain("nephele_jobs_queued"), queued as f64);
+                self.metrics.gauge(
+                    MetricKey::plain("nephele_slots_free"),
+                    self.sched.free_slots(&self.dead_workers) as f64,
+                );
+                self.metrics
+                    .gauge(MetricKey::plain("nephele_event_queue_depth"), self.queue.len() as f64);
+                self.metrics.gauge(
+                    MetricKey::plain("nephele_events_processed"),
+                    self.stats.events_processed as f64,
+                );
+            }
         }
         for id in self.sched.queued_jobs() {
             let j = id.index();
@@ -921,8 +994,13 @@ impl SimCluster {
             };
             match self.admission_verdict(id, now) {
                 AdmissionDecision::Admit { .. } => {
-                    self.log(now, format!("job {id} ({}) admitted from queue", spec.name));
-                    self.admit_job(now, j, spec)?;
+                    let cause = self.queue_trace.remove(&id.0);
+                    let admitted = self.trace_caused(
+                        now,
+                        cause,
+                        TraceKind::JobAdmittedFromQueue { job: id, name: spec.name.clone() },
+                    );
+                    self.admit_job(now, j, spec, Some(admitted))?;
                 }
                 AdmissionDecision::Queue { .. } => {
                     // Still waiting; keep the original Queue decision.
@@ -932,9 +1010,16 @@ impl SimCluster {
                     // Capacity shrank for good (workers died): the
                     // queued job can no longer ever run.
                     self.stats.jobs_rejected += 1;
-                    self.log(
+                    let cause = self.queue_trace.remove(&id.0);
+                    self.trace_caused(
                         now,
-                        format!("job {id} ({}) rejected from queue: {reason}", spec.name),
+                        cause,
+                        TraceKind::JobRejected {
+                            job: id,
+                            name: spec.name.clone(),
+                            reason,
+                            from_queue: true,
+                        },
                     );
                     self.sched.reject(id, reason, now);
                 }
@@ -950,7 +1035,13 @@ impl SimCluster {
     /// Enact an admitted submission: place instances via the scheduler,
     /// absorb the job's graphs into the union, grow the dense engine
     /// state, build the job's QoS runtime and start its sources.
-    fn admit_job(&mut self, now: Time, j: usize, sub: JobSpec) -> Result<(), SimError> {
+    fn admit_job(
+        &mut self,
+        now: Time,
+        j: usize,
+        sub: JobSpec,
+        cause: Option<TraceId>,
+    ) -> Result<(), SimError> {
         let id = JobId(j as u32);
         let demand: u32 = sub.job.vertices.iter().map(|v| v.parallelism).sum();
         let assigned = match self.sched.place_job(id, demand, &self.dead_workers, now) {
@@ -966,7 +1057,15 @@ impl SimCluster {
                     },
                 );
                 self.stats.jobs_rejected += 1;
-                self.log(now, format!("job {id} ({}) rejected: {e}", sub.name));
+                self.trace_caused(
+                    now,
+                    cause,
+                    TraceKind::PlacementFailed {
+                        job: id,
+                        name: sub.name.clone(),
+                        error: e.to_string(),
+                    },
+                );
                 return Ok(());
             }
         };
@@ -1023,14 +1122,23 @@ impl SimCluster {
         // refresh the sharded queue's worker-affinity maps.
         self.sync_queue_topology();
         self.stats.jobs_submitted += 1;
-        self.log(
+        let submitted = self.trace_caused(
             now,
-            format!("job {id} ({}) submitted: {demand} instances", sub.name),
+            cause,
+            TraceKind::JobSubmitted {
+                job: id,
+                name: sub.name.clone(),
+                instances: demand as usize,
+            },
         );
         if let Err(e) = self.install_qos(j) {
             // The job still runs, just without QoS management; the
             // failure is visible in the log and typed (SetupError).
-            self.log(now, format!("job {id}: qos setup failed: {e}"));
+            self.trace_caused(
+                now,
+                Some(submitted),
+                TraceKind::QosSetupFailed { job: id, error: e.to_string() },
+            );
         }
         if sub.run_for.is_some() {
             let first_check = self.jobs[j].source_end + Duration::from_secs(1);
@@ -1118,11 +1226,9 @@ impl SimCluster {
         self.jobs[j].detector.track(Vec::new(), now);
         self.stats.jobs_completed += 1;
         let ledger: &JobLedger = &self.stats.jobs[j];
-        let summary = format!(
-            "job {id} complete: sinks {} of {} ingested, lost {}",
-            ledger.at_sinks, ledger.items_ingested, ledger.accounted_lost
-        );
-        self.log(now, summary);
+        let (sinks, ingested, lost) =
+            (ledger.at_sinks, ledger.items_ingested, ledger.accounted_lost);
+        self.trace(now, TraceKind::JobCompleted { job: id, sinks, ingested, lost });
         // The freed capacity may unblock a queued submission: drain the
         // queue now instead of waiting out the periodic tick.
         if self.sched.any_queued() {
@@ -1147,7 +1253,8 @@ impl SimCluster {
             self.pending[j] = None;
             let _ = self.sched.cancel(id, now);
             self.stats.jobs_cancelled += 1;
-            self.log(now, format!("job {id} cancelled before admission"));
+            let cause = self.queue_trace.remove(&id.0);
+            self.trace_caused(now, cause, TraceKind::JobCancelledEarly { job: id });
             return;
         }
         if self.sched.state(id) != Some(JobState::Running) {
@@ -1219,7 +1326,7 @@ impl SimCluster {
         self.jobs[j].managers.clear();
         self.jobs[j].detector.track(Vec::new(), now);
         self.stats.jobs_cancelled += 1;
-        self.log(now, format!("job {id} cancelled: {lost} in-flight items lost"));
+        self.trace(now, TraceKind::JobCancelled { job: id, lost });
         if self.sched.any_queued() {
             self.queue
                 .push(now + self.cfg.cluster.control_delay, Ev::SchedTick { periodic: false });
@@ -1470,7 +1577,10 @@ mod tests {
         cluster.queue.push(t, Ev::WorkerCrash { worker: from.0 });
         cluster.queue.push(
             t,
-            Ev::ApplyAction { action: Action::MigrateInstance { job: a, vertex: v, from, to } },
+            Ev::ApplyAction {
+                action: Action::MigrateInstance { job: a, vertex: v, from, to },
+                cause: None,
+            },
         );
         cluster.run(t.since(Time::ZERO) + Duration::from_secs(1), None)?;
         assert!(cluster.worker_dead(from));
@@ -1496,7 +1606,10 @@ mod tests {
         cluster.queue.push(t, Ev::WorkerCrash { worker: to.0 });
         cluster.queue.push(
             t,
-            Ev::ApplyAction { action: Action::MigrateInstance { job: a, vertex: v, from, to } },
+            Ev::ApplyAction {
+                action: Action::MigrateInstance { job: a, vertex: v, from, to },
+                cause: None,
+            },
         );
         cluster.run(t.since(Time::ZERO) + Duration::from_secs(1), None)?;
         assert!(cluster.worker_dead(to));

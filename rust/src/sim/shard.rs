@@ -400,6 +400,14 @@ impl EngineQueue {
         }
     }
 
+    /// Outstanding (scheduled, not yet delivered) events across all shards.
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            EngineQueue::Serial(q) => q.len(),
+            EngineQueue::Sharded(s) => s.core.len(),
+        }
+    }
+
     pub(crate) fn peek_time(&mut self) -> Option<Time> {
         match self {
             EngineQueue::Serial(q) => q.peek_time(),

@@ -22,8 +22,10 @@ use crate::actions::chaining::DrainPolicy;
 use crate::actions::Action;
 use crate::graph::ids::{ChannelId, JobId, VertexId, WorkerId};
 use crate::qos::sample::Measurement;
+use crate::telemetry::metrics::MetricKey;
+use crate::telemetry::trace::{TraceId, TraceKind};
 use crate::util::time::{Duration, Time};
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 impl SimCluster {
     // ------------------------------------------------------------------
@@ -508,16 +510,41 @@ impl SimCluster {
             self.tick_chains.remove(&(job, worker.0));
             return;
         }
-        let actions = match self
+        let (actions, violations) = match self
             .jobs
             .get_mut(job as usize)
             .and_then(|jq| jq.managers.get_mut(&worker))
         {
-            Some(m) => m.act(now),
+            Some(m) => {
+                let actions = m.act(now);
+                (actions, m.take_violations())
+            }
             None => {
                 self.tick_chains.remove(&(job, worker.0));
                 return;
             }
+        };
+        // Journal-only records for the constraint evaluations that
+        // triggered this tick's countermeasures; the resulting actions
+        // carry the violation's TraceId as their cause so escalation
+        // chains are walkable (violation → buffers/chaining/scaling).
+        let mut violated: BTreeMap<usize, TraceId> = BTreeMap::new();
+        for (constraint, worst_us) in violations {
+            let id = self.trace(
+                now,
+                TraceKind::ConstraintViolated {
+                    job: JobId(job),
+                    manager: worker,
+                    constraint,
+                    worst_us,
+                },
+            );
+            violated.insert(constraint, id);
+        }
+        let sole_cause = if violated.len() == 1 {
+            violated.values().next().copied()
+        } else {
+            None
         };
         let delay = self.cfg.cluster.control_delay;
         for action in actions {
@@ -525,9 +552,20 @@ impl SimCluster {
                 Action::Unresolvable { job: aj, manager, constraint, .. } => {
                     self.stats.unresolvable_notices += 1;
                     self.stats.jobs[aj.index()].unresolvable += 1;
-                    self.log(now, format!("unresolvable c{constraint} from {manager} ({aj})"));
+                    let cause = violated.get(constraint).copied().or(sole_cause);
+                    self.trace_caused(
+                        now,
+                        cause,
+                        TraceKind::Unresolvable {
+                            constraint: *constraint,
+                            manager: *manager,
+                            job: *aj,
+                        },
+                    );
                 }
-                _ => self.queue.push(now + delay, Ev::ApplyAction { action }),
+                _ => self
+                    .queue
+                    .push(now + delay, Ev::ApplyAction { action, cause: sole_cause }),
             }
         }
         let next_tick = now + self.cfg.measurement_interval;
@@ -544,12 +582,14 @@ impl SimCluster {
             .vertices_on_worker(worker)
             .map(|v| v.id)
             .collect();
+        let mut sample_busy = Duration::ZERO;
         for v in verts {
             let busy = std::mem::replace(&mut self.tasks[v.index()].busy_accum, Duration::ZERO);
             let job = self.job_of_vertex[v.index()];
             // Live-measurement tap for the governance loop: per-worker
             // and per-job busy time, drained by the scheduler tick.
             self.worker_busy[worker.index()] += busy;
+            sample_busy += busy;
             if let Some(b) = self.job_busy.get_mut(job.index()) {
                 *b += busy;
             }
@@ -558,6 +598,20 @@ impl SimCluster {
                 self.record(job, worker, Measurement::task_cpu(v, util.min(1.0)));
             }
         }
+        if self.cfg.telemetry {
+            // Per-worker utilization gauges on the sampling clock the
+            // governance loop already uses (sim time, never wall time).
+            let util = (sample_busy.as_secs_f64() / interval.as_secs_f64()).min(1.0);
+            self.metrics.gauge(
+                MetricKey::with("nephele_worker_cpu_utilization", "worker", worker.to_string()),
+                util,
+            );
+            let backlog = self.nics[worker.index()].backlog(now);
+            self.metrics.gauge(
+                MetricKey::with("nephele_worker_nic_backlog_secs", "worker", worker.to_string()),
+                backlog.as_secs_f64(),
+            );
+        }
         self.queue.push(now + interval, Ev::CpuSample { worker: worker.0 });
     }
 
@@ -565,7 +619,10 @@ impl SimCluster {
     // Action application (worker side)
     // ------------------------------------------------------------------
 
-    pub(crate) fn on_apply(&mut self, now: Time, action: Action) {
+    pub(crate) fn on_apply(&mut self, now: Time, action: Action, cause: Option<TraceId>) {
+        // Thread the triggering record through to the apply_* record
+        // sites without changing their (test-visible) signatures.
+        self.action_cause = cause;
         match action {
             Action::SetBufferSize { channel, worker, size, based_on } => {
                 let arb = self.arbiters.entry(worker).or_default();
@@ -573,7 +630,12 @@ impl SimCluster {
                     Verdict::Apply(size) => {
                         self.out_bufs[channel.index()].size = size;
                         self.stats.buffer_size_updates += 1;
-                        self.log(now, format!("buffer {channel} -> {size}"));
+                        let cause = self.action_cause;
+                        self.trace_caused(
+                            now,
+                            cause,
+                            TraceKind::BufferResize { worker, channel, size },
+                        );
                         let job = self.job_of_channel(channel);
                         if let Some(r) = self
                             .jobs
@@ -605,6 +667,7 @@ impl SimCluster {
             }
             Action::Unresolvable { .. } => {}
         }
+        self.action_cause = None;
     }
 
     fn apply_chain(&mut self, now: Time, tasks: Vec<VertexId>, drain: DrainPolicy) {
@@ -653,8 +716,13 @@ impl SimCluster {
         self.chain_busy.push(busy);
         self.chain_sched.push(false);
         self.stats.chains_established += 1;
-        let chained: Vec<String> = tasks.iter().map(|v| v.to_string()).collect();
-        self.log(now, format!("chain {}", chained.join("+")));
+        let cause = self.action_cause;
+        let worker = self.rg.worker(tasks[0]);
+        self.trace_caused(
+            now,
+            cause,
+            TraceKind::ChainEstablished { worker, members: tasks.clone() },
+        );
         self.try_schedule(now, tasks[0]);
     }
 
@@ -674,7 +742,8 @@ impl SimCluster {
         }
         self.dead_workers[w.index()] = true;
         self.stats.workers_crashed += 1;
-        self.log(now, format!("crash {w}"));
+        let crash_id = self.trace(now, TraceKind::WorkerCrash { worker: w });
+        self.crash_trace.insert(w.0, crash_id);
         let victims: Vec<VertexId> = self.rg.vertices_on_worker(w).map(|v| v.id).collect();
         // Chains die with their shared thread.  Members are always
         // co-located, so every member of an affected group is a victim;

@@ -1,0 +1,240 @@
+//! Journal and metrics exporters (DESIGN.md §12).  Dependency-free by
+//! construction: the JSON is hand-rolled, the digest is FNV-1a.
+//!
+//! Three formats:
+//! * [`journal_jsonl`] — one JSON object per decision record, append
+//!   order, every value derived from sim state only.  The digest of
+//!   this text ([`journal_digest`]) is the journal's determinism
+//!   fingerprint: byte-identical across same-seed replays and across
+//!   `--threads {1,2,4}`.
+//! * [`chrome_trace`] — Chrome trace-event JSON loadable in Perfetto /
+//!   `chrome://tracing`: one process per scenario section (phase, arm),
+//!   one track (tid) per worker plus a master track, instant events
+//!   for decisions, and flow arrows (`ph:"s"`/`ph:"f"`) walking every
+//!   `cause` link.
+//! * Prometheus text — rendered by
+//!   [`crate::telemetry::metrics::MetricsRegistry::render_prometheus`].
+
+use crate::telemetry::metrics::MetricsRegistry;
+use crate::telemetry::trace::{FieldVal, Journal, TraceEvent};
+
+/// Exportable observability snapshot of one finished run: the typed
+/// journal itself (for Chrome-trace sectioning), its determinism
+/// digest, and the Prometheus-style metrics text.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetrySnapshot {
+    pub journal: Journal,
+    pub journal_digest: String,
+    pub metrics_text: String,
+}
+
+impl TelemetrySnapshot {
+    pub fn capture(journal: &Journal, metrics: &MetricsRegistry) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            journal: journal.clone(),
+            journal_digest: journal_digest(journal),
+            metrics_text: metrics.render_prometheus(),
+        }
+    }
+}
+
+/// Escape a string for a JSON string literal (no outer quotes).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn field_json(v: &FieldVal) -> String {
+    match v {
+        FieldVal::U64(n) => format!("{n}"),
+        FieldVal::I64(n) => format!("{n}"),
+        FieldVal::F64(x) => {
+            if x.is_finite() {
+                format!("{x}")
+            } else {
+                // JSON has no Inf/NaN literal; clamp to null.
+                "null".to_string()
+            }
+        }
+        FieldVal::Str(s) => format!("\"{}\"", json_escape(s)),
+    }
+}
+
+fn event_json_fields(e: &TraceEvent) -> String {
+    let mut out = String::new();
+    for (k, v) in e.kind.fields() {
+        out.push_str(&format!(",\"{k}\":{}", field_json(&v)));
+    }
+    out
+}
+
+/// One JSON line per record: `{"id":..,"t_us":..,"tag":..,"cause":..,
+/// <kind fields>,"log":..}`.  Key order is fixed by construction.
+pub fn journal_jsonl(journal: &Journal) -> String {
+    let mut out = String::new();
+    for e in journal.events() {
+        let cause = match e.cause {
+            Some(c) => format!("{}", c.0),
+            None => "null".to_string(),
+        };
+        let log = match e.kind.render() {
+            Some(line) => format!("\"{}\"", json_escape(&line)),
+            None => "null".to_string(),
+        };
+        out.push_str(&format!(
+            "{{\"id\":{},\"t_us\":{},\"tag\":\"{}\",\"cause\":{cause}{},\"log\":{log}}}\n",
+            e.id.0,
+            e.at.0,
+            e.kind.tag(),
+            event_json_fields(e),
+        ));
+    }
+    out
+}
+
+/// FNV-1a 64 over the JSONL rendering: the journal's replay
+/// fingerprint.
+pub fn journal_digest(journal: &Journal) -> String {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for b in journal_jsonl(journal).bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    format!("fnv1a:{h:016x}")
+}
+
+/// Chrome trace-event JSON for one or more scenario sections.
+///
+/// Each `(label, journal)` pair becomes one trace "process" (pid =
+/// section index) so multi-phase runs stay separate tracks even though
+/// every phase restarts its sim clock at zero.  Within a process,
+/// tid 0 is the master/coordinator track and tid `w+1` is worker `w`.
+/// Decisions are instant events (`ph:"i"`); every `cause` link becomes
+/// a flow arrow — the `ph:"s"` start is emitted at the *cause* record
+/// (keeping per-track timestamps monotone in array order) and the
+/// `ph:"f"` end at the caused record.
+pub fn chrome_trace(sections: &[(String, &Journal)]) -> String {
+    let mut events: Vec<String> = Vec::new();
+    let mut flow_id = 0u64;
+    for (pid, (label, journal)) in sections.iter().enumerate() {
+        events.push(format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            json_escape(label)
+        ));
+        // Pre-pass: flow ids for every cause link, keyed by the cause
+        // record so the start arrow can be emitted in timestamp order.
+        let mut outgoing: Vec<Vec<u64>> = vec![Vec::new(); journal.len()];
+        let mut incoming: Vec<Option<u64>> = vec![None; journal.len()];
+        for e in journal.events() {
+            if let Some(cause) = e.cause {
+                if cause.index() < e.id.index() {
+                    outgoing[cause.index()].push(flow_id);
+                    incoming[e.id.index()] = Some(flow_id);
+                    flow_id += 1;
+                }
+            }
+        }
+        for e in journal.events() {
+            let tid = match e.kind.worker() {
+                Some(w) => w.0 as u64 + 1,
+                None => 0,
+            };
+            let ts = e.at.0;
+            let cause_arg = match e.cause {
+                Some(c) => format!(",\"cause\":{}", c.0),
+                None => String::new(),
+            };
+            let log_arg = match e.kind.render() {
+                Some(line) => format!(",\"log\":\"{}\"", json_escape(&line)),
+                None => String::new(),
+            };
+            events.push(format!(
+                "{{\"name\":\"{}\",\"cat\":\"decision\",\"ph\":\"i\",\"s\":\"t\",\
+                 \"pid\":{pid},\"tid\":{tid},\"ts\":{ts},\
+                 \"args\":{{\"trace\":{}{cause_arg}{log_arg}{}}}}}",
+                e.kind.tag(),
+                e.id.0,
+                event_json_fields(e),
+            ));
+            for &fid in &outgoing[e.id.index()] {
+                events.push(format!(
+                    "{{\"name\":\"cause\",\"cat\":\"cause\",\"ph\":\"s\",\"id\":{fid},\
+                     \"pid\":{pid},\"tid\":{tid},\"ts\":{ts}}}"
+                ));
+            }
+            if let Some(fid) = incoming[e.id.index()] {
+                events.push(format!(
+                    "{{\"name\":\"cause\",\"cat\":\"cause\",\"ph\":\"f\",\"bp\":\"e\",\
+                     \"id\":{fid},\"pid\":{pid},\"tid\":{tid},\"ts\":{ts}}}"
+                ));
+            }
+        }
+    }
+    format!("{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n{}\n]}}\n", events.join(",\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ids::WorkerId;
+    use crate::telemetry::trace::TraceKind;
+    use crate::util::time::Time;
+
+    fn sample_journal() -> Journal {
+        let mut j = Journal::default();
+        let crash = j.append(Time(1_000), None, TraceKind::WorkerCrash { worker: WorkerId(2) });
+        j.append(
+            Time(2_000),
+            Some(crash),
+            TraceKind::FailoverDetached {
+                worker: WorkerId(2),
+                job: crate::graph::ids::JobId(0),
+                detached: 3,
+            },
+        );
+        j
+    }
+
+    #[test]
+    fn jsonl_is_one_object_per_event_and_digest_is_stable() {
+        let j = sample_journal();
+        let text = journal_jsonl(&j);
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("\"tag\":\"worker-crash\""), "{text}");
+        assert!(text.contains("\"cause\":0"), "{text}");
+        assert_eq!(journal_digest(&j), journal_digest(&j.clone()));
+    }
+
+    #[test]
+    fn chrome_trace_emits_flow_pair_for_cause_links() {
+        let j = sample_journal();
+        let trace = chrome_trace(&[("test".to_string(), &j)]);
+        assert!(trace.contains("\"ph\":\"s\""), "{trace}");
+        assert!(trace.contains("\"ph\":\"f\""), "{trace}");
+        assert!(trace.contains("\"process_name\""), "{trace}");
+        // Worker-attributed events land on tid = worker + 1.
+        assert!(trace.contains("\"tid\":3"), "{trace}");
+    }
+
+    #[test]
+    fn json_escape_handles_controls() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+}

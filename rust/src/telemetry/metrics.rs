@@ -1,0 +1,246 @@
+//! Deterministic metrics registry (DESIGN.md §12).
+//!
+//! Counters, gauges and fixed-bucket latency histograms keyed by a
+//! static metric name plus a `BTreeMap` label set — the map keeps every
+//! rendered dump in one deterministic order regardless of insertion
+//! history, which is what lets the Prometheus-style text export be
+//! byte-identical across same-seed replays and `--threads` counts.
+//!
+//! Sampling happens on the simulator's own clocks (scheduler ticks and
+//! CPU-sample ticks), never a wall clock; the per-job end-to-end
+//! latency histograms sit on the hot delivery path and are therefore a
+//! dense `Vec` indexed by job, not a map lookup (see
+//! [`MetricsRegistry::observe_e2e`]).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Metric identity: static name + ordered label set.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MetricKey {
+    pub name: &'static str,
+    pub labels: BTreeMap<&'static str, String>,
+}
+
+impl MetricKey {
+    pub fn plain(name: &'static str) -> MetricKey {
+        MetricKey { name, labels: BTreeMap::new() }
+    }
+
+    pub fn with(name: &'static str, label: &'static str, value: String) -> MetricKey {
+        let mut labels = BTreeMap::new();
+        labels.insert(label, value);
+        MetricKey { name, labels }
+    }
+
+    fn render(&self) -> String {
+        if self.labels.is_empty() {
+            return self.name.to_string();
+        }
+        let parts: Vec<String> =
+            self.labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+        format!("{}{{{}}}", self.name, parts.join(","))
+    }
+}
+
+/// Fixed-bound latency histogram (milliseconds).  Bounds are chosen
+/// once at construction and never rebucketed, so two replays of the
+/// same scenario always produce identical bucket vectors.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Upper bounds (inclusive), ascending; one implicit +Inf bucket.
+    bounds: Vec<f64>,
+    /// `counts.len() == bounds.len() + 1`.
+    counts: Vec<u64>,
+    sum_ms: f64,
+    total: u64,
+}
+
+/// Default e2e-latency bounds: 1 ms … 60 s in roughly 2x steps, wide
+/// enough for both the 30 ms-constraint jobs and queued-start outliers.
+pub const LATENCY_BOUNDS_MS: [f64; 14] = [
+    1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1_000.0, 2_000.0, 5_000.0, 15_000.0,
+    60_000.0,
+];
+
+impl Histogram {
+    pub fn latency() -> Histogram {
+        Histogram::with_bounds(&LATENCY_BOUNDS_MS)
+    }
+
+    pub fn with_bounds(bounds: &[f64]) -> Histogram {
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum_ms: 0.0,
+            total: 0,
+        }
+    }
+
+    #[inline]
+    pub fn observe(&mut self, ms: f64) {
+        // partition_point = first bound the sample does not exceed.
+        let idx = self.bounds.partition_point(|&b| b < ms);
+        self.counts[idx] += 1;
+        self.sum_ms += ms;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_ms
+    }
+
+    pub fn buckets(&self) -> impl Iterator<Item = (Option<f64>, u64)> + '_ {
+        self.bounds
+            .iter()
+            .map(|&b| Some(b))
+            .chain(std::iter::once(None))
+            .zip(self.counts.iter().copied())
+    }
+}
+
+/// The registry: monotone counters, last-value gauges, histograms.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<MetricKey, u64>,
+    gauges: BTreeMap<MetricKey, f64>,
+    histograms: BTreeMap<MetricKey, Histogram>,
+    /// Hot path: per-job e2e latency, dense-indexed by job id.
+    e2e: Vec<Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn inc(&mut self, key: MetricKey, by: u64) {
+        *self.counters.entry(key).or_insert(0) += by;
+    }
+
+    pub fn gauge(&mut self, key: MetricKey, value: f64) {
+        self.gauges.insert(key, value);
+    }
+
+    pub fn observe(&mut self, key: MetricKey, ms: f64) {
+        self.histograms.entry(key).or_insert_with(Histogram::latency).observe(ms);
+    }
+
+    /// Record one end-to-end delivery latency for `job` (dense fast
+    /// path — called once per sink item).
+    #[inline]
+    pub fn observe_e2e(&mut self, job: usize, ms: f64) {
+        if self.e2e.len() <= job {
+            self.e2e.resize_with(job + 1, Histogram::latency);
+        }
+        self.e2e[job].observe(ms);
+    }
+
+    pub fn counter(&self, name: &'static str) -> u64 {
+        self.counters.get(&MetricKey::plain(name)).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, key: &MetricKey) -> Option<f64> {
+        self.gauges.get(key).copied()
+    }
+
+    pub fn e2e_histograms(&self) -> &[Histogram] {
+        &self.e2e
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty()
+            && self.gauges.is_empty()
+            && self.histograms.is_empty()
+            && self.e2e.iter().all(|h| h.total() == 0)
+    }
+
+    /// Render the whole registry as Prometheus-style text exposition.
+    /// Ordering is fully deterministic: counters, then gauges, then
+    /// histograms, each in `BTreeMap` key order; e2e histograms last,
+    /// in job order.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (key, v) in &self.counters {
+            let _ = writeln!(out, "{} {v}", key.render());
+        }
+        for (key, v) in &self.gauges {
+            let _ = writeln!(out, "{} {v:.6}", key.render());
+        }
+        let mut render_hist = |out: &mut String, key: &MetricKey, h: &Histogram| {
+            let mut cumulative = 0u64;
+            for (bound, count) in h.buckets() {
+                cumulative += count;
+                let le = match bound {
+                    Some(b) => format!("{b}"),
+                    None => "+Inf".to_string(),
+                };
+                let mut labels = key.labels.clone();
+                labels.insert("le", le);
+                let bucket_key = MetricKey { name: key.name, labels };
+                // The Prometheus convention suffixes histogram series.
+                let _ = writeln!(out, "{}_bucket{} {cumulative}", key.name, {
+                    let rendered = bucket_key.render();
+                    rendered[key.name.len()..].to_string()
+                });
+            }
+            let _ = writeln!(out, "{}_sum{} {:.6}", key.name, suffix(key), h.sum_ms());
+            let _ = writeln!(out, "{}_count{} {}", key.name, suffix(key), h.total());
+        };
+        for (key, h) in &self.histograms {
+            render_hist(&mut out, key, h);
+        }
+        for (job, h) in self.e2e.iter().enumerate() {
+            if h.total() == 0 {
+                continue;
+            }
+            let key = MetricKey::with("nephele_e2e_latency_ms", "job", format!("j{job}"));
+            render_hist(&mut out, &key, h);
+        }
+        out
+    }
+}
+
+fn suffix(key: &MetricKey) -> String {
+    let rendered = key.render();
+    rendered[key.name.len()..].to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_cumulate() {
+        let mut h = Histogram::with_bounds(&[1.0, 10.0]);
+        h.observe(0.5);
+        h.observe(5.0);
+        h.observe(50.0);
+        let counts: Vec<u64> = h.buckets().map(|(_, c)| c).collect();
+        assert_eq!(counts, vec![1, 1, 1]);
+        assert_eq!(h.total(), 3);
+    }
+
+    #[test]
+    fn prometheus_render_is_label_ordered() {
+        let mut m = MetricsRegistry::default();
+        m.gauge(MetricKey::with("g", "b", "2".into()), 1.0);
+        m.gauge(MetricKey::with("g", "a", "1".into()), 2.0);
+        m.inc(MetricKey::plain("c"), 3);
+        let text = m.render_prometheus();
+        assert!(text.contains("c 3"), "{text}");
+        let a = text.find("g{a=\"1\"}");
+        let b = text.find("g{b=\"2\"}");
+        assert!(a.is_some() && a < b, "BTreeMap order: {text}");
+    }
+
+    #[test]
+    fn e2e_path_is_dense() {
+        let mut m = MetricsRegistry::default();
+        m.observe_e2e(2, 7.5);
+        assert_eq!(m.e2e_histograms().len(), 3);
+        assert_eq!(m.e2e_histograms()[2].total(), 1);
+        let text = m.render_prometheus();
+        assert!(text.contains("nephele_e2e_latency_ms_count{job=\"j2\"} 1"), "{text}");
+    }
+}

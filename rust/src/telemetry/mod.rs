@@ -1,0 +1,27 @@
+//! Deterministic observability: typed decision journal, metrics
+//! registry, and trace export (DESIGN.md §12).
+//!
+//! The paper's mechanism *is* observability turned into control —
+//! distributed QoS reporters/managers measuring task and channel
+//! latencies and acting on them (§3.2, Figs. 7–10).  This module gives
+//! the simulator the same introspection surface over its own
+//! decisions, under the repo's determinism contract: every record
+//! carries sim time only, every ordering is append or `BTreeMap`
+//! order, and the legacy `action_log` strings are re-derived from the
+//! typed records byte-for-byte so committed fingerprints never move.
+//!
+//! * [`trace`] — `TraceEvent`/`TraceKind`/`Journal`: the typed,
+//!   cause-linked decision journal (the ROADMAP durable-control-plane
+//!   substrate).
+//! * [`metrics`] — `MetricsRegistry`: counters, gauges and fixed-bucket
+//!   latency histograms keyed by static names + ordered label sets.
+//! * [`export`] — Chrome trace-event JSON (Perfetto-loadable), JSONL
+//!   journal dump + FNV-1a digest, Prometheus-style text.
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use export::{chrome_trace, journal_digest, journal_jsonl, TelemetrySnapshot};
+pub use metrics::{Histogram, MetricKey, MetricsRegistry};
+pub use trace::{Journal, TraceEvent, TraceId, TraceKind};

@@ -1,0 +1,439 @@
+//! The typed decision journal (DESIGN.md §12).
+//!
+//! Every governance and lifecycle decision the simulator takes —
+//! admission verdicts, queue/admit flips, scale-ups, preemptions,
+//! migrations, crashes, recoveries, chaining, buffer resizes,
+//! constraint violations, `Unresolvable` — is appended to a
+//! [`Journal`] as a [`TraceEvent`]: a sim-time timestamp, a typed
+//! [`TraceKind`] payload carrying the job/worker/vertex identities,
+//! and an optional `cause` link to the earlier event that triggered
+//! it, so escalation chains (violation → buffers → chaining → scaling
+//! → preemption) are walkable after the fact.
+//!
+//! The legacy `SimStats::action_log` strings are a **derived
+//! rendering** of these records: [`TraceKind::render`] reproduces the
+//! pre-journal log line byte-for-byte (or `None` for events that never
+//! had one), which is what keeps every committed replay fingerprint
+//! identical.  Determinism rules: records carry sim-time only (never
+//! wall clock), and all export orderings are append order or
+//! `BTreeMap` order — see `telemetry/export.rs`.
+
+use crate::graph::ids::{ChannelId, JobId, JobVertexId, VertexId, WorkerId};
+use crate::sched::admission::{AdmissionDecision, RejectReason};
+use crate::sched::migration::Saturation;
+use crate::util::time::Time;
+
+/// Index of one event in its [`Journal`] (dense, append order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TraceId(pub u32);
+
+impl TraceId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// A scalar attribute of a trace record, for the exporters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FieldVal {
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    Str(String),
+}
+
+impl FieldVal {
+    fn of<T: std::fmt::Display>(v: T) -> FieldVal {
+        FieldVal::Str(v.to_string())
+    }
+}
+
+/// The typed payload of one journal record.
+///
+/// Variant coverage mirrors the log sites in `sim/{worker,master}.rs`;
+/// the two `render() == None` variants (`AdmissionRefreshed`,
+/// `ConstraintViolated`) are journal-only — they had no legacy log
+/// line, and adding one would change committed fingerprints.
+#[derive(Debug, Clone)]
+pub enum TraceKind {
+    /// Fail-stop worker crash observed by the failure injector.
+    WorkerCrash { worker: WorkerId },
+    /// An adaptive output-buffer resize was applied (§3.4).
+    BufferResize { worker: WorkerId, channel: ChannelId, size: u32 },
+    /// A dynamic task chain was established (§3.5).
+    ChainEstablished { worker: WorkerId, members: Vec<VertexId> },
+    /// Every countermeasure tier is out of moves for a constraint.
+    Unresolvable { constraint: usize, manager: WorkerId, job: JobId },
+    /// Worker failure with no surviving workers to reassign onto.
+    FailoverStranded { worker: WorkerId, job: JobId },
+    /// Worker failure recovered: instances reassigned, stash replayed.
+    FailoverRecovered { worker: WorkerId, job: JobId, reassigned: u64, replayed: u64 },
+    /// Worker failure with recovery disabled: instances detached.
+    FailoverDetached { worker: WorkerId, job: JobId, detached: u64 },
+    /// An elastic scale-up/-down was applied to a task group.
+    ScaleApplied { group: JobVertexId, delta: i64, members: usize },
+    /// A scale-up was deferred by the weighted fair-share arbiter.
+    ScaleDeferred { group: JobVertexId },
+    /// A best-effort victim's slot was reclaimed for a latency job.
+    Preempted { victim: JobId, group: JobVertexId, requester: JobId },
+    /// Saturation-driven migration planned by the governance tick.
+    MigrationPlanned {
+        vertex: VertexId,
+        from: WorkerId,
+        kind: Saturation,
+        to: WorkerId,
+        job: JobId,
+    },
+    /// The planned migration was enacted on the runtime graph.
+    Migrated {
+        vertex: VertexId,
+        group: JobVertexId,
+        from: WorkerId,
+        to: WorkerId,
+        job: JobId,
+    },
+    /// Admission verdict: wait for a predicted capacity release.
+    JobQueued { job: JobId, name: String, decision: AdmissionDecision },
+    /// Admission verdict: the submission can never run.
+    JobRejected { job: JobId, name: String, reason: RejectReason, from_queue: bool },
+    /// Placement failed after a feasible admission verdict.
+    PlacementFailed { job: JobId, name: String, error: String },
+    /// A queued job was admitted when capacity was released.
+    JobAdmittedFromQueue { job: JobId, name: String },
+    /// A job was placed and its tasks deployed.
+    JobSubmitted { job: JobId, name: String, instances: usize },
+    /// The per-job QoS runtime could not be constructed.
+    QosSetupFailed { job: JobId, error: String },
+    /// A bounded job completed and its ledger was finalised.
+    JobCompleted { job: JobId, sinks: u64, ingested: u64, lost: u64 },
+    /// A queued job was cancelled before it ever ran.
+    JobCancelledEarly { job: JobId },
+    /// A running job was cancelled; in-flight items became loss.
+    JobCancelled { job: JobId, lost: u64 },
+    /// Journal-only: the scheduler-tick EWMA admission refresh changed
+    /// a running holder's demand (no legacy log line).
+    AdmissionRefreshed { job: JobId },
+    /// Journal-only: a QoS manager evaluated a chain as violating its
+    /// constraint (the trigger for the countermeasure ladder).
+    ConstraintViolated { job: JobId, manager: WorkerId, constraint: usize, worst_us: f64 },
+}
+
+impl TraceKind {
+    /// Stable machine-readable tag, used by the JSONL/Chrome exporters
+    /// and the journal↔ledger consistency tests.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            TraceKind::WorkerCrash { .. } => "worker-crash",
+            TraceKind::BufferResize { .. } => "buffer-resize",
+            TraceKind::ChainEstablished { .. } => "chain",
+            TraceKind::Unresolvable { .. } => "unresolvable",
+            TraceKind::FailoverStranded { .. } => "failover-stranded",
+            TraceKind::FailoverRecovered { .. } => "failover-recovered",
+            TraceKind::FailoverDetached { .. } => "failover-detached",
+            TraceKind::ScaleApplied { .. } => "scale",
+            TraceKind::ScaleDeferred { .. } => "scale-deferred",
+            TraceKind::Preempted { .. } => "preempt",
+            TraceKind::MigrationPlanned { .. } => "migration-planned",
+            TraceKind::Migrated { .. } => "migrated",
+            TraceKind::JobQueued { .. } => "job-queued",
+            TraceKind::JobRejected { .. } => "job-rejected",
+            TraceKind::PlacementFailed { .. } => "placement-failed",
+            TraceKind::JobAdmittedFromQueue { .. } => "job-admitted",
+            TraceKind::JobSubmitted { .. } => "job-submitted",
+            TraceKind::QosSetupFailed { .. } => "qos-setup-failed",
+            TraceKind::JobCompleted { .. } => "job-complete",
+            TraceKind::JobCancelledEarly { .. } => "job-cancelled-early",
+            TraceKind::JobCancelled { .. } => "job-cancelled",
+            TraceKind::AdmissionRefreshed { .. } => "admission-refresh",
+            TraceKind::ConstraintViolated { .. } => "constraint-violated",
+        }
+    }
+
+    /// The legacy `action_log` line this record renders to, byte-for-
+    /// byte identical to the pre-journal `format!` at the original log
+    /// site.  `None` for journal-only records.  This is the derived-
+    /// rendering contract the fingerprint regression tests pin.
+    pub fn render(&self) -> Option<String> {
+        match self {
+            TraceKind::WorkerCrash { worker } => Some(format!("crash {worker}")),
+            TraceKind::BufferResize { channel, size, .. } => {
+                Some(format!("buffer {channel} -> {size}"))
+            }
+            TraceKind::ChainEstablished { members, .. } => {
+                let chained: Vec<String> = members.iter().map(|v| v.to_string()).collect();
+                Some(format!("chain {}", chained.join("+")))
+            }
+            TraceKind::Unresolvable { constraint, manager, job } => {
+                Some(format!("unresolvable c{constraint} from {manager} ({job})"))
+            }
+            TraceKind::FailoverStranded { worker, job } => {
+                Some(format!("failover {worker} {job}: no surviving workers"))
+            }
+            TraceKind::FailoverRecovered { worker, job, reassigned, replayed } => Some(
+                format!("failover {worker} {job}: reassigned {reassigned}, replayed {replayed}"),
+            ),
+            TraceKind::FailoverDetached { worker, job, detached } => {
+                Some(format!("failover {worker} {job}: detached {detached}"))
+            }
+            TraceKind::ScaleApplied { group, delta, members } => {
+                Some(format!("scale {group} {delta:+} -> {members}"))
+            }
+            TraceKind::ScaleDeferred { group } => {
+                Some(format!("scale {group} deferred (fair share)"))
+            }
+            TraceKind::Preempted { victim, group, requester } => {
+                Some(format!("preempt {victim} {group}: slot reclaimed for {requester}"))
+            }
+            TraceKind::MigrationPlanned { vertex, from, kind, to, job } => Some(format!(
+                "migrate {vertex} planned: {from} {kind}-saturated -> {to} ({job})"
+            )),
+            TraceKind::Migrated { vertex, group, from, to, job } => {
+                Some(format!("migrate {vertex} {group}: {from} -> {to} ({job})"))
+            }
+            TraceKind::JobQueued { job, name, decision } => {
+                Some(format!("job {job} ({name}) queued: {decision}"))
+            }
+            TraceKind::JobRejected { job, name, reason, from_queue } => Some(if *from_queue {
+                format!("job {job} ({name}) rejected from queue: {reason}")
+            } else {
+                format!("job {job} ({name}) rejected: {reason}")
+            }),
+            TraceKind::PlacementFailed { job, name, error } => {
+                Some(format!("job {job} ({name}) rejected: {error}"))
+            }
+            TraceKind::JobAdmittedFromQueue { job, name } => {
+                Some(format!("job {job} ({name}) admitted from queue"))
+            }
+            TraceKind::JobSubmitted { job, name, instances } => {
+                Some(format!("job {job} ({name}) submitted: {instances} instances"))
+            }
+            TraceKind::QosSetupFailed { job, error } => {
+                Some(format!("job {job}: qos setup failed: {error}"))
+            }
+            TraceKind::JobCompleted { job, sinks, ingested, lost } => Some(format!(
+                "job {job} complete: sinks {sinks} of {ingested} ingested, lost {lost}"
+            )),
+            TraceKind::JobCancelledEarly { job } => {
+                Some(format!("job {job} cancelled before admission"))
+            }
+            TraceKind::JobCancelled { job, lost } => {
+                Some(format!("job {job} cancelled: {lost} in-flight items lost"))
+            }
+            TraceKind::AdmissionRefreshed { .. } | TraceKind::ConstraintViolated { .. } => None,
+        }
+    }
+
+    /// The worker this record is attributed to, for the per-worker
+    /// Chrome trace tracks.  `None` means the master/coordinator track.
+    pub fn worker(&self) -> Option<WorkerId> {
+        match self {
+            TraceKind::WorkerCrash { worker }
+            | TraceKind::BufferResize { worker, .. }
+            | TraceKind::ChainEstablished { worker, .. }
+            | TraceKind::FailoverStranded { worker, .. }
+            | TraceKind::FailoverRecovered { worker, .. }
+            | TraceKind::FailoverDetached { worker, .. } => Some(*worker),
+            TraceKind::Unresolvable { manager, .. }
+            | TraceKind::ConstraintViolated { manager, .. } => Some(*manager),
+            TraceKind::MigrationPlanned { from, .. } | TraceKind::Migrated { from, .. } => {
+                Some(*from)
+            }
+            _ => None,
+        }
+    }
+
+    /// The job this record concerns, where one is identified.
+    pub fn job(&self) -> Option<JobId> {
+        match self {
+            TraceKind::Unresolvable { job, .. }
+            | TraceKind::FailoverStranded { job, .. }
+            | TraceKind::FailoverRecovered { job, .. }
+            | TraceKind::FailoverDetached { job, .. }
+            | TraceKind::MigrationPlanned { job, .. }
+            | TraceKind::Migrated { job, .. }
+            | TraceKind::JobQueued { job, .. }
+            | TraceKind::JobRejected { job, .. }
+            | TraceKind::PlacementFailed { job, .. }
+            | TraceKind::JobAdmittedFromQueue { job, .. }
+            | TraceKind::JobSubmitted { job, .. }
+            | TraceKind::QosSetupFailed { job, .. }
+            | TraceKind::JobCompleted { job, .. }
+            | TraceKind::JobCancelledEarly { job }
+            | TraceKind::JobCancelled { job, .. }
+            | TraceKind::AdmissionRefreshed { job }
+            | TraceKind::ConstraintViolated { job, .. } => Some(*job),
+            TraceKind::Preempted { victim, .. } => Some(*victim),
+            _ => None,
+        }
+    }
+
+    /// Kind-specific attributes in a fixed, kind-local order, for the
+    /// JSONL journal and the Chrome trace `args` object.
+    pub fn fields(&self) -> Vec<(&'static str, FieldVal)> {
+        match self {
+            TraceKind::WorkerCrash { worker } => vec![("worker", FieldVal::of(worker))],
+            TraceKind::BufferResize { worker, channel, size } => vec![
+                ("worker", FieldVal::of(worker)),
+                ("channel", FieldVal::of(channel)),
+                ("size", FieldVal::U64(*size as u64)),
+            ],
+            TraceKind::ChainEstablished { worker, members } => {
+                let chained: Vec<String> = members.iter().map(|v| v.to_string()).collect();
+                vec![
+                    ("worker", FieldVal::of(worker)),
+                    ("members", FieldVal::Str(chained.join("+"))),
+                ]
+            }
+            TraceKind::Unresolvable { constraint, manager, job } => vec![
+                ("constraint", FieldVal::U64(*constraint as u64)),
+                ("manager", FieldVal::of(manager)),
+                ("job", FieldVal::of(job)),
+            ],
+            TraceKind::FailoverStranded { worker, job } => {
+                vec![("worker", FieldVal::of(worker)), ("job", FieldVal::of(job))]
+            }
+            TraceKind::FailoverRecovered { worker, job, reassigned, replayed } => vec![
+                ("worker", FieldVal::of(worker)),
+                ("job", FieldVal::of(job)),
+                ("reassigned", FieldVal::U64(*reassigned)),
+                ("replayed", FieldVal::U64(*replayed)),
+            ],
+            TraceKind::FailoverDetached { worker, job, detached } => vec![
+                ("worker", FieldVal::of(worker)),
+                ("job", FieldVal::of(job)),
+                ("detached", FieldVal::U64(*detached)),
+            ],
+            TraceKind::ScaleApplied { group, delta, members } => vec![
+                ("group", FieldVal::of(group)),
+                ("delta", FieldVal::I64(*delta)),
+                ("members", FieldVal::U64(*members as u64)),
+            ],
+            TraceKind::ScaleDeferred { group } => vec![("group", FieldVal::of(group))],
+            TraceKind::Preempted { victim, group, requester } => vec![
+                ("victim", FieldVal::of(victim)),
+                ("group", FieldVal::of(group)),
+                ("requester", FieldVal::of(requester)),
+            ],
+            TraceKind::MigrationPlanned { vertex, from, kind, to, job } => vec![
+                ("vertex", FieldVal::of(vertex)),
+                ("from", FieldVal::of(from)),
+                ("kind", FieldVal::of(kind)),
+                ("to", FieldVal::of(to)),
+                ("job", FieldVal::of(job)),
+            ],
+            TraceKind::Migrated { vertex, group, from, to, job } => vec![
+                ("vertex", FieldVal::of(vertex)),
+                ("group", FieldVal::of(group)),
+                ("from", FieldVal::of(from)),
+                ("to", FieldVal::of(to)),
+                ("job", FieldVal::of(job)),
+            ],
+            TraceKind::JobQueued { job, name, decision } => vec![
+                ("job", FieldVal::of(job)),
+                ("name", FieldVal::Str(name.clone())),
+                ("decision", FieldVal::of(decision)),
+            ],
+            TraceKind::JobRejected { job, name, reason, from_queue } => vec![
+                ("job", FieldVal::of(job)),
+                ("name", FieldVal::Str(name.clone())),
+                ("reason", FieldVal::Str(reason.tag().to_string())),
+                ("from_queue", FieldVal::U64(*from_queue as u64)),
+            ],
+            TraceKind::PlacementFailed { job, name, error } => vec![
+                ("job", FieldVal::of(job)),
+                ("name", FieldVal::Str(name.clone())),
+                ("error", FieldVal::Str(error.clone())),
+            ],
+            TraceKind::JobAdmittedFromQueue { job, name } => vec![
+                ("job", FieldVal::of(job)),
+                ("name", FieldVal::Str(name.clone())),
+            ],
+            TraceKind::JobSubmitted { job, name, instances } => vec![
+                ("job", FieldVal::of(job)),
+                ("name", FieldVal::Str(name.clone())),
+                ("instances", FieldVal::U64(*instances as u64)),
+            ],
+            TraceKind::QosSetupFailed { job, error } => vec![
+                ("job", FieldVal::of(job)),
+                ("error", FieldVal::Str(error.clone())),
+            ],
+            TraceKind::JobCompleted { job, sinks, ingested, lost } => vec![
+                ("job", FieldVal::of(job)),
+                ("sinks", FieldVal::U64(*sinks)),
+                ("ingested", FieldVal::U64(*ingested)),
+                ("lost", FieldVal::U64(*lost)),
+            ],
+            TraceKind::JobCancelledEarly { job } => vec![("job", FieldVal::of(job))],
+            TraceKind::JobCancelled { job, lost } => {
+                vec![("job", FieldVal::of(job)), ("lost", FieldVal::U64(*lost))]
+            }
+            TraceKind::AdmissionRefreshed { job } => vec![("job", FieldVal::of(job))],
+            TraceKind::ConstraintViolated { job, manager, constraint, worst_us } => vec![
+                ("job", FieldVal::of(job)),
+                ("manager", FieldVal::of(manager)),
+                ("constraint", FieldVal::U64(*constraint as u64)),
+                ("worst_us", FieldVal::F64(*worst_us)),
+            ],
+        }
+    }
+}
+
+/// One appended decision record.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub id: TraceId,
+    /// Sim time of the decision (never wall clock).
+    pub at: Time,
+    /// The earlier record that triggered this one, if the emitter
+    /// threaded one through (e.g. the `ConstraintViolated` behind a
+    /// `BufferResize`, or the `Preempted` behind a `ScaleApplied`).
+    pub cause: Option<TraceId>,
+    pub kind: TraceKind,
+}
+
+/// Append-only decision journal.  Ids are dense indices, so a `cause`
+/// link always points strictly backwards — the consistency property
+/// test asserts exactly that.
+#[derive(Debug, Default, Clone)]
+pub struct Journal {
+    events: Vec<TraceEvent>,
+}
+
+impl Journal {
+    pub fn append(&mut self, at: Time, cause: Option<TraceId>, kind: TraceKind) -> TraceId {
+        let id = TraceId(self.events.len() as u32);
+        self.events.push(TraceEvent { id, at, cause, kind });
+        id
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Count of records with the given [`TraceKind::tag`].
+    pub fn count(&self, tag: &str) -> usize {
+        self.events.iter().filter(|e| e.kind.tag() == tag).count()
+    }
+
+    /// Re-render the legacy `action_log` from the journal alone: the
+    /// derived-rendering contract (each rendered line is prefixed with
+    /// the same `[{:>12.6}]` sim-time stamp `SimCluster` always used).
+    pub fn render_action_log(&self) -> Vec<String> {
+        self.events
+            .iter()
+            .filter_map(|e| {
+                e.kind
+                    .render()
+                    .map(|line| format!("[{:>12.6}] {line}", e.at.as_secs_f64()))
+            })
+            .collect()
+    }
+}

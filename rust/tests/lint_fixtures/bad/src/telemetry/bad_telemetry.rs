@@ -1,0 +1,7 @@
+//! Seeded determinism violation inside the telemetry scope: journal
+//! records must carry sim time only — a wall-clock stamp would change
+//! the journal digest between two same-seed replays.
+
+pub fn wallclock_stamp() -> u128 {
+    std::time::Instant::now().elapsed().as_micros()
+}

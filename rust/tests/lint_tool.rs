@@ -53,6 +53,9 @@ fn bad_fixture_produces_the_expected_rule_ids_and_lines() {
         ("src/sim/shard.rs", 7, rules::SHARD_LOCK),
         // ...and the unhandled poison result inside it.
         ("src/sim/shard.rs", 8, rules::SHARD_LOCK),
+        // Wall-clock read in the telemetry scope (journal digests are
+        // replay fingerprints, so the determinism rules apply there).
+        ("src/telemetry/bad_telemetry.rs", 6, rules::DET_WALLCLOCK),
     ];
     assert_eq!(got, want, "full report:\n{}", report.render_text());
 }

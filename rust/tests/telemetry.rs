@@ -1,0 +1,324 @@
+//! Telemetry-layer consistency tests (DESIGN.md §12).
+//!
+//! The typed decision journal is only trustworthy if three properties
+//! hold against the ground truth the simulator already maintains:
+//!
+//! 1. **Derived rendering** — the legacy `SimStats::action_log` must be
+//!    byte-for-byte reproducible from the journal alone
+//!    (`Journal::render_action_log`), so the committed replay
+//!    fingerprints and the typed records can never drift apart.
+//! 2. **Journal ↔ ledger** — for every decision kind that increments a
+//!    `SimStats` counter at its emission site, the journal tag count
+//!    must equal the counter.
+//! 3. **Determinism** — cause links resolve to strictly earlier
+//!    records, and the JSONL digest is identical across same-seed
+//!    replays and across shard counts (`--threads 1/2/4`), making the
+//!    digest a replay fingerprint in its own right.
+
+use nephele::config::EngineConfig;
+use nephele::experiments::multi::{
+    run_admission_phase, run_migration_phase, run_multi, run_preemption_phase,
+};
+use nephele::graph::ids::{ChannelId, JobId, JobVertexId, VertexId, WorkerId};
+use nephele::pipeline::failover::{failover_job, FailoverSpec};
+use nephele::pipeline::multi::MultiSpec;
+use nephele::pipeline::surge::{surge_job, SurgeSpec};
+use nephele::sched::PlacementPolicy;
+use nephele::sim::cluster::SimCluster;
+use nephele::telemetry::{journal_digest, Journal, TraceKind};
+use nephele::util::time::Duration;
+
+/// The elastic-scaling scenario at the horizon that provably reaches
+/// the scaling tier (see `tests/determinism.rs`), so the journal holds
+/// violations, buffer resizes, chains and scale actions.
+fn surge_cluster(seed: u64, secs: u64, threads: u32) -> SimCluster {
+    let sj = surge_job(SurgeSpec::default()).unwrap();
+    let cfg = EngineConfig { seed, threads, ..EngineConfig::default() }.with_scaling();
+    let mut cluster =
+        SimCluster::new(sj.job, sj.rg, &sj.constraints, sj.task_specs, sj.sources, cfg).unwrap();
+    cluster.run(Duration::from_secs(secs), None).unwrap();
+    cluster
+}
+
+/// The crash/recovery scenario, so the journal holds a `worker-crash`
+/// record and its caused failover record.
+fn failover_cluster(seed: u64, enable_recovery: bool, secs: u64, threads: u32) -> SimCluster {
+    let spec = FailoverSpec::default();
+    let fj = failover_job(spec).unwrap();
+    let mut cfg = EngineConfig { seed, threads, ..EngineConfig::default() };
+    cfg.recovery.enable_recovery = enable_recovery;
+    let mut cluster =
+        SimCluster::new(fj.job, fj.rg, &fj.constraints, fj.task_specs, fj.sources, cfg).unwrap();
+    cluster.schedule_failures(&[spec.failure()]);
+    cluster.run(Duration::from_secs(secs), None).unwrap();
+    cluster
+}
+
+/// Every cause link must point strictly backwards to a record that
+/// exists, and ids must be the dense append order.
+fn assert_causes_resolve(journal: &Journal, label: &str) {
+    for (i, e) in journal.events().iter().enumerate() {
+        assert_eq!(e.id.index(), i, "{label}: ids must be dense append order");
+        if let Some(c) = e.cause {
+            assert!(
+                c.index() < e.id.index(),
+                "{label}: cause {} of record {} must be strictly earlier",
+                c.index(),
+                e.id.index()
+            );
+            assert_eq!(
+                journal.events()[c.index()].id,
+                c,
+                "{label}: cause id must resolve to the record at its index"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_render_strings_match_the_legacy_log_lines() {
+    // The derived-rendering contract, pinned kind by kind: these are the
+    // exact `format!` strings the pre-journal log sites produced.
+    let cases: Vec<(TraceKind, &str)> = vec![
+        (TraceKind::WorkerCrash { worker: WorkerId(2) }, "crash w2"),
+        (
+            TraceKind::BufferResize { worker: WorkerId(1), channel: ChannelId(7), size: 16384 },
+            "buffer e7 -> 16384",
+        ),
+        (
+            TraceKind::ChainEstablished {
+                worker: WorkerId(0),
+                members: vec![VertexId(3), VertexId(4)],
+            },
+            "chain v3+v4",
+        ),
+        (
+            TraceKind::Unresolvable { constraint: 0, manager: WorkerId(1), job: JobId(0) },
+            "unresolvable c0 from w1 (j0)",
+        ),
+        (
+            TraceKind::FailoverRecovered {
+                worker: WorkerId(2),
+                job: JobId(0),
+                reassigned: 3,
+                replayed: 41,
+            },
+            "failover w2 j0: reassigned 3, replayed 41",
+        ),
+        (
+            TraceKind::FailoverDetached { worker: WorkerId(2), job: JobId(0), detached: 3 },
+            "failover w2 j0: detached 3",
+        ),
+        (
+            TraceKind::ScaleApplied { group: JobVertexId(5), delta: 2, members: 6 },
+            "scale jv5 +2 -> 6",
+        ),
+        (
+            TraceKind::ScaleApplied { group: JobVertexId(5), delta: -1, members: 3 },
+            "scale jv5 -1 -> 3",
+        ),
+        (
+            TraceKind::Preempted {
+                victim: JobId(3),
+                group: JobVertexId(2),
+                requester: JobId(1),
+            },
+            "preempt j3 jv2: slot reclaimed for j1",
+        ),
+        (
+            TraceKind::Migrated {
+                vertex: VertexId(4),
+                group: JobVertexId(1),
+                from: WorkerId(0),
+                to: WorkerId(3),
+                job: JobId(2),
+            },
+            "migrate v4 jv1: w0 -> w3 (j2)",
+        ),
+        (
+            TraceKind::JobCompleted { job: JobId(0), sinks: 10, ingested: 12, lost: 2 },
+            "job j0 complete: sinks 10 of 12 ingested, lost 2",
+        ),
+        (TraceKind::JobCancelledEarly { job: JobId(1) }, "job j1 cancelled before admission"),
+    ];
+    for (kind, want) in cases {
+        assert_eq!(kind.render().as_deref(), Some(want), "render of {:?}", kind.tag());
+    }
+    // Journal-only records must render to nothing — they had no legacy
+    // log line, and inventing one would change committed fingerprints.
+    assert_eq!(TraceKind::AdmissionRefreshed { job: JobId(0) }.render(), None);
+    assert_eq!(
+        TraceKind::ConstraintViolated {
+            job: JobId(0),
+            manager: WorkerId(1),
+            constraint: 0,
+            worst_us: 125_000.0,
+        }
+        .render(),
+        None
+    );
+}
+
+#[test]
+fn action_log_is_a_derived_rendering_of_the_journal() {
+    let surge = surge_cluster(42, 360, 1);
+    assert!(!surge.stats.action_log.is_empty(), "surge must log actions");
+    assert_eq!(
+        surge.stats.action_log,
+        surge.stats.journal.render_action_log(),
+        "surge action_log must be reproducible from the journal alone"
+    );
+    for enable_recovery in [true, false] {
+        let fo = failover_cluster(42, enable_recovery, 420, 1);
+        assert!(!fo.stats.action_log.is_empty(), "failover must log actions");
+        assert_eq!(
+            fo.stats.action_log,
+            fo.stats.journal.render_action_log(),
+            "failover action_log must be reproducible (recovery={enable_recovery})"
+        );
+    }
+    // The multi-job scheduler path: the committed fingerprint embeds the
+    // action log verbatim after its "log:" header, so the journal
+    // rendering must reproduce that tail byte-for-byte.
+    let cfg = EngineConfig { seed: 42, ..EngineConfig::default() };
+    let report = run_multi(MultiSpec::tiny(), cfg, PlacementPolicy::Spread, false).unwrap();
+    let tail = format!("log:\n{}", report.telemetry.journal.render_action_log().join("\n"));
+    assert!(
+        report.fingerprint.ends_with(&tail),
+        "multi fingerprint log tail must match the journal rendering"
+    );
+}
+
+#[test]
+fn journal_tag_counts_match_the_ledger() {
+    // Every decision kind whose emission site also increments a
+    // `SimStats` counter: tag count == counter, exactly.
+    let surge = surge_cluster(42, 360, 1);
+    let s = &surge.stats;
+    assert_eq!(s.journal.count("buffer-resize") as u64, s.buffer_size_updates);
+    assert_eq!(s.journal.count("chain") as u64, s.chains_established);
+    assert_eq!(s.journal.count("unresolvable") as u64, s.unresolvable_notices);
+    assert_eq!(s.journal.count("worker-crash") as u64, s.workers_crashed);
+    assert_eq!(s.journal.count("preempt") as u64, s.preemptions);
+    assert_eq!(s.journal.count("migrated") as u64, s.migrations);
+    assert_eq!(s.journal.count("job-queued") as u64, s.jobs_queued);
+    assert_eq!(s.journal.count("admission-refresh") as u64, s.admission_refreshes);
+    assert!(s.buffer_size_updates > 0, "surge must exercise buffer resizes");
+
+    let fo = failover_cluster(42, true, 420, 1);
+    let f = &fo.stats;
+    assert_eq!(f.journal.count("worker-crash") as u64, f.workers_crashed);
+    assert_eq!(
+        (f.journal.count("failover-recovered")
+            + f.journal.count("failover-detached")
+            + f.journal.count("failover-stranded")) as u64,
+        f.failovers,
+        "one failover record per recovered job"
+    );
+    assert_eq!(f.workers_crashed, 1, "the injected crash must land");
+    assert!(f.failovers > 0, "detection must run the recovery policy");
+
+    // Governance phases guarantee their counters internally (they bail
+    // otherwise), so tag presence pins the journal saw the same events.
+    let cfg = |seed| EngineConfig { seed, ..EngineConfig::default() };
+    let adm = run_admission_phase(cfg(42), PlacementPolicy::Spread).unwrap();
+    assert_eq!(adm.telemetry.journal.count("job-queued"), 1, "one queued admission verdict");
+    assert!(adm.telemetry.journal.count("job-admitted") >= 1, "queued job must be admitted");
+    let pre = run_preemption_phase(cfg(42), 1.1).unwrap();
+    assert_eq!(pre.telemetry.journal.count("preempt"), 1, "exactly one preemption");
+    let mig = run_migration_phase(cfg(42), 1.1).unwrap();
+    assert!(mig.telemetry.journal.count("migration-planned") >= 1);
+    assert!(mig.telemetry.journal.count("migrated") >= 1);
+    assert!(
+        mig.telemetry.journal.count("migration-planned")
+            >= mig.telemetry.journal.count("migrated"),
+        "every enacted migration was planned first"
+    );
+    assert!(mig.telemetry.journal.count("admission-refresh") >= 1);
+}
+
+#[test]
+fn cause_links_resolve_to_strictly_earlier_events() {
+    let fo = failover_cluster(42, true, 420, 1);
+    assert_causes_resolve(&fo.stats.journal, "failover");
+    assert!(
+        fo.stats.journal.events().iter().any(|e| e.cause.is_some()),
+        "the failover record must cite the crash that triggered it"
+    );
+    // The crash → failover chain specifically: the recovery record's
+    // cause must be the worker-crash record for the same worker.
+    let crash = fo
+        .stats
+        .journal
+        .events()
+        .iter()
+        .find(|e| e.kind.tag() == "worker-crash")
+        .expect("crash record present");
+    let recovered = fo
+        .stats
+        .journal
+        .events()
+        .iter()
+        .find(|e| e.kind.tag() == "failover-recovered")
+        .expect("recovery record present");
+    assert_eq!(
+        recovered.cause,
+        Some(crash.id),
+        "recovery must cite the crash as its cause"
+    );
+
+    let surge = surge_cluster(42, 360, 1);
+    assert_causes_resolve(&surge.stats.journal, "surge");
+    assert!(
+        surge.stats.journal.events().iter().any(|e| e.cause.is_some()),
+        "countermeasures must cite the violation that triggered them"
+    );
+
+    let cfg = |seed| EngineConfig { seed, ..EngineConfig::default() };
+    assert_causes_resolve(
+        &run_migration_phase(cfg(42), 1.1).unwrap().telemetry.journal,
+        "migration phase",
+    );
+    assert_causes_resolve(
+        &run_preemption_phase(cfg(42), 1.1).unwrap().telemetry.journal,
+        "preemption phase",
+    );
+    let report =
+        run_multi(MultiSpec::tiny(), cfg(42), PlacementPolicy::Spread, false).unwrap();
+    assert_causes_resolve(&report.telemetry.journal, "multi");
+}
+
+/// The JSONL digest is a replay fingerprint: identical across same-seed
+/// replays and across shard counts, sensitive to the seed.
+#[test]
+fn journal_digest_is_identical_across_replays_and_shard_counts() {
+    let multi_digest = |seed, threads| {
+        let cfg = EngineConfig { seed, threads, ..EngineConfig::default() };
+        run_multi(MultiSpec::tiny(), cfg, PlacementPolicy::Spread, false)
+            .unwrap()
+            .telemetry
+            .journal_digest
+    };
+    let serial = multi_digest(42, 1);
+    assert!(serial.starts_with("fnv1a:"), "digest format: {serial}");
+    assert_eq!(serial, multi_digest(42, 1), "same seed must replay the same journal");
+    for threads in [2u32, 4] {
+        assert_eq!(
+            serial,
+            multi_digest(42, threads),
+            "journal diverged from the serial oracle at {threads} shards"
+        );
+    }
+    assert_ne!(serial, multi_digest(7, 1), "a different seed must shift the journal");
+
+    let surge_digest =
+        |seed, threads| journal_digest(&surge_cluster(seed, 120, threads).stats.journal);
+    let surge_serial = surge_digest(42, 1);
+    for threads in [2u32, 4] {
+        assert_eq!(
+            surge_serial,
+            surge_digest(42, threads),
+            "surge journal diverged from the serial oracle at {threads} shards"
+        );
+    }
+}

@@ -15,10 +15,14 @@ deliberately loose — CI runners vary a lot — but it fails when:
   * a baseline entry is missing from the current run (a silently
     dropped benchmark is a masked regression, not a pass),
   * the headline ``event_core_speedup`` falls below 2.0x (the ROADMAP
-    perf target is >=3x; 2.0 leaves room for runner noise), or
+    perf target is >=3x; 2.0 leaves room for runner noise),
   * ``sharded_core_speedup`` falls below 2.0x while the current run
     reports >= 4 cores (the full-bench target is >=4x on >=8 cores;
-    2.0 is the quick/CI floor).
+    2.0 is the quick/CI floor), or
+  * ``telemetry_overhead_pct`` exceeds 5% (metrics sampling must stay
+    effectively free on the hot simulation path; the bench takes the
+    min of two runs per arm, so this headroom is for real overhead,
+    not runner noise).
 
 A baseline whose ``provenance`` is ``estimated`` (hand-written numbers,
 never produced by a real run) is called out with a warning: refresh it
@@ -40,6 +44,7 @@ REGRESSION_RATIO = 0.30
 MIN_SPEEDUP = 2.0
 MIN_SHARDED_SPEEDUP = 2.0
 SHARDED_GATE_MIN_CORES = 4
+MAX_TELEMETRY_OVERHEAD_PCT = 5.0
 
 
 def normalise(name):
@@ -118,6 +123,18 @@ def diff(baseline, current):
                 f"sharded_core_speedup {sharded:.2f}x fell below the "
                 f"{MIN_SHARDED_SPEEDUP}x floor on {cores:.0f} cores"
             )
+
+    overhead = current.get("telemetry_overhead_pct")
+    print(
+        f"telemetry_overhead_pct: baseline {baseline.get('telemetry_overhead_pct')}, "
+        f"current {overhead}"
+    )
+    if overhead is not None and overhead > MAX_TELEMETRY_OVERHEAD_PCT:
+        failures.append(
+            f"telemetry_overhead_pct {overhead:.2f}% exceeds the "
+            f"{MAX_TELEMETRY_OVERHEAD_PCT}% ceiling (metrics sampling must stay "
+            f"effectively free)"
+        )
 
     return failures, warnings
 
@@ -236,6 +253,18 @@ def selftest():
     base = _with(FIX_BASE, provenance="estimated")
     f, w = diff(base, FIX_BASE)
     checks.append(("estimated baseline warns", not f and any("estimated" in m for m in w)))
+
+    # 7. The telemetry-overhead gate: over the ceiling fails, under (or
+    # negative, i.e. noise made the off arm slower) passes, absent stays
+    # non-fatal for older reports.
+    cur = _with(FIX_BASE, telemetry_overhead_pct=9.5)
+    f, _ = diff(FIX_BASE, cur)
+    checks.append(("telemetry overhead over 5% fails", any("telemetry" in m for m in f)))
+    cur = _with(FIX_BASE, telemetry_overhead_pct=-1.3)
+    f, _ = diff(FIX_BASE, cur)
+    checks.append(("negative telemetry overhead passes", not f))
+    f, _ = diff(FIX_BASE, FIX_BASE)
+    checks.append(("absent telemetry overhead is non-fatal", not f))
 
     print()
     bad = 0

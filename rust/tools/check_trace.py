@@ -1,0 +1,214 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file written by ``--trace-out``.
+
+Usage: check_trace.py TRACE.json
+
+The exporter (``src/telemetry/export.rs``) promises a deterministic,
+Perfetto-loadable byte stream; this checker makes that promise a CI
+gate instead of a claim.  It fails (exit 1) when:
+
+  * the file is not valid JSON, or lacks the ``displayTimeUnit`` /
+    ``traceEvents`` wrapper keys;
+  * any event is missing the Chrome keys required for its phase
+    (``name``/``ph``/``pid``/``tid`` everywhere, ``ts`` on instants and
+    flows, ``s`` on instants, ``id`` on flows, ``args`` on metadata and
+    instants);
+  * instant-event (``ph:"i"``) timestamps are not monotone
+    non-decreasing in array order per ``(pid, tid)`` track — the
+    journal appends in sim-time order, so any inversion means the
+    exporter reordered records;
+  * an ``args.cause`` id does not resolve to an instant event emitted
+    *earlier in the array* within the same process — cause links must
+    point strictly backwards;
+  * flow arrows are unpaired (a ``ph:"s"`` start without its ``ph:"f"``
+    finish or vice versa), or a finish precedes its start in array
+    order.
+
+Stdlib only — no third-party dependencies.
+"""
+
+import json
+import sys
+
+REQUIRED_ALWAYS = ("name", "ph", "pid", "tid")
+
+
+def check(trace):
+    """Return a list of human-readable failure messages (empty = pass)."""
+    failures = []
+
+    for key in ("displayTimeUnit", "traceEvents"):
+        if key not in trace:
+            failures.append(f"wrapper key {key!r} missing")
+    events = trace.get("traceEvents", [])
+    if not isinstance(events, list) or not events:
+        failures.append("traceEvents must be a non-empty array")
+        return failures
+
+    # (pid, tid) -> last instant ts seen, for monotonicity.
+    last_ts = {}
+    # pid -> set of trace ids whose instant event has already appeared.
+    seen_traces = {}
+    # flow id -> phases seen, in array order.
+    flows = {}
+    counts = {"M": 0, "i": 0, "s": 0, "f": 0}
+
+    for i, e in enumerate(events):
+        where = f"event[{i}]"
+        missing = [k for k in REQUIRED_ALWAYS if k not in e]
+        if missing:
+            failures.append(f"{where}: missing keys {missing}")
+            continue
+        ph = e["ph"]
+        counts[ph] = counts.get(ph, 0) + 1
+        where = f"event[{i}] ({e['name']!r} ph={ph})"
+
+        if ph == "M":
+            if "args" not in e or "name" not in e.get("args", {}):
+                failures.append(f"{where}: metadata needs args.name")
+            continue
+
+        if ph in ("i", "s", "f") and "ts" not in e:
+            failures.append(f"{where}: missing ts")
+            continue
+
+        if ph == "i":
+            if e.get("s") not in ("t", "p", "g"):
+                failures.append(f"{where}: instant scope s={e.get('s')!r}")
+            args = e.get("args")
+            if not isinstance(args, dict) or "trace" not in args:
+                failures.append(f"{where}: instant needs args.trace")
+                continue
+            track = (e["pid"], e["tid"])
+            prev = last_ts.get(track)
+            if prev is not None and e["ts"] < prev:
+                failures.append(
+                    f"{where}: ts {e['ts']} < {prev} on track pid={track[0]} "
+                    f"tid={track[1]} (per-track timestamps must be monotone)"
+                )
+            last_ts[track] = e["ts"]
+            seen = seen_traces.setdefault(e["pid"], set())
+            cause = args.get("cause")
+            if cause is not None and cause not in seen:
+                failures.append(
+                    f"{where}: args.cause {cause} does not resolve to an "
+                    f"earlier instant in process {e['pid']}"
+                )
+            seen.add(args["trace"])
+        elif ph in ("s", "f"):
+            if "id" not in e:
+                failures.append(f"{where}: flow needs id")
+                continue
+            flows.setdefault(e["id"], []).append(ph)
+        else:
+            failures.append(f"{where}: unexpected phase {ph!r}")
+
+    for fid, phases in sorted(flows.items()):
+        if phases != ["s", "f"]:
+            failures.append(
+                f"flow id {fid}: expected one start then one finish, saw {phases}"
+            )
+
+    if counts.get("i", 0) == 0:
+        failures.append("no instant events: an empty trace is a masked failure")
+    if counts.get("M", 0) == 0:
+        failures.append("no process_name metadata events")
+
+    print(
+        f"traceEvents: {len(events)} "
+        f"(metadata {counts.get('M', 0)}, instants {counts.get('i', 0)}, "
+        f"flow starts {counts.get('s', 0)}, flow finishes {counts.get('f', 0)}, "
+        f"tracks {len(last_ts)}, processes {len(seen_traces)})"
+    )
+    return failures
+
+
+def main(path):
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: {path}: {e}")
+        return 1
+    failures = check(trace)
+    if failures:
+        print(f"\nFAIL: {path}")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print(f"OK: {path} is a well-formed deterministic trace")
+    return 0
+
+
+# --- self-test fixtures --------------------------------------------------
+
+
+def _instant(pid, tid, ts, trace_id, cause=None):
+    args = {"trace": trace_id}
+    if cause is not None:
+        args["cause"] = cause
+    return {
+        "name": "worker-crash",
+        "cat": "decision",
+        "ph": "i",
+        "s": "t",
+        "pid": pid,
+        "tid": tid,
+        "ts": ts,
+        "args": args,
+    }
+
+
+FIX_GOOD = {
+    "displayTimeUnit": "ms",
+    "traceEvents": [
+        {"name": "process_name", "ph": "M", "pid": 0, "tid": 0, "args": {"name": "t"}},
+        _instant(0, 3, 1000, 0),
+        {"name": "cause", "cat": "cause", "ph": "s", "id": 7, "pid": 0, "tid": 3, "ts": 1000},
+        _instant(0, 3, 2000, 1, cause=0),
+        {"name": "cause", "cat": "cause", "ph": "f", "bp": "e", "id": 7, "pid": 0, "tid": 3, "ts": 2000},
+    ],
+}
+
+
+def selftest():
+    import copy
+
+    checks = []
+    checks.append(("well-formed trace passes", not check(copy.deepcopy(FIX_GOOD))))
+
+    bad = copy.deepcopy(FIX_GOOD)
+    bad["traceEvents"][3]["ts"] = 500
+    checks.append(
+        ("timestamp inversion fails", any("monotone" in m for m in check(bad)))
+    )
+
+    bad = copy.deepcopy(FIX_GOOD)
+    bad["traceEvents"][3]["args"]["cause"] = 99
+    checks.append(
+        ("dangling cause fails", any("resolve" in m for m in check(bad)))
+    )
+
+    bad = copy.deepcopy(FIX_GOOD)
+    del bad["traceEvents"][4]
+    checks.append(("unpaired flow fails", any("flow id" in m for m in check(bad))))
+
+    bad = copy.deepcopy(FIX_GOOD)
+    del bad["displayTimeUnit"]
+    checks.append(("missing wrapper key fails", any("wrapper" in m for m in check(bad))))
+
+    print()
+    nbad = 0
+    for name, ok in checks:
+        print(f"  {'ok' if ok else 'FAIL'}: {name}")
+        nbad += 0 if ok else 1
+    return 1 if nbad else 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) == 2 and sys.argv[1] == "--selftest":
+        sys.exit(selftest())
+    if len(sys.argv) != 2:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1]))
