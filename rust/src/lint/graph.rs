@@ -1,0 +1,708 @@
+//! The symbol/call-graph layer under the flow-aware lint rules.
+//!
+//! A dependency-free second pass over the masked source (the same
+//! masked lines the lexical rules scan): per-file item extraction —
+//! `fn` definitions with their `impl` qualifier, call sites, lock
+//! acquisitions, panic sites, decision-counter mutations and enum
+//! `match` blocks — followed by a crate-wide name-resolution pass with
+//! deterministic `BTreeMap` ordering.
+//!
+//! Resolution is *name-based*, not type-based (the offline build forbids
+//! `syn`), and deliberately conservative in both directions:
+//!
+//! * a dot call `.f()` resolves to **every** impl method named `f` in
+//!   the crate (over-approximation: unrelated receivers merge),
+//! * a qualified call `T::f()` resolves to the impl methods of `T`
+//!   (with `Self` mapped to the enclosing impl target) and otherwise
+//!   falls back to *free* functions named `f` — never to other types'
+//!   methods, so `HashMap::new()` does not alias every `new` in the
+//!   crate (under-approximation: unresolved externals vanish),
+//! * a bare call `f()` resolves to free functions named `f` only.
+//!
+//! Known false-negative classes (documented in DESIGN.md §13): calls
+//! through function pointers/closures passed as values, trait-object
+//! dynamic dispatch, macro-generated code, and `use`-renamed imports.
+//! Closure *bodies* are attributed to their enclosing `fn`, so panics
+//! and locks inside them are still seen.
+
+use super::SourceFile;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Panicking macros, counted as panic sites alongside `.unwrap()`,
+/// `.expect(` and slice/array indexing.
+pub const PANIC_MACROS: [&str; 4] = ["panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+/// `SimStats` / `JobLedger` fields that record a control-plane
+/// *decision* (as opposed to data-path flow counters): every `+=`/`-=`
+/// on one of these must be journaled, or replay cannot reconstruct the
+/// trajectory.  Kept sorted so reports are stable.
+pub const DECISION_COUNTERS: [&str; 22] = [
+    "admission_refreshes",
+    "buffer_size_updates",
+    "chains_established",
+    "elastic_deferred",
+    "failovers",
+    "instances_detached",
+    "instances_reassigned",
+    "jobs_cancelled",
+    "jobs_completed",
+    "jobs_queued",
+    "jobs_rejected",
+    "jobs_submitted",
+    "migrations",
+    "preemptions",
+    "qos_rebuilds",
+    "scale_downs",
+    "scale_ups",
+    "scaling_rejected",
+    "slots_preempted",
+    "unresolvable",
+    "unresolvable_notices",
+    "workers_crashed",
+];
+
+/// Functions whose call marks the caller as journaling a `TraceKind`
+/// (plus a literal `journal.append(` on the line).
+pub const RECORD_FNS: [&str; 2] = ["trace", "trace_caused"];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallKind {
+    /// `f(...)` — resolves to free functions named `f`.
+    Bare,
+    /// `.f(...)` — resolves to every impl method named `f`.
+    Dot,
+    /// `Q::f(...)` — resolves to `Q`'s methods, else free `f`.
+    Qual,
+}
+
+#[derive(Debug, Clone)]
+pub struct Call {
+    pub kind: CallKind,
+    /// The `Q` of a qualified call.
+    pub qual: Option<String>,
+    pub name: String,
+    /// 0-based line of the call site.
+    pub line: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct LockSite {
+    /// 0-based line of the `.lock()` call.
+    pub line: usize,
+    /// Receiver identifier (`shards` in `self.shards[i].lock()`).
+    pub name: String,
+    /// `let`-bound guards are held to the end of the function;
+    /// temporaries only to the end of their statement.
+    pub guard: bool,
+}
+
+/// One extracted `fn` item with everything the flow rules consult.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    /// Index into the scanned-files slice (files are path-sorted).
+    pub file: usize,
+    /// Bare name (`handle`).
+    pub name: String,
+    /// Enclosing `impl` target (`SimCluster`), if any.
+    pub qual: Option<String>,
+    /// 0-based line of the `fn` keyword.
+    pub line: usize,
+    pub calls: Vec<Call>,
+    /// Panic sites: `(0-based line, token)`.
+    pub panics: Vec<(usize, &'static str)>,
+    pub locks: Vec<LockSite>,
+    /// Decision-counter mutations: `(0-based line, counter)`.
+    pub mutations: Vec<(usize, &'static str)>,
+    /// A literal `journal.append(` appears in the body.
+    pub has_record: bool,
+}
+
+impl FnItem {
+    /// `SimCluster::handle` or `run_parallel`.
+    pub fn key(&self) -> String {
+        match &self.qual {
+            Some(q) => format!("{q}::{}", self.name),
+            None => self.name.clone(),
+        }
+    }
+}
+
+/// One `match` block whose arms sit at the block's own depth.
+#[derive(Debug, Clone)]
+pub struct MatchBlock {
+    /// Arm lines: `(0-based line, pattern text before =>)`.
+    pub arms: Vec<(usize, String)>,
+}
+
+/// Per-file extraction result.
+#[derive(Debug, Clone, Default)]
+pub struct FileGraph {
+    pub fns: Vec<FnItem>,
+    pub matches: Vec<MatchBlock>,
+}
+
+fn is_ident_char(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+fn ident_ending_at(line: &str, end: usize) -> Option<&str> {
+    let b = line.as_bytes();
+    let mut start = end;
+    while start > 0 && is_ident_char(b[start - 1]) {
+        start -= 1;
+    }
+    if start == end || b[start].is_ascii_digit() {
+        None
+    } else {
+        Some(&line[start..end])
+    }
+}
+
+fn match_positions(line: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = line[from..].find(needle) {
+        out.push(from + p);
+        from += p + needle.len();
+    }
+    out
+}
+
+/// Skip a leading `<...>` generics group, depth-counted; the `>` of a
+/// `->` is not a closer.
+fn strip_generics(s: &str) -> &str {
+    if !s.starts_with('<') {
+        return s;
+    }
+    let b = s.as_bytes();
+    let mut depth = 0i32;
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'<' {
+            depth += 1;
+        } else if b[i] == b'>' && (i == 0 || b[i - 1] != b'-') {
+            depth -= 1;
+            if depth == 0 {
+                return &s[i + 1..];
+            }
+        }
+        i += 1;
+    }
+    ""
+}
+
+/// `impl<E> Default for EventCore<E> {` → `EventCore`: the last path
+/// segment of the type after `for` (or of the inherent-impl type).
+fn impl_target(trimmed: &str) -> Option<String> {
+    let rest = trimmed.strip_prefix("impl")?;
+    let rest = strip_generics(rest.trim_start()).trim_start();
+    let rest = match rest.find(" for ") {
+        Some(p) => rest[p + 5..].trim_start(),
+        None => rest,
+    };
+    let mut segs: Vec<String> = vec![String::new()];
+    for &c in rest.as_bytes() {
+        if is_ident_char(c) {
+            segs.last_mut().expect("segs is never empty").push(c as char);
+        } else if c == b':' {
+            if !segs.last().expect("segs is never empty").is_empty() {
+                segs.push(String::new());
+            }
+        } else {
+            break;
+        }
+    }
+    let name = match segs.last() {
+        Some(last) if !last.is_empty() => last.clone(),
+        _ if segs.len() > 1 => segs[segs.len() - 2].clone(),
+        _ => String::new(),
+    };
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// The name a `fn` keyword on this line declares, if any.
+fn fn_def_on(line: &str) -> Option<String> {
+    let b = line.as_bytes();
+    for pos in match_positions(line, "fn ") {
+        if pos > 0 && is_ident_char(b[pos - 1]) {
+            continue;
+        }
+        let mut j = pos + 3;
+        while j < b.len() && b[j] == b' ' {
+            j += 1;
+        }
+        let start = j;
+        while j < b.len() && is_ident_char(b[j]) {
+            j += 1;
+        }
+        if j == start {
+            continue;
+        }
+        if j < b.len() && (b[j] == b'(' || b[j] == b'<') {
+            return Some(line[start..j].to_string());
+        }
+    }
+    None
+}
+
+/// Receiver identifier of `X.lock()`: walks back over one or more
+/// `[...]`/`(...)` groups (`self.inboxes[peer].lock()` → `inboxes`).
+fn lock_name_before(line: &str, pos: usize) -> Option<&str> {
+    let b = line.as_bytes();
+    let mut i = pos;
+    while i > 0 && (b[i - 1] == b')' || b[i - 1] == b']') {
+        let close = b[i - 1];
+        let opener = if close == b')' { b'(' } else { b'[' };
+        let mut d = 0i32;
+        let mut j = i as i64 - 1;
+        while j >= 0 {
+            let c = b[j as usize];
+            if c == close {
+                d += 1;
+            } else if c == opener {
+                d -= 1;
+                if d == 0 {
+                    break;
+                }
+            }
+            j -= 1;
+        }
+        if j < 0 {
+            return None;
+        }
+        i = j as usize;
+    }
+    ident_ending_at(line, i)
+}
+
+/// Count of panic-site tokens on one masked line (used both for
+/// extraction and for deciding whether a `PANIC-REACH` suppression
+/// suppresses anything).
+pub fn panic_tokens_on(line: &str) -> Vec<&'static str> {
+    let mut out = Vec::new();
+    for tok in [".unwrap()", ".expect("] {
+        for _ in match_positions(line, tok) {
+            out.push(tok);
+        }
+    }
+    for tok in PANIC_MACROS {
+        for _ in match_positions(line, tok) {
+            out.push(tok);
+        }
+    }
+    let b = line.as_bytes();
+    for pos in match_positions(line, "[") {
+        if pos > 0 && (is_ident_char(b[pos - 1]) || b[pos - 1] == b')' || b[pos - 1] == b']') {
+            out.push("indexing");
+        }
+    }
+    out
+}
+
+/// Extract the item graph of one parsed file.  Test regions are
+/// excluded wholesale: the graph serves production-path rules.
+pub fn extract(file_idx: usize, src: &SourceFile) -> FileGraph {
+    let mut g = FileGraph::default();
+    let mut depth = 0i64;
+    // (target, close_depth): the impl closes when its `}` is reached.
+    let mut impl_stack: Vec<(String, i64)> = Vec::new();
+    // (fn index, body_depth).
+    let mut fn_stack: Vec<(usize, i64)> = Vec::new();
+    let mut pending_fn: Option<usize> = None;
+    let mut pending_impl: Option<String> = None;
+    let mut pending_match = false;
+    // (body_depth, arms).
+    let mut match_stack: Vec<(i64, Vec<(usize, String)>)> = Vec::new();
+    for (idx, line) in src.masked.iter().enumerate() {
+        if src.in_test_region(idx) {
+            break;
+        }
+        let trimmed = line.trim_start();
+        if trimmed.starts_with("impl")
+            && !trimmed.as_bytes().get(4).copied().is_some_and(is_ident_char)
+        {
+            if let Some(t) = impl_target(trimmed) {
+                pending_impl = Some(t);
+            }
+        }
+        if let Some(name) = fn_def_on(line) {
+            let qual = if fn_stack.is_empty() {
+                impl_stack.last().map(|(t, _)| t.clone())
+            } else {
+                None
+            };
+            g.fns.push(FnItem {
+                file: file_idx,
+                name,
+                qual,
+                line: idx,
+                calls: Vec::new(),
+                panics: Vec::new(),
+                locks: Vec::new(),
+                mutations: Vec::new(),
+                has_record: false,
+            });
+            pending_fn = Some(g.fns.len() - 1);
+        }
+        let owner = pending_fn.or_else(|| fn_stack.last().map(|&(i, _)| i));
+        for pos in match_positions(line, "match ") {
+            if pos > 0 && is_ident_char(line.as_bytes()[pos - 1]) {
+                continue;
+            }
+            pending_match = true;
+            break;
+        }
+        if let Some((body_depth, arms)) = match_stack.last_mut() {
+            if depth == *body_depth && line.contains("=>") {
+                let pat = line.split("=>").next().unwrap_or("").trim().to_string();
+                arms.push((idx, pat));
+            }
+        }
+        for &c in line.as_bytes() {
+            match c {
+                b'{' => {
+                    depth += 1;
+                    if pending_match {
+                        match_stack.push((depth, Vec::new()));
+                        pending_match = false;
+                    } else if let Some(f) = pending_fn.take() {
+                        fn_stack.push((f, depth));
+                    } else if let Some(t) = pending_impl.take() {
+                        impl_stack.push((t, depth));
+                    }
+                }
+                b'}' => {
+                    while match_stack.last().is_some_and(|&(d, _)| d == depth) {
+                        let (_, arms) = match_stack.pop().expect("checked non-empty");
+                        g.matches.push(MatchBlock { arms });
+                    }
+                    if fn_stack.last().is_some_and(|&(_, d)| d == depth) {
+                        fn_stack.pop();
+                    }
+                    if impl_stack.last().is_some_and(|&(_, d)| d == depth) {
+                        impl_stack.pop();
+                    }
+                    depth -= 1;
+                }
+                b';' => {
+                    // A bodiless declaration (trait method, extern fn)
+                    // or a statement ending a pending match scrutinee.
+                    pending_fn = None;
+                    pending_match = false;
+                }
+                _ => {}
+            }
+        }
+        if let Some(owner) = owner {
+            scan_line(src, idx, line, &mut g.fns[owner]);
+        }
+    }
+    g
+}
+
+/// Collect the per-line artifacts of `line` into its owning `fn`.
+fn scan_line(src: &SourceFile, idx: usize, line: &str, f: &mut FnItem) {
+    let b = line.as_bytes();
+    // -- calls ----------------------------------------------------
+    for pos in match_positions(line, "(") {
+        let Some(name) = ident_ending_at(line, pos) else { continue };
+        let start = pos - name.len();
+        if start >= 3 && &line[start - 3..start] == "fn " {
+            continue; // a definition, not a call
+        }
+        let prev = if start > 0 { b[start - 1] } else { 0 };
+        if prev == b'.' {
+            f.calls.push(Call {
+                kind: CallKind::Dot,
+                qual: None,
+                name: name.to_string(),
+                line: idx,
+            });
+        } else if prev == b':' && start >= 2 && b[start - 2] == b':' {
+            if let Some(q) = ident_ending_at(line, start - 2) {
+                f.calls.push(Call {
+                    kind: CallKind::Qual,
+                    qual: Some(q.to_string()),
+                    name: name.to_string(),
+                    line: idx,
+                });
+            }
+        } else {
+            f.calls.push(Call {
+                kind: CallKind::Bare,
+                qual: None,
+                name: name.to_string(),
+                line: idx,
+            });
+        }
+    }
+    // -- journal record sites -------------------------------------
+    if line.contains("journal.append(") {
+        f.has_record = true;
+    }
+    // -- panic sites ----------------------------------------------
+    if !src.suppressed(idx, "PANIC-REACH") {
+        for tok in panic_tokens_on(line) {
+            f.panics.push((idx, tok));
+        }
+    }
+    // -- lock sites -----------------------------------------------
+    for pos in match_positions(line, ".lock()") {
+        if let Some(name) = lock_name_before(line, pos) {
+            let guard = line[..pos].contains("let ");
+            f.locks.push(LockSite { line: idx, name: name.to_string(), guard });
+        }
+    }
+    // -- decision-counter mutations -------------------------------
+    if !line.contains("+=") && !line.contains("-=") {
+        return;
+    }
+    for counter in DECISION_COUNTERS {
+        for pos in match_positions(line, &format!(".{counter}")) {
+            let mut j = pos + 1 + counter.len();
+            if j < b.len() && is_ident_char(b[j]) {
+                continue;
+            }
+            while j < b.len() && b[j] == b' ' {
+                j += 1;
+            }
+            if matches!(line.get(j..j + 2), Some("+=") | Some("-=")) {
+                f.mutations.push((idx, counter));
+            }
+        }
+    }
+}
+
+/// The crate-wide resolved graph: every non-test `fn` in the tree plus
+/// its resolved call edges (sorted, deduplicated).
+pub struct CrateGraph {
+    pub fns: Vec<FnItem>,
+    pub edges: Vec<Vec<usize>>,
+    by_bare: BTreeMap<String, Vec<usize>>,
+    by_qual: BTreeMap<String, Vec<usize>>,
+    free_by_name: BTreeMap<String, Vec<usize>>,
+}
+
+impl CrateGraph {
+    pub fn build(graphs: &[FileGraph]) -> CrateGraph {
+        let fns: Vec<FnItem> =
+            graphs.iter().flat_map(|g| g.fns.iter().cloned()).collect();
+        let mut by_bare: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut by_qual: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut free_by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, f) in fns.iter().enumerate() {
+            by_bare.entry(f.name.clone()).or_default().push(i);
+            match &f.qual {
+                Some(q) => by_qual.entry(format!("{q}::{}", f.name)).or_default().push(i),
+                None => free_by_name.entry(f.name.clone()).or_default().push(i),
+            }
+        }
+        let mut cg = CrateGraph { fns, edges: Vec::new(), by_bare, by_qual, free_by_name };
+        cg.edges = cg
+            .fns
+            .iter()
+            .map(|f| {
+                let mut out = BTreeSet::new();
+                for call in &f.calls {
+                    out.extend(cg.resolve_call(f, call));
+                }
+                out.into_iter().collect()
+            })
+            .collect();
+        cg
+    }
+
+    /// Targets of one call site (see the module docs for the rules).
+    pub fn resolve_call(&self, from: &FnItem, call: &Call) -> Vec<usize> {
+        match call.kind {
+            CallKind::Dot => self
+                .by_bare
+                .get(&call.name)
+                .map(|v| {
+                    v.iter().copied().filter(|&i| self.fns[i].qual.is_some()).collect()
+                })
+                .unwrap_or_default(),
+            CallKind::Qual => {
+                let mut q = call.qual.clone().unwrap_or_default();
+                if q == "Self" {
+                    if let Some(fq) = &from.qual {
+                        q = fq.clone();
+                    }
+                }
+                match self.by_qual.get(&format!("{q}::{}", call.name)) {
+                    Some(v) => v.clone(),
+                    None => self.free_by_name.get(&call.name).cloned().unwrap_or_default(),
+                }
+            }
+            CallKind::Bare => self.free_by_name.get(&call.name).cloned().unwrap_or_default(),
+        }
+    }
+
+    /// The first `fn` named `name` in file `path`, if any.
+    pub fn fn_index(&self, files: &[SourceFile], path: &str, name: &str) -> Option<usize> {
+        self.fns
+            .iter()
+            .position(|f| files[f.file].path == path && f.name == name)
+    }
+
+    /// BFS over call edges from `root`: the reachable set plus a parent
+    /// map for reconstructing one call chain per reached `fn`.
+    pub fn reachable(&self, root: usize) -> (Vec<bool>, Vec<Option<usize>>) {
+        let mut seen = vec![false; self.fns.len()];
+        let mut parent = vec![None; self.fns.len()];
+        let mut queue = VecDeque::new();
+        seen[root] = true;
+        queue.push_back(root);
+        while let Some(cur) = queue.pop_front() {
+            for &t in &self.edges[cur] {
+                if !seen[t] {
+                    seen[t] = true;
+                    parent[t] = Some(cur);
+                    queue.push_back(t);
+                }
+            }
+        }
+        (seen, parent)
+    }
+
+    /// Per-`fn` transitive lock set: every lock name the function or
+    /// any (transitive) callee may acquire.  Cycles contribute what was
+    /// gathered before the back-edge — the same conservative cut both
+    /// the mirror and the rule documentation describe.
+    pub fn locks_transitive(&self) -> Vec<BTreeSet<String>> {
+        let mut memo: Vec<Option<BTreeSet<String>>> = vec![None; self.fns.len()];
+        let mut stack = vec![false; self.fns.len()];
+        for i in 0..self.fns.len() {
+            self.locks_go(i, &mut memo, &mut stack);
+        }
+        memo.into_iter().map(|m| m.unwrap_or_default()).collect()
+    }
+
+    fn locks_go(
+        &self,
+        i: usize,
+        memo: &mut Vec<Option<BTreeSet<String>>>,
+        stack: &mut Vec<bool>,
+    ) -> BTreeSet<String> {
+        if let Some(m) = &memo[i] {
+            return m.clone();
+        }
+        if stack[i] {
+            return BTreeSet::new();
+        }
+        stack[i] = true;
+        let mut out: BTreeSet<String> =
+            self.fns[i].locks.iter().map(|l| l.name.clone()).collect();
+        for t in self.edges[i].clone() {
+            out.extend(self.locks_go(t, memo, stack));
+        }
+        stack[i] = false;
+        memo[i] = Some(out.clone());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> SourceFile {
+        SourceFile::parse("src/sim/x.rs".to_string(), text)
+    }
+
+    #[test]
+    fn fn_defs_get_their_impl_qualifier() {
+        let f = parse(
+            "pub struct A;\nimpl A {\n    pub fn m(&self) {}\n}\nimpl Default for A {\n    fn default() -> A { A }\n}\nfn free() {}\n",
+        );
+        let g = extract(0, &f);
+        let keys: Vec<String> = g.fns.iter().map(|f| f.key()).collect();
+        assert_eq!(keys, vec!["A::m", "A::default", "free"]);
+    }
+
+    #[test]
+    fn calls_classify_as_bare_dot_and_qualified() {
+        let f = parse("fn a() {\n    helper();\n    self.m();\n    Shard::go();\n}\n");
+        let g = extract(0, &f);
+        let kinds: Vec<(CallKind, &str)> =
+            g.fns[0].calls.iter().map(|c| (c.kind, c.name.as_str())).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (CallKind::Bare, "helper"),
+                (CallKind::Dot, "m"),
+                (CallKind::Qual, "go")
+            ]
+        );
+    }
+
+    #[test]
+    fn panic_sites_include_indexing_but_not_attributes() {
+        let f = parse(
+            "fn a(xs: &[u32]) -> u32 {\n    #[allow(dead_code)]\n    let v = vec![1];\n    xs[0] + v[0]\n}\n",
+        );
+        let g = extract(0, &f);
+        assert_eq!(g.fns[0].panics.len(), 2, "two index sites: {:?}", g.fns[0].panics);
+    }
+
+    #[test]
+    fn closure_bodies_attribute_to_the_enclosing_fn() {
+        let f = parse("fn a(xs: &[u32]) -> u32 {\n    xs.iter().map(|x| x + other(*x)).sum()\n}\nfn other(x: u32) -> u32 { x }\n");
+        let g = extract(0, &f);
+        assert!(g.fns[0].calls.iter().any(|c| c.name == "other"));
+    }
+
+    #[test]
+    fn qualified_calls_do_not_alias_foreign_methods() {
+        let f = parse(
+            "pub struct A;\nimpl A {\n    pub fn new() -> A { A }\n}\nfn mk() {\n    let _ = std::collections::HashMap::<u32, u32>::new();\n    let _ = A::new();\n}\n",
+        );
+        let g = extract(0, &f);
+        let cg = CrateGraph::build(&[g]);
+        let mk = cg.fns.iter().position(|f| f.name == "mk").expect("mk extracted");
+        assert_eq!(cg.edges[mk].len(), 1, "only A::new resolves: {:?}", cg.edges[mk]);
+    }
+
+    #[test]
+    fn match_blocks_collect_their_arms() {
+        let f = parse(
+            "enum E { A, B }\nfn d(e: &E) -> u32 {\n    match e {\n        E::A => 1,\n        _ => 0,\n    }\n}\n",
+        );
+        let g = extract(0, &f);
+        assert_eq!(g.matches.len(), 1);
+        let arms: Vec<&str> = g.matches[0].arms.iter().map(|(_, p)| p.as_str()).collect();
+        assert_eq!(arms, vec!["E::A", "_"]);
+    }
+
+    #[test]
+    fn test_regions_are_outside_the_graph() {
+        let f = parse("fn a() {}\n#[cfg(test)]\nmod tests {\n    fn t() { panic!(\"x\") }\n}\n");
+        let g = extract(0, &f);
+        assert_eq!(g.fns.len(), 1);
+        assert_eq!(g.fns[0].name, "a");
+    }
+
+    #[test]
+    fn guard_locks_differ_from_temporaries() {
+        let f = parse(
+            "fn a(m: &std::sync::Mutex<u32>) {\n    let g = m.lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n    drop(g);\n    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n}\n",
+        );
+        let g = extract(0, &f);
+        assert_eq!(g.fns[0].locks.len(), 2);
+        assert!(g.fns[0].locks[0].guard);
+        assert!(!g.fns[0].locks[1].guard);
+    }
+
+    #[test]
+    fn decision_counter_mutations_require_a_compound_assignment() {
+        let f = parse(
+            "fn a(s: &mut S) {\n    s.scale_ups += 1;\n    s.jobs_submitted = 1;\n    s.scale_ups_total += 1;\n}\n",
+        );
+        let g = extract(0, &f);
+        assert_eq!(g.fns[0].mutations, vec![(1, "scale_ups")]);
+    }
+}

@@ -7,8 +7,8 @@
 //! anomalies behind `unwrap()` panic points — are lexically detectable.
 //! This module is a hand-rolled line scanner over `src/**/*.rs` (the
 //! offline build environment forbids `syn`/dylint, so there is no AST):
-//! comments and string-literal interiors are masked first, then four
-//! rules run over the masked lines:
+//! comments and string-literal interiors are masked first, then the
+//! lexical rules run over the masked lines:
 //!
 //! * [`rules::DET_HASH_ITER`] — no hash-ordered iteration in
 //!   fingerprint-affecting modules (`sim/`, `sched/`, `qos/`,
@@ -20,6 +20,20 @@
 //! * [`rules::SHARD_LOCK`] — poison-handled, ascending-order lock
 //!   acquisition in the sharded event core.
 //!
+//! On top of the same masked lines, [`graph`] extracts a crate-wide
+//! call graph (name-based, deterministic), and four flow-aware rules
+//! consult it:
+//!
+//! * [`rules::PANIC_REACH`] — panic sites transitively reachable from
+//!   each event-dispatch root stay within per-root budgets in
+//!   `lint_ratchet.toml`,
+//! * [`rules::LOCK_CYCLE`] — the crate-wide lock-acquisition-order
+//!   graph is acyclic,
+//! * [`rules::JOURNAL_COVERAGE`] — every decision-counter mutation
+//!   records a `TraceKind` in the same function or a direct callee,
+//! * [`rules::EVT_EXHAUSTIVE`] — no wildcard `_` arms in dispatch
+//!   `match`es over `Ev`/`Action`/`TraceKind`.
+//!
 //! A finding is silenced only by an *explicit, reasoned* suppression on
 //! or directly above the offending line:
 //!
@@ -28,9 +42,12 @@
 //! ```
 //!
 //! A suppression without a reason (or naming an unknown rule) is itself
-//! a finding.  The report is deterministic (sorted, stable text/JSON),
-//! so CI diffs and fixture self-tests can key on it byte-for-byte.
+//! a finding, and so is a suppression that suppresses *nothing* — a
+//! stale allow is a hole the next regression walks through unnoticed.
+//! The report is deterministic (sorted, stable text/JSON), so CI diffs
+//! and fixture self-tests can key on it byte-for-byte.
 
+pub mod graph;
 pub mod ratchet;
 pub mod report;
 pub mod rules;
@@ -62,6 +79,17 @@ impl LintConfig {
     }
 }
 
+/// One valid `lint:allow(RULE): reason` directive.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    /// 0-based line the directive sits on.
+    pub line: usize,
+    pub rule: &'static str,
+    /// 0-based lines the directive covers (its own line; for a
+    /// standalone comment line, also the next line with code).
+    pub covered: BTreeSet<usize>,
+}
+
 /// One parsed source file: masked lines plus suppression / test-region
 /// metadata the rules consult.
 pub struct SourceFile {
@@ -69,8 +97,8 @@ pub struct SourceFile {
     pub path: String,
     /// Source lines with comments and string interiors blanked.
     pub masked: Vec<String>,
-    /// Rule id -> 0-based line indexes a valid suppression covers.
-    suppressed: BTreeMap<&'static str, BTreeSet<usize>>,
+    /// Valid suppressions, in declaration order.
+    pub suppressions: Vec<Suppression>,
     /// Malformed suppressions: `(line index, message)`.
     bad_suppressions: Vec<(usize, String)>,
     /// 0-based index of a top-level `#[cfg(test)]`, if any; everything
@@ -87,7 +115,7 @@ impl SourceFile {
         let mut file = SourceFile {
             path,
             masked,
-            suppressed: BTreeMap::new(),
+            suppressions: Vec::new(),
             bad_suppressions: Vec::new(),
             test_start,
         };
@@ -102,7 +130,7 @@ impl SourceFile {
 
     /// Whether a valid suppression for `rule` covers 0-based line `idx`.
     pub fn suppressed(&self, idx: usize, rule: &str) -> bool {
-        self.suppressed.get(rule).is_some_and(|s| s.contains(&idx))
+        self.suppressions.iter().any(|s| s.rule == rule && s.covered.contains(&idx))
     }
 
     /// The logical statement starting at 0-based line `idx`: lines
@@ -123,6 +151,12 @@ impl SourceFile {
 
     fn collect_suppressions(&mut self, comments: &[(usize, String)]) {
         for (idx, text) in comments {
+            // `///` and `//!` doc comments are documentation, not
+            // directives — a doc example showing the marker must not
+            // become a live suppression.
+            if text.starts_with('/') || text.starts_with('!') {
+                continue;
+            }
             let Some(pos) = text.find(ALLOW_MARKER) else { continue };
             let rest = &text[pos + ALLOW_MARKER.len()..];
             let Some(close) = rest.find(')') else {
@@ -160,7 +194,7 @@ impl SourceFile {
                     covered.insert(next);
                 }
             }
-            self.suppressed.entry(known).or_default().extend(covered);
+            self.suppressions.push(Suppression { line: *idx, rule: *known, covered });
         }
     }
 }
@@ -298,7 +332,7 @@ pub fn run(cfg: &LintConfig) -> Result<(LintReport, Ratchet)> {
     let baseline = match std::fs::read_to_string(&cfg.ratchet_path) {
         Ok(text) => ratchet::parse(&text)
             .map_err(|e| anyhow::anyhow!("{}: {e}", cfg.ratchet_path.display()))?,
-        Err(_) => Ratchet::new(),
+        Err(_) => Ratchet::default(),
     };
 
     let mut paths = Vec::new();
@@ -331,24 +365,60 @@ pub fn run(cfg: &LintConfig) -> Result<(LintReport, Ratchet)> {
         global_names.retain(|n| !ambiguous.contains(n));
     }
 
+    // The call-graph layer: per-file extraction, then crate-wide
+    // resolution.  Extraction sees suppression metadata (PANIC-REACH
+    // site suppressions are consumed here), so it runs after parsing.
+    let graphs: Vec<graph::FileGraph> =
+        files.iter().enumerate().map(|(i, f)| graph::extract(i, f)).collect();
+    let cg = graph::CrateGraph::build(&graphs);
+
     let mut report = LintReport { files_scanned: files.len(), ..LintReport::default() };
-    let mut live_ratchet = Ratchet::new();
-    for f in &files {
+    let mut live_ratchet = Ratchet::default();
+
+    // Line-anchored rules, collected raw; one central pass below applies
+    // suppressions so every rule gets identical allow semantics.
+    let mut raw = Vec::new();
+    for (i, f) in files.iter().enumerate() {
         let mut local_names = rules::annotated_hash_names(&f.masked, true);
         let ambiguous = rules::ambiguous_names(&f.masked, &local_names);
         local_names.retain(|n| !ambiguous.contains(n));
-        let mut raw = Vec::new();
         rules::det_hash_iter(f, &local_names, &global_names, &mut raw);
         rules::det_wallclock(f, &mut raw);
         rules::shard_lock(f, &mut raw);
-        // Per-line suppressions (the ratchet rule consumes suppressions
-        // during counting instead — a budget finding has no single line).
-        raw.retain(|fi| !f.suppressed(fi.line as usize - 1, fi.rule));
-        report.findings.append(&mut raw);
+        rules::evt_exhaustive(f, &graphs[i], &mut raw);
+    }
+    rules::lock_cycle(&cg, &files, &mut raw);
+    rules::journal_coverage(&cg, &files, &mut raw);
+
+    // Central suppression pass, with usage tracking: a suppression that
+    // filters at least one raw finding is "used"; the rest are judged by
+    // the count-consuming check further down.
+    let index: BTreeMap<&str, usize> =
+        files.iter().enumerate().map(|(i, f)| (f.path.as_str(), i)).collect();
+    let mut used: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); files.len()];
+    for fi in &raw {
+        let Some(&i) = index.get(fi.file.as_str()) else { continue };
+        for (si, s) in files[i].suppressions.iter().enumerate() {
+            if fi.rule == s.rule && s.covered.contains(&(fi.line as usize - 1)) {
+                used[i].insert(si);
+            }
+        }
+    }
+    raw.retain(|fi| {
+        index
+            .get(fi.file.as_str())
+            .map_or(true, |&i| !files[i].suppressed(fi.line as usize - 1, fi.rule))
+    });
+    report.findings.append(&mut raw);
+
+    // Budget rules append directly: a budget finding has no single
+    // offending line, so it cannot be line-suppressed — the rules
+    // consume suppressions during counting instead.
+    for f in &files {
         if let Some((key, live)) =
             rules::unwrap_ratchet(f, &baseline, &mut report.findings, &mut report.suggestions)
         {
-            live_ratchet.insert(key, live);
+            live_ratchet.files.insert(key, live);
         }
         for (idx, msg) in &f.bad_suppressions {
             report.findings.push(Finding::new(
@@ -359,22 +429,70 @@ pub fn run(cfg: &LintConfig) -> Result<(LintReport, Ratchet)> {
             ));
         }
     }
+    live_ratchet.roots =
+        rules::panic_reach(&cg, &files, &baseline, &mut report.findings, &mut report.suggestions);
+
+    // Unused-suppression pass.  Count-consuming rules never leave a
+    // finding behind, so their suppressions count as used when a covered
+    // line actually carries the token the count would otherwise include.
+    for (i, f) in files.iter().enumerate() {
+        for (si, s) in f.suppressions.iter().enumerate() {
+            if used[i].contains(&si) {
+                continue;
+            }
+            let consumed = match s.rule {
+                rules::EVT_UNWRAP_RATCHET => s.covered.iter().any(|&l| {
+                    f.masked[l].contains(".unwrap()") || f.masked[l].contains(".expect(")
+                }),
+                rules::PANIC_REACH => s.covered.iter().any(|&l| {
+                    !f.in_test_region(l) && !graph::panic_tokens_on(&f.masked[l]).is_empty()
+                }),
+                _ => false,
+            };
+            if !consumed {
+                report.findings.push(Finding::new(
+                    &f.path,
+                    s.line as u32 + 1,
+                    rules::LINT_SUPPRESS_UNUSED,
+                    format!(
+                        "suppression for {} covers no finding; delete it — a stale \
+                         allow is the hole the next real regression walks through",
+                        s.rule
+                    ),
+                ));
+            }
+        }
+    }
+
     // A baseline entry whose file is gone would grant budget to a future
     // file of the same name; keep the ratchet honest.
-    for stale in baseline.keys().filter(|k| !live_ratchet.contains_key(*k)) {
+    for stale in baseline.files.keys().filter(|k| !live_ratchet.files.contains_key(*k)) {
         report.findings.push(Finding::new(
             "lint_ratchet.toml",
             1,
             rules::EVT_UNWRAP_RATCHET,
             format!(
                 "ratchet entry {stale:?} has no matching file under the ratchet scope \
-                 (src/sim/, src/telemetry/); remove it"
+                 (src/); remove it"
+            ),
+        ));
+    }
+    // Same for panic-reach sections naming roots the tree doesn't have.
+    for stale in baseline.roots.keys().filter(|k| !live_ratchet.roots.contains_key(*k)) {
+        report.findings.push(Finding::new(
+            "lint_ratchet.toml",
+            1,
+            rules::PANIC_REACH,
+            format!(
+                "ratchet entry \"{}{stale}\" names no dispatch root in the tree; \
+                 remove it",
+                ratchet::ROOT_PREFIX
             ),
         ));
     }
     // Files at their budget stay out of the suggested ratchet only if
     // zero; every non-zero count keeps an explicit entry.
-    live_ratchet.retain(|_, b| *b != Budget::default());
+    live_ratchet.files.retain(|_, b| *b != Budget::default());
     report.sort();
     Ok((report, live_ratchet))
 }
@@ -541,6 +659,18 @@ mod tests {
         assert_eq!(f.bad_suppressions.len(), 3);
         assert!(!f.suppressed(0, rules::DET_HASH_ITER));
         assert!(!f.suppressed(2, rules::DET_HASH_ITER));
+    }
+
+    #[test]
+    fn doc_comments_never_declare_suppressions() {
+        let marker = ALLOW_MARKER;
+        let f = parse(&format!(
+            "/// {marker}DET-HASH-ITER): doc example, not a directive\n\
+             foo();\n\
+             //! {marker}NOT-A-RULE): module doc\n"
+        ));
+        assert!(f.suppressions.is_empty());
+        assert!(f.bad_suppressions.is_empty());
     }
 
     #[test]

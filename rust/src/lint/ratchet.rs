@@ -1,20 +1,27 @@
-//! The `EVT-UNWRAP-RATCHET` baseline file (`lint_ratchet.toml`).
+//! The ratchet baseline file (`lint_ratchet.toml`).
 //!
 //! A hand-rolled reader/writer for the tiny TOML subset the ratchet
-//! needs — quoted-path section headers and `key = integer` pairs — so
-//! the linter stays dependency-free in the offline build:
+//! needs — quoted section headers and `key = integer` pairs — so the
+//! linter stays dependency-free in the offline build.  Two section
+//! kinds share the file:
 //!
 //! ```toml
-//! ["sim/master.rs"]
+//! ["sim/master.rs"]          # EVT-UNWRAP-RATCHET: per-file counts
 //! unwrap = 0
 //! expect = 2
+//!
+//! ["panic-reach:SimCluster::handle"]   # PANIC-REACH: per-root counts
+//! reachable = 394
 //! ```
 //!
-//! Paths are relative to `src/`.  The contract is one-directional:
-//! counts in the tree may only move *down* relative to the committed
-//! baseline.  `nephele lint` fails when a file exceeds its budget,
-//! suggests the lowered baseline when a file dips below it, and
-//! `--update-ratchet` rewrites this file with the (lower) live counts.
+//! File paths are relative to `src/`; panic-reach sections are keyed by
+//! the dispatch-root name under a `panic-reach:` prefix (legal because
+//! `:` cannot appear in a repo-relative path, so the namespaces cannot
+//! collide).  The contract is one-directional for both kinds: counts in
+//! the tree may only move *down* relative to the committed baseline.
+//! `nephele lint` fails when a budget is exceeded, suggests the lowered
+//! baseline when the live count dips below it, and `--update-ratchet`
+//! rewrites this file with the (lower) live counts.
 
 use std::collections::BTreeMap;
 
@@ -25,14 +32,22 @@ pub struct Budget {
     pub expect: u64,
 }
 
-/// The full baseline: `src/`-relative path → budget, ordered.
-pub type Ratchet = BTreeMap<String, Budget>;
+/// Prefix distinguishing panic-reach sections from file sections.
+pub const ROOT_PREFIX: &str = "panic-reach:";
+
+/// The full baseline, ordered: `src/`-relative path → unwrap budget,
+/// plus dispatch root → reachable-panic-site budget.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Ratchet {
+    pub files: BTreeMap<String, Budget>,
+    pub roots: BTreeMap<String, u64>,
+}
 
 /// Parse the ratchet file.  Unknown keys, malformed headers and
 /// non-integer values are hard errors — a typo in the baseline must not
 /// silently grant an unlimited budget.
 pub fn parse(text: &str) -> Result<Ratchet, String> {
-    let mut out = Ratchet::new();
+    let mut out = Ratchet::default();
     let mut current: Option<String> = None;
     for (i, raw) in text.lines().enumerate() {
         let line = raw.trim();
@@ -49,10 +64,13 @@ pub fn parse(text: &str) -> Result<Ratchet, String> {
             if inner.is_empty() {
                 return Err(format!("line {lineno}: empty section header"));
             }
-            if out.contains_key(inner) {
+            let dup = match inner.strip_prefix(ROOT_PREFIX) {
+                Some(root) => out.roots.insert(root.to_string(), 0).is_some(),
+                None => out.files.insert(inner.to_string(), Budget::default()).is_some(),
+            };
+            if dup {
                 return Err(format!("line {lineno}: duplicate section {inner:?}"));
             }
-            out.insert(inner.to_string(), Budget::default());
             current = Some(inner.to_string());
             continue;
         }
@@ -61,31 +79,54 @@ pub fn parse(text: &str) -> Result<Ratchet, String> {
             .ok_or_else(|| format!("line {lineno}: expected `key = value`"))?;
         let section = current
             .as_ref()
-            .ok_or_else(|| format!("line {lineno}: key outside any [\"file\"] section"))?;
+            .ok_or_else(|| format!("line {lineno}: key outside any [\"...\"] section"))?;
         let n: u64 = value
             .trim()
             .parse()
             .map_err(|_| format!("line {lineno}: value is not an unsigned integer"))?;
-        let budget = out.get_mut(section).expect("section inserted when header was read");
-        match key.trim() {
-            "unwrap" => budget.unwrap = n,
-            "expect" => budget.expect = n,
-            other => return Err(format!("line {lineno}: unknown key {other:?}")),
+        match section.strip_prefix(ROOT_PREFIX) {
+            Some(root) => {
+                let budget =
+                    out.roots.get_mut(root).expect("section inserted when header was read");
+                match key.trim() {
+                    "reachable" => *budget = n,
+                    other => return Err(format!("line {lineno}: unknown key {other:?}")),
+                }
+            }
+            None => {
+                let budget = out
+                    .files
+                    .get_mut(section.as_str())
+                    .expect("section inserted when header was read");
+                match key.trim() {
+                    "unwrap" => budget.unwrap = n,
+                    "expect" => budget.expect = n,
+                    other => return Err(format!("line {lineno}: unknown key {other:?}")),
+                }
+            }
         }
     }
     Ok(out)
 }
 
-/// Deterministic serialization (sorted by path; fixed key order).
+/// Deterministic serialization (sorted by path, then by root; fixed key
+/// order).
 pub fn render(r: &Ratchet) -> String {
     let mut out = String::from(
-        "# EVT-UNWRAP-RATCHET baselines: whole-file `.unwrap()` / `.expect(` counts\n\
-         # for the event-path modules (src/sim/).  Counts may only decrease; run\n\
+        "# nephele-lint ratchet baselines.  Counts may only decrease; run\n\
          # `nephele lint --update-ratchet` after burning debt down.  Raising a\n\
-         # budget is a reviewed edit of this file, never an automated one.\n",
+         # budget is a reviewed edit of this file, never an automated one.\n\
+         #\n\
+         # [\"<file>\"] sections: whole-file `.unwrap()` / `.expect(` counts\n\
+         # (EVT-UNWRAP-RATCHET, whole src/ tree).\n\
+         # [\"panic-reach:<root>\"] sections: panic sites transitively reachable\n\
+         # from each event-dispatch root (PANIC-REACH).\n",
     );
-    for (file, b) in r {
+    for (file, b) in &r.files {
         out.push_str(&format!("\n[\"{file}\"]\nunwrap = {}\nexpect = {}\n", b.unwrap, b.expect));
+    }
+    for (root, n) in &r.roots {
+        out.push_str(&format!("\n[\"{ROOT_PREFIX}{root}\"]\nreachable = {n}\n"));
     }
     out
 }
@@ -96,9 +137,10 @@ mod tests {
 
     #[test]
     fn parse_render_roundtrip() {
-        let mut r = Ratchet::new();
-        r.insert("sim/cluster.rs".into(), Budget { unwrap: 48, expect: 0 });
-        r.insert("sim/master.rs".into(), Budget { unwrap: 0, expect: 2 });
+        let mut r = Ratchet::default();
+        r.files.insert("sim/cluster.rs".into(), Budget { unwrap: 48, expect: 0 });
+        r.files.insert("sim/master.rs".into(), Budget { unwrap: 0, expect: 2 });
+        r.roots.insert("SimCluster::handle".into(), 394);
         let text = render(&r);
         assert_eq!(parse(&text).unwrap(), r);
         assert_eq!(render(&parse(&text).unwrap()), text);
@@ -111,11 +153,30 @@ mod tests {
         assert!(parse("[\"a.rs\"]\nwobble = 3").is_err(), "unknown key");
         assert!(parse("[\"a.rs\"\nunwrap = 3").is_err(), "unterminated header");
         assert!(parse("[\"a.rs\"]\n[\"a.rs\"]").is_err(), "duplicate section");
+        assert!(
+            parse("[\"panic-reach:main::live\"]\nunwrap = 3").is_err(),
+            "file keys are rejected in a panic-reach section"
+        );
+        assert!(
+            parse("[\"a.rs\"]\nreachable = 3").is_err(),
+            "panic-reach keys are rejected in a file section"
+        );
+        assert!(
+            parse("[\"panic-reach:x\"]\n[\"panic-reach:x\"]").is_err(),
+            "duplicate panic-reach section"
+        );
     }
 
     #[test]
     fn missing_keys_default_to_zero() {
         let r = parse("[\"sim/x.rs\"]\nunwrap = 7\n").unwrap();
-        assert_eq!(r["sim/x.rs"], Budget { unwrap: 7, expect: 0 });
+        assert_eq!(r.files["sim/x.rs"], Budget { unwrap: 7, expect: 0 });
+    }
+
+    #[test]
+    fn root_sections_parse_their_reachable_count() {
+        let r = parse("[\"panic-reach:main::live\"]\nreachable = 453\n").unwrap();
+        assert_eq!(r.roots["main::live"], 453);
+        assert!(r.files.is_empty());
     }
 }

@@ -1,18 +1,21 @@
-//! The four `nephele-lint` rules.
+//! The `nephele-lint` rules.
 //!
 //! All rules operate on *masked* source lines (string-literal interiors
 //! and comments blanked by [`super::SourceFile`]), so trigger tokens
 //! inside log messages or docs never fire.  The analysis is a
 //! hand-rolled lexical scan — the offline build forbids `syn`/dylint —
 //! which buys zero dependencies at the cost of being name-based rather
-//! than type-based.  The escape hatch for the resulting (rare) false
-//! positives is an explicit, reasoned `lint:allow` suppression; see
-//! `DESIGN.md` §11 for each rule's exact semantics and limits.
+//! than type-based.  The four flow-aware rules at the bottom of this
+//! file additionally consult the [`super::graph`] call-graph layer.
+//! The escape hatch for the resulting (rare) false positives is an
+//! explicit, reasoned `lint:allow` suppression; see `DESIGN.md` §11
+//! and §13 for each rule's exact semantics and limits.
 
+use super::graph::{CrateGraph, FileGraph};
 use super::ratchet::{Budget, Ratchet};
 use super::report::Finding;
 use super::SourceFile;
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Rule ids, stable across releases (reports, suppressions and fixtures
 /// key on them).
@@ -20,11 +23,25 @@ pub const DET_HASH_ITER: &str = "DET-HASH-ITER";
 pub const DET_WALLCLOCK: &str = "DET-WALLCLOCK";
 pub const EVT_UNWRAP_RATCHET: &str = "EVT-UNWRAP-RATCHET";
 pub const SHARD_LOCK: &str = "SHARD-LOCK";
+pub const PANIC_REACH: &str = "PANIC-REACH";
+pub const LOCK_CYCLE: &str = "LOCK-CYCLE";
+pub const JOURNAL_COVERAGE: &str = "JOURNAL-COVERAGE";
+pub const EVT_EXHAUSTIVE: &str = "EVT-EXHAUSTIVE";
 /// Meta-rule for malformed suppressions; not itself suppressible.
 pub const LINT_SUPPRESS: &str = "LINT-SUPPRESS";
+/// Meta-rule for suppressions that suppress nothing; not suppressible.
+pub const LINT_SUPPRESS_UNUSED: &str = "LINT-SUPPRESS-UNUSED";
 
-pub const ALL_RULES: [&str; 4] =
-    [DET_HASH_ITER, DET_WALLCLOCK, EVT_UNWRAP_RATCHET, SHARD_LOCK];
+pub const ALL_RULES: [&str; 8] = [
+    DET_HASH_ITER,
+    DET_WALLCLOCK,
+    EVT_UNWRAP_RATCHET,
+    SHARD_LOCK,
+    PANIC_REACH,
+    LOCK_CYCLE,
+    JOURNAL_COVERAGE,
+    EVT_EXHAUSTIVE,
+];
 
 /// Modules whose event order or fingerprints same-seed replay depends
 /// on: the determinism rules apply here.  `src/telemetry/` is in scope
@@ -34,9 +51,12 @@ pub const ALL_RULES: [&str; 4] =
 const DET_SCOPES: [&str; 5] =
     ["src/sim/", "src/sched/", "src/qos/", "src/actions/", "src/telemetry/"];
 
-/// Modules under the unwrap ratchet: the event path plus the telemetry
-/// layer (which observes every decision and must never panic mid-run).
-const RATCHET_SCOPES: [&str; 2] = ["src/sim/", "src/telemetry/"];
+/// Modules under the unwrap ratchet: the whole crate.  The ratchet
+/// started on the event path (`src/sim/`, `src/telemetry/`) and was
+/// widened once the panic-path budgets landed — a ratchet that only
+/// covers the modules that are already clean cannot burn down the debt
+/// everywhere else.
+const RATCHET_SCOPES: [&str; 1] = ["src/"];
 
 pub fn in_det_scope(path: &str) -> bool {
     DET_SCOPES.iter().any(|s| path.starts_with(s))
@@ -370,7 +390,7 @@ pub fn unwrap_ratchet(
     }
     let key = file.path.trim_start_matches("src/").to_string();
     let live = unwrap_counts(file);
-    let budget = baseline.get(&key).copied().unwrap_or_default();
+    let budget = baseline.files.get(&key).copied().unwrap_or_default();
     for (kind, live_n, budget_n, needle) in [
         ("unwrap", live.unwrap, budget.unwrap, ".unwrap()"),
         ("expect", live.expect, budget.expect, ".expect("),
@@ -420,7 +440,7 @@ pub fn shard_lock(file: &SourceFile, findings: &mut Vec<Finding>) {
         let handled = (stmt.contains("unwrap_or_else") && stmt.contains("into_inner"))
             || stmt.trim_start().starts_with("match ")
             || stmt.contains("if let ");
-        if !handled && !file.suppressed(idx, SHARD_LOCK) {
+        if !handled {
             findings.push(Finding::new(
                 &file.path,
                 idx as u32 + 1,
@@ -433,7 +453,7 @@ pub fn shard_lock(file: &SourceFile, findings: &mut Vec<Finding>) {
         }
         if let Some((for_idx, header)) = enclosing_for_header(file, idx) {
             let ascending = header.contains(".enumerate()") || header.contains("0..");
-            if !ascending && !file.suppressed(idx, SHARD_LOCK) {
+            if !ascending {
                 findings.push(Finding::new(
                     &file.path,
                     for_idx as u32 + 1,
@@ -442,6 +462,301 @@ pub fn shard_lock(file: &SourceFile, findings: &mut Vec<Finding>) {
                      ascending shard-id order (iterate with `.enumerate()` or a `0..` \
                      range) to keep the lock order total"
                         .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// PANIC-REACH
+// ---------------------------------------------------------------------
+
+/// Event-dispatch roots whose transitive panic exposure is budgeted:
+/// `(ratchet key, file, fn name)`.  The simulation dispatch loop, the
+/// parallel shard driver, and every `main.rs` subcommand entry.
+pub const PANIC_ROOTS: [(&str, &str, &str); 9] = [
+    ("SimCluster::handle", "src/sim/cluster.rs", "handle"),
+    ("ShardedEventCore::run_parallel", "src/sim/shard.rs", "run_parallel"),
+    ("main::live", "src/main.rs", "live"),
+    ("main::sim_failover", "src/main.rs", "sim_failover"),
+    ("main::sim_meter", "src/main.rs", "sim_meter"),
+    ("main::sim_multi", "src/main.rs", "sim_multi"),
+    ("main::sim_scale", "src/main.rs", "sim_scale"),
+    ("main::sim_surge", "src/main.rs", "sim_surge"),
+    ("main::sim_video", "src/main.rs", "sim_video"),
+];
+
+/// PANIC-REACH: the number of panic sites (`.unwrap()`, `.expect(`,
+/// panicking macros, slice indexing) transitively reachable from each
+/// dispatch root stays at or below its committed budget.  Like the
+/// unwrap ratchet this only goes down — but being call-graph-transitive
+/// it also catches the case where an already-budgeted helper becomes
+/// reachable from the event path for the first time.  Returns the live
+/// per-root counts for ratchet assembly.
+pub fn panic_reach(
+    cg: &CrateGraph,
+    files: &[SourceFile],
+    baseline: &Ratchet,
+    findings: &mut Vec<Finding>,
+    suggestions: &mut Vec<String>,
+) -> BTreeMap<String, u64> {
+    let mut live = BTreeMap::new();
+    for (key, path, name) in PANIC_ROOTS {
+        let Some(root) = cg.fn_index(files, path, name) else { continue };
+        let (seen, parent) = cg.reachable(root);
+        let mut sites: Vec<(&str, usize, &'static str, usize)> = Vec::new();
+        for (i, f) in cg.fns.iter().enumerate() {
+            if !seen[i] {
+                continue;
+            }
+            for &(line, tok) in &f.panics {
+                sites.push((files[f.file].path.as_str(), line, tok, i));
+            }
+        }
+        let count = sites.len() as u64;
+        live.insert(key.to_string(), count);
+        let budget = baseline.roots.get(key).copied().unwrap_or(0);
+        if count > budget {
+            sites.sort();
+            let (spath, sline, stok, sfn) = sites[0];
+            let mut chain = Vec::new();
+            let mut cur = Some(sfn);
+            while let Some(c) = cur {
+                chain.push(cg.fns[c].key());
+                cur = parent[c];
+            }
+            chain.reverse();
+            findings.push(Finding::new(
+                &files[cg.fns[root].file].path,
+                cg.fns[root].line as u32 + 1,
+                PANIC_REACH,
+                format!(
+                    "root {key} reaches {count} panic site(s), budget {budget}; \
+                     e.g. {} -> {spath}:{} {stok}",
+                    chain.join(" -> "),
+                    sline + 1
+                ),
+            ));
+        } else if count < budget {
+            suggestions.push(format!(
+                "panic-path budget for {key} may be lowered: reachable {budget} -> \
+                 {count} (run `nephele lint --update-ratchet`)"
+            ));
+        }
+    }
+    live
+}
+
+// ---------------------------------------------------------------------
+// LOCK-CYCLE
+// ---------------------------------------------------------------------
+
+/// LOCK-CYCLE: build the crate-wide lock-acquisition-order graph and
+/// report any cycle.  While a lock is held — to the end of the function
+/// for `let`-bound guards, to the end of the statement for temporaries —
+/// every later lock acquired in the span, and every lock transitively
+/// acquirable by a call in the span, becomes an ordered-after edge.
+/// Locks are identified by receiver *name*, which deliberately merges
+/// all elements of a lock array (`inboxes[i]` and `inboxes[j]` are one
+/// node): per-element ordering within an array is exactly the discipline
+/// SHARD-LOCK's ascending-id rule enforces, and merging is what lets the
+/// rule see the classic AB/BA inversion between two arrays.
+pub fn lock_cycle(cg: &CrateGraph, files: &[SourceFile], findings: &mut Vec<Finding>) {
+    let trans = cg.locks_transitive();
+    let mut ledges: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    // First acquisition site of each lock name, for anchoring findings.
+    let mut sites: BTreeMap<&str, (&str, usize)> = BTreeMap::new();
+    for f in &cg.fns {
+        for l in &f.locks {
+            let key = (files[f.file].path.as_str(), l.line);
+            let e = sites.entry(l.name.as_str()).or_insert(key);
+            if key < *e {
+                *e = key;
+            }
+        }
+    }
+    for (i, f) in cg.fns.iter().enumerate() {
+        if f.locks.is_empty() {
+            continue;
+        }
+        for l in &f.locks {
+            let span_end: Option<usize> = if l.guard {
+                None
+            } else {
+                // Statement span: same <=5-line join as `statement_at`.
+                let src = &files[f.file];
+                let mut last = l.line;
+                for k in l.line..(l.line + 5).min(src.masked.len()) {
+                    last = k;
+                    let t = src.masked[k].trim_end();
+                    if t.ends_with(';') || t.ends_with('{') || t.ends_with('}') {
+                        break;
+                    }
+                }
+                Some(last)
+            };
+            let in_span =
+                |at: usize| at > l.line && span_end.map_or(true, |e| at <= e);
+            for l2 in &f.locks {
+                if in_span(l2.line) {
+                    ledges.entry(l.name.as_str()).or_default().insert(l2.name.as_str());
+                }
+            }
+            for call in &f.calls {
+                if !in_span(call.line) {
+                    continue;
+                }
+                for t in cg.resolve_call(f, call) {
+                    for n2 in &trans[t] {
+                        ledges.entry(l.name.as_str()).or_default().insert(n2.as_str());
+                    }
+                }
+            }
+        }
+    }
+    let mut names: BTreeSet<&str> = ledges.keys().copied().collect();
+    names.extend(ledges.values().flatten().copied());
+    let mut reported: BTreeSet<Vec<&str>> = BTreeSet::new();
+    for start in names {
+        let Some(cyc) = find_cycle(&ledges, start) else { continue };
+        let mut canon: Vec<&str> = cyc.iter().copied().collect::<BTreeSet<_>>()
+            .into_iter().collect();
+        canon.sort_unstable();
+        if !reported.insert(canon.clone()) {
+            continue;
+        }
+        let anchor = canon[0];
+        let (path, line) = sites.get(anchor).copied().unwrap_or(("<unknown>", 0));
+        let mut display = cyc.clone();
+        display.push(cyc[0]);
+        findings.push(Finding::new(
+            path,
+            line as u32 + 1,
+            LOCK_CYCLE,
+            format!(
+                "lock-order cycle: {}; acquire in one global order or narrow the \
+                 critical section",
+                display.join(" -> ")
+            ),
+        ));
+    }
+}
+
+/// DFS from `start` over the lock-order edges, looking for a path back
+/// to `start`.  Neighbors are visited in descending name order (sorted
+/// ascending, stack-popped), so the reported path is deterministic.
+fn find_cycle<'a>(
+    ledges: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+    start: &'a str,
+) -> Option<Vec<&'a str>> {
+    let mut stack: Vec<(&'a str, Vec<&'a str>)> = vec![(start, vec![start])];
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    while let Some((cur, path)) = stack.pop() {
+        for &nxt in ledges.get(cur).into_iter().flatten() {
+            if nxt == start {
+                return Some(path);
+            }
+            if seen.insert(nxt) {
+                let mut p = path.clone();
+                p.push(nxt);
+                stack.push((nxt, p));
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// JOURNAL-COVERAGE
+// ---------------------------------------------------------------------
+
+/// JOURNAL-COVERAGE: every function that mutates a decision counter
+/// (`+=`/`-=` on a [`super::graph::DECISION_COUNTERS`] field) must
+/// record a `TraceKind` — a `trace`/`trace_caused` call or a literal
+/// `journal.append(` — in its own body or in a *direct* callee.  One
+/// level of indirection covers the `bump-then-helper` shape without
+/// letting a journal write three hops away excuse an unjournaled
+/// decision.
+pub fn journal_coverage(
+    cg: &CrateGraph,
+    files: &[SourceFile],
+    findings: &mut Vec<Finding>,
+) {
+    let records: Vec<bool> = cg
+        .fns
+        .iter()
+        .map(|f| {
+            f.has_record
+                || f.calls
+                    .iter()
+                    .any(|c| super::graph::RECORD_FNS.contains(&c.name.as_str()))
+        })
+        .collect();
+    for (i, f) in cg.fns.iter().enumerate() {
+        if f.mutations.is_empty() {
+            continue;
+        }
+        if records[i] || cg.edges[i].iter().any(|&t| records[t]) {
+            continue;
+        }
+        for &(line, counter) in &f.mutations {
+            findings.push(Finding::new(
+                &files[f.file].path,
+                line as u32 + 1,
+                JOURNAL_COVERAGE,
+                format!(
+                    "`{}` mutates decision counter `{counter}` but neither it nor a \
+                     direct callee records a TraceKind; journal the decision so \
+                     replay can reconstruct it",
+                    f.key()
+                ),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// EVT-EXHAUSTIVE
+// ---------------------------------------------------------------------
+
+/// The dispatch enums whose `match`es must stay exhaustive, and the
+/// modules where that is load-bearing (event core, scheduler,
+/// telemetry).
+pub const EXHAUSTIVE_ENUMS: [&str; 3] = ["Ev::", "Action::", "TraceKind::"];
+const EXHAUSTIVE_SCOPES: [&str; 3] = ["src/sim/", "src/sched/", "src/telemetry/"];
+
+/// EVT-EXHAUSTIVE: a wildcard `_` arm in a `match` over one of the
+/// dispatch enums silently swallows every future variant — adding an
+/// event kind should force each dispatch site to take a position, which
+/// is the whole point of dispatching on an enum.  Guarded wildcards
+/// (`_ if cond`) and binding patterns are not flagged; a `match` is "over"
+/// an enum when any arm pattern starts with `Ev::`/`Action::`/`TraceKind::`.
+pub fn evt_exhaustive(file: &SourceFile, fg: &FileGraph, findings: &mut Vec<Finding>) {
+    if !EXHAUSTIVE_SCOPES.iter().any(|s| file.path.starts_with(s)) {
+        return;
+    }
+    for m in &fg.matches {
+        let Some(enum_name) = m.arms.iter().find_map(|(_, pat)| {
+            let p = pat.trim_start_matches('|').trim_start();
+            EXHAUSTIVE_ENUMS
+                .iter()
+                .find(|e| p.starts_with(**e))
+                .map(|e| &e[..e.len() - 2])
+        }) else {
+            continue;
+        };
+        for (line, pat) in &m.arms {
+            if pat.trim() == "_" {
+                findings.push(Finding::new(
+                    &file.path,
+                    *line as u32 + 1,
+                    EVT_EXHAUSTIVE,
+                    format!(
+                        "wildcard `_` arm in a `match` over `{enum_name}`: list the \
+                         remaining variants explicitly so adding one forces this \
+                         dispatch site to take a position"
+                    ),
                 ));
             }
         }

@@ -134,11 +134,11 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
         let z_group = vec![0f32; 4 * h * w];
         let z_frame = vec![0f32; h * w];
         let z_merged = vec![0f32; h2 * w2];
-        let _ = rt.stage("decoder").unwrap().run(&[&z_frame])?;
-        let _ = rt.stage("merger").unwrap().run(&[&z_group])?;
-        let _ = rt.stage("overlay").unwrap().run(&[&z_merged, &z_merged, &z_merged])?;
-        let _ = rt.stage("encoder").unwrap().run(&[&z_merged])?;
-        let _ = rt.stage("chained").unwrap().run(&[&z_group, &z_merged, &z_merged])?;
+        let _ = rt.stage("decoder")?.run(&[&z_frame])?;
+        let _ = rt.stage("merger")?.run(&[&z_group])?;
+        let _ = rt.stage("overlay")?.run(&[&z_merged, &z_merged, &z_merged])?;
+        let _ = rt.stage("encoder")?.run(&[&z_merged])?;
+        let _ = rt.stage("chained")?.run(&[&z_group, &z_merged, &z_merged])?;
     }
 
     // Marquee overlay inputs (constant across frames).
@@ -232,10 +232,7 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
 
             let (d_ms, m_ms, o_ms, e_ms) = if chained {
                 let t0 = Instant::now();
-                let _out = rt
-                    .stage("chained")
-                    .unwrap()
-                    .run(&[&group.coeffs, &image, &alpha])?;
+                let _out = rt.stage("chained")?.run(&[&group.coeffs, &image, &alpha])?;
                 let total = t0.elapsed().as_secs_f64() * 1e3;
                 // The fused executable is one task: attribute its time to
                 // the stages proportionally for reporting continuity.
@@ -245,18 +242,16 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
                 let mut frames_buf = Vec::with_capacity(4 * h * w);
                 for g in 0..4 {
                     frames_buf.extend(
-                        rt.stage("decoder")
-                            .unwrap()
+                        rt.stage("decoder")?
                             .run(&[&group.coeffs[g * h * w..(g + 1) * h * w]])?,
                     );
                 }
                 let t1 = Instant::now();
-                let merged = rt.stage("merger").unwrap().run(&[&frames_buf])?;
+                let merged = rt.stage("merger")?.run(&[&frames_buf])?;
                 let t2 = Instant::now();
-                let composited =
-                    rt.stage("overlay").unwrap().run(&[&merged, &image, &alpha])?;
+                let composited = rt.stage("overlay")?.run(&[&merged, &image, &alpha])?;
                 let t3 = Instant::now();
-                let _encoded = rt.stage("encoder").unwrap().run(&[&composited])?;
+                let _encoded = rt.stage("encoder")?.run(&[&composited])?;
                 let t4 = Instant::now();
                 (
                     t1.duration_since(t0).as_secs_f64() * 1e3,

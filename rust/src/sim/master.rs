@@ -187,7 +187,7 @@ impl SimCluster {
             cause,
             TraceKind::FailoverRecovered { worker: w, job: id, reassigned, replayed },
         );
-        self.after_topology_change(j, "failover");
+        self.after_topology_change(now, j, "failover");
         Ok(())
     }
 
@@ -255,7 +255,7 @@ impl SimCluster {
             cause,
             TraceKind::FailoverDetached { worker: w, job: id, detached },
         );
-        self.after_topology_change(j, "failover");
+        self.after_topology_change(now, j, "failover");
     }
 
     /// Instances of job `j` on `w` still in their group's routing tables
@@ -278,8 +278,8 @@ impl SimCluster {
     /// path: rebuild the job's QoS setup (Algorithms 1–3); on the
     /// never-expected failure keep the dense per-element state sized to
     /// the topology so indexing stays in bounds.
-    pub(crate) fn after_topology_change(&mut self, j: usize, context: &str) {
-        if let Err(e) = self.rebuild_qos(j) {
+    pub(crate) fn after_topology_change(&mut self, now: Time, j: usize, context: &str) {
+        if let Err(e) = self.rebuild_qos(now, j) {
             eprintln!("warning: QoS rebuild of j{j} after {context} failed: {e}");
             let nc = self.rg.channels.len();
             let nv = self.rg.vertices.len();
@@ -340,8 +340,10 @@ impl SimCluster {
         } else {
             for _ in 0..(-delta) {
                 if !self.retire_instance(now, job, group) {
+                    self.stats.scaling_rejected += 1;
                     break;
                 }
+                self.stats.scale_downs += 1;
                 changed = true;
             }
         }
@@ -359,7 +361,7 @@ impl SimCluster {
                     members: self.rg.members(group).len(),
                 },
             );
-            self.after_topology_change(job.index(), &format!("scaling {group}"));
+            self.after_topology_change(now, job.index(), &format!("scaling {group}"));
         }
         self.last_preempt_trace = None;
         changed
@@ -530,13 +532,11 @@ impl SimCluster {
         };
         let v = match v {
             Some(v) => v,
-            None => {
-                self.stats.scaling_rejected += 1;
-                return false;
-            }
+            // The caller counts the rejection (it owns the journal
+            // record for the whole rescale).
+            None => return false,
         };
         self.detach_for_scaledown(now, job, v, true);
-        self.stats.scale_downs += 1;
         true
     }
 
@@ -619,7 +619,7 @@ impl SimCluster {
             );
             // The scale-up this preemption unblocked cites it as cause.
             self.last_preempt_trace = Some(id);
-            self.after_topology_change(victim.index(), "preemption");
+            self.after_topology_change(now, victim.index(), "preemption");
             return true;
         }
         false
@@ -872,7 +872,7 @@ impl SimCluster {
             cause,
             TraceKind::Migrated { vertex: v, group: jv, from, to, job },
         );
-        self.after_topology_change(job.index(), "migration");
+        self.after_topology_change(now, job.index(), "migration");
         true
     }
 
@@ -1352,10 +1352,11 @@ impl SimCluster {
     /// measurement windows and re-acquire data within one measurement
     /// interval; their believed buffer sizes are primed with the actual
     /// worker-side sizes.
-    fn rebuild_qos(&mut self, j: usize) -> Result<()> {
+    fn rebuild_qos(&mut self, now: Time, j: usize) -> Result<()> {
         let qos = self.build_job_qos(j)?;
         self.apply_qos(j, qos, false);
         self.stats.qos_rebuilds += 1;
+        self.trace(now, TraceKind::QosRebuilt { job: JobId(j as u32) });
         Ok(())
     }
 

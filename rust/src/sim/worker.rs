@@ -563,7 +563,10 @@ impl SimCluster {
                         },
                     );
                 }
-                _ => self
+                Action::SetBufferSize { .. }
+                | Action::ChainTasks { .. }
+                | Action::ScaleTasks { .. }
+                | Action::MigrateInstance { .. } => self
                     .queue
                     .push(now + delay, Ev::ApplyAction { action, cause: sole_cause }),
             }

@@ -51,9 +51,9 @@ impl FieldVal {
 /// The typed payload of one journal record.
 ///
 /// Variant coverage mirrors the log sites in `sim/{worker,master}.rs`;
-/// the two `render() == None` variants (`AdmissionRefreshed`,
-/// `ConstraintViolated`) are journal-only — they had no legacy log
-/// line, and adding one would change committed fingerprints.
+/// the `render() == None` variants (`AdmissionRefreshed`,
+/// `ConstraintViolated`, `QosRebuilt`) are journal-only — they had no
+/// legacy log line, and adding one would change committed fingerprints.
 #[derive(Debug, Clone)]
 pub enum TraceKind {
     /// Fail-stop worker crash observed by the failure injector.
@@ -116,6 +116,9 @@ pub enum TraceKind {
     /// Journal-only: a QoS manager evaluated a chain as violating its
     /// constraint (the trigger for the countermeasure ladder).
     ConstraintViolated { job: JobId, manager: WorkerId, constraint: usize, worst_us: f64 },
+    /// Journal-only: a job's QoS runtime was rebuilt after a topology
+    /// change (scaling, preemption, migration, or failover).
+    QosRebuilt { job: JobId },
 }
 
 impl TraceKind {
@@ -146,6 +149,7 @@ impl TraceKind {
             TraceKind::JobCancelled { .. } => "job-cancelled",
             TraceKind::AdmissionRefreshed { .. } => "admission-refresh",
             TraceKind::ConstraintViolated { .. } => "constraint-violated",
+            TraceKind::QosRebuilt { .. } => "qos-rebuilt",
         }
     }
 
@@ -219,7 +223,9 @@ impl TraceKind {
             TraceKind::JobCancelled { job, lost } => {
                 Some(format!("job {job} cancelled: {lost} in-flight items lost"))
             }
-            TraceKind::AdmissionRefreshed { .. } | TraceKind::ConstraintViolated { .. } => None,
+            TraceKind::AdmissionRefreshed { .. }
+            | TraceKind::ConstraintViolated { .. }
+            | TraceKind::QosRebuilt { .. } => None,
         }
     }
 
@@ -238,7 +244,20 @@ impl TraceKind {
             TraceKind::MigrationPlanned { from, .. } | TraceKind::Migrated { from, .. } => {
                 Some(*from)
             }
-            _ => None,
+            TraceKind::ScaleApplied { .. }
+            | TraceKind::ScaleDeferred { .. }
+            | TraceKind::Preempted { .. }
+            | TraceKind::JobQueued { .. }
+            | TraceKind::JobRejected { .. }
+            | TraceKind::PlacementFailed { .. }
+            | TraceKind::JobAdmittedFromQueue { .. }
+            | TraceKind::JobSubmitted { .. }
+            | TraceKind::QosSetupFailed { .. }
+            | TraceKind::JobCompleted { .. }
+            | TraceKind::JobCancelledEarly { .. }
+            | TraceKind::JobCancelled { .. }
+            | TraceKind::AdmissionRefreshed { .. }
+            | TraceKind::QosRebuilt { .. } => None,
         }
     }
 
@@ -261,9 +280,14 @@ impl TraceKind {
             | TraceKind::JobCancelledEarly { job }
             | TraceKind::JobCancelled { job, .. }
             | TraceKind::AdmissionRefreshed { job }
-            | TraceKind::ConstraintViolated { job, .. } => Some(*job),
+            | TraceKind::ConstraintViolated { job, .. }
+            | TraceKind::QosRebuilt { job } => Some(*job),
             TraceKind::Preempted { victim, .. } => Some(*victim),
-            _ => None,
+            TraceKind::WorkerCrash { .. }
+            | TraceKind::BufferResize { .. }
+            | TraceKind::ChainEstablished { .. }
+            | TraceKind::ScaleApplied { .. }
+            | TraceKind::ScaleDeferred { .. } => None,
         }
     }
 
@@ -374,6 +398,7 @@ impl TraceKind {
                 ("constraint", FieldVal::U64(*constraint as u64)),
                 ("worst_us", FieldVal::F64(*worst_us)),
             ],
+            TraceKind::QosRebuilt { job } => vec![("job", FieldVal::of(job))],
         }
     }
 }

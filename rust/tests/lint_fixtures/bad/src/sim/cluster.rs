@@ -1,0 +1,16 @@
+//! Seeded PANIC-REACH violation: the dispatch root reaches two panic
+//! sites (an index and a helper's unwrap) against a budget of one.
+pub struct SimCluster {
+    pub slots: Vec<u32>,
+}
+
+impl SimCluster {
+    pub fn handle(&mut self, ev: u32) -> u32 {
+        let first = self.slots[0];
+        first + decode(ev)
+    }
+}
+
+fn decode(ev: u32) -> u32 {
+    u64::from(ev).try_into().unwrap()
+}

@@ -1,0 +1,13 @@
+//! Seeded EVT-EXHAUSTIVE violation: a wildcard arm in a dispatch
+//! `match` over the event enum.
+pub enum Ev {
+    Packet { source: u32 },
+    Tick,
+}
+
+pub fn dispatch(ev: &Ev) -> u32 {
+    match ev {
+        Ev::Packet { source } => *source,
+        _ => 0,
+    }
+}

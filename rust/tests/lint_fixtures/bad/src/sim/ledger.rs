@@ -1,0 +1,15 @@
+//! Seeded JOURNAL-COVERAGE violation: a decision counter bumped with
+//! no TraceKind record in the function or a direct callee.
+pub struct Stats {
+    pub scale_ups: u64,
+}
+
+pub struct Ledger {
+    pub stats: Stats,
+}
+
+impl Ledger {
+    pub fn bump(&mut self) {
+        self.stats.scale_ups += 1;
+    }
+}

@@ -1,0 +1,22 @@
+//! Seeded LOCK-CYCLE violation: two mutexes acquired in opposite
+//! orders on two code paths.
+use std::sync::Mutex;
+
+pub struct Shards {
+    pub acct: Mutex<Vec<u32>>,
+    pub bank: Mutex<Vec<u32>>,
+}
+
+pub fn forward(s: &Shards) {
+    let first = s.acct.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let second = s.bank.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    drop(second);
+    drop(first);
+}
+
+pub fn backward(s: &Shards) {
+    let second = s.bank.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let first = s.acct.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    drop(first);
+    drop(second);
+}

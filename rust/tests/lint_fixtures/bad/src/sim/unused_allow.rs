@@ -1,0 +1,6 @@
+//! Seeded unused suppression: the directive names a real rule with a
+//! reason, but there is no finding on the covered line to silence.
+pub fn quiet(xs: &[u32]) -> u64 {
+    // lint:allow(DET-WALLCLOCK): claims a wall-clock read that is not here
+    xs.iter().map(|&x| u64::from(x)).sum()
+}

@@ -47,17 +47,62 @@ fn bad_fixture_produces_the_expected_rule_ids_and_lines() {
         // Suppression naming an unknown rule, same story.
         ("src/sim/bad_sim.rs", 26, rules::LINT_SUPPRESS),
         ("src/sim/bad_sim.rs", 27, rules::DET_HASH_ITER),
+        // Two panic sites reachable from the dispatch root against a
+        // committed panic-path budget of one; anchored at the root fn.
+        ("src/sim/cluster.rs", 8, rules::PANIC_REACH),
+        // Wildcard arm in a dispatch `match` over the event enum.
+        ("src/sim/dispatch.rs", 11, rules::EVT_EXHAUSTIVE),
+        // Decision-counter bump with no TraceKind record in reach.
+        ("src/sim/ledger.rs", 13, rules::JOURNAL_COVERAGE),
+        // AB/BA lock inversion; anchored at the first acquisition of
+        // the lexicographically-smallest lock in the cycle.
+        ("src/sim/locks.rs", 11, rules::LOCK_CYCLE),
         // Two unwraps against a committed budget of one.
         ("src/sim/over_budget.rs", 3, rules::EVT_UNWRAP_RATCHET),
         // Descending-order lock walk (the `for` header line)...
         ("src/sim/shard.rs", 7, rules::SHARD_LOCK),
         // ...and the unhandled poison result inside it.
         ("src/sim/shard.rs", 8, rules::SHARD_LOCK),
+        // A well-formed suppression that suppresses nothing.
+        ("src/sim/unused_allow.rs", 4, rules::LINT_SUPPRESS_UNUSED),
         // Wall-clock read in the telemetry scope (journal digests are
         // replay fingerprints, so the determinism rules apply there).
         ("src/telemetry/bad_telemetry.rs", 6, rules::DET_WALLCLOCK),
     ];
     assert_eq!(got, want, "full report:\n{}", report.render_text());
+}
+
+#[test]
+fn flow_rule_messages_carry_their_evidence() {
+    let (report, _) = lint("bad");
+    let by_rule = |rule: &str| {
+        report
+            .findings
+            .iter()
+            .find(|f| f.rule == rule)
+            .unwrap_or_else(|| panic!("{rule} finding present"))
+    };
+    // PANIC-REACH reports the live count, the budget and one chain.
+    let pr = by_rule(rules::PANIC_REACH);
+    assert!(
+        pr.message.contains("reaches 2 panic site(s), budget 1")
+            && pr.message.contains("SimCluster::handle -> src/sim/cluster.rs:9 indexing"),
+        "message: {}",
+        pr.message
+    );
+    // LOCK-CYCLE prints the cycle in acquisition order.
+    let lc = by_rule(rules::LOCK_CYCLE);
+    assert!(lc.message.contains("acct -> bank -> acct"), "message: {}", lc.message);
+    // JOURNAL-COVERAGE names the function and the counter.
+    let jc = by_rule(rules::JOURNAL_COVERAGE);
+    assert!(
+        jc.message.contains("`Ledger::bump`") && jc.message.contains("`scale_ups`"),
+        "message: {}",
+        jc.message
+    );
+    // EVT-EXHAUSTIVE names the matched-on enum.
+    let ee = by_rule(rules::EVT_EXHAUSTIVE);
+    assert!(ee.message.contains("`Ev`"), "message: {}", ee.message);
 }
 
 #[test]
@@ -107,7 +152,7 @@ fn clean_fixture_passes_without_suggestions() {
     assert!(report.suggestions.is_empty(), "budget is exact; nothing to lower");
     assert_eq!(report.files_scanned, 1);
     assert_eq!(
-        live.get("sim/good_sim.rs"),
+        live.files.get("sim/good_sim.rs"),
         Some(&Budget { unwrap: 1, expect: 0 }),
         "live counts power --update-ratchet"
     );
@@ -130,7 +175,7 @@ fn ratchet_decrease_passes_and_suggests_the_lower_baseline() {
     );
     // What --update-ratchet would write: the lowered counts, rendered
     // deterministically and parseable back to the same budgets.
-    assert_eq!(live.get("sim/improved.rs"), Some(&Budget { unwrap: 1, expect: 0 }));
+    assert_eq!(live.files.get("sim/improved.rs"), Some(&Budget { unwrap: 1, expect: 0 }));
     let text = nephele::lint::ratchet::render(&live);
     assert_eq!(nephele::lint::ratchet::parse(&text).expect("render is parseable"), live);
 }
@@ -148,5 +193,21 @@ fn the_real_tree_is_lint_clean_with_a_tight_ratchet() {
         report.suggestions.is_empty(),
         "ratchet has slack — run `nephele lint --update-ratchet` and commit:\n{}",
         report.render_text()
+    );
+}
+
+#[test]
+fn real_tree_json_report_is_byte_identical_across_runs() {
+    // The JSON report feeds tools/check_lint.py and CI diffs; two runs
+    // over the same tree (including the call-graph rules, whose maps are
+    // all BTree-ordered) must render byte-for-byte the same.
+    let cfg = LintConfig::at_root(env!("CARGO_MANIFEST_DIR"));
+    let (a, ra) = run(&cfg).expect("crate tree is readable");
+    let (b, rb) = run(&cfg).expect("crate tree is readable");
+    assert_eq!(a.render_json(), b.render_json());
+    assert_eq!(
+        nephele::lint::ratchet::render(&ra),
+        nephele::lint::ratchet::render(&rb),
+        "the suggested ratchet is deterministic too"
     );
 }

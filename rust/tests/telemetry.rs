@@ -203,6 +203,7 @@ fn journal_tag_counts_match_the_ledger() {
     assert_eq!(s.journal.count("migrated") as u64, s.migrations);
     assert_eq!(s.journal.count("job-queued") as u64, s.jobs_queued);
     assert_eq!(s.journal.count("admission-refresh") as u64, s.admission_refreshes);
+    assert_eq!(s.journal.count("qos-rebuilt") as u64, s.qos_rebuilds);
     assert!(s.buffer_size_updates > 0, "surge must exercise buffer resizes");
 
     let fo = failover_cluster(42, true, 420, 1);

@@ -1,0 +1,216 @@
+#!/usr/bin/env python3
+"""Validate a ``nephele lint --format json`` report.
+
+Usage: check_lint.py REPORT.json [--expect-rule RULE ...]
+
+The linter (``src/lint/``) promises a deterministic, machine-readable
+report; this checker makes that promise a CI gate instead of a claim.
+It fails (exit 1) when:
+
+  * the file is not valid JSON, or lacks the ``findings`` /
+    ``suggestions`` / ``files_scanned`` wrapper keys;
+  * any finding is missing ``rule``/``file``/``line``/``message``, or
+    names a rule id the linter does not define (a typo in a rule id
+    would make CI grep-gates silently vacuous);
+  * findings are not sorted by ``(file, line, rule, message)`` or
+    contain exact duplicates — the report contract that makes two runs
+    byte-comparable;
+  * ``suggestions`` is not a list of non-empty strings, or
+    ``files_scanned`` is not a positive integer.
+
+With ``--expect-rule RULE`` (repeatable) it additionally fails unless
+at least one finding carries that rule id.  CI uses this to invert the
+seeded-bad fixture tree: the linter must not merely exit non-zero on
+the fixtures, it must exit non-zero *for the planted reason*.
+
+Stdlib only — no third-party dependencies.
+"""
+
+import json
+import sys
+
+KNOWN_RULES = (
+    "DET-HASH-ITER",
+    "DET-WALLCLOCK",
+    "EVT-EXHAUSTIVE",
+    "EVT-UNWRAP-RATCHET",
+    "JOURNAL-COVERAGE",
+    "LINT-SUPPRESS",
+    "LINT-SUPPRESS-UNUSED",
+    "LOCK-CYCLE",
+    "PANIC-REACH",
+    "SHARD-LOCK",
+)
+
+REQUIRED_KEYS = ("rule", "file", "line", "message")
+
+
+def check(report, expect_rules=()):
+    """Return a list of human-readable failure messages (empty = pass)."""
+    failures = []
+
+    for key in ("findings", "suggestions", "files_scanned"):
+        if key not in report:
+            failures.append(f"wrapper key {key!r} missing")
+    findings = report.get("findings", [])
+    if not isinstance(findings, list):
+        failures.append("findings must be an array")
+        return failures
+
+    keys = []
+    for i, f in enumerate(findings):
+        where = f"finding[{i}]"
+        if not isinstance(f, dict):
+            failures.append(f"{where}: not an object")
+            continue
+        missing = [k for k in REQUIRED_KEYS if k not in f]
+        if missing:
+            failures.append(f"{where}: missing keys {missing}")
+            continue
+        where = f"finding[{i}] ({f['rule']} {f['file']}:{f['line']})"
+        if f["rule"] not in KNOWN_RULES:
+            failures.append(f"{where}: unknown rule id {f['rule']!r}")
+        if not isinstance(f["file"], str) or not f["file"]:
+            failures.append(f"{where}: file must be a non-empty string")
+        if not isinstance(f["line"], int) or isinstance(f["line"], bool) or f["line"] < 0:
+            failures.append(f"{where}: line must be a non-negative integer")
+        if not isinstance(f["message"], str) or not f["message"]:
+            failures.append(f"{where}: message must be a non-empty string")
+        keys.append((f["file"], f["line"], f["rule"], f["message"]))
+
+    if keys != sorted(keys):
+        failures.append("findings are not sorted by (file, line, rule, message)")
+    if len(keys) != len(set(keys)):
+        failures.append("findings contain exact duplicates")
+
+    suggestions = report.get("suggestions", [])
+    if not isinstance(suggestions, list) or any(
+        not isinstance(s, str) or not s for s in suggestions
+    ):
+        failures.append("suggestions must be an array of non-empty strings")
+
+    scanned = report.get("files_scanned")
+    if not isinstance(scanned, int) or isinstance(scanned, bool) or scanned <= 0:
+        failures.append(f"files_scanned must be a positive integer, got {scanned!r}")
+
+    present = {k[2] for k in keys}
+    for rule in expect_rules:
+        if rule not in present:
+            failures.append(
+                f"expected at least one {rule} finding, found none "
+                f"(present: {sorted(present) or 'nothing'})"
+            )
+
+    print(
+        f"findings: {len(findings)} across {len({k[0] for k in keys})} file(s), "
+        f"suggestions: {len(suggestions)}, files_scanned: {scanned}"
+    )
+    return failures
+
+
+def main(path, expect_rules):
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: {path}: {e}")
+        return 1
+    failures = check(report, expect_rules)
+    if failures:
+        print(f"\nFAIL: {path}")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print(f"OK: {path} is a well-formed lint report")
+    return 0
+
+
+# --- self-test fixtures --------------------------------------------------
+
+
+FIX_GOOD = {
+    "findings": [
+        {
+            "rule": "PANIC-REACH",
+            "file": "src/sim/cluster.rs",
+            "line": 8,
+            "message": "root SimCluster::handle reaches 2 panic site(s), budget 1",
+        },
+        {
+            "rule": "LOCK-CYCLE",
+            "file": "src/sim/locks.rs",
+            "line": 11,
+            "message": "lock-order cycle: acct -> bank -> acct",
+        },
+    ],
+    "suggestions": ["sim/improved.rs: unwrap 5 -> 1"],
+    "files_scanned": 3,
+}
+
+
+def selftest():
+    import copy
+
+    checks = []
+    checks.append(("well-formed report passes", not check(copy.deepcopy(FIX_GOOD))))
+
+    bad = copy.deepcopy(FIX_GOOD)
+    bad["findings"][0]["rule"] = "PANIC-REACHY"
+    checks.append(("unknown rule id fails", any("unknown rule" in m for m in check(bad))))
+
+    bad = copy.deepcopy(FIX_GOOD)
+    bad["findings"].reverse()
+    checks.append(("unsorted findings fail", any("not sorted" in m for m in check(bad))))
+
+    bad = copy.deepcopy(FIX_GOOD)
+    bad["findings"].append(copy.deepcopy(bad["findings"][1]))
+    checks.append(("duplicate finding fails", any("duplicates" in m for m in check(bad))))
+
+    bad = copy.deepcopy(FIX_GOOD)
+    del bad["findings"][0]["line"]
+    checks.append(("missing finding key fails", any("missing keys" in m for m in check(bad))))
+
+    bad = copy.deepcopy(FIX_GOOD)
+    del bad["files_scanned"]
+    checks.append(("missing wrapper key fails", any("wrapper" in m for m in check(bad))))
+
+    checks.append(
+        (
+            "absent expected rule fails",
+            any(
+                "expected at least one" in m
+                for m in check(copy.deepcopy(FIX_GOOD), ("JOURNAL-COVERAGE",))
+            ),
+        )
+    )
+    checks.append(
+        (
+            "present expected rule passes",
+            not check(copy.deepcopy(FIX_GOOD), ("LOCK-CYCLE", "PANIC-REACH")),
+        )
+    )
+
+    print()
+    nbad = 0
+    for name, ok in checks:
+        print(f"  {'ok' if ok else 'FAIL'}: {name}")
+        nbad += 0 if ok else 1
+    return 1 if nbad else 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) == 2 and sys.argv[1] == "--selftest":
+        sys.exit(selftest())
+    if len(sys.argv) < 2 or sys.argv[1].startswith("--"):
+        print(__doc__)
+        sys.exit(2)
+    expect = []
+    rest = sys.argv[2:]
+    while rest:
+        if rest[0] == "--expect-rule" and len(rest) >= 2:
+            expect.append(rest[1])
+            rest = rest[2:]
+        else:
+            print(__doc__)
+            sys.exit(2)
+    sys.exit(main(sys.argv[1], tuple(expect)))
